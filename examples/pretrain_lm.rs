@@ -1,0 +1,99 @@
+//! LLM-pretraining comparison driver (paper §4.2 / Figures 2a, 5, 7 and
+//! Table 3 at repro scale): train the LM preset with any set of
+//! optimizer/variant arms over identical data ordering and multiple
+//! seeds, reporting per-arm val loss, next-token-accuracy probes, and
+//! divergence status.
+//!
+//!   cargo run --release --example pretrain_lm -- \
+//!       --steps 300 --seeds 1 --optimizer adamw \
+//!       --arms reference,flash[,nocompand] [--preset lm-tiny]
+
+use anyhow::Result;
+use flashtrain::config::{OptKind, TrainConfig, Variant};
+use flashtrain::coordinator::Trainer;
+use flashtrain::runtime::{Manifest, Runtime};
+use flashtrain::util::ascii_plot;
+use flashtrain::util::cli::Args;
+use flashtrain::util::stats;
+use flashtrain::util::table::Table;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let steps = args.get_usize("steps", 300);
+    let seeds = args.get_u64("seeds", 1);
+    let opt = OptKind::parse(args.get_or("optimizer", "adamw")).unwrap();
+    let arms: Vec<Variant> = args
+        .get_or("arms", "reference,flash")
+        .split(',')
+        .map(|s| Variant::parse(s.trim()).expect("bad variant"))
+        .collect();
+
+    let manifest = Manifest::load_default()?;
+    let rt = Runtime::cpu()?;
+
+    let mut table = Table::new(
+        &format!("LM pretraining ({opt}, {steps} steps, {seeds} seed(s))"),
+        &["variant", "val loss", "token acc %", "final train loss",
+          "diverged"]);
+    let mut curves: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+
+    for variant in &arms {
+        let mut vloss = Vec::new();
+        let mut vacc = Vec::new();
+        let mut tloss = Vec::new();
+        let mut diverged = false;
+        for seed in 0..seeds {
+            let mut cfg = TrainConfig::default().with_paper_hypers(opt);
+            cfg.preset = args.get_or("preset", "lm-tiny").to_string();
+            cfg.steps = steps;
+            cfg.warmup = (steps / 20).max(5);
+            cfg.seed = seed;
+            cfg.eval_batches = 16;
+            cfg.log_every = usize::MAX;
+            cfg.apply_args(&args);
+            cfg.variant = *variant;
+            // identical data ordering across arms: data_seed is shared
+            let mut trainer = Trainer::new(cfg, &manifest, &rt)?;
+            let run = trainer.run(true);
+            if run.is_err() || trainer.metrics.diverged(50.0) {
+                diverged = true;
+                println!("  {variant} seed {seed}: DIVERGED");
+            } else {
+                let (el, ea) = trainer.evaluate()?;
+                vloss.push(el);
+                vacc.push(ea * 100.0);
+                tloss.push(trainer.metrics.final_loss(10));
+                if seed == 0 {
+                    curves.push((format!("{variant}"),
+                                 trainer.metrics.smoothed_loss(0.08)));
+                }
+            }
+            println!("  {variant} seed {seed}: done");
+        }
+        let fmt_ms = |xs: &[f64]| if xs.is_empty() {
+            "-".to_string()
+        } else if xs.len() == 1 {
+            format!("{:.4}", xs[0])
+        } else {
+            format!("{:.4} ± {:.4}", stats::mean(xs), stats::std_dev(xs))
+        };
+        table.row(&[
+            variant.name().to_string(),
+            fmt_ms(&vloss),
+            fmt_ms(&vacc),
+            fmt_ms(&tloss),
+            if diverged { "YES".into() } else { "no".into() },
+        ]);
+    }
+
+    let series: Vec<(&str, &[(f64, f64)])> = curves
+        .iter()
+        .map(|(n, p)| (n.as_str(), p.as_slice()))
+        .collect();
+    if !series.is_empty() {
+        println!("{}", ascii_plot::plot("pretraining loss (seed 0)",
+                                        &series, 76, 16));
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Quickstart + end-to-end driver: pretrain a small transformer LM on the
+//! synthetic corpus twice — reference AdamW vs FlashAdamW — with identical
+//! data ordering, and overlay the two loss curves (paper Figure 2a).
+//!
+//!   cargo run --release --example quickstart -- [--steps 300]
+//!       [--preset lm-tiny] [--optimizer adamw] [--workers 1] [--csv-dir .]
+//!
+//! This is the run recorded in EXPERIMENTS.md §E2E.
+
+use anyhow::Result;
+use flashtrain::config::{OptKind, TrainConfig, Variant};
+use flashtrain::coordinator::Trainer;
+use flashtrain::memory::tracker::Category;
+use flashtrain::runtime::{Manifest, Runtime};
+use flashtrain::util::ascii_plot;
+use flashtrain::util::cli::Args;
+use flashtrain::util::table::{fmt_bytes, Table};
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let steps = args.get_usize("steps", 300);
+    let preset = args.get_or("preset", "lm-tiny").to_string();
+    let opt = OptKind::parse(args.get_or("optimizer", "adamw")).unwrap();
+
+    let manifest = Manifest::load_default()?;
+    let rt = Runtime::cpu()?;
+    println!("== flashtrain quickstart: {preset}, {opt}, {steps} steps ==");
+
+    let mut curves: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    let mut summary = Table::new(
+        "quickstart summary",
+        &["variant", "final loss", "eval loss", "eval acc", "step ms",
+          "opt ms", "state bytes/param"]);
+
+    for variant in [Variant::Reference, Variant::Flash] {
+        let mut cfg = TrainConfig::default().with_paper_hypers(opt);
+        cfg.preset = preset.clone();
+        cfg.steps = steps;
+        cfg.warmup = (steps / 20).max(5);
+        cfg.workers = args.get_usize("workers", 1);
+        cfg.eval_batches = 8;
+        cfg.log_every = (steps / 10).max(1);
+        cfg.apply_args(&args);
+        cfg.variant = variant; // variant is fixed per arm
+
+        println!("\n-- {variant} --");
+        let mut trainer = Trainer::new(cfg.clone(), &manifest, &rt)?;
+        trainer.run(false)?;
+        let (eloss, eacc) = trainer.evaluate()?;
+        let bpp = trainer.opt.state.bytes() as f64
+            / trainer.model.param_count as f64;
+        summary.row(&[
+            variant.name().to_string(),
+            format!("{:.4}", trainer.metrics.final_loss(10)),
+            format!("{eloss:.4}"),
+            format!("{:.2}%", eacc * 100.0),
+            format!("{:.1}", trainer.metrics.mean_step_ms(2)),
+            format!("{:.1}", trainer.metrics.mean_opt_ms(2)),
+            format!("{bpp:.2}"),
+        ]);
+        println!("peak tracked memory: {} (params {}, optim {})",
+                 fmt_bytes(trainer.tracker.peak_bytes() as f64),
+                 fmt_bytes(trainer.tracker.category_peak(Category::Params)
+                           as f64),
+                 fmt_bytes(trainer.tracker
+                           .category_peak(Category::OptimState)
+                           as f64));
+        if let Some(dir) = args.get("csv-dir") {
+            let p = std::path::Path::new(dir)
+                .join(format!("quickstart_{}.csv", variant.name()));
+            trainer.metrics.write_csv(&p)?;
+            println!("wrote {p:?}");
+        }
+        curves.push((variant.name().to_string(),
+                     trainer.metrics.smoothed_loss(0.08)));
+    }
+
+    let series: Vec<(&str, &[(f64, f64)])> = curves
+        .iter()
+        .map(|(n, pts)| (n.as_str(), pts.as_slice()))
+        .collect();
+    println!("\n{}", ascii_plot::plot(
+        "training loss: reference vs flash (identical data order)",
+        &series, 76, 16));
+    summary.print();
+    println!("expected: the two curves overlap (paper Fig. 2a) while \
+              flash stores ~7x fewer optimizer-state bytes/param.");
+    Ok(())
+}

@@ -1,0 +1,4 @@
+"""FlashTrain build-time compile package (Layer 1 + Layer 2).
+
+Runs only at `make artifacts` time; never imported on the request path.
+"""

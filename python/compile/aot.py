@@ -1,0 +1,290 @@
+"""AOT pipeline: lower every Layer-1/Layer-2 graph to HLO text artifacts.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the rust `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+  <name>.hlo.txt        one per lowered graph
+  manifest.json         shapes, dtypes, parameter layouts, hyp layout —
+                        everything rust/src/runtime/artifact.rs needs.
+
+Python runs ONCE at `make artifacts`; never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, vision
+from .kernels import fused_steps, quant, ref, weight_split
+
+GROUP = configs.GROUP
+NHYP = fused_steps.NHYP
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower(fn, *specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# artifact builders
+# ---------------------------------------------------------------------------
+
+def lm_artifacts(cfg: configs.LmConfig):
+    p = cfg.param_count
+    xspec = spec((cfg.batch, cfg.seq_len), jnp.int32)
+    yspec = spec((cfg.batch, cfg.seq_len), jnp.int32)
+    yield "fwd_bwd_ref", lambda: lower(
+        lambda f, x, y: model.fwd_bwd(f, x, y, cfg),
+        spec((p,), jnp.float32), xspec, yspec)
+    yield "fwd_bwd_flash", lambda: lower(
+        lambda f, x, y: model.fwd_bwd(f, x, y, cfg),
+        spec((p,), jnp.bfloat16), xspec, yspec)
+    yield "eval_ref", lambda: lower(
+        lambda f, x, y: model.evaluate(f, x, y, cfg),
+        spec((p,), jnp.float32), xspec, yspec)
+    yield "eval_flash", lambda: lower(
+        lambda f, x, y: model.evaluate(f, x, y, cfg),
+        spec((p,), jnp.bfloat16), xspec, yspec)
+
+
+def vision_artifacts(cfg: configs.VisionConfig):
+    p = cfg.param_count
+    xspec = spec((cfg.batch, cfg.input_dim), jnp.float32)
+    yspec = spec((cfg.batch,), jnp.int32)
+    yield "fwd_bwd_ref", lambda: lower(
+        lambda f, x, y: vision.fwd_bwd(f, x, y, cfg),
+        spec((p,), jnp.float32), xspec, yspec)
+    yield "fwd_bwd_flash", lambda: lower(
+        lambda f, x, y: vision.fwd_bwd(f, x, y, cfg),
+        spec((p,), jnp.bfloat16), xspec, yspec)
+    yield "eval_ref", lambda: lower(
+        lambda f, x, y: vision.evaluate(f, x, y, cfg),
+        spec((p,), jnp.float32), xspec, yspec)
+    yield "eval_flash", lambda: lower(
+        lambda f, x, y: vision.evaluate(f, x, y, cfg),
+        spec((p,), jnp.bfloat16), xspec, yspec)
+
+
+def bucket_artifacts(b: int):
+    """Optimizer-step graphs over one bucket of b elements.
+
+    PERF (EXPERIMENTS.md §Perf): lowered with block == bucket (grid=1).
+    The TPU-shaped default block (8192, VMEM-sized) lowers under
+    interpret mode to an unrolled grid of dynamic-slice/update-slice
+    copies that XLA CPU executes ~5x slower; one block per bucket is
+    the right CPU lowering while the kernels keep their BlockSpec
+    structure for the TPU target.
+    """
+    h = spec((NHYP,), jnp.float32)
+    f32, bf16 = spec((b,), jnp.float32), spec((b,), jnp.bfloat16)
+    i8, u8 = spec((b,), jnp.int8), spec((b,), jnp.uint8)
+    f16s = spec((b // GROUP,), jnp.float16)
+
+    def blk(fn):
+        # bind block == bucket size (see docstring)
+        def wrapped(*a, _fn=fn):
+            return _fn(*a, block=b)
+        return wrapped
+
+    yield "opt_adamw_ref", lambda: lower(
+        blk(fused_steps.ref_adamw), h, f32, f32, f32, f32)
+    yield "opt_sgd_ref", lambda: lower(
+        blk(fused_steps.ref_sgd), h, f32, f32, f32)
+    yield "opt_lion_ref", lambda: lower(
+        blk(fused_steps.ref_lion), h, f32, f32, f32)
+
+    yield "opt_adamw_flash", lambda: lower(
+        blk(fused_steps.flash_adamw), h, bf16, i8, i8, f16s, u8, f16s,
+        bf16)
+    yield "opt_sgd_flash", lambda: lower(
+        blk(fused_steps.flash_sgd), h, bf16, i8, i8, f16s, bf16)
+    yield "opt_lion_flash", lambda: lower(
+        blk(fused_steps.flash_lion), h, bf16, i8, i8, f16s, bf16)
+
+    # Table 4 ablations + Fig. 5 divergence variant
+    yield "opt_adamw_wsplit", lambda: lower(
+        blk(fused_steps.wsplit_adamw), h, bf16, i8, f32, f32, bf16)
+    yield "opt_adamw_quant", lambda: lower(
+        blk(fused_steps.quant_adamw), h, f32, i8, f16s, u8, f16s, f32)
+    yield "opt_adamw_nocompand", lambda: lower(
+        blk(fused_steps.nocompand_adamw), h, bf16, i8, i8, f16s, u8,
+        f16s, bf16)
+
+
+def kernel_artifacts(n_elems: int):
+    """Standalone kernel round-trips for Rust<->HLO cross-validation."""
+    f32 = spec((n_elems,), jnp.float32)
+    bf16 = spec((n_elems,), jnp.bfloat16)
+    i8 = spec((n_elems,), jnp.int8)
+    i16 = spec((n_elems,), jnp.int16)
+    u8 = spec((n_elems,), jnp.uint8)
+    f16s = spec((n_elems // GROUP,), jnp.float16)
+
+    yield "split_enc_i8", lambda: lower(
+        lambda t: weight_split.split_compress(t, n=ref.N_INT8), f32)
+    yield "split_dec_i8", lambda: lower(
+        lambda tp, r: weight_split.split_decompress(tp, r, n=ref.N_INT8),
+        bf16, i8)
+    yield "split_enc_i16", lambda: lower(
+        lambda t: weight_split.split_compress(t, n=ref.N_INT16), f32)
+    yield "split_dec_i16", lambda: lower(
+        lambda tp, r: weight_split.split_decompress(tp, r, n=ref.N_INT16),
+        bf16, i16)
+    yield "mq_enc", lambda: lower(quant.quant_momentum, f32)
+    yield "mq_dec", lambda: lower(quant.dequant_momentum, i8, f16s)
+    yield "vq_enc", lambda: lower(quant.quant_variance, f32)
+    yield "vq_dec", lambda: lower(quant.dequant_variance, u8, f16s)
+    yield "mq_lin_enc", lambda: lower(quant.quant_momentum_linear, f32)
+    yield "vq_lin_enc", lambda: lower(quant.quant_variance_linear, f32)
+
+
+# ---------------------------------------------------------------------------
+# manifest
+# ---------------------------------------------------------------------------
+
+def layout_json(layout):
+    out = []
+    off = 0
+    for name, shape in layout:
+        n = 1
+        for s in shape:
+            n *= s
+        out.append({"name": name, "offset": off, "shape": list(shape)})
+        off += n
+    return out
+
+
+def config_digest() -> str:
+    src = []
+    here = os.path.dirname(__file__)
+    for rel in ["configs.py", "model.py", "vision.py", "aot.py",
+                "kernels/ref.py", "kernels/weight_split.py",
+                "kernels/quant.py", "kernels/fused_steps.py"]:
+        with open(os.path.join(here, rel), "rb") as f:
+            src.append(f.read())
+    return hashlib.sha256(b"".join(src)).hexdigest()[:16]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--presets", default="lm-tiny,vision",
+                    help="comma-separated: lm-tiny,lm-small,vision")
+    ap.add_argument("--buckets", default=",".join(
+        str(b) for b in configs.BUCKET_SIZES))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    digest = config_digest()
+
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    if not args.force and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if old.get("digest") == digest and \
+                old.get("presets") == args.presets and \
+                old.get("bucket_arg") == args.buckets:
+            print(f"artifacts up to date (digest {digest}); skipping")
+            return 0
+
+    manifest = {
+        "version": 1,
+        "digest": digest,
+        "presets": args.presets,
+        "bucket_arg": args.buckets,
+        "group": GROUP,
+        "nhyp": NHYP,
+        "hyp_layout": ["lr", "beta1", "beta2", "eps", "wd", "bc1", "bc2",
+                       "pad"],
+        "n_int8": ref.N_INT8,
+        "n_int16": ref.N_INT16,
+        "models": {},
+        "buckets": {},
+        "kernels": {"size": configs.KERNEL_VEC, "artifacts": {}},
+    }
+
+    def emit(name: str, builder) -> str:
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        text = builder()
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {fname} ({len(text)//1024} KiB)")
+        return fname
+
+    for preset in args.presets.split(","):
+        preset = preset.strip()
+        if not preset:
+            continue
+        print(f"[aot] model {preset}")
+        if preset in configs.LM_PRESETS:
+            cfg = configs.LM_PRESETS[preset]
+            arts = {k: emit(f"{preset}.{k}", b)
+                    for k, b in lm_artifacts(cfg)}
+            manifest["models"][preset] = {
+                "kind": "lm", "vocab": cfg.vocab, "d_model": cfg.d_model,
+                "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+                "seq_len": cfg.seq_len, "batch": cfg.batch,
+                "d_ff": cfg.d_ff, "param_count": cfg.param_count,
+                "layout": layout_json(cfg.layout()), "artifacts": arts,
+            }
+        elif preset in configs.VISION_PRESETS:
+            cfg = configs.VISION_PRESETS[preset]
+            arts = {k: emit(f"{preset}.{k}", b)
+                    for k, b in vision_artifacts(cfg)}
+            manifest["models"][preset] = {
+                "kind": "vision", "input_dim": cfg.input_dim,
+                "hidden": list(cfg.hidden), "classes": cfg.classes,
+                "batch": cfg.batch, "param_count": cfg.param_count,
+                "layout": layout_json(cfg.layout()), "artifacts": arts,
+            }
+        else:
+            print(f"unknown preset {preset!r}", file=sys.stderr)
+            return 1
+
+    for b in [int(x) for x in args.buckets.split(",") if x.strip()]:
+        print(f"[aot] bucket {b}")
+        arts = {k: emit(f"bucket{b}.{k}", fn)
+                for k, fn in bucket_artifacts(b)}
+        manifest["buckets"][str(b)] = {"size": b, "artifacts": arts}
+
+    print("[aot] kernels")
+    manifest["kernels"]["artifacts"] = {
+        k: emit(f"kernel.{k}", fn)
+        for k, fn in kernel_artifacts(configs.KERNEL_VEC)}
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote manifest.json (digest {digest})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

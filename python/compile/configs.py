@@ -1,0 +1,110 @@
+"""Model / bucket configuration presets shared by the AOT pipeline.
+
+The Rust side never imports this; it reads the same information from
+artifacts/manifest.json written by aot.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+GROUP = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class LmConfig:
+    """Decoder-only transformer LM (GPT-2-style, RMSNorm, tied head)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    batch: int
+    ff_mult: int = 4
+
+    @property
+    def d_ff(self) -> int:
+        return self.ff_mult * self.d_model
+
+    def layout(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Ordered (name, shape) parameter layout of the flat buffer."""
+        d, f = self.d_model, self.d_ff
+        out: List[Tuple[str, Tuple[int, ...]]] = [
+            ("wte", (self.vocab, d)),
+            ("wpe", (self.seq_len, d)),
+        ]
+        for i in range(self.n_layers):
+            out += [
+                (f"h{i}.ln1", (d,)),
+                (f"h{i}.wqkv", (d, 3 * d)),
+                (f"h{i}.wo", (d, d)),
+                (f"h{i}.ln2", (d,)),
+                (f"h{i}.w1", (d, f)),
+                (f"h{i}.w2", (f, d)),
+            ]
+        out.append(("lnf", (d,)))
+        return out
+
+    @property
+    def param_count(self) -> int:
+        return sum(_prod(s) for _, s in self.layout())
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionConfig:
+    """MLP image classifier over flattened images (ResNet-50 stand-in)."""
+
+    name: str
+    input_dim: int
+    hidden: Tuple[int, ...]
+    classes: int
+    batch: int
+
+    def layout(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        dims = (self.input_dim,) + tuple(self.hidden) + (self.classes,)
+        out: List[Tuple[str, Tuple[int, ...]]] = []
+        for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+            out.append((f"fc{i}.w", (a, b)))
+            out.append((f"fc{i}.b", (b,)))
+        return out
+
+    @property
+    def param_count(self) -> int:
+        return sum(_prod(s) for _, s in self.layout())
+
+
+def _prod(shape: Tuple[int, ...]) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Presets.  Sizes are picked for a single-core CPU-PJRT testbed; the paper's
+# full-size configs (GPT-2 124M, Llama-3.1-8B, ResNet-50) enter through the
+# analytical memory model on the Rust side (rust/src/memory).
+# ---------------------------------------------------------------------------
+
+LM_PRESETS: Dict[str, LmConfig] = {
+    # main experiment model (Fig 2a / Fig 5 / Table 3 analog)
+    "lm-tiny": LmConfig("lm-tiny", vocab=512, d_model=128, n_layers=4,
+                        n_heads=4, seq_len=64, batch=8),
+    # larger e2e driver model (quickstart --preset lm-small)
+    "lm-small": LmConfig("lm-small", vocab=2048, d_model=256, n_layers=6,
+                         n_heads=8, seq_len=128, batch=8),
+}
+
+VISION_PRESETS: Dict[str, VisionConfig] = {
+    "vision": VisionConfig("vision", input_dim=192, hidden=(256, 128),
+                           classes=10, batch=64),
+}
+
+# Optimizer-step bucket sizes to lower (elements per bucket).
+BUCKET_SIZES = [16384, 65536]
+
+# Standalone kernel round-trip artifact size (cross-validation vs Rust).
+KERNEL_VEC = 4096

@@ -1,0 +1,3 @@
+"""FlashOptim Layer-1 kernels (Pallas, interpret mode) and their oracle."""
+
+from . import fused_steps, quant, ref, weight_split  # noqa: F401

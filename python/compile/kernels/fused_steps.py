@@ -1,0 +1,340 @@
+"""Layer-1 fused optimizer-step Pallas kernels (Algorithms 4/5/6).
+
+One kernel invocation performs, per VMEM-resident block, the full
+  dequantize -> reconstruct master weight -> optimizer update
+  -> requantize -> re-split
+sequence, so each optimizer-state byte moves HBM<->VMEM exactly once per
+step.  This is the TPU mapping of the paper's single fused Triton kernel
+(§3.4); on GPU the paper tiles with a 1-D threadblock grid, here the 1-D
+Pallas grid + BlockSpec plays that role (DESIGN.md §Hardware-Adaptation).
+
+Hyperparameters arrive as a small f32 vector so the same compiled
+artifact serves any learning-rate schedule / betas without re-lowering.
+Layout of the `hyp` vector (fixed, mirrored by rust/src/optim):
+
+  idx  0    1      2      3    4   5    6
+       lr   beta1  beta2  eps  wd  bc1  bc2      (adamw)
+       lr   mu     -      -    wd  -    -        (sgd)
+       lr   beta1  beta2  -    wd  -    -        (lion)
+
+All kernels operate on one flat "bucket" of parameters; padding elements
+(zero theta / zero grad) are fixed points of every update rule, so padded
+tails stay exactly zero.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK = 8192
+GROUP = ref.GROUP
+NHYP = 8
+
+
+def _pick_block(n: int, block: int) -> int:
+    block = min(block, n)
+    while n % block != 0 or block % GROUP != 0:
+        block //= 2
+        if block < GROUP:
+            raise ValueError(f"bucket {n} not tileable by group {GROUP}")
+    return block
+
+
+def _hyp_spec():
+    return pl.BlockSpec((NHYP,), lambda i: (0,))
+
+
+def _vec(blk):
+    return pl.BlockSpec((blk,), lambda i: (i,))
+
+
+def _scale(blk):
+    return pl.BlockSpec((blk // GROUP,), lambda i: (i,))
+
+
+# ---------------------------------------------------------------------------
+# FlashAdamW (Algorithm 4)
+# ---------------------------------------------------------------------------
+
+def _flash_adamw_kernel(hyp_ref, tp_ref, rho_ref, mq_ref, ms_ref, vq_ref,
+                        vs_ref, g_ref,
+                        tp_o, rho_o, mq_o, ms_o, vq_o, vs_o, *, n):
+    hyp = hyp_ref[...]
+    lr, b1, b2, eps, wd, bc1, bc2 = (hyp[0], hyp[1], hyp[2], hyp[3],
+                                     hyp[4], hyp[5], hyp[6])
+    out = ref.flash_adamw_ref(tp_ref[...], rho_ref[...], mq_ref[...],
+                              ms_ref[...], vq_ref[...], vs_ref[...],
+                              g_ref[...], lr, b1, b2, eps, wd, bc1, bc2,
+                              n=n)
+    tp_o[...], rho_o[...], mq_o[...], ms_o[...], vq_o[...], vs_o[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block"))
+def flash_adamw(hyp, theta_p, rho, mq, ms, vq, vs, g,
+                n: int = ref.N_INT8, block: int = DEFAULT_BLOCK):
+    (size,) = theta_p.shape
+    blk = _pick_block(size, block)
+    rho_dtype = jnp.int8 if n <= 127 else jnp.int16
+    return pl.pallas_call(
+        functools.partial(_flash_adamw_kernel, n=n),
+        grid=(size // blk,),
+        in_specs=[_hyp_spec(), _vec(blk), _vec(blk), _vec(blk), _scale(blk),
+                  _vec(blk), _scale(blk), _vec(blk)],
+        out_specs=[_vec(blk), _vec(blk), _vec(blk), _scale(blk), _vec(blk),
+                   _scale(blk)],
+        out_shape=[
+            jax.ShapeDtypeStruct((size,), jnp.bfloat16),
+            jax.ShapeDtypeStruct((size,), rho_dtype),
+            jax.ShapeDtypeStruct((size,), jnp.int8),
+            jax.ShapeDtypeStruct((size // GROUP,), jnp.float16),
+            jax.ShapeDtypeStruct((size,), jnp.uint8),
+            jax.ShapeDtypeStruct((size // GROUP,), jnp.float16),
+        ],
+        interpret=True,
+    )(hyp, theta_p, rho, mq, ms, vq, vs, g)
+
+
+# ---------------------------------------------------------------------------
+# FlashSGD (Algorithm 5)
+# ---------------------------------------------------------------------------
+
+def _flash_sgd_kernel(hyp_ref, tp_ref, rho_ref, mq_ref, ms_ref, g_ref,
+                      tp_o, rho_o, mq_o, ms_o, *, n):
+    hyp = hyp_ref[...]
+    lr, mu, wd = hyp[0], hyp[1], hyp[4]
+    out = ref.flash_sgd_ref(tp_ref[...], rho_ref[...], mq_ref[...],
+                            ms_ref[...], g_ref[...], lr, mu, wd, n=n)
+    tp_o[...], rho_o[...], mq_o[...], ms_o[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block"))
+def flash_sgd(hyp, theta_p, rho, mq, ms, g,
+              n: int = ref.N_INT8, block: int = DEFAULT_BLOCK):
+    (size,) = theta_p.shape
+    blk = _pick_block(size, block)
+    rho_dtype = jnp.int8 if n <= 127 else jnp.int16
+    return pl.pallas_call(
+        functools.partial(_flash_sgd_kernel, n=n),
+        grid=(size // blk,),
+        in_specs=[_hyp_spec(), _vec(blk), _vec(blk), _vec(blk), _scale(blk),
+                  _vec(blk)],
+        out_specs=[_vec(blk), _vec(blk), _vec(blk), _scale(blk)],
+        out_shape=[
+            jax.ShapeDtypeStruct((size,), jnp.bfloat16),
+            jax.ShapeDtypeStruct((size,), rho_dtype),
+            jax.ShapeDtypeStruct((size,), jnp.int8),
+            jax.ShapeDtypeStruct((size // GROUP,), jnp.float16),
+        ],
+        interpret=True,
+    )(hyp, theta_p, rho, mq, ms, g)
+
+
+# ---------------------------------------------------------------------------
+# FlashLion (Algorithm 6)
+# ---------------------------------------------------------------------------
+
+def _flash_lion_kernel(hyp_ref, tp_ref, rho_ref, mq_ref, ms_ref, g_ref,
+                       tp_o, rho_o, mq_o, ms_o, *, n):
+    hyp = hyp_ref[...]
+    lr, b1, b2, wd = hyp[0], hyp[1], hyp[2], hyp[4]
+    out = ref.flash_lion_ref(tp_ref[...], rho_ref[...], mq_ref[...],
+                             ms_ref[...], g_ref[...], lr, b1, b2, wd, n=n)
+    tp_o[...], rho_o[...], mq_o[...], ms_o[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block"))
+def flash_lion(hyp, theta_p, rho, mq, ms, g,
+               n: int = ref.N_INT8, block: int = DEFAULT_BLOCK):
+    (size,) = theta_p.shape
+    blk = _pick_block(size, block)
+    rho_dtype = jnp.int8 if n <= 127 else jnp.int16
+    return pl.pallas_call(
+        functools.partial(_flash_lion_kernel, n=n),
+        grid=(size // blk,),
+        in_specs=[_hyp_spec(), _vec(blk), _vec(blk), _vec(blk), _scale(blk),
+                  _vec(blk)],
+        out_specs=[_vec(blk), _vec(blk), _vec(blk), _scale(blk)],
+        out_shape=[
+            jax.ShapeDtypeStruct((size,), jnp.bfloat16),
+            jax.ShapeDtypeStruct((size,), rho_dtype),
+            jax.ShapeDtypeStruct((size,), jnp.int8),
+            jax.ShapeDtypeStruct((size // GROUP,), jnp.float16),
+        ],
+        interpret=True,
+    )(hyp, theta_p, rho, mq, ms, g)
+
+
+# ---------------------------------------------------------------------------
+# Reference fp32 steps (lowered with the same bucket/tiling structure so the
+# step-time comparison in Table 4 is apples-to-apples)
+# ---------------------------------------------------------------------------
+
+def _ref_adamw_kernel(hyp_ref, t_ref, m_ref, v_ref, g_ref, t_o, m_o, v_o):
+    hyp = hyp_ref[...]
+    out = ref.adamw_ref(t_ref[...], m_ref[...], v_ref[...], g_ref[...],
+                        hyp[0], hyp[1], hyp[2], hyp[3], hyp[4], hyp[5],
+                        hyp[6])
+    t_o[...], m_o[...], v_o[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def ref_adamw(hyp, theta, m, v, g, block: int = DEFAULT_BLOCK):
+    (size,) = theta.shape
+    blk = _pick_block(size, block)
+    return pl.pallas_call(
+        _ref_adamw_kernel,
+        grid=(size // blk,),
+        in_specs=[_hyp_spec()] + [_vec(blk)] * 4,
+        out_specs=[_vec(blk)] * 3,
+        out_shape=[jax.ShapeDtypeStruct((size,), jnp.float32)] * 3,
+        interpret=True,
+    )(hyp, theta, m, v, g)
+
+
+def _ref_sgd_kernel(hyp_ref, t_ref, m_ref, g_ref, t_o, m_o):
+    hyp = hyp_ref[...]
+    t_o[...], m_o[...] = ref.sgd_ref(t_ref[...], m_ref[...], g_ref[...],
+                                     hyp[0], hyp[1], hyp[4])
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def ref_sgd(hyp, theta, m, g, block: int = DEFAULT_BLOCK):
+    (size,) = theta.shape
+    blk = _pick_block(size, block)
+    return pl.pallas_call(
+        _ref_sgd_kernel,
+        grid=(size // blk,),
+        in_specs=[_hyp_spec()] + [_vec(blk)] * 3,
+        out_specs=[_vec(blk)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((size,), jnp.float32)] * 2,
+        interpret=True,
+    )(hyp, theta, m, g)
+
+
+def _ref_lion_kernel(hyp_ref, t_ref, m_ref, g_ref, t_o, m_o):
+    hyp = hyp_ref[...]
+    t_o[...], m_o[...] = ref.lion_ref(t_ref[...], m_ref[...], g_ref[...],
+                                      hyp[0], hyp[1], hyp[2], hyp[4])
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def ref_lion(hyp, theta, m, g, block: int = DEFAULT_BLOCK):
+    (size,) = theta.shape
+    blk = _pick_block(size, block)
+    return pl.pallas_call(
+        _ref_lion_kernel,
+        grid=(size // blk,),
+        in_specs=[_hyp_spec()] + [_vec(blk)] * 3,
+        out_specs=[_vec(blk)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((size,), jnp.float32)] * 2,
+        interpret=True,
+    )(hyp, theta, m, g)
+
+
+# ---------------------------------------------------------------------------
+# Ablation steps (Table 4: Weight Split only / Opt. Quant. only;
+# Figure 5: no-companding)
+# ---------------------------------------------------------------------------
+
+def _wsplit_adamw_kernel(hyp_ref, tp_ref, rho_ref, m_ref, v_ref, g_ref,
+                         tp_o, rho_o, m_o, v_o, *, n):
+    hyp = hyp_ref[...]
+    out = ref.wsplit_adamw_ref(tp_ref[...], rho_ref[...], m_ref[...],
+                               v_ref[...], g_ref[...], hyp[0], hyp[1],
+                               hyp[2], hyp[3], hyp[4], hyp[5], hyp[6], n=n)
+    tp_o[...], rho_o[...], m_o[...], v_o[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block"))
+def wsplit_adamw(hyp, theta_p, rho, m, v, g,
+                 n: int = ref.N_INT8, block: int = DEFAULT_BLOCK):
+    (size,) = theta_p.shape
+    blk = _pick_block(size, block)
+    rho_dtype = jnp.int8 if n <= 127 else jnp.int16
+    return pl.pallas_call(
+        functools.partial(_wsplit_adamw_kernel, n=n),
+        grid=(size // blk,),
+        in_specs=[_hyp_spec()] + [_vec(blk)] * 5,
+        out_specs=[_vec(blk)] * 4,
+        out_shape=[
+            jax.ShapeDtypeStruct((size,), jnp.bfloat16),
+            jax.ShapeDtypeStruct((size,), rho_dtype),
+            jax.ShapeDtypeStruct((size,), jnp.float32),
+            jax.ShapeDtypeStruct((size,), jnp.float32),
+        ],
+        interpret=True,
+    )(hyp, theta_p, rho, m, v, g)
+
+
+def _quant_adamw_kernel(hyp_ref, t_ref, mq_ref, ms_ref, vq_ref, vs_ref,
+                        g_ref, t_o, mq_o, ms_o, vq_o, vs_o):
+    hyp = hyp_ref[...]
+    out = ref.quant_adamw_ref(t_ref[...], mq_ref[...], ms_ref[...],
+                              vq_ref[...], vs_ref[...], g_ref[...],
+                              hyp[0], hyp[1], hyp[2], hyp[3], hyp[4],
+                              hyp[5], hyp[6])
+    t_o[...], mq_o[...], ms_o[...], vq_o[...], vs_o[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def quant_adamw(hyp, theta, mq, ms, vq, vs, g, block: int = DEFAULT_BLOCK):
+    (size,) = theta.shape
+    blk = _pick_block(size, block)
+    return pl.pallas_call(
+        _quant_adamw_kernel,
+        grid=(size // blk,),
+        in_specs=[_hyp_spec(), _vec(blk), _vec(blk), _scale(blk), _vec(blk),
+                  _scale(blk), _vec(blk)],
+        out_specs=[_vec(blk), _vec(blk), _scale(blk), _vec(blk),
+                   _scale(blk)],
+        out_shape=[
+            jax.ShapeDtypeStruct((size,), jnp.float32),
+            jax.ShapeDtypeStruct((size,), jnp.int8),
+            jax.ShapeDtypeStruct((size // GROUP,), jnp.float16),
+            jax.ShapeDtypeStruct((size,), jnp.uint8),
+            jax.ShapeDtypeStruct((size // GROUP,), jnp.float16),
+        ],
+        interpret=True,
+    )(hyp, theta, mq, ms, vq, vs, g)
+
+
+def _nocompand_adamw_kernel(hyp_ref, tp_ref, rho_ref, mq_ref, ms_ref,
+                            vq_ref, vs_ref, g_ref,
+                            tp_o, rho_o, mq_o, ms_o, vq_o, vs_o, *, n):
+    hyp = hyp_ref[...]
+    out = ref.nocompand_adamw_ref(tp_ref[...], rho_ref[...], mq_ref[...],
+                                  ms_ref[...], vq_ref[...], vs_ref[...],
+                                  g_ref[...], hyp[0], hyp[1], hyp[2],
+                                  hyp[3], hyp[4], hyp[5], hyp[6], n=n)
+    tp_o[...], rho_o[...], mq_o[...], ms_o[...], vq_o[...], vs_o[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block"))
+def nocompand_adamw(hyp, theta_p, rho, mq, ms, vq, vs, g,
+                    n: int = ref.N_INT8, block: int = DEFAULT_BLOCK):
+    (size,) = theta_p.shape
+    blk = _pick_block(size, block)
+    rho_dtype = jnp.int8 if n <= 127 else jnp.int16
+    return pl.pallas_call(
+        functools.partial(_nocompand_adamw_kernel, n=n),
+        grid=(size // blk,),
+        in_specs=[_hyp_spec(), _vec(blk), _vec(blk), _vec(blk), _scale(blk),
+                  _vec(blk), _scale(blk), _vec(blk)],
+        out_specs=[_vec(blk), _vec(blk), _vec(blk), _scale(blk), _vec(blk),
+                   _scale(blk)],
+        out_shape=[
+            jax.ShapeDtypeStruct((size,), jnp.bfloat16),
+            jax.ShapeDtypeStruct((size,), rho_dtype),
+            jax.ShapeDtypeStruct((size,), jnp.int8),
+            jax.ShapeDtypeStruct((size // GROUP,), jnp.float16),
+            jax.ShapeDtypeStruct((size,), jnp.uint8),
+            jax.ShapeDtypeStruct((size // GROUP,), jnp.float16),
+        ],
+        interpret=True,
+    )(hyp, theta_p, rho, mq, ms, vq, vs, g)

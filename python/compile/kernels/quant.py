@@ -1,0 +1,99 @@
+"""Layer-1 Pallas kernels for Algorithms 2 & 3 (companded state quantization).
+
+Group-wise (G=32) absmax quantization with companding:
+  * momentum: softsign companding -> int8 + f16 group scales
+  * variance: sqrt companding    -> uint8 + f16 group scales
+plus the linear (no-companding) ablation variants used by Figure 5.
+
+interpret=True everywhere; see weight_split.py for why.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK = 4096
+GROUP = ref.GROUP
+
+
+def _pick_block(n: int, block: int) -> int:
+    block = min(block, n)
+    while n % block != 0 or block % GROUP != 0:
+        block //= 2
+        if block < GROUP:
+            raise ValueError(f"size {n} not tileable by group {GROUP}")
+    return block
+
+
+def _make_enc_kernel(fn):
+    def kernel(x_ref, q_ref, s_ref):
+        q, s = fn(x_ref[...])
+        q_ref[...] = q
+        s_ref[...] = s
+    return kernel
+
+
+def _make_dec_kernel(fn):
+    def kernel(q_ref, s_ref, out_ref):
+        out_ref[...] = fn(q_ref[...], s_ref[...])
+    return kernel
+
+
+def _enc(fn, q_dtype):
+    @functools.partial(jax.jit, static_argnames=("block",))
+    def run(x, block: int = DEFAULT_BLOCK):
+        (size,) = x.shape
+        blk = _pick_block(size, block)
+        return pl.pallas_call(
+            _make_enc_kernel(fn),
+            grid=(size // blk,),
+            in_specs=[pl.BlockSpec((blk,), lambda i: (i,))],
+            out_specs=[
+                pl.BlockSpec((blk,), lambda i: (i,)),
+                pl.BlockSpec((blk // GROUP,), lambda i: (i,)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((size,), q_dtype),
+                jax.ShapeDtypeStruct((size // GROUP,), jnp.float16),
+            ],
+            interpret=True,
+        )(x)
+    return run
+
+
+def _dec(fn):
+    @functools.partial(jax.jit, static_argnames=("block",))
+    def run(q, s, block: int = DEFAULT_BLOCK):
+        (size,) = q.shape
+        blk = _pick_block(size, block)
+        return pl.pallas_call(
+            _make_dec_kernel(fn),
+            grid=(size // blk,),
+            in_specs=[
+                pl.BlockSpec((blk,), lambda i: (i,)),
+                pl.BlockSpec((blk // GROUP,), lambda i: (i,)),
+            ],
+            out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((size,), jnp.float32),
+            interpret=True,
+        )(q, s)
+    return run
+
+
+# Public kernel entry points -------------------------------------------------
+
+quant_momentum = _enc(ref.quant_momentum, jnp.int8)
+dequant_momentum = _dec(ref.dequant_momentum)
+quant_momentum_linear = _enc(ref.quant_momentum_linear, jnp.int8)
+dequant_momentum_linear = _dec(ref.dequant_momentum_linear)
+
+quant_variance = _enc(ref.quant_variance, jnp.uint8)
+dequant_variance = _dec(ref.dequant_variance)
+quant_variance_linear = _enc(ref.quant_variance_linear, jnp.uint8)
+dequant_variance_linear = _dec(ref.dequant_variance_linear)

@@ -1,0 +1,317 @@
+"""Pure-jnp reference oracle for every FlashOptim kernel.
+
+This module is the *semantic definition* of the paper's algorithms:
+
+  * Algorithm 1 — ULP-normalized weight splitting  C / C^-1
+  * Algorithm 2 — companded momentum quantization  Q_m / Q_m^-1
+  * Algorithm 3 — companded variance quantization  Q_v / Q_v^-1
+  * Algorithms 4/5/6 — Flash{AdamW,SGD,Lion} fused update steps
+
+The Pallas kernels in `weight_split.py`, `quant.py` and `fused_steps.py`
+are validated against these functions by `python/tests/`, and the Rust
+`formats` module mirrors them bit-for-bit (cross-validated through the
+HLO runtime in `rust/tests/`).
+
+Everything here is plain jax.numpy — no pallas — so it can run anywhere
+and serves as the correctness signal.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Group size for group-wise quantization (paper §3.2, G = 32).
+GROUP = 32
+
+# N constants from Algorithm 1.
+N_INT8 = 127
+N_INT16 = 32767
+
+
+# ---------------------------------------------------------------------------
+# exact power-of-two helpers
+# ---------------------------------------------------------------------------
+
+def pow2_i32(k: jnp.ndarray) -> jnp.ndarray:
+    """Exact 2**k as float32 for integer k in [-149, 127].
+
+    Built by bit-twiddling so the result is exact even in the subnormal
+    range.
+    """
+    k = jnp.asarray(k, jnp.int32)
+    # normal: biased exponent k+127 in [1, 254]
+    normal_bits = ((k + 127) << 23).astype(jnp.uint32)
+    # subnormal: 2^k has the mantissa bit at position k+149
+    sub_shift = jnp.clip(k + 149, 0, 22).astype(jnp.uint32)
+    sub_bits = jnp.uint32(1) << sub_shift
+    bits = jnp.where(k >= -126, normal_bits, sub_bits)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def ulp_exponent_bf16(theta_p: jnp.ndarray) -> jnp.ndarray:
+    """Integer e such that ULP(theta_p) = 2**e, for bfloat16 theta_p.
+
+    BF16 has 7 explicit mantissa bits.  For a normal value with biased
+    exponent E the ULP is 2^(E-127-7); zeros and subnormals share the
+    ULP of the smallest normal binade, 2^(-126-7).
+    """
+    bits = jax.lax.bitcast_convert_type(theta_p, jnp.uint16).astype(jnp.int32)
+    exp = (bits >> 7) & 0xFF
+    return jnp.where(exp > 0, exp - 127 - 7, -126 - 7)
+
+
+def ulp_exponent_f16(theta_p: jnp.ndarray) -> jnp.ndarray:
+    """Same as above for IEEE float16 (10 explicit mantissa bits)."""
+    bits = jax.lax.bitcast_convert_type(theta_p, jnp.uint16).astype(jnp.int32)
+    exp = (bits >> 10) & 0x1F
+    return jnp.where(exp > 0, exp - 15 - 10, -14 - 10)
+
+
+def _ulp_exponent(theta_p: jnp.ndarray) -> jnp.ndarray:
+    if theta_p.dtype == jnp.bfloat16:
+        return ulp_exponent_bf16(theta_p)
+    if theta_p.dtype == jnp.float16:
+        return ulp_exponent_f16(theta_p)
+    raise ValueError(f"unsupported split target dtype {theta_p.dtype}")
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — weight splitting
+# ---------------------------------------------------------------------------
+
+def split_compress(theta: jnp.ndarray, n: int = N_INT8,
+                   target=jnp.bfloat16):
+    """C(theta) -> (theta', rho).  Algorithm 1 lines 1-8.
+
+    theta  : float32 tensor
+    n      : 127 for INT8 correction, 32767 for INT16
+    target : low-precision weight dtype (bfloat16 or float16)
+    """
+    theta = theta.astype(jnp.float32)
+    theta_p = theta.astype(target)                    # Downcast (RNE)
+    e = theta - theta_p.astype(jnp.float32)           # exact (Sterbenz)
+    ell = _ulp_exponent(theta_p) - 1                  # 2^ell = ULP/2
+    h = -(ell) // 2                                   # floor(-ell/2)
+    # e_norm = e * 2^-ell, two exact scaling steps for range safety
+    e_norm = (e * pow2_i32(h)) * pow2_i32(-ell - h)
+    e_norm = jnp.clip(e_norm, -1.0, 1.0)
+    rho_f = jnp.round(e_norm * n)
+    dtype = jnp.int8 if n <= 127 else jnp.int16
+    rho = jnp.clip(rho_f, -n, n).astype(dtype)
+    return theta_p, rho
+
+
+def split_decompress(theta_p: jnp.ndarray, rho: jnp.ndarray,
+                     n: int = N_INT8) -> jnp.ndarray:
+    """C^-1(theta', rho) -> theta_hat.  Algorithm 1 lines 9-13."""
+    ell = _ulp_exponent(theta_p) - 1
+    h = ell // 2                                      # floor(ell/2)
+    e = ((rho.astype(jnp.float32) / n) * pow2_i32(h)) * pow2_i32(ell - h)
+    return theta_p.astype(jnp.float32) + e
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — momentum quantization (softsign companding)
+# ---------------------------------------------------------------------------
+
+def _group(x: jnp.ndarray) -> jnp.ndarray:
+    assert x.size % GROUP == 0, f"size {x.size} not divisible by {GROUP}"
+    return x.reshape(-1, GROUP)
+
+
+def phi_m(x: jnp.ndarray) -> jnp.ndarray:
+    """Momentum companding function, eq. (3)."""
+    return 2.0 * x / (1.0 + jnp.abs(x))
+
+
+def phi_m_inv(z: jnp.ndarray) -> jnp.ndarray:
+    return z / (2.0 - jnp.abs(z))
+
+
+def quant_momentum(m: jnp.ndarray):
+    """Q_m(m) -> (q: int8, s: float16).  Algorithm 2."""
+    shape = m.shape
+    g = _group(m.astype(jnp.float32))
+    s = jnp.max(jnp.abs(g), axis=1)                   # absmax scale
+    s = jnp.minimum(s, 65504.0)                       # saturate to f16 max
+    s16 = s.astype(jnp.float16)
+    s_safe = jnp.where(s16 > 0, s16.astype(jnp.float32), 1.0)
+    mpp = phi_m(g / s_safe[:, None])
+    q = jnp.clip(jnp.round(mpp * 127.0), -127, 127).astype(jnp.int8)
+    return q.reshape(shape), s16
+
+
+def dequant_momentum(q: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """Q_m^-1(q, s) -> m.  Algorithm 2 lines 8-13."""
+    shape = q.shape
+    g = _group(q).astype(jnp.float32) / 127.0
+    mp = phi_m_inv(g)
+    return (mp * s.astype(jnp.float32)[:, None]).reshape(shape)
+
+
+def quant_momentum_linear(m: jnp.ndarray):
+    """Ablation: group-wise linear (no companding) int8 quantization."""
+    shape = m.shape
+    g = _group(m.astype(jnp.float32))
+    s = jnp.max(jnp.abs(g), axis=1)
+    s = jnp.minimum(s, 65504.0)                       # saturate to f16 max
+    s16 = s.astype(jnp.float16)
+    s_safe = jnp.where(s16 > 0, s16.astype(jnp.float32), 1.0)
+    q = jnp.clip(jnp.round(g / s_safe[:, None] * 127.0), -127, 127)
+    return q.astype(jnp.int8).reshape(shape), s16
+
+
+def dequant_momentum_linear(q: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    shape = q.shape
+    g = _group(q).astype(jnp.float32) / 127.0
+    return (g * s.astype(jnp.float32)[:, None]).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3 — variance quantization (sqrt companding)
+# ---------------------------------------------------------------------------
+
+def quant_variance(v: jnp.ndarray):
+    """Q_v(v) -> (q: uint8, s: float16).  Algorithm 3."""
+    shape = v.shape
+    vp = jnp.sqrt(_group(v.astype(jnp.float32)))
+    s = jnp.max(vp, axis=1)
+    s = jnp.minimum(s, 65504.0)                       # saturate to f16 max
+    s16 = s.astype(jnp.float16)
+    s_safe = jnp.where(s16 > 0, s16.astype(jnp.float32), 1.0)
+    q = jnp.clip(jnp.round(vp / s_safe[:, None] * 255.0), 0, 255)
+    return q.astype(jnp.uint8).reshape(shape), s16
+
+
+def dequant_variance(q: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    shape = q.shape
+    vp = _group(q).astype(jnp.float32) / 255.0 * s.astype(jnp.float32)[:, None]
+    return (vp * vp).reshape(shape)
+
+
+def quant_variance_linear(v: jnp.ndarray):
+    """Ablation: linear uint8 quantization of raw variance (Fig. 5)."""
+    shape = v.shape
+    g = _group(v.astype(jnp.float32))
+    s = jnp.max(g, axis=1)
+    s = jnp.minimum(s, 65504.0)                       # saturate to f16 max
+    s16 = s.astype(jnp.float16)
+    s_safe = jnp.where(s16 > 0, s16.astype(jnp.float32), 1.0)
+    q = jnp.clip(jnp.round(g / s_safe[:, None] * 255.0), 0, 255)
+    return q.astype(jnp.uint8).reshape(shape), s16
+
+
+def dequant_variance_linear(q: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    shape = q.shape
+    g = _group(q).astype(jnp.float32) / 255.0
+    return (g * s.astype(jnp.float32)[:, None]).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Reference (FP32) optimizer update rules
+# ---------------------------------------------------------------------------
+
+def adamw_ref(theta, m, v, g, lr, beta1, beta2, eps, wd, bc1, bc2):
+    """One fp32 AdamW step.  bc1 = 1/(1-beta1^t), bc2 = 1/(1-beta2^t)."""
+    g = g.astype(jnp.float32)
+    m = beta1 * m + (1.0 - beta1) * g
+    v = beta2 * v + (1.0 - beta2) * g * g
+    m_hat = m * bc1
+    v_hat = v * bc2
+    theta = theta - lr * (m_hat / (jnp.sqrt(v_hat) + eps) + wd * theta)
+    return theta, m, v
+
+
+def sgd_ref(theta, m, g, lr, mu, wd):
+    """One fp32 SGD-with-momentum step (Algorithm 5 semantics)."""
+    g = g.astype(jnp.float32)
+    m = mu * m + g
+    theta = theta - lr * (m + wd * theta)
+    return theta, m
+
+
+def lion_ref(theta, m, g, lr, beta1, beta2, wd):
+    """One fp32 Lion step (Algorithm 6 semantics)."""
+    g = g.astype(jnp.float32)
+    u = jnp.sign(beta1 * m + (1.0 - beta1) * g)
+    m = beta2 * m + (1.0 - beta2) * g
+    theta = theta - lr * (u + wd * theta)
+    return theta, m
+
+
+# ---------------------------------------------------------------------------
+# Flash optimizer steps, composed from the reference pieces.
+# These define the exact semantics the fused Pallas kernels must match.
+# ---------------------------------------------------------------------------
+
+def flash_adamw_ref(theta_p, rho, mq, ms, vq, vs, g,
+                    lr, beta1, beta2, eps, wd, bc1, bc2, n=N_INT8):
+    """Algorithm 4 lines 9-22: prologue + AdamW update + epilogue."""
+    m = dequant_momentum(mq, ms)
+    v = dequant_variance(vq, vs)
+    theta = split_decompress(theta_p, rho, n)
+    theta, m, v = adamw_ref(theta, m, v, g, lr, beta1, beta2, eps, wd,
+                            bc1, bc2)
+    mq, ms = quant_momentum(m)
+    vq, vs = quant_variance(v)
+    theta_p, rho = split_compress(theta, n)
+    return theta_p, rho, mq, ms, vq, vs
+
+
+def flash_sgd_ref(theta_p, rho, mq, ms, g, lr, mu, wd, n=N_INT8):
+    """Algorithm 5."""
+    m = dequant_momentum(mq, ms)
+    theta = split_decompress(theta_p, rho, n)
+    theta, m = sgd_ref(theta, m, g, lr, mu, wd)
+    mq, ms = quant_momentum(m)
+    theta_p, rho = split_compress(theta, n)
+    return theta_p, rho, mq, ms
+
+
+def flash_lion_ref(theta_p, rho, mq, ms, g, lr, beta1, beta2, wd, n=N_INT8):
+    """Algorithm 6."""
+    m = dequant_momentum(mq, ms)
+    theta = split_decompress(theta_p, rho, n)
+    theta, m = lion_ref(theta, m, g, lr, beta1, beta2, wd)
+    mq, ms = quant_momentum(m)
+    theta_p, rho = split_compress(theta, n)
+    return theta_p, rho, mq, ms
+
+
+# Ablation variants used by Table 4 / Figure 5 -------------------------------
+
+def wsplit_adamw_ref(theta_p, rho, m, v, g,
+                     lr, beta1, beta2, eps, wd, bc1, bc2, n=N_INT8):
+    """Weight splitting only; fp32 optimizer states."""
+    theta = split_decompress(theta_p, rho, n)
+    theta, m, v = adamw_ref(theta, m, v, g, lr, beta1, beta2, eps, wd,
+                            bc1, bc2)
+    theta_p, rho = split_compress(theta, n)
+    return theta_p, rho, m, v
+
+
+def quant_adamw_ref(theta, mq, ms, vq, vs, g,
+                    lr, beta1, beta2, eps, wd, bc1, bc2):
+    """State quantization only; fp32 master weights."""
+    m = dequant_momentum(mq, ms)
+    v = dequant_variance(vq, vs)
+    theta, m, v = adamw_ref(theta, m, v, g, lr, beta1, beta2, eps, wd,
+                            bc1, bc2)
+    mq, ms = quant_momentum(m)
+    vq, vs = quant_variance(v)
+    return theta, mq, ms, vq, vs
+
+
+def nocompand_adamw_ref(theta_p, rho, mq, ms, vq, vs, g,
+                        lr, beta1, beta2, eps, wd, bc1, bc2, n=N_INT8):
+    """Fig. 5 ablation: linear (no companding) 8-bit state quantization."""
+    m = dequant_momentum_linear(mq, ms)
+    v = dequant_variance_linear(vq, vs)
+    theta = split_decompress(theta_p, rho, n)
+    theta, m, v = adamw_ref(theta, m, v, g, lr, beta1, beta2, eps, wd,
+                            bc1, bc2)
+    mq, ms = quant_momentum_linear(m)
+    vq, vs = quant_variance_linear(v)
+    theta_p, rho = split_compress(theta, n)
+    return theta_p, rho, mq, ms, vq, vs

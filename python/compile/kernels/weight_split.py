@@ -1,0 +1,88 @@
+"""Layer-1 Pallas kernels for Algorithm 1 (ULP-normalized weight splitting).
+
+The kernels are written for TPU-style tiling (1-D grid over VMEM-resident
+blocks, lane-multiple block sizes) but are always lowered with
+``interpret=True`` — the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers the kernel body to plain HLO ops
+that run on any backend (see DESIGN.md §Hardware-Adaptation).
+
+Semantics are defined by ``ref.split_compress`` / ``ref.split_decompress``;
+``python/tests/test_weight_split.py`` enforces bit-exact agreement.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Block size: multiple of 128 lanes and of the group size; small enough
+# that (2+1+4)·BLOCK bytes of VMEM per in-flight block double-buffers
+# comfortably inside 16 MiB.
+DEFAULT_BLOCK = 4096
+
+
+def _pick_block(n: int, block: int) -> int:
+    block = min(block, n)
+    while n % block != 0:
+        block //= 2
+    return max(block, 1)
+
+
+def _split_compress_kernel(theta_ref, theta_p_ref, rho_ref, *, n: int,
+                           target):
+    theta = theta_ref[...]
+    theta_p, rho = ref.split_compress(theta, n=n, target=target)
+    theta_p_ref[...] = theta_p
+    rho_ref[...] = rho
+
+
+def _split_decompress_kernel(theta_p_ref, rho_ref, out_ref, *, n: int):
+    out_ref[...] = ref.split_decompress(theta_p_ref[...], rho_ref[...], n=n)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block", "target_name"))
+def split_compress(theta: jnp.ndarray, n: int = ref.N_INT8,
+                   block: int = DEFAULT_BLOCK, target_name: str = "bfloat16"):
+    """Pallas C(theta) -> (theta', rho) over a flat f32 vector."""
+    target = jnp.bfloat16 if target_name == "bfloat16" else jnp.float16
+    (size,) = theta.shape
+    blk = _pick_block(size, block)
+    rho_dtype = jnp.int8 if n <= 127 else jnp.int16
+    return pl.pallas_call(
+        functools.partial(_split_compress_kernel, n=n, target=target),
+        grid=(size // blk,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((size,), target),
+            jax.ShapeDtypeStruct((size,), rho_dtype),
+        ],
+        interpret=True,
+    )(theta)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block"))
+def split_decompress(theta_p: jnp.ndarray, rho: jnp.ndarray,
+                     n: int = ref.N_INT8, block: int = DEFAULT_BLOCK):
+    """Pallas C^-1(theta', rho) -> theta_hat."""
+    (size,) = theta_p.shape
+    blk = _pick_block(size, block)
+    return pl.pallas_call(
+        functools.partial(_split_decompress_kernel, n=n),
+        grid=(size // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((size,), jnp.float32),
+        interpret=True,
+    )(theta_p, rho)

@@ -1,0 +1,105 @@
+"""Layer-2 JAX graphs: decoder-only transformer LM over a flat param buffer.
+
+Both training tracks compute activations in bfloat16 (paper §4.1 table):
+  * reference track: params f32 (master), downcast to bf16 inside fwd;
+    gradients come back f32.
+  * flash track: params *are* bf16 (theta'); training runs directly on the
+    low-precision weights (Algorithm 4 line 8); gradients come back bf16.
+
+The flat-buffer convention (DESIGN.md §1) keeps HLO signatures small and
+lets the Rust coordinator treat parameters/optimizer state as opaque
+buckets, which is what enables gradient release.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import LmConfig
+
+
+def unpack(flat: jnp.ndarray, layout: List[Tuple[str, Tuple[int, ...]]]):
+    """Slice the flat buffer into named views (no copies after fusion)."""
+    params = {}
+    off = 0
+    for name, shape in layout:
+        n = 1
+        for s in shape:
+            n *= s
+        params[name] = jax.lax.dynamic_slice(flat, (off,), (n,)).reshape(shape)
+        off += n
+    return params
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-5)
+    return ((xf / rms) * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def attention(x: jnp.ndarray, wqkv: jnp.ndarray, wo: jnp.ndarray,
+              n_heads: int) -> jnp.ndarray:
+    b, t, d = x.shape
+    hd = d // n_heads
+    qkv = x @ wqkv                                # [b, t, 3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(z):
+        return z.reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = (q @ k.transpose(0, 1, 3, 2)).astype(jnp.float32)
+    att = att / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1).astype(x.dtype)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ wo
+
+
+def forward_logits(flat: jnp.ndarray, x: jnp.ndarray, cfg: LmConfig):
+    """Token logits [b, t, vocab] in f32.  flat may be f32 or bf16."""
+    p = unpack(flat, cfg.layout())
+    compute = jnp.bfloat16
+    wte = p["wte"].astype(compute)
+    h = wte[x] + p["wpe"].astype(compute)[None, : x.shape[1]]
+    for i in range(cfg.n_layers):
+        h = h + attention(rms_norm(h, p[f"h{i}.ln1"]),
+                          p[f"h{i}.wqkv"].astype(compute),
+                          p[f"h{i}.wo"].astype(compute), cfg.n_heads)
+        z = rms_norm(h, p[f"h{i}.ln2"])
+        z = jax.nn.gelu(z @ p[f"h{i}.w1"].astype(compute))
+        h = h + z @ p[f"h{i}.w2"].astype(compute)
+    h = rms_norm(h, p["lnf"])
+    logits = h @ wte.T                            # tied head
+    return logits.astype(jnp.float32)
+
+
+def loss_fn(flat: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray,
+            cfg: LmConfig) -> jnp.ndarray:
+    """Mean next-token cross-entropy (f32)."""
+    logits = forward_logits(flat, x, cfg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def fwd_bwd(flat: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray,
+            cfg: LmConfig):
+    """(loss, grads) — grads share the dtype of `flat`."""
+    loss, grads = jax.value_and_grad(loss_fn)(flat, x, y, cfg)
+    return loss, grads
+
+
+def evaluate(flat: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray,
+             cfg: LmConfig):
+    """(loss_sum f32, ncorrect i32) over all next-token positions."""
+    logits = forward_logits(flat, x, cfg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+    loss_sum = jnp.sum(logz - gold)
+    ncorrect = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.int32))
+    return loss_sum, ncorrect

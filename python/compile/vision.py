@@ -1,0 +1,48 @@
+"""Layer-2 JAX graphs: MLP image classifier over a flat param buffer.
+
+Stand-in for the paper's ResNet-50/ImageNet track (see DESIGN.md §3
+substitution table): it exercises the SGD-with-momentum / AdamW training
+paths and an accuracy metric on a synthetic image task generated on the
+Rust side.  Same flat-buffer and bf16-activation conventions as model.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import VisionConfig
+from .model import unpack
+
+
+def forward_logits(flat: jnp.ndarray, x: jnp.ndarray, cfg: VisionConfig):
+    p = unpack(flat, cfg.layout())
+    compute = jnp.bfloat16
+    h = x.astype(compute)
+    n_layers = len(cfg.hidden) + 1
+    for i in range(n_layers):
+        h = h @ p[f"fc{i}.w"].astype(compute) + p[f"fc{i}.b"].astype(compute)
+        if i < n_layers - 1:
+            h = jax.nn.gelu(h)
+    return h.astype(jnp.float32)
+
+
+def loss_fn(flat, x, y, cfg: VisionConfig):
+    logits = forward_logits(flat, x, cfg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def fwd_bwd(flat, x, y, cfg: VisionConfig):
+    loss, grads = jax.value_and_grad(loss_fn)(flat, x, y, cfg)
+    return loss, grads
+
+
+def evaluate(flat, x, y, cfg: VisionConfig):
+    logits = forward_logits(flat, x, cfg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    loss_sum = jnp.sum(logz - gold)
+    ncorrect = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.int32))
+    return loss_sum, ncorrect

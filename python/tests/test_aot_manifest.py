@@ -1,0 +1,73 @@
+"""AOT manifest consistency (runs only after `make artifacts`)."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST),
+    reason="artifacts not built (run `make artifacts`)")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_every_artifact_file_exists(manifest):
+    names = []
+    for m in manifest["models"].values():
+        names += list(m["artifacts"].values())
+    for b in manifest["buckets"].values():
+        names += list(b["artifacts"].values())
+    names += list(manifest["kernels"]["artifacts"].values())
+    assert names
+    for n in names:
+        path = os.path.join(ART, n)
+        assert os.path.exists(path), n
+        assert os.path.getsize(path) > 100, n
+
+
+def test_hlo_text_parses_header(manifest):
+    for m in manifest["models"].values():
+        path = os.path.join(ART, list(m["artifacts"].values())[0])
+        head = open(path).read(200)
+        assert "HloModule" in head
+
+
+def test_layout_contiguous(manifest):
+    for m in manifest["models"].values():
+        off = 0
+        for entry in m["layout"]:
+            assert entry["offset"] == off
+            n = 1
+            for s in entry["shape"]:
+                n *= s
+            off += n
+        assert off == m["param_count"]
+
+
+def test_bucket_sizes_group_aligned(manifest):
+    g = manifest["group"]
+    for key, b in manifest["buckets"].items():
+        assert int(key) == b["size"]
+        assert b["size"] % g == 0
+        required = ["opt_adamw_ref", "opt_sgd_ref", "opt_lion_ref",
+                    "opt_adamw_flash", "opt_sgd_flash", "opt_lion_flash",
+                    "opt_adamw_wsplit", "opt_adamw_quant",
+                    "opt_adamw_nocompand"]
+        for r in required:
+            assert r in b["artifacts"], r
+
+
+def test_hyp_layout_stable(manifest):
+    # rust/src/optim/hyper.rs mirrors this order; do not reorder.
+    assert manifest["hyp_layout"][:7] == [
+        "lr", "beta1", "beta2", "eps", "wd", "bc1", "bc2"]
+    assert manifest["nhyp"] == 8
+    assert manifest["group"] == 32

@@ -1,0 +1,257 @@
+"""Fused optimizer step kernels (Algorithms 4/5/6) vs composed oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_steps, ref
+
+
+def hyp_vec(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, wd=0.1, t=10):
+    return jnp.asarray([lr, b1, b2, eps, wd,
+                        1.0 / (1.0 - b1 ** t), 1.0 / (1.0 - b2 ** t), 0.0],
+                       jnp.float32)
+
+
+def make_state(rng, n, scale=0.1):
+    theta = (rng.standard_normal(n) * scale).astype(np.float32)
+    tp, rho = ref.split_compress(jnp.asarray(theta))
+    m = (rng.standard_normal(n) * 0.01).astype(np.float32)
+    v = (rng.standard_normal(n) ** 2 * 1e-4).astype(np.float32)
+    mq, ms = ref.quant_momentum(jnp.asarray(m))
+    vq, vs = ref.quant_variance(jnp.asarray(v))
+    g = jnp.asarray((rng.standard_normal(n) * 0.01).astype(np.float32)
+                    ).astype(jnp.bfloat16)
+    return tp, rho, mq, ms, vq, vs, g
+
+
+def assert_all_equal(kernel_out, ref_out, names):
+    """Kernel (compiled, FMA-contracted) vs oracle (eager, strict IEEE):
+    integer codes within +-1 (rare), floats within 1e-6 relative."""
+    for a, b, name in zip(kernel_out, ref_out, names):
+        a = np.asarray(a)
+        b = np.asarray(b)
+        if a.dtype in (np.int8, np.uint8, np.int16):
+            d = np.abs(a.astype(np.int32) - b.astype(np.int32))
+            assert d.max() <= 1, f"{name}: max code diff {d.max()}"
+            assert (d == 1).mean() < 0.01, f"{name}: too many off-by-1"
+        else:
+            af = a.astype(np.float64)
+            bf = b.astype(np.float64)
+            rel = np.abs(af - bf) / np.maximum(np.abs(bf), 1e-30)
+            # bf16 outputs: one output-ulp; f32: FMA differences can
+            # compound through the dequant->update->requant chain
+            tol = {2: 1.6e-2, 4: 1e-4}[a.dtype.itemsize]
+            if a.dtype == np.float16:
+                tol = 2e-3
+            assert rel.max() < tol, f"{name}: rel {rel.max()}"
+
+
+class TestFlashAdamW:
+    def test_bitexact_vs_oracle(self):
+        rng = np.random.default_rng(0)
+        tp, rho, mq, ms, vq, vs, g = make_state(rng, 4096)
+        h = hyp_vec()
+        out_k = fused_steps.flash_adamw(h, tp, rho, mq, ms, vq, vs, g)
+        out_r = ref.flash_adamw_ref(tp, rho, mq, ms, vq, vs, g,
+                                    h[0], h[1], h[2], h[3], h[4], h[5], h[6])
+        assert_all_equal(out_k, out_r,
+                         ["theta_p", "rho", "mq", "ms", "vq", "vs"])
+
+    def test_close_to_fp32_adamw(self):
+        """One flash step stays close to the exact fp32 step."""
+        rng = np.random.default_rng(1)
+        n = 4096
+        theta = (rng.standard_normal(n) * 0.1).astype(np.float32)
+        m = (rng.standard_normal(n) * 0.01).astype(np.float32)
+        v = (rng.standard_normal(n) ** 2 * 1e-4).astype(np.float32)
+        g = (rng.standard_normal(n) * 0.01).astype(np.float32)
+        h = hyp_vec()
+        t_ref, _, _ = ref.adamw_ref(jnp.asarray(theta), jnp.asarray(m),
+                                    jnp.asarray(v), jnp.asarray(g),
+                                    h[0], h[1], h[2], h[3], h[4], h[5], h[6])
+        tp, rho = ref.split_compress(jnp.asarray(theta))
+        mq, ms = ref.quant_momentum(jnp.asarray(m))
+        vq, vs = ref.quant_variance(jnp.asarray(v))
+        gb = jnp.asarray(g).astype(jnp.bfloat16)
+        tp2, rho2, *_ = fused_steps.flash_adamw(h, tp, rho, mq, ms, vq, vs,
+                                                gb)
+        t_flash = np.asarray(ref.split_decompress(tp2, rho2))
+        # update magnitude ~ lr=1e-3; bulk agreement well below that.
+        # (elements with near-zero variance are legitimately sensitive:
+        # quantizing v perturbs 1/sqrt(v_hat), so the max diff can reach
+        # the update scale — the 50-step tracking test below bounds the
+        # accumulated effect instead)
+        diff = np.abs(t_flash - np.asarray(t_ref))
+        assert np.median(diff) < 5e-5
+        assert np.quantile(diff, 0.99) < 7e-4
+
+    def test_padding_fixed_point(self):
+        """All-zero (padding) elements remain exactly zero after a step."""
+        n = 2048
+        zeros = jnp.zeros(n, jnp.float32)
+        tp, rho = ref.split_compress(zeros)
+        mq, ms = ref.quant_momentum(zeros)
+        vq, vs = ref.quant_variance(zeros)
+        g = zeros.astype(jnp.bfloat16)
+        out = fused_steps.flash_adamw(hyp_vec(), tp, rho, mq, ms, vq, vs, g)
+        assert (np.asarray(out[0], np.float32) == 0).all()
+        assert (np.asarray(out[1]) == 0).all()
+        assert (np.asarray(out[2]) == 0).all()
+        assert (np.asarray(out[4]) == 0).all()
+
+    def test_many_steps_track_fp32(self):
+        """Loss-free invariant: 50 flash steps track 50 fp32 steps."""
+        rng = np.random.default_rng(2)
+        n = 1024
+        theta = (rng.standard_normal(n) * 0.1).astype(np.float32)
+        tp, rho = ref.split_compress(jnp.asarray(theta))
+        mq, ms = ref.quant_momentum(jnp.zeros(n))
+        vq, vs = ref.quant_variance(jnp.zeros(n))
+        t32 = jnp.asarray(theta)
+        m32 = jnp.zeros(n)
+        v32 = jnp.zeros(n)
+        for t in range(1, 51):
+            g = (rng.standard_normal(n) * 0.01).astype(np.float32)
+            h = hyp_vec(t=t)
+            tp, rho, mq, ms, vq, vs = fused_steps.flash_adamw(
+                h, tp, rho, mq, ms, vq, vs, jnp.asarray(g).astype(jnp.bfloat16))
+            t32, m32, v32 = ref.adamw_ref(t32, m32, v32, jnp.asarray(g),
+                                          h[0], h[1], h[2], h[3], h[4],
+                                          h[5], h[6])
+        drift = np.abs(np.asarray(ref.split_decompress(tp, rho)) -
+                       np.asarray(t32))
+        scale = np.abs(np.asarray(t32)) + 1e-3
+        assert np.median(drift / scale) < 0.05
+
+
+class TestFlashSgd:
+    def test_bitexact_vs_oracle(self):
+        rng = np.random.default_rng(3)
+        tp, rho, mq, ms, _, _, g = make_state(rng, 4096)
+        h = hyp_vec(lr=0.1, b1=0.9, wd=3e-5)
+        out_k = fused_steps.flash_sgd(h, tp, rho, mq, ms, g)
+        out_r = ref.flash_sgd_ref(tp, rho, mq, ms, g, h[0], h[1], h[4])
+        assert_all_equal(out_k, out_r, ["theta_p", "rho", "mq", "ms"])
+
+
+class TestFlashLion:
+    def test_bitexact_vs_oracle(self):
+        rng = np.random.default_rng(4)
+        tp, rho, mq, ms, _, _, g = make_state(rng, 4096)
+        h = hyp_vec(lr=2e-4)
+        out_k = fused_steps.flash_lion(h, tp, rho, mq, ms, g)
+        out_r = ref.flash_lion_ref(tp, rho, mq, ms, g, h[0], h[1], h[2],
+                                   h[4])
+        assert_all_equal(out_k, out_r, ["theta_p", "rho", "mq", "ms"])
+
+    def test_update_is_sign_bounded(self):
+        """Lion update magnitude is exactly lr*(1 + wd*|theta|) bounded."""
+        rng = np.random.default_rng(5)
+        tp, rho, mq, ms, _, _, g = make_state(rng, 1024)
+        h = hyp_vec(lr=2e-4, wd=0.0)
+        tp2, rho2, _, _ = fused_steps.flash_lion(h, tp, rho, mq, ms, g)
+        before = np.asarray(ref.split_decompress(tp, rho))
+        after = np.asarray(ref.split_decompress(tp2, rho2))
+        # |delta| <= lr + split reconstruction noise of both endpoints
+        ulp = np.exp2(np.asarray(ref.ulp_exponent_bf16(tp), np.float64))
+        assert (np.abs(after - before) <= 2e-4 * 1.01 + ulp).all()
+
+
+class TestReferenceSteps:
+    def test_ref_adamw_kernel(self):
+        rng = np.random.default_rng(6)
+        n = 4096
+        theta = jnp.asarray((rng.standard_normal(n) * 0.1).astype(np.float32))
+        m = jnp.asarray((rng.standard_normal(n) * 0.01).astype(np.float32))
+        v = jnp.asarray((rng.standard_normal(n) ** 2 * 1e-4).astype(np.float32))
+        g = jnp.asarray((rng.standard_normal(n) * 0.01).astype(np.float32))
+        h = hyp_vec()
+        out_k = fused_steps.ref_adamw(h, theta, m, v, g)
+        out_r = ref.adamw_ref(theta, m, v, g, h[0], h[1], h[2], h[3], h[4],
+                              h[5], h[6])
+        assert_all_equal(out_k, out_r, ["theta", "m", "v"])
+
+    def test_ref_sgd_and_lion_kernels(self):
+        rng = np.random.default_rng(7)
+        n = 2048
+        theta = jnp.asarray((rng.standard_normal(n) * 0.1).astype(np.float32))
+        m = jnp.asarray((rng.standard_normal(n) * 0.01).astype(np.float32))
+        g = jnp.asarray((rng.standard_normal(n) * 0.01).astype(np.float32))
+        h = hyp_vec(lr=0.1)
+        assert_all_equal(fused_steps.ref_sgd(h, theta, m, g),
+                         ref.sgd_ref(theta, m, g, h[0], h[1], h[4]),
+                         ["theta", "m"])
+        assert_all_equal(fused_steps.ref_lion(h, theta, m, g),
+                         ref.lion_ref(theta, m, g, h[0], h[1], h[2], h[4]),
+                         ["theta", "m"])
+
+
+class TestAblationSteps:
+    def test_wsplit_adamw(self):
+        rng = np.random.default_rng(8)
+        n = 2048
+        theta = (rng.standard_normal(n) * 0.1).astype(np.float32)
+        tp, rho = ref.split_compress(jnp.asarray(theta))
+        m = jnp.asarray((rng.standard_normal(n) * 0.01).astype(np.float32))
+        v = jnp.asarray((rng.standard_normal(n) ** 2 * 1e-4).astype(np.float32))
+        g = jnp.asarray((rng.standard_normal(n) * 0.01).astype(np.float32)
+                        ).astype(jnp.bfloat16)
+        h = hyp_vec()
+        out_k = fused_steps.wsplit_adamw(h, tp, rho, m, v, g)
+        out_r = ref.wsplit_adamw_ref(tp, rho, m, v, g, h[0], h[1], h[2],
+                                     h[3], h[4], h[5], h[6])
+        assert_all_equal(out_k, out_r, ["theta_p", "rho", "m", "v"])
+
+    def test_quant_adamw(self):
+        rng = np.random.default_rng(9)
+        n = 2048
+        theta = jnp.asarray((rng.standard_normal(n) * 0.1).astype(np.float32))
+        mq, ms = ref.quant_momentum(jnp.zeros(n))
+        vq, vs = ref.quant_variance(jnp.zeros(n))
+        g = jnp.asarray((rng.standard_normal(n) * 0.01).astype(np.float32))
+        h = hyp_vec()
+        out_k = fused_steps.quant_adamw(h, theta, mq, ms, vq, vs, g)
+        out_r = ref.quant_adamw_ref(theta, mq, ms, vq, vs, g, h[0], h[1],
+                                    h[2], h[3], h[4], h[5], h[6])
+        assert_all_equal(out_k, out_r, ["theta", "mq", "ms", "vq", "vs"])
+
+    def test_nocompand_adamw(self):
+        rng = np.random.default_rng(10)
+        tp, rho, _, _, _, _, g = make_state(rng, 2048)
+        mq, ms = ref.quant_momentum_linear(jnp.zeros(2048))
+        vq, vs = ref.quant_variance_linear(jnp.zeros(2048))
+        h = hyp_vec()
+        out_k = fused_steps.nocompand_adamw(h, tp, rho, mq, ms, vq, vs, g)
+        out_r = ref.nocompand_adamw_ref(tp, rho, mq, ms, vq, vs, g, h[0],
+                                        h[1], h[2], h[3], h[4], h[5], h[6])
+        assert_all_equal(out_k, out_r,
+                         ["theta_p", "rho", "mq", "ms", "vq", "vs"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=8),
+       st.integers(min_value=0, max_value=2 ** 31),
+       st.sampled_from([256, 512, 1024]))
+def test_fused_adamw_shapes_hypothesis(nblocks, seed, block):
+    """Fused kernel matches oracle across bucket/block size combinations."""
+    rng = np.random.default_rng(seed)
+    n = block * nblocks
+    tp, rho, mq, ms, vq, vs, g = make_state(rng, n)
+    h = hyp_vec()
+    out_k = fused_steps.flash_adamw(h, tp, rho, mq, ms, vq, vs, g,
+                                    block=block)
+    out_r = ref.flash_adamw_ref(tp, rho, mq, ms, vq, vs, g, h[0], h[1],
+                                h[2], h[3], h[4], h[5], h[6])
+    # compare reconstructed quantities (raw codes can differ when the
+    # FMA-contracted compiled path lands theta on a neighbouring bf16)
+    tk = np.asarray(ref.split_decompress(out_k[0], out_k[1]))
+    tr = np.asarray(ref.split_decompress(out_r[0], out_r[1]))
+    assert np.abs(tk - tr).max() <= np.abs(tr).max() * 2e-2 + 1e-7
+    mk = np.asarray(ref.dequant_momentum(out_k[2], out_k[3]))
+    mr = np.asarray(ref.dequant_momentum(out_r[2], out_r[3]))
+    assert np.abs(mk - mr).max() <= np.abs(mr).max() * 2e-2 + 1e-9
+    vk = np.asarray(ref.dequant_variance(out_k[4], out_k[5]))
+    vr = np.asarray(ref.dequant_variance(out_r[4], out_r[5]))
+    assert np.abs(vk - vr).max() <= np.abs(vr).max() * 2e-2 + 1e-12

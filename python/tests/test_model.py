@@ -1,0 +1,127 @@
+"""Layer-2 model graphs: shapes, gradients, ref/flash track consistency."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import configs, model, vision
+
+CFG = configs.LmConfig("t", vocab=64, d_model=32, n_layers=2, n_heads=2,
+                       seq_len=16, batch=2)
+VCFG = configs.VisionConfig("v", input_dim=48, hidden=(32,), classes=4,
+                            batch=8)
+
+
+def init_params(cfg, rng, scale=0.02):
+    return (rng.standard_normal(cfg.param_count) * scale).astype(np.float32)
+
+
+class TestLmModel:
+    def test_layout_covers_buffer(self):
+        total = sum(int(np.prod(s)) for _, s in CFG.layout())
+        assert total == CFG.param_count
+
+    def test_loss_finite_and_reasonable(self):
+        rng = np.random.default_rng(0)
+        flat = jnp.asarray(init_params(CFG, rng))
+        x = jnp.asarray(rng.integers(0, CFG.vocab, (2, 16)), jnp.int32)
+        loss = model.loss_fn(flat, x, x, CFG)
+        # near-random init => loss ~ log(vocab)
+        assert np.isfinite(float(loss))
+        assert abs(float(loss) - np.log(CFG.vocab)) < 1.5
+
+    def test_grads_shape_dtype(self):
+        rng = np.random.default_rng(1)
+        flat = jnp.asarray(init_params(CFG, rng))
+        x = jnp.asarray(rng.integers(0, CFG.vocab, (2, 16)), jnp.int32)
+        loss, g = model.fwd_bwd(flat, x, x, CFG)
+        assert g.shape == (CFG.param_count,) and g.dtype == jnp.float32
+        assert np.isfinite(np.asarray(g)).all()
+
+    def test_flash_track_bf16_grads(self):
+        rng = np.random.default_rng(2)
+        flat = jnp.asarray(init_params(CFG, rng)).astype(jnp.bfloat16)
+        x = jnp.asarray(rng.integers(0, CFG.vocab, (2, 16)), jnp.int32)
+        loss, g = model.fwd_bwd(flat, x, x, CFG)
+        assert g.dtype == jnp.bfloat16
+        assert np.isfinite(float(loss))
+
+    def test_ref_flash_tracks_agree(self):
+        """Same params: ref (f32) and flash (bf16) losses nearly equal,
+        because ref downcasts to bf16 for compute anyway."""
+        rng = np.random.default_rng(3)
+        f32 = jnp.asarray(init_params(CFG, rng))
+        bf = f32.astype(jnp.bfloat16)
+        x = jnp.asarray(rng.integers(0, CFG.vocab, (2, 16)), jnp.int32)
+        l_ref = float(model.loss_fn(f32, x, x, CFG))
+        l_flash = float(model.loss_fn(bf, x, x, CFG))
+        assert abs(l_ref - l_flash) < 0.05
+
+    def test_eval_counts(self):
+        rng = np.random.default_rng(4)
+        flat = jnp.asarray(init_params(CFG, rng))
+        x = jnp.asarray(rng.integers(0, CFG.vocab, (2, 16)), jnp.int32)
+        loss_sum, ncorrect = model.evaluate(flat, x, x, CFG)
+        assert 0 <= int(ncorrect) <= 32
+        assert float(loss_sum) > 0
+
+    def test_causality(self):
+        """Changing a future token must not affect earlier logits."""
+        rng = np.random.default_rng(5)
+        flat = jnp.asarray(init_params(CFG, rng))
+        x1 = np.asarray(rng.integers(0, CFG.vocab, (1, 16)), np.int32)
+        x2 = x1.copy()
+        x2[0, -1] = (x2[0, -1] + 1) % CFG.vocab
+        l1 = np.asarray(model.forward_logits(flat, jnp.asarray(x1), CFG))
+        l2 = np.asarray(model.forward_logits(flat, jnp.asarray(x2), CFG))
+        assert np.array_equal(l1[0, :-1], l2[0, :-1])
+        assert not np.array_equal(l1[0, -1], l2[0, -1])
+
+    def test_one_sgd_step_decreases_loss(self):
+        rng = np.random.default_rng(6)
+        flat = jnp.asarray(init_params(CFG, rng))
+        x = jnp.asarray(rng.integers(0, CFG.vocab, (2, 16)), jnp.int32)
+        loss0, g = model.fwd_bwd(flat, x, x, CFG)
+        loss1 = model.loss_fn(flat - 0.5 * g, x, x, CFG)
+        assert float(loss1) < float(loss0)
+
+
+class TestVisionModel:
+    def test_loss_and_grads(self):
+        rng = np.random.default_rng(7)
+        flat = jnp.asarray(
+            (rng.standard_normal(VCFG.param_count) * 0.05).astype(np.float32))
+        x = jnp.asarray(rng.standard_normal((8, 48)).astype(np.float32))
+        y = jnp.asarray(rng.integers(0, 4, 8), jnp.int32)
+        loss, g = vision.fwd_bwd(flat, x, y, VCFG)
+        assert np.isfinite(float(loss)) and g.shape == (VCFG.param_count,)
+        assert abs(float(loss) - np.log(4)) < 1.0
+
+    def test_eval(self):
+        rng = np.random.default_rng(8)
+        flat = jnp.asarray(
+            (rng.standard_normal(VCFG.param_count) * 0.05).astype(np.float32))
+        x = jnp.asarray(rng.standard_normal((8, 48)).astype(np.float32))
+        y = jnp.asarray(rng.integers(0, 4, 8), jnp.int32)
+        loss_sum, ncorrect = vision.evaluate(flat, x, y, VCFG)
+        assert 0 <= int(ncorrect) <= 8
+
+    def test_learns_separable_task(self):
+        """A few SGD steps on a linearly separable task improve accuracy."""
+        rng = np.random.default_rng(9)
+        protos = rng.standard_normal((4, 48)).astype(np.float32) * 2
+        xs = []
+        ys = []
+        for i in range(4):
+            xs.append(protos[i] + rng.standard_normal((16, 48)) * 0.3)
+            ys.extend([i] * 16)
+        x = jnp.asarray(np.concatenate(xs).astype(np.float32))
+        y = jnp.asarray(np.asarray(ys), jnp.int32)
+        flat = jnp.asarray(
+            (rng.standard_normal(VCFG.param_count) * 0.05).astype(np.float32))
+        for _ in range(30):
+            _, g = vision.fwd_bwd(flat, x, y, VCFG)
+            flat = flat - 0.05 * g
+        _, ncorrect = vision.evaluate(flat, x, y, VCFG)
+        assert int(ncorrect) > 48  # > 75% on 64 samples

@@ -1,0 +1,190 @@
+"""Algorithms 2 & 3 (companded state quantization): kernel + invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref
+
+
+def heavy_tailed(rng, n, scale=1.0):
+    """Student-t-ish heavy tails, like real optimizer states."""
+    return (rng.standard_t(3, n) * scale).astype(np.float32)
+
+
+def nmse(a, b):
+    return float(np.mean((a - b) ** 2) / (np.mean(b ** 2) + 1e-30))
+
+
+class TestCompanding:
+    def test_phi_m_inverse(self):
+        x = jnp.linspace(-1, 1, 4097)
+        z = ref.phi_m(x)
+        back = np.asarray(ref.phi_m_inv(z))
+        assert np.abs(back - np.asarray(x)).max() < 1e-6
+
+    def test_phi_m_range(self):
+        x = jnp.linspace(-1, 1, 1001)
+        z = np.asarray(ref.phi_m(x))
+        assert z.min() >= -1.0 and z.max() <= 1.0
+
+    def test_companding_beats_linear_momentum(self):
+        rng = np.random.default_rng(0)
+        m = heavy_tailed(rng, 32768)
+        q, s = ref.quant_momentum(jnp.asarray(m))
+        lin_q, lin_s = ref.quant_momentum_linear(jnp.asarray(m))
+        e_c = nmse(np.asarray(ref.dequant_momentum(q, s)), m)
+        e_l = nmse(np.asarray(ref.dequant_momentum_linear(lin_q, lin_s)), m)
+        assert e_c < e_l
+
+    def test_companding_beats_linear_variance(self):
+        rng = np.random.default_rng(1)
+        v = heavy_tailed(rng, 32768) ** 2  # squared-gradient-like
+        q, s = ref.quant_variance(jnp.asarray(v))
+        lq, ls = ref.quant_variance_linear(jnp.asarray(v))
+        e_c = nmse(np.asarray(ref.dequant_variance(q, s)), v)
+        e_l = nmse(np.asarray(ref.dequant_variance_linear(lq, ls)), v)
+        assert e_c < e_l / 2  # paper: "particularly large" for variance
+
+
+class TestMomentum:
+    def test_kernel_matches_oracle(self):
+        """Pallas kernel vs eager oracle: scales bit-exact; codes may
+        sit +-1 apart at rounding boundaries (XLA fuses the compiled
+        path with FMA; the eager path is strict IEEE)."""
+        rng = np.random.default_rng(2)
+        m = heavy_tailed(rng, 8192)
+        qr, sr = ref.quant_momentum(jnp.asarray(m))
+        qk, sk = quant.quant_momentum(jnp.asarray(m))
+        d = np.abs(np.asarray(qr, np.int32) - np.asarray(qk, np.int32))
+        assert d.max() <= 1 and (d == 1).mean() < 0.01
+        assert (np.asarray(sr) == np.asarray(sk)).all()
+        dk = np.asarray(quant.dequant_momentum(qk, sk))
+        dr = np.asarray(ref.dequant_momentum(qk, sk))
+        rel = np.abs(dk - dr) / np.maximum(np.abs(dr), 1e-30)
+        assert rel.max() < 1e-6
+
+    def test_zero_group_stable(self):
+        m = jnp.zeros(64, jnp.float32)
+        q, s = ref.quant_momentum(m)
+        out = np.asarray(ref.dequant_momentum(q, s))
+        assert (out == 0).all() and np.isfinite(out).all()
+
+    def test_roundtrip_small_error(self):
+        rng = np.random.default_rng(3)
+        m = heavy_tailed(rng, 32768, scale=1e-3)
+        q, s = ref.quant_momentum(jnp.asarray(m))
+        assert nmse(np.asarray(ref.dequant_momentum(q, s)), m) < 1e-3
+
+    def test_sign_preserved(self):
+        """Nonzero codes preserve sign; a zero code is only allowed for
+        values tiny relative to their group absmax."""
+        rng = np.random.default_rng(4)
+        m = heavy_tailed(rng, 4096)
+        q, s = ref.quant_momentum(jnp.asarray(m))
+        out = np.asarray(ref.dequant_momentum(q, s))
+        qn = np.asarray(q)
+        nz = qn != 0
+        assert (np.sign(out[nz]) == np.sign(m[nz])).all()
+        ga = np.repeat(np.abs(m.reshape(-1, 32)).max(axis=1), 32)
+        # softsign: |m|/absmax >~ 1/(2*127) always produces a code
+        assert (np.abs(m[~nz]) <= ga[~nz] / 120.0).all()
+
+    def test_absmax_representable(self):
+        """The group absmax element must round-trip with <= f16-scale error."""
+        rng = np.random.default_rng(5)
+        m = heavy_tailed(rng, 4096)
+        g = m.reshape(-1, 32)
+        idx = np.abs(g).argmax(axis=1)
+        q, s = ref.quant_momentum(jnp.asarray(m))
+        out = np.asarray(ref.dequant_momentum(q, s)).reshape(-1, 32)
+        peak_in = g[np.arange(len(idx)), idx]
+        peak_out = out[np.arange(len(idx)), idx]
+        rel = np.abs(peak_out - peak_in) / np.abs(peak_in)
+        assert rel.max() < 2e-3  # f16 scale rounding ~2^-11 + int8 rounding
+
+
+class TestVariance:
+    def test_kernel_matches_oracle(self):
+        rng = np.random.default_rng(6)
+        v = heavy_tailed(rng, 8192) ** 2
+        qr, sr = ref.quant_variance(jnp.asarray(v))
+        qk, sk = quant.quant_variance(jnp.asarray(v))
+        d = np.abs(np.asarray(qr, np.int32) - np.asarray(qk, np.int32))
+        assert d.max() <= 1 and (d == 1).mean() < 0.01
+        assert (np.asarray(sr) == np.asarray(sk)).all()
+
+    def test_nonnegative(self):
+        rng = np.random.default_rng(7)
+        v = heavy_tailed(rng, 4096) ** 2
+        q, s = ref.quant_variance(jnp.asarray(v))
+        out = np.asarray(ref.dequant_variance(q, s))
+        assert (out >= 0).all()
+
+    def test_zero_group_stable(self):
+        v = jnp.zeros(64, jnp.float32)
+        q, s = ref.quant_variance(v)
+        out = np.asarray(ref.dequant_variance(q, s))
+        assert (out == 0).all()
+
+    def test_wide_dynamic_range(self):
+        """sqrt companding keeps relative error bounded over ~6 decades
+        within a group (the heavy-tail motivation in §3.2)."""
+        rng = np.random.default_rng(8)
+        v = np.exp(rng.uniform(-14, 0, 32768)).astype(np.float32)
+        q, s = ref.quant_variance(jnp.asarray(v))
+        out = np.asarray(ref.dequant_variance(q, s))
+        lq, ls = ref.quant_variance_linear(jnp.asarray(v))
+        lout = np.asarray(ref.dequant_variance_linear(lq, ls))
+        assert nmse(out, v) < nmse(lout, v)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=128),
+       st.integers(min_value=0, max_value=2 ** 31),
+       st.floats(min_value=-4, max_value=3))
+def test_momentum_roundtrip_hypothesis(ngroups, seed, logscale):
+    # scale range keeps the group absmax inside f16's representable
+    # window [~6e-8, 65504] — the paper's f16 group scales saturate
+    # outside it (see test_f16_scale_saturation)
+    rng = np.random.default_rng(seed)
+    m = (rng.standard_normal(32 * ngroups) * 10.0 ** logscale
+         ).astype(np.float32)
+    q, s = ref.quant_momentum(jnp.asarray(m))
+    out = np.asarray(ref.dequant_momentum(q, s))
+    # error within each group bounded by a fraction of the group absmax
+    ga = np.maximum(np.abs(m.reshape(-1, 32)).max(axis=1, keepdims=True),
+                    1e-30)
+    rel = np.abs(out - m).reshape(-1, 32) / ga
+    assert rel.max() < 0.02  # softsign worst-case bin width near |x|~1/2
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=64),
+       st.integers(min_value=0, max_value=2 ** 31))
+def test_variance_roundtrip_hypothesis(ngroups, seed):
+    rng = np.random.default_rng(seed)
+    v = (rng.standard_normal(32 * ngroups) ** 2).astype(np.float32)
+    q, s = ref.quant_variance(jnp.asarray(v))
+    out = np.asarray(ref.dequant_variance(q, s))
+    ga = np.maximum(v.reshape(-1, 32).max(axis=1, keepdims=True), 1e-30)
+    rel = np.abs(out - v).reshape(-1, 32) / ga
+    assert rel.max() < 0.02
+
+
+def test_f16_scale_saturation_is_graceful():
+    """Group absmax beyond the f16 window (the paper stores scales in
+    FP16) must not produce NaN/inf state — values degrade but stay
+    finite, and the in-window path is unaffected."""
+    big = np.full(32, 1e6, np.float32)       # absmax > f16 max
+    tiny = np.full(32, 1e-8, np.float32)     # absmax < f16 min subnormal
+    for m in (big, tiny):
+        q, s = ref.quant_momentum(jnp.asarray(m))
+        out = np.asarray(ref.dequant_momentum(q, s))
+        assert np.isfinite(out).all()
+        v = m ** 2
+        qv, sv = ref.quant_variance(jnp.asarray(v))
+        outv = np.asarray(ref.dequant_variance(qv, sv))
+        assert np.isfinite(outv).all()
+        assert (outv >= 0).all()

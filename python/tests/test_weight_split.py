@@ -1,0 +1,156 @@
+"""Algorithm 1 (ULP weight splitting): kernel-vs-oracle + invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, weight_split
+
+
+def rand_floats(rng, n, lo=-30, hi=10):
+    """Log-uniform magnitudes over many binades, both signs."""
+    return (rng.standard_normal(n) *
+            np.exp2(rng.uniform(lo, hi, n))).astype(np.float32)
+
+
+SPECIALS = np.array(
+    [0.0, -0.0, 1.0, -1.0, 1.5, 2.0 ** -126, -(2.0 ** -126),
+     2.0 ** -127, 1e-45, -1e-45, 3.3895e38, 65504.0, 65536.0,
+     2.0 ** -133, 1.0 + 2.0 ** -8, 1.0 - 2.0 ** -9], dtype=np.float32)
+
+
+class TestKernelMatchesOracle:
+    @pytest.mark.parametrize("n", [ref.N_INT8, ref.N_INT16])
+    def test_compress_bitexact(self, n):
+        rng = np.random.default_rng(0)
+        theta = np.concatenate([rand_floats(rng, 4096 - len(SPECIALS)),
+                                SPECIALS])
+        tp_r, rho_r = ref.split_compress(jnp.asarray(theta), n=n)
+        tp_k, rho_k = weight_split.split_compress(jnp.asarray(theta), n=n)
+        assert (np.asarray(tp_r, np.float32) ==
+                np.asarray(tp_k, np.float32)).all()
+        assert (np.asarray(rho_r) == np.asarray(rho_k)).all()
+
+    def test_decompress_bitexact(self):
+        rng = np.random.default_rng(1)
+        theta = rand_floats(rng, 4096)
+        tp, rho = ref.split_compress(jnp.asarray(theta))
+        out_r = np.asarray(ref.split_decompress(tp, rho))
+        out_k = np.asarray(weight_split.split_decompress(tp, rho))
+        assert (out_r == out_k).all()
+
+
+class TestSplitInvariants:
+    def test_theta_prime_is_plain_downcast(self):
+        """theta' must equal the plain RNE bf16 downcast (drop-in property)."""
+        rng = np.random.default_rng(2)
+        theta = rand_floats(rng, 2048)
+        tp, _ = ref.split_compress(jnp.asarray(theta))
+        assert (np.asarray(tp, np.float32) ==
+                np.asarray(jnp.asarray(theta).astype(jnp.bfloat16),
+                           np.float32)).all()
+
+    @pytest.mark.parametrize("n,bits", [(ref.N_INT8, 8), (ref.N_INT16, 16)])
+    def test_error_bound(self, n, bits):
+        """|theta_hat - theta| <= ULP/2 * (1/N + quantization half-step)."""
+        rng = np.random.default_rng(3)
+        theta = rand_floats(rng, 8192)
+        tp, rho = ref.split_compress(jnp.asarray(theta), n=n)
+        th = np.asarray(ref.split_decompress(tp, rho, n=n))
+        ulp = np.exp2(np.asarray(ref.ulp_exponent_bf16(tp), np.float64))
+        err = np.abs(th.astype(np.float64) - theta.astype(np.float64))
+        # quantization half-step of rho plus the final f32 rounding of
+        # theta' + e (comparable in magnitude for the int16 correction)
+        f32_round = np.spacing(np.abs(theta)).astype(np.float64) / 2.0
+        bound = ulp / 2.0 * (0.5 / n) * 1.001 + f32_round + 1e-45
+        assert (err <= bound).all(), float((err / bound).max())
+
+    def test_int16_mostly_exact(self):
+        """Paper §4.4: 16-bit correction reconstructs BF16-split FP32
+        bitwise in ~99.92% of cases."""
+        rng = np.random.default_rng(4)
+        theta = rand_floats(rng, 65536)
+        tp, rho = ref.split_compress(jnp.asarray(theta), n=ref.N_INT16)
+        th = np.asarray(ref.split_decompress(tp, rho, n=ref.N_INT16))
+        exact = (th.view(np.uint32) == theta.view(np.uint32)).mean()
+        assert exact > 0.99
+
+    def test_zero_maps_to_zero(self):
+        tp, rho = ref.split_compress(jnp.zeros(32, jnp.float32))
+        th = np.asarray(ref.split_decompress(tp, rho))
+        assert (th == 0).all() and (np.asarray(rho) == 0).all()
+
+    def test_f16_target(self):
+        rng = np.random.default_rng(5)
+        theta = rand_floats(rng, 4096, lo=-12, hi=4)  # fp16 range
+        tp, rho = ref.split_compress(jnp.asarray(theta), n=ref.N_INT16,
+                                     target=jnp.float16)
+        th = np.asarray(ref.split_decompress(tp, rho, n=ref.N_INT16))
+        rel = np.abs(th - theta) / np.maximum(np.abs(theta), 1e-30)
+        # paper Fig 3 (bottom): our 32-bit FP16 format ~perfect in
+        # the normal range; allow slack for the subnormal edge
+        assert np.median(rel) < 1e-7
+        tp_k, rho_k = weight_split.split_compress(
+            jnp.asarray(theta), n=ref.N_INT16, target_name="float16")
+        assert (np.asarray(tp_k, np.float32) ==
+                np.asarray(tp, np.float32)).all()
+        assert (np.asarray(rho_k) == np.asarray(rho)).all()
+
+    def test_better_than_bf16_alone(self):
+        rng = np.random.default_rng(6)
+        theta = rand_floats(rng, 8192)
+        tp, rho = ref.split_compress(jnp.asarray(theta))
+        th = np.asarray(ref.split_decompress(tp, rho))
+        err_split = np.abs(th - theta)
+        err_bf16 = np.abs(np.asarray(tp, np.float32) - theta)
+        # ~2^8 improvement on average; require >= 32x in aggregate
+        assert err_split.mean() * 32 < err_bf16.mean()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(width=32, allow_nan=False, allow_infinity=False),
+                min_size=32, max_size=32))
+def test_roundtrip_bound_hypothesis(vals):
+    theta = np.asarray(vals, np.float32)
+    tp, rho = ref.split_compress(jnp.asarray(theta))
+    th = np.asarray(ref.split_decompress(tp, rho))
+    tpf = np.asarray(tp, np.float32)
+    # exclusions (all XLA-CPU flush-to-zero artifacts; the rust mirror
+    # rounds these exactly, see DESIGN.md §8b):
+    #  * |theta| > bf16 max downcasts to inf (like plain bf16)
+    #  * f32-subnormal theta flushes to zero in the downcast (paper
+    #    footnote 1) — error bounded by |theta| < 2^-126
+    #  * theta close above f32-min-normal has a *subnormal rounding
+    #    error* e = theta - theta', which FTZ flushes; the correction
+    #    degrades to the plain-downcast bound ULP/2 (< 2^-131) there.
+    finite = np.isfinite(np.where(np.isfinite(theta), tpf, np.inf))
+    ok = finite & (np.abs(theta) >= np.float32(2.0 ** -117))
+    ulp = np.exp2(np.asarray(ref.ulp_exponent_bf16(tp), np.float64))
+    err = np.abs(th.astype(np.float64) - theta.astype(np.float64))
+    with np.errstate(over="ignore"):
+        f32_round = np.where(
+            np.isfinite(theta),
+            np.spacing(np.abs(theta)), 0.0).astype(np.float64) / 2.0
+    bound = ulp / 2.0 * (0.5 / 127) * 1.001 + f32_round + 1e-45
+    assert (err[ok] <= bound[ok]).all()
+    # the flush-affected band still reconstructs within the
+    # no-correction half-ULP bound, plus |theta| itself for
+    # f32-subnormal inputs the downcast flushes to zero entirely
+    low = finite & ~ok
+    low_bound = ulp / 2.0 * 1.001 + np.abs(theta).astype(np.float64)
+    assert (err[low] <= low_bound[low] + 1e-45).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=64),
+       st.integers(min_value=0, max_value=2 ** 31))
+def test_kernel_shapes_hypothesis(nblocks, seed):
+    """Kernel agrees with oracle across block-boundary shapes."""
+    rng = np.random.default_rng(seed)
+    theta = rand_floats(rng, 32 * nblocks)
+    tp_r, rho_r = ref.split_compress(jnp.asarray(theta))
+    tp_k, rho_k = weight_split.split_compress(jnp.asarray(theta), block=256)
+    assert (np.asarray(tp_r, np.float32) ==
+            np.asarray(tp_k, np.float32)).all()
+    assert (np.asarray(rho_r) == np.asarray(rho_k)).all()

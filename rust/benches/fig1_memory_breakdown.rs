@@ -1,0 +1,50 @@
+//! Bench: regenerate paper **Figure 1** — peak-memory breakdown for
+//! finetuning Llama-3.1-8B with AdamW, Reference vs FlashOptim, via the
+//! analytic memory model (the 8B run itself needs >100 GB of HBM; see
+//! DESIGN.md §3 — the model is validated against measured buffers at
+//! small scale by `table4_profiling`).
+
+use flashtrain::config::{OptKind, Variant};
+use flashtrain::memory::{breakdown, ModelSpec};
+use flashtrain::util::table::{fmt_delta, Table};
+
+fn main() {
+    let gib = (1u64 << 30) as f64;
+    let spec = ModelSpec::llama31_8b();
+    println!("=== Figure 1: memory breakdown, finetuning {} ===\n",
+             spec.name);
+
+    let r = breakdown(&spec, OptKind::AdamW, Variant::Reference, false);
+    let f = breakdown(&spec, OptKind::AdamW, Variant::Flash, false);
+    let fr = breakdown(&spec, OptKind::AdamW, Variant::Flash, true);
+
+    let mut t = Table::new("model projection (GiB)", &[
+        "component", "Reference", "FlashOptim", "delta",
+        "Flash+grad-release"]);
+    for (name, a, b, c) in [
+        ("master weights", r.params_bytes, f.params_bytes, fr.params_bytes),
+        ("optimizer state", r.optim_bytes, f.optim_bytes, fr.optim_bytes),
+        ("gradients", r.grads_bytes, f.grads_bytes, fr.grads_bytes),
+        ("bf16 compute copy", r.compute_copy_bytes, f.compute_copy_bytes,
+         fr.compute_copy_bytes),
+        ("activations (ckpt)", r.activations_bytes, f.activations_bytes,
+         fr.activations_bytes),
+        ("PEAK", r.total(), f.total(), fr.total()),
+    ] {
+        t.row(&[name.to_string(), format!("{:.1}", a / gib),
+                format!("{:.1}", b / gib), fmt_delta(b, a),
+                format!("{:.1}", c / gib)]);
+    }
+    t.print();
+
+    println!("\npaper Figure 1 / Table 4 (measured on H100s):");
+    println!("  params 29.9 -> 15.0 GiB (-50%)");
+    println!("  optim  59.8 -> 23.4 GiB (-61%)");
+    println!("  peak  175.2 -> 112.9 GiB (-36%)");
+    println!("\nmodel vs paper: params/optim columns are exact dtype \
+              arithmetic and match; the peak column differs by runtime \
+              transients (allocator fragmentation, FSDP all-gather \
+              buffers) that the paper's torch.cuda stats include — the \
+              *shape* (flash wins everywhere, optimizer state is the \
+              biggest single saving) is preserved.");
+}

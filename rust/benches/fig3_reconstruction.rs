@@ -1,0 +1,171 @@
+//! Bench: regenerate paper **Figure 3** — FP32 reconstruction relative
+//! error vs exponent, for four weight-compression schemes and two
+//! target datatypes (BF16 top, FP16 bottom).
+//!
+//! Like the paper, the evaluation is data-independent: we sweep FP32
+//! bitstrings directly.  Default: stratified (every exponent x 4096
+//! mantissas, both signs).  `--exhaustive` sweeps all 2^32 bitstrings
+//! (~minutes on one core).  Also reports the headline §4.4 numbers:
+//! bitwise-exact reconstruction rate of the 16-bit correction and the
+//! error plateau of the 24-bit format.
+
+use flashtrain::formats::baselines::{roundtrip, Scheme};
+use flashtrain::formats::Target;
+use flashtrain::util::cli::Args;
+use flashtrain::util::table::Table;
+
+/// mean relative error accumulator per exponent
+struct Acc {
+    sum: Vec<f64>,
+    n: Vec<u64>,
+    exact: u64,
+    total: u64,
+    /// values the target format cannot represent at all (|x| > max):
+    /// every scheme saturates to inf there, like a plain downcast
+    overflow: u64,
+}
+
+impl Acc {
+    fn new() -> Acc {
+        Acc { sum: vec![0.0; 255], n: vec![0; 255], exact: 0, total: 0,
+              overflow: 0 }
+    }
+
+    #[inline]
+    fn push(&mut self, exp: usize, x: f32, y: f32) {
+        self.total += 1;
+        if x.to_bits() == y.to_bits() {
+            self.exact += 1;
+        }
+        if x != 0.0 {
+            let rel = ((y as f64 - x as f64) / x as f64).abs();
+            if rel.is_finite() {
+                self.sum[exp] += rel;
+                self.n[exp] += 1;
+            } else {
+                self.overflow += 1;
+            }
+        }
+    }
+
+    fn mean(&self, exp: usize) -> f64 {
+        if self.n[exp] == 0 {
+            f64::NAN
+        } else {
+            self.sum[exp] / self.n[exp] as f64
+        }
+    }
+
+    fn overall_mean(&self) -> f64 {
+        let s: f64 = self.sum.iter().sum();
+        let n: u64 = self.n.iter().sum();
+        s / n.max(1) as f64
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    let exhaustive = args.flag("exhaustive");
+    let per_exp = args.get_usize("mantissas", 4096);
+
+    for target in [Target::Bf16, Target::Fp16] {
+        let tname = match target {
+            Target::Bf16 => "BF16",
+            Target::Fp16 => "FP16",
+        };
+        println!("=== Figure 3 ({tname} target) ===");
+        let mut accs: Vec<Acc> =
+            Scheme::ALL.iter().map(|_| Acc::new()).collect();
+
+        if exhaustive {
+            // all finite positive+negative bitstrings
+            for exp in 0..255u32 {
+                for man in 0..(1u32 << 23) {
+                    for sign in [0u32, 1] {
+                        let bits = (sign << 31) | (exp << 23) | man;
+                        let x = f32::from_bits(bits);
+                        for (si, &s) in Scheme::ALL.iter().enumerate() {
+                            let y = roundtrip(x, s, target);
+                            accs[si].push(exp as usize, x, y);
+                        }
+                    }
+                }
+            }
+        } else {
+            // stratified: every exponent, `per_exp` mantissas incl. the
+            // group-boundary patterns
+            for exp in 0..255u32 {
+                for k in 0..per_exp as u32 {
+                    // low bits + spread pattern covers rounding edges
+                    let man = (k * 2654435761u32) & 0x007F_FFFF;
+                    for sign in [0u32, 1] {
+                        let bits = (sign << 31) | (exp << 23) | man;
+                        let x = f32::from_bits(bits);
+                        for (si, &s) in Scheme::ALL.iter().enumerate() {
+                            let y = roundtrip(x, s, target);
+                            accs[si].push(exp as usize, x, y);
+                        }
+                    }
+                }
+            }
+        }
+
+        // table at representative exponents (paper plots the full curve;
+        // CSV gives the full series)
+        let mut t = Table::new(
+            &format!("mean relative error by exponent ({tname})"),
+            &["unbiased exp", "no-correction", "float+float",
+              "ulp-int8 (ours)", "ulp-int16 (ours)"]);
+        let picks: &[i32] = &[-140, -130, -126, -100, -60, -20, -1, 0, 1,
+                              20, 60, 100, 127];
+        for &e in picks {
+            let exp = (e + 127).clamp(0, 254) as usize;
+            let cells: Vec<String> = accs
+                .iter()
+                .map(|a| format!("{:.2e}", a.mean(exp)))
+                .collect();
+            t.row(&[format!("{e}"), cells[0].clone(), cells[1].clone(),
+                    cells[2].clone(), cells[3].clone()]);
+        }
+        t.print();
+
+        let mut s = Table::new(&format!("summary ({tname})"), &[
+            "scheme", "bits", "mean rel err (in-range)",
+            "bitwise-exact %", "overflow %"]);
+        for (si, &sch) in Scheme::ALL.iter().enumerate() {
+            s.row(&[sch.name().to_string(), format!("{}", sch.bits()),
+                    format!("{:.2e}", accs[si].overall_mean()),
+                    format!("{:.2}%",
+                            accs[si].exact as f64 / accs[si].total as f64
+                            * 100.0),
+                    format!("{:.2}%",
+                            accs[si].overflow as f64
+                            / accs[si].total as f64 * 100.0)]);
+        }
+        s.print();
+
+        // optional CSV of the full per-exponent series
+        if let Some(dir) = args.get("csv-dir") {
+            use std::io::Write;
+            let p = std::path::Path::new(dir)
+                .join(format!("fig3_{}.csv", tname.to_lowercase()));
+            let mut f = std::fs::File::create(&p).unwrap();
+            writeln!(f, "exp,none,float_float,ulp_i8,ulp_i16").unwrap();
+            for exp in 0..255usize {
+                writeln!(f, "{},{},{},{},{}", exp as i32 - 127,
+                         accs[0].mean(exp), accs[1].mean(exp),
+                         accs[2].mean(exp), accs[3].mean(exp)).unwrap();
+            }
+            println!("wrote {p:?}");
+        }
+        println!();
+    }
+
+    println!("paper §4.4 claims to check against the BF16 summary:");
+    println!("  - ulp-int16 bitwise-exact ~99.92% (ours above)");
+    println!("  - float+float (BF16+BF16) err > 1e-6, comparable to our \
+              24-bit (ulp-int8)");
+    println!("  - ulp-int16 err < 1e-9 across the normal range");
+    println!("  - FP16: our 24-bit improves worst-case normal-range err \
+              1e-4 -> <1e-6");
+}

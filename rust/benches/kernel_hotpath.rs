@@ -1,0 +1,116 @@
+//! Bench: hot-path microbenchmarks for the §Perf pass (not a paper
+//! table) — optimizer-step cost by bucket size and variant, the
+//! Rust-side format codec throughput, and the literal-marshalling
+//! overhead that dominates the L3 step loop.
+//!
+//!   cargo bench --bench kernel_hotpath -- [--quick]
+
+use flashtrain::config::{OptKind, TrainConfig, Variant};
+use flashtrain::formats::{companding, weight_split, GROUP};
+use flashtrain::optim::{BucketOptimizer, Hyper};
+use flashtrain::runtime::literal as lit;
+use flashtrain::runtime::{Manifest, Runtime};
+use flashtrain::util::bench::{bench_for, black_box, fmt_time};
+use flashtrain::util::cli::Args;
+use flashtrain::util::rng::Rng;
+use flashtrain::util::table::Table;
+
+fn main() {
+    let args = Args::parse();
+    let budget = if args.flag("quick") { 0.2 } else { 1.0 };
+
+    let manifest = Manifest::load_default().expect("run `make artifacts`");
+    let rt = Runtime::cpu().unwrap();
+    let mut rng = Rng::new(1);
+    let cfg = TrainConfig::default();
+
+    // ---- optimizer step executable by bucket size & variant ---------------
+    let mut t = Table::new(
+        "fused optimizer step (HLO via PJRT), per bucket",
+        &["bucket", "variant", "median", "ns/param", "GB/s (state rw)"]);
+    for &bucket in manifest.buckets.keys().collect::<Vec<_>>() {
+        for (opt, variant, label, state_bytes) in [
+            (OptKind::AdamW, Variant::Reference, "adamw ref", 16.0),
+            (OptKind::AdamW, Variant::Flash, "adamw flash", 7.125),
+            (OptKind::Sgd, Variant::Flash, "sgd flash", 6.125),
+            (OptKind::Lion, Variant::Flash, "lion flash", 6.125),
+        ] {
+            let theta: Vec<f32> =
+                (0..bucket).map(|_| rng.normal() as f32 * 0.1).collect();
+            let mut opt_exec = BucketOptimizer::new(
+                &rt, &manifest, opt, variant, bucket, &theta).unwrap();
+            let g: Vec<f32> =
+                (0..bucket).map(|_| rng.normal() as f32 * 0.01).collect();
+            let h = Hyper::for_step(&cfg, 1e-3, 10);
+            let r = bench_for(label, budget, 5, || {
+                opt_exec.step_bucket(0, &g, &h).unwrap();
+            });
+            let med = r.median_s();
+            t.row(&[format!("{bucket}"), label.into(), fmt_time(med),
+                    format!("{:.1}", med * 1e9 / bucket as f64),
+                    format!("{:.2}",
+                            2.0 * state_bytes * bucket as f64 / med / 1e9)]);
+        }
+    }
+    t.print();
+
+    // ---- Rust codec throughput --------------------------------------------
+    let n = 1 << 20;
+    let theta: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1)
+        .collect();
+    let mut tp = vec![0u16; n];
+    let mut rho = vec![0i8; n];
+    let mut out = vec![0f32; n];
+    let mut q8 = vec![0i8; n];
+    let mut u8v = vec![0u8; n];
+    let mut sc = vec![0u16; n / GROUP];
+
+    let mut t = Table::new("rust format codecs (1M elements)", &[
+        "codec", "median", "Melem/s"]);
+    let mut row = |name: &str, r: flashtrain::util::bench::BenchResult| {
+        let med = r.median_s();
+        t.row(&[name.into(), fmt_time(med),
+                format!("{:.0}", n as f64 / med / 1e6)]);
+    };
+    row("split compress",
+        bench_for("c", budget, 3,
+                  || weight_split::compress_slice(&theta, &mut tp,
+                                                  &mut rho)));
+    row("split decompress",
+        bench_for("d", budget, 3,
+                  || weight_split::decompress_slice(&tp, &rho, &mut out)));
+    row("momentum quant",
+        bench_for("mq", budget, 3,
+                  || companding::quant_momentum(&theta, &mut q8, &mut sc)));
+    row("momentum dequant",
+        bench_for("mdq", budget, 3,
+                  || companding::dequant_momentum(&q8, &sc, &mut out)));
+    row("variance quant", bench_for("vq", budget, 3, || {
+        let v: &Vec<f32> = &theta;
+        let vv: Vec<f32> = v.iter().map(|x| x * x).collect();
+        companding::quant_variance(&vv, &mut u8v, &mut sc)
+    }));
+    t.print();
+
+    // ---- literal marshalling overhead --------------------------------------
+    let mut t = Table::new("literal marshalling (65536 elements)", &[
+        "op", "median"]);
+    let bits: Vec<u16> = (0..65536u32).map(|i| (i & 0x7FFF) as u16)
+        .collect();
+    let f32s: Vec<f32> = (0..65536).map(|i| i as f32).collect();
+    let r = bench_for("bf16 literal create", budget, 10, || {
+        black_box(lit::lit_bf16_bits(&bits, &[65536]).unwrap());
+    });
+    t.row(&["bf16 literal create".into(), fmt_time(r.median_s())]);
+    let r = bench_for("f32 literal create", budget, 10, || {
+        black_box(lit::lit_f32(&f32s, &[65536]).unwrap());
+    });
+    t.row(&["f32 literal create".into(), fmt_time(r.median_s())]);
+    let l = lit::lit_bf16_bits(&bits, &[65536]).unwrap();
+    let r = bench_for("bf16 literal extract", budget, 10, || {
+        black_box(lit::to_bf16_bits(&l).unwrap());
+    });
+    t.row(&["bf16 literal extract (convert+rebits)".into(),
+            fmt_time(r.median_s())]);
+    t.print();
+}

@@ -1,0 +1,119 @@
+//! Bench: regenerate paper **Table 2** — quality parity at repro scale:
+//! vision classification accuracy (ImageNet/ResNet-50 stand-in) for
+//! SGD and AdamW, plus a finetuning task (Llama/GSM8k stand-in: warm
+//! start from pretrained weights, train on a held-out distribution,
+//! report eval accuracy), Reference vs FlashOptim over N seeds.
+//!
+//!   cargo bench --bench table2_quality -- [--seeds 3] [--steps 150]
+
+use flashtrain::config::{OptKind, TrainConfig, Variant};
+use flashtrain::coordinator::Trainer;
+use flashtrain::runtime::{Manifest, Runtime};
+use flashtrain::util::cli::Args;
+use flashtrain::util::stats;
+use flashtrain::util::table::Table;
+
+fn main() {
+    let args = Args::parse();
+    let seeds = args.get_u64("seeds", 3);
+    let steps = args.get_usize("steps", 150);
+
+    let manifest = Manifest::load_default().expect("run `make artifacts`");
+    let rt = Runtime::cpu().unwrap();
+
+    let mut t = Table::new(
+        &format!("Table 2 — quality parity ({seeds} seeds, {steps} steps)"),
+        &["task", "optimizer", "Reference", "FlashOptim"]);
+
+    // --- vision columns (ImageNet stand-in) --------------------------------
+    for opt in [OptKind::Sgd, OptKind::AdamW] {
+        let mut accs = [Vec::new(), Vec::new()];
+        for (vi, variant) in [Variant::Reference, Variant::Flash]
+            .iter()
+            .enumerate()
+        {
+            for seed in 0..seeds {
+                let mut cfg = TrainConfig::default().with_paper_hypers(opt);
+                cfg.preset = "vision".into();
+                cfg.variant = *variant;
+                cfg.steps = steps;
+                cfg.warmup = (steps / 10).max(5);
+                cfg.seed = seed;
+                cfg.bucket = 16384;
+                cfg.eval_batches = 16;
+                cfg.log_every = usize::MAX;
+                if opt == OptKind::Sgd {
+                    cfg.lr = 0.05;
+                } else {
+                    cfg.lr = 3e-3;
+                }
+                let mut tr = Trainer::new(cfg, &manifest, &rt).unwrap();
+                tr.run(true).unwrap();
+                let (_, acc) = tr.evaluate().unwrap();
+                accs[vi].push(acc * 100.0);
+            }
+            println!("  vision/{opt}/{variant}: done");
+        }
+        t.row(&["vision acc %".into(), opt.name().into(),
+                format!("{:.2} ± {:.2}", stats::mean(&accs[0]),
+                        stats::std_dev(&accs[0])),
+                format!("{:.2} ± {:.2}", stats::mean(&accs[1]),
+                        stats::std_dev(&accs[1]))]);
+    }
+
+    // --- finetune column (Llama/GSM8k stand-in) -----------------------------
+    {
+        let mut accs = [Vec::new(), Vec::new()];
+        for seed in 0..seeds {
+            // pretrain once per seed (reference), then finetune both arms
+            // from the same weights on a different corpus
+            let mut pre = TrainConfig::default()
+                .with_paper_hypers(OptKind::AdamW);
+            pre.preset = "lm-tiny".into();
+            pre.variant = Variant::Reference;
+            pre.steps = steps / 2;
+            pre.warmup = 5;
+            pre.seed = seed;
+            pre.data_seed = 777 + seed;
+            pre.log_every = usize::MAX;
+            let mut tr = Trainer::new(pre, &manifest, &rt).unwrap();
+            tr.run(true).unwrap();
+            let weights = tr.opt.master_weights(tr.model.param_count);
+
+            for (vi, variant) in [Variant::Reference, Variant::Flash]
+                .iter()
+                .enumerate()
+            {
+                let mut cfg = TrainConfig::default()
+                    .with_paper_hypers(OptKind::AdamW);
+                cfg.preset = "lm-tiny".into();
+                cfg.variant = *variant;
+                cfg.steps = steps;
+                cfg.warmup = (steps / 10).max(5);
+                cfg.lr = 1e-4; // finetuning LR
+                cfg.seed = seed;
+                cfg.data_seed = 1234 + seed; // target distribution
+                cfg.eval_batches = 16;
+                cfg.log_every = usize::MAX;
+                let mut ft = Trainer::new(cfg, &manifest, &rt).unwrap();
+                ft.warm_start(&weights);
+                ft.run(true).unwrap();
+                let (_, acc) = ft.evaluate().unwrap();
+                accs[vi].push(acc * 100.0);
+            }
+            println!("  finetune seed {seed}: done");
+        }
+        t.row(&["finetune token acc %".into(), "adamw".into(),
+                format!("{:.2} ± {:.2}", stats::mean(&accs[0]),
+                        stats::std_dev(&accs[0])),
+                format!("{:.2} ± {:.2}", stats::mean(&accs[1]),
+                        stats::std_dev(&accs[1]))]);
+    }
+
+    t.print();
+    println!("paper Table 2: ImageNet SGD 77.01±0.02 vs 77.16±0.09; \
+              AdamW 75.51±0.09 vs 75.67±0.04; GSM8k 75.09±0.40 vs \
+              74.98±0.77 — FlashOptim within seed noise everywhere. \
+              The claim under test here is the same parity at repro \
+              scale.");
+}

@@ -1,0 +1,355 @@
+//! Typed training/experiment configuration.
+//!
+//! A `TrainConfig` fully determines a run: model preset, optimizer,
+//! FlashOptim variant, schedule, data seed, bucket size, parallelism.
+//! Configs parse from JSON files (see `configs/*.json`) or CLI overrides
+//! and serialize back for experiment records.
+
+use std::fmt;
+
+use super::json::Json;
+use crate::util::cli::Args;
+
+/// Which optimizer update rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptKind {
+    Sgd,
+    AdamW,
+    Lion,
+}
+
+impl OptKind {
+    pub fn parse(s: &str) -> Option<OptKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "sgd" => Some(OptKind::Sgd),
+            "adamw" | "adam" => Some(OptKind::AdamW),
+            "lion" => Some(OptKind::Lion),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OptKind::Sgd => "sgd",
+            OptKind::AdamW => "adamw",
+            OptKind::Lion => "lion",
+        }
+    }
+
+    /// Does this optimizer keep a second-moment (variance) buffer?
+    pub fn has_variance(self) -> bool {
+        matches!(self, OptKind::AdamW)
+    }
+}
+
+impl fmt::Display for OptKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// FlashOptim variant (Table 4 rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// fp32 master weights + fp32 states (baseline).
+    Reference,
+    /// full FlashOptim: weight splitting + companded 8-bit states.
+    Flash,
+    /// ablation: weight splitting only (fp32 states).
+    WeightSplit,
+    /// ablation: state quantization only (fp32 master).
+    OptQuant,
+    /// Fig. 5: 8-bit states with *linear* quantization (no companding).
+    NoCompand,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s.to_ascii_lowercase().as_str() {
+            "reference" | "ref" => Some(Variant::Reference),
+            "flash" => Some(Variant::Flash),
+            "wsplit" | "weight-split" => Some(Variant::WeightSplit),
+            "quant" | "opt-quant" => Some(Variant::OptQuant),
+            "nocompand" | "no-compand" => Some(Variant::NoCompand),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Reference => "reference",
+            Variant::Flash => "flash",
+            Variant::WeightSplit => "wsplit",
+            Variant::OptQuant => "quant",
+            Variant::NoCompand => "nocompand",
+        }
+    }
+
+    /// Are master weights stored split (bf16 + int8 rho)?
+    pub fn splits_weights(self) -> bool {
+        matches!(self, Variant::Flash | Variant::WeightSplit
+                 | Variant::NoCompand)
+    }
+
+    /// Are optimizer states stored 8-bit?
+    pub fn quantizes_state(self) -> bool {
+        matches!(self, Variant::Flash | Variant::OptQuant
+                 | Variant::NoCompand)
+    }
+}
+
+impl fmt::Display for Variant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Full run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// model preset name in artifacts/manifest.json (e.g. "lm-tiny")
+    pub preset: String,
+    pub optimizer: OptKind,
+    pub variant: Variant,
+    pub steps: usize,
+    pub lr: f64,
+    pub final_lr_frac: f64,
+    pub warmup: usize,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    pub seed: u64,
+    pub data_seed: u64,
+    /// optimizer bucket size (elements); must exist in the manifest
+    pub bucket: usize,
+    /// eagerly free gradient buckets during the optimizer pass
+    pub grad_release: bool,
+    /// simulated data-parallel worker count (gradients allreduced)
+    pub workers: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub log_every: usize,
+    pub init_scale: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            preset: "lm-tiny".into(),
+            optimizer: OptKind::AdamW,
+            variant: Variant::Flash,
+            steps: 200,
+            lr: 1e-3,
+            final_lr_frac: 0.0,
+            warmup: 20,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.1,
+            seed: 0,
+            data_seed: 1234,
+            bucket: 65536,
+            grad_release: true,
+            workers: 1,
+            eval_every: 0,
+            eval_batches: 8,
+            log_every: 10,
+            init_scale: 0.02,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Apply `--key value` CLI overrides on top of this config.
+    pub fn apply_args(&mut self, args: &Args) {
+        if let Some(p) = args.get("preset") {
+            self.preset = p.to_string();
+        }
+        if let Some(o) = args.get("optimizer") {
+            self.optimizer = OptKind::parse(o)
+                .unwrap_or_else(|| panic!("unknown optimizer {o:?}"));
+        }
+        if let Some(v) = args.get("variant") {
+            self.variant = Variant::parse(v)
+                .unwrap_or_else(|| panic!("unknown variant {v:?}"));
+        }
+        self.steps = args.get_usize("steps", self.steps);
+        self.lr = args.get_f64("lr", self.lr);
+        self.warmup = args.get_usize("warmup", self.warmup);
+        self.beta1 = args.get_f64("beta1", self.beta1);
+        self.beta2 = args.get_f64("beta2", self.beta2);
+        self.eps = args.get_f64("eps", self.eps);
+        self.weight_decay = args.get_f64("wd", self.weight_decay);
+        self.seed = args.get_u64("seed", self.seed);
+        self.data_seed = args.get_u64("data-seed", self.data_seed);
+        self.bucket = args.get_usize("bucket", self.bucket);
+        self.workers = args.get_usize("workers", self.workers);
+        self.eval_every = args.get_usize("eval-every", self.eval_every);
+        self.eval_batches = args.get_usize("eval-batches",
+                                           self.eval_batches);
+        self.log_every = args.get_usize("log-every", self.log_every);
+        self.init_scale = args.get_f64("init-scale", self.init_scale);
+        if args.flag("no-grad-release") {
+            self.grad_release = false;
+        }
+        if args.flag("grad-release") {
+            self.grad_release = true;
+        }
+    }
+
+    /// Paper-recommended hyperparameters per optimizer (Tables 5/7).
+    pub fn with_paper_hypers(mut self, opt: OptKind) -> Self {
+        self.optimizer = opt;
+        match opt {
+            OptKind::Sgd => {
+                self.lr = 0.1; // scaled-down analog of 1.024@bs1024
+                self.beta1 = 0.9;
+                self.weight_decay = 3e-5;
+            }
+            OptKind::AdamW => {
+                self.lr = 6e-4;
+                self.beta1 = 0.9;
+                self.beta2 = 0.95;
+                self.weight_decay = 0.1;
+            }
+            OptKind::Lion => {
+                self.lr = 2e-4;
+                self.beta1 = 0.9;
+                self.beta2 = 0.95;
+                self.weight_decay = 0.1;
+            }
+        }
+        self
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrainConfig, String> {
+        let mut c = TrainConfig::default();
+        let obj = j.as_obj().ok_or("config must be an object")?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "preset" => {
+                    c.preset = v.as_str().ok_or("preset")?.to_string()
+                }
+                "optimizer" => {
+                    c.optimizer = OptKind::parse(v.as_str().ok_or("optimizer")?)
+                        .ok_or("bad optimizer")?
+                }
+                "variant" => {
+                    c.variant = Variant::parse(v.as_str().ok_or("variant")?)
+                        .ok_or("bad variant")?
+                }
+                "steps" => c.steps = v.as_usize().ok_or("steps")?,
+                "lr" => c.lr = v.as_f64().ok_or("lr")?,
+                "final_lr_frac" => {
+                    c.final_lr_frac = v.as_f64().ok_or("final_lr_frac")?
+                }
+                "warmup" => c.warmup = v.as_usize().ok_or("warmup")?,
+                "beta1" => c.beta1 = v.as_f64().ok_or("beta1")?,
+                "beta2" => c.beta2 = v.as_f64().ok_or("beta2")?,
+                "eps" => c.eps = v.as_f64().ok_or("eps")?,
+                "weight_decay" => {
+                    c.weight_decay = v.as_f64().ok_or("weight_decay")?
+                }
+                "seed" => c.seed = v.as_f64().ok_or("seed")? as u64,
+                "data_seed" => {
+                    c.data_seed = v.as_f64().ok_or("data_seed")? as u64
+                }
+                "bucket" => c.bucket = v.as_usize().ok_or("bucket")?,
+                "grad_release" => {
+                    c.grad_release = matches!(v, Json::Bool(true))
+                }
+                "workers" => c.workers = v.as_usize().ok_or("workers")?,
+                "eval_every" => {
+                    c.eval_every = v.as_usize().ok_or("eval_every")?
+                }
+                "eval_batches" => {
+                    c.eval_batches = v.as_usize().ok_or("eval_batches")?
+                }
+                "log_every" => {
+                    c.log_every = v.as_usize().ok_or("log_every")?
+                }
+                "init_scale" => {
+                    c.init_scale = v.as_f64().ok_or("init_scale")?
+                }
+                other => return Err(format!("unknown config key {other:?}")),
+            }
+        }
+        Ok(c)
+    }
+
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let mut m = BTreeMap::new();
+        m.insert("preset".into(), Json::Str(self.preset.clone()));
+        m.insert("optimizer".into(), Json::Str(self.optimizer.name().into()));
+        m.insert("variant".into(), Json::Str(self.variant.name().into()));
+        m.insert("steps".into(), Json::Num(self.steps as f64));
+        m.insert("lr".into(), Json::Num(self.lr));
+        m.insert("final_lr_frac".into(), Json::Num(self.final_lr_frac));
+        m.insert("warmup".into(), Json::Num(self.warmup as f64));
+        m.insert("beta1".into(), Json::Num(self.beta1));
+        m.insert("beta2".into(), Json::Num(self.beta2));
+        m.insert("eps".into(), Json::Num(self.eps));
+        m.insert("weight_decay".into(), Json::Num(self.weight_decay));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert("data_seed".into(), Json::Num(self.data_seed as f64));
+        m.insert("bucket".into(), Json::Num(self.bucket as f64));
+        m.insert("grad_release".into(), Json::Bool(self.grad_release));
+        m.insert("workers".into(), Json::Num(self.workers as f64));
+        m.insert("eval_every".into(), Json::Num(self.eval_every as f64));
+        m.insert("eval_batches".into(), Json::Num(self.eval_batches as f64));
+        m.insert("log_every".into(), Json::Num(self.log_every as f64));
+        m.insert("init_scale".into(), Json::Num(self.init_scale));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let c = TrainConfig::default().with_paper_hypers(OptKind::Lion);
+        let j = c.to_json();
+        let c2 = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c2.optimizer, OptKind::Lion);
+        assert_eq!(c2.lr, 2e-4);
+        assert_eq!(c2.bucket, c.bucket);
+        assert_eq!(c2.grad_release, c.grad_release);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let j = Json::parse(r#"{"bogus": 1}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = TrainConfig::default();
+        let args = Args::parse_from(
+            "--steps 42 --optimizer lion --variant reference \
+             --no-grad-release"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&args);
+        assert_eq!(c.steps, 42);
+        assert_eq!(c.optimizer, OptKind::Lion);
+        assert_eq!(c.variant, Variant::Reference);
+        assert!(!c.grad_release);
+    }
+
+    #[test]
+    fn variant_predicates() {
+        assert!(Variant::Flash.splits_weights());
+        assert!(Variant::Flash.quantizes_state());
+        assert!(Variant::WeightSplit.splits_weights());
+        assert!(!Variant::WeightSplit.quantizes_state());
+        assert!(!Variant::OptQuant.splits_weights());
+        assert!(Variant::OptQuant.quantizes_state());
+        assert!(!Variant::Reference.splits_weights());
+    }
+}

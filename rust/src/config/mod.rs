@@ -1,0 +1,7 @@
+//! Configuration system: hand-rolled JSON + typed experiment configs.
+
+pub mod experiment;
+pub mod json;
+
+pub use experiment::{OptKind, TrainConfig, Variant};
+pub use json::Json;

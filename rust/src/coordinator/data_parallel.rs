@@ -1,0 +1,130 @@
+//! Simulated data-parallel training: each worker computes fwd/bwd on its
+//! own batch; gradients are all-reduced (mean) in fp32 host-side.  The
+//! reduction semantics are real even though the workers share one CPU
+//! device (DESIGN.md §3 substitutions).
+//!
+//! §3.4 note from the paper holds here too: only the 16-bit θ′ would be
+//! all-gathered in a sharded deployment; ρ and the quantized states stay
+//! local to the optimizer shard.
+
+/// In-place mean all-reduce across worker gradient buffers.
+/// Returns the reduced gradient in `acc` (worker 0's buffer).
+pub fn allreduce_mean(workers: &mut Vec<Vec<f32>>) -> Vec<f32> {
+    assert!(!workers.is_empty());
+    let n = workers[0].len();
+    for w in workers.iter() {
+        assert_eq!(w.len(), n, "gradient length mismatch across workers");
+    }
+    let k = workers.len() as f32;
+    let mut acc = std::mem::take(&mut workers[0]);
+    for w in workers.iter().skip(1) {
+        for (a, &b) in acc.iter_mut().zip(w) {
+            *a += b;
+        }
+    }
+    for a in acc.iter_mut() {
+        *a /= k;
+    }
+    acc
+}
+
+/// Ring all-reduce simulation: produces the same mean but exercises the
+/// chunked send/recv schedule a real ring implementation uses; used by
+/// tests to check reduction-order invariance within f32 tolerance.
+pub fn allreduce_ring(workers: &[Vec<f32>]) -> Vec<f32> {
+    let k = workers.len();
+    assert!(k >= 1);
+    let n = workers[0].len();
+    let chunk = n.div_ceil(k).max(1);
+    let mut bufs: Vec<Vec<f32>> = workers.to_vec();
+    let span = |c: usize| (c * chunk, ((c + 1) * chunk).min(n));
+    // reduce-scatter: at step s, rank r sends chunk (r - s) mod k to
+    // rank (r + 1) mod k.  All sends of a step are simultaneous, so
+    // collect the messages before applying them.
+    for s in 0..k.saturating_sub(1) {
+        let mut msgs: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(k);
+        for r in 0..k {
+            let c = (r + k - (s % k)) % k;
+            let (lo, hi) = span(c);
+            if lo < hi {
+                msgs.push(((r + 1) % k, c, bufs[r][lo..hi].to_vec()));
+            }
+        }
+        for (dst, c, data) in msgs {
+            let (lo, _hi) = span(c);
+            for (i, v) in data.iter().enumerate() {
+                bufs[dst][lo + i] += v;
+            }
+        }
+    }
+    // after k-1 steps chunk c is fully reduced at rank (c + k - 1) % k
+    let mut out = vec![0f32; n];
+    for c in 0..k {
+        let owner = (c + k - 1) % k;
+        let (lo, hi) = span(c);
+        if lo < hi {
+            out[lo..hi].copy_from_slice(&bufs[owner][lo..hi]);
+        }
+    }
+    for x in out.iter_mut() {
+        *x /= k as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn make_workers(k: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..k)
+            .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn mean_is_exact_for_identical() {
+        let mut w = vec![vec![2.0f32; 16]; 4];
+        let out = allreduce_mean(&mut w);
+        assert!(out.iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn mean_matches_manual() {
+        let mut w = make_workers(3, 37, 1);
+        let manual: Vec<f32> = (0..37)
+            .map(|i| (w[0][i] + w[1][i] + w[2][i]) / 3.0)
+            .collect();
+        let out = allreduce_mean(&mut w);
+        for (a, b) in out.iter().zip(&manual) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ring_matches_mean() {
+        for k in 1..=5 {
+            let w = make_workers(k, 101, k as u64 + 10);
+            let ring = allreduce_ring(&w);
+            let mut w2 = w.clone();
+            let mean = allreduce_mean(&mut w2);
+            for (a, b) in ring.iter().zip(&mean) {
+                assert!((a - b).abs() < 1e-4, "k={k}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_identity() {
+        let w = make_workers(1, 64, 3);
+        let expect = w[0].clone();
+        let mut wm = w.clone();
+        assert_eq!(allreduce_mean(&mut wm), expect);
+        let ring = allreduce_ring(&w);
+        for (a, b) in ring.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Training metrics: per-step records, eval records, CSV export, and
+//! loss-curve data for the ASCII plots in the figure benches.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub lr: f64,
+    /// full step wall time (fwd+bwd + optimizer)
+    pub step_time_s: f64,
+    /// optimizer portion only (Table 4 "Step ms")
+    pub opt_time_s: f64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct EvalRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub accuracy: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+}
+
+impl Metrics {
+    pub fn record_step(&mut self, r: StepRecord) {
+        self.steps.push(r);
+    }
+
+    pub fn record_eval(&mut self, r: EvalRecord) {
+        self.evals.push(r);
+    }
+
+    pub fn loss_points(&self) -> Vec<(f64, f64)> {
+        self.steps
+            .iter()
+            .map(|r| (r.step as f64, r.loss))
+            .collect()
+    }
+
+    /// Smoothed loss points (EMA) for plotting.
+    pub fn smoothed_loss(&self, alpha: f64) -> Vec<(f64, f64)> {
+        let mut ema = crate::util::stats::Ema::new(alpha);
+        self.steps
+            .iter()
+            .map(|r| (r.step as f64, ema.update(r.loss)))
+            .collect()
+    }
+
+    pub fn final_loss(&self, tail: usize) -> f64 {
+        let n = self.steps.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let tail = tail.min(n).max(1);
+        let s: f64 = self.steps[n - tail..].iter().map(|r| r.loss).sum();
+        s / tail as f64
+    }
+
+    pub fn mean_step_ms(&self, skip_first: usize) -> f64 {
+        let xs: Vec<f64> = self
+            .steps
+            .iter()
+            .skip(skip_first)
+            .map(|r| r.step_time_s * 1e3)
+            .collect();
+        crate::util::stats::median(&xs)
+    }
+
+    pub fn mean_opt_ms(&self, skip_first: usize) -> f64 {
+        let xs: Vec<f64> = self
+            .steps
+            .iter()
+            .skip(skip_first)
+            .map(|r| r.opt_time_s * 1e3)
+            .collect();
+        crate::util::stats::median(&xs)
+    }
+
+    /// Write steps as CSV: step,loss,lr,step_ms,opt_ms
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {path:?}"))?;
+        writeln!(f, "step,loss,lr,step_ms,opt_ms")?;
+        for r in &self.steps {
+            writeln!(f, "{},{},{},{},{}", r.step, r.loss, r.lr,
+                     r.step_time_s * 1e3, r.opt_time_s * 1e3)?;
+        }
+        if !self.evals.is_empty() {
+            writeln!(f, "# evals: step,loss,accuracy")?;
+            for e in &self.evals {
+                writeln!(f, "# {},{},{}", e.step, e.loss, e.accuracy)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// True if any recorded loss is NaN/inf or exceeds `limit`
+    /// (the Fig-5 divergence detector).
+    pub fn diverged(&self, limit: f64) -> bool {
+        self.steps
+            .iter()
+            .any(|r| !r.loss.is_finite() || r.loss > limit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f64) -> StepRecord {
+        StepRecord { step, loss, lr: 0.1, step_time_s: 0.01,
+                     opt_time_s: 0.002 }
+    }
+
+    #[test]
+    fn final_loss_tail_mean() {
+        let mut m = Metrics::default();
+        for i in 0..10 {
+            m.record_step(rec(i, i as f64));
+        }
+        assert_eq!(m.final_loss(2), 8.5);
+        assert_eq!(m.final_loss(100), 4.5);
+    }
+
+    #[test]
+    fn divergence_detector() {
+        let mut m = Metrics::default();
+        m.record_step(rec(0, 3.0));
+        assert!(!m.diverged(10.0));
+        m.record_step(rec(1, f64::NAN));
+        assert!(m.diverged(10.0));
+        let mut m2 = Metrics::default();
+        m2.record_step(rec(0, 50.0));
+        assert!(m2.diverged(10.0));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut m = Metrics::default();
+        m.record_step(rec(1, 2.5));
+        m.record_eval(EvalRecord { step: 1, loss: 2.4, accuracy: 0.5 });
+        let p = std::env::temp_dir().join(format!(
+            "flashtrain_metrics_{}.csv", std::process::id()));
+        m.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("step,loss"));
+        assert!(text.contains("# 1,2.4,0.5"));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn smoothing_reduces_noise() {
+        let mut m = Metrics::default();
+        for i in 0..100 {
+            let noise = if i % 2 == 0 { 0.5 } else { -0.5 };
+            m.record_step(rec(i, 3.0 + noise));
+        }
+        let sm = m.smoothed_loss(0.1);
+        let raw_span = 1.0;
+        let sm_span = sm[60..]
+            .iter()
+            .map(|p| (p.1 - 3.0).abs())
+            .fold(0.0, f64::max);
+        assert!(sm_span < raw_span / 3.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Layer-3 coordination: the training loop, LR schedules, metrics,
+//! simulated data-parallel reduction, and bucketed gradient release.
+
+pub mod data_parallel;
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use metrics::{EvalRecord, Metrics, StepRecord};
+pub use schedule::Schedule;
+pub use trainer::{init_params, Trainer};

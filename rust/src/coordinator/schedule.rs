@@ -1,0 +1,93 @@
+//! Learning-rate schedules: linear warmup + cosine decay (the paper's
+//! setup for every experiment, §B.1/B.2/B.4).
+
+#[derive(Clone, Copy, Debug)]
+pub enum Decay {
+    Cosine,
+    Constant,
+    Linear,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Schedule {
+    pub base_lr: f64,
+    pub final_lr: f64,
+    pub warmup: usize,
+    pub total: usize,
+    pub decay: Decay,
+}
+
+impl Schedule {
+    pub fn warmup_cosine(base_lr: f64, final_lr: f64, warmup: usize,
+                         total: usize) -> Schedule {
+        Schedule { base_lr, final_lr, warmup, total, decay: Decay::Cosine }
+    }
+
+    /// LR for optimizer step `t` (1-based, matching Algorithm 4's t).
+    pub fn lr(&self, t: usize) -> f64 {
+        if self.warmup > 0 && t <= self.warmup {
+            return self.base_lr * t as f64 / self.warmup as f64;
+        }
+        let span = (self.total.max(self.warmup + 1) - self.warmup) as f64;
+        let p = ((t - self.warmup) as f64 / span).clamp(0.0, 1.0);
+        match self.decay {
+            Decay::Constant => self.base_lr,
+            Decay::Linear => {
+                self.base_lr + (self.final_lr - self.base_lr) * p
+            }
+            Decay::Cosine => {
+                let cos = 0.5 * (1.0 + (std::f64::consts::PI * p).cos());
+                self.final_lr + (self.base_lr - self.final_lr) * cos
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = Schedule::warmup_cosine(1.0, 0.0, 10, 100);
+        assert!((s.lr(1) - 0.1).abs() < 1e-12);
+        assert!((s.lr(5) - 0.5).abs() < 1e-12);
+        assert!((s.lr(10) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_decays_to_final() {
+        let s = Schedule::warmup_cosine(1.0, 0.0, 10, 100);
+        assert!(s.lr(11) > 0.99);
+        assert!((s.lr(100) - 0.0).abs() < 1e-9);
+        // midpoint of decay ~ half the base lr
+        assert!((s.lr(55) - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn monotone_after_warmup() {
+        let s = Schedule::warmup_cosine(6e-4, 0.0, 700, 20_000);
+        let mut prev = f64::INFINITY;
+        for t in (700..20_000).step_by(137) {
+            let lr = s.lr(t);
+            assert!(lr <= prev + 1e-15);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn constant_and_linear() {
+        let c = Schedule { base_lr: 0.3, final_lr: 0.0, warmup: 0,
+                           total: 10, decay: Decay::Constant };
+        assert_eq!(c.lr(7), 0.3);
+        let l = Schedule { base_lr: 1.0, final_lr: 0.5, warmup: 0,
+                           total: 10, decay: Decay::Linear };
+        assert!((l.lr(5) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn past_total_clamps() {
+        let s = Schedule::warmup_cosine(1.0, 0.1, 0, 10);
+        assert!((s.lr(50) - 0.1).abs() < 1e-12);
+    }
+}

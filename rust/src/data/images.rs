@@ -1,0 +1,136 @@
+//! Synthetic image classification data: Gaussian class prototypes with
+//! per-sample noise and a fixed held-out validation split.  Stand-in for
+//! ImageNet-1K in the SGD / vision experiments (DESIGN.md §3).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ImagesConfig {
+    pub input_dim: usize,
+    pub classes: usize,
+    pub batch: usize,
+    /// noise std relative to prototype scale (controls task difficulty)
+    pub noise: f32,
+    /// fraction of "hard" samples drawn between two prototypes
+    pub hard_frac: f64,
+}
+
+impl ImagesConfig {
+    pub fn new(input_dim: usize, classes: usize, batch: usize)
+               -> ImagesConfig {
+        ImagesConfig { input_dim, classes, batch, noise: 0.8,
+                       hard_frac: 0.25 }
+    }
+}
+
+pub struct Images {
+    cfg: ImagesConfig,
+    protos: Vec<f32>, // [classes, input_dim]
+    rng: Rng,
+}
+
+impl Images {
+    pub fn new(cfg: ImagesConfig, seed: u64) -> Images {
+        let mut proto_rng = Rng::new(seed ^ 0xBEEF);
+        let protos = (0..cfg.classes * cfg.input_dim)
+            .map(|_| proto_rng.normal() as f32)
+            .collect();
+        Images { protos, rng: Rng::new(seed), cfg }
+    }
+
+    fn sample_into(&mut self, x: &mut Vec<f32>, y: &mut Vec<i32>) {
+        let d = self.cfg.input_dim;
+        let label = self.rng.below(self.cfg.classes as u64) as usize;
+        let hard = self.rng.f64() < self.cfg.hard_frac;
+        let other = self.rng.below(self.cfg.classes as u64) as usize;
+        let alpha = if hard { 0.35 } else { 0.0 };
+        for i in 0..d {
+            let base = self.protos[label * d + i] * (1.0 - alpha as f32)
+                + self.protos[other * d + i] * alpha as f32;
+            x.push(base + self.rng.normal() as f32 * self.cfg.noise);
+        }
+        y.push(label as i32);
+    }
+
+    /// Next training batch: (x [batch*input_dim], y [batch]).
+    pub fn next_batch(&mut self) -> (Vec<f32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(self.cfg.batch * self.cfg.input_dim);
+        let mut y = Vec::with_capacity(self.cfg.batch);
+        for _ in 0..self.cfg.batch {
+            self.sample_into(&mut x, &mut y);
+        }
+        (x, y)
+    }
+
+    /// Deterministic validation set, independent of training stream.
+    pub fn val_batches(&self, n_batches: usize, seed: u64)
+                       -> Vec<(Vec<f32>, Vec<i32>)> {
+        let mut v = Images::new(self.cfg.clone(), seed ^ 0x5A5A5A);
+        // share the SAME prototypes as the training distribution
+        v.protos = self.protos.clone();
+        (0..n_batches).map(|_| v.next_batch()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let cfg = ImagesConfig::new(32, 4, 8);
+        let mut a = Images::new(cfg.clone(), 9);
+        let mut b = Images::new(cfg, 9);
+        assert_eq!(a.next_batch(), b.next_batch());
+    }
+
+    #[test]
+    fn shapes_and_labels() {
+        let cfg = ImagesConfig::new(48, 10, 16);
+        let mut im = Images::new(cfg, 1);
+        let (x, y) = im.next_batch();
+        assert_eq!(x.len(), 48 * 16);
+        assert_eq!(y.len(), 16);
+        assert!(y.iter().all(|&l| (0..10).contains(&l)));
+    }
+
+    #[test]
+    fn val_set_uses_same_prototypes() {
+        let cfg = ImagesConfig::new(16, 3, 4);
+        let im = Images::new(cfg, 2);
+        let v1 = im.val_batches(2, 42);
+        let v2 = im.val_batches(2, 42);
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // nearest-prototype classifier should beat chance comfortably
+        let cfg = ImagesConfig::new(64, 5, 32);
+        let mut im = Images::new(cfg.clone(), 3);
+        let mut correct = 0;
+        let mut total = 0;
+        for _ in 0..20 {
+            let (x, y) = im.next_batch();
+            for (row, &label) in x.chunks_exact(64).zip(&y) {
+                let mut best = (f32::INFINITY, 0usize);
+                for c in 0..5 {
+                    let d: f32 = row
+                        .iter()
+                        .zip(&im.protos[c * 64..(c + 1) * 64])
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum();
+                    if d < best.0 {
+                        best = (d, c);
+                    }
+                }
+                if best.1 == label as usize {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        assert!(correct as f64 / total as f64 > 0.6,
+                "{correct}/{total}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Synthetic workload generators (DESIGN.md §3 substitutions):
+//!
+//!  * `corpus`  — Zipfian bigram language corpus (FineWeb stand-in)
+//!  * `images`  — Gaussian class-prototype images (ImageNet stand-in)
+//!
+//! Both are fully deterministic in their seed — the paper's loss-curve
+//! comparisons require "identical data ordering across methods".
+
+pub mod corpus;
+pub mod images;

@@ -1,0 +1,134 @@
+//! Baseline weight-compression schemes compared against in Figure 3:
+//!
+//!   * `none`        — plain downcast, no error correction
+//!   * `float+float` — Zamirai et al. (2020)-style: store the rounding
+//!                     error itself in the same low-precision float
+//!                     format (Kahan-summation error buffer)
+//!
+//! plus a thin dispatch enum covering our ULP schemes so the Figure-3
+//! sweep can iterate over all methods uniformly.
+
+use super::weight_split::{self, Correction, Target};
+use super::{bf16, fp16};
+
+/// All schemes in Figure 3 (per target datatype).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// No error correction: θ̂ = downcast(θ).
+    NoCorrection,
+    /// ρ = downcast(θ − θ′) stored in the same float format.
+    FloatFloat,
+    /// Ours, 8-bit ULP-normalized integer correction (24-bit total w/ BF16).
+    UlpInt8,
+    /// Ours, 16-bit ULP-normalized integer correction (32-bit total w/ BF16).
+    UlpInt16,
+}
+
+impl Scheme {
+    pub const ALL: [Scheme; 4] = [Scheme::NoCorrection, Scheme::FloatFloat,
+                                  Scheme::UlpInt8, Scheme::UlpInt16];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::NoCorrection => "no-correction",
+            Scheme::FloatFloat => "float+float",
+            Scheme::UlpInt8 => "ulp-int8 (ours)",
+            Scheme::UlpInt16 => "ulp-int16 (ours)",
+        }
+    }
+
+    /// Total stored bits per value for a 16-bit target.
+    pub fn bits(self) -> u32 {
+        match self {
+            Scheme::NoCorrection => 16,
+            Scheme::FloatFloat => 32,
+            Scheme::UlpInt8 => 24,
+            Scheme::UlpInt16 => 32,
+        }
+    }
+}
+
+#[inline]
+fn downcast(x: f32, t: Target) -> f32 {
+    match t {
+        Target::Bf16 => bf16::round_f32_to_bf16(x),
+        Target::Fp16 => fp16::round_f32_to_f16(x),
+    }
+}
+
+/// Round-trip θ through a scheme; returns the reconstruction θ̂.
+#[inline]
+pub fn roundtrip(theta: f32, scheme: Scheme, target: Target) -> f32 {
+    match scheme {
+        Scheme::NoCorrection => downcast(theta, target),
+        Scheme::FloatFloat => {
+            let tp = downcast(theta, target);
+            let err = downcast(theta - tp, target);
+            tp + err
+        }
+        Scheme::UlpInt8 => {
+            let (b, r) = weight_split::compress(theta, Correction::Int8,
+                                                target);
+            weight_split::decompress(b, r, Correction::Int8, target)
+        }
+        Scheme::UlpInt16 => {
+            let (b, r) = weight_split::compress(theta, Correction::Int16,
+                                                target);
+            weight_split::decompress(b, r, Correction::Int16, target)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ours_dominates_float_float_bf16() {
+        // paper §4.4: BF16+BF16 error (>1e-6) comparable to our *24-bit*
+        // format; our 16-bit correction is orders of magnitude better.
+        let mut rng = Rng::new(5);
+        let (mut e_ff, mut e_i16, mut n) = (0f64, 0f64, 0u32);
+        for _ in 0..100_000 {
+            let x = (rng.normal() as f32) * (rng.f32() * 30.0 - 15.0).exp2();
+            if x == 0.0 {
+                continue;
+            }
+            let ff = (roundtrip(x, Scheme::FloatFloat, Target::Bf16) - x)
+                .abs() as f64 / x.abs() as f64;
+            let i16_ = (roundtrip(x, Scheme::UlpInt16, Target::Bf16) - x)
+                .abs() as f64 / x.abs() as f64;
+            e_ff += ff;
+            e_i16 += i16_;
+            n += 1;
+        }
+        let (e_ff, e_i16) = (e_ff / n as f64, e_i16 / n as f64);
+        assert!(e_i16 * 100.0 < e_ff, "{e_i16} vs {e_ff}");
+        assert!(e_i16 < 1e-8);
+    }
+
+    #[test]
+    fn no_correction_worst() {
+        let mut rng = Rng::new(6);
+        for _ in 0..10_000 {
+            let x = (rng.normal() as f32).abs() + 0.1;
+            let e_none = (roundtrip(x, Scheme::NoCorrection, Target::Bf16)
+                          - x).abs();
+            let e_i8 = (roundtrip(x, Scheme::UlpInt8, Target::Bf16) - x)
+                .abs();
+            assert!(e_i8 <= e_none + 1e-12);
+        }
+    }
+
+    #[test]
+    fn fp16_float_float_has_exponent_waste() {
+        // With FP16 targets the stored error term hits the FP16 subnormal
+        // floor; ours doesn't.  Check on values whose rounding error is
+        // tiny relative to FP16's range.
+        let x = 0.1f32 + 3e-5;
+        let ff = (roundtrip(x, Scheme::FloatFloat, Target::Fp16) - x).abs();
+        let ours = (roundtrip(x, Scheme::UlpInt16, Target::Fp16) - x).abs();
+        assert!(ours <= ff);
+    }
+}

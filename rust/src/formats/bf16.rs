@@ -1,0 +1,115 @@
+//! bfloat16 conversions, implemented from scratch (no `half` crate
+//! offline).  Round-to-nearest-even, matching XLA's `convert` semantics,
+//! so values round-trip bit-exactly against the HLO kernels.
+
+/// Convert f32 to bf16 bits with round-to-nearest-even.
+#[inline]
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Preserve sign + quiet the NaN (same as XLA).
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round_bit = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7FFF + round_bit);
+    (rounded >> 16) as u16
+}
+
+/// Convert bf16 bits to f32 (exact).
+#[inline]
+pub fn bf16_bits_to_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+/// Round-trip f32 through bf16 (i.e. the plain downcast baseline).
+#[inline]
+pub fn round_f32_to_bf16(x: f32) -> f32 {
+    bf16_bits_to_f32(f32_to_bf16_bits(x))
+}
+
+/// Integer e such that ULP(x) = 2^e for a bf16 value given as bits.
+/// BF16 has 7 explicit mantissa bits; zeros/subnormals share the ULP of
+/// the smallest normal binade (2^-133).
+#[inline]
+pub fn ulp_exponent(bits: u16) -> i32 {
+    let exp = ((bits >> 7) & 0xFF) as i32;
+    if exp > 0 {
+        exp - 127 - 7
+    } else {
+        -126 - 7
+    }
+}
+
+/// Largest finite bf16 as f32.
+pub const MAX: f32 = 3.3895314e38;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers() {
+        for i in -256..=256 {
+            let x = i as f32;
+            assert_eq!(round_f32_to_bf16(x), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-8 is exactly halfway between 1.0 and 1.0 + 2^-7:
+        // ties-to-even keeps 1.0 (even mantissa).
+        let x = 1.0 + 2f32.powi(-8);
+        assert_eq!(round_f32_to_bf16(x), 1.0);
+        // Slightly above the halfway point rounds up.
+        let y = 1.0 + 2f32.powi(-8) + 2f32.powi(-16);
+        assert_eq!(round_f32_to_bf16(y), 1.0 + 2f32.powi(-7));
+    }
+
+    #[test]
+    fn negative_symmetry() {
+        for &x in &[0.1f32, 1.7, 3.25e-20, 8.1e30] {
+            assert_eq!(round_f32_to_bf16(-x), -round_f32_to_bf16(x));
+        }
+    }
+
+    #[test]
+    fn nan_and_inf() {
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+        assert_eq!(round_f32_to_bf16(f32::INFINITY), f32::INFINITY);
+        assert_eq!(round_f32_to_bf16(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        // overflow past bf16 max rounds to inf
+        assert_eq!(round_f32_to_bf16(f32::MAX), f32::INFINITY);
+    }
+
+    #[test]
+    fn signed_zero() {
+        assert_eq!(f32_to_bf16_bits(0.0), 0);
+        assert_eq!(f32_to_bf16_bits(-0.0), 0x8000);
+    }
+
+    #[test]
+    fn subnormal_bf16_values_roundtrip() {
+        // smallest positive bf16 subnormal = 2^-133
+        let x = 2f32.powi(-133);
+        assert_eq!(round_f32_to_bf16(x), x);
+        // smallest f32 subnormal rounds to zero in bf16
+        assert_eq!(round_f32_to_bf16(f32::from_bits(1)), 0.0);
+    }
+
+    #[test]
+    fn ulp_exponent_cases() {
+        assert_eq!(ulp_exponent(f32_to_bf16_bits(1.0)), -7);
+        assert_eq!(ulp_exponent(f32_to_bf16_bits(2.0)), -6);
+        assert_eq!(ulp_exponent(f32_to_bf16_bits(0.0)), -133);
+        assert_eq!(ulp_exponent(f32_to_bf16_bits(2f32.powi(-130))), -133);
+        // ULP must bound the rounding error of the downcast
+        for i in 0..2000u32 {
+            let x = f32::from_bits(0x3f80_0000 + i * 9173);
+            let b = f32_to_bf16_bits(x);
+            let err = (bf16_bits_to_f32(b) - x).abs();
+            let ulp = 2f64.powi(ulp_exponent(b)) as f32;
+            assert!(err <= ulp / 2.0 * 1.000001, "{x} err={err} ulp={ulp}");
+        }
+    }
+}

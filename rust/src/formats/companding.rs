@@ -1,0 +1,266 @@
+//! Algorithms 2 & 3 — companded group-wise optimizer-state quantization,
+//! bit-exact Rust mirror of `ref.py::quant_momentum/quant_variance` (and
+//! the linear no-companding ablations).
+//!
+//! Group size G = 32; one f16 absmax scale per group (2/32 = 1/16 bytes
+//! of overhead per parameter, paper §3.2).
+
+use super::fp16;
+
+/// Group size (paper: G = 32).
+pub const GROUP: usize = 32;
+
+/// Momentum companding φ_m(x) = 2x / (1 + |x|)  (eq. 3).
+#[inline]
+pub fn phi_m(x: f32) -> f32 {
+    2.0 * x / (1.0 + x.abs())
+}
+
+/// φ_m⁻¹(z) = z / (2 − |z|).
+#[inline]
+pub fn phi_m_inv(z: f32) -> f32 {
+    z / (2.0 - z.abs())
+}
+
+#[inline]
+fn group_absmax(g: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for &x in g {
+        let a = x.abs();
+        if a > s {
+            s = a;
+        }
+    }
+    s
+}
+
+#[inline]
+fn scale_pair(s: f32) -> (u16, f32) {
+    // saturate to f16 max (an inf scale would turn dequantized zeros
+    // into NaN), then store in f16 and use the *stored* value for
+    // normalization (matches the kernel: where(s16 > 0, f32(s16), 1.0))
+    let s = s.min(fp16::MAX);
+    let s16 = fp16::f32_to_f16_bits(s);
+    let back = fp16::f16_bits_to_f32(s16);
+    let safe = if back > 0.0 { back } else { 1.0 };
+    (s16, safe)
+}
+
+/// Q_m: momentum -> (int8 codes, f16 scale bits).  Slices must be
+/// GROUP-aligned.
+pub fn quant_momentum(m: &[f32], q: &mut [i8], scales: &mut [u16]) {
+    assert_eq!(m.len() % GROUP, 0);
+    assert_eq!(q.len(), m.len());
+    assert_eq!(scales.len(), m.len() / GROUP);
+    for (gi, chunk) in m.chunks_exact(GROUP).enumerate() {
+        let (s16, safe) = scale_pair(group_absmax(chunk));
+        scales[gi] = s16;
+        for (j, &x) in chunk.iter().enumerate() {
+            let z = phi_m(x / safe);
+            let r = (z * 127.0).round_ties_even().clamp(-127.0, 127.0);
+            q[gi * GROUP + j] = r as i8;
+        }
+    }
+}
+
+/// Q_m⁻¹.
+pub fn dequant_momentum(q: &[i8], scales: &[u16], out: &mut [f32]) {
+    assert_eq!(q.len() % GROUP, 0);
+    assert_eq!(out.len(), q.len());
+    for gi in 0..scales.len() {
+        let s = fp16::f16_bits_to_f32(scales[gi]);
+        for j in 0..GROUP {
+            let z = q[gi * GROUP + j] as f32 / 127.0;
+            out[gi * GROUP + j] = phi_m_inv(z) * s;
+        }
+    }
+}
+
+/// Q_v: variance -> (uint8 codes, f16 scale bits of sqrt-domain absmax).
+pub fn quant_variance(v: &[f32], q: &mut [u8], scales: &mut [u16]) {
+    assert_eq!(v.len() % GROUP, 0);
+    assert_eq!(q.len(), v.len());
+    assert_eq!(scales.len(), v.len() / GROUP);
+    let mut sq = [0f32; GROUP];
+    for (gi, chunk) in v.chunks_exact(GROUP).enumerate() {
+        for (j, &x) in chunk.iter().enumerate() {
+            sq[j] = x.sqrt();
+        }
+        let (s16, safe) = scale_pair(group_absmax(&sq));
+        scales[gi] = s16;
+        for j in 0..GROUP {
+            let r = (sq[j] / safe * 255.0).round_ties_even().clamp(0.0, 255.0);
+            q[gi * GROUP + j] = r as u8;
+        }
+    }
+}
+
+/// Q_v⁻¹.
+pub fn dequant_variance(q: &[u8], scales: &[u16], out: &mut [f32]) {
+    assert_eq!(q.len() % GROUP, 0);
+    assert_eq!(out.len(), q.len());
+    for gi in 0..scales.len() {
+        let s = fp16::f16_bits_to_f32(scales[gi]);
+        for j in 0..GROUP {
+            let vp = q[gi * GROUP + j] as f32 / 255.0 * s;
+            out[gi * GROUP + j] = vp * vp;
+        }
+    }
+}
+
+// Linear (no companding) ablation variants ---------------------------------
+
+pub fn quant_momentum_linear(m: &[f32], q: &mut [i8], scales: &mut [u16]) {
+    for (gi, chunk) in m.chunks_exact(GROUP).enumerate() {
+        let (s16, safe) = scale_pair(group_absmax(chunk));
+        scales[gi] = s16;
+        for (j, &x) in chunk.iter().enumerate() {
+            let r = (x / safe * 127.0).round_ties_even().clamp(-127.0, 127.0);
+            q[gi * GROUP + j] = r as i8;
+        }
+    }
+}
+
+pub fn dequant_momentum_linear(q: &[i8], scales: &[u16], out: &mut [f32]) {
+    for gi in 0..scales.len() {
+        let s = fp16::f16_bits_to_f32(scales[gi]);
+        for j in 0..GROUP {
+            out[gi * GROUP + j] = q[gi * GROUP + j] as f32 / 127.0 * s;
+        }
+    }
+}
+
+pub fn quant_variance_linear(v: &[f32], q: &mut [u8], scales: &mut [u16]) {
+    for (gi, chunk) in v.chunks_exact(GROUP).enumerate() {
+        let (s16, safe) = scale_pair(group_absmax(chunk));
+        scales[gi] = s16;
+        for (j, &x) in chunk.iter().enumerate() {
+            let r = (x / safe * 255.0).round_ties_even().clamp(0.0, 255.0);
+            q[gi * GROUP + j] = r as u8;
+        }
+    }
+}
+
+pub fn dequant_variance_linear(q: &[u8], scales: &[u16], out: &mut [f32]) {
+    for gi in 0..scales.len() {
+        let s = fp16::f16_bits_to_f32(scales[gi]);
+        for j in 0..GROUP {
+            out[gi * GROUP + j] = q[gi * GROUP + j] as f32 / 255.0 * s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::nmse;
+
+    fn heavy(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        // ratio of two normals ~ heavy-tailed like real optimizer states
+        (0..n)
+            .map(|_| {
+                let a = rng.normal() as f32;
+                let b = (rng.normal() as f32).abs() + 0.3;
+                a / b * scale
+            })
+            .collect()
+    }
+
+    #[test]
+    fn phi_inverse_identity() {
+        for i in -1000..=1000 {
+            let x = i as f32 / 1000.0;
+            let err = (phi_m_inv(phi_m(x)) - x).abs();
+            assert!(err < 1e-6, "{x}");
+        }
+    }
+
+    #[test]
+    fn momentum_roundtrip_bounded() {
+        let mut rng = Rng::new(1);
+        let m = heavy(&mut rng, 4096, 0.01);
+        let mut q = vec![0i8; 4096];
+        let mut s = vec![0u16; 128];
+        quant_momentum(&m, &mut q, &mut s);
+        let mut out = vec![0f32; 4096];
+        dequant_momentum(&q, &s, &mut out);
+        for (g, og) in m.chunks_exact(GROUP).zip(out.chunks_exact(GROUP)) {
+            let absmax = group_absmax(g).max(1e-30);
+            for (a, b) in g.iter().zip(og) {
+                assert!((a - b).abs() / absmax < 0.02);
+            }
+        }
+    }
+
+    #[test]
+    fn variance_roundtrip_bounded() {
+        let mut rng = Rng::new(2);
+        let v: Vec<f32> = heavy(&mut rng, 4096, 1e-2)
+            .iter()
+            .map(|x| x * x)
+            .collect();
+        let mut q = vec![0u8; 4096];
+        let mut s = vec![0u16; 128];
+        quant_variance(&v, &mut q, &mut s);
+        let mut out = vec![0f32; 4096];
+        dequant_variance(&q, &s, &mut out);
+        for (g, og) in v.chunks_exact(GROUP).zip(out.chunks_exact(GROUP)) {
+            let absmax = group_absmax(g).max(1e-38);
+            for (a, b) in g.iter().zip(og) {
+                assert!((a - b).abs() / absmax < 0.02);
+            }
+        }
+    }
+
+    #[test]
+    fn companding_beats_linear() {
+        let mut rng = Rng::new(3);
+        let m = heavy(&mut rng, 32 * 1024, 1.0);
+        let v: Vec<f32> = m.iter().map(|x| x * x).collect();
+        let n = m.len();
+        let (mut q8, mut u8s) = (vec![0i8; n], vec![0u8; n]);
+        let mut s = vec![0u16; n / GROUP];
+        let mut out = vec![0f32; n];
+
+        quant_momentum(&m, &mut q8, &mut s);
+        dequant_momentum(&q8, &s, &mut out);
+        let e_comp = nmse(&out, &m);
+        quant_momentum_linear(&m, &mut q8, &mut s);
+        dequant_momentum_linear(&q8, &s, &mut out);
+        let e_lin = nmse(&out, &m);
+        assert!(e_comp < e_lin, "momentum {e_comp} !< {e_lin}");
+
+        quant_variance(&v, &mut u8s, &mut s);
+        dequant_variance(&u8s, &s, &mut out);
+        let e_comp = nmse(&out, &v);
+        quant_variance_linear(&v, &mut u8s, &mut s);
+        dequant_variance_linear(&u8s, &s, &mut out);
+        let e_lin = nmse(&out, &v);
+        // paper Fig 4: "particularly large improvements for variance"
+        assert!(e_comp * 2.0 < e_lin, "variance {e_comp} !< {e_lin}/2");
+    }
+
+    #[test]
+    fn zero_groups_stable() {
+        let m = vec![0f32; 64];
+        let mut q = vec![0i8; 64];
+        let mut s = vec![0u16; 2];
+        quant_momentum(&m, &mut q, &mut s);
+        let mut out = vec![1f32; 64];
+        dequant_momentum(&q, &s, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn variance_nonnegative() {
+        let mut rng = Rng::new(4);
+        let v: Vec<f32> = (0..1024).map(|_| (rng.normal() as f32).powi(2)).collect();
+        let mut q = vec![0u8; 1024];
+        let mut s = vec![0u16; 32];
+        quant_variance(&v, &mut q, &mut s);
+        let mut out = vec![0f32; 1024];
+        dequant_variance(&q, &s, &mut out);
+        assert!(out.iter().all(|&x| x >= 0.0));
+    }
+}

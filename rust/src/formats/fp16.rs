@@ -1,0 +1,202 @@
+//! IEEE binary16 conversions from scratch (round-to-nearest-even,
+//! full subnormal support).  Used for (a) the FP16 split target in the
+//! Figure-3 sweep and (b) the f16 group scales of Algorithms 2/3, which
+//! must match XLA's convert bit-for-bit.
+
+/// Convert f32 to f16 bits, round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // inf / nan
+        return if man == 0 {
+            sign | 0x7C00
+        } else {
+            sign | 0x7E00 // quiet NaN
+        };
+    }
+
+    // unbiased exponent
+    let e = exp - 127;
+    if e > 15 {
+        // overflow -> inf (RNE: anything >= 65520 rounds to inf)
+        // check the exact boundary: max finite f16 = 65504, values in
+        // (65504, 65520) round down to 65504.
+        if e == 16 {
+            // value in [65536, 131072): definitely inf
+            return sign | 0x7C00;
+        }
+        return sign | 0x7C00;
+    }
+    if e >= -14 {
+        // normal f16 range; round 23-bit mantissa to 10 bits
+        let mant = man | 0x0080_0000; // implicit bit
+        let shift = 13;
+        let half = 1u32 << (shift - 1);
+        let mut m = mant >> shift;
+        let rem = mant & ((1 << shift) - 1);
+        if rem > half || (rem == half && (m & 1) == 1) {
+            m += 1;
+        }
+        // m now has the implicit bit at position 10 (value 1024..2048],
+        // possibly 2048 after rounding carry.
+        let mut out_e = (e + 15) as u32;
+        if m >= 0x800 {
+            m >>= 1;
+            out_e += 1;
+        }
+        if out_e >= 31 {
+            return sign | 0x7C00; // rounded up into inf
+        }
+        return sign | ((out_e as u16) << 10) | ((m & 0x3FF) as u16);
+    }
+    if e >= -25 {
+        // subnormal f16: value = mant * 2^(e-23), f16 subnormal unit 2^-24
+        let mant = man | 0x0080_0000;
+        // need to shift mantissa right by (-14 - e) extra bits
+        let shift = (13 + (-14 - e)) as u32;
+        if shift >= 32 {
+            return sign;
+        }
+        let half = 1u32 << (shift - 1);
+        let mut m = mant >> shift;
+        let rem = mant & ((1u32 << shift) - 1);
+        if rem > half || (rem == half && (m & 1) == 1) {
+            m += 1;
+        }
+        if m >= 0x400 {
+            // rounded up into the smallest normal
+            return sign | (1 << 10);
+        }
+        return sign | (m as u16);
+    }
+    // too small: rounds to signed zero (e = -26 boundary: 2^-26 exactly
+    // halfway to smallest subnormal 2^-24? no: halfway is 2^-25; below
+    // that rounds to zero by RNE since zero "mantissa" is even)
+    sign
+}
+
+/// Convert f16 bits to f32 (exact).
+pub fn f16_bits_to_f32(bits: u16) -> f32 {
+    let sign = ((bits & 0x8000) as u32) << 16;
+    let exp = ((bits >> 10) & 0x1F) as u32;
+    let man = (bits & 0x3FF) as u32;
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign);
+        }
+        // subnormal: normalize
+        let mut e = -14i32;
+        let mut m = man;
+        while m & 0x400 == 0 {
+            m <<= 1;
+            e -= 1;
+        }
+        m &= 0x3FF;
+        let out = sign | (((e + 127) as u32) << 23) | (m << 13);
+        return f32::from_bits(out);
+    }
+    if exp == 31 {
+        let out = sign | 0x7F80_0000 | (man << 13);
+        return f32::from_bits(out);
+    }
+    let out = sign | ((exp + 127 - 15) << 23) | (man << 13);
+    f32::from_bits(out)
+}
+
+/// Round-trip f32 through f16.
+#[inline]
+pub fn round_f32_to_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Integer e such that ULP(x) = 2^e for an f16 value given as bits.
+/// FP16 has 10 explicit mantissa bits; subnormal/zero ULP is 2^-24.
+#[inline]
+pub fn ulp_exponent(bits: u16) -> i32 {
+    let exp = ((bits >> 10) & 0x1F) as i32;
+    if exp > 0 {
+        exp - 15 - 10
+    } else {
+        -14 - 10
+    }
+}
+
+/// Largest finite f16 as f32.
+pub const MAX: f32 = 65504.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, 65504.0, 6.1035156e-5,
+                    5.9604645e-8, 2.0, 1024.0] {
+            assert_eq!(round_f32_to_f16(x), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn rne_ties() {
+        // 1 + 2^-11 is halfway between 1.0 and 1+2^-10 -> stays 1.0
+        assert_eq!(round_f32_to_f16(1.0 + 2f32.powi(-11)), 1.0);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9 -> 1+2^-9
+        assert_eq!(round_f32_to_f16(1.0 + 3.0 * 2f32.powi(-11)),
+                   1.0 + 2f32.powi(-9));
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert_eq!(round_f32_to_f16(65520.0), f32::INFINITY);
+        assert_eq!(round_f32_to_f16(65519.9), 65504.0);
+        assert_eq!(round_f32_to_f16(1e20), f32::INFINITY);
+        assert_eq!(round_f32_to_f16(-1e20), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn subnormals() {
+        let tiny = 2f32.powi(-24); // smallest f16 subnormal
+        assert_eq!(round_f32_to_f16(tiny), tiny);
+        assert_eq!(round_f32_to_f16(tiny * 1.49), tiny);
+        assert_eq!(round_f32_to_f16(tiny * 1.51), tiny * 2.0);
+        // below half the smallest subnormal -> zero (ties to even)
+        assert_eq!(round_f32_to_f16(2f32.powi(-26)), 0.0);
+        assert_eq!(round_f32_to_f16(2f32.powi(-25) * 1.01), tiny);
+    }
+
+    #[test]
+    fn nan_inf() {
+        assert!(round_f32_to_f16(f32::NAN).is_nan());
+        assert_eq!(round_f32_to_f16(f32::INFINITY), f32::INFINITY);
+    }
+
+    #[test]
+    fn monotone_dense_sweep() {
+        // conversion must be monotone over positive floats
+        let mut prev = 0.0f32;
+        for i in 0..20000u32 {
+            let x = f32::from_bits(0x3380_0000 + i * 2731); // spans binades
+            let r = round_f32_to_f16(x);
+            assert!(r >= prev, "x={x} r={r} prev={prev}");
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_ulp() {
+        for i in 0..30000u32 {
+            let x = f32::from_bits(0x3000_0000 + i * 65537);
+            if !x.is_finite() || x.abs() > MAX {
+                continue;
+            }
+            let b = f32_to_f16_bits(x);
+            let err = (f16_bits_to_f32(b) - x).abs() as f64;
+            let ulp = 2f64.powi(ulp_exponent(b));
+            assert!(err <= ulp / 2.0 * 1.000001, "{x}");
+        }
+    }
+}

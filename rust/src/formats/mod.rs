@@ -1,0 +1,17 @@
+//! Numeric-format substrate: from-scratch bf16/fp16 conversions, the
+//! paper's ULP-normalized weight splitting (Algorithm 1), companded
+//! group-wise 8-bit state quantization (Algorithms 2/3), and the
+//! baseline schemes used in the Figure-3 comparison.
+//!
+//! Everything here is a bit-exact mirror of the Layer-1 Pallas kernels
+//! (`python/compile/kernels/ref.py`); `rust/tests/hlo_cross_validation.rs`
+//! enforces the equivalence through the PJRT runtime.
+
+pub mod baselines;
+pub mod bf16;
+pub mod companding;
+pub mod fp16;
+pub mod weight_split;
+
+pub use companding::GROUP;
+pub use weight_split::{Correction, Target};

@@ -1,0 +1,216 @@
+//! Algorithm 1 — ULP-normalized weight splitting, bit-exact Rust mirror
+//! of `python/compile/kernels/ref.py::split_compress/split_decompress`.
+//!
+//! The key observation (paper §3.1): under round-to-nearest the rounding
+//! error e = θ − θ′ always lies inside [−ULP(θ′)/2, ULP(θ′)/2], so its
+//! exponent is implied by θ′ and every exponent bit of a floating-point
+//! correction term is wasted.  We therefore rescale e by 2/ULP(θ′) into
+//! [−1, 1] and store a b-bit signed integer.
+//!
+//! Used by the checkpoint codec, the Figure-3 reconstruction sweep, and
+//! the cross-validation tests against the HLO kernels.
+
+use super::{bf16, fp16};
+
+/// Split target type.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Target {
+    Bf16,
+    Fp16,
+}
+
+/// Correction width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Correction {
+    Int8,  // N = 127   -> 24-bit effective master weights
+    Int16, // N = 32767 -> ~32-bit effective master weights
+}
+
+impl Correction {
+    #[inline]
+    pub fn n(self) -> i32 {
+        match self {
+            Correction::Int8 => 127,
+            Correction::Int16 => 32767,
+        }
+    }
+}
+
+/// Exact 2^k as f32 for k in [-149, 127] (bit-constructed, subnormal-safe).
+#[inline]
+pub fn pow2(k: i32) -> f32 {
+    if k >= -126 {
+        f32::from_bits(((k + 127) as u32) << 23)
+    } else {
+        let shift = (k + 149).clamp(0, 22) as u32;
+        f32::from_bits(1u32 << shift)
+    }
+}
+
+#[inline]
+fn downcast(theta: f32, target: Target) -> (u16, f32, i32) {
+    match target {
+        Target::Bf16 => {
+            let b = bf16::f32_to_bf16_bits(theta);
+            (b, bf16::bf16_bits_to_f32(b), bf16::ulp_exponent(b))
+        }
+        Target::Fp16 => {
+            let b = fp16::f32_to_f16_bits(theta);
+            (b, fp16::f16_bits_to_f32(b), fp16::ulp_exponent(b))
+        }
+    }
+}
+
+/// C(θ) → (θ′ bits, ρ).  ρ fits the chosen correction width.
+#[inline]
+pub fn compress(theta: f32, corr: Correction, target: Target) -> (u16, i32) {
+    let n = corr.n();
+    let (bits, tp, ulp_e) = downcast(theta, target);
+    let e = theta - tp; // exact: θ and θ′ within a factor of 2 (Sterbenz)
+    let ell = ulp_e - 1; // 2^ell = ULP/2
+    let h = (-ell).div_euclid(2); // floor(-ell/2)
+    let e_norm = (e * pow2(h)) * pow2(-ell - h);
+    let e_norm = e_norm.clamp(-1.0, 1.0);
+    let rho_f = (e_norm * n as f32).round_ties_even();
+    let rho = if rho_f.is_nan() {
+        0
+    } else {
+        (rho_f as i32).clamp(-n, n)
+    };
+    (bits, rho)
+}
+
+/// C⁻¹(θ′ bits, ρ) → θ̂.
+#[inline]
+pub fn decompress(bits: u16, rho: i32, corr: Correction,
+                  target: Target) -> f32 {
+    let n = corr.n();
+    let (tp, ulp_e) = match target {
+        Target::Bf16 => (bf16::bf16_bits_to_f32(bits),
+                         bf16::ulp_exponent(bits)),
+        Target::Fp16 => (fp16::f16_bits_to_f32(bits),
+                         fp16::ulp_exponent(bits)),
+    };
+    let ell = ulp_e - 1;
+    let h = ell.div_euclid(2); // floor(ell/2)
+    let e = ((rho as f32 / n as f32) * pow2(h)) * pow2(ell - h);
+    tp + e
+}
+
+/// Vectorized compress into preallocated buffers (hot path for
+/// checkpoints and state init).
+pub fn compress_slice(theta: &[f32], theta_p: &mut [u16], rho: &mut [i8]) {
+    debug_assert_eq!(theta.len(), theta_p.len());
+    debug_assert_eq!(theta.len(), rho.len());
+    for i in 0..theta.len() {
+        let (b, r) = compress(theta[i], Correction::Int8, Target::Bf16);
+        theta_p[i] = b;
+        rho[i] = r as i8;
+    }
+}
+
+/// Vectorized decompress.
+pub fn decompress_slice(theta_p: &[u16], rho: &[i8], out: &mut [f32]) {
+    debug_assert_eq!(theta_p.len(), rho.len());
+    debug_assert_eq!(theta_p.len(), out.len());
+    for i in 0..theta_p.len() {
+        out[i] = decompress(theta_p[i], rho[i] as i32, Correction::Int8,
+                            Target::Bf16);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_float(rng: &mut Rng) -> f32 {
+        let mag = (rng.f32() * 40.0 - 30.0).exp2();
+        let sign = if rng.f32() < 0.5 { -1.0 } else { 1.0 };
+        sign * mag * (0.5 + rng.f32())
+    }
+
+    #[test]
+    fn roundtrip_error_bound_i8() {
+        let mut rng = Rng::new(7);
+        for _ in 0..200_000 {
+            let x = rand_float(&mut rng);
+            let (b, r) = compress(x, Correction::Int8, Target::Bf16);
+            let y = decompress(b, r, Correction::Int8, Target::Bf16);
+            let ulp = 2f64.powi(bf16::ulp_exponent(b));
+            let bound = ulp / 2.0 * (0.5 / 127.0) * 1.001 + 1e-45;
+            assert!(((y - x) as f64).abs() <= bound, "x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bound_i16() {
+        let mut rng = Rng::new(8);
+        let mut exact = 0u32;
+        let total = 100_000u32;
+        for _ in 0..total {
+            let x = rand_float(&mut rng);
+            let (b, r) = compress(x, Correction::Int16, Target::Bf16);
+            let y = decompress(b, r, Correction::Int16, Target::Bf16);
+            if x.to_bits() == y.to_bits() {
+                exact += 1;
+            }
+        }
+        // paper §4.4: bitwise-perfect reconstruction in ~99.92% of values
+        assert!(exact as f64 / total as f64 > 0.99, "{exact}/{total}");
+    }
+
+    #[test]
+    fn zero_and_special() {
+        assert_eq!(compress(0.0, Correction::Int8, Target::Bf16), (0, 0));
+        let (b, r) = compress(f32::INFINITY, Correction::Int8, Target::Bf16);
+        assert_eq!(decompress(b, r, Correction::Int8, Target::Bf16),
+                   f32::INFINITY);
+        let (b, _) = compress(f32::NAN, Correction::Int8, Target::Bf16);
+        assert!(bf16::bf16_bits_to_f32(b).is_nan());
+    }
+
+    #[test]
+    fn fp16_target_normal_range_i16_exact_ish() {
+        // paper Fig 3 bottom: our 32-bit FP16 format perfectly
+        // reconstructs the normal range
+        let mut rng = Rng::new(9);
+        for _ in 0..50_000 {
+            let x = f32::from_bits(
+                (rng.u64() as u32 & 0x007F_FFFF) | 0x3C00_0000); // ~[2^-7,2^-6)
+            let (b, r) = compress(x, Correction::Int16, Target::Fp16);
+            let y = decompress(b, r, Correction::Int16, Target::Fp16);
+            let rel = ((y - x) / x).abs();
+            assert!(rel < 2e-7, "x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn subnormal_f32_inputs() {
+        for i in [1u32, 2, 3, 100, 0x7F_FFFF] {
+            let x = f32::from_bits(i);
+            let (b, r) = compress(x, Correction::Int8, Target::Bf16);
+            let y = decompress(b, r, Correction::Int8, Target::Bf16);
+            // bound: bf16 subnormal ULP = 2^-133 -> err <= 2^-134/127
+            assert!((y - x).abs() <= 2f32.powi(-134) / 100.0, "{i}");
+        }
+    }
+
+    #[test]
+    fn slice_roundtrip_matches_scalar() {
+        let mut rng = Rng::new(10);
+        let theta: Vec<f32> = (0..1024).map(|_| rand_float(&mut rng)).collect();
+        let mut tp = vec![0u16; 1024];
+        let mut rho = vec![0i8; 1024];
+        compress_slice(&theta, &mut tp, &mut rho);
+        let mut out = vec![0f32; 1024];
+        decompress_slice(&tp, &rho, &mut out);
+        for i in 0..1024 {
+            let (b, r) = compress(theta[i], Correction::Int8, Target::Bf16);
+            assert_eq!(tp[i], b);
+            assert_eq!(rho[i] as i32, r);
+            assert_eq!(out[i],
+                       decompress(b, r, Correction::Int8, Target::Bf16));
+        }
+    }
+}

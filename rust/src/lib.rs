@@ -1,0 +1,37 @@
+//! # FlashTrain
+//!
+//! A reproduction of *FlashOptim: Optimizers for Memory-Efficient
+//! Training* (Gonzalez Ortiz, Gupta, Blalock, Renard; 2026) as a
+//! three-layer Rust + JAX + Pallas training framework:
+//!
+//! * **Layer 1** (`python/compile/kernels/`) — Pallas kernels for the
+//!   paper's two techniques: ULP-normalized weight splitting
+//!   (Algorithm 1) and companded 8-bit optimizer-state quantization
+//!   (Algorithms 2/3), fused into single optimizer-step kernels
+//!   (Algorithms 4/5/6).
+//! * **Layer 2** (`python/compile/`) — JAX transformer / MLP training
+//!   graphs over flat parameter buffers, AOT-lowered to HLO text.
+//! * **Layer 3** (this crate) — the coordinator: PJRT runtime, bucketed
+//!   optimizer with gradient release, data-parallel simulation, memory
+//!   accounting, compact checkpoints, synthetic workloads, and the
+//!   bench harness that regenerates every table and figure of the
+//!   paper's evaluation.
+//!
+//! Python runs once at `make artifacts`; the request path is pure Rust.
+//!
+//! ## Quick start
+//!
+//! ```bash
+//! make artifacts && cargo build --release
+//! cargo run --release --example quickstart
+//! ```
+
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod formats;
+pub mod memory;
+pub mod optim;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,151 @@
+//! Live-buffer tracker: every training-loop allocation is registered
+//! here so the measured footprint can be compared against the analytic
+//! model (the paper measures torch.cuda peak stats; we track our own
+//! host buffers and PJRT literal sizes exactly).
+
+use std::collections::BTreeMap;
+
+/// Category of a tracked buffer (Figure-1 bar segments).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Category {
+    Params,
+    OptimState,
+    Gradients,
+    Activations,
+    Transient,
+}
+
+impl Category {
+    pub fn name(self) -> &'static str {
+        match self {
+            Category::Params => "params",
+            Category::OptimState => "optim",
+            Category::Gradients => "grads",
+            Category::Activations => "activations",
+            Category::Transient => "transient",
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct Tracker {
+    live: BTreeMap<(Category, String), u64>,
+    current: u64,
+    peak: u64,
+    /// per-category peak of the category's own live total
+    peak_by_cat: BTreeMap<Category, u64>,
+}
+
+impl Tracker {
+    pub fn new() -> Tracker {
+        Tracker::default()
+    }
+
+    /// Register `bytes` live under (cat, name); replaces an existing
+    /// entry with the same key.
+    pub fn alloc(&mut self, cat: Category, name: &str, bytes: u64) {
+        let key = (cat, name.to_string());
+        if let Some(old) = self.live.insert(key, bytes) {
+            self.current = self.current - old + bytes;
+        } else {
+            self.current += bytes;
+        }
+        self.peak = self.peak.max(self.current);
+        let cat_total = self.category_live(cat);
+        let e = self.peak_by_cat.entry(cat).or_insert(0);
+        *e = (*e).max(cat_total);
+    }
+
+    pub fn free(&mut self, cat: Category, name: &str) {
+        if let Some(old) = self.live.remove(&(cat, name.to_string())) {
+            self.current -= old;
+        }
+    }
+
+    pub fn current_bytes(&self) -> u64 {
+        self.current
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn category_live(&self, cat: Category) -> u64 {
+        self.live
+            .iter()
+            .filter(|((c, _), _)| *c == cat)
+            .map(|(_, b)| *b)
+            .sum()
+    }
+
+    pub fn category_peak(&self, cat: Category) -> u64 {
+        self.peak_by_cat.get(&cat).copied().unwrap_or(0)
+    }
+
+    pub fn reset_peak(&mut self) {
+        self.peak = self.current;
+        self.peak_by_cat.clear();
+        let cats: Vec<Category> = self
+            .live
+            .keys()
+            .map(|(c, _)| *c)
+            .collect();
+        for c in cats {
+            let t = self.category_live(c);
+            self.peak_by_cat.insert(c, t);
+        }
+    }
+
+    pub fn summary(&self) -> Vec<(Category, u64)> {
+        [Category::Params, Category::OptimState, Category::Gradients,
+         Category::Activations, Category::Transient]
+            .iter()
+            .map(|&c| (c, self.category_peak(c).max(self.category_live(c))))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_peak() {
+        let mut t = Tracker::new();
+        t.alloc(Category::Params, "theta", 100);
+        t.alloc(Category::Gradients, "g", 50);
+        assert_eq!(t.current_bytes(), 150);
+        t.free(Category::Gradients, "g");
+        assert_eq!(t.current_bytes(), 100);
+        assert_eq!(t.peak_bytes(), 150);
+    }
+
+    #[test]
+    fn replace_same_key() {
+        let mut t = Tracker::new();
+        t.alloc(Category::Params, "x", 10);
+        t.alloc(Category::Params, "x", 30);
+        assert_eq!(t.current_bytes(), 30);
+        assert_eq!(t.category_live(Category::Params), 30);
+    }
+
+    #[test]
+    fn category_peaks() {
+        let mut t = Tracker::new();
+        t.alloc(Category::Gradients, "g0", 64);
+        t.alloc(Category::Gradients, "g1", 64);
+        t.free(Category::Gradients, "g0");
+        t.free(Category::Gradients, "g1");
+        assert_eq!(t.category_peak(Category::Gradients), 128);
+        assert_eq!(t.category_live(Category::Gradients), 0);
+    }
+
+    #[test]
+    fn double_free_harmless() {
+        let mut t = Tracker::new();
+        t.alloc(Category::Transient, "tmp", 8);
+        t.free(Category::Transient, "tmp");
+        t.free(Category::Transient, "tmp");
+        assert_eq!(t.current_bytes(), 0);
+    }
+}

@@ -1,0 +1,94 @@
+//! Hyperparameter vector passed to the AOT optimizer-step executables.
+//!
+//! Layout (must mirror python/compile/kernels/fused_steps.py and the
+//! manifest's `hyp_layout`):
+//!   [lr, beta1, beta2, eps, wd, bc1, bc2, pad]
+//! where bc1 = 1/(1-beta1^t), bc2 = 1/(1-beta2^t) are Adam's bias
+//! corrections, computed host-side for numerical cleanliness.
+
+use crate::config::{OptKind, TrainConfig};
+
+pub const NHYP: usize = 8;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hyper {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub wd: f32,
+    pub bc1: f32,
+    pub bc2: f32,
+}
+
+impl Hyper {
+    /// Build the hyper vector for optimizer step `t` (1-based).
+    pub fn for_step(cfg: &TrainConfig, lr: f64, t: usize) -> Hyper {
+        let (bc1, bc2) = match cfg.optimizer {
+            OptKind::AdamW => {
+                let b1t = cfg.beta1.powi(t as i32);
+                let b2t = cfg.beta2.powi(t as i32);
+                ((1.0 / (1.0 - b1t)) as f32, (1.0 / (1.0 - b2t)) as f32)
+            }
+            _ => (1.0, 1.0),
+        };
+        Hyper {
+            lr: lr as f32,
+            beta1: cfg.beta1 as f32,
+            beta2: cfg.beta2 as f32,
+            eps: cfg.eps as f32,
+            wd: cfg.weight_decay as f32,
+            bc1,
+            bc2,
+        }
+    }
+
+    pub fn to_vec8(self) -> [f32; NHYP] {
+        [self.lr, self.beta1, self.beta2, self.eps, self.wd, self.bc1,
+         self.bc2, 0.0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Variant;
+
+    #[test]
+    fn bias_correction_decays() {
+        let cfg = TrainConfig {
+            optimizer: OptKind::AdamW,
+            variant: Variant::Flash,
+            beta1: 0.9,
+            beta2: 0.999,
+            ..Default::default()
+        };
+        let h1 = Hyper::for_step(&cfg, 1e-3, 1);
+        let h1000 = Hyper::for_step(&cfg, 1e-3, 1000);
+        assert!((h1.bc1 - 10.0).abs() < 1e-4); // 1/(1-0.9)
+        assert!((h1000.bc1 - 1.0).abs() < 1e-4);
+        assert!(h1.bc2 > h1000.bc2);
+    }
+
+    #[test]
+    fn sgd_has_unit_bias_correction() {
+        let cfg = TrainConfig {
+            optimizer: OptKind::Sgd,
+            ..Default::default()
+        };
+        let h = Hyper::for_step(&cfg, 0.1, 1);
+        assert_eq!(h.bc1, 1.0);
+        assert_eq!(h.bc2, 1.0);
+    }
+
+    #[test]
+    fn vec8_layout() {
+        let cfg = TrainConfig::default();
+        let h = Hyper::for_step(&cfg, 0.5, 3);
+        let v = h.to_vec8();
+        assert_eq!(v[0], 0.5);
+        assert_eq!(v[1], h.beta1);
+        assert_eq!(v[4], h.wd);
+        assert_eq!(v[7], 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Optimizer layer: compact state buffers, hyperparameter plumbing, the
+//! bucketed executor over AOT step artifacts, and a pure-Rust scalar
+//! mirror of every update rule for cross-validation.
+
+pub mod hyper;
+pub mod optimizer;
+pub mod scalar_ref;
+pub mod state;
+
+pub use hyper::{Hyper, NHYP};
+pub use optimizer::{artifact_name, BucketOptimizer};
+pub use state::State;

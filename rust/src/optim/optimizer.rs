@@ -1,0 +1,278 @@
+//! Bucketed optimizer: streams gradient buckets through the fused AOT
+//! step executable and writes updated state back into the compact
+//! host buffers.
+//!
+//! This is the Layer-3 face of the paper's contribution: one compiled
+//! artifact per (optimizer, variant, bucket-size); the coordinator
+//! slices the flat gradient into buckets and steps them one at a time,
+//! which is what makes gradient release (freeing each bucket's gradient
+//! right after its update) possible.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::config::{OptKind, Variant};
+use crate::formats::{bf16, GROUP};
+use crate::optim::hyper::Hyper;
+use crate::optim::state::State;
+use crate::runtime::literal as lit;
+use crate::runtime::{Executable, Manifest, Runtime};
+
+/// Logical artifact name for an (optimizer, variant) pair.
+pub fn artifact_name(kind: OptKind, variant: Variant)
+                     -> Result<&'static str> {
+    Ok(match (kind, variant) {
+        (OptKind::AdamW, Variant::Reference) => "opt_adamw_ref",
+        (OptKind::AdamW, Variant::Flash) => "opt_adamw_flash",
+        (OptKind::AdamW, Variant::WeightSplit) => "opt_adamw_wsplit",
+        (OptKind::AdamW, Variant::OptQuant) => "opt_adamw_quant",
+        (OptKind::AdamW, Variant::NoCompand) => "opt_adamw_nocompand",
+        (OptKind::Sgd, Variant::Reference) => "opt_sgd_ref",
+        (OptKind::Sgd, Variant::Flash) => "opt_sgd_flash",
+        (OptKind::Lion, Variant::Reference) => "opt_lion_ref",
+        (OptKind::Lion, Variant::Flash) => "opt_lion_flash",
+        (kind, variant) => bail!(
+            "no artifact for optimizer {kind} with variant {variant}; \
+             ablation variants exist for adamw only"
+        ),
+    })
+}
+
+pub struct BucketOptimizer {
+    pub kind: OptKind,
+    pub variant: Variant,
+    pub bucket: usize,
+    pub n_buckets: usize,
+    pub state: State,
+    exe: Rc<Executable>,
+    /// scratch for bf16 gradient bits (reused across buckets)
+    g_bits: Vec<u16>,
+}
+
+impl BucketOptimizer {
+    /// Build from an initial full-precision parameter vector.
+    pub fn new(rt: &Runtime, manifest: &Manifest, kind: OptKind,
+               variant: Variant, bucket: usize, theta0: &[f32])
+               -> Result<BucketOptimizer> {
+        let n_buckets = theta0.len().div_ceil(bucket).max(1);
+        let padded = n_buckets * bucket;
+        let name = artifact_name(kind, variant)?;
+        let exe = rt.load(&manifest.bucket_artifact(bucket, name)?)?;
+        let state = State::init(theta0, padded, kind, variant);
+        Ok(BucketOptimizer {
+            kind,
+            variant,
+            bucket,
+            n_buckets,
+            state,
+            exe,
+            g_bits: vec![0u16; bucket],
+        })
+    }
+
+    /// Apply one optimizer step to bucket `i` given its gradient slice
+    /// (f32 values; rounded to bf16 for split variants, matching the
+    /// gradient dtype of the artifact).
+    pub fn step_bucket(&mut self, i: usize, g: &[f32], h: &Hyper)
+                       -> Result<()> {
+        assert!(i < self.n_buckets);
+        assert_eq!(g.len(), self.bucket);
+        let b = self.bucket;
+        let gsz = b / GROUP;
+        let (lo, hi) = (i * b, (i + 1) * b);
+        let (slo, shi) = (i * gsz, (i + 1) * gsz);
+        let hyp_lit = lit::lit_f32(&h.to_vec8(), &[8])?;
+
+        let g_lit = if self.variant.splits_weights() {
+            for (dst, &src) in self.g_bits.iter_mut().zip(g) {
+                *dst = bf16::f32_to_bf16_bits(src);
+            }
+            lit::lit_bf16_bits(&self.g_bits, &[b])?
+        } else {
+            lit::lit_f32(g, &[b])?
+        };
+
+        match (self.kind, self.variant) {
+            (OptKind::AdamW, Variant::Flash)
+            | (OptKind::AdamW, Variant::NoCompand) => {
+                let st = &mut self.state;
+                let ins = [
+                    hyp_lit,
+                    lit::lit_bf16_bits(&st.theta_p.as_ref().unwrap()[lo..hi],
+                                       &[b])?,
+                    lit::lit_i8(&st.rho.as_ref().unwrap()[lo..hi], &[b])?,
+                    lit::lit_i8(&st.mq.as_ref().unwrap()[lo..hi], &[b])?,
+                    lit::lit_f16_bits(&st.ms.as_ref().unwrap()[slo..shi],
+                                      &[gsz])?,
+                    lit::lit_u8(&st.vq.as_ref().unwrap()[lo..hi], &[b])?,
+                    lit::lit_f16_bits(&st.vs.as_ref().unwrap()[slo..shi],
+                                      &[gsz])?,
+                    g_lit,
+                ];
+                let out = self.exe.run(&ins)?;
+                st.theta_p.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_bf16_bits(&out[0])?);
+                st.rho.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_i8_vec(&out[1])?);
+                st.mq.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_i8_vec(&out[2])?);
+                st.ms.as_mut().unwrap()[slo..shi]
+                    .copy_from_slice(&lit::to_f16_bits(&out[3])?);
+                st.vq.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_u8_vec(&out[4])?);
+                st.vs.as_mut().unwrap()[slo..shi]
+                    .copy_from_slice(&lit::to_f16_bits(&out[5])?);
+            }
+            (OptKind::Sgd, Variant::Flash)
+            | (OptKind::Lion, Variant::Flash) => {
+                let st = &mut self.state;
+                let ins = [
+                    hyp_lit,
+                    lit::lit_bf16_bits(&st.theta_p.as_ref().unwrap()[lo..hi],
+                                       &[b])?,
+                    lit::lit_i8(&st.rho.as_ref().unwrap()[lo..hi], &[b])?,
+                    lit::lit_i8(&st.mq.as_ref().unwrap()[lo..hi], &[b])?,
+                    lit::lit_f16_bits(&st.ms.as_ref().unwrap()[slo..shi],
+                                      &[gsz])?,
+                    g_lit,
+                ];
+                let out = self.exe.run(&ins)?;
+                st.theta_p.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_bf16_bits(&out[0])?);
+                st.rho.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_i8_vec(&out[1])?);
+                st.mq.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_i8_vec(&out[2])?);
+                st.ms.as_mut().unwrap()[slo..shi]
+                    .copy_from_slice(&lit::to_f16_bits(&out[3])?);
+            }
+            (OptKind::AdamW, Variant::WeightSplit) => {
+                let st = &mut self.state;
+                let ins = [
+                    hyp_lit,
+                    lit::lit_bf16_bits(&st.theta_p.as_ref().unwrap()[lo..hi],
+                                       &[b])?,
+                    lit::lit_i8(&st.rho.as_ref().unwrap()[lo..hi], &[b])?,
+                    lit::lit_f32(&st.m.as_ref().unwrap()[lo..hi], &[b])?,
+                    lit::lit_f32(&st.v.as_ref().unwrap()[lo..hi], &[b])?,
+                    g_lit,
+                ];
+                let out = self.exe.run(&ins)?;
+                st.theta_p.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_bf16_bits(&out[0])?);
+                st.rho.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_i8_vec(&out[1])?);
+                st.m.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_f32_vec(&out[2])?);
+                st.v.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_f32_vec(&out[3])?);
+            }
+            (OptKind::AdamW, Variant::OptQuant) => {
+                let st = &mut self.state;
+                let ins = [
+                    hyp_lit,
+                    lit::lit_f32(&st.theta.as_ref().unwrap()[lo..hi], &[b])?,
+                    lit::lit_i8(&st.mq.as_ref().unwrap()[lo..hi], &[b])?,
+                    lit::lit_f16_bits(&st.ms.as_ref().unwrap()[slo..shi],
+                                      &[gsz])?,
+                    lit::lit_u8(&st.vq.as_ref().unwrap()[lo..hi], &[b])?,
+                    lit::lit_f16_bits(&st.vs.as_ref().unwrap()[slo..shi],
+                                      &[gsz])?,
+                    g_lit,
+                ];
+                let out = self.exe.run(&ins)?;
+                st.theta.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_f32_vec(&out[0])?);
+                st.mq.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_i8_vec(&out[1])?);
+                st.ms.as_mut().unwrap()[slo..shi]
+                    .copy_from_slice(&lit::to_f16_bits(&out[2])?);
+                st.vq.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_u8_vec(&out[3])?);
+                st.vs.as_mut().unwrap()[slo..shi]
+                    .copy_from_slice(&lit::to_f16_bits(&out[4])?);
+            }
+            (OptKind::AdamW, Variant::Reference) => {
+                let st = &mut self.state;
+                let ins = [
+                    hyp_lit,
+                    lit::lit_f32(&st.theta.as_ref().unwrap()[lo..hi], &[b])?,
+                    lit::lit_f32(&st.m.as_ref().unwrap()[lo..hi], &[b])?,
+                    lit::lit_f32(&st.v.as_ref().unwrap()[lo..hi], &[b])?,
+                    g_lit,
+                ];
+                let out = self.exe.run(&ins)?;
+                st.theta.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_f32_vec(&out[0])?);
+                st.m.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_f32_vec(&out[1])?);
+                st.v.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_f32_vec(&out[2])?);
+            }
+            (OptKind::Sgd, Variant::Reference)
+            | (OptKind::Lion, Variant::Reference) => {
+                let st = &mut self.state;
+                let ins = [
+                    hyp_lit,
+                    lit::lit_f32(&st.theta.as_ref().unwrap()[lo..hi], &[b])?,
+                    lit::lit_f32(&st.m.as_ref().unwrap()[lo..hi], &[b])?,
+                    g_lit,
+                ];
+                let out = self.exe.run(&ins)?;
+                st.theta.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_f32_vec(&out[0])?);
+                st.m.as_mut().unwrap()[lo..hi]
+                    .copy_from_slice(&lit::to_f32_vec(&out[1])?);
+            }
+            (kind, variant) => {
+                bail!("unsupported optimizer/variant: {kind}/{variant}")
+            }
+        }
+        Ok(())
+    }
+
+    /// Step every bucket of a flat gradient (padded with zeros).
+    /// `on_bucket_done(i)` fires after each bucket — the gradient-release
+    /// hook (the coordinator frees that bucket's gradient there).
+    pub fn step_all<F: FnMut(usize)>(&mut self, grads: &[f32], h: &Hyper,
+                                     mut on_bucket_done: F) -> Result<()> {
+        let b = self.bucket;
+        let mut padded_tail: Vec<f32>;
+        for i in 0..self.n_buckets {
+            let lo = i * b;
+            let hi = ((i + 1) * b).min(grads.len());
+            let slice: &[f32] = if hi - lo == b {
+                &grads[lo..hi]
+            } else {
+                padded_tail = vec![0f32; b];
+                padded_tail[..hi.saturating_sub(lo)]
+                    .copy_from_slice(&grads[lo..hi]);
+                &padded_tail
+            };
+            self.step_bucket(i, slice, h)?;
+            on_bucket_done(i);
+        }
+        Ok(())
+    }
+
+    /// Current compute weights (what fwd/bwd consumes): bf16 bits for
+    /// split variants, else a bf16 downcast of the fp32 master.
+    pub fn compute_weights_bf16(&self, count: usize) -> Vec<u16> {
+        if let Some(tp) = &self.state.theta_p {
+            tp[..count].to_vec()
+        } else {
+            self.state.theta.as_ref().unwrap()[..count]
+                .iter()
+                .map(|&x| bf16::f32_to_bf16_bits(x))
+                .collect()
+        }
+    }
+
+    /// fp32 master weights (first `count` entries).
+    pub fn master_weights(&self, count: usize) -> Vec<f32> {
+        let mut w = self.state.master_weights();
+        w.truncate(count);
+        w
+    }
+}

@@ -1,0 +1,218 @@
+//! Pure-Rust scalar mirror of every optimizer update rule.
+//!
+//! Third implementation of the same semantics (after ref.py and the
+//! Pallas kernels) — used to cross-validate the HLO executables from
+//! Rust without Python in the loop, and as the engine for trajectory
+//! capture in the Figure-4 NMSE bench.
+
+use crate::config::{OptKind, Variant};
+use crate::formats::{companding, weight_split};
+use crate::optim::hyper::Hyper;
+use crate::optim::state::State;
+
+/// fp32 AdamW step on slices (the paper's Algorithm 4 inner update).
+pub fn adamw_f32(theta: &mut [f32], m: &mut [f32], v: &mut [f32],
+                 g: &[f32], h: &Hyper) {
+    for i in 0..theta.len() {
+        let gi = g[i];
+        m[i] = h.beta1 * m[i] + (1.0 - h.beta1) * gi;
+        v[i] = h.beta2 * v[i] + (1.0 - h.beta2) * gi * gi;
+        let m_hat = m[i] * h.bc1;
+        let v_hat = v[i] * h.bc2;
+        theta[i] -= h.lr * (m_hat / (v_hat.sqrt() + h.eps)
+                            + h.wd * theta[i]);
+    }
+}
+
+/// fp32 SGD-with-momentum step (Algorithm 5 semantics).
+pub fn sgd_f32(theta: &mut [f32], m: &mut [f32], g: &[f32], h: &Hyper) {
+    for i in 0..theta.len() {
+        m[i] = h.beta1 * m[i] + g[i];
+        theta[i] -= h.lr * (m[i] + h.wd * theta[i]);
+    }
+}
+
+/// fp32 Lion step (Algorithm 6 semantics).
+pub fn lion_f32(theta: &mut [f32], m: &mut [f32], g: &[f32], h: &Hyper) {
+    for i in 0..theta.len() {
+        let c = h.beta1 * m[i] + (1.0 - h.beta1) * g[i];
+        let u = if c > 0.0 {
+            1.0
+        } else if c < 0.0 {
+            -1.0
+        } else {
+            0.0
+        };
+        m[i] = h.beta2 * m[i] + (1.0 - h.beta2) * g[i];
+        theta[i] -= h.lr * (u + h.wd * theta[i]);
+    }
+}
+
+/// One full flash/ablation step on a State (dequant -> update ->
+/// requant), entirely in Rust.  `g` must already be in the gradient
+/// dtype semantics of the variant (bf16-rounded for flash tracks).
+pub fn step_state(state: &mut State, g: &[f32], opt: OptKind,
+                  variant: Variant, h: &Hyper) {
+    assert_eq!(g.len(), state.n);
+    let nocompand = variant == Variant::NoCompand;
+
+    // prologue: reconstruct fp32 views
+    let mut theta = state.master_weights();
+    let mut m = state
+        .momentum_f32(nocompand)
+        .expect("state missing momentum");
+    let mut v = if opt.has_variance() {
+        state.variance_f32(nocompand).expect("state missing variance")
+    } else {
+        Vec::new()
+    };
+
+    // update
+    match opt {
+        OptKind::AdamW => adamw_f32(&mut theta, &mut m, &mut v, g, h),
+        OptKind::Sgd => sgd_f32(&mut theta, &mut m, g, h),
+        OptKind::Lion => lion_f32(&mut theta, &mut m, g, h),
+    }
+
+    // epilogue: restore storage formats
+    if variant.splits_weights() {
+        weight_split::compress_slice(
+            &theta,
+            state.theta_p.as_mut().unwrap(),
+            state.rho.as_mut().unwrap(),
+        );
+    } else {
+        state.theta = Some(theta);
+    }
+    if variant.quantizes_state() {
+        let (mq, ms) = (state.mq.as_mut().unwrap(),
+                        state.ms.as_mut().unwrap());
+        if nocompand {
+            companding::quant_momentum_linear(&m, mq, ms);
+        } else {
+            companding::quant_momentum(&m, mq, ms);
+        }
+        if opt.has_variance() {
+            let (vq, vs) = (state.vq.as_mut().unwrap(),
+                            state.vs.as_mut().unwrap());
+            if nocompand {
+                companding::quant_variance_linear(&v, vq, vs);
+            } else {
+                companding::quant_variance(&v, vq, vs);
+            }
+        }
+    } else {
+        state.m = Some(m);
+        if opt.has_variance() {
+            state.v = Some(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::formats::GROUP;
+    use crate::util::rng::Rng;
+
+    fn hyp(t: usize) -> Hyper {
+        let cfg = TrainConfig::default();
+        Hyper::for_step(&cfg, 1e-3, t)
+    }
+
+    fn randn(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * s).collect()
+    }
+
+    #[test]
+    fn adamw_moves_against_gradient() {
+        let mut theta = vec![1.0f32; GROUP];
+        let mut m = vec![0f32; GROUP];
+        let mut v = vec![0f32; GROUP];
+        let g = vec![1.0f32; GROUP];
+        adamw_f32(&mut theta, &mut m, &mut v, &g, &hyp(1));
+        assert!(theta.iter().all(|&t| t < 1.0));
+    }
+
+    #[test]
+    fn lion_update_is_sign_bounded() {
+        let mut rng = Rng::new(1);
+        let mut theta = randn(&mut rng, 64, 0.1);
+        let before = theta.clone();
+        let mut m = randn(&mut rng, 64, 0.01);
+        let g = randn(&mut rng, 64, 0.01);
+        let mut h = hyp(1);
+        h.wd = 0.0;
+        h.lr = 2e-4;
+        lion_f32(&mut theta, &mut m, &g, &h);
+        for (a, b) in theta.iter().zip(&before) {
+            // lr plus one f32 rounding of theta at ~0.1 magnitude
+            assert!((a - b).abs() <= 2e-4 + 1e-7);
+        }
+    }
+
+    #[test]
+    fn flash_step_tracks_f32_step() {
+        let mut rng = Rng::new(2);
+        let n = 40 * GROUP;
+        let theta0 = randn(&mut rng, n, 0.1);
+        let mut flash = State::init(&theta0, n, OptKind::AdamW,
+                                    Variant::Flash);
+        let mut t32 = theta0.clone();
+        let mut m32 = vec![0f32; n];
+        let mut v32 = vec![0f32; n];
+        for t in 1..=30 {
+            let g: Vec<f32> = randn(&mut rng, n, 0.01)
+                .iter()
+                .map(|&x| crate::formats::bf16::round_f32_to_bf16(x))
+                .collect();
+            let h = hyp(t);
+            step_state(&mut flash, &g, OptKind::AdamW, Variant::Flash, &h);
+            adamw_f32(&mut t32, &mut m32, &mut v32, &g, &h);
+        }
+        let back = flash.master_weights();
+        let mut drifts: Vec<f64> = back
+            .iter()
+            .zip(&t32)
+            .map(|(a, b)| ((a - b).abs() / (b.abs() + 1e-3)) as f64)
+            .collect();
+        drifts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = drifts[drifts.len() / 2];
+        assert!(med < 0.05, "median drift {med}");
+    }
+
+    #[test]
+    fn all_variants_step_without_panicking() {
+        let mut rng = Rng::new(3);
+        let n = 4 * GROUP;
+        let theta0 = randn(&mut rng, n, 0.1);
+        let g = randn(&mut rng, n, 0.01);
+        for opt in [OptKind::Sgd, OptKind::AdamW, OptKind::Lion] {
+            for variant in [Variant::Reference, Variant::Flash,
+                            Variant::WeightSplit, Variant::OptQuant,
+                            Variant::NoCompand] {
+                let mut st = State::init(&theta0, n, opt, variant);
+                step_state(&mut st, &g, opt, variant, &hyp(1));
+                st.validate().unwrap();
+                let w = st.master_weights();
+                assert!(w.iter().all(|x| x.is_finite()));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_gradient_weight_decay_only() {
+        let n = GROUP;
+        let theta0 = vec![1.0f32; n];
+        let mut st = State::init(&theta0, n, OptKind::AdamW,
+                                 Variant::Reference);
+        let g = vec![0f32; n];
+        let h = hyp(1);
+        step_state(&mut st, &g, OptKind::AdamW, Variant::Reference, &h);
+        let w = st.master_weights();
+        // theta <- theta - lr*wd*theta
+        let expect = 1.0 - h.lr * h.wd;
+        assert!((w[0] - expect).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,303 @@
+//! Training state buffers in their *actual* storage dtypes.
+//!
+//! The point of the paper is byte-level memory accounting, so the Rust
+//! coordinator stores exactly what a real deployment would: bf16 bits
+//! for θ′, i8 for ρ and quantized momentum, u8 for quantized variance,
+//! f16 bits for group scales, f32 only where the variant calls for it.
+
+use crate::config::{OptKind, Variant};
+use crate::formats::{companding, weight_split, GROUP};
+use crate::memory::tracker::{Category, Tracker};
+
+/// All optional buffers; which are present depends on (opt, variant).
+#[derive(Clone, Debug, Default)]
+pub struct State {
+    /// padded length (multiple of the bucket size)
+    pub n: usize,
+    pub theta: Option<Vec<f32>>,
+    pub theta_p: Option<Vec<u16>>,
+    pub rho: Option<Vec<i8>>,
+    pub m: Option<Vec<f32>>,
+    pub v: Option<Vec<f32>>,
+    pub mq: Option<Vec<i8>>,
+    /// f16 bits, one per GROUP elements
+    pub ms: Option<Vec<u16>>,
+    pub vq: Option<Vec<u8>>,
+    pub vs: Option<Vec<u16>>,
+}
+
+impl State {
+    pub fn empty(n: usize) -> State {
+        State { n, ..Default::default() }
+    }
+
+    /// Initialize from full-precision parameters (padded with zeros up
+    /// to `n`).  Optimizer states start at zero, stored in the variant's
+    /// format (quantized zero is exactly zero).
+    pub fn init(theta0: &[f32], n: usize, opt: OptKind,
+                variant: Variant) -> State {
+        assert!(theta0.len() <= n);
+        assert_eq!(n % GROUP, 0, "padded length must be group-aligned");
+        let mut theta = vec![0f32; n];
+        theta[..theta0.len()].copy_from_slice(theta0);
+        let mut st = State::empty(n);
+        let zeros = vec![0f32; n];
+
+        if variant.splits_weights() {
+            let mut tp = vec![0u16; n];
+            let mut rho = vec![0i8; n];
+            weight_split::compress_slice(&theta, &mut tp, &mut rho);
+            st.theta_p = Some(tp);
+            st.rho = Some(rho);
+        } else {
+            st.theta = Some(theta);
+        }
+
+        if variant.quantizes_state() {
+            let mut mq = vec![0i8; n];
+            let mut ms = vec![0u16; n / GROUP];
+            if variant == Variant::NoCompand {
+                companding::quant_momentum_linear(&zeros, &mut mq, &mut ms);
+            } else {
+                companding::quant_momentum(&zeros, &mut mq, &mut ms);
+            }
+            st.mq = Some(mq);
+            st.ms = Some(ms);
+            if opt.has_variance() {
+                let mut vq = vec![0u8; n];
+                let mut vs = vec![0u16; n / GROUP];
+                if variant == Variant::NoCompand {
+                    companding::quant_variance_linear(&zeros, &mut vq,
+                                                      &mut vs);
+                } else {
+                    companding::quant_variance(&zeros, &mut vq, &mut vs);
+                }
+                st.vq = Some(vq);
+                st.vs = Some(vs);
+            }
+        } else {
+            st.m = Some(zeros.clone());
+            if opt.has_variance() {
+                st.v = Some(zeros);
+            }
+        }
+        st
+    }
+
+    /// Reconstruct full-precision master weights (for eval in the ref
+    /// domain, checkpoint conversion, and drift measurements).
+    pub fn master_weights(&self) -> Vec<f32> {
+        if let Some(theta) = &self.theta {
+            return theta.clone();
+        }
+        let tp = self.theta_p.as_ref().expect("state has no weights");
+        let rho = self.rho.as_ref().expect("split state missing rho");
+        let mut out = vec![0f32; self.n];
+        weight_split::decompress_slice(tp, rho, &mut out);
+        out
+    }
+
+    /// Dequantized momentum (for Fig-4 style measurements).
+    pub fn momentum_f32(&self, nocompand: bool) -> Option<Vec<f32>> {
+        if let Some(m) = &self.m {
+            return Some(m.clone());
+        }
+        let (mq, ms) = (self.mq.as_ref()?, self.ms.as_ref()?);
+        let mut out = vec![0f32; self.n];
+        if nocompand {
+            companding::dequant_momentum_linear(mq, ms, &mut out);
+        } else {
+            companding::dequant_momentum(mq, ms, &mut out);
+        }
+        Some(out)
+    }
+
+    /// Dequantized variance.
+    pub fn variance_f32(&self, nocompand: bool) -> Option<Vec<f32>> {
+        if let Some(v) = &self.v {
+            return Some(v.clone());
+        }
+        let (vq, vs) = (self.vq.as_ref()?, self.vs.as_ref()?);
+        let mut out = vec![0f32; self.n];
+        if nocompand {
+            companding::dequant_variance_linear(vq, vs, &mut out);
+        } else {
+            companding::dequant_variance(vq, vs, &mut out);
+        }
+        Some(out)
+    }
+
+    /// Total bytes of the persistent state buffers.
+    pub fn bytes(&self) -> u64 {
+        let mut b = 0u64;
+        if let Some(v) = &self.theta {
+            b += (v.len() * 4) as u64;
+        }
+        if let Some(v) = &self.theta_p {
+            b += (v.len() * 2) as u64;
+        }
+        if let Some(v) = &self.rho {
+            b += v.len() as u64;
+        }
+        if let Some(v) = &self.m {
+            b += (v.len() * 4) as u64;
+        }
+        if let Some(v) = &self.v {
+            b += (v.len() * 4) as u64;
+        }
+        if let Some(v) = &self.mq {
+            b += v.len() as u64;
+        }
+        if let Some(v) = &self.ms {
+            b += (v.len() * 2) as u64;
+        }
+        if let Some(v) = &self.vq {
+            b += v.len() as u64;
+        }
+        if let Some(v) = &self.vs {
+            b += (v.len() * 2) as u64;
+        }
+        b
+    }
+
+    /// Register buffer sizes with the live-memory tracker, splitting
+    /// "parameter" bytes from "optimizer state" bytes the way Table 4
+    /// does (ρ and scales belong to the optimizer, §3.4).
+    pub fn track(&self, tracker: &mut Tracker) {
+        let param_bytes = self
+            .theta
+            .as_ref()
+            .map(|v| v.len() as u64 * 4)
+            .unwrap_or(0)
+            + self.theta_p.as_ref().map(|v| v.len() as u64 * 2).unwrap_or(0);
+        tracker.alloc(Category::Params, "master_weights", param_bytes);
+        let optim_bytes = self.bytes() - param_bytes;
+        tracker.alloc(Category::OptimState, "optimizer_state", optim_bytes);
+    }
+
+    /// Sanity: mutually consistent buffer presence and lengths.
+    pub fn validate(&self) -> Result<(), String> {
+        let has_weights = self.theta.is_some() || self.theta_p.is_some();
+        if !has_weights {
+            return Err("no weight buffers".into());
+        }
+        if self.theta_p.is_some() != self.rho.is_some() {
+            return Err("theta_p and rho must come together".into());
+        }
+        if self.mq.is_some() != self.ms.is_some() {
+            return Err("mq and ms must come together".into());
+        }
+        if self.vq.is_some() != self.vs.is_some() {
+            return Err("vq and vs must come together".into());
+        }
+        let check = |len: usize, what: &str| -> Result<(), String> {
+            if len != self.n {
+                Err(format!("{what} length {len} != padded {}", self.n))
+            } else {
+                Ok(())
+            }
+        };
+        if let Some(v) = &self.theta {
+            check(v.len(), "theta")?;
+        }
+        if let Some(v) = &self.theta_p {
+            check(v.len(), "theta_p")?;
+        }
+        if let Some(v) = &self.rho {
+            check(v.len(), "rho")?;
+        }
+        if let Some(v) = &self.mq {
+            check(v.len(), "mq")?;
+        }
+        if let Some(v) = &self.ms {
+            if v.len() != self.n / GROUP {
+                return Err("ms length mismatch".into());
+            }
+        }
+        if let Some(v) = &self.vq {
+            check(v.len(), "vq")?;
+        }
+        if let Some(v) = &self.vs {
+            if v.len() != self.n / GROUP {
+                return Err("vs length mismatch".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn theta(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32 * 0.1).collect()
+    }
+
+    #[test]
+    fn init_flash_adamw_buffers() {
+        let st = State::init(&theta(100, 1), 128, OptKind::AdamW,
+                             Variant::Flash);
+        assert!(st.theta.is_none());
+        assert!(st.theta_p.is_some() && st.rho.is_some());
+        assert!(st.mq.is_some() && st.vq.is_some());
+        st.validate().unwrap();
+        // bytes/param ~ 2+1+1+1+2/32*2 = 5.125 over padded n
+        let bpp = st.bytes() as f64 / 128.0;
+        assert!((bpp - 5.125).abs() < 0.01, "{bpp}");
+    }
+
+    #[test]
+    fn init_reference_adamw_buffers() {
+        let st = State::init(&theta(128, 2), 128, OptKind::AdamW,
+                             Variant::Reference);
+        assert!(st.theta.is_some() && st.m.is_some() && st.v.is_some());
+        assert!(st.theta_p.is_none());
+        let bpp = st.bytes() as f64 / 128.0;
+        assert_eq!(bpp, 12.0); // 4 + 4 + 4 persistent
+    }
+
+    #[test]
+    fn sgd_has_no_variance() {
+        let st = State::init(&theta(64, 3), 64, OptKind::Sgd,
+                             Variant::Flash);
+        assert!(st.vq.is_none() && st.v.is_none());
+    }
+
+    #[test]
+    fn master_weights_roundtrip_within_split_tolerance() {
+        let t = theta(256, 4);
+        let st = State::init(&t, 256, OptKind::AdamW, Variant::Flash);
+        let back = st.master_weights();
+        for (a, b) in t.iter().zip(&back) {
+            let rel = ((a - b) / a.abs().max(1e-9)).abs();
+            assert!(rel < 4e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn padding_stays_zero() {
+        let st = State::init(&theta(100, 5), 128, OptKind::AdamW,
+                             Variant::Flash);
+        let back = st.master_weights();
+        assert!(back[100..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn initial_states_are_zero() {
+        let st = State::init(&theta(64, 6), 64, OptKind::AdamW,
+                             Variant::Flash);
+        assert!(st.momentum_f32(false).unwrap().iter().all(|&x| x == 0.0));
+        assert!(st.variance_f32(false).unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn validate_catches_mismatch() {
+        let mut st = State::init(&theta(64, 7), 64, OptKind::AdamW,
+                                 Variant::Flash);
+        st.rho = None;
+        assert!(st.validate().is_err());
+    }
+}

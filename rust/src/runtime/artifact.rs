@@ -1,0 +1,225 @@
+//! Artifact manifest (written by python/compile/aot.py) and HLO loading.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::json::Json;
+
+/// One named parameter tensor inside the flat buffer.
+#[derive(Clone, Debug)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl LayoutEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Model kind-specific metadata.
+#[derive(Clone, Debug)]
+pub enum ModelKind {
+    Lm { vocab: usize, d_model: usize, n_layers: usize, n_heads: usize,
+         seq_len: usize },
+    Vision { input_dim: usize, classes: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub kind: ModelKind,
+    pub batch: usize,
+    pub param_count: usize,
+    pub layout: Vec<LayoutEntry>,
+    /// logical artifact name -> file name
+    pub artifacts: BTreeMap<String, String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct BucketInfo {
+    pub size: usize,
+    pub artifacts: BTreeMap<String, String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub group: usize,
+    pub nhyp: usize,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub buckets: BTreeMap<usize, BucketInfo>,
+    pub kernel_size: usize,
+    pub kernels: BTreeMap<String, String>,
+}
+
+fn get<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("manifest missing key {key:?}"))
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    get(j, key)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("manifest key {key:?} not a number"))
+}
+
+fn get_str<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    get(j, key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("manifest key {key:?} not a string"))
+}
+
+fn artifacts_map(j: &Json) -> Result<BTreeMap<String, String>> {
+    let obj = get(j, "artifacts")?
+        .as_obj()
+        .ok_or_else(|| anyhow!("artifacts not an object"))?;
+    Ok(obj
+        .iter()
+        .map(|(k, v)| (k.clone(), v.as_str().unwrap_or("").to_string()))
+        .collect())
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make \
+                                      artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in get(&j, "models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models not an object"))?
+        {
+            let kind = match get_str(m, "kind")? {
+                "lm" => ModelKind::Lm {
+                    vocab: get_usize(m, "vocab")?,
+                    d_model: get_usize(m, "d_model")?,
+                    n_layers: get_usize(m, "n_layers")?,
+                    n_heads: get_usize(m, "n_heads")?,
+                    seq_len: get_usize(m, "seq_len")?,
+                },
+                "vision" => ModelKind::Vision {
+                    input_dim: get_usize(m, "input_dim")?,
+                    classes: get_usize(m, "classes")?,
+                },
+                other => return Err(anyhow!("unknown model kind {other}")),
+            };
+            let layout = get(m, "layout")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("layout not an array"))?
+                .iter()
+                .map(|e| -> Result<LayoutEntry> {
+                    Ok(LayoutEntry {
+                        name: get_str(e, "name")?.to_string(),
+                        offset: get_usize(e, "offset")?,
+                        shape: get(e, "shape")?
+                            .as_arr()
+                            .ok_or_else(|| anyhow!("shape not an array"))?
+                            .iter()
+                            .map(|s| s.as_usize().unwrap_or(0))
+                            .collect(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    kind,
+                    batch: get_usize(m, "batch")?,
+                    param_count: get_usize(m, "param_count")?,
+                    layout,
+                    artifacts: artifacts_map(m)?,
+                },
+            );
+        }
+
+        let mut buckets = BTreeMap::new();
+        for (k, b) in get(&j, "buckets")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("buckets not an object"))?
+        {
+            let size: usize = k.parse()?;
+            buckets.insert(size, BucketInfo {
+                size: get_usize(b, "size")?,
+                artifacts: artifacts_map(b)?,
+            });
+        }
+
+        let kernels_j = get(&j, "kernels")?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            group: get_usize(&j, "group")?,
+            nhyp: get_usize(&j, "nhyp")?,
+            models,
+            buckets,
+            kernel_size: get_usize(kernels_j, "size")?,
+            kernels: artifacts_map(kernels_j)?,
+        })
+    }
+
+    /// Default artifact dir: $FLASHTRAIN_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("FLASHTRAIN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn load_default() -> Result<Manifest> {
+        Manifest::load(&Self::default_dir())
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model preset {name:?} not in manifest \
+                                    (have: {:?})",
+                                   self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn bucket(&self, size: usize) -> Result<&BucketInfo> {
+        self.buckets.get(&size).ok_or_else(|| {
+            anyhow!("bucket size {size} not in manifest (have: {:?})",
+                    self.buckets.keys().collect::<Vec<_>>())
+        })
+    }
+
+    /// Absolute path of an artifact file name.
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Resolve a model artifact to its path.
+    pub fn model_artifact(&self, model: &str, which: &str) -> Result<PathBuf> {
+        let m = self.model(model)?;
+        let f = m.artifacts.get(which).ok_or_else(|| {
+            anyhow!("model {model} has no artifact {which:?}")
+        })?;
+        Ok(self.path_of(f))
+    }
+
+    /// Resolve a bucket artifact to its path.
+    pub fn bucket_artifact(&self, size: usize, which: &str)
+                           -> Result<PathBuf> {
+        let b = self.bucket(size)?;
+        let f = b.artifacts.get(which).ok_or_else(|| {
+            anyhow!("bucket {size} has no artifact {which:?}")
+        })?;
+        Ok(self.path_of(f))
+    }
+
+    /// Resolve a kernel artifact to its path.
+    pub fn kernel_artifact(&self, which: &str) -> Result<PathBuf> {
+        let f = self.kernels.get(which).ok_or_else(|| {
+            anyhow!("no kernel artifact {which:?}")
+        })?;
+        Ok(self.path_of(f))
+    }
+}

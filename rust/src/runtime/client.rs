@@ -1,0 +1,93 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute many.
+//!
+//! Pattern from /opt/xla-example/src/bin/load_hlo.rs: text -> proto ->
+//! XlaComputation -> PjRtLoadedExecutable.  Compiled executables are
+//! cached by path so a training run compiles each graph exactly once.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Shared PJRT CPU client + executable cache.
+pub struct Runtime {
+    client: PjRtClient,
+    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
+    /// cumulative compile time (perf accounting)
+    compile_s: RefCell<f64>,
+}
+
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: RefCell::new(BTreeMap::new()),
+            compile_s: RefCell::new(0.0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by absolute path).
+    pub fn load(&self, path: &Path) -> Result<Rc<Executable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().unwrap(),
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        *self.compile_s.borrow_mut() += t0.elapsed().as_secs_f64();
+        let e = Rc::new(Executable {
+            exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().to_string())
+                .unwrap_or_default(),
+        });
+        self.cache.borrow_mut().insert(key, e.clone());
+        Ok(e)
+    }
+
+    pub fn total_compile_seconds(&self) -> f64 {
+        *self.compile_s.borrow()
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    /// (aot.py lowers everything with return_tuple=True.)
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let result = self
+            .exe
+            .execute::<Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        Ok(lit.to_tuple()?)
+    }
+}

@@ -1,0 +1,140 @@
+//! Literal bridges between our compact host buffers and XLA literals.
+//!
+//! The `xla` crate has no native rust representation for bf16/f16, so:
+//!  * inputs are built with `create_from_shape_and_untyped_data` from
+//!    raw bits (we own exact bf16/f16 converters in `formats`);
+//!  * outputs are extracted via `Literal::convert(F32)` — the bf16->f32
+//!    and f16->f32 upcasts are exact, and our f32->bf16/f16 converters
+//!    round-trip them bit-identically.
+
+use anyhow::{anyhow, Result};
+use xla::{ElementType, Literal};
+
+use crate::formats::{bf16, fp16};
+
+/// f32 vector literal (1-D unless dims given).
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, dims,
+                                                   bytes)?)
+}
+
+/// i32 literal.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S32, dims,
+                                                   bytes)?)
+}
+
+/// bf16 literal from raw bits.
+pub fn lit_bf16_bits(bits: &[u16], dims: &[usize]) -> Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(bits.as_ptr() as *const u8,
+                                   bits.len() * 2)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::Bf16, dims,
+                                                   bytes)?)
+}
+
+/// f16 literal from raw bits.
+pub fn lit_f16_bits(bits: &[u16], dims: &[usize]) -> Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(bits.as_ptr() as *const u8,
+                                   bits.len() * 2)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F16, dims,
+                                                   bytes)?)
+}
+
+/// i8 literal.
+pub fn lit_i8(data: &[i8], dims: &[usize]) -> Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len())
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S8, dims,
+                                                   bytes)?)
+}
+
+/// i16 literal.
+pub fn lit_i16(data: &[i16], dims: &[usize]) -> Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   data.len() * 2)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S16, dims,
+                                                   bytes)?)
+}
+
+/// u8 literal.
+pub fn lit_u8(data: &[u8], dims: &[usize]) -> Result<Literal> {
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::U8, dims,
+                                                   data)?)
+}
+
+// ---------------------------------------------------------------------------
+// extraction
+// ---------------------------------------------------------------------------
+
+/// Extract any float literal (f32/bf16/f16) as f32 values.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    let ty = lit.ty()?;
+    match ty {
+        ElementType::F32 => Ok(lit.to_vec::<f32>()?),
+        ElementType::Bf16 | ElementType::F16 => {
+            let conv = lit.convert(ElementType::F32.primitive_type())?;
+            Ok(conv.to_vec::<f32>()?)
+        }
+        other => Err(anyhow!("expected float literal, got {other:?}")),
+    }
+}
+
+/// Extract a bf16 literal as raw bits (exact: bf16 -> f32 -> bf16).
+pub fn to_bf16_bits(lit: &Literal) -> Result<Vec<u16>> {
+    if lit.ty()? != ElementType::Bf16 {
+        return Err(anyhow!("expected bf16 literal, got {:?}", lit.ty()?));
+    }
+    let f = to_f32_vec(lit)?;
+    Ok(f.iter().map(|&x| bf16::f32_to_bf16_bits(x)).collect())
+}
+
+/// Extract an f16 literal as raw bits (exact).
+pub fn to_f16_bits(lit: &Literal) -> Result<Vec<u16>> {
+    if lit.ty()? != ElementType::F16 {
+        return Err(anyhow!("expected f16 literal, got {:?}", lit.ty()?));
+    }
+    let f = to_f32_vec(lit)?;
+    Ok(f.iter().map(|&x| fp16::f32_to_f16_bits(x)).collect())
+}
+
+pub fn to_i8_vec(lit: &Literal) -> Result<Vec<i8>> {
+    Ok(lit.to_vec::<i8>()?)
+}
+
+pub fn to_i16_vec(lit: &Literal) -> Result<Vec<i16>> {
+    Ok(lit.to_vec::<i16>()?)
+}
+
+pub fn to_u8_vec(lit: &Literal) -> Result<Vec<u8>> {
+    Ok(lit.to_vec::<u8>()?)
+}
+
+pub fn to_i32_vec(lit: &Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+/// Extract a scalar f32 (or 1-element vector).
+pub fn to_f32_scalar(lit: &Literal) -> Result<f32> {
+    let v = to_f32_vec(lit)?;
+    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+}
+
+pub fn to_i32_scalar(lit: &Literal) -> Result<i32> {
+    let v = to_i32_vec(lit)?;
+    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+}

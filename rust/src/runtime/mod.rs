@@ -1,0 +1,11 @@
+//! Runtime layer: PJRT client + artifact manifest + literal bridges.
+//!
+//! This is the only module that touches the `xla` crate; everything
+//! above it (optim, coordinator, benches) works with plain Rust buffers.
+
+pub mod artifact;
+pub mod client;
+pub mod literal;
+
+pub use artifact::{BucketInfo, Manifest, ModelInfo, ModelKind};
+pub use client::{Executable, Runtime};

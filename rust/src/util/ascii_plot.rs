@@ -1,0 +1,100 @@
+//! Terminal line plots for loss curves (Figures 2/5/6/7/8 output).
+
+/// Render one or more named series as an ASCII plot.
+/// Each series is a list of (x, y) points; x need not be uniform.
+pub fn plot(title: &str, series: &[(&str, &[(f64, f64)])], width: usize,
+            height: usize) -> String {
+    let glyphs = ['*', '+', 'o', 'x', '#', '@'];
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (_, pts) in series {
+        for &(x, y) in *pts {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+    }
+    if !xmin.is_finite() || xmax <= xmin {
+        return format!("{title}: (no finite data)\n");
+    }
+    if ymax <= ymin {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let g = glyphs[si % glyphs.len()];
+        for &(x, y) in *pts {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64)
+                .round() as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64)
+                .round() as usize;
+            let cy = height - 1 - cy.min(height - 1);
+            let cx = cx.min(width - 1);
+            // overlapping points from different series show as '%'
+            grid[cy][cx] = if grid[cy][cx] == ' ' || grid[cy][cx] == g {
+                g
+            } else {
+                '%'
+            };
+        }
+    }
+    let mut out = format!("-- {title} --\n");
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{ymax:>10.4}")
+        } else if i == height - 1 {
+            format!("{ymin:>10.4}")
+        } else {
+            " ".repeat(10)
+        };
+        out += &format!("{label} |{}|\n", row.iter().collect::<String>());
+    }
+    out += &format!("{:>10}  {:<10}{:>w$.0}\n", "", format!("{xmin:.0}"),
+                    xmax, w = width - 8);
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {}", glyphs[i % glyphs.len()],
+                                      name))
+        .collect();
+    out += &format!("{:>12}{}\n", "", legend.join("   "));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_two_series() {
+        let a: Vec<(f64, f64)> =
+            (0..50).map(|i| (i as f64, 5.0 - (i as f64 * 0.05))).collect();
+        let b: Vec<(f64, f64)> =
+            (0..50).map(|i| (i as f64, 5.0 - (i as f64 * 0.049))).collect();
+        let s = plot("loss", &[("ref", &a), ("flash", &b)], 60, 12);
+        assert!(s.contains("-- loss --"));
+        assert!(s.contains("* ref"));
+        assert!(s.contains("+ flash"));
+        assert!(s.lines().count() > 12);
+    }
+
+    #[test]
+    fn empty_data_safe() {
+        let s = plot("empty", &[("x", &[])], 40, 8);
+        assert!(s.contains("no finite data"));
+    }
+
+    #[test]
+    fn nan_points_skipped() {
+        let pts = [(0.0, f64::NAN), (1.0, 1.0), (2.0, 2.0)];
+        let s = plot("nan", &[("x", &pts)], 40, 8);
+        assert!(s.contains("-- nan --"));
+    }
+}

@@ -1,0 +1,124 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Warmup + timed iterations with median / p10 / p90 reporting; used by
+//! every `rust/benches/*.rs` target (all declared `harness = false`).
+
+use std::time::Instant;
+
+use super::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// per-iteration wall time in seconds
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median_s(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+
+    pub fn p10_s(&self) -> f64 {
+        stats::quantile(&self.samples, 0.1)
+    }
+
+    pub fn p90_s(&self) -> f64 {
+        stats::quantile(&self.samples, 0.9)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10} median  (p10 {:>9}, p90 {:>9}, n={})",
+            self.name,
+            fmt_time(self.median_s()),
+            fmt_time(self.p10_s()),
+            fmt_time(self.p90_s()),
+            self.samples.len()
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs then `iters` timed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                         mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), samples }
+}
+
+/// Adaptive variant: time-budgeted (runs until `budget_s` elapsed, with
+/// at least `min_iters`).
+pub fn bench_for<F: FnMut()>(name: &str, budget_s: f64, min_iters: usize,
+                             mut f: F) -> BenchResult {
+    f(); // warmup
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while samples.len() < min_iters
+        || start.elapsed().as_secs_f64() < budget_s
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), samples }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples() {
+        let r = bench("noop", 2, 10, || {
+            black_box(1 + 1);
+        });
+        assert_eq!(r.samples.len(), 10);
+        assert!(r.median_s() >= 0.0);
+        assert!(r.p10_s() <= r.p90_s());
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("us"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn budgeted_runs_min_iters() {
+        let r = bench_for("noop", 0.0, 5, || {
+            black_box(());
+        });
+        assert!(r.samples.len() >= 5);
+    }
+}

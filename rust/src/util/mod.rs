@@ -1,0 +1,11 @@
+//! Shared utilities: PRNG, statistics, CLI parsing, micro-bench harness,
+//! property testing, table/plot rendering.  All hand-rolled — the build
+//! is fully offline, so no clap/criterion/proptest/rand.
+
+pub mod ascii_plot;
+pub mod bench;
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

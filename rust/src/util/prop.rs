@@ -1,0 +1,155 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `forall` draws `cases` random inputs from a generator, runs the
+//! property, and on failure performs greedy shrinking via the
+//! generator's `shrink` hook before panicking with the minimal case.
+
+use std::fmt::Debug;
+
+use super::rng::Rng;
+
+/// A generator for property inputs.
+pub trait Gen {
+    type Value: Clone + Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values; default = no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; panic with the smallest
+/// found counterexample.
+pub fn forall<G: Gen, P>(seed: u64, cases: usize, gen: &G, prop: P)
+where
+    P: Fn(&G::Value) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // greedy shrink
+            let mut best = v.clone();
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in gen.shrink(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}):\n  input: \
+                 {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Generator: f32 vectors with log-uniform magnitudes (exercises many
+/// binades, the interesting regime for numeric formats).
+pub struct FloatVec {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub lo_exp: f32,
+    pub hi_exp: f32,
+    /// multiple that the length must respect (e.g. GROUP)
+    pub multiple: usize,
+}
+
+impl Default for FloatVec {
+    fn default() -> Self {
+        FloatVec { min_len: 1, max_len: 256, lo_exp: -30.0, hi_exp: 10.0,
+                   multiple: 1 }
+    }
+}
+
+impl Gen for FloatVec {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        let span = (self.max_len - self.min_len).max(1);
+        let mut len = self.min_len + rng.below(span as u64 + 1) as usize;
+        len = (len / self.multiple).max(1) * self.multiple;
+        (0..len)
+            .map(|_| {
+                let mag = (rng.f32() * (self.hi_exp - self.lo_exp)
+                           + self.lo_exp)
+                    .exp2();
+                let sign = if rng.f32() < 0.5 { -1.0 } else { 1.0 };
+                match rng.below(20) {
+                    0 => 0.0,
+                    1 => sign * f32::MIN_POSITIVE, // normal/subnormal edge
+                    _ => sign * mag * (0.5 + rng.f32()),
+                }
+            })
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        // halve the vector
+        if v.len() > self.multiple && v.len() > self.min_len {
+            let half = ((v.len() / 2) / self.multiple.max(1))
+                .max(1) * self.multiple;
+            out.push(v[..half].to_vec());
+            out.push(v[v.len() - half..].to_vec());
+        }
+        // zero out elements one at a time (first 8 positions)
+        for i in 0..v.len().min(8) {
+            if v[i] != 0.0 {
+                let mut c = v.clone();
+                c[i] = 0.0;
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall(1, 50, &FloatVec::default(), |v| {
+            if v.iter().all(|x| x.is_finite()) {
+                Ok(())
+            } else {
+                Err("non-finite".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_shrinks() {
+        forall(2, 50, &FloatVec { min_len: 4, max_len: 64,
+                                  ..Default::default() },
+               |v| {
+                   if v.len() < 8 {
+                       Ok(())
+                   } else {
+                       Err(format!("len {}", v.len()))
+                   }
+               });
+    }
+
+    #[test]
+    fn respects_multiple() {
+        let gen = FloatVec { min_len: 32, max_len: 256, multiple: 32,
+                             ..Default::default() };
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            assert_eq!(gen.generate(&mut rng).len() % 32, 0);
+        }
+    }
+}

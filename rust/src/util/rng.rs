@@ -1,0 +1,181 @@
+//! Deterministic PRNG (SplitMix64 seeding + xoshiro256**), plus the
+//! normal/zipf samplers the synthetic data generators need.  No external
+//! crates; reproducibility of the data stream across runs and workers is
+//! a correctness requirement (paper: "identical data ordering").
+
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng {
+            s: [splitmix64(&mut sm), splitmix64(&mut sm),
+                splitmix64(&mut sm), splitmix64(&mut sm)],
+        }
+    }
+
+    /// Derive an independent stream (e.g. per data-parallel worker).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn u64(&mut self) -> u64 {
+        let r = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1) with f64 resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // 128-bit multiply rejection-free mapping (Lemire)
+        ((self.u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal (Box-Muller; one value per call, simple & exact
+    /// enough for data generation).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Zipf-distributed rank in [0, n) with exponent `a` via inverse-CDF
+    /// on a precomputed table-free approximation (rejection sampling).
+    pub fn zipf(&mut self, n: u64, a: f64) -> u64 {
+        // rejection method of Devroye; fine for a in (0.5, 3)
+        let b = 2f64.powf(a - 1.0);
+        loop {
+            let u = self.f64();
+            let v = self.f64();
+            let x = (n as f64).powf(u.powf(1.0 / (1.0 - a))).max(1.0);
+            // fallback: simple inverse power transform when x overflows
+            let x = if x.is_finite() { x } else { 1.0 };
+            let k = x.floor().min(n as f64 - 1.0).max(1.0);
+            let t = (1.0 + 1.0 / k).powf(a - 1.0);
+            if v * k * (t - 1.0) / (b - 1.0) <= t / b {
+                return k as u64 - 1;
+            }
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.u64(), b.u64());
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x));
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(4);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "{mean}");
+        assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn zipf_skewed() {
+        let mut r = Rng::new(5);
+        let mut counts = [0u32; 16];
+        for _ in 0..20_000 {
+            let k = r.zipf(16, 1.2) as usize;
+            counts[k] += 1;
+        }
+        assert!(counts[0] > counts[8] * 3);
+        assert!(counts.iter().sum::<u32>() == 20_000);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(6);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_independent() {
+        let mut base = Rng::new(7);
+        let mut a = base.fork(0);
+        let mut b = base.fork(1);
+        let same = (0..64).filter(|_| a.u64() == b.u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Paper-style ASCII table renderer for bench/report output.
+
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(),
+                   "row width mismatch in table {:?}", self.title);
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "+";
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::new();
+            for i in 0..ncols {
+                s += &format!("| {:<w$} ", cells[i], w = widths[i]);
+            }
+            s + "|"
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out += &format!("== {} ==\n", self.title);
+        }
+        out += &sep;
+        out += "\n";
+        out += &fmt_row(&self.headers);
+        out += "\n";
+        out += &sep;
+        out += "\n";
+        for row in &self.rows {
+            out += &fmt_row(row);
+            out += "\n";
+        }
+        out += &sep;
+        out += "\n";
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format bytes with binary units (matches the paper's GiB reporting).
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= (1u64 << 30) as f64 {
+        format!("{:.1} GiB", b / (1u64 << 30) as f64)
+    } else if b >= (1u64 << 20) as f64 {
+        format!("{:.1} MiB", b / (1u64 << 20) as f64)
+    } else if b >= 1024.0 {
+        format!("{:.1} KiB", b / 1024.0)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Percentage delta vs a baseline, paper-style ("-61%" / "+12%").
+pub fn fmt_delta(value: f64, baseline: f64) -> String {
+    if baseline == 0.0 {
+        return String::new();
+    }
+    let pct = (value / baseline - 1.0) * 100.0;
+    if pct.abs() < 0.5 {
+        String::new()
+    } else {
+        format!("{pct:+.0}%")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bbbb"]);
+        t.row_str(&["1", "2"]);
+        t.row_str(&["333", "4"]);
+        let s = t.render();
+        assert!(s.contains("| 333 | 4    |"));
+        assert!(s.contains("== demo =="));
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_width_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row_str(&["only-one"]);
+    }
+
+    #[test]
+    fn byte_formatting() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(2048.0), "2.0 KiB");
+        assert_eq!(fmt_bytes((3u64 << 30) as f64), "3.0 GiB");
+    }
+
+    #[test]
+    fn delta_formatting() {
+        assert_eq!(fmt_delta(50.0, 100.0), "-50%");
+        assert_eq!(fmt_delta(112.0, 100.0), "+12%");
+        assert_eq!(fmt_delta(100.0, 100.0), "");
+    }
+}

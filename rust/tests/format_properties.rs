@@ -1,0 +1,167 @@
+//! Property-based tests on the numeric-format invariants (DESIGN.md §6),
+//! using the in-house `util::prop` harness.
+
+use flashtrain::formats::baselines::{roundtrip, Scheme};
+use flashtrain::formats::{bf16, companding, fp16, weight_split,
+                          Correction, Target, GROUP};
+use flashtrain::util::prop::{forall, FloatVec};
+
+#[test]
+fn prop_split_roundtrip_error_bound() {
+    let gen = FloatVec { min_len: 1, max_len: 512, lo_exp: -40.0,
+                         hi_exp: 30.0, multiple: 1 };
+    forall(11, 300, &gen, |v| {
+        for &x in v {
+            let (b, r) = weight_split::compress(x, Correction::Int8,
+                                                Target::Bf16);
+            let tp = bf16::bf16_bits_to_f32(b);
+            if !tp.is_finite() {
+                continue; // |x| beyond bf16 max -> inf, like plain bf16
+            }
+            let y = weight_split::decompress(b, r, Correction::Int8,
+                                             Target::Bf16);
+            let ulp = 2f64.powi(bf16::ulp_exponent(b));
+            let bound = ulp / 2.0 * (0.5 / 127.0) * 1.001 + 1e-45;
+            if ((y - x) as f64).abs() > bound {
+                return Err(format!("x={x} y={y} bound={bound}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_split_never_worse_than_downcast() {
+    let gen = FloatVec::default();
+    forall(12, 300, &gen, |v| {
+        for &x in v {
+            let e_ours = (roundtrip(x, Scheme::UlpInt8, Target::Bf16) - x)
+                .abs();
+            let e_down = (roundtrip(x, Scheme::NoCorrection, Target::Bf16)
+                          - x)
+                .abs();
+            if !(e_ours <= e_down + 1e-45)
+                && e_down.is_finite()
+            {
+                return Err(format!("x={x}: ours {e_ours} > plain {e_down}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_theta_prime_equals_plain_downcast() {
+    // drop-in property: fwd/bwd sees exactly the bf16 downcast weights
+    let gen = FloatVec::default();
+    forall(13, 300, &gen, |v| {
+        for &x in v {
+            let (b, _) = weight_split::compress(x, Correction::Int8,
+                                                Target::Bf16);
+            let plain = bf16::f32_to_bf16_bits(x);
+            if b != plain {
+                return Err(format!("x={x}: {b:#x} != {plain:#x}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_momentum_quant_error_fraction_of_absmax() {
+    let gen = FloatVec { min_len: GROUP, max_len: GROUP * 16,
+                         lo_exp: -10.0, hi_exp: 4.0, multiple: GROUP };
+    forall(14, 200, &gen, |v| {
+        let n = v.len();
+        let mut q = vec![0i8; n];
+        let mut s = vec![0u16; n / GROUP];
+        companding::quant_momentum(v, &mut q, &mut s);
+        let mut out = vec![0f32; n];
+        companding::dequant_momentum(&q, &s, &mut out);
+        for (g, og) in v.chunks_exact(GROUP).zip(out.chunks_exact(GROUP)) {
+            let absmax = g.iter().fold(0f32, |a, &b| a.max(b.abs()));
+            if absmax == 0.0 || !absmax.is_finite()
+                || fp16::round_f32_to_f16(absmax) == 0.0
+                || fp16::round_f32_to_f16(absmax).is_infinite()
+            {
+                continue; // degenerate groups (f16 scale under/overflow)
+            }
+            for (a, b) in g.iter().zip(og) {
+                if (a - b).abs() / absmax > 0.02 {
+                    return Err(format!("err {} absmax {absmax}",
+                                       (a - b).abs()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_variance_quant_nonneg_and_bounded() {
+    let gen = FloatVec { min_len: GROUP, max_len: GROUP * 8,
+                         lo_exp: -16.0, hi_exp: 2.0, multiple: GROUP };
+    forall(15, 200, &gen, |v| {
+        let sq: Vec<f32> = v.iter().map(|x| x * x).collect();
+        let n = sq.len();
+        let mut q = vec![0u8; n];
+        let mut s = vec![0u16; n / GROUP];
+        companding::quant_variance(&sq, &mut q, &mut s);
+        let mut out = vec![0f32; n];
+        companding::dequant_variance(&q, &s, &mut out);
+        for (g, og) in sq.chunks_exact(GROUP).zip(out.chunks_exact(GROUP)) {
+            let vmax = g.iter().fold(0f32, |a, &b| a.max(b));
+            if vmax == 0.0 || !vmax.is_finite()
+                || fp16::round_f32_to_f16(vmax.sqrt()) == 0.0
+                || fp16::round_f32_to_f16(vmax.sqrt()).is_infinite()
+            {
+                continue;
+            }
+            for (a, b) in g.iter().zip(og) {
+                if *b < 0.0 {
+                    return Err("negative variance".into());
+                }
+                if (a - b).abs() / vmax > 0.02 {
+                    return Err(format!("err {} vmax {vmax}",
+                                       (a - b).abs()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_f16_conversion_monotone() {
+    let gen = FloatVec { min_len: 2, max_len: 128, lo_exp: -20.0,
+                         hi_exp: 15.0, multiple: 1 };
+    forall(16, 300, &gen, |v| {
+        let mut sorted: Vec<f32> =
+            v.iter().copied().filter(|x| x.is_finite()).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev = f32::NEG_INFINITY;
+        for &x in &sorted {
+            let r = fp16::round_f32_to_f16(x);
+            if r < prev {
+                return Err(format!("non-monotone at {x}: {r} < {prev}"));
+            }
+            prev = r;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bf16_conversion_monotone_and_exact_on_bf16_values() {
+    let gen = FloatVec::default();
+    forall(17, 300, &gen, |v| {
+        for &x in v {
+            let once = bf16::round_f32_to_bf16(x);
+            let twice = bf16::round_f32_to_bf16(once);
+            if !once.is_nan() && once.to_bits() != twice.to_bits() {
+                return Err(format!("not idempotent at {x}"));
+            }
+        }
+        Ok(())
+    });
+}

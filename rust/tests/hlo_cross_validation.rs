@@ -1,0 +1,230 @@
+//! Integration: Rust `formats`/`scalar_ref` vs the AOT HLO kernels,
+//! executed through PJRT.  These are the ground-truth equivalence tests
+//! between Layer 3 and Layers 1/2 (requires `make artifacts`).
+
+use flashtrain::config::{OptKind, TrainConfig, Variant};
+use flashtrain::formats::{companding, weight_split, Correction, Target,
+                          GROUP};
+use flashtrain::optim::{scalar_ref, BucketOptimizer, Hyper, State};
+use flashtrain::runtime::literal as lit;
+use flashtrain::runtime::{Manifest, Runtime};
+use flashtrain::util::rng::Rng;
+
+fn setup() -> Option<(Manifest, Runtime)> {
+    let manifest = match Manifest::load_default() {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+    };
+    Some((manifest, Runtime::cpu().unwrap()))
+}
+
+fn log_uniform(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| (rng.normal() as f32) * (rng.f32() * 30.0 - 20.0).exp2())
+        .collect()
+}
+
+#[test]
+fn split_kernels_bitexact_i8_and_i16() {
+    let Some((manifest, rt)) = setup() else { return };
+    let n = manifest.kernel_size;
+    let mut rng = Rng::new(1);
+    let theta = log_uniform(&mut rng, n);
+
+    for (enc_name, dec_name, corr) in [
+        ("split_enc_i8", "split_dec_i8", Correction::Int8),
+        ("split_enc_i16", "split_dec_i16", Correction::Int16),
+    ] {
+        let enc = rt.load(&manifest.kernel_artifact(enc_name).unwrap())
+            .unwrap();
+        let out = enc.run(&[lit::lit_f32(&theta, &[n]).unwrap()]).unwrap();
+        let tp_hlo = lit::to_bf16_bits(&out[0]).unwrap();
+        for (i, &x) in theta.iter().enumerate() {
+            let (tp, rho) = weight_split::compress(x, corr, Target::Bf16);
+            assert_eq!(tp, tp_hlo[i], "{enc_name} theta_p at {i}: x={x}");
+            let rho_hlo = match corr {
+                Correction::Int8 => {
+                    lit::to_i8_vec(&out[1]).unwrap()[i] as i32
+                }
+                Correction::Int16 => {
+                    lit::to_i16_vec(&out[1]).unwrap()[i] as i32
+                }
+            };
+            assert_eq!(rho, rho_hlo, "{enc_name} rho at {i}: x={x}");
+        }
+        // decode round-trip
+        let dec = rt.load(&manifest.kernel_artifact(dec_name).unwrap())
+            .unwrap();
+        let back = dec.run(&[out[0].clone(), out[1].clone()]).unwrap();
+        let back_hlo = lit::to_f32_vec(&back[0]).unwrap();
+        for (i, &x) in theta.iter().enumerate() {
+            let (tp, rho) = weight_split::compress(x, corr, Target::Bf16);
+            let mine = weight_split::decompress(tp, rho, corr,
+                                                Target::Bf16);
+            assert_eq!(mine.to_bits(), back_hlo[i].to_bits(),
+                       "{dec_name} at {i}");
+        }
+    }
+}
+
+/// Quantization involves real f32 arithmetic, and XLA CPU compiles it
+/// with FMA contraction, so codes can differ by +-1 at rounding
+/// boundaries vs our strictly-IEEE Rust mirror.  Scales (pure max +
+/// f16 convert) must still be bit-exact; codes must agree within 1 and
+/// almost everywhere exactly.
+#[test]
+fn quant_kernels_match_within_one_code() {
+    let Some((manifest, rt)) = setup() else { return };
+    let n = manifest.kernel_size;
+    let mut rng = Rng::new(2);
+    let m: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.02).collect();
+    let v: Vec<f32> = m.iter().map(|x| x * x * 3.7).collect();
+
+    let check_i8 = |hlo: &[i8], mine: &[i8], what: &str| {
+        let mut off_by_one = 0usize;
+        for i in 0..n {
+            let d = (hlo[i] as i32 - mine[i] as i32).abs();
+            assert!(d <= 1, "{what} at {i}: {} vs {}", hlo[i], mine[i]);
+            off_by_one += (d == 1) as usize;
+        }
+        assert!(off_by_one * 100 < n, "{what}: {off_by_one}/{n} off by 1");
+    };
+    let check_u8 = |hlo: &[u8], mine: &[u8], what: &str| {
+        let mut off_by_one = 0usize;
+        for i in 0..n {
+            let d = (hlo[i] as i32 - mine[i] as i32).abs();
+            assert!(d <= 1, "{what} at {i}: {} vs {}", hlo[i], mine[i]);
+            off_by_one += (d == 1) as usize;
+        }
+        assert!(off_by_one * 100 < n, "{what}: {off_by_one}/{n} off by 1");
+    };
+
+    // companded momentum
+    let mq = rt.load(&manifest.kernel_artifact("mq_enc").unwrap()).unwrap();
+    let out = mq.run(&[lit::lit_f32(&m, &[n]).unwrap()]).unwrap();
+    let mut q = vec![0i8; n];
+    let mut s = vec![0u16; n / GROUP];
+    companding::quant_momentum(&m, &mut q, &mut s);
+    check_i8(&lit::to_i8_vec(&out[0]).unwrap(), &q, "mq codes");
+    assert_eq!(s, lit::to_f16_bits(&out[1]).unwrap(), "mq scales");
+
+    // dequant: one f32 ulp tolerance (FMA contraction in mp * s)
+    let md = rt.load(&manifest.kernel_artifact("mq_dec").unwrap()).unwrap();
+    let back = md.run(&[out[0].clone(), out[1].clone()]).unwrap();
+    let hlo_q = lit::to_i8_vec(&out[0]).unwrap();
+    let mut mine = vec![0f32; n];
+    companding::dequant_momentum(&hlo_q, &s, &mut mine);
+    let hlo = lit::to_f32_vec(&back[0]).unwrap();
+    for i in 0..n {
+        // XLA CPU fast-math may turn /127 into *reciprocal: a few ulps
+        let rel = (mine[i] - hlo[i]).abs()
+            / mine[i].abs().max(f32::MIN_POSITIVE);
+        assert!(rel < 1e-6, "mq_dec {i}: {} vs {}", mine[i], hlo[i]);
+    }
+
+    // companded variance
+    let vq = rt.load(&manifest.kernel_artifact("vq_enc").unwrap()).unwrap();
+    let out = vq.run(&[lit::lit_f32(&v, &[n]).unwrap()]).unwrap();
+    let mut qv = vec![0u8; n];
+    companding::quant_variance(&v, &mut qv, &mut s);
+    check_u8(&lit::to_u8_vec(&out[0]).unwrap(), &qv, "vq codes");
+    assert_eq!(s, lit::to_f16_bits(&out[1]).unwrap(), "vq scales");
+
+    // linear ablations
+    let ml = rt.load(&manifest.kernel_artifact("mq_lin_enc").unwrap())
+        .unwrap();
+    let out = ml.run(&[lit::lit_f32(&m, &[n]).unwrap()]).unwrap();
+    companding::quant_momentum_linear(&m, &mut q, &mut s);
+    check_i8(&lit::to_i8_vec(&out[0]).unwrap(), &q, "mq_lin codes");
+    let vl = rt.load(&manifest.kernel_artifact("vq_lin_enc").unwrap())
+        .unwrap();
+    let out = vl.run(&[lit::lit_f32(&v, &[n]).unwrap()]).unwrap();
+    companding::quant_variance_linear(&v, &mut qv, &mut s);
+    check_u8(&lit::to_u8_vec(&out[0]).unwrap(), &qv, "vq_lin codes");
+}
+
+/// The fused HLO step and the pure-Rust scalar mirror must agree for
+/// every optimizer/variant combination.  XLA CPU contracts mul+add into
+/// FMA, so quantized codes may differ by +-1 at rounding boundaries and
+/// f32 values by ~1 ulp; we check tight numeric agreement of the
+/// *reconstructed* master weights and states rather than raw bits.
+#[test]
+fn fused_steps_match_scalar_mirror() {
+    let Some((manifest, rt)) = setup() else { return };
+    let bucket = *manifest.buckets.keys().next().unwrap();
+    let mut rng = Rng::new(3);
+
+    for (opt, variant) in [
+        (OptKind::AdamW, Variant::Flash),
+        (OptKind::AdamW, Variant::Reference),
+        (OptKind::AdamW, Variant::WeightSplit),
+        (OptKind::AdamW, Variant::OptQuant),
+        (OptKind::AdamW, Variant::NoCompand),
+        (OptKind::Sgd, Variant::Flash),
+        (OptKind::Sgd, Variant::Reference),
+        (OptKind::Lion, Variant::Flash),
+        (OptKind::Lion, Variant::Reference),
+    ] {
+        let theta0: Vec<f32> =
+            (0..bucket).map(|_| rng.normal() as f32 * 0.1).collect();
+        let mut opt_exec = BucketOptimizer::new(&rt, &manifest, opt,
+                                                variant, bucket, &theta0)
+            .unwrap();
+        let mut mirror = State::init(&theta0, bucket, opt, variant);
+
+        let cfg = TrainConfig {
+            optimizer: opt,
+            variant,
+            ..Default::default()
+        };
+        for t in 1..=3 {
+            let g: Vec<f32> = (0..bucket)
+                .map(|_| {
+                    let x = rng.normal() as f32 * 0.01;
+                    if variant.splits_weights() {
+                        flashtrain::formats::bf16::round_f32_to_bf16(x)
+                    } else {
+                        x
+                    }
+                })
+                .collect();
+            let h = Hyper::for_step(&cfg, 1e-3, t);
+            opt_exec.step_bucket(0, &g, &h).unwrap();
+            scalar_ref::step_state(&mut mirror, &g, opt, variant, &h);
+        }
+
+        // reconstructed master weights: relative agreement well below
+        // the ~1e-3 update scale (lr=1e-3, 3 steps)
+        let wa = opt_exec.state.master_weights();
+        let wb = mirror.master_weights();
+        let mut worst = 0f64;
+        for (p, q) in wa.iter().zip(&wb) {
+            let d = ((p - q).abs() / (q.abs().max(1e-2))) as f64;
+            worst = worst.max(d);
+        }
+        assert!(worst < 2e-4, "{opt}/{variant} weight drift {worst}");
+
+        // dequantized momentum (and variance) agreement
+        let nocomp = variant == Variant::NoCompand;
+        let ma = opt_exec.state.momentum_f32(nocomp).unwrap();
+        let mb = mirror.momentum_f32(nocomp).unwrap();
+        let scale = mb.iter().fold(0f32, |a, &b| a.max(b.abs())).max(1e-6);
+        let mut worst = 0f32;
+        for (p, q) in ma.iter().zip(&mb) {
+            worst = worst.max((p - q).abs() / scale);
+        }
+        assert!(worst < 0.02, "{opt}/{variant} momentum drift {worst}");
+        if let (Some(va), Some(vb)) = (opt_exec.state.variance_f32(nocomp),
+                                       mirror.variance_f32(nocomp)) {
+            let scale = vb.iter().fold(0f32, |a, &b| a.max(b)).max(1e-12);
+            let mut worst = 0f32;
+            for (p, q) in va.iter().zip(&vb) {
+                worst = worst.max((p - q).abs() / scale);
+            }
+            assert!(worst < 0.02, "{opt}/{variant} variance drift {worst}");
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Integration: end-to-end training through the full three-layer stack
+//! (requires `make artifacts`).
+
+use std::path::PathBuf;
+
+use flashtrain::checkpoint;
+use flashtrain::config::{OptKind, TrainConfig, Variant};
+use flashtrain::coordinator::Trainer;
+use flashtrain::runtime::{Manifest, Runtime};
+
+fn setup() -> Option<(Manifest, Runtime)> {
+    let manifest = match Manifest::load_default() {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+    };
+    Some((manifest, Runtime::cpu().unwrap()))
+}
+
+fn tiny_cfg(opt: OptKind, variant: Variant, steps: usize) -> TrainConfig {
+    TrainConfig {
+        preset: "lm-tiny".into(),
+        optimizer: opt,
+        variant,
+        steps,
+        lr: 1e-3,
+        warmup: 5,
+        bucket: 65536,
+        eval_batches: 2,
+        log_every: 1000,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn flash_adamw_loss_decreases() {
+    let Some((manifest, rt)) = setup() else { return };
+    let mut t = Trainer::new(tiny_cfg(OptKind::AdamW, Variant::Flash, 30),
+                             &manifest, &rt)
+        .unwrap();
+    t.run(true).unwrap();
+    let first = t.metrics.steps[0].loss;
+    let last = t.metrics.final_loss(5);
+    assert!(last < first - 0.3, "loss {first} -> {last}");
+}
+
+#[test]
+fn flash_matches_reference_closely() {
+    // The paper's core claim: identical data order => nearly identical
+    // loss trajectories for reference vs flash.
+    let Some((manifest, rt)) = setup() else { return };
+    let steps = 25;
+    let mut r = Trainer::new(
+        tiny_cfg(OptKind::AdamW, Variant::Reference, steps), &manifest,
+        &rt)
+        .unwrap();
+    r.run(true).unwrap();
+    let mut f = Trainer::new(tiny_cfg(OptKind::AdamW, Variant::Flash,
+                                      steps), &manifest, &rt)
+        .unwrap();
+    f.run(true).unwrap();
+    for (a, b) in r.metrics.steps.iter().zip(&f.metrics.steps) {
+        assert_eq!(a.step, b.step);
+        assert!((a.loss - b.loss).abs() < 0.08,
+                "step {}: ref {} vs flash {}", a.step, a.loss, b.loss);
+    }
+}
+
+#[test]
+fn all_optimizers_and_ablations_train() {
+    let Some((manifest, rt)) = setup() else { return };
+    for (opt, variant) in [
+        (OptKind::Sgd, Variant::Flash),
+        (OptKind::Lion, Variant::Flash),
+        (OptKind::AdamW, Variant::WeightSplit),
+        (OptKind::AdamW, Variant::OptQuant),
+    ] {
+        let mut cfg = tiny_cfg(opt, variant, 6);
+        if opt == OptKind::Sgd {
+            cfg.lr = 0.05;
+        }
+        let mut t = Trainer::new(cfg, &manifest, &rt).unwrap();
+        t.run(true).unwrap();
+        let last = t.metrics.final_loss(2);
+        assert!(last.is_finite(), "{opt}/{variant} diverged");
+        assert!(last < t.metrics.steps[0].loss + 0.2,
+                "{opt}/{variant} loss grew");
+    }
+}
+
+#[test]
+fn data_parallel_workers_reduce() {
+    let Some((manifest, rt)) = setup() else { return };
+    let mut cfg = tiny_cfg(OptKind::AdamW, Variant::Flash, 4);
+    cfg.workers = 2;
+    let mut t = Trainer::new(cfg, &manifest, &rt).unwrap();
+    t.run(true).unwrap();
+    assert_eq!(t.metrics.steps.len(), 4);
+    assert!(t.metrics.final_loss(1).is_finite());
+}
+
+#[test]
+fn identical_seeds_identical_runs() {
+    let Some((manifest, rt)) = setup() else { return };
+    let mk = || {
+        let mut t = Trainer::new(
+            tiny_cfg(OptKind::AdamW, Variant::Flash, 5), &manifest, &rt)
+            .unwrap();
+        t.run(true).unwrap();
+        t.metrics
+            .steps
+            .iter()
+            .map(|r| r.loss)
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(mk(), mk());
+}
+
+#[test]
+fn checkpoint_roundtrip_through_trainer() {
+    let Some((manifest, rt)) = setup() else { return };
+    let cfg = tiny_cfg(OptKind::AdamW, Variant::Flash, 3);
+    let mut t = Trainer::new(cfg.clone(), &manifest, &rt).unwrap();
+    t.run(true).unwrap();
+    let path: PathBuf = std::env::temp_dir()
+        .join(format!("flashtrain_it_{}.flt", std::process::id()));
+    checkpoint::save(&path, &t.opt.state, cfg.optimizer, cfg.variant, 3,
+                     t.model.param_count as u64)
+        .unwrap();
+    let (meta, st) = checkpoint::load(&path).unwrap();
+    assert_eq!(meta.step, 3);
+    assert_eq!(st.theta_p, t.opt.state.theta_p);
+    assert_eq!(st.vq, t.opt.state.vq);
+    // compact: ~5.1 bytes/param over padded length
+    let bpp = st.bytes() as f64 / st.n as f64;
+    assert!((bpp - 5.125).abs() < 0.01, "{bpp}");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn bad_preset_and_bucket_are_clean_errors() {
+    let Some((manifest, rt)) = setup() else { return };
+    let mut cfg = tiny_cfg(OptKind::AdamW, Variant::Flash, 1);
+    cfg.preset = "no-such-model".into();
+    let err = match Trainer::new(cfg, &manifest, &rt) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected error for bad preset"),
+    };
+    assert!(err.contains("no-such-model"), "{err}");
+
+    let mut cfg = tiny_cfg(OptKind::AdamW, Variant::Flash, 1);
+    cfg.bucket = 12345; // not in manifest
+    let err = match Trainer::new(cfg, &manifest, &rt) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("expected error for bad bucket"),
+    };
+    assert!(err.contains("12345"), "{err}");
+}
+
+#[test]
+fn unsupported_ablation_for_sgd_is_clean_error() {
+    let Some((manifest, rt)) = setup() else { return };
+    let cfg = tiny_cfg(OptKind::Sgd, Variant::OptQuant, 1);
+    let err = match Trainer::new(cfg, &manifest, &rt) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("expected error for sgd ablation"),
+    };
+    assert!(err.contains("ablation") || err.contains("no artifact"),
+            "{err}");
+}
+
+#[test]
+fn vision_track_trains_and_learns() {
+    let Some((manifest, rt)) = setup() else { return };
+    let cfg = TrainConfig {
+        preset: "vision".into(),
+        optimizer: OptKind::Sgd,
+        variant: Variant::Flash,
+        steps: 40,
+        lr: 0.05,
+        warmup: 5,
+        beta1: 0.9,
+        weight_decay: 3e-5,
+        bucket: 16384,
+        eval_batches: 4,
+        log_every: 1000,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(cfg, &manifest, &rt).unwrap();
+    t.run(true).unwrap();
+    let (_, acc) = t.evaluate().unwrap();
+    assert!(acc > 0.3, "vision accuracy {acc} not above chance (0.1)");
+}
+
+#[test]
+fn grad_release_reduces_tracked_gradient_peak() {
+    let Some((manifest, rt)) = setup() else { return };
+    use flashtrain::memory::tracker::Category;
+    let mut with = tiny_cfg(OptKind::AdamW, Variant::Flash, 2);
+    with.grad_release = true;
+    let mut without = with.clone();
+    without.grad_release = false;
+
+    let mut tw = Trainer::new(with, &manifest, &rt).unwrap();
+    tw.run(true).unwrap();
+    let mut tn = Trainer::new(without, &manifest, &rt).unwrap();
+    tn.run(true).unwrap();
+    let g_with = tw.tracker.category_peak(Category::Gradients);
+    let g_without = tn.tracker.category_peak(Category::Gradients);
+    assert!(g_with < g_without / 2,
+            "release {g_with} vs retain {g_without}");
+}
