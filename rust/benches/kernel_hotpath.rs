@@ -1,13 +1,16 @@
 //! Bench: hot-path microbenchmarks for the §Perf pass (not a paper
-//! table) — optimizer-step cost by bucket size and variant, the
+//! table) — native fused-step backend throughput (scalar vs parallel),
+//! the optimizer-step cost through the AOT HLO executables, the
 //! Rust-side format codec throughput, and the literal-marshalling
 //! overhead that dominates the L3 step loop.
 //!
-//!   cargo bench --bench kernel_hotpath -- [--quick]
+//!   cargo bench --bench kernel_hotpath -- [--quick] [--threads T]
+//!       [--bucket N]
 
+use flashtrain::backend::{ParallelBackend, ScalarBackend, StepBackend};
 use flashtrain::config::{OptKind, TrainConfig, Variant};
 use flashtrain::formats::{companding, weight_split, GROUP};
-use flashtrain::optim::{BucketOptimizer, Hyper};
+use flashtrain::optim::{BucketOptimizer, Hyper, State};
 use flashtrain::runtime::literal as lit;
 use flashtrain::runtime::{Manifest, Runtime};
 use flashtrain::util::bench::{bench_for, black_box, fmt_time};
@@ -15,44 +18,130 @@ use flashtrain::util::cli::Args;
 use flashtrain::util::rng::Rng;
 use flashtrain::util::table::Table;
 
+/// (optimizer, variant, label, persistent state bytes/param) rows the
+/// step benchmarks report.
+const STEP_ROWS: [(OptKind, Variant, &str, f64); 5] = [
+    (OptKind::AdamW, Variant::Reference, "adamw ref", 16.0),
+    (OptKind::AdamW, Variant::Flash, "adamw flash", 7.125),
+    (OptKind::AdamW, Variant::OptQuant, "adamw quant", 10.125),
+    (OptKind::Sgd, Variant::Flash, "sgd flash", 6.125),
+    (OptKind::Lion, Variant::Flash, "lion flash", 6.125),
+];
+
 fn main() {
     let args = Args::parse();
     let budget = if args.flag("quick") { 0.2 } else { 1.0 };
-
-    let manifest = Manifest::load_default().expect("run `make artifacts`");
-    let rt = Runtime::cpu().unwrap();
+    let threads = args.get_usize("threads", 0);
+    let bucket = args.get_usize("bucket", 1 << 20); // >= 1M params
     let mut rng = Rng::new(1);
     let cfg = TrainConfig::default();
 
-    // ---- optimizer step executable by bucket size & variant ---------------
+    // ---- native fused step: scalar vs parallel ----------------------------
+    let par = ParallelBackend::new(threads);
+    let nthreads = par.threads();
     let mut t = Table::new(
-        "fused optimizer step (HLO via PJRT), per bucket",
-        &["bucket", "variant", "median", "ns/param", "GB/s (state rw)"]);
-    for &bucket in manifest.buckets.keys().collect::<Vec<_>>() {
-        for (opt, variant, label, state_bytes) in [
-            (OptKind::AdamW, Variant::Reference, "adamw ref", 16.0),
-            (OptKind::AdamW, Variant::Flash, "adamw flash", 7.125),
-            (OptKind::Sgd, Variant::Flash, "sgd flash", 6.125),
-            (OptKind::Lion, Variant::Flash, "lion flash", 6.125),
-        ] {
-            let theta: Vec<f32> =
-                (0..bucket).map(|_| rng.normal() as f32 * 0.1).collect();
-            let mut opt_exec = BucketOptimizer::new(
-                &rt, &manifest, opt, variant, bucket, &theta).unwrap();
-            let g: Vec<f32> =
-                (0..bucket).map(|_| rng.normal() as f32 * 0.01).collect();
-            let h = Hyper::for_step(&cfg, 1e-3, 10);
-            let r = bench_for(label, budget, 5, || {
-                opt_exec.step_bucket(0, &g, &h).unwrap();
-            });
-            let med = r.median_s();
-            t.row(&[format!("{bucket}"), label.into(), fmt_time(med),
-                    format!("{:.1}", med * 1e9 / bucket as f64),
-                    format!("{:.2}",
-                            2.0 * state_bytes * bucket as f64 / med / 1e9)]);
-        }
+        &format!(
+            "native fused step (dequant->update->requant), {bucket} \
+             params, parallel={nthreads} threads"),
+        &["variant", "scalar", "parallel", "speedup", "Mparam/s (par)",
+          "GB/s state rw (par)"]);
+    for (opt, variant, label, state_bytes) in STEP_ROWS {
+        let theta: Vec<f32> =
+            (0..bucket).map(|_| rng.normal() as f32 * 0.1).collect();
+        let g: Vec<f32> = (0..bucket)
+            .map(|_| {
+                let x = rng.normal() as f32 * 0.01;
+                if variant.splits_weights() {
+                    flashtrain::formats::bf16::round_f32_to_bf16(x)
+                } else {
+                    x
+                }
+            })
+            .collect();
+        let n = bucket.next_multiple_of(GROUP);
+        let h = Hyper::for_step(&cfg, 1e-3, 10);
+        let mut g_pad = g.clone();
+        g_pad.resize(n, 0.0);
+
+        let mut st_scalar = State::init(&theta, n, opt, variant);
+        let r_scalar = bench_for(label, budget, 3, || {
+            ScalarBackend
+                .step_full(&mut st_scalar, &g_pad, opt, variant, &h)
+                .unwrap();
+        });
+        let mut st_par = State::init(&theta, n, opt, variant);
+        let r_par = bench_for(label, budget, 3, || {
+            par.step_full(&mut st_par, &g_pad, opt, variant, &h)
+                .unwrap();
+        });
+        let (ms, mp) = (r_scalar.median_s(), r_par.median_s());
+        t.row(&[
+            label.into(),
+            fmt_time(ms),
+            fmt_time(mp),
+            format!("{:.2}x", ms / mp),
+            format!("{:.0}", n as f64 / mp / 1e6),
+            format!("{:.2}", 2.0 * state_bytes * n as f64 / mp / 1e9),
+        ]);
     }
     t.print();
+
+    // ---- optimizer step executable by bucket size & variant ---------------
+    // (requires `make artifacts` + a real PJRT runtime; skipped otherwise)
+    match Manifest::load_default() {
+        Ok(manifest) => {
+            let rt = Runtime::cpu().unwrap();
+            let mut t = Table::new(
+                "fused optimizer step (HLO via PJRT), per bucket",
+                &["bucket", "variant", "median", "ns/param",
+                  "GB/s (state rw)"]);
+            let mut hlo_ok = true;
+            'outer: for &bucket in
+                manifest.buckets.keys().collect::<Vec<_>>()
+            {
+                for (opt, variant, label, state_bytes) in STEP_ROWS {
+                    if flashtrain::optim::artifact_name(opt, variant)
+                        .is_err()
+                    {
+                        continue;
+                    }
+                    let theta: Vec<f32> = (0..bucket)
+                        .map(|_| rng.normal() as f32 * 0.1)
+                        .collect();
+                    let mut opt_exec = match BucketOptimizer::new(
+                        &rt, &manifest, opt, variant, bucket, &theta)
+                    {
+                        Ok(o) => o,
+                        Err(e) => {
+                            println!("skipping HLO step bench: {e:#}");
+                            hlo_ok = false;
+                            break 'outer;
+                        }
+                    };
+                    let g: Vec<f32> = (0..bucket)
+                        .map(|_| rng.normal() as f32 * 0.01)
+                        .collect();
+                    let h = Hyper::for_step(&cfg, 1e-3, 10);
+                    let r = bench_for(label, budget, 5, || {
+                        opt_exec.step_bucket(0, &g, &h).unwrap();
+                    });
+                    let med = r.median_s();
+                    t.row(&[format!("{bucket}"), label.into(),
+                            fmt_time(med),
+                            format!("{:.1}", med * 1e9 / bucket as f64),
+                            format!("{:.2}",
+                                    2.0 * state_bytes * bucket as f64
+                                        / med / 1e9)]);
+                }
+            }
+            if hlo_ok {
+                t.print();
+            }
+        }
+        Err(e) => {
+            println!("skipping HLO step bench (run `make artifacts`): {e}");
+        }
+    }
 
     // ---- Rust codec throughput --------------------------------------------
     let n = 1 << 20;

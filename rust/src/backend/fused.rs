@@ -1,0 +1,162 @@
+//! The fused dequant → update → requant chain over one partition.
+//!
+//! This is the native mirror of the AOT fused-step kernels (paper
+//! Algorithms 4/5/6): reconstruct fp32 working copies for the
+//! partition only, apply the shared `scalar_ref` update rule, and
+//! restore the compact storage formats in place.  Scratch memory is
+//! bounded by the partition size (3 fp32 vectors worst case), never by
+//! the full parameter count — that is what makes the parallel backend's
+//! peak memory `O(partition × threads)` on top of the compact state.
+//!
+//! Bit-exactness: every step below runs the exact same element-wise and
+//! group-wise code as `scalar_ref::step_state` does on the whole
+//! buffer, so any GROUP-aligned partitioning yields identical bits.
+
+use crate::backend::partition::Part;
+use crate::config::{OptKind, Variant};
+use crate::formats::{companding, weight_split};
+use crate::optim::hyper::Hyper;
+use crate::optim::scalar_ref;
+
+/// One fused optimizer step over a single partition.
+pub fn step_part(p: &mut Part<'_>, opt: OptKind, variant: Variant,
+                 h: &Hyper) {
+    let n = p.len;
+    debug_assert_eq!(p.g.len(), n);
+    if n == 0 {
+        return;
+    }
+    let nocompand = variant == Variant::NoCompand;
+
+    // prologue: reconstruct fp32 working copies (partition-sized)
+    let mut theta = vec![0f32; n];
+    if variant.splits_weights() {
+        weight_split::decompress_slice(
+            p.theta_p.as_deref().expect("split state missing theta_p"),
+            p.rho.as_deref().expect("split state missing rho"),
+            &mut theta,
+        );
+    } else {
+        theta.copy_from_slice(p.theta.as_deref().expect("missing theta"));
+    }
+
+    let mut m = vec![0f32; n];
+    if variant.quantizes_state() {
+        let mq = p.mq.as_deref().expect("quant state missing mq");
+        let ms = p.ms.as_deref().expect("quant state missing ms");
+        if nocompand {
+            companding::dequant_momentum_linear(mq, ms, &mut m);
+        } else {
+            companding::dequant_momentum(mq, ms, &mut m);
+        }
+    } else {
+        m.copy_from_slice(p.m.as_deref().expect("missing momentum"));
+    }
+
+    let mut v = Vec::new();
+    if opt.has_variance() {
+        v = vec![0f32; n];
+        if variant.quantizes_state() {
+            let vq = p.vq.as_deref().expect("quant state missing vq");
+            let vs = p.vs.as_deref().expect("quant state missing vs");
+            if nocompand {
+                companding::dequant_variance_linear(vq, vs, &mut v);
+            } else {
+                companding::dequant_variance(vq, vs, &mut v);
+            }
+        } else {
+            v.copy_from_slice(p.v.as_deref().expect("missing variance"));
+        }
+    }
+
+    // update: shared scalar rules (the single source of update truth)
+    match opt {
+        OptKind::AdamW => {
+            scalar_ref::adamw_f32(&mut theta, &mut m, &mut v, p.g, h)
+        }
+        OptKind::Sgd => scalar_ref::sgd_f32(&mut theta, &mut m, p.g, h),
+        OptKind::Lion => scalar_ref::lion_f32(&mut theta, &mut m, p.g, h),
+    }
+
+    // epilogue: restore storage formats in place
+    if variant.splits_weights() {
+        weight_split::compress_slice(
+            &theta,
+            p.theta_p.as_deref_mut().unwrap(),
+            p.rho.as_deref_mut().unwrap(),
+        );
+    } else {
+        p.theta.as_deref_mut().unwrap().copy_from_slice(&theta);
+    }
+    if variant.quantizes_state() {
+        let mq = p.mq.as_deref_mut().unwrap();
+        let ms = p.ms.as_deref_mut().unwrap();
+        if nocompand {
+            companding::quant_momentum_linear(&m, mq, ms);
+        } else {
+            companding::quant_momentum(&m, mq, ms);
+        }
+        if opt.has_variance() {
+            let vq = p.vq.as_deref_mut().unwrap();
+            let vs = p.vs.as_deref_mut().unwrap();
+            if nocompand {
+                companding::quant_variance_linear(&v, vq, vs);
+            } else {
+                companding::quant_variance(&v, vq, vs);
+            }
+        }
+    } else {
+        p.m.as_deref_mut().unwrap().copy_from_slice(&m);
+        if opt.has_variance() {
+            p.v.as_deref_mut().unwrap().copy_from_slice(&v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::formats::GROUP;
+    use crate::optim::state::State;
+    use crate::util::rng::Rng;
+
+    /// A single full-range step_part must equal the legacy whole-buffer
+    /// scalar mirror bit for bit.
+    #[test]
+    fn full_range_part_matches_step_state() {
+        let n = 8 * GROUP;
+        let mut rng = Rng::new(41);
+        let theta0: Vec<f32> =
+            (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+        let g: Vec<f32> = (0..n)
+            .map(|_| {
+                let x = rng.normal() as f32 * 0.01;
+                crate::formats::bf16::round_f32_to_bf16(x)
+            })
+            .collect();
+        let cfg = TrainConfig::default();
+        let h = Hyper::for_step(&cfg, 1e-3, 2);
+
+        for opt in [OptKind::Sgd, OptKind::AdamW, OptKind::Lion] {
+            for variant in [Variant::Reference, Variant::Flash,
+                            Variant::WeightSplit, Variant::OptQuant,
+                            Variant::NoCompand] {
+                let mut a = State::init(&theta0, n, opt, variant);
+                let mut b = a.clone();
+                scalar_ref::step_state(&mut a, &g, opt, variant, &h);
+                let mut part = Part::of_range(&mut b, 0, n, &g);
+                step_part(&mut part, opt, variant, &h);
+                assert_eq!(a.theta, b.theta, "{opt}/{variant} theta");
+                assert_eq!(a.theta_p, b.theta_p, "{opt}/{variant} theta_p");
+                assert_eq!(a.rho, b.rho, "{opt}/{variant} rho");
+                assert_eq!(a.mq, b.mq, "{opt}/{variant} mq");
+                assert_eq!(a.ms, b.ms, "{opt}/{variant} ms");
+                assert_eq!(a.vq, b.vq, "{opt}/{variant} vq");
+                assert_eq!(a.vs, b.vs, "{opt}/{variant} vs");
+                assert_eq!(a.m, b.m, "{opt}/{variant} m");
+                assert_eq!(a.v, b.v, "{opt}/{variant} v");
+            }
+        }
+    }
+}

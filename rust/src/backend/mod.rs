@@ -1,0 +1,122 @@
+//! Native optimizer-step backends behind the [`StepBackend`] trait.
+//!
+//! The fused dequant → update → requant chain of Algorithms 2–4 was
+//! previously reachable only through the AOT HLO executables (with
+//! `optim::scalar_ref` as a sequential whole-buffer mirror).  This
+//! subsystem gives the same semantics two native implementations:
+//!
+//! * [`ScalarBackend`] — the fused chain over a single partition,
+//!   driven by the `scalar_ref` update rules and the `formats` codecs;
+//! * [`ParallelBackend`] — the same chain sharded into GROUP-aligned
+//!   partitions executed on a scoped `std::thread` pool, touching only
+//!   each partition's compact state slices (int8 codes + f16 scales +
+//!   split weights) plus a partition-sized f32 scratch.
+//!
+//! Both are bit-exact with each other and with
+//! `scalar_ref::step_state` (enforced by
+//! `rust/tests/backend_equivalence.rs`): every element update is
+//! independent and every group-wise requant happens on whole GROUPs, so
+//! partitioning at GROUP boundaries cannot change a single bit.
+//!
+//! Backend selection is a config concern (`config::BackendKind`,
+//! `backend = "hlo" | "scalar" | "parallel"`); `optim::BucketOptimizer`
+//! routes to either the HLO executables or a boxed [`StepBackend`].
+
+pub mod fused;
+pub mod parallel;
+pub mod partition;
+pub mod scalar;
+
+use anyhow::{bail, Result};
+
+use crate::config::{BackendKind, OptKind, Variant};
+use crate::formats::GROUP;
+use crate::optim::hyper::Hyper;
+use crate::optim::state::State;
+
+pub use parallel::ParallelBackend;
+pub use partition::Part;
+pub use scalar::ScalarBackend;
+
+/// A native engine for the fused optimizer step over compact state.
+pub trait StepBackend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Fused step over elements `[lo, hi)` of `state` (both bounds
+    /// GROUP-aligned), with `g` the gradient slice for that range.
+    /// `g` must already be in the gradient dtype semantics of the
+    /// variant (bf16-rounded for split tracks), exactly like
+    /// `scalar_ref::step_state`.
+    fn step_range(&self, state: &mut State, lo: usize, hi: usize,
+                  g: &[f32], opt: OptKind, variant: Variant, h: &Hyper)
+                  -> Result<()>;
+
+    /// Fused step over the whole (padded) state.
+    fn step_full(&self, state: &mut State, g: &[f32], opt: OptKind,
+                 variant: Variant, h: &Hyper) -> Result<()> {
+        let n = state.n;
+        self.step_range(state, 0, n, g, opt, variant, h)
+    }
+}
+
+/// Instantiate a native backend.  `threads` is only meaningful for
+/// `parallel` (0 = use `std::thread::available_parallelism`).
+pub fn make_backend(kind: BackendKind, threads: usize)
+                    -> Result<Box<dyn StepBackend>> {
+    match kind {
+        BackendKind::Scalar => Ok(Box::new(ScalarBackend)),
+        BackendKind::Parallel => Ok(Box::new(ParallelBackend::new(threads))),
+        BackendKind::Hlo => bail!(
+            "the hlo backend runs through the AOT executables \
+             (BucketOptimizer::new), not a native StepBackend"
+        ),
+    }
+}
+
+/// Shared range validation for native backends.
+pub(crate) fn validate_range(state: &State, lo: usize, hi: usize,
+                             g: &[f32]) -> Result<()> {
+    if lo > hi || hi > state.n {
+        bail!("step range [{lo}, {hi}) out of bounds for state of {}",
+              state.n);
+    }
+    if lo % GROUP != 0 || hi % GROUP != 0 {
+        bail!("step range [{lo}, {hi}) not GROUP({GROUP})-aligned; \
+               group-wise requantization needs whole groups");
+    }
+    if g.len() != hi - lo {
+        bail!("gradient length {} != range length {}", g.len(), hi - lo);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_builds_native_backends() {
+        assert_eq!(make_backend(BackendKind::Scalar, 0).unwrap().name(),
+                   "scalar");
+        assert_eq!(make_backend(BackendKind::Parallel, 3).unwrap().name(),
+                   "parallel");
+        assert!(make_backend(BackendKind::Hlo, 0).is_err());
+    }
+
+    #[test]
+    fn misaligned_range_rejected() {
+        let st = State::init(&[0.5f32; 64], 64, OptKind::AdamW,
+                             Variant::Flash);
+        let mut s2 = st.clone();
+        let g = vec![0f32; 10];
+        let be = ScalarBackend;
+        let h = Hyper::for_step(&crate::config::TrainConfig::default(),
+                                1e-3, 1);
+        assert!(be.step_range(&mut s2, 0, 10, &g, OptKind::AdamW,
+                              Variant::Flash, &h)
+            .is_err());
+        assert!(be.step_range(&mut s2, 0, 128, &vec![0f32; 128],
+                              OptKind::AdamW, Variant::Flash, &h)
+            .is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! Multi-threaded native backend: GROUP-aligned shards on a scoped
+//! std::thread pool.
+//!
+//! Flash-attention-style fusion applied to the optimizer step: each
+//! worker loads its partition's compact state once (bf16+i8 split
+//! weights, int8 codes, f16 scales), runs the whole
+//! dequant → update → requant chain in partition-local scratch, and
+//! writes the compact formats back once.  No worker ever touches
+//! another worker's groups, so the result is bit-identical to the
+//! sequential backend regardless of thread count or scheduling.
+
+use anyhow::Result;
+
+use crate::backend::fused::step_part;
+use crate::backend::partition::Part;
+use crate::backend::{validate_range, StepBackend};
+use crate::config::{OptKind, Variant};
+use crate::formats::GROUP;
+use crate::optim::hyper::Hyper;
+use crate::optim::state::State;
+
+pub struct ParallelBackend {
+    threads: usize,
+}
+
+impl ParallelBackend {
+    /// `threads == 0` selects `std::thread::available_parallelism()`.
+    pub fn new(threads: usize) -> ParallelBackend {
+        let t = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            threads
+        };
+        ParallelBackend { threads: t.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// GROUP-aligned partition sizes for `n` elements over at most
+    /// `self.threads` workers (remainder groups spread over the head).
+    fn partition_sizes(&self, n: usize) -> Vec<usize> {
+        let n_groups = n / GROUP;
+        let t = self.threads.min(n_groups).max(1);
+        let base = n_groups / t;
+        let rem = n_groups % t;
+        (0..t)
+            .map(|i| (base + usize::from(i < rem)) * GROUP)
+            .collect()
+    }
+}
+
+impl StepBackend for ParallelBackend {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn step_range(&self, state: &mut State, lo: usize, hi: usize,
+                  g: &[f32], opt: OptKind, variant: Variant, h: &Hyper)
+                  -> Result<()> {
+        validate_range(state, lo, hi, g)?;
+        if hi == lo {
+            return Ok(());
+        }
+        let sizes = self.partition_sizes(hi - lo);
+        let root = Part::of_range(state, lo, hi, g);
+        let mut parts = root.split_many(&sizes);
+        let h = *h;
+        std::thread::scope(|s| {
+            let mut iter = parts.drain(..);
+            // this thread takes the first shard; spawn the rest
+            let mut own = iter.next().expect("at least one partition");
+            for mut part in iter {
+                s.spawn(move || step_part(&mut part, opt, variant, &h));
+            }
+            step_part(&mut own, opt, variant, &h);
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::ScalarBackend;
+    use crate::config::TrainConfig;
+    use crate::util::rng::Rng;
+
+    fn assert_states_bit_equal(a: &State, b: &State, what: &str) {
+        assert_eq!(a.theta_p, b.theta_p, "{what} theta_p");
+        assert_eq!(a.rho, b.rho, "{what} rho");
+        assert_eq!(a.mq, b.mq, "{what} mq");
+        assert_eq!(a.ms, b.ms, "{what} ms");
+        assert_eq!(a.vq, b.vq, "{what} vq");
+        assert_eq!(a.vs, b.vs, "{what} vs");
+        let eq_f32 = |x: &Option<Vec<f32>>, y: &Option<Vec<f32>>| {
+            match (x, y) {
+                (Some(x), Some(y)) => x
+                    .iter()
+                    .zip(y)
+                    .all(|(p, q)| p.to_bits() == q.to_bits()),
+                (None, None) => true,
+                _ => false,
+            }
+        };
+        assert!(eq_f32(&a.theta, &b.theta), "{what} theta");
+        assert!(eq_f32(&a.m, &b.m), "{what} m");
+        assert!(eq_f32(&a.v, &b.v), "{what} v");
+    }
+
+    #[test]
+    fn partition_sizes_cover_and_align() {
+        let be = ParallelBackend::new(4);
+        for n_groups in [1usize, 3, 4, 5, 17] {
+            let n = n_groups * GROUP;
+            let sizes = be.partition_sizes(n);
+            assert!(sizes.len() <= 4);
+            assert_eq!(sizes.iter().sum::<usize>(), n);
+            assert!(sizes.iter().all(|s| s % GROUP == 0 && *s > 0));
+        }
+    }
+
+    #[test]
+    fn parallel_matches_scalar_on_uneven_shards() {
+        // 5 groups over 3 threads -> shard sizes 2/2/1 groups
+        let n = 5 * GROUP;
+        let mut rng = Rng::new(11);
+        let theta0: Vec<f32> =
+            (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+        let g: Vec<f32> = (0..n)
+            .map(|_| {
+                crate::formats::bf16::round_f32_to_bf16(
+                    rng.normal() as f32 * 0.01)
+            })
+            .collect();
+        let h = Hyper::for_step(&TrainConfig::default(), 1e-3, 1);
+        let mut a = State::init(&theta0, n, OptKind::AdamW, Variant::Flash);
+        let mut b = a.clone();
+        ScalarBackend
+            .step_full(&mut a, &g, OptKind::AdamW, Variant::Flash, &h)
+            .unwrap();
+        ParallelBackend::new(3)
+            .step_full(&mut b, &g, OptKind::AdamW, Variant::Flash, &h)
+            .unwrap();
+        assert_states_bit_equal(&a, &b, "adamw/flash");
+    }
+
+    #[test]
+    fn more_threads_than_groups_is_fine() {
+        let n = 2 * GROUP;
+        let theta0 = vec![0.5f32; n];
+        let g = vec![0.01f32; n];
+        let h = Hyper::for_step(&TrainConfig::default(), 1e-3, 1);
+        let mut a = State::init(&theta0, n, OptKind::Sgd,
+                                Variant::Reference);
+        let mut b = a.clone();
+        ScalarBackend
+            .step_full(&mut a, &g, OptKind::Sgd, Variant::Reference, &h)
+            .unwrap();
+        ParallelBackend::new(16)
+            .step_full(&mut b, &g, OptKind::Sgd, Variant::Reference, &h)
+            .unwrap();
+        assert_states_bit_equal(&a, &b, "sgd/reference");
+    }
+}

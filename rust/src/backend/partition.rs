@@ -1,0 +1,153 @@
+//! GROUP-aligned mutable partition views over a `State`.
+//!
+//! A [`Part`] borrows disjoint sub-slices of every buffer the state
+//! actually carries (element-indexed buffers sliced by elements, group
+//! scale buffers by groups) plus the matching gradient slice.  Parts
+//! are produced by consuming splits, so the borrow checker proves
+//! disjointness and the parallel backend can hand one part per thread
+//! with no locks and no unsafe.
+
+use crate::formats::GROUP;
+use crate::optim::state::State;
+
+/// Mutable view of one GROUP-aligned partition of a `State`.
+pub struct Part<'a> {
+    pub theta: Option<&'a mut [f32]>,
+    pub theta_p: Option<&'a mut [u16]>,
+    pub rho: Option<&'a mut [i8]>,
+    pub m: Option<&'a mut [f32]>,
+    pub v: Option<&'a mut [f32]>,
+    pub mq: Option<&'a mut [i8]>,
+    /// f16 scale bits, one per GROUP elements of the partition
+    pub ms: Option<&'a mut [u16]>,
+    pub vq: Option<&'a mut [u8]>,
+    pub vs: Option<&'a mut [u16]>,
+    pub g: &'a [f32],
+    pub len: usize,
+}
+
+fn split_opt<'a, T>(o: Option<&'a mut [T]>, at: usize)
+                    -> (Option<&'a mut [T]>, Option<&'a mut [T]>) {
+    match o {
+        Some(s) => {
+            let (a, b) = s.split_at_mut(at);
+            (Some(a), Some(b))
+        }
+        None => (None, None),
+    }
+}
+
+impl<'a> Part<'a> {
+    /// View of elements `[lo, hi)` of `state` (GROUP-aligned bounds)
+    /// with the gradient slice for that range.
+    pub fn of_range(state: &'a mut State, lo: usize, hi: usize,
+                    g: &'a [f32]) -> Part<'a> {
+        assert!(lo <= hi && hi <= state.n, "range [{lo}, {hi}) vs {}",
+                state.n);
+        assert_eq!(lo % GROUP, 0, "partition start must be group-aligned");
+        assert_eq!(hi % GROUP, 0, "partition end must be group-aligned");
+        assert_eq!(g.len(), hi - lo);
+        let (glo, ghi) = (lo / GROUP, hi / GROUP);
+        Part {
+            theta: state.theta.as_mut().map(|b| &mut b[lo..hi]),
+            theta_p: state.theta_p.as_mut().map(|b| &mut b[lo..hi]),
+            rho: state.rho.as_mut().map(|b| &mut b[lo..hi]),
+            m: state.m.as_mut().map(|b| &mut b[lo..hi]),
+            v: state.v.as_mut().map(|b| &mut b[lo..hi]),
+            mq: state.mq.as_mut().map(|b| &mut b[lo..hi]),
+            ms: state.ms.as_mut().map(|b| &mut b[glo..ghi]),
+            vq: state.vq.as_mut().map(|b| &mut b[lo..hi]),
+            vs: state.vs.as_mut().map(|b| &mut b[glo..ghi]),
+            g,
+            len: hi - lo,
+        }
+    }
+
+    /// Split into two disjoint parts at element offset `at`
+    /// (GROUP-aligned).
+    pub fn split_at(self, at: usize) -> (Part<'a>, Part<'a>) {
+        assert_eq!(at % GROUP, 0, "split point must be group-aligned");
+        assert!(at <= self.len);
+        let gs = at / GROUP;
+        let (theta0, theta1) = split_opt(self.theta, at);
+        let (tp0, tp1) = split_opt(self.theta_p, at);
+        let (rho0, rho1) = split_opt(self.rho, at);
+        let (m0, m1) = split_opt(self.m, at);
+        let (v0, v1) = split_opt(self.v, at);
+        let (mq0, mq1) = split_opt(self.mq, at);
+        let (ms0, ms1) = split_opt(self.ms, gs);
+        let (vq0, vq1) = split_opt(self.vq, at);
+        let (vs0, vs1) = split_opt(self.vs, gs);
+        let (g0, g1) = self.g.split_at(at);
+        (
+            Part { theta: theta0, theta_p: tp0, rho: rho0, m: m0, v: v0,
+                   mq: mq0, ms: ms0, vq: vq0, vs: vs0, g: g0, len: at },
+            Part { theta: theta1, theta_p: tp1, rho: rho1, m: m1, v: v1,
+                   mq: mq1, ms: ms1, vq: vq1, vs: vs1, g: g1,
+                   len: self.len - at },
+        )
+    }
+
+    /// Split into `sizes.len()` consecutive parts; `sizes` are element
+    /// counts (each GROUP-aligned) and must sum to `self.len`.
+    pub fn split_many(self, sizes: &[usize]) -> Vec<Part<'a>> {
+        assert!(!sizes.is_empty());
+        assert_eq!(sizes.iter().sum::<usize>(), self.len,
+                   "partition sizes must cover the part exactly");
+        let mut out = Vec::with_capacity(sizes.len());
+        let mut rest = self;
+        for &sz in &sizes[..sizes.len() - 1] {
+            let (head, tail) = rest.split_at(sz);
+            out.push(head);
+            rest = tail;
+        }
+        out.push(rest);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{OptKind, Variant};
+
+    #[test]
+    fn of_range_slices_all_buffers() {
+        let n = 4 * GROUP;
+        let mut st = State::init(&vec![0.25f32; n], n, OptKind::AdamW,
+                                 Variant::Flash);
+        let g = vec![0f32; 2 * GROUP];
+        let p = Part::of_range(&mut st, GROUP, 3 * GROUP, &g);
+        assert_eq!(p.len, 2 * GROUP);
+        assert_eq!(p.theta_p.as_ref().unwrap().len(), 2 * GROUP);
+        assert_eq!(p.ms.as_ref().unwrap().len(), 2);
+        assert!(p.theta.is_none());
+    }
+
+    #[test]
+    fn split_many_covers_exactly() {
+        let n = 8 * GROUP;
+        let mut st = State::init(&vec![0.1f32; n], n, OptKind::AdamW,
+                                 Variant::OptQuant);
+        let g = vec![0f32; n];
+        let root = Part::of_range(&mut st, 0, n, &g);
+        let parts = root.split_many(&[3 * GROUP, 4 * GROUP, GROUP]);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].len, 3 * GROUP);
+        assert_eq!(parts[1].len, 4 * GROUP);
+        assert_eq!(parts[2].len, GROUP);
+        assert_eq!(parts[1].ms.as_ref().unwrap().len(), 4);
+        assert_eq!(parts[2].g.len(), GROUP);
+    }
+
+    #[test]
+    #[should_panic(expected = "group-aligned")]
+    fn misaligned_split_panics() {
+        let n = 2 * GROUP;
+        let mut st = State::init(&vec![0.1f32; n], n, OptKind::Sgd,
+                                 Variant::Reference);
+        let g = vec![0f32; n];
+        let root = Part::of_range(&mut st, 0, n, &g);
+        let _ = root.split_at(GROUP / 2);
+    }
+}

@@ -1,0 +1,80 @@
+//! Sequential native backend: the fused chain over one partition.
+
+use anyhow::Result;
+
+use crate::backend::fused::step_part;
+use crate::backend::partition::Part;
+use crate::backend::{validate_range, StepBackend};
+use crate::config::{OptKind, Variant};
+use crate::optim::hyper::Hyper;
+use crate::optim::state::State;
+
+/// Single-threaded fused step over the whole range, built on the
+/// `scalar_ref` update rules.  Serves as the in-process reference the
+/// differential suite pins [`ParallelBackend`] against.
+///
+/// [`ParallelBackend`]: crate::backend::ParallelBackend
+pub struct ScalarBackend;
+
+impl StepBackend for ScalarBackend {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn step_range(&self, state: &mut State, lo: usize, hi: usize,
+                  g: &[f32], opt: OptKind, variant: Variant, h: &Hyper)
+                  -> Result<()> {
+        validate_range(state, lo, hi, g)?;
+        let mut part = Part::of_range(state, lo, hi, g);
+        step_part(&mut part, opt, variant, h);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::formats::GROUP;
+    use crate::util::rng::Rng;
+
+    /// Stepping two disjoint sub-ranges must equal one full-range step:
+    /// group-wise requant sees identical whole groups either way.
+    #[test]
+    fn range_steps_compose() {
+        let n = 6 * GROUP;
+        let mut rng = Rng::new(7);
+        let theta0: Vec<f32> =
+            (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+        let g: Vec<f32> = (0..n)
+            .map(|_| {
+                crate::formats::bf16::round_f32_to_bf16(
+                    rng.normal() as f32 * 0.01)
+            })
+            .collect();
+        let h = Hyper::for_step(&TrainConfig::default(), 1e-3, 1);
+        let be = ScalarBackend;
+
+        let mut whole = State::init(&theta0, n, OptKind::AdamW,
+                                    Variant::Flash);
+        be.step_full(&mut whole, &g, OptKind::AdamW, Variant::Flash, &h)
+            .unwrap();
+
+        let mut split = State::init(&theta0, n, OptKind::AdamW,
+                                    Variant::Flash);
+        let cut = 2 * GROUP;
+        be.step_range(&mut split, 0, cut, &g[..cut], OptKind::AdamW,
+                      Variant::Flash, &h)
+            .unwrap();
+        be.step_range(&mut split, cut, n, &g[cut..], OptKind::AdamW,
+                      Variant::Flash, &h)
+            .unwrap();
+
+        assert_eq!(whole.theta_p, split.theta_p);
+        assert_eq!(whole.rho, split.rho);
+        assert_eq!(whole.mq, split.mq);
+        assert_eq!(whole.ms, split.ms);
+        assert_eq!(whole.vq, split.vq);
+        assert_eq!(whole.vs, split.vs);
+    }
+}

@@ -104,6 +104,48 @@ impl fmt::Display for Variant {
     }
 }
 
+/// Which engine executes the fused optimizer step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT HLO executables through the PJRT runtime (the reference).
+    Hlo,
+    /// Native sequential fused chain (`backend::ScalarBackend`).
+    Scalar,
+    /// Native thread-parallel fused chain (`backend::ParallelBackend`).
+    Parallel,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "hlo" | "pjrt" | "xla" => Some(BackendKind::Hlo),
+            "scalar" => Some(BackendKind::Scalar),
+            "parallel" | "threads" => Some(BackendKind::Parallel),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Hlo => "hlo",
+            BackendKind::Scalar => "scalar",
+            BackendKind::Parallel => "parallel",
+        }
+    }
+
+    /// Native backends run without compiled artifacts or a PJRT
+    /// runtime; the optimizer step needs no manifest entry for them.
+    pub fn is_native(self) -> bool {
+        !matches!(self, BackendKind::Hlo)
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Full run configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -122,7 +164,12 @@ pub struct TrainConfig {
     pub seed: u64,
     pub data_seed: u64,
     /// optimizer bucket size (elements); must exist in the manifest
+    /// when `backend = hlo` (native backends accept any size)
     pub bucket: usize,
+    /// engine for the fused optimizer step
+    pub backend: BackendKind,
+    /// worker threads for the parallel backend (0 = all cores)
+    pub threads: usize,
     /// eagerly free gradient buckets during the optimizer pass
     pub grad_release: bool,
     /// simulated data-parallel worker count (gradients allreduced)
@@ -150,6 +197,8 @@ impl Default for TrainConfig {
             seed: 0,
             data_seed: 1234,
             bucket: 65536,
+            backend: BackendKind::Hlo,
+            threads: 0,
             grad_release: true,
             workers: 1,
             eval_every: 0,
@@ -184,6 +233,11 @@ impl TrainConfig {
         self.seed = args.get_u64("seed", self.seed);
         self.data_seed = args.get_u64("data-seed", self.data_seed);
         self.bucket = args.get_usize("bucket", self.bucket);
+        if let Some(b) = args.get("backend") {
+            self.backend = BackendKind::parse(b)
+                .unwrap_or_else(|| panic!("unknown backend {b:?}"));
+        }
+        self.threads = args.get_usize("threads", self.threads);
         self.workers = args.get_usize("workers", self.workers);
         self.eval_every = args.get_usize("eval-every", self.eval_every);
         self.eval_batches = args.get_usize("eval-batches",
@@ -256,6 +310,12 @@ impl TrainConfig {
                     c.data_seed = v.as_f64().ok_or("data_seed")? as u64
                 }
                 "bucket" => c.bucket = v.as_usize().ok_or("bucket")?,
+                "backend" => {
+                    c.backend = BackendKind::parse(
+                        v.as_str().ok_or("backend")?)
+                        .ok_or("bad backend")?
+                }
+                "threads" => c.threads = v.as_usize().ok_or("threads")?,
                 "grad_release" => {
                     c.grad_release = matches!(v, Json::Bool(true))
                 }
@@ -295,6 +355,8 @@ impl TrainConfig {
         m.insert("seed".into(), Json::Num(self.seed as f64));
         m.insert("data_seed".into(), Json::Num(self.data_seed as f64));
         m.insert("bucket".into(), Json::Num(self.bucket as f64));
+        m.insert("backend".into(), Json::Str(self.backend.name().into()));
+        m.insert("threads".into(), Json::Num(self.threads as f64));
         m.insert("grad_release".into(), Json::Bool(self.grad_release));
         m.insert("workers".into(), Json::Num(self.workers as f64));
         m.insert("eval_every".into(), Json::Num(self.eval_every as f64));
@@ -340,6 +402,35 @@ mod tests {
         assert_eq!(c.optimizer, OptKind::Lion);
         assert_eq!(c.variant, Variant::Reference);
         assert!(!c.grad_release);
+    }
+
+    #[test]
+    fn backend_selection_roundtrips() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.backend, BackendKind::Hlo);
+        c.backend = BackendKind::Parallel;
+        c.threads = 4;
+        let j = c.to_json();
+        let c2 = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c2.backend, BackendKind::Parallel);
+        assert_eq!(c2.threads, 4);
+
+        let args = Args::parse_from(
+            "--backend scalar --threads 2"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let mut c3 = TrainConfig::default();
+        c3.apply_args(&args);
+        assert_eq!(c3.backend, BackendKind::Scalar);
+        assert_eq!(c3.threads, 2);
+
+        assert_eq!(BackendKind::parse("PARALLEL"),
+                   Some(BackendKind::Parallel));
+        assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Hlo));
+        assert!(BackendKind::parse("gpu").is_none());
+        assert!(BackendKind::Parallel.is_native());
+        assert!(!BackendKind::Hlo.is_native());
     }
 
     #[test]

@@ -3,5 +3,5 @@
 pub mod experiment;
 pub mod json;
 
-pub use experiment::{OptKind, TrainConfig, Variant};
+pub use experiment::{BackendKind, OptKind, TrainConfig, Variant};
 pub use json::Json;

@@ -10,7 +10,8 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{TrainConfig, Variant};
+use crate::backend::make_backend;
+use crate::config::{BackendKind, TrainConfig, Variant};
 use crate::coordinator::data_parallel::allreduce_mean;
 use crate::coordinator::metrics::{EvalRecord, Metrics, StepRecord};
 use crate::coordinator::schedule::Schedule;
@@ -65,8 +66,15 @@ impl Trainer {
         // deterministic parameter init from cfg.seed
         let theta0 = init_params(&model, cfg.seed, cfg.init_scale as f32);
 
-        let opt = BucketOptimizer::new(rt, manifest, cfg.optimizer,
-                                       cfg.variant, cfg.bucket, &theta0)?;
+        // fused-step engine: AOT HLO executables or a native backend
+        let opt = match cfg.backend {
+            BackendKind::Hlo => BucketOptimizer::new(
+                rt, manifest, cfg.optimizer, cfg.variant, cfg.bucket,
+                &theta0)?,
+            kind => BucketOptimizer::native(
+                cfg.optimizer, cfg.variant, cfg.bucket, &theta0,
+                make_backend(kind, cfg.threads)?)?,
+        };
 
         let data = match model.kind {
             ModelKind::Lm { vocab, seq_len, .. } => DataSource::Lm {

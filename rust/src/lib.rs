@@ -15,7 +15,10 @@
 //!   optimizer with gradient release, data-parallel simulation, memory
 //!   accounting, compact checkpoints, synthetic workloads, and the
 //!   bench harness that regenerates every table and figure of the
-//!   paper's evaluation.
+//!   paper's evaluation.  The fused optimizer step runs on a pluggable
+//!   engine (`backend::StepBackend`): the AOT HLO executables, a native
+//!   sequential backend, or a thread-parallel backend over GROUP-aligned
+//!   shards — all bit-exact to each other (see docs/CONFIG.md).
 //!
 //! Python runs once at `make artifacts`; the request path is pure Rust.
 //!
@@ -26,6 +29,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
+pub mod backend;
 pub mod checkpoint;
 pub mod config;
 pub mod coordinator;

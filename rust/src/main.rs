@@ -61,6 +61,7 @@ fn print_help() {
          train         [--config configs/lm_flash_adamw.json]\n                \
          --preset lm-tiny --optimizer adamw --variant flash\n                \
          --steps N --lr X --bucket 65536 --workers K\n                \
+         --backend hlo|scalar|parallel [--threads T]\n                \
          [--no-grad-release] [--eval-every N] [--save ckpt.flt]\n                \
          [--csv out.csv] [--plot]\n  \
          memory        [--model llama|gpt2|resnet] — Table 1 / Fig 1 model\n  \
@@ -90,9 +91,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let rt = Runtime::cpu()?;
     println!(
         "flashtrain: preset={} optimizer={} variant={} steps={} bucket={} \
-         workers={} grad_release={}",
+         backend={} workers={} grad_release={}",
         cfg.preset, cfg.optimizer, cfg.variant, cfg.steps, cfg.bucket,
-        cfg.workers, cfg.grad_release
+        cfg.backend, cfg.workers, cfg.grad_release
     );
     let mut trainer = Trainer::new(cfg.clone(), &manifest, &rt)?;
     trainer.run(args.flag("quiet"))?;

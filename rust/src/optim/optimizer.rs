@@ -1,17 +1,24 @@
-//! Bucketed optimizer: streams gradient buckets through the fused AOT
-//! step executable and writes updated state back into the compact
-//! host buffers.
+//! Bucketed optimizer: streams gradient buckets through the selected
+//! step engine and writes updated state back into the compact host
+//! buffers.
 //!
-//! This is the Layer-3 face of the paper's contribution: one compiled
-//! artifact per (optimizer, variant, bucket-size); the coordinator
-//! slices the flat gradient into buckets and steps them one at a time,
-//! which is what makes gradient release (freeing each bucket's gradient
-//! right after its update) possible.
+//! This is the Layer-3 face of the paper's contribution: the
+//! coordinator slices the flat gradient into buckets and steps them one
+//! at a time, which is what makes gradient release (freeing each
+//! bucket's gradient right after its update) possible.  Two engines
+//! execute the fused step:
+//!
+//! * **HLO** — one compiled AOT artifact per (optimizer, variant,
+//!   bucket-size), run through PJRT (the reference path);
+//! * **Native** — a [`StepBackend`] (`scalar` or `parallel`) running
+//!   the same dequant → update → requant chain in pure Rust, with no
+//!   artifact or PJRT dependency and no bucket-size restrictions.
 
 use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
+use crate::backend::StepBackend;
 use crate::config::{OptKind, Variant};
 use crate::formats::{bf16, GROUP};
 use crate::optim::hyper::Hyper;
@@ -39,19 +46,32 @@ pub fn artifact_name(kind: OptKind, variant: Variant)
     })
 }
 
+/// How the fused step is executed.
+enum Engine {
+    Hlo {
+        exe: Rc<Executable>,
+        /// scratch for bf16 gradient bits (reused across buckets)
+        g_bits: Vec<u16>,
+    },
+    Native {
+        backend: Box<dyn StepBackend>,
+        /// scratch for bf16-rounded gradients (split variants)
+        g_round: Vec<f32>,
+    },
+}
+
 pub struct BucketOptimizer {
     pub kind: OptKind,
     pub variant: Variant,
     pub bucket: usize,
     pub n_buckets: usize,
     pub state: State,
-    exe: Rc<Executable>,
-    /// scratch for bf16 gradient bits (reused across buckets)
-    g_bits: Vec<u16>,
+    engine: Engine,
 }
 
 impl BucketOptimizer {
-    /// Build from an initial full-precision parameter vector.
+    /// Build on the HLO engine from an initial full-precision parameter
+    /// vector; requires the AOT artifact for (kind, variant, bucket).
     pub fn new(rt: &Runtime, manifest: &Manifest, kind: OptKind,
                variant: Variant, bucket: usize, theta0: &[f32])
                -> Result<BucketOptimizer> {
@@ -66,9 +86,39 @@ impl BucketOptimizer {
             bucket,
             n_buckets,
             state,
-            exe,
-            g_bits: vec![0u16; bucket],
+            engine: Engine::Hlo { exe, g_bits: vec![0u16; bucket] },
         })
+    }
+
+    /// Build on a native [`StepBackend`] — no manifest, no PJRT, any
+    /// bucket size, every (optimizer, variant) combination.  The padded
+    /// state length rounds `n_buckets * bucket` up to a GROUP multiple
+    /// so group-wise requantization always sees whole groups.
+    pub fn native(kind: OptKind, variant: Variant, bucket: usize,
+                  theta0: &[f32], backend: Box<dyn StepBackend>)
+                  -> Result<BucketOptimizer> {
+        if bucket == 0 {
+            bail!("bucket size must be positive");
+        }
+        let n_buckets = theta0.len().div_ceil(bucket).max(1);
+        let padded = (n_buckets * bucket).next_multiple_of(GROUP);
+        let state = State::init(theta0, padded, kind, variant);
+        Ok(BucketOptimizer {
+            kind,
+            variant,
+            bucket,
+            n_buckets,
+            state,
+            engine: Engine::Native { backend, g_round: Vec::new() },
+        })
+    }
+
+    /// Name of the engine stepping this optimizer.
+    pub fn engine_name(&self) -> &'static str {
+        match &self.engine {
+            Engine::Hlo { .. } => "hlo",
+            Engine::Native { backend, .. } => backend.name(),
+        }
     }
 
     /// Apply one optimizer step to bucket `i` given its gradient slice
@@ -79,21 +129,46 @@ impl BucketOptimizer {
         assert!(i < self.n_buckets);
         assert_eq!(g.len(), self.bucket);
         let b = self.bucket;
-        let gsz = b / GROUP;
         let (lo, hi) = (i * b, (i + 1) * b);
+        let (kind, variant) = (self.kind, self.variant);
+
+        if let Engine::Native { backend, g_round } = &mut self.engine {
+            if b % GROUP != 0 {
+                bail!(
+                    "native backends requantize whole groups; bucket \
+                     size {b} is not a multiple of {GROUP} — step the \
+                     full state via step_all instead"
+                );
+            }
+            let g = if variant.splits_weights() {
+                g_round.clear();
+                g_round.extend(
+                    g.iter().map(|&x| bf16::round_f32_to_bf16(x)));
+                &g_round[..]
+            } else {
+                g
+            };
+            return backend.step_range(&mut self.state, lo, hi, g, kind,
+                                      variant, h);
+        }
+
+        let Engine::Hlo { exe, g_bits } = &mut self.engine else {
+            unreachable!()
+        };
+        let gsz = b / GROUP;
         let (slo, shi) = (i * gsz, (i + 1) * gsz);
         let hyp_lit = lit::lit_f32(&h.to_vec8(), &[8])?;
 
-        let g_lit = if self.variant.splits_weights() {
-            for (dst, &src) in self.g_bits.iter_mut().zip(g) {
+        let g_lit = if variant.splits_weights() {
+            for (dst, &src) in g_bits.iter_mut().zip(g) {
                 *dst = bf16::f32_to_bf16_bits(src);
             }
-            lit::lit_bf16_bits(&self.g_bits, &[b])?
+            lit::lit_bf16_bits(g_bits, &[b])?
         } else {
             lit::lit_f32(g, &[b])?
         };
 
-        match (self.kind, self.variant) {
+        match (kind, variant) {
             (OptKind::AdamW, Variant::Flash)
             | (OptKind::AdamW, Variant::NoCompand) => {
                 let st = &mut self.state;
@@ -110,7 +185,7 @@ impl BucketOptimizer {
                                       &[gsz])?,
                     g_lit,
                 ];
-                let out = self.exe.run(&ins)?;
+                let out = exe.run(&ins)?;
                 st.theta_p.as_mut().unwrap()[lo..hi]
                     .copy_from_slice(&lit::to_bf16_bits(&out[0])?);
                 st.rho.as_mut().unwrap()[lo..hi]
@@ -137,7 +212,7 @@ impl BucketOptimizer {
                                       &[gsz])?,
                     g_lit,
                 ];
-                let out = self.exe.run(&ins)?;
+                let out = exe.run(&ins)?;
                 st.theta_p.as_mut().unwrap()[lo..hi]
                     .copy_from_slice(&lit::to_bf16_bits(&out[0])?);
                 st.rho.as_mut().unwrap()[lo..hi]
@@ -158,7 +233,7 @@ impl BucketOptimizer {
                     lit::lit_f32(&st.v.as_ref().unwrap()[lo..hi], &[b])?,
                     g_lit,
                 ];
-                let out = self.exe.run(&ins)?;
+                let out = exe.run(&ins)?;
                 st.theta_p.as_mut().unwrap()[lo..hi]
                     .copy_from_slice(&lit::to_bf16_bits(&out[0])?);
                 st.rho.as_mut().unwrap()[lo..hi]
@@ -181,7 +256,7 @@ impl BucketOptimizer {
                                       &[gsz])?,
                     g_lit,
                 ];
-                let out = self.exe.run(&ins)?;
+                let out = exe.run(&ins)?;
                 st.theta.as_mut().unwrap()[lo..hi]
                     .copy_from_slice(&lit::to_f32_vec(&out[0])?);
                 st.mq.as_mut().unwrap()[lo..hi]
@@ -202,7 +277,7 @@ impl BucketOptimizer {
                     lit::lit_f32(&st.v.as_ref().unwrap()[lo..hi], &[b])?,
                     g_lit,
                 ];
-                let out = self.exe.run(&ins)?;
+                let out = exe.run(&ins)?;
                 st.theta.as_mut().unwrap()[lo..hi]
                     .copy_from_slice(&lit::to_f32_vec(&out[0])?);
                 st.m.as_mut().unwrap()[lo..hi]
@@ -219,7 +294,7 @@ impl BucketOptimizer {
                     lit::lit_f32(&st.m.as_ref().unwrap()[lo..hi], &[b])?,
                     g_lit,
                 ];
-                let out = self.exe.run(&ins)?;
+                let out = exe.run(&ins)?;
                 st.theta.as_mut().unwrap()[lo..hi]
                     .copy_from_slice(&lit::to_f32_vec(&out[0])?);
                 st.m.as_mut().unwrap()[lo..hi]
@@ -235,8 +310,43 @@ impl BucketOptimizer {
     /// Step every bucket of a flat gradient (padded with zeros).
     /// `on_bucket_done(i)` fires after each bucket — the gradient-release
     /// hook (the coordinator frees that bucket's gradient there).
+    ///
+    /// On a native engine the whole padded state is stepped in one
+    /// fused pass (the backend shards it internally), so arbitrary
+    /// bucket sizes — including non-multiples of GROUP — are fine;
+    /// `on_bucket_done` still fires once per logical bucket.
     pub fn step_all<F: FnMut(usize)>(&mut self, grads: &[f32], h: &Hyper,
                                      mut on_bucket_done: F) -> Result<()> {
+        if matches!(self.engine, Engine::Native { .. }) {
+            let n = self.state.n;
+            let (kind, variant) = (self.kind, self.variant);
+            // stage a copy only when rounding or padding is needed
+            let buf: Vec<f32>;
+            let g: &[f32] = if !variant.splits_weights()
+                && grads.len() == n
+            {
+                grads
+            } else {
+                let mut b: Vec<f32> = Vec::with_capacity(n);
+                if variant.splits_weights() {
+                    b.extend(grads.iter().take(n)
+                        .map(|&x| bf16::round_f32_to_bf16(x)));
+                } else {
+                    b.extend(grads.iter().take(n).copied());
+                }
+                b.resize(n, 0.0);
+                buf = b;
+                &buf
+            };
+            let Engine::Native { backend, .. } = &mut self.engine else {
+                unreachable!()
+            };
+            backend.step_full(&mut self.state, g, kind, variant, h)?;
+            for i in 0..self.n_buckets {
+                on_bucket_done(i);
+            }
+            return Ok(());
+        }
         let b = self.bucket;
         let mut padded_tail: Vec<f32>;
         for i in 0..self.n_buckets {
@@ -274,5 +384,86 @@ impl BucketOptimizer {
         let mut w = self.state.master_weights();
         w.truncate(count);
         w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::make_backend;
+    use crate::config::{BackendKind, TrainConfig};
+    use crate::util::rng::Rng;
+
+    fn theta(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32 * 0.1).collect()
+    }
+
+    #[test]
+    fn native_ctor_pads_odd_buckets_to_group_multiple() {
+        let be = make_backend(BackendKind::Scalar, 0).unwrap();
+        let opt = BucketOptimizer::native(OptKind::AdamW, Variant::Flash,
+                                          100, &theta(250, 1), be)
+            .unwrap();
+        assert_eq!(opt.n_buckets, 3);
+        assert_eq!(opt.state.n, 320); // 300 rounded up to GROUP=32
+        assert_eq!(opt.engine_name(), "scalar");
+        opt.state.validate().unwrap();
+    }
+
+    #[test]
+    fn native_step_bucket_rejects_unaligned_but_step_all_works() {
+        let be = make_backend(BackendKind::Parallel, 2).unwrap();
+        let t0 = theta(250, 2);
+        let mut opt = BucketOptimizer::native(OptKind::AdamW,
+                                              Variant::Flash, 100, &t0, be)
+            .unwrap();
+        let cfg = TrainConfig::default();
+        let h = Hyper::for_step(&cfg, 1e-3, 1);
+        let g = vec![0.01f32; 100];
+        assert!(opt.step_bucket(0, &g, &h).is_err());
+
+        let grads = vec![0.01f32; 250];
+        let mut done = Vec::new();
+        opt.step_all(&grads, &h, |i| done.push(i)).unwrap();
+        assert_eq!(done, vec![0, 1, 2]);
+        let w = opt.master_weights(250);
+        assert!(w.iter().all(|x| x.is_finite()));
+        // padding beyond the real parameters stays exactly zero
+        assert!(opt.state.master_weights()[300..]
+            .iter()
+            .all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn native_aligned_bucket_stepping_matches_step_all() {
+        let cfg = TrainConfig::default();
+        let h = Hyper::for_step(&cfg, 1e-3, 1);
+        let t0 = theta(4 * GROUP * 2, 3);
+        let g: Vec<f32> = theta(4 * GROUP * 2, 4)
+            .iter()
+            .map(|&x| bf16::round_f32_to_bf16(x * 0.1))
+            .collect();
+
+        let mk = |kind: BackendKind| {
+            BucketOptimizer::native(OptKind::Lion, Variant::Flash,
+                                    4 * GROUP, &t0,
+                                    make_backend(kind, 3).unwrap())
+                .unwrap()
+        };
+        let mut by_bucket = mk(BackendKind::Scalar);
+        for i in 0..by_bucket.n_buckets {
+            let lo = i * by_bucket.bucket;
+            let hi = lo + by_bucket.bucket;
+            let slice = g[lo..hi].to_vec();
+            by_bucket.step_bucket(i, &slice, &h).unwrap();
+        }
+        let mut at_once = mk(BackendKind::Parallel);
+        at_once.step_all(&g, &h, |_| {}).unwrap();
+
+        assert_eq!(by_bucket.state.theta_p, at_once.state.theta_p);
+        assert_eq!(by_bucket.state.rho, at_once.state.rho);
+        assert_eq!(by_bucket.state.mq, at_once.state.mq);
+        assert_eq!(by_bucket.state.ms, at_once.state.ms);
     }
 }

@@ -12,7 +12,9 @@ use crate::memory::tracker::{Category, Tracker};
 /// All optional buffers; which are present depends on (opt, variant).
 #[derive(Clone, Debug, Default)]
 pub struct State {
-    /// padded length (multiple of the bucket size)
+    /// padded length — always a multiple of GROUP; additionally a
+    /// multiple of the bucket size on the HLO engine (native engines
+    /// round n_buckets * bucket up to the next whole group)
     pub n: usize,
     pub theta: Option<Vec<f32>>,
     pub theta_p: Option<Vec<u16>>,

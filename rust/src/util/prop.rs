@@ -95,19 +95,30 @@ impl Gen for FloatVec {
 
     fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
         let mut out = Vec::new();
-        // halve the vector
-        if v.len() > self.multiple && v.len() > self.min_len {
-            let half = ((v.len() / 2) / self.multiple.max(1))
-                .max(1) * self.multiple;
+        let step = self.multiple.max(1);
+        if v.len() > step && v.len() > self.min_len {
+            // halve the vector (front and back halves)
+            let half = ((v.len() / 2) / step).max(1) * step;
             out.push(v[..half].to_vec());
             out.push(v[v.len() - half..].to_vec());
+            // drop a single aligned chunk from either end, so the
+            // greedy loop converges on the exact minimal length once
+            // halving overshoots
+            out.push(v[..v.len() - step].to_vec());
+            out.push(v[step..].to_vec());
         }
-        // zero out elements one at a time (first 8 positions)
+        // simplify element values: zero, then halve toward zero
+        // (first 8 positions keep the candidate set small)
         for i in 0..v.len().min(8) {
             if v[i] != 0.0 {
                 let mut c = v.clone();
                 c[i] = 0.0;
                 out.push(c);
+                if v[i].abs() > 1.0 {
+                    let mut c = v.clone();
+                    c[i] = v[i] / 2.0;
+                    out.push(c);
+                }
             }
         }
         out
@@ -141,6 +152,48 @@ mod tests {
                        Err(format!("len {}", v.len()))
                    }
                });
+    }
+
+    /// A seeded failure must shrink to the *minimal* counterexample:
+    /// the property rejects vectors of length >= 8, so the reported
+    /// input must have exactly 8 (all-zero) elements.
+    #[test]
+    fn seeded_failure_shrinks_to_minimum() {
+        let res = std::panic::catch_unwind(|| {
+            forall(5, 100,
+                   &FloatVec { min_len: 1, max_len: 128,
+                               ..Default::default() },
+                   |v| {
+                       if v.len() < 8 {
+                           Ok(())
+                       } else {
+                           Err(format!("len {}", v.len()))
+                       }
+                   });
+        });
+        let payload = res.expect_err("property must fail");
+        let msg = payload
+            .downcast_ref::<String>()
+            .expect("panic payload is the forall message")
+            .clone();
+        assert!(msg.contains("property failed"), "{msg}");
+        assert!(msg.contains("error: len 8"), "not minimal: {msg}");
+        // value simplification: every surviving element shrank to 0
+        assert!(msg.contains("[0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]"),
+                "values not simplified: {msg}");
+    }
+
+    /// Shrinking respects the GROUP-style length multiple.
+    #[test]
+    fn shrink_candidates_respect_multiple() {
+        let gen = FloatVec { min_len: 32, max_len: 256, multiple: 32,
+                             ..Default::default() };
+        let mut rng = Rng::new(9);
+        let v = gen.generate(&mut rng);
+        for cand in gen.shrink(&v) {
+            assert_eq!(cand.len() % 32, 0, "candidate len {}", cand.len());
+            assert!(!cand.is_empty());
+        }
     }
 
     #[test]

@@ -1,0 +1,278 @@
+//! Differential suite: the native step backends must agree bit for bit.
+//!
+//! Three independent orchestrations of the same fused semantics are
+//! pinned against each other:
+//!
+//! * `scalar_ref::step_state` — the legacy whole-buffer scalar mirror;
+//! * `backend::ScalarBackend` — the partition-view fused chain, one
+//!   partition;
+//! * `backend::ParallelBackend` — the fused chain sharded over a
+//!   scoped thread pool.
+//!
+//! Every comparison is exact (`to_bits` on floats, `==` on integer
+//! codes): because all updates are element-wise and all requantization
+//! is group-wise over whole GROUPs, any GROUP-aligned partitioning —
+//! and any thread interleaving — must produce identical bits.  No
+//! artifacts or PJRT runtime are required.
+
+use flashtrain::backend::{make_backend, ParallelBackend, ScalarBackend,
+                          StepBackend};
+use flashtrain::config::{BackendKind, OptKind, TrainConfig, Variant};
+use flashtrain::formats::{bf16, GROUP};
+use flashtrain::optim::{scalar_ref, BucketOptimizer, Hyper, State};
+use flashtrain::util::rng::Rng;
+
+const ALL_OPTS: [OptKind; 3] =
+    [OptKind::Sgd, OptKind::AdamW, OptKind::Lion];
+const ALL_VARIANTS: [Variant; 5] = [
+    Variant::Reference,
+    Variant::Flash,
+    Variant::WeightSplit,
+    Variant::OptQuant,
+    Variant::NoCompand,
+];
+
+fn randn(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * s).collect()
+}
+
+/// Gradient in the variant's dtype semantics (bf16 for split tracks).
+fn grad(rng: &mut Rng, n: usize, variant: Variant) -> Vec<f32> {
+    randn(rng, n, 0.01)
+        .iter()
+        .map(|&x| {
+            if variant.splits_weights() {
+                bf16::round_f32_to_bf16(x)
+            } else {
+                x
+            }
+        })
+        .collect()
+}
+
+/// Exact equality of every buffer, including fp32 bit patterns.
+fn assert_states_bit_equal(a: &State, b: &State, what: &str) {
+    assert_eq!(a.n, b.n, "{what}: n");
+    assert_eq!(a.theta_p, b.theta_p, "{what}: theta_p");
+    assert_eq!(a.rho, b.rho, "{what}: rho");
+    assert_eq!(a.mq, b.mq, "{what}: mq");
+    assert_eq!(a.ms, b.ms, "{what}: ms");
+    assert_eq!(a.vq, b.vq, "{what}: vq");
+    assert_eq!(a.vs, b.vs, "{what}: vs");
+    for (name, x, y) in [("theta", &a.theta, &b.theta),
+                         ("m", &a.m, &b.m), ("v", &a.v, &b.v)] {
+        match (x, y) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.len(), y.len(), "{what}: {name} len");
+                for (i, (p, q)) in x.iter().zip(y).enumerate() {
+                    assert_eq!(p.to_bits(), q.to_bits(),
+                               "{what}: {name}[{i}] {p} vs {q}");
+                }
+            }
+            (None, None) => {}
+            _ => panic!("{what}: {name} presence differs"),
+        }
+    }
+}
+
+/// ParallelBackend == ScalarBackend, every (optimizer, variant) pair,
+/// several seeds, several thread counts, 10-step trajectories.
+#[test]
+fn parallel_matches_scalar_all_pairs_and_seeds() {
+    for seed in [1u64, 2, 3] {
+        for opt in ALL_OPTS {
+            for variant in ALL_VARIANTS {
+                let mut rng = Rng::new(seed);
+                let n = 7 * GROUP; // odd group count -> uneven shards
+                let theta0 = randn(&mut rng, n, 0.1);
+                let mut sc = State::init(&theta0, n, opt, variant);
+                let mut pa = sc.clone();
+                let cfg = TrainConfig { optimizer: opt, variant,
+                                        ..Default::default() };
+                let par = ParallelBackend::new(4);
+                for t in 1..=10 {
+                    let g = grad(&mut rng, n, variant);
+                    let h = Hyper::for_step(&cfg, 1e-3, t);
+                    ScalarBackend
+                        .step_full(&mut sc, &g, opt, variant, &h)
+                        .unwrap();
+                    par.step_full(&mut pa, &g, opt, variant, &h).unwrap();
+                    assert_states_bit_equal(
+                        &sc, &pa,
+                        &format!("{opt}/{variant} seed {seed} step {t}"));
+                }
+            }
+        }
+    }
+}
+
+/// Both native backends == the legacy whole-buffer scalar mirror.
+#[test]
+fn backends_match_legacy_scalar_ref() {
+    let mut rng = Rng::new(42);
+    let n = 5 * GROUP;
+    for opt in ALL_OPTS {
+        for variant in ALL_VARIANTS {
+            let theta0 = randn(&mut rng, n, 0.1);
+            let mut legacy = State::init(&theta0, n, opt, variant);
+            let mut sc = legacy.clone();
+            let mut pa = legacy.clone();
+            let cfg = TrainConfig { optimizer: opt, variant,
+                                    ..Default::default() };
+            let par = ParallelBackend::new(3);
+            for t in 1..=5 {
+                let g = grad(&mut rng, n, variant);
+                let h = Hyper::for_step(&cfg, 1e-3, t);
+                scalar_ref::step_state(&mut legacy, &g, opt, variant, &h);
+                ScalarBackend
+                    .step_full(&mut sc, &g, opt, variant, &h)
+                    .unwrap();
+                par.step_full(&mut pa, &g, opt, variant, &h).unwrap();
+            }
+            assert_states_bit_equal(&legacy, &sc,
+                                    &format!("{opt}/{variant} scalar"));
+            assert_states_bit_equal(&legacy, &pa,
+                                    &format!("{opt}/{variant} parallel"));
+        }
+    }
+}
+
+/// Thread count must never change a bit (1, 2, 3, 8, and "all cores").
+#[test]
+fn thread_count_invariance() {
+    let mut rng = Rng::new(7);
+    let n = 13 * GROUP;
+    let theta0 = randn(&mut rng, n, 0.1);
+    let g = grad(&mut rng, n, Variant::Flash);
+    let cfg = TrainConfig::default();
+    let h = Hyper::for_step(&cfg, 1e-3, 1);
+
+    let mut reference = State::init(&theta0, n, OptKind::AdamW,
+                                    Variant::Flash);
+    ScalarBackend
+        .step_full(&mut reference, &g, OptKind::AdamW, Variant::Flash, &h)
+        .unwrap();
+    for threads in [1usize, 2, 3, 8, 0] {
+        let mut st = State::init(&theta0, n, OptKind::AdamW,
+                                 Variant::Flash);
+        ParallelBackend::new(threads)
+            .step_full(&mut st, &g, OptKind::AdamW, Variant::Flash, &h)
+            .unwrap();
+        assert_states_bit_equal(&reference, &st,
+                                &format!("threads={threads}"));
+    }
+}
+
+/// Bucket sizes that are NOT multiples of GROUP: the native
+/// BucketOptimizer pads the state up to a whole group and steps it in
+/// one fused pass; scalar and parallel engines must still agree
+/// bit for bit, and padding must stay zero.
+#[test]
+fn non_group_multiple_bucket_sizes() {
+    for (bucket, count) in [(100usize, 250usize), (33, 200), (1000, 999),
+                            (50, 50)] {
+        for opt in [OptKind::AdamW, OptKind::Lion] {
+            let variant = Variant::Flash;
+            let mut rng = Rng::new(bucket as u64 ^ 0xBEEF);
+            let theta0 = randn(&mut rng, count, 0.1);
+            let mk = |kind: BackendKind| {
+                BucketOptimizer::native(opt, variant, bucket, &theta0,
+                                        make_backend(kind, 4).unwrap())
+                    .unwrap()
+            };
+            let mut a = mk(BackendKind::Scalar);
+            let mut b = mk(BackendKind::Parallel);
+            assert_eq!(a.state.n % GROUP, 0);
+            assert!(a.state.n >= count);
+            let cfg = TrainConfig { optimizer: opt, variant,
+                                    ..Default::default() };
+            for t in 1..=3 {
+                let g = grad(&mut rng, count, variant);
+                let h = Hyper::for_step(&cfg, 1e-3, t);
+                a.step_all(&g, &h, |_| {}).unwrap();
+                b.step_all(&g, &h, |_| {}).unwrap();
+            }
+            assert_states_bit_equal(
+                &a.state, &b.state,
+                &format!("{opt} bucket={bucket} count={count}"));
+            // zero-init padding + zero grads -> padding stays zero
+            let w = a.state.master_weights();
+            assert!(w[count..].iter().all(|&x| x == 0.0),
+                    "padding disturbed for bucket={bucket}");
+        }
+    }
+}
+
+/// Sizes around partition boundaries: 1 group, threads == groups,
+/// threads > groups, and a large many-group state.
+#[test]
+fn boundary_sizes() {
+    let cfg = TrainConfig::default();
+    let h = Hyper::for_step(&cfg, 1e-3, 2);
+    for n_groups in [1usize, 2, 4, 5, 64] {
+        let n = n_groups * GROUP;
+        let mut rng = Rng::new(n as u64);
+        let theta0 = randn(&mut rng, n, 0.1);
+        let g = grad(&mut rng, n, Variant::OptQuant);
+        let mut a = State::init(&theta0, n, OptKind::AdamW,
+                                Variant::OptQuant);
+        let mut b = a.clone();
+        ScalarBackend
+            .step_full(&mut a, &g, OptKind::AdamW, Variant::OptQuant, &h)
+            .unwrap();
+        ParallelBackend::new(4)
+            .step_full(&mut b, &g, OptKind::AdamW, Variant::OptQuant, &h)
+            .unwrap();
+        assert_states_bit_equal(&a, &b, &format!("{n_groups} groups"));
+    }
+}
+
+/// The native engines support combinations the HLO artifact set never
+/// compiled (ablation variants for sgd/lion) — they must step and stay
+/// finite and mutually bit-exact.
+#[test]
+fn native_backends_cover_non_artifact_pairs() {
+    let cfg = TrainConfig::default();
+    let h = Hyper::for_step(&cfg, 1e-3, 1);
+    let n = 4 * GROUP;
+    for opt in [OptKind::Sgd, OptKind::Lion] {
+        for variant in [Variant::WeightSplit, Variant::OptQuant,
+                        Variant::NoCompand] {
+            // no AOT artifact exists for these...
+            assert!(flashtrain::optim::artifact_name(opt, variant)
+                .is_err());
+            // ...but the native path handles them
+            let mut rng = Rng::new(99);
+            let theta0 = randn(&mut rng, n, 0.1);
+            let g = grad(&mut rng, n, variant);
+            let mut a = State::init(&theta0, n, opt, variant);
+            let mut b = a.clone();
+            ScalarBackend
+                .step_full(&mut a, &g, opt, variant, &h)
+                .unwrap();
+            ParallelBackend::new(2)
+                .step_full(&mut b, &g, opt, variant, &h)
+                .unwrap();
+            assert_states_bit_equal(&a, &b, &format!("{opt}/{variant}"));
+            assert!(a.master_weights().iter().all(|x| x.is_finite()));
+        }
+    }
+}
+
+/// Gradient-release hook parity: native step_all fires once per bucket
+/// in order, like the HLO per-bucket loop.
+#[test]
+fn step_all_fires_bucket_hooks_in_order() {
+    let theta0 = vec![0.1f32; 10 * GROUP];
+    let opt = BucketOptimizer::native(
+        OptKind::AdamW, Variant::Flash, 2 * GROUP, &theta0,
+        make_backend(BackendKind::Parallel, 2).unwrap());
+    let mut opt = opt.unwrap();
+    assert_eq!(opt.n_buckets, 5);
+    let cfg = TrainConfig::default();
+    let h = Hyper::for_step(&cfg, 1e-3, 1);
+    let g = vec![0.01f32; 10 * GROUP];
+    let mut seen = Vec::new();
+    opt.step_all(&g, &h, |i| seen.push(i)).unwrap();
+    assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+}

@@ -131,6 +131,145 @@ fn prop_variance_quant_nonneg_and_bounded() {
     });
 }
 
+/// Zero elements survive quantization exactly (φ_m(0) = 0, code 0,
+/// dequant 0), whatever the rest of the group holds; and all-zero
+/// groups take the `scale_pair` safe-scale path (stored scale bits 0,
+/// normalization by 1.0) without producing NaN.
+#[test]
+fn prop_zero_elements_and_zero_groups_exact() {
+    let gen = FloatVec { min_len: GROUP, max_len: GROUP * 8,
+                         lo_exp: -20.0, hi_exp: 10.0, multiple: GROUP };
+    forall(21, 200, &gen, |v| {
+        // force group 0 to be all-zero, keep the rest as generated
+        let mut v = v.clone();
+        for x in &mut v[..GROUP] {
+            *x = 0.0;
+        }
+        let n = v.len();
+        let mut q = vec![0i8; n];
+        let mut s = vec![0u16; n / GROUP];
+        companding::quant_momentum(&v, &mut q, &mut s);
+        if s[0] != 0 {
+            return Err(format!("all-zero group scale bits {:#x}", s[0]));
+        }
+        let mut out = vec![f32::NAN; n];
+        companding::dequant_momentum(&q, &s, &mut out);
+        for (i, (&x, &y)) in v.iter().zip(&out).enumerate() {
+            if x == 0.0 && y.to_bits() != 0.0f32.to_bits() {
+                return Err(format!("zero at {i} came back {y}"));
+            }
+            if y.is_nan() {
+                return Err(format!("NaN at {i} (x = {x})"));
+            }
+        }
+
+        // same through the variance (sqrt-domain) path
+        let sq: Vec<f32> = v.iter().map(|x| x * x).collect();
+        let mut qv = vec![0u8; n];
+        companding::quant_variance(&sq, &mut qv, &mut s);
+        if s[0] != 0 {
+            return Err("all-zero variance group scale".into());
+        }
+        companding::dequant_variance(&qv, &s, &mut out);
+        for (i, &y) in out.iter().enumerate() {
+            if y.is_nan() {
+                return Err(format!("variance NaN at {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Group absmax at or beyond the f16 saturation boundary (65504):
+/// the stored scale must saturate to f16::MAX (not inf), codes stay in
+/// range, and dequantized values stay finite.
+#[test]
+fn prop_scale_saturation_at_f16_boundary() {
+    // boundary absmax values planted into otherwise-random groups
+    let boundary = [65504.0f32, 65505.0, 65519.9, 65520.0, 1e5, 1e30,
+                    f32::MAX];
+    let gen = FloatVec { min_len: GROUP, max_len: GROUP * 4,
+                         lo_exp: -4.0, hi_exp: 15.0, multiple: GROUP };
+    forall(22, 150, &gen, |v| {
+        for &big in &boundary {
+            let mut v = v.clone();
+            let n = v.len();
+            v[0] = big; // group 0 absmax >= f16 max
+            let mut q = vec![0i8; n];
+            let mut s = vec![0u16; n / GROUP];
+            companding::quant_momentum(&v, &mut q, &mut s);
+            let scale = fp16::f16_bits_to_f32(s[0]);
+            if !scale.is_finite() {
+                return Err(format!("scale inf for absmax {big}"));
+            }
+            if scale > fp16::MAX {
+                return Err(format!("scale {scale} above f16 max"));
+            }
+            let mut out = vec![0f32; n];
+            companding::dequant_momentum(&q, &s, &mut out);
+            for (i, &y) in out.iter().enumerate() {
+                if !y.is_finite() {
+                    return Err(format!(
+                        "non-finite dequant at {i} for absmax {big}"));
+                }
+            }
+            // the boundary element keeps its sign and magnitude order
+            if out[0] <= 0.0 {
+                return Err(format!("absmax {big} dequantized to {}",
+                                   out[0]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// φ_m / φ_m⁻¹ round-trip accuracy and monotonicity: companding is a
+/// strictly monotone bijection on the finite range, so sorting must be
+/// preserved through the round trip and the inverse must undo the map.
+#[test]
+fn prop_phi_roundtrip_monotone() {
+    let gen = FloatVec { min_len: 2, max_len: 256, lo_exp: -20.0,
+                         hi_exp: 10.0, multiple: 1 };
+    forall(23, 300, &gen, |v| {
+        let mut xs: Vec<f32> =
+            v.iter().copied().filter(|x| x.is_finite()).collect();
+        for &x in &xs {
+            let z = companding::phi_m(x);
+            if z.abs() >= 2.0 {
+                return Err(format!("|phi_m({x})| = {z} >= 2"));
+            }
+            let back = companding::phi_m_inv(z);
+            let err = (back - x).abs();
+            let tol = x.abs().max(1.0) * 4e-6 * (1.0 + x.abs());
+            if err > tol {
+                return Err(format!("roundtrip {x} -> {z} -> {back}"));
+            }
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // f32 rounding of the intermediate ops may wiggle results by a
+        // few ulps for near-adjacent inputs, so monotonicity is checked
+        // up to a tiny slack; genuine inversions are far larger.
+        let mut prev_z = f32::NEG_INFINITY;
+        let mut prev_rt = f32::NEG_INFINITY;
+        for &x in &xs {
+            let z = companding::phi_m(x);
+            if z < prev_z - 1e-6 {
+                return Err(format!(
+                    "phi_m not monotone at {x}: {z} < {prev_z}"));
+            }
+            let rt = companding::phi_m_inv(z);
+            let slack = (rt.abs() + prev_rt.abs()).max(1.0) * 1e-4;
+            if prev_rt.is_finite() && rt < prev_rt - slack {
+                return Err(format!(
+                    "roundtrip not monotone at {x}: {rt} < {prev_rt}"));
+            }
+            prev_z = prev_z.max(z);
+            prev_rt = prev_rt.max(rt);
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_f16_conversion_monotone() {
     let gen = FloatVec { min_len: 2, max_len: 128, lo_exp: -20.0,

@@ -1,0 +1,402 @@
+//! Offline stand-in for the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The container has no PJRT / XLA shared library, so this in-tree crate
+//! keeps the same API shape flashtrain uses while splitting it in two:
+//!
+//! * **Fully functional, pure Rust:** `Literal` (typed shape + raw host
+//!   bytes), creation from untyped data, typed extraction, and the
+//!   bf16/f16 → f32 upcasts used by `runtime::literal`.  Literal
+//!   marshalling therefore behaves identically with or without a real
+//!   XLA build.
+//! * **Stubbed:** `PjRtClient::compile` and executable execution return
+//!   a clear "no PJRT runtime linked" error.  Everything that needs the
+//!   AOT HLO executables reports this at the point of use; the native
+//!   Rust step backends (`flashtrain::backend`) never reach it.
+
+use std::fmt;
+
+// ---------------------------------------------------------------------------
+// errors
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn no_runtime<T>() -> Result<T> {
+    Err(Error(
+        "no PJRT runtime linked into this build; the AOT HLO path is \
+         unavailable — use the native backends (backend = \"scalar\" | \
+         \"parallel\") or link a real xla crate"
+            .to_string(),
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// element types
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Target-type token accepted by [`Literal::convert`] (mirrors xla-rs,
+/// where `ElementType::primitive_type()` yields the conversion target).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrimitiveType(ElementType);
+
+impl ElementType {
+    pub fn primitive_type(self) -> PrimitiveType {
+        PrimitiveType(self)
+    }
+
+    pub fn byte_size(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::S16 | ElementType::U16 | ElementType::F16
+            | ElementType::Bf16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Rust scalar types that map onto an [`ElementType`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+macro_rules! native {
+    ($t:ty, $e:expr) => {
+        impl NativeType for $t {
+            const TY: ElementType = $e;
+        }
+    };
+}
+
+native!(i8, ElementType::S8);
+native!(i16, ElementType::S16);
+native!(i32, ElementType::S32);
+native!(i64, ElementType::S64);
+native!(u8, ElementType::U8);
+native!(u16, ElementType::U16);
+native!(u32, ElementType::U32);
+native!(u64, ElementType::U64);
+native!(f32, ElementType::F32);
+native!(f64, ElementType::F64);
+
+// ---------------------------------------------------------------------------
+// literals
+// ---------------------------------------------------------------------------
+
+/// Host-side literal: a typed dense array (or tuple of them) with raw
+/// little-endian bytes, matching XLA's host layout.
+#[derive(Clone, Debug)]
+pub enum Literal {
+    Array {
+        ty: ElementType,
+        dims: Vec<usize>,
+        data: Vec<u8>,
+    },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let count: usize = dims.iter().product();
+        let want = count * ty.byte_size();
+        if data.len() != want {
+            return Err(Error(format!(
+                "literal data size mismatch: {} bytes for {count} x \
+                 {ty:?} (want {want})",
+                data.len()
+            )));
+        }
+        Ok(Literal::Array { ty, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        match self {
+            Literal::Array { ty, .. } => Ok(*ty),
+            Literal::Tuple(_) => {
+                Err(Error("tuple literal has no element type".into()))
+            }
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::Array { dims, .. } => dims.iter().product(),
+            Literal::Tuple(parts) => parts.len(),
+        }
+    }
+
+    /// Extract as a typed vector; the requested type must match exactly.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { ty, data, .. } => {
+                if *ty != T::TY {
+                    return Err(Error(format!(
+                        "literal type mismatch: have {ty:?}, asked for \
+                         {:?}",
+                        T::TY
+                    )));
+                }
+                let n = data.len() / std::mem::size_of::<T>();
+                let mut out: Vec<T> = Vec::with_capacity(n);
+                // byte-wise copy into the (aligned) destination buffer;
+                // the source Vec<u8> has no alignment guarantee
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        data.as_ptr(),
+                        out.as_mut_ptr() as *mut u8,
+                        n * std::mem::size_of::<T>(),
+                    );
+                    out.set_len(n);
+                }
+                Ok(out)
+            }
+            Literal::Tuple(_) => {
+                Err(Error("cannot to_vec a tuple literal".into()))
+            }
+        }
+    }
+
+    /// Element-type conversion.  The stub supports what flashtrain uses:
+    /// exact upcasts from bf16/f16 (and identity) to f32.
+    pub fn convert(&self, to: PrimitiveType) -> Result<Literal> {
+        let PrimitiveType(to) = to;
+        let (ty, dims, data) = match self {
+            Literal::Array { ty, dims, data } => (*ty, dims, data),
+            Literal::Tuple(_) => {
+                return Err(Error("cannot convert a tuple literal".into()))
+            }
+        };
+        if ty == to {
+            return Ok(self.clone());
+        }
+        match (ty, to) {
+            (ElementType::Bf16, ElementType::F32) => {
+                let out = half_bits(data)
+                    .map(|b| f32::from_bits((b as u32) << 16))
+                    .collect::<Vec<f32>>();
+                Literal::create_from_shape_and_untyped_data(
+                    ElementType::F32, dims, f32_bytes(&out))
+            }
+            (ElementType::F16, ElementType::F32) => {
+                let out = half_bits(data)
+                    .map(f16_bits_to_f32)
+                    .collect::<Vec<f32>>();
+                Literal::create_from_shape_and_untyped_data(
+                    ElementType::F32, dims, f32_bytes(&out))
+            }
+            (from, to) => Err(Error(format!(
+                "stub convert {from:?} -> {to:?} unsupported"
+            ))),
+        }
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts),
+            lit @ Literal::Array { .. } => Ok(vec![lit]),
+        }
+    }
+}
+
+fn half_bits(data: &[u8]) -> impl Iterator<Item = u16> + '_ {
+    data.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]]))
+}
+
+fn f32_bytes(v: &[f32]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+    }
+}
+
+/// Exact IEEE binary16 -> binary32 upcast (subnormals, inf, NaN).
+fn f16_bits_to_f32(bits: u16) -> f32 {
+    let sign = ((bits as u32) & 0x8000) << 16;
+    let exp = ((bits >> 10) & 0x1F) as u32;
+    let man = (bits & 0x3FF) as u32;
+    if exp == 0x1F {
+        // inf / nan
+        let m = if man == 0 { 0 } else { 0x0040_0000 | (man << 13) };
+        return f32::from_bits(sign | 0x7F80_0000 | m);
+    }
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // +-0
+        }
+        // subnormal: value = man * 2^-24; renormalize
+        let shift = man.leading_zeros() - 21; // make bit 10 the implicit 1
+        let man_norm = (man << shift) & 0x3FF;
+        let e = 1i32 - shift as i32; // f16 exponent after normalization
+        let exp32 = (e - 15 + 127) as u32;
+        return f32::from_bits(sign | (exp32 << 23) | (man_norm << 13));
+    }
+    let exp32 = exp + 127 - 15;
+    f32::from_bits(sign | (exp32 << 23) | (man << 13))
+}
+
+// ---------------------------------------------------------------------------
+// PJRT stubs
+// ---------------------------------------------------------------------------
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// The stub checks the artifact file is readable (so missing
+    /// artifacts still produce the right error) but does not parse it.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::metadata(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto)
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub (no PJRT linked)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+        -> Result<PjRtLoadedExecutable>
+    {
+        no_runtime()
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        no_runtime()
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        no_runtime()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let v = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> =
+            v.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32, &[3], &bytes)
+            .unwrap();
+        assert_eq!(lit.ty().unwrap(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), v);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32, &[3], &[0u8; 8])
+            .is_err());
+    }
+
+    #[test]
+    fn bf16_convert_exact() {
+        // bf16 bits are the top 16 bits of f32
+        let vals = [1.0f32, -0.5, 3.0, 65536.0];
+        let bits: Vec<u8> = vals
+            .iter()
+            .flat_map(|x| ((x.to_bits() >> 16) as u16).to_le_bytes())
+            .collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::Bf16, &[4], &bits)
+            .unwrap();
+        let out = lit
+            .convert(ElementType::F32.primitive_type())
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap();
+        assert_eq!(out, vals);
+    }
+
+    #[test]
+    fn f16_convert_covers_edge_cases() {
+        // (f16 bits, expected f32)
+        let cases: [(u16, f32); 8] = [
+            (0x0000, 0.0),
+            (0x8000, -0.0),
+            (0x3C00, 1.0),
+            (0xC000, -2.0),
+            (0x7BFF, 65504.0),        // max finite
+            (0x0400, 6.103515625e-5), // min normal 2^-14
+            (0x0001, 5.960464477539063e-8), // min subnormal 2^-24
+            (0x03FF, 6.097555160522461e-5), // max subnormal
+        ];
+        for (bits, want) in cases {
+            let got = f16_bits_to_f32(bits);
+            assert_eq!(got.to_bits(), want.to_bits(), "bits {bits:#06x}");
+        }
+        assert!(f16_bits_to_f32(0x7C00).is_infinite());
+        assert!(f16_bits_to_f32(0xFC00).is_infinite());
+        assert!(f16_bits_to_f32(0x7E00).is_nan());
+    }
+
+    #[test]
+    fn execute_reports_missing_runtime() {
+        let client = PjRtClient::cpu().unwrap();
+        let err = client.compile(&XlaComputation::from_proto(
+            &HloModuleProto)).unwrap_err();
+        assert!(err.to_string().contains("no PJRT runtime"));
+    }
+}
