@@ -9,8 +9,8 @@
 
 use flashtrain::config::{OptKind, TrainConfig, Variant};
 use flashtrain::coordinator::Trainer;
-use flashtrain::runtime::{Manifest, Runtime};
 use flashtrain::util::ascii_plot;
+use flashtrain::util::bench;
 use flashtrain::util::cli::Args;
 use flashtrain::util::table::Table;
 
@@ -42,8 +42,10 @@ fn main() {
     let which = args.get_or("part", "all").to_string();
     let steps = args.get_usize("steps", 200);
 
-    let manifest = Manifest::load_default().expect("run `make artifacts`");
-    let rt = Runtime::cpu().unwrap();
+    let Some((manifest, rt)) = bench::manifest_or_skip("fig2_convergence")
+    else {
+        return;
+    };
     let mut summary = Table::new("convergence summary", &[
         "figure", "part", "ref final", "flash final", "|gap|",
         "max |step gap|"]);

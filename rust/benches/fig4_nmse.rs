@@ -10,7 +10,7 @@
 use flashtrain::config::{OptKind, TrainConfig, Variant};
 use flashtrain::coordinator::Trainer;
 use flashtrain::formats::{companding, GROUP};
-use flashtrain::runtime::{Manifest, Runtime};
+use flashtrain::util::bench;
 use flashtrain::util::cli::Args;
 use flashtrain::util::stats::{nmse, quantile};
 use flashtrain::util::table::Table;
@@ -47,8 +47,10 @@ fn main() {
     let steps = args.get_usize("steps", 60);
     let every = args.get_usize("every", 10);
 
-    let manifest = Manifest::load_default().expect("run `make artifacts`");
-    let rt = Runtime::cpu().unwrap();
+    let Some((manifest, rt)) = bench::manifest_or_skip("fig4_nmse")
+    else {
+        return;
+    };
 
     let mut t = Table::new(
         "Figure 4: quantization NMSE over a fp32 trajectory \

@@ -11,8 +11,8 @@
 
 use flashtrain::config::{OptKind, TrainConfig, Variant};
 use flashtrain::coordinator::Trainer;
-use flashtrain::runtime::{Manifest, Runtime};
 use flashtrain::util::ascii_plot;
+use flashtrain::util::bench;
 use flashtrain::util::cli::Args;
 use flashtrain::util::table::Table;
 
@@ -23,8 +23,10 @@ fn main() {
     // setting, to expose the instability quickly at small scale
     let lr = args.get_f64("lr", 3e-3);
 
-    let manifest = Manifest::load_default().expect("run `make artifacts`");
-    let rt = Runtime::cpu().unwrap();
+    let Some((manifest, rt)) = bench::manifest_or_skip("fig5_divergence")
+    else {
+        return;
+    };
 
     let mut curves: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
     let mut t = Table::new("Figure 5: linear vs companded 8-bit states",

@@ -12,8 +12,8 @@ use flashtrain::config::{OptKind, TrainConfig, Variant};
 use flashtrain::formats::{companding, weight_split, GROUP};
 use flashtrain::optim::{BucketOptimizer, Hyper, State};
 use flashtrain::runtime::literal as lit;
-use flashtrain::runtime::{Manifest, Runtime};
-use flashtrain::util::bench::{bench_for, black_box, fmt_time};
+use flashtrain::util::bench::{bench_for, black_box, fmt_time,
+                              manifest_or_skip};
 use flashtrain::util::cli::Args;
 use flashtrain::util::rng::Rng;
 use flashtrain::util::table::Table;
@@ -88,9 +88,10 @@ fn main() {
 
     // ---- optimizer step executable by bucket size & variant ---------------
     // (requires `make artifacts` + a real PJRT runtime; skipped otherwise)
-    match Manifest::load_default() {
-        Ok(manifest) => {
-            let rt = Runtime::cpu().unwrap();
+    // (skip note printed by manifest_or_skip when unavailable)
+    if let Some((manifest, rt)) =
+        manifest_or_skip("kernel_hotpath HLO section")
+    {
             let mut t = Table::new(
                 "fused optimizer step (HLO via PJRT), per bucket",
                 &["bucket", "variant", "median", "ns/param",
@@ -137,10 +138,6 @@ fn main() {
             if hlo_ok {
                 t.print();
             }
-        }
-        Err(e) => {
-            println!("skipping HLO step bench (run `make artifacts`): {e}");
-        }
     }
 
     // ---- Rust codec throughput --------------------------------------------

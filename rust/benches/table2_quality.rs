@@ -8,7 +8,7 @@
 
 use flashtrain::config::{OptKind, TrainConfig, Variant};
 use flashtrain::coordinator::Trainer;
-use flashtrain::runtime::{Manifest, Runtime};
+use flashtrain::util::bench;
 use flashtrain::util::cli::Args;
 use flashtrain::util::stats;
 use flashtrain::util::table::Table;
@@ -18,8 +18,10 @@ fn main() {
     let seeds = args.get_u64("seeds", 3);
     let steps = args.get_usize("steps", 150);
 
-    let manifest = Manifest::load_default().expect("run `make artifacts`");
-    let rt = Runtime::cpu().unwrap();
+    let Some((manifest, rt)) = bench::manifest_or_skip("table2_quality")
+    else {
+        return;
+    };
 
     let mut t = Table::new(
         &format!("Table 2 — quality parity ({seeds} seeds, {steps} steps)"),

@@ -16,6 +16,7 @@ use flashtrain::config::{OptKind, TrainConfig, Variant};
 use flashtrain::coordinator::Trainer;
 use flashtrain::memory::{self, tracker::Category, ModelSpec};
 use flashtrain::runtime::{Manifest, Runtime};
+use flashtrain::util::bench;
 use flashtrain::util::cli::Args;
 use flashtrain::util::table::{fmt_bytes, fmt_delta, Table};
 
@@ -69,8 +70,10 @@ fn main() {
     let which = args.get_or("part", "all").to_string();
     let steps = args.get_usize("steps", 8);
 
-    let manifest = Manifest::load_default().expect("run `make artifacts`");
-    let rt = Runtime::cpu().unwrap();
+    let Some((manifest, rt)) = bench::manifest_or_skip("table4_profiling")
+    else {
+        return;
+    };
 
     if which == "all" || which == "lm" {
         // Table 8 analog (LM pretraining: AdamW & Lion)

@@ -1,5 +1,7 @@
 //! Checkpoint tool: create, inspect, convert and corruption-check
 //! FlashTrain compact checkpoints (paper §3.4: 12 -> 5 bytes/param).
+//! Writes the v2 format (named param-group sections); reads v1 files
+//! too (they load as a single `all` group).
 //!
 //!   cargo run --release --example checkpoint_tool -- demo
 //!   cargo run --release --example checkpoint_tool -- inspect <file>
@@ -11,7 +13,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 use flashtrain::checkpoint;
 use flashtrain::config::{OptKind, Variant};
-use flashtrain::optim::State;
+use flashtrain::optim::{GroupState, State, StateDict};
 use flashtrain::util::cli::Args;
 use flashtrain::util::rng::Rng;
 use flashtrain::util::table::{fmt_bytes, Table};
@@ -34,6 +36,34 @@ fn main() -> Result<()> {
     }
 }
 
+/// Two-group (decay / no_decay) state dict over 1M synthetic params.
+fn demo_dict(theta: &[f32], variant: Variant) -> StateDict {
+    let n = theta.len();
+    let split = n / 8 * 7; // last eighth plays the norm/bias role
+    StateDict {
+        optimizer: OptKind::AdamW,
+        variant,
+        step: 0,
+        total_params: n as u64,
+        groups: vec![
+            GroupState {
+                name: "decay".into(),
+                param_count: split as u64,
+                ranges: vec![(0, split as u64)],
+                state: State::init(&theta[..split], split,
+                                   OptKind::AdamW, variant),
+            },
+            GroupState {
+                name: "no_decay".into(),
+                param_count: (n - split) as u64,
+                ranges: vec![(split as u64, n as u64)],
+                state: State::init(&theta[split..], n - split,
+                                   OptKind::AdamW, variant),
+            },
+        ],
+    }
+}
+
 fn demo() -> Result<()> {
     let n = 1 << 20; // 1M params
     let mut rng = Rng::new(42);
@@ -41,15 +71,14 @@ fn demo() -> Result<()> {
     let dir = std::env::temp_dir();
 
     let mut t = Table::new(
-        "checkpoint size, 1M-param AdamW state",
+        "checkpoint size (v2, decay/no_decay groups), 1M-param AdamW",
         &["format", "file size", "bytes/param"]);
     for (variant, name) in [(Variant::Reference, "reference (fp32)"),
                             (Variant::Flash, "flash (compact)")] {
-        let st = State::init(&theta, n, OptKind::AdamW, variant);
+        let sd = demo_dict(&theta, variant);
         let path = dir.join(format!("flashtrain_demo_{}.flt",
                                     variant.name()));
-        let bytes = checkpoint::save(&path, &st, OptKind::AdamW, variant,
-                                     0, n as u64)?;
+        let bytes = checkpoint::save_state_dict(&path, &sd)?;
         t.row(&[name.to_string(), fmt_bytes(bytes as f64),
                 format!("{:.3}", bytes as f64 / n as f64)]);
         inspect(&path)?;
@@ -60,13 +89,8 @@ fn demo() -> Result<()> {
     Ok(())
 }
 
-fn inspect(path: &Path) -> Result<()> {
-    let (meta, state) = checkpoint::load(path)?;
-    println!("{path:?}:");
-    println!("  optimizer={} variant={} step={} params={} padded={}",
-             meta.optimizer, meta.variant, meta.step, meta.param_count,
-             meta.padded_len);
-    let present: Vec<&str> = [
+fn sections(state: &State) -> String {
+    [
         ("theta_f32", state.theta.is_some()),
         ("theta_p_bf16", state.theta_p.is_some()),
         ("rho_i8", state.rho.is_some()),
@@ -77,20 +101,35 @@ fn inspect(path: &Path) -> Result<()> {
         ("vq_u8", state.vq.is_some()),
         ("vs_f16", state.vs.is_some()),
     ]
-        .iter()
-        .filter(|(_, p)| *p)
-        .map(|(n, _)| *n)
-        .collect();
-    println!("  sections: {}", present.join(", "));
-    println!("  state bytes {} ({:.3}/param)",
-             fmt_bytes(state.bytes() as f64),
-             state.bytes() as f64 / meta.param_count.max(1) as f64);
+    .iter()
+    .filter(|(_, p)| *p)
+    .map(|(n, _)| *n)
+    .collect::<Vec<_>>()
+    .join(", ")
+}
+
+fn inspect(path: &Path) -> Result<()> {
+    let sd = checkpoint::load_state_dict(path)?;
+    println!("{path:?}:");
+    println!("  optimizer={} variant={} step={} params={} groups={}",
+             sd.optimizer, sd.variant, sd.step, sd.total_params,
+             sd.groups.len());
+    for g in &sd.groups {
+        println!("  group {:?}: {} params (padded {}), {} \
+                  ({:.3}/param)",
+                 g.name, g.param_count, g.state.n,
+                 fmt_bytes(g.state.bytes() as f64),
+                 g.state.bytes() as f64 / (g.param_count.max(1)) as f64);
+        println!("    sections: {}", sections(&g.state));
+    }
+    println!("  total state {} ({:.3}/param)",
+             fmt_bytes(sd.bytes() as f64),
+             sd.bytes() as f64 / sd.total_params.max(1) as f64);
     Ok(())
 }
 
 fn convert(src: &Path, dst: &Path, to: &str) -> Result<()> {
-    let (meta, state) = checkpoint::load(src)?;
-    let master = state.master_weights();
+    let sd = checkpoint::load_state_dict(src)?;
     let target = match to {
         "flash" => Variant::Flash,
         "reference" | "ref" => Variant::Reference,
@@ -98,12 +137,29 @@ fn convert(src: &Path, dst: &Path, to: &str) -> Result<()> {
     };
     // NOTE: converting quantized optimizer states across formats is
     // lossy by design; we re-init states at zero when formats differ
-    // and carry the (reconstructed) master weights over.
-    let new_state = State::init(&master, state.n, meta.optimizer, target);
-    let bytes = checkpoint::save(dst, &new_state, meta.optimizer, target,
-                                 meta.step, meta.param_count)?;
-    println!("converted {src:?} ({}) -> {dst:?} ({}, {})",
-             meta.variant, target, fmt_bytes(bytes as f64));
+    // and carry the (reconstructed) master weights over, group by group.
+    let groups = sd
+        .groups
+        .iter()
+        .map(|g| GroupState {
+            name: g.name.clone(),
+            param_count: g.param_count,
+            ranges: g.ranges.clone(),
+            state: State::init(&g.state.master_weights(), g.state.n,
+                               sd.optimizer, target),
+        })
+        .collect();
+    let out = StateDict {
+        optimizer: sd.optimizer,
+        variant: target,
+        step: sd.step,
+        total_params: sd.total_params,
+        groups,
+    };
+    let bytes = checkpoint::save_state_dict(dst, &out)?;
+    println!("converted {src:?} ({}) -> {dst:?} ({}, {}, {} groups)",
+             sd.variant, target, fmt_bytes(bytes as f64),
+             out.groups.len());
     println!("note: optimizer moments reset; master weights preserved \
               to within split tolerance");
     Ok(())

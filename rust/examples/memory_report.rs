@@ -112,7 +112,10 @@ fn main() -> Result<()> {
                 fmt_bytes(p as f64),
                 fmt_bytes(o as f64),
                 fmt_bytes(g as f64),
-                format!("{:.3}", (p + o) as f64 / tr.opt.state.n as f64),
+                format!("{:.3}", (p + o) as f64
+                        / tr.opt.groups.iter()
+                            .map(|g| g.opt.state.n)
+                            .sum::<usize>() as f64),
             ]);
         }
         t.print();

@@ -5,10 +5,12 @@
 //!   cargo run --release --example quickstart -- [--steps 300]
 //!       [--preset lm-tiny] [--optimizer adamw] [--workers 1] [--csv-dir .]
 //!
-//! This is the run recorded in EXPERIMENTS.md §E2E.
+//! Both arms train with the production-shaped decay/no_decay param
+//! groups (weight decay 0 on norms/biases); pass `--groups none` for
+//! the legacy single-group recipe.
 
 use anyhow::Result;
-use flashtrain::config::{OptKind, TrainConfig, Variant};
+use flashtrain::config::{GroupConfig, OptKind, TrainConfig, Variant};
 use flashtrain::coordinator::Trainer;
 use flashtrain::memory::tracker::Category;
 use flashtrain::runtime::{Manifest, Runtime};
@@ -40,6 +42,8 @@ fn main() -> Result<()> {
         cfg.workers = args.get_usize("workers", 1);
         cfg.eval_batches = 8;
         cfg.log_every = (steps / 10).max(1);
+        // production-shaped recipe: no weight decay on norms/biases
+        cfg.groups = GroupConfig::decay_pair();
         cfg.apply_args(&args);
         cfg.variant = variant; // variant is fixed per arm
 
@@ -47,8 +51,15 @@ fn main() -> Result<()> {
         let mut trainer = Trainer::new(cfg.clone(), &manifest, &rt)?;
         trainer.run(false)?;
         let (eloss, eacc) = trainer.evaluate()?;
-        let bpp = trainer.opt.state.bytes() as f64
+        let bpp = trainer.opt.state_bytes() as f64
             / trainer.model.param_count as f64;
+        for g in &trainer.opt.groups {
+            println!("  group {:>9}: {:>8} params, wd {}, state {}",
+                     g.name, g.count(),
+                     g.hyper.weight_decay
+                         .unwrap_or(trainer.cfg.weight_decay),
+                     fmt_bytes(g.opt.state.bytes() as f64));
+        }
         summary.row(&[
             variant.name().to_string(),
             format!("{:.4}", trainer.metrics.final_loss(10)),

@@ -8,9 +8,9 @@
 //! * [`ScalarBackend`] — the fused chain over a single partition,
 //!   driven by the `scalar_ref` update rules and the `formats` codecs;
 //! * [`ParallelBackend`] — the same chain sharded into GROUP-aligned
-//!   partitions executed on a scoped `std::thread` pool, touching only
-//!   each partition's compact state slices (int8 codes + f16 scales +
-//!   split weights) plus a partition-sized f32 scratch.
+//!   partitions executed on a persistent worker pool (`pool.rs`),
+//!   touching only each partition's compact state slices (int8 codes +
+//!   f16 scales + split weights) plus a partition-sized f32 scratch.
 //!
 //! Both are bit-exact with each other and with
 //! `scalar_ref::step_state` (enforced by
@@ -25,6 +25,7 @@
 pub mod fused;
 pub mod parallel;
 pub mod partition;
+pub mod pool;
 pub mod scalar;
 
 use anyhow::{bail, Result};

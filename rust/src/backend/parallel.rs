@@ -1,5 +1,5 @@
-//! Multi-threaded native backend: GROUP-aligned shards on a scoped
-//! std::thread pool.
+//! Multi-threaded native backend: GROUP-aligned shards on a persistent
+//! worker pool.
 //!
 //! Flash-attention-style fusion applied to the optimizer step: each
 //! worker loads its partition's compact state once (bf16+i8 split
@@ -8,11 +8,19 @@
 //! writes the compact formats back once.  No worker ever touches
 //! another worker's groups, so the result is bit-identical to the
 //! sequential backend regardless of thread count or scheduling.
+//!
+//! The pool threads live as long as the backend (see [`WorkerPool`]),
+//! so per-step cost is a channel send + barrier instead of a
+//! spawn/join — which is what makes small buckets profitable to
+//! parallelize at all.
+
+use std::sync::Mutex;
 
 use anyhow::Result;
 
 use crate::backend::fused::step_part;
 use crate::backend::partition::Part;
+use crate::backend::pool::WorkerPool;
 use crate::backend::{validate_range, StepBackend};
 use crate::config::{OptKind, Variant};
 use crate::formats::GROUP;
@@ -21,6 +29,10 @@ use crate::optim::state::State;
 
 pub struct ParallelBackend {
     threads: usize,
+    /// persistent `threads - 1` worker threads (the calling thread
+    /// always takes the first shard); the Mutex serializes steps and
+    /// keeps the backend `Sync`
+    pool: Mutex<WorkerPool>,
 }
 
 impl ParallelBackend {
@@ -32,8 +44,12 @@ impl ParallelBackend {
                 .unwrap_or(1)
         } else {
             threads
-        };
-        ParallelBackend { threads: t.max(1) }
+        }
+        .max(1);
+        ParallelBackend {
+            threads: t,
+            pool: Mutex::new(WorkerPool::new(t - 1)),
+        }
     }
 
     pub fn threads(&self) -> usize {
@@ -69,15 +85,23 @@ impl StepBackend for ParallelBackend {
         let root = Part::of_range(state, lo, hi, g);
         let mut parts = root.split_many(&sizes);
         let h = *h;
-        std::thread::scope(|s| {
-            let mut iter = parts.drain(..);
-            // this thread takes the first shard; spawn the rest
-            let mut own = iter.next().expect("at least one partition");
-            for mut part in iter {
-                s.spawn(move || step_part(&mut part, opt, variant, &h));
-            }
+        // this thread takes the first shard; the pool gets the rest
+        let mut own = parts.remove(0);
+        if parts.is_empty() {
             step_part(&mut own, opt, variant, &h);
-        });
+            return Ok(());
+        }
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = parts
+            .into_iter()
+            .map(|mut part| -> Box<dyn FnOnce() + Send + '_> {
+                Box::new(move || step_part(&mut part, opt, variant, &h))
+            })
+            .collect();
+        let pool = match self.pool.lock() {
+            Ok(p) => p,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        pool.run_scoped(jobs, || step_part(&mut own, opt, variant, &h));
         Ok(())
     }
 }
@@ -164,5 +188,34 @@ mod tests {
             .step_full(&mut b, &g, OptKind::Sgd, Variant::Reference, &h)
             .unwrap();
         assert_states_bit_equal(&a, &b, "sgd/reference");
+    }
+
+    #[test]
+    fn pool_is_reused_across_many_steps() {
+        // the persistent pool must stay healthy over a long run and
+        // keep matching the sequential backend bit for bit
+        let n = 7 * GROUP;
+        let mut rng = Rng::new(13);
+        let theta0: Vec<f32> =
+            (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+        let mut a = State::init(&theta0, n, OptKind::AdamW,
+                                Variant::Flash);
+        let mut b = a.clone();
+        let par = ParallelBackend::new(4);
+        for t in 1..=50usize {
+            let g: Vec<f32> = (0..n)
+                .map(|_| {
+                    crate::formats::bf16::round_f32_to_bf16(
+                        rng.normal() as f32 * 0.01)
+                })
+                .collect();
+            let h = Hyper::for_step(&TrainConfig::default(), 1e-3, t);
+            ScalarBackend
+                .step_full(&mut a, &g, OptKind::AdamW, Variant::Flash, &h)
+                .unwrap();
+            par.step_full(&mut b, &g, OptKind::AdamW, Variant::Flash, &h)
+                .unwrap();
+        }
+        assert_states_bit_equal(&a, &b, "adamw/flash 50 steps");
     }
 }

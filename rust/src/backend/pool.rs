@@ -1,0 +1,176 @@
+//! Persistent worker pool for the parallel backend.
+//!
+//! `ParallelBackend` used to spawn scoped `std::thread`s on every
+//! optimizer step; for small buckets the spawn/join cost dominated the
+//! fused chain itself.  [`WorkerPool`] keeps the threads alive for the
+//! backend's lifetime and hands them borrowed jobs per step with a
+//! completion barrier, amortizing thread startup across the whole run
+//! while preserving the exact same shard-per-thread execution (and so
+//! bit-exactness — see `rust/tests/backend_equivalence.rs`).
+
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Worker {
+    tx: Option<Sender<Job>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+pub struct WorkerPool {
+    workers: Vec<Worker>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` long-lived worker threads (0 is fine: every
+    /// `run_scoped` then executes only its local closure).
+    pub fn new(n: usize) -> WorkerPool {
+        let workers = (0..n)
+            .map(|i| {
+                let (tx, rx) = channel::<Job>();
+                let handle = std::thread::Builder::new()
+                    .name(format!("flashtrain-step-{i}"))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("spawning pool worker thread");
+                Worker { tx: Some(tx), handle: Some(handle) }
+            })
+            .collect();
+        WorkerPool { workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run `jobs` on distinct pool workers (job `i` on worker `i`;
+    /// `jobs.len()` must not exceed `workers()`) while executing
+    /// `local` on the calling thread, then block until every job has
+    /// finished.  Jobs may borrow caller data: this function does not
+    /// return — normally or by unwinding — while any dispatched job is
+    /// still running.
+    pub fn run_scoped<'scope>(&self,
+                              jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>,
+                              local: impl FnOnce()) {
+        assert!(jobs.len() <= self.workers.len(),
+                "more jobs than pool workers");
+        let (done_tx, done_rx) = channel::<()>();
+        let mut dispatched = 0usize;
+        let mut send_failed = false;
+        for (worker, job) in self.workers.iter().zip(jobs) {
+            // SAFETY: erasing 'scope from the job is sound because the
+            // completion barrier below keeps every borrow alive past
+            // the job's execution: each dispatched job drops its
+            // `done` sender only after running (or fully unwinding),
+            // and we do not leave this function until every dispatched
+            // job's sender is gone.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>,
+                                      Box<dyn FnOnce() + Send + 'static>>(
+                    job)
+            };
+            let done = done_tx.clone();
+            let wrapped: Job = Box::new(move || {
+                job();
+                let _ = done.send(());
+            });
+            let tx = worker.tx.as_ref().expect("pool not shut down");
+            if tx.send(wrapped).is_err() {
+                // worker died (a previous job panicked); stop
+                // dispatching, drain what did go out, then report
+                send_failed = true;
+                break;
+            }
+            dispatched += 1;
+        }
+        drop(done_tx);
+
+        // run the caller's shard concurrently; defer any panic until
+        // the barrier has drained so no borrow can dangle
+        let local_result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(local));
+
+        let mut completed = 0usize;
+        for _ in 0..dispatched {
+            if done_rx.recv().is_ok() {
+                completed += 1;
+            }
+        }
+        if let Err(p) = local_result {
+            std::panic::resume_unwind(p);
+        }
+        if send_failed || completed < dispatched {
+            panic!("worker pool thread died during a fused step");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // close every channel first so all workers see disconnect,
+        // then join them
+        for w in &mut self.workers {
+            w.tx.take();
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_borrowed_jobs_to_completion() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0u64; 4];
+        {
+            let (first, rest) = data.split_at_mut(1);
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = rest
+                .iter_mut()
+                .enumerate()
+                .map(|(i, slot)| -> Box<dyn FnOnce() + Send + '_> {
+                    Box::new(move || *slot = (i as u64 + 2) * 10)
+                })
+                .collect();
+            pool.run_scoped(jobs, || first[0] = 10);
+        }
+        assert_eq!(data, vec![10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn pool_survives_many_rounds() {
+        let pool = WorkerPool::new(2);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..100 {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+                .map(|_| -> Box<dyn FnOnce() + Send + '_> {
+                    Box::new(|| {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                    })
+                })
+                .collect();
+            pool.run_scoped(jobs, || {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 300);
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_local_only() {
+        let pool = WorkerPool::new(0);
+        let mut x = 0;
+        pool.run_scoped(Vec::new(), || x = 7);
+        assert_eq!(x, 7);
+    }
+}

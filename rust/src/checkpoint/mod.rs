@@ -2,9 +2,11 @@
 //! ~5 bytes/param (bf16 θ′ + i8 ρ + i8 m + u8 v + f16 group scales)
 //! versus 12 bytes/param for a standard fp32 Adam checkpoint.
 //!
-//! Binary layout (little-endian):
+//! Two on-disk versions share the magic and the section encoding:
+//!
+//! **v1** — one flat state:
 //!   magic   8B  "FLTCKPT1"
-//!   u32     version
+//!   u32     version = 1
 //!   u8      optimizer (0 sgd / 1 adamw / 2 lion)
 //!   u8      variant   (0 ref / 1 flash / 2 wsplit / 3 quant / 4 nocomp)
 //!   u64     step
@@ -13,8 +15,23 @@
 //!   u32     n_sections
 //!   sections: u8 tag, u64 byte_len, payload, u32 crc32(payload)
 //!
-//! Every section is CRC-checked on read; corruption is detected, not
-//! silently consumed (failure-injection tested).
+//! **v2** — named param-group sections (`optim::StateDict`):
+//!   magic   8B  "FLTCKPT1"
+//!   u32     version = 2
+//!   header: u8 optimizer, u8 variant, u64 step, u64 total_params,
+//!           u32 n_groups, u32 crc32(header bytes)
+//!   per group:
+//!     u32   header_len
+//!     header bytes: u16 name_len, name, u64 param_count,
+//!                   u64 padded_len, u32 n_ranges, n_ranges × (u64, u64)
+//!     u32   crc32(header bytes)
+//!     u32   n_sections
+//!     sections (same encoding as v1)
+//!
+//! Every payload and header is CRC-checked on read; corruption is
+//! detected, not silently consumed (failure-injection tested in
+//! `rust/tests/checkpoint_v2.rs`).  `load_state_dict` reads both
+//! versions — a v1 file loads as a single group named `all`.
 
 pub mod crc32;
 
@@ -24,10 +41,12 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{OptKind, Variant};
+use crate::optim::group::{GroupState, StateDict};
 use crate::optim::state::State;
 
 const MAGIC: &[u8; 8] = b"FLTCKPT1";
-const VERSION: u32 = 1;
+const V1: u32 = 1;
+const V2: u32 = 2;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u8)]
@@ -98,7 +117,7 @@ fn var_from_u8(b: u8) -> Result<Variant> {
     })
 }
 
-/// Metadata returned alongside a loaded state.
+/// Metadata returned alongside a v1-loaded state.
 #[derive(Clone, Debug)]
 pub struct CheckpointMeta {
     pub optimizer: OptKind,
@@ -130,18 +149,8 @@ fn vec_from_bytes<T: Copy + Default>(bytes: &[u8]) -> Result<Vec<T>> {
     Ok(out)
 }
 
-fn write_section<W: Write>(w: &mut W, tag: Tag, payload: &[u8])
-                           -> Result<()> {
-    w.write_all(&[tag as u8])?;
-    w.write_all(&(payload.len() as u64).to_le_bytes())?;
-    w.write_all(payload)?;
-    w.write_all(&crc32::crc32(payload).to_le_bytes())?;
-    Ok(())
-}
-
-/// Serialize a training state.  Returns bytes written.
-pub fn save(path: &Path, state: &State, optimizer: OptKind,
-            variant: Variant, step: u64, param_count: u64) -> Result<u64> {
+/// The (tag, payload) sections a state serializes to, in tag order.
+fn state_sections(state: &State) -> Vec<(Tag, &[u8])> {
     let mut sections: Vec<(Tag, &[u8])> = Vec::new();
     if let Some(v) = &state.theta {
         sections.push((Tag::ThetaF32, as_bytes(v)));
@@ -170,69 +179,54 @@ pub fn save(path: &Path, state: &State, optimizer: OptKind,
     if let Some(v) = &state.vs {
         sections.push((Tag::VsF16, as_bytes(v)));
     }
-
-    let file = std::fs::File::create(path)
-        .with_context(|| format!("creating {path:?}"))?;
-    let mut w = std::io::BufWriter::new(file);
-    w.write_all(MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&[opt_to_u8(optimizer), var_to_u8(variant)])?;
-    w.write_all(&step.to_le_bytes())?;
-    w.write_all(&param_count.to_le_bytes())?;
-    w.write_all(&(state.n as u64).to_le_bytes())?;
-    w.write_all(&(sections.len() as u32).to_le_bytes())?;
-    for (tag, payload) in &sections {
-        write_section(&mut w, *tag, payload)?;
-    }
-    w.flush()?;
-    Ok(std::fs::metadata(path)?.len())
+    sections
 }
 
-/// Load a checkpoint; verifies magic, version, and every section CRC.
-pub fn load(path: &Path) -> Result<(CheckpointMeta, State)> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path)
-            .with_context(|| format!("opening {path:?}"))?,
-    );
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("not a flashtrain checkpoint (bad magic)");
-    }
-    let mut b4 = [0u8; 4];
-    f.read_exact(&mut b4)?;
-    let version = u32::from_le_bytes(b4);
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version}");
-    }
-    let mut b2 = [0u8; 2];
-    f.read_exact(&mut b2)?;
-    let optimizer = opt_from_u8(b2[0])?;
-    let variant = var_from_u8(b2[1])?;
-    let mut b8 = [0u8; 8];
-    f.read_exact(&mut b8)?;
-    let step = u64::from_le_bytes(b8);
-    f.read_exact(&mut b8)?;
-    let param_count = u64::from_le_bytes(b8);
-    f.read_exact(&mut b8)?;
-    let padded_len = u64::from_le_bytes(b8);
-    f.read_exact(&mut b4)?;
-    let n_sections = u32::from_le_bytes(b4);
+fn write_section<W: Write>(w: &mut W, tag: Tag, payload: &[u8])
+                           -> Result<()> {
+    w.write_all(&[tag as u8])?;
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.write_all(&crc32::crc32(payload).to_le_bytes())?;
+    Ok(())
+}
 
-    let mut state = State::empty(padded_len as usize);
+fn read_u32<R: Read>(f: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(f: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Read `n_sections` CRC-checked sections into a fresh `State` of
+/// padded length `padded`.  The section length fields live outside the
+/// CRCs, so they are bounded by `file_len` (total checkpoint size)
+/// before any allocation: a flipped bit in a length field must fail
+/// cleanly, not attempt a multi-GiB allocation.
+fn read_state_sections<R: Read>(f: &mut R, n_sections: u32,
+                                padded: usize, file_len: u64)
+                                -> Result<State> {
+    if n_sections > 16 {
+        bail!("implausible section count {n_sections}");
+    }
+    let mut state = State::empty(padded);
     for _ in 0..n_sections {
         let mut tag_b = [0u8; 1];
         f.read_exact(&mut tag_b)?;
         let tag = Tag::from_u8(tag_b[0])?;
-        f.read_exact(&mut b8)?;
-        let len = u64::from_le_bytes(b8) as usize;
-        if len > (1 << 34) {
-            bail!("implausible section length {len}");
+        let len = read_u64(f)? as usize;
+        if len as u64 > file_len {
+            bail!("checkpoint corruption: section length {len} exceeds \
+                   file size {file_len}");
         }
         let mut payload = vec![0u8; len];
         f.read_exact(&mut payload)?;
-        f.read_exact(&mut b4)?;
-        let want = u32::from_le_bytes(b4);
+        let want = read_u32(f)?;
         let got = crc32::crc32(&payload);
         if want != got {
             bail!("checkpoint corruption: section {tag:?} crc {got:#x} != \
@@ -252,13 +246,249 @@ pub fn load(path: &Path) -> Result<(CheckpointMeta, State)> {
             Tag::VsF16 => state.vs = Some(vec_from_bytes(&payload)?),
         }
     }
+    Ok(state)
+}
 
-    let meta = CheckpointMeta { optimizer, variant, step, param_count,
-                                padded_len };
+// ---------------------------------------------------------------------
+// v1: one flat state
+// ---------------------------------------------------------------------
+
+/// Serialize a single flat training state in the v1 layout.  Returns
+/// bytes written.  (New code should prefer [`save_state_dict`].)
+pub fn save(path: &Path, state: &State, optimizer: OptKind,
+            variant: Variant, step: u64, param_count: u64) -> Result<u64> {
+    let sections = state_sections(state);
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {path:?}"))?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&V1.to_le_bytes())?;
+    w.write_all(&[opt_to_u8(optimizer), var_to_u8(variant)])?;
+    w.write_all(&step.to_le_bytes())?;
+    w.write_all(&param_count.to_le_bytes())?;
+    w.write_all(&(state.n as u64).to_le_bytes())?;
+    w.write_all(&(sections.len() as u32).to_le_bytes())?;
+    for (tag, payload) in &sections {
+        write_section(&mut w, *tag, payload)?;
+    }
+    w.flush()?;
+    Ok(std::fs::metadata(path)?.len())
+}
+
+/// Load a v1 checkpoint; verifies magic, version, and every section
+/// CRC.  Rejects v2 files (use [`load_state_dict`] to read both).
+pub fn load(path: &Path) -> Result<(CheckpointMeta, State)> {
+    let file_len = std::fs::metadata(path)
+        .with_context(|| format!("opening {path:?}"))?
+        .len();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {path:?}"))?,
+    );
+    let version = read_header(&mut f)?;
+    if version != V1 {
+        bail!("checkpoint version {version} is not v1 — read it with \
+               checkpoint::load_state_dict");
+    }
+    let (meta, state) = load_v1_body(&mut f, file_len)?;
+    Ok((meta, state))
+}
+
+/// Read and verify magic + version.
+fn read_header<R: Read>(f: &mut R) -> Result<u32> {
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a flashtrain checkpoint (bad magic)");
+    }
+    read_u32(f)
+}
+
+fn load_v1_body<R: Read>(f: &mut R, file_len: u64)
+                         -> Result<(CheckpointMeta, State)> {
+    let mut b2 = [0u8; 2];
+    f.read_exact(&mut b2)?;
+    let optimizer = opt_from_u8(b2[0])?;
+    let variant = var_from_u8(b2[1])?;
+    let step = read_u64(f)?;
+    let param_count = read_u64(f)?;
+    let padded_len = read_u64(f)?;
+    let n_sections = read_u32(f)?;
+    let state = read_state_sections(f, n_sections, padded_len as usize,
+                                    file_len)?;
     state
         .validate()
         .map_err(|e| anyhow!("loaded state invalid: {e}"))?;
+    let meta = CheckpointMeta { optimizer, variant, step, param_count,
+                                padded_len };
     Ok((meta, state))
+}
+
+// ---------------------------------------------------------------------
+// v2: named param-group sections
+// ---------------------------------------------------------------------
+
+/// Serialize a `StateDict` in the v2 layout (named, CRC-checked group
+/// sections).  Returns bytes written.
+pub fn save_state_dict(path: &Path, sd: &StateDict) -> Result<u64> {
+    sd.validate()?;
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {path:?}"))?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&V2.to_le_bytes())?;
+
+    let mut head: Vec<u8> = Vec::with_capacity(22);
+    head.push(opt_to_u8(sd.optimizer));
+    head.push(var_to_u8(sd.variant));
+    head.extend_from_slice(&sd.step.to_le_bytes());
+    head.extend_from_slice(&sd.total_params.to_le_bytes());
+    head.extend_from_slice(&(sd.groups.len() as u32).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(&crc32::crc32(&head).to_le_bytes())?;
+
+    for g in &sd.groups {
+        // name length is bounded by sd.validate() above, before the
+        // file is created — no truncated file is left behind on error
+        let mut gh: Vec<u8> = Vec::new();
+        gh.extend_from_slice(&(g.name.len() as u16).to_le_bytes());
+        gh.extend_from_slice(g.name.as_bytes());
+        gh.extend_from_slice(&g.param_count.to_le_bytes());
+        gh.extend_from_slice(&(g.state.n as u64).to_le_bytes());
+        gh.extend_from_slice(&(g.ranges.len() as u32).to_le_bytes());
+        for &(lo, hi) in &g.ranges {
+            gh.extend_from_slice(&lo.to_le_bytes());
+            gh.extend_from_slice(&hi.to_le_bytes());
+        }
+        w.write_all(&(gh.len() as u32).to_le_bytes())?;
+        w.write_all(&gh)?;
+        w.write_all(&crc32::crc32(&gh).to_le_bytes())?;
+
+        let sections = state_sections(&g.state);
+        w.write_all(&(sections.len() as u32).to_le_bytes())?;
+        for (tag, payload) in &sections {
+            write_section(&mut w, *tag, payload)?;
+        }
+    }
+    w.flush()?;
+    Ok(std::fs::metadata(path)?.len())
+}
+
+/// Load a checkpoint of either version as a `StateDict`.  A v1 file
+/// becomes a single group named `all` covering `[0, param_count)` —
+/// the read-compat path for pre-group checkpoints.
+pub fn load_state_dict(path: &Path) -> Result<StateDict> {
+    let file_len = std::fs::metadata(path)
+        .with_context(|| format!("opening {path:?}"))?
+        .len();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {path:?}"))?,
+    );
+    let version = read_header(&mut f)?;
+    let sd = match version {
+        V1 => {
+            let (meta, state) = load_v1_body(&mut f, file_len)?;
+            StateDict {
+                optimizer: meta.optimizer,
+                variant: meta.variant,
+                step: meta.step,
+                total_params: meta.param_count,
+                groups: vec![GroupState {
+                    name: "all".into(),
+                    param_count: meta.param_count,
+                    ranges: vec![(0, meta.param_count)],
+                    state,
+                }],
+            }
+        }
+        V2 => load_v2_body(&mut f, file_len)?,
+        other => bail!("unsupported checkpoint version {other}"),
+    };
+    sd.validate()
+        .map_err(|e| anyhow!("loaded checkpoint invalid: {e}"))?;
+    Ok(sd)
+}
+
+/// Consume `n` bytes of a group header buffer at cursor `p`.
+fn take<'a>(buf: &'a [u8], p: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if *p + n > buf.len() {
+        bail!("truncated group header");
+    }
+    let s = &buf[*p..*p + n];
+    *p += n;
+    Ok(s)
+}
+
+fn load_v2_body<R: Read>(f: &mut R, file_len: u64)
+                         -> Result<StateDict> {
+    let mut head = vec![0u8; 22];
+    f.read_exact(&mut head)?;
+    let want = read_u32(f)?;
+    let got = crc32::crc32(&head);
+    if want != got {
+        bail!("checkpoint corruption: file header crc {got:#x} != \
+               {want:#x}");
+    }
+    let optimizer = opt_from_u8(head[0])?;
+    let variant = var_from_u8(head[1])?;
+    let step = u64::from_le_bytes(head[2..10].try_into().unwrap());
+    let total_params = u64::from_le_bytes(head[10..18].try_into().unwrap());
+    let n_groups = u32::from_le_bytes(head[18..22].try_into().unwrap());
+    if n_groups == 0 || n_groups > 65536 {
+        bail!("implausible group count {n_groups}");
+    }
+
+    let mut groups = Vec::with_capacity(n_groups as usize);
+    for _ in 0..n_groups {
+        let gh_len = read_u32(f)? as usize;
+        if gh_len > (1 << 24) {
+            bail!("implausible group header length {gh_len}");
+        }
+        let mut gh = vec![0u8; gh_len];
+        f.read_exact(&mut gh)?;
+        let want = read_u32(f)?;
+        let got = crc32::crc32(&gh);
+        if want != got {
+            bail!("checkpoint corruption: group header crc {got:#x} != \
+                   {want:#x}");
+        }
+        let mut p = 0usize;
+        let name_len =
+            u16::from_le_bytes(take(&gh, &mut p, 2)?.try_into().unwrap())
+                as usize;
+        let name = String::from_utf8(take(&gh, &mut p, name_len)?.to_vec())
+            .map_err(|_| anyhow!("group name is not utf-8"))?;
+        let param_count =
+            u64::from_le_bytes(take(&gh, &mut p, 8)?.try_into().unwrap());
+        let padded_len =
+            u64::from_le_bytes(take(&gh, &mut p, 8)?.try_into().unwrap());
+        let n_ranges =
+            u32::from_le_bytes(take(&gh, &mut p, 4)?.try_into().unwrap());
+        if n_ranges as usize > (1 << 20) {
+            bail!("implausible range count {n_ranges}");
+        }
+        let mut ranges = Vec::with_capacity(n_ranges as usize);
+        for _ in 0..n_ranges {
+            let lo = u64::from_le_bytes(take(&gh, &mut p, 8)?
+                                        .try_into().unwrap());
+            let hi = u64::from_le_bytes(take(&gh, &mut p, 8)?
+                                        .try_into().unwrap());
+            ranges.push((lo, hi));
+        }
+        if p != gh.len() {
+            bail!("group header has {} trailing bytes", gh.len() - p);
+        }
+
+        let n_sections = read_u32(f)?;
+        let state = read_state_sections(f, n_sections,
+                                        padded_len as usize, file_len)?;
+        state.validate().map_err(|e| {
+            anyhow!("group {name:?} state invalid: {e}")
+        })?;
+        groups.push(GroupState { name, param_count, ranges, state });
+    }
+    Ok(StateDict { optimizer, variant, step, total_params, groups })
 }
 
 #[cfg(test)]
@@ -355,5 +585,85 @@ mod tests {
         assert!(ratio > 2.2 && ratio < 2.6, "ratio {ratio}");
         std::fs::remove_file(p_ref).ok();
         std::fs::remove_file(p_flash).ok();
+    }
+
+    #[test]
+    fn v1_loads_as_single_group_state_dict() {
+        let st = demo_state(256, 5);
+        let path = tmp("v1compat");
+        save(&path, &st, OptKind::AdamW, Variant::Flash, 9, 250).unwrap();
+        let sd = load_state_dict(&path).unwrap();
+        assert_eq!(sd.step, 9);
+        assert_eq!(sd.total_params, 250);
+        assert_eq!(sd.groups.len(), 1);
+        assert_eq!(sd.groups[0].name, "all");
+        assert_eq!(sd.groups[0].ranges, vec![(0, 250)]);
+        assert_eq!(sd.groups[0].state.theta_p, st.theta_p);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v2_roundtrip_two_groups() {
+        let sd = StateDict {
+            optimizer: OptKind::AdamW,
+            variant: Variant::Flash,
+            step: 17,
+            total_params: 384,
+            groups: vec![
+                GroupState {
+                    name: "decay".into(),
+                    param_count: 256,
+                    ranges: vec![(0, 192), (320, 384)],
+                    state: demo_state(256, 6),
+                },
+                GroupState {
+                    name: "no_decay".into(),
+                    param_count: 128,
+                    ranges: vec![(192, 320)],
+                    state: demo_state(128, 7),
+                },
+            ],
+        };
+        let path = tmp("v2rt");
+        save_state_dict(&path, &sd).unwrap();
+        let sd2 = load_state_dict(&path).unwrap();
+        assert_eq!(sd2.step, 17);
+        assert_eq!(sd2.total_params, 384);
+        assert_eq!(sd2.groups.len(), 2);
+        for (a, b) in sd.groups.iter().zip(&sd2.groups) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.ranges, b.ranges);
+            assert_eq!(a.state.theta_p, b.state.theta_p);
+            assert_eq!(a.state.rho, b.state.rho);
+            assert_eq!(a.state.mq, b.state.mq);
+            assert_eq!(a.state.ms, b.state.ms);
+            assert_eq!(a.state.vq, b.state.vq);
+            assert_eq!(a.state.vs, b.state.vs);
+        }
+        // v1 loader refuses v2 files with a pointer to the new API
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("load_state_dict"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v2_rejects_invalid_dicts_on_save() {
+        let mut sd = StateDict {
+            optimizer: OptKind::Sgd,
+            variant: Variant::Flash,
+            step: 0,
+            total_params: 128,
+            groups: vec![GroupState {
+                name: "all".into(),
+                param_count: 100, // != range span
+                ranges: vec![(0, 128)],
+                state: demo_state(128, 8),
+            }],
+        };
+        let path = tmp("v2bad");
+        assert!(save_state_dict(&path, &sd).is_err());
+        sd.groups[0].param_count = 128;
+        save_state_dict(&path, &sd).unwrap();
+        std::fs::remove_file(path).ok();
     }
 }

@@ -146,6 +146,103 @@ impl fmt::Display for BackendKind {
     }
 }
 
+/// One parameter-group override block: a named selector over the model
+/// layout plus per-group hyperparameter overrides (`None` inherits the
+/// run default).  Resolved against a `ModelInfo` by
+/// `optim::GroupSpec::from_config`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GroupConfig {
+    pub name: String,
+    /// parameter selector: `all` | `decay` | `no_decay` | a layout-name
+    /// substring (first matching group wins, in config order)
+    pub params: String,
+    /// multiplies the scheduled learning rate for this group
+    pub lr_scale: Option<f64>,
+    pub weight_decay: Option<f64>,
+    pub beta1: Option<f64>,
+    pub beta2: Option<f64>,
+    pub eps: Option<f64>,
+}
+
+impl GroupConfig {
+    pub fn selector(name: &str, params: &str) -> GroupConfig {
+        GroupConfig {
+            name: name.to_string(),
+            params: params.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// The standard two-group split: norm scales and biases are exempt
+    /// from weight decay, everything else keeps the run default.
+    pub fn decay_pair() -> Vec<GroupConfig> {
+        vec![
+            GroupConfig::selector("decay", "decay"),
+            GroupConfig {
+                weight_decay: Some(0.0),
+                ..GroupConfig::selector("no_decay", "no_decay")
+            },
+        ]
+    }
+
+    pub fn from_json(j: &Json) -> Result<GroupConfig, String> {
+        let obj = j.as_obj().ok_or("group must be an object")?;
+        let mut g = GroupConfig::default();
+        for (k, v) in obj {
+            match k.as_str() {
+                "name" => {
+                    g.name = v.as_str().ok_or("group name")?.to_string()
+                }
+                "params" => {
+                    g.params = v.as_str().ok_or("group params")?.to_string()
+                }
+                "lr_scale" => {
+                    g.lr_scale = Some(v.as_f64().ok_or("lr_scale")?)
+                }
+                "weight_decay" => {
+                    g.weight_decay = Some(v.as_f64().ok_or("weight_decay")?)
+                }
+                "beta1" => g.beta1 = Some(v.as_f64().ok_or("beta1")?),
+                "beta2" => g.beta2 = Some(v.as_f64().ok_or("beta2")?),
+                "eps" => g.eps = Some(v.as_f64().ok_or("eps")?),
+                other => {
+                    return Err(format!("unknown group key {other:?}"))
+                }
+            }
+        }
+        if g.name.is_empty() {
+            return Err("group needs a non-empty \"name\"".into());
+        }
+        if g.params.is_empty() {
+            g.params = "all".into();
+        }
+        Ok(g)
+    }
+
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("params".into(), Json::Str(self.params.clone()));
+        if let Some(x) = self.lr_scale {
+            m.insert("lr_scale".into(), Json::Num(x));
+        }
+        if let Some(x) = self.weight_decay {
+            m.insert("weight_decay".into(), Json::Num(x));
+        }
+        if let Some(x) = self.beta1 {
+            m.insert("beta1".into(), Json::Num(x));
+        }
+        if let Some(x) = self.beta2 {
+            m.insert("beta2".into(), Json::Num(x));
+        }
+        if let Some(x) = self.eps {
+            m.insert("eps".into(), Json::Num(x));
+        }
+        Json::Obj(m)
+    }
+}
+
 /// Full run configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -174,6 +271,9 @@ pub struct TrainConfig {
     pub grad_release: bool,
     /// simulated data-parallel worker count (gradients allreduced)
     pub workers: usize,
+    /// parameter-group override blocks (empty = one group over all
+    /// parameters with the run-default hyperparameters)
+    pub groups: Vec<GroupConfig>,
     pub eval_every: usize,
     pub eval_batches: usize,
     pub log_every: usize,
@@ -201,6 +301,7 @@ impl Default for TrainConfig {
             threads: 0,
             grad_release: true,
             workers: 1,
+            groups: Vec::new(),
             eval_every: 0,
             eval_batches: 8,
             log_every: 10,
@@ -239,6 +340,16 @@ impl TrainConfig {
         }
         self.threads = args.get_usize("threads", self.threads);
         self.workers = args.get_usize("workers", self.workers);
+        if let Some(g) = args.get("groups") {
+            self.groups = match g {
+                "none" | "single" => Vec::new(),
+                "decay" | "decay,no_decay" => GroupConfig::decay_pair(),
+                other => panic!(
+                    "--groups expects decay|none, got {other:?} (full \
+                     group specs go in a --config file)"
+                ),
+            };
+        }
         self.eval_every = args.get_usize("eval-every", self.eval_every);
         self.eval_batches = args.get_usize("eval-batches",
                                            self.eval_batches);
@@ -320,6 +431,14 @@ impl TrainConfig {
                     c.grad_release = matches!(v, Json::Bool(true))
                 }
                 "workers" => c.workers = v.as_usize().ok_or("workers")?,
+                "groups" => {
+                    c.groups = v
+                        .as_arr()
+                        .ok_or("groups must be an array")?
+                        .iter()
+                        .map(GroupConfig::from_json)
+                        .collect::<Result<Vec<_>, String>>()?
+                }
                 "eval_every" => {
                     c.eval_every = v.as_usize().ok_or("eval_every")?
                 }
@@ -359,6 +478,10 @@ impl TrainConfig {
         m.insert("threads".into(), Json::Num(self.threads as f64));
         m.insert("grad_release".into(), Json::Bool(self.grad_release));
         m.insert("workers".into(), Json::Num(self.workers as f64));
+        m.insert("groups".into(),
+                 Json::Arr(self.groups.iter()
+                           .map(GroupConfig::to_json)
+                           .collect()));
         m.insert("eval_every".into(), Json::Num(self.eval_every as f64));
         m.insert("eval_batches".into(), Json::Num(self.eval_batches as f64));
         m.insert("log_every".into(), Json::Num(self.log_every as f64));
@@ -431,6 +554,55 @@ mod tests {
         assert!(BackendKind::parse("gpu").is_none());
         assert!(BackendKind::Parallel.is_native());
         assert!(!BackendKind::Hlo.is_native());
+    }
+
+    #[test]
+    fn groups_json_roundtrip_and_cli() {
+        let doc = r#"{
+          "optimizer": "adamw",
+          "groups": [
+            {"name": "decay", "params": "decay", "weight_decay": 0.1},
+            {"name": "no_decay", "params": "no_decay",
+             "weight_decay": 0.0, "lr_scale": 0.5}
+          ]
+        }"#;
+        let c = TrainConfig::from_json(&Json::parse(doc).unwrap()).unwrap();
+        assert_eq!(c.groups.len(), 2);
+        assert_eq!(c.groups[0].name, "decay");
+        assert_eq!(c.groups[1].weight_decay, Some(0.0));
+        assert_eq!(c.groups[1].lr_scale, Some(0.5));
+        assert_eq!(c.groups[0].lr_scale, None);
+
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.groups, c.groups);
+
+        // default config round-trips with an empty groups array
+        let d = TrainConfig::default();
+        let d2 = TrainConfig::from_json(&d.to_json()).unwrap();
+        assert!(d2.groups.is_empty());
+
+        // CLI shorthand
+        let mut c3 = TrainConfig::default();
+        let args = Args::parse_from(
+            "--groups decay".split_whitespace().map(String::from));
+        c3.apply_args(&args);
+        assert_eq!(c3.groups, GroupConfig::decay_pair());
+        let args = Args::parse_from(
+            "--groups none".split_whitespace().map(String::from));
+        c3.apply_args(&args);
+        assert!(c3.groups.is_empty());
+    }
+
+    #[test]
+    fn bad_group_config_rejected() {
+        let j = Json::parse(r#"{"groups": [{"params": "decay"}]}"#)
+            .unwrap();
+        assert!(TrainConfig::from_json(&j).is_err()); // missing name
+        let j = Json::parse(r#"{"groups": [{"name": "x", "bogus": 1}]}"#)
+            .unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"groups": 3}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -28,6 +28,9 @@ pub struct EvalRecord {
 pub struct Metrics {
     pub steps: Vec<StepRecord>,
     pub evals: Vec<EvalRecord>,
+    /// persistent optimizer+weight state bytes per param group
+    /// (name, bytes), recorded once at trainer construction
+    pub group_bytes: Vec<(String, u64)>,
 }
 
 impl Metrics {
@@ -37,6 +40,11 @@ impl Metrics {
 
     pub fn record_eval(&mut self, r: EvalRecord) {
         self.evals.push(r);
+    }
+
+    /// Record the per-group state-byte accounting for reports/CSV.
+    pub fn set_group_bytes(&mut self, v: Vec<(String, u64)>) {
+        self.group_bytes = v;
     }
 
     pub fn loss_points(&self) -> Vec<(f64, f64)> {
@@ -100,6 +108,12 @@ impl Metrics {
                 writeln!(f, "# {},{},{}", e.step, e.loss, e.accuracy)?;
             }
         }
+        if !self.group_bytes.is_empty() {
+            writeln!(f, "# groups: name,state_bytes")?;
+            for (name, bytes) in &self.group_bytes {
+                writeln!(f, "# {name},{bytes}")?;
+            }
+        }
         Ok(())
     }
 
@@ -148,12 +162,16 @@ mod tests {
         let mut m = Metrics::default();
         m.record_step(rec(1, 2.5));
         m.record_eval(EvalRecord { step: 1, loss: 2.4, accuracy: 0.5 });
+        m.set_group_bytes(vec![("decay".into(), 1024),
+                               ("no_decay".into(), 64)]);
         let p = std::env::temp_dir().join(format!(
             "flashtrain_metrics_{}.csv", std::process::id()));
         m.write_csv(&p).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         assert!(text.starts_with("step,loss"));
         assert!(text.contains("# 1,2.4,0.5"));
+        assert!(text.contains("# decay,1024"));
+        assert!(text.contains("# no_decay,64"));
         std::fs::remove_file(p).ok();
     }
 

@@ -10,7 +10,6 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::backend::make_backend;
 use crate::config::{BackendKind, TrainConfig, Variant};
 use crate::coordinator::data_parallel::allreduce_mean;
 use crate::coordinator::metrics::{EvalRecord, Metrics, StepRecord};
@@ -18,7 +17,7 @@ use crate::coordinator::schedule::Schedule;
 use crate::data::corpus::{Corpus, CorpusConfig};
 use crate::data::images::{Images, ImagesConfig};
 use crate::memory::tracker::{Category, Tracker};
-use crate::optim::{BucketOptimizer, Hyper};
+use crate::optim::{is_no_decay, FlashOptimizer, GroupSpec, HyperDefaults};
 use crate::runtime::literal as lit;
 use crate::runtime::{Executable, Manifest, ModelInfo, ModelKind, Runtime};
 use crate::util::rng::Rng;
@@ -35,7 +34,7 @@ pub struct Trainer {
     pub model: ModelInfo,
     pub metrics: Metrics,
     pub tracker: Tracker,
-    pub opt: BucketOptimizer,
+    pub opt: FlashOptimizer,
     fwd_bwd: Rc<Executable>,
     eval_exe: Rc<Executable>,
     data: DataSource,
@@ -66,14 +65,18 @@ impl Trainer {
         // deterministic parameter init from cfg.seed
         let theta0 = init_params(&model, cfg.seed, cfg.init_scale as f32);
 
-        // fused-step engine: AOT HLO executables or a native backend
+        // param groups from the config block (empty = one `all` group),
+        // then the fused-step engine: AOT HLO executables or a native
+        // backend, one partition per group
+        let specs = GroupSpec::from_config(&cfg.groups, &model)?;
+        let defaults = HyperDefaults::of(&cfg);
         let opt = match cfg.backend {
-            BackendKind::Hlo => BucketOptimizer::new(
+            BackendKind::Hlo => FlashOptimizer::hlo(
                 rt, manifest, cfg.optimizer, cfg.variant, cfg.bucket,
-                &theta0)?,
-            kind => BucketOptimizer::native(
-                cfg.optimizer, cfg.variant, cfg.bucket, &theta0,
-                make_backend(kind, cfg.threads)?)?,
+                &theta0, specs, defaults)?,
+            kind => FlashOptimizer::native(
+                cfg.optimizer, cfg.variant, cfg.bucket, &theta0, specs,
+                defaults, kind, cfg.threads)?,
         };
 
         let data = match model.kind {
@@ -119,7 +122,8 @@ impl Trainer {
     }
 
     fn track_static_memory(&mut self) {
-        self.opt.state.track(&mut self.tracker);
+        self.opt.track(&mut self.tracker);
+        self.metrics.set_group_bytes(self.opt.group_state_bytes());
         // activation estimate: bf16 activations of the lowered graph
         let act = match &self.data {
             DataSource::Lm { batch, seq, .. } => {
@@ -201,7 +205,7 @@ impl Trainer {
         let loss = losses / self.cfg.workers.max(1) as f64;
 
         // --- allreduce -----------------------------------------------------
-        let mut grads = allreduce_mean(&mut self.worker_grads);
+        let grads = allreduce_mean(&mut self.worker_grads);
         let wcat = if self.cfg.grad_release {
             Category::Transient
         } else {
@@ -210,13 +214,11 @@ impl Trainer {
         for w in 1..self.cfg.workers.max(1) {
             self.tracker.free(wcat, &format!("worker{w}_grads"));
         }
-        grads.resize(self.opt.state.n, 0.0);
 
-        // --- bucketed optimizer pass (with gradient release) ---------------
+        // --- per-group bucketed optimizer pass (with gradient release) -----
         let t_opt = Instant::now();
         let lr = self.schedule.lr(self.step);
-        let h = Hyper::for_step(&self.cfg, lr, self.step);
-        let bucket = self.opt.bucket;
+        let bucket = self.opt.bucket();
         let gbytes = self.grad_elem_bytes();
         let release = self.cfg.grad_release;
         if release {
@@ -228,7 +230,7 @@ impl Trainer {
                                (bucket as u64) * gbytes);
         }
         let tracker = &mut self.tracker;
-        self.opt.step_all(&grads, &h, |_i| {
+        self.opt.step(&grads, lr, self.step, |_gi, _bi| {
             if release {
                 // freed and immediately re-registered for the next bucket;
                 // peak gradient memory stays at one bucket
@@ -309,9 +311,11 @@ impl Trainer {
         Ok((loss, acc))
     }
 
-    /// Run the configured number of steps, logging progress.
+    /// Run until the configured step count, logging progress.  A
+    /// trainer resumed from a checkpoint (`load_state_dict`) trains
+    /// only the remaining steps of the horizon.
     pub fn run(&mut self, quiet: bool) -> Result<()> {
-        for _ in 0..self.cfg.steps {
+        while self.step < self.cfg.steps {
             let loss = self.train_step()?;
             if !quiet && (self.step % self.cfg.log_every.max(1) == 0
                           || self.step == 1)
@@ -347,33 +351,46 @@ impl Trainer {
     }
 
     /// Warm-start from full-precision master weights (finetuning entry
-    /// point): re-initializes the optimizer state in the configured
-    /// storage formats with zero moments, keeping the weights.
+    /// point): re-initializes every group's optimizer state in the
+    /// configured storage formats with zero moments, keeping the
+    /// weights.
     pub fn warm_start(&mut self, master: &[f32]) {
-        use crate::optim::State;
-        assert!(master.len() <= self.opt.state.n);
-        self.opt.state = State::init(master, self.opt.state.n,
-                                     self.cfg.optimizer, self.cfg.variant);
-        self.opt.state.track(&mut self.tracker);
+        assert_eq!(master.len(), self.opt.total_params());
+        self.opt.warm_start(master);
+        self.opt.track(&mut self.tracker);
+    }
+
+    /// Snapshot the optimizer as a named-group state dict at the
+    /// current step (what `checkpoint::save_state_dict` persists).
+    pub fn state_dict(&self) -> crate::optim::StateDict {
+        self.opt.state_dict(self.step as u64)
+    }
+
+    /// Restore a state dict (same group config / bucket size) and
+    /// resume from its step.
+    pub fn load_state_dict(&mut self, sd: &crate::optim::StateDict)
+                           -> Result<()> {
+        self.step = self.opt.load_state_dict(sd)? as usize;
+        Ok(())
     }
 
     /// Snapshot of dequantized optimizer moments (Fig-4 trajectory
     /// capture): (momentum, variance-if-any).
     pub fn moments(&self) -> (Vec<f32>, Option<Vec<f32>>) {
         let nocomp = self.cfg.variant == Variant::NoCompand;
-        (self.opt.state.momentum_f32(nocomp).unwrap_or_default(),
-         self.opt.state.variance_f32(nocomp))
+        (self.opt.momentum_f32(nocomp).unwrap_or_default(),
+         self.opt.variance_f32(nocomp))
     }
 }
 
 /// Deterministic parameter init: N(0, scale^2) for matrices, zeros for
-/// norm scales and biases (names containing "ln" / ".b").
+/// norm scales and biases (the same layout-name predicate the
+/// decay/no_decay group split uses).
 pub fn init_params(model: &ModelInfo, seed: u64, scale: f32) -> Vec<f32> {
     let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9).wrapping_add(7));
     let mut out = vec![0f32; model.param_count];
     for entry in &model.layout {
-        let zero_init = entry.name.contains("ln")
-            || entry.name.ends_with(".b");
+        let zero_init = is_no_decay(&entry.name);
         let lo = entry.offset;
         let hi = lo + entry.numel();
         if !zero_init {

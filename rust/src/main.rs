@@ -62,6 +62,7 @@ fn print_help() {
          --preset lm-tiny --optimizer adamw --variant flash\n                \
          --steps N --lr X --bucket 65536 --workers K\n                \
          --backend hlo|scalar|parallel [--threads T]\n                \
+         --groups decay|none (full per-group specs via --config)\n                \
          [--no-grad-release] [--eval-every N] [--save ckpt.flt]\n                \
          [--csv out.csv] [--plot]\n  \
          memory        [--model llama|gpt2|resnet] — Table 1 / Fig 1 model\n  \
@@ -96,6 +97,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.backend, cfg.workers, cfg.grad_release
     );
     let mut trainer = Trainer::new(cfg.clone(), &manifest, &rt)?;
+    if trainer.opt.groups.len() > 1 {
+        for g in &trainer.opt.groups {
+            println!(
+                "  group {:>10}: {:>9} params, lr_scale {}, wd {}",
+                g.name,
+                g.count(),
+                g.hyper.lr_scale.unwrap_or(1.0),
+                g.hyper.weight_decay.unwrap_or(cfg.weight_decay)
+            );
+        }
+    }
     trainer.run(args.flag("quiet"))?;
     let (eloss, eacc) = trainer.evaluate()?;
     println!(
@@ -105,10 +117,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         eacc * 100.0
     );
 
-    // memory report
+    // memory report (per-group breakdown from the live tracker)
+    use flashtrain::memory::tracker::Category;
     let mut t = Table::new("measured peak memory", &["category", "bytes"]);
     for (cat, bytes) in trainer.tracker.summary() {
         t.row(&[cat.name().to_string(), fmt_bytes(bytes as f64)]);
+        if matches!(cat, Category::Params | Category::OptimState) {
+            let entries = trainer.tracker.category_entries(cat);
+            if entries.len() > 1 {
+                for (name, b) in entries {
+                    t.row(&[format!("  {name}"), fmt_bytes(b as f64)]);
+                }
+            }
+        }
     }
     t.row(&["total peak".into(),
             fmt_bytes(trainer.tracker.peak_bytes() as f64)]);
@@ -124,11 +145,12 @@ fn cmd_train(args: &Args) -> Result<()> {
                                         &[("loss", &pts)], 72, 14));
     }
     if let Some(path) = args.get("save") {
-        let bytes = checkpoint::save(
-            Path::new(path), &trainer.opt.state, cfg.optimizer,
-            cfg.variant, trainer.current_step() as u64,
-            trainer.model.param_count as u64)?;
-        println!("checkpoint: {path} ({})", fmt_bytes(bytes as f64));
+        let bytes = checkpoint::save_state_dict(Path::new(path),
+                                                &trainer.state_dict())?;
+        println!("checkpoint (v2, {} group{}): {path} ({})",
+                 trainer.opt.groups.len(),
+                 if trainer.opt.groups.len() == 1 { "" } else { "s" },
+                 fmt_bytes(bytes as f64));
     }
     println!("compile time total: {:.1}s ({} executables)",
              rt.total_compile_seconds(), rt.cached_executables());
@@ -197,16 +219,21 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         .positional
         .get(1)
         .context("usage: flashtrain inspect-ckpt <file>")?;
-    let (meta, state) = checkpoint::load(Path::new(path))?;
+    let sd = checkpoint::load_state_dict(Path::new(path))?;
     println!("checkpoint {path}:");
-    println!("  optimizer    {}", meta.optimizer);
-    println!("  variant      {}", meta.variant);
-    println!("  step         {}", meta.step);
-    println!("  params       {}", meta.param_count);
-    println!("  padded       {}", meta.padded_len);
-    println!("  state bytes  {}", fmt_bytes(state.bytes() as f64));
+    println!("  optimizer    {}", sd.optimizer);
+    println!("  variant      {}", sd.variant);
+    println!("  step         {}", sd.step);
+    println!("  params       {}", sd.total_params);
+    println!("  state bytes  {}", fmt_bytes(sd.bytes() as f64));
     println!("  bytes/param  {:.3}",
-             state.bytes() as f64 / meta.param_count as f64);
+             sd.bytes() as f64 / sd.total_params.max(1) as f64);
+    println!("  groups       {}", sd.groups.len());
+    for g in &sd.groups {
+        println!("    {:>12}: {:>9} params (padded {}), {}",
+                 g.name, g.param_count, g.state.n,
+                 fmt_bytes(g.state.bytes() as f64));
+    }
     Ok(())
 }
 

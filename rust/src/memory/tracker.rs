@@ -78,6 +78,16 @@ impl Tracker {
             .sum()
     }
 
+    /// Live entries of one category as (name, bytes) — e.g. the
+    /// per-param-group breakdown of `Params` / `OptimState`.
+    pub fn category_entries(&self, cat: Category) -> Vec<(String, u64)> {
+        self.live
+            .iter()
+            .filter(|((c, _), _)| *c == cat)
+            .map(|((_, n), b)| (n.clone(), *b))
+            .collect()
+    }
+
     pub fn category_peak(&self, cat: Category) -> u64 {
         self.peak_by_cat.get(&cat).copied().unwrap_or(0)
     }
@@ -138,6 +148,18 @@ mod tests {
         t.free(Category::Gradients, "g1");
         assert_eq!(t.category_peak(Category::Gradients), 128);
         assert_eq!(t.category_live(Category::Gradients), 0);
+    }
+
+    #[test]
+    fn category_entries_list_live_names() {
+        let mut t = Tracker::new();
+        t.alloc(Category::OptimState, "optimizer_state/decay", 100);
+        t.alloc(Category::OptimState, "optimizer_state/no_decay", 20);
+        t.alloc(Category::Params, "master_weights/decay", 50);
+        let e = t.category_entries(Category::OptimState);
+        assert_eq!(e.len(), 2);
+        assert!(e.contains(&("optimizer_state/decay".to_string(), 100)));
+        assert!(e.contains(&("optimizer_state/no_decay".to_string(), 20)));
     }
 
     #[test]

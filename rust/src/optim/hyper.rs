@@ -1,4 +1,6 @@
-//! Hyperparameter vector passed to the AOT optimizer-step executables.
+//! Hyperparameter vector passed to the AOT optimizer-step executables,
+//! plus the per-group override layer the `FlashOptimizer` facade
+//! resolves against the run defaults.
 //!
 //! Layout (must mirror python/compile/kernels/fused_steps.py and the
 //! manifest's `hyp_layout`):
@@ -6,7 +8,7 @@
 //! where bc1 = 1/(1-beta1^t), bc2 = 1/(1-beta2^t) are Adam's bias
 //! corrections, computed host-side for numerical cleanliness.
 
-use crate::config::{OptKind, TrainConfig};
+use crate::config::{GroupConfig, OptKind, TrainConfig};
 
 pub const NHYP: usize = 8;
 
@@ -21,26 +23,102 @@ pub struct Hyper {
     pub bc2: f32,
 }
 
-impl Hyper {
-    /// Build the hyper vector for optimizer step `t` (1-based).
-    pub fn for_step(cfg: &TrainConfig, lr: f64, t: usize) -> Hyper {
-        let (bc1, bc2) = match cfg.optimizer {
+/// The run-level hyperparameter defaults every group resolves against
+/// (a copy of the relevant `TrainConfig` fields, so the optimizer
+/// facade does not need the whole config at step time).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HyperDefaults {
+    pub optimizer: OptKind,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+}
+
+impl HyperDefaults {
+    pub fn of(cfg: &TrainConfig) -> HyperDefaults {
+        HyperDefaults {
+            optimizer: cfg.optimizer,
+            beta1: cfg.beta1,
+            beta2: cfg.beta2,
+            eps: cfg.eps,
+            weight_decay: cfg.weight_decay,
+        }
+    }
+}
+
+/// Per-group hyperparameter overrides; `None` inherits the run default.
+/// `lr_scale` multiplies the scheduled learning rate (so per-layer LR
+/// still follows warmup/cosine).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct GroupHyper {
+    pub lr_scale: Option<f64>,
+    pub weight_decay: Option<f64>,
+    pub beta1: Option<f64>,
+    pub beta2: Option<f64>,
+    pub eps: Option<f64>,
+}
+
+impl GroupHyper {
+    pub fn of(g: &GroupConfig) -> GroupHyper {
+        GroupHyper {
+            lr_scale: g.lr_scale,
+            weight_decay: g.weight_decay,
+            beta1: g.beta1,
+            beta2: g.beta2,
+            eps: g.eps,
+        }
+    }
+
+    /// Resolve the overrides against the defaults into the concrete
+    /// hyper vector for scheduled LR `lr` at optimizer step `t`
+    /// (1-based).
+    pub fn resolve(&self, d: &HyperDefaults, lr: f64, t: usize) -> Hyper {
+        let beta1 = self.beta1.unwrap_or(d.beta1);
+        let beta2 = self.beta2.unwrap_or(d.beta2);
+        let (bc1, bc2) = match d.optimizer {
             OptKind::AdamW => {
-                let b1t = cfg.beta1.powi(t as i32);
-                let b2t = cfg.beta2.powi(t as i32);
-                ((1.0 / (1.0 - b1t)) as f32, (1.0 / (1.0 - b2t)) as f32)
+                ((1.0 / (1.0 - beta_pow(beta1, t))) as f32,
+                 (1.0 / (1.0 - beta_pow(beta2, t))) as f32)
             }
             _ => (1.0, 1.0),
         };
         Hyper {
-            lr: lr as f32,
-            beta1: cfg.beta1 as f32,
-            beta2: cfg.beta2 as f32,
-            eps: cfg.eps as f32,
-            wd: cfg.weight_decay as f32,
+            lr: (lr * self.lr_scale.unwrap_or(1.0)) as f32,
+            beta1: beta1 as f32,
+            beta2: beta2 as f32,
+            eps: self.eps.unwrap_or(d.eps) as f32,
+            wd: self.weight_decay.unwrap_or(d.weight_decay) as f32,
             bc1,
             bc2,
         }
+    }
+}
+
+/// `beta^t` for the bias corrections, robust at pathological step
+/// counts: `powi` takes an i32 exponent, so a raw `t as i32` cast wraps
+/// negative for `t > i32::MAX` and turns the correction into garbage;
+/// and once `beta^t` underflows, the correction is exactly 1.  Small
+/// `t` keeps the exact `powi` bits the AOT artifacts were validated
+/// against.
+fn beta_pow(beta: f64, t: usize) -> f64 {
+    if beta <= 0.0 {
+        return if t == 0 { 1.0 } else { 0.0 };
+    }
+    // f64 has no positive value below exp(-745.2), so beta^t is exactly
+    // 0 past this point (clamping bc to exactly 1); this also keeps the
+    // i32 clamp below out of powi's denormal range for beta < 1.
+    if beta < 1.0 && (t as f64) * beta.ln() < -745.2 {
+        return 0.0;
+    }
+    beta.powi(t.min(i32::MAX as usize) as i32)
+}
+
+impl Hyper {
+    /// Build the hyper vector for optimizer step `t` (1-based) from the
+    /// run-level config alone (no group overrides).
+    pub fn for_step(cfg: &TrainConfig, lr: f64, t: usize) -> Hyper {
+        GroupHyper::default().resolve(&HyperDefaults::of(cfg), lr, t)
     }
 
     pub fn to_vec8(self) -> [f32; NHYP] {
@@ -90,5 +168,64 @@ mod tests {
         assert_eq!(v[1], h.beta1);
         assert_eq!(v[4], h.wd);
         assert_eq!(v[7], 0.0);
+    }
+
+    #[test]
+    fn bias_correction_matches_legacy_powi_at_small_t() {
+        let cfg = TrainConfig::default(); // adamw, beta 0.9/0.95
+        for t in 1..200usize {
+            let h = Hyper::for_step(&cfg, 1e-3, t);
+            let want1 = (1.0 / (1.0 - cfg.beta1.powi(t as i32))) as f32;
+            let want2 = (1.0 / (1.0 - cfg.beta2.powi(t as i32))) as f32;
+            assert_eq!(h.bc1, want1, "t={t}");
+            assert_eq!(h.bc2, want2, "t={t}");
+        }
+    }
+
+    #[test]
+    fn bias_correction_clamps_at_huge_t() {
+        // regression: beta.powi(t as i32) wrapped negative past i32::MAX
+        // and denormal beta^t produced bc != 1; both must clamp to
+        // exactly 1.0 and stay finite/positive.
+        let cfg = TrainConfig::default();
+        for t in [1_000_000usize, i32::MAX as usize,
+                  i32::MAX as usize + 12345, usize::MAX] {
+            let h = Hyper::for_step(&cfg, 1e-3, t);
+            assert_eq!(h.bc1, 1.0, "t={t}");
+            assert_eq!(h.bc2, 1.0, "t={t}");
+        }
+        // monotone non-increasing toward 1, never below 1
+        let mut last = f32::INFINITY;
+        for t in [1usize, 10, 100, 10_000, 10_000_000] {
+            let bc1 = Hyper::for_step(&cfg, 1e-3, t).bc1;
+            assert!(bc1 >= 1.0 && bc1 <= last, "t={t} bc1={bc1}");
+            last = bc1;
+        }
+    }
+
+    #[test]
+    fn group_overrides_resolve_against_defaults() {
+        let cfg = TrainConfig::default(); // adamw, wd 0.1
+        let d = HyperDefaults::of(&cfg);
+        let none = GroupHyper::default();
+        assert_eq!(none, GroupHyper { lr_scale: None, weight_decay: None,
+                                      beta1: None, beta2: None,
+                                      eps: None });
+        assert_eq!(none.resolve(&d, 1e-3, 7),
+                   Hyper::for_step(&cfg, 1e-3, 7));
+
+        let ov = GroupHyper {
+            lr_scale: Some(0.5),
+            weight_decay: Some(0.0),
+            beta2: Some(0.999),
+            ..Default::default()
+        };
+        let h = ov.resolve(&d, 1e-3, 1);
+        assert_eq!(h.lr, (1e-3 * 0.5) as f32);
+        assert_eq!(h.wd, 0.0);
+        assert_eq!(h.beta2, 0.999f64 as f32);
+        assert_eq!(h.beta1, cfg.beta1 as f32); // inherited
+        // bias correction follows the overridden beta2
+        assert!((h.bc2 - 1000.0).abs() < 0.5, "{}", h.bc2);
     }
 }

@@ -2,11 +2,14 @@
 //! bucketed executor over AOT step artifacts, and a pure-Rust scalar
 //! mirror of every update rule for cross-validation.
 
+pub mod group;
 pub mod hyper;
 pub mod optimizer;
 pub mod scalar_ref;
 pub mod state;
 
-pub use hyper::{Hyper, NHYP};
+pub use group::{is_no_decay, FlashOptimizer, GroupSpec, GroupState,
+                ParamGroup, StateDict};
+pub use hyper::{GroupHyper, Hyper, HyperDefaults, NHYP};
 pub use optimizer::{artifact_name, BucketOptimizer};
 pub use state::State;

@@ -54,7 +54,9 @@ enum Engine {
         g_bits: Vec<u16>,
     },
     Native {
-        backend: Box<dyn StepBackend>,
+        /// shared so a multi-group `FlashOptimizer` reuses one backend
+        /// (and its worker pool) across every group partition
+        backend: Rc<dyn StepBackend>,
         /// scratch for bf16-rounded gradients (split variants)
         g_round: Vec<f32>,
     },
@@ -97,6 +99,15 @@ impl BucketOptimizer {
     pub fn native(kind: OptKind, variant: Variant, bucket: usize,
                   theta0: &[f32], backend: Box<dyn StepBackend>)
                   -> Result<BucketOptimizer> {
+        Self::native_shared(kind, variant, bucket, theta0,
+                            Rc::from(backend))
+    }
+
+    /// Like [`native`](Self::native), but sharing an existing backend
+    /// (one thread pool serving several optimizer partitions).
+    pub fn native_shared(kind: OptKind, variant: Variant, bucket: usize,
+                         theta0: &[f32], backend: Rc<dyn StepBackend>)
+                         -> Result<BucketOptimizer> {
         if bucket == 0 {
             bail!("bucket size must be positive");
         }
@@ -311,15 +322,51 @@ impl BucketOptimizer {
     /// `on_bucket_done(i)` fires after each bucket — the gradient-release
     /// hook (the coordinator frees that bucket's gradient there).
     ///
-    /// On a native engine the whole padded state is stepped in one
-    /// fused pass (the backend shards it internally), so arbitrary
-    /// bucket sizes — including non-multiples of GROUP — are fine;
-    /// `on_bucket_done` still fires once per logical bucket.
+    /// On a native engine, GROUP-aligned buckets step one fused range
+    /// at a time (the backend shards each range internally), so the
+    /// release hook fires with that bucket's state final — gradient
+    /// release is as real as on the HLO engine, and rounding/padding
+    /// staging stays bucket-sized.  Non-GROUP-multiple bucket sizes
+    /// fall back to a single fused pass over the whole padded state,
+    /// with every hook firing at the end.
     pub fn step_all<F: FnMut(usize)>(&mut self, grads: &[f32], h: &Hyper,
                                      mut on_bucket_done: F) -> Result<()> {
         if matches!(self.engine, Engine::Native { .. }) {
             let n = self.state.n;
+            let b = self.bucket;
             let (kind, variant) = (self.kind, self.variant);
+            if b % GROUP == 0 {
+                // padded n == n_buckets * b exactly when b is aligned
+                let mut gbuf: Vec<f32> = Vec::new();
+                for i in 0..self.n_buckets {
+                    let (lo, hi) = (i * b, (i + 1) * b);
+                    let src_lo = lo.min(grads.len());
+                    let src_hi = hi.min(grads.len());
+                    let g: &[f32] = if !variant.splits_weights()
+                        && src_hi - src_lo == b
+                    {
+                        &grads[src_lo..src_hi]
+                    } else {
+                        gbuf.clear();
+                        if variant.splits_weights() {
+                            gbuf.extend(grads[src_lo..src_hi].iter()
+                                .map(|&x| bf16::round_f32_to_bf16(x)));
+                        } else {
+                            gbuf.extend_from_slice(&grads[src_lo..src_hi]);
+                        }
+                        gbuf.resize(b, 0.0);
+                        &gbuf
+                    };
+                    let Engine::Native { backend, .. } = &mut self.engine
+                    else {
+                        unreachable!()
+                    };
+                    backend.step_range(&mut self.state, lo, hi, g, kind,
+                                       variant, h)?;
+                    on_bucket_done(i);
+                }
+                return Ok(());
+            }
             // stage a copy only when rounding or padding is needed
             let buf: Vec<f32>;
             let g: &[f32] = if !variant.splits_weights()

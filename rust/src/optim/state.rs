@@ -166,15 +166,24 @@ impl State {
     /// "parameter" bytes from "optimizer state" bytes the way Table 4
     /// does (ρ and scales belong to the optimizer, §3.4).
     pub fn track(&self, tracker: &mut Tracker) {
+        self.track_as(tracker, "all");
+    }
+
+    /// Like [`track`](Self::track), but under per-group buffer names
+    /// (`master_weights/<group>`, `optimizer_state/<group>`) so the
+    /// tracker reports bytes per param group.
+    pub fn track_as(&self, tracker: &mut Tracker, group: &str) {
         let param_bytes = self
             .theta
             .as_ref()
             .map(|v| v.len() as u64 * 4)
             .unwrap_or(0)
             + self.theta_p.as_ref().map(|v| v.len() as u64 * 2).unwrap_or(0);
-        tracker.alloc(Category::Params, "master_weights", param_bytes);
+        tracker.alloc(Category::Params,
+                      &format!("master_weights/{group}"), param_bytes);
         let optim_bytes = self.bytes() - param_bytes;
-        tracker.alloc(Category::OptimState, "optimizer_state", optim_bytes);
+        tracker.alloc(Category::OptimState,
+                      &format!("optimizer_state/{group}"), optim_bytes);
     }
 
     /// Sanity: mutually consistent buffer presence and lengths.

@@ -92,6 +92,29 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Load the artifact manifest + PJRT runtime for an artifact-dependent
+/// bench, or print a skip note and return `None` so the bench exits
+/// gracefully in a stub-only build (the same contract the
+/// `kernel_hotpath` HLO section uses).
+pub fn manifest_or_skip(what: &str)
+                        -> Option<(crate::runtime::Manifest,
+                                   crate::runtime::Runtime)> {
+    let manifest = match crate::runtime::Manifest::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            println!("skipping {what} (needs `make artifacts`): {e}");
+            return None;
+        }
+    };
+    match crate::runtime::Runtime::cpu() {
+        Ok(rt) => Some((manifest, rt)),
+        Err(e) => {
+            println!("skipping {what} (no PJRT runtime): {e:#}");
+            None
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

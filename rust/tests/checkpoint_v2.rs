@@ -1,0 +1,243 @@
+//! Checkpoint v2 (named param-group sections) integration tests:
+//! round-trips across every (optimizer, variant) pair with ≥2 groups,
+//! v1 → v2 read-compat, and per-section corruption injection on group
+//! payloads and headers.
+
+use std::path::PathBuf;
+
+use flashtrain::checkpoint;
+use flashtrain::config::{OptKind, Variant};
+use flashtrain::formats::GROUP;
+use flashtrain::optim::{GroupState, State, StateDict};
+use flashtrain::util::rng::Rng;
+
+const ALL_PAIRS: [(OptKind, Variant); 15] = [
+    (OptKind::Sgd, Variant::Reference),
+    (OptKind::Sgd, Variant::Flash),
+    (OptKind::Sgd, Variant::WeightSplit),
+    (OptKind::Sgd, Variant::OptQuant),
+    (OptKind::Sgd, Variant::NoCompand),
+    (OptKind::AdamW, Variant::Reference),
+    (OptKind::AdamW, Variant::Flash),
+    (OptKind::AdamW, Variant::WeightSplit),
+    (OptKind::AdamW, Variant::OptQuant),
+    (OptKind::AdamW, Variant::NoCompand),
+    (OptKind::Lion, Variant::Reference),
+    (OptKind::Lion, Variant::Flash),
+    (OptKind::Lion, Variant::WeightSplit),
+    (OptKind::Lion, Variant::OptQuant),
+    (OptKind::Lion, Variant::NoCompand),
+];
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("flashtrain_ckptv2_{}_{name}",
+                                      std::process::id()))
+}
+
+fn theta(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() as f32 * 0.1).collect()
+}
+
+/// Three-group dict (uneven sizes, one group with split ranges).
+fn demo_dict(opt: OptKind, variant: Variant, seed: u64) -> StateDict {
+    let (a, b, c) = (4 * GROUP, 2 * GROUP, 3 * GROUP);
+    let total = (a + b + c) as u64;
+    StateDict {
+        optimizer: opt,
+        variant,
+        step: 123,
+        total_params: total,
+        groups: vec![
+            GroupState {
+                name: "embeds".into(),
+                param_count: a as u64,
+                // split ranges: head + tail of the flat vector
+                ranges: vec![(0, (a / 2) as u64),
+                             (total - (a / 2) as u64, total)],
+                state: State::init(&theta(a, seed), a, opt, variant),
+            },
+            GroupState {
+                name: "no_decay".into(),
+                param_count: b as u64,
+                ranges: vec![((a / 2) as u64, (a / 2 + b) as u64)],
+                state: State::init(&theta(b, seed + 1), b, opt, variant),
+            },
+            GroupState {
+                name: "body".into(),
+                param_count: c as u64,
+                ranges: vec![((a / 2 + b) as u64,
+                              (a / 2 + b + c) as u64)],
+                state: State::init(&theta(c, seed + 2), c, opt, variant),
+            },
+        ],
+    }
+}
+
+fn assert_states_bit_equal(x: &State, y: &State, what: &str) {
+    assert_eq!(x.n, y.n, "{what} n");
+    assert_eq!(x.theta_p, y.theta_p, "{what} theta_p");
+    assert_eq!(x.rho, y.rho, "{what} rho");
+    assert_eq!(x.mq, y.mq, "{what} mq");
+    assert_eq!(x.ms, y.ms, "{what} ms");
+    assert_eq!(x.vq, y.vq, "{what} vq");
+    assert_eq!(x.vs, y.vs, "{what} vs");
+    let eq_f32 = |p: &Option<Vec<f32>>, q: &Option<Vec<f32>>| match (p, q) {
+        (Some(p), Some(q)) => {
+            p.iter().zip(q).all(|(s, t)| s.to_bits() == t.to_bits())
+        }
+        (None, None) => true,
+        _ => false,
+    };
+    assert!(eq_f32(&x.theta, &y.theta), "{what} theta");
+    assert!(eq_f32(&x.m, &y.m), "{what} m");
+    assert!(eq_f32(&x.v, &y.v), "{what} v");
+}
+
+#[test]
+fn v2_roundtrip_all_pairs_three_groups() {
+    for (i, (opt, variant)) in ALL_PAIRS.iter().enumerate() {
+        let sd = demo_dict(*opt, *variant, i as u64 * 10 + 1);
+        let path = tmp(&format!("rt_{opt}_{variant}"));
+        checkpoint::save_state_dict(&path, &sd).unwrap();
+        let sd2 = checkpoint::load_state_dict(&path).unwrap();
+        assert_eq!(sd2.optimizer, *opt);
+        assert_eq!(sd2.variant, *variant);
+        assert_eq!(sd2.step, 123);
+        assert_eq!(sd2.total_params, sd.total_params);
+        assert_eq!(sd2.groups.len(), 3);
+        for (a, b) in sd.groups.iter().zip(&sd2.groups) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.param_count, b.param_count);
+            assert_eq!(a.ranges, b.ranges);
+            assert_states_bit_equal(&a.state, &b.state,
+                                    &format!("{opt}/{variant}/{}", a.name));
+        }
+        std::fs::remove_file(path).ok();
+    }
+}
+
+#[test]
+fn v1_files_load_as_single_all_group() {
+    for (opt, variant) in [(OptKind::AdamW, Variant::Flash),
+                           (OptKind::Sgd, Variant::Reference),
+                           (OptKind::Lion, Variant::OptQuant)] {
+        let n = 5 * GROUP;
+        let st = State::init(&theta(n, 42), n, opt, variant);
+        let path = tmp(&format!("v1_{opt}_{variant}"));
+        checkpoint::save(&path, &st, opt, variant, 77, (n - 3) as u64)
+            .unwrap();
+        let sd = checkpoint::load_state_dict(&path).unwrap();
+        assert_eq!(sd.optimizer, opt);
+        assert_eq!(sd.variant, variant);
+        assert_eq!(sd.step, 77);
+        assert_eq!(sd.total_params, (n - 3) as u64);
+        assert_eq!(sd.groups.len(), 1);
+        assert_eq!(sd.groups[0].name, "all");
+        assert_eq!(sd.groups[0].ranges, vec![(0, (n - 3) as u64)]);
+        assert_states_bit_equal(&st, &sd.groups[0].state, "v1 compat");
+        std::fs::remove_file(path).ok();
+    }
+}
+
+/// Walk the v2 layout and return (label, payload_offset, payload_len)
+/// for the file header, every group header, and every section payload.
+fn v2_regions(bytes: &[u8]) -> Vec<(String, usize, usize)> {
+    let u32_at = |p: usize| {
+        u32::from_le_bytes(bytes[p..p + 4].try_into().unwrap()) as usize
+    };
+    let u64_at = |p: usize| {
+        u64::from_le_bytes(bytes[p..p + 8].try_into().unwrap()) as usize
+    };
+    assert_eq!(&bytes[..8], b"FLTCKPT1");
+    assert_eq!(u32_at(8), 2, "not a v2 file");
+    let mut out = Vec::new();
+    out.push(("file_header".to_string(), 12, 22));
+    let n_groups = u32_at(12 + 18);
+    let mut p = 12 + 22 + 4;
+    for gi in 0..n_groups {
+        let gh_len = u32_at(p);
+        out.push((format!("group{gi}_header"), p + 4, gh_len));
+        p += 4 + gh_len + 4;
+        let n_sections = u32_at(p);
+        p += 4;
+        for si in 0..n_sections {
+            let tag = bytes[p];
+            let len = u64_at(p + 1);
+            out.push((format!("group{gi}_section{si}_tag{tag}"), p + 9,
+                      len));
+            p += 9 + len + 4;
+        }
+    }
+    assert_eq!(p, bytes.len(), "walker covered the whole file");
+    out
+}
+
+#[test]
+fn per_section_corruption_injection_detected() {
+    let sd = demo_dict(OptKind::AdamW, Variant::Flash, 99);
+    let path = tmp("corrupt");
+    checkpoint::save_state_dict(&path, &sd).unwrap();
+    let clean = std::fs::read(&path).unwrap();
+    let regions = v2_regions(&clean);
+    // flash adamw: 6 sections per group x 3 groups + 4 headers
+    assert!(regions.len() >= 3 * 6 + 4, "{}", regions.len());
+
+    for (label, off, len) in &regions {
+        if *len == 0 {
+            continue;
+        }
+        let mut bytes = clean.clone();
+        bytes[off + len / 2] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = match checkpoint::load_state_dict(&path) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("corruption in {label} went undetected"),
+        };
+        assert!(
+            err.contains("crc") || err.contains("corrupt")
+                || err.contains("tag") || err.contains("length")
+                || err.contains("invalid") || err.contains("byte"),
+            "{label}: unexpected error {err}"
+        );
+    }
+    // the pristine file still loads after all that
+    std::fs::write(&path, &clean).unwrap();
+    checkpoint::load_state_dict(&path).unwrap();
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn oversized_section_length_fails_before_allocating() {
+    // section length fields sit outside the CRCs; a flipped high bit
+    // must fail cleanly against the file-size bound, not attempt a
+    // multi-GiB allocation
+    let sd = demo_dict(OptKind::AdamW, Variant::Flash, 3);
+    let path = tmp("biglen");
+    checkpoint::save_state_dict(&path, &sd).unwrap();
+    let clean = std::fs::read(&path).unwrap();
+    let (_, payload_off, _) = v2_regions(&clean)
+        .into_iter()
+        .find(|(label, _, _)| label.contains("section"))
+        .unwrap();
+    let len_off = payload_off - 8; // u64 length precedes the payload
+    let mut bytes = clean.clone();
+    bytes[len_off + 3] |= 0x10; // += 256 MiB: < the 16 GiB cap, > file
+    std::fs::write(&path, &bytes).unwrap();
+    let err = checkpoint::load_state_dict(&path).unwrap_err().to_string();
+    assert!(err.contains("exceeds file size"), "{err}");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn v2_truncation_detected() {
+    let sd = demo_dict(OptKind::Lion, Variant::Flash, 5);
+    let path = tmp("trunc");
+    checkpoint::save_state_dict(&path, &sd).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    for cut in [bytes.len() - 1, bytes.len() / 2, 40, 11] {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        assert!(checkpoint::load_state_dict(&path).is_err(), "cut={cut}");
+    }
+    std::fs::remove_file(path).ok();
+}

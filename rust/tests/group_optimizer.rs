@@ -1,0 +1,282 @@
+//! Differential + end-to-end tests for the `FlashOptimizer` param-group
+//! facade on the native backends (no artifacts required).
+//!
+//! Pins the acceptance criteria of the param-group redesign:
+//! * a single-group `FlashOptimizer` is bit-exact to the bare
+//!   `BucketOptimizer` path across every (optimizer, variant) pair;
+//! * a two-group decay/no_decay run with different weight decay trains
+//!   end-to-end on the native backend, checkpoints to v2, and reloads
+//!   bit-exact.
+
+use std::collections::BTreeMap;
+
+use flashtrain::backend::make_backend;
+use flashtrain::checkpoint;
+use flashtrain::config::{BackendKind, GroupConfig, OptKind, TrainConfig,
+                         Variant};
+use flashtrain::formats::{bf16, GROUP};
+use flashtrain::optim::{BucketOptimizer, FlashOptimizer, GroupSpec,
+                        Hyper, HyperDefaults, State};
+use flashtrain::runtime::artifact::LayoutEntry;
+use flashtrain::runtime::{ModelInfo, ModelKind};
+use flashtrain::util::rng::Rng;
+
+const ALL_PAIRS: [(OptKind, Variant); 15] = [
+    (OptKind::Sgd, Variant::Reference),
+    (OptKind::Sgd, Variant::Flash),
+    (OptKind::Sgd, Variant::WeightSplit),
+    (OptKind::Sgd, Variant::OptQuant),
+    (OptKind::Sgd, Variant::NoCompand),
+    (OptKind::AdamW, Variant::Reference),
+    (OptKind::AdamW, Variant::Flash),
+    (OptKind::AdamW, Variant::WeightSplit),
+    (OptKind::AdamW, Variant::OptQuant),
+    (OptKind::AdamW, Variant::NoCompand),
+    (OptKind::Lion, Variant::Reference),
+    (OptKind::Lion, Variant::Flash),
+    (OptKind::Lion, Variant::WeightSplit),
+    (OptKind::Lion, Variant::OptQuant),
+    (OptKind::Lion, Variant::NoCompand),
+];
+
+fn randn(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * s).collect()
+}
+
+fn grad(rng: &mut Rng, n: usize, variant: Variant) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            let x = rng.normal() as f32 * 0.01;
+            if variant.splits_weights() {
+                bf16::round_f32_to_bf16(x)
+            } else {
+                x
+            }
+        })
+        .collect()
+}
+
+fn assert_states_bit_equal(a: &State, b: &State, what: &str) {
+    assert_eq!(a.theta_p, b.theta_p, "{what} theta_p");
+    assert_eq!(a.rho, b.rho, "{what} rho");
+    assert_eq!(a.mq, b.mq, "{what} mq");
+    assert_eq!(a.ms, b.ms, "{what} ms");
+    assert_eq!(a.vq, b.vq, "{what} vq");
+    assert_eq!(a.vs, b.vs, "{what} vs");
+    let eq_f32 = |x: &Option<Vec<f32>>, y: &Option<Vec<f32>>| match (x, y) {
+        (Some(x), Some(y)) => {
+            x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        (None, None) => true,
+        _ => false,
+    };
+    assert!(eq_f32(&a.theta, &b.theta), "{what} theta");
+    assert!(eq_f32(&a.m, &b.m), "{what} m");
+    assert!(eq_f32(&a.v, &b.v), "{what} v");
+}
+
+/// Synthetic model layout mixing decay-eligible matrices with norm
+/// scales and biases.
+fn lm_like_model() -> ModelInfo {
+    let entries: [(&str, usize); 7] = [
+        ("wte", 4 * GROUP),
+        ("ln0.g", GROUP),
+        ("h0.attn.w", 6 * GROUP),
+        ("h0.attn.b", GROUP),
+        ("h0.mlp.w", 5 * GROUP),
+        ("lnf.g", GROUP),
+        ("head", 2 * GROUP),
+    ];
+    let mut layout = Vec::new();
+    let mut off = 0usize;
+    for (name, n) in entries {
+        layout.push(LayoutEntry { name: name.into(), offset: off,
+                                  shape: vec![n] });
+        off += n;
+    }
+    ModelInfo {
+        name: "lm-like".into(),
+        kind: ModelKind::Lm { vocab: 64, d_model: 16, n_layers: 1,
+                              n_heads: 2, seq_len: 8 },
+        batch: 4,
+        param_count: off,
+        layout,
+        artifacts: BTreeMap::new(),
+    }
+}
+
+/// Acceptance: a single-group `FlashOptimizer` run is bit-exact to
+/// today's bare `BucketOptimizer` path, for every (optimizer, variant)
+/// pair and on both native engines.
+#[test]
+fn single_group_bit_exact_to_bucket_optimizer_all_pairs() {
+    let n = 6 * GROUP + 13; // unaligned tail on purpose
+    let bucket = 2 * GROUP;
+    for backend in [BackendKind::Scalar, BackendKind::Parallel] {
+        for (opt, variant) in ALL_PAIRS {
+            let cfg = TrainConfig { optimizer: opt,
+                                    ..Default::default() };
+            let mut rng = Rng::new(0xBEEF ^ (opt as u64));
+            let t0 = randn(&mut rng, n, 0.1);
+            let mut raw = BucketOptimizer::native(
+                opt, variant, bucket, &t0,
+                make_backend(backend, 3).unwrap())
+                .unwrap();
+            let mut facade = FlashOptimizer::native(
+                opt, variant, bucket, &t0, GroupSpec::single(n),
+                HyperDefaults::of(&cfg), backend, 3)
+                .unwrap();
+            for t in 1..=5usize {
+                let g = grad(&mut rng, n, variant);
+                let h = Hyper::for_step(&cfg, 1e-3, t);
+                raw.step_all(&g, &h, |_| {}).unwrap();
+                facade.step(&g, 1e-3, t, |_, _| {}).unwrap();
+            }
+            assert_eq!(facade.groups.len(), 1);
+            assert_states_bit_equal(&raw.state, &facade.groups[0].opt.state,
+                                    &format!("{opt}/{variant}/{backend}"));
+            assert_eq!(raw.compute_weights_bf16(n),
+                       facade.compute_weights_bf16(n),
+                       "{opt}/{variant}/{backend} compute weights");
+        }
+    }
+}
+
+/// Acceptance: a two-group decay/no_decay config with different weight
+/// decay trains end-to-end on the native backend, checkpoints to v2,
+/// and reloads bit-exact (then keeps training identically).
+#[test]
+fn two_group_decay_split_trains_checkpoints_v2_reloads_bit_exact() {
+    let model = lm_like_model();
+    let n = model.param_count;
+    let cfg = TrainConfig::default(); // adamw/flash, wd 0.1
+    let specs = GroupSpec::from_config(&GroupConfig::decay_pair(), &model)
+        .unwrap();
+    assert_eq!(specs.len(), 2);
+    assert_eq!(specs[1].hyper.weight_decay, Some(0.0));
+
+    let t0 = randn(&mut Rng::new(7), n, 0.1);
+    let mut opt = FlashOptimizer::native(
+        OptKind::AdamW, Variant::Flash, 2 * GROUP, &t0, specs.clone(),
+        HyperDefaults::of(&cfg), BackendKind::Parallel, 3)
+        .unwrap();
+
+    let mut rng = Rng::new(8);
+    let mut steps_done = 0u64;
+    for t in 1..=10usize {
+        let g = grad(&mut rng, n, Variant::Flash);
+        opt.step(&g, 1e-3, t, |_, _| {}).unwrap();
+        steps_done = t as u64;
+    }
+    let w = opt.master_weights(n);
+    assert!(w.iter().all(|x| x.is_finite()));
+
+    // checkpoint to v2 and reload into a fresh optimizer
+    let path = std::env::temp_dir().join(format!(
+        "flashtrain_group_e2e_{}.flt", std::process::id()));
+    let sd = opt.state_dict(steps_done);
+    checkpoint::save_state_dict(&path, &sd).unwrap();
+    let sd2 = checkpoint::load_state_dict(&path).unwrap();
+    assert_eq!(sd2.groups.len(), 2);
+    assert_eq!(sd2.groups[0].name, "decay");
+    assert_eq!(sd2.groups[1].name, "no_decay");
+
+    let mut opt2 = FlashOptimizer::native(
+        OptKind::AdamW, Variant::Flash, 2 * GROUP, &t0, specs,
+        HyperDefaults::of(&cfg), BackendKind::Scalar, 0)
+        .unwrap();
+    assert_eq!(opt2.load_state_dict(&sd2).unwrap(), steps_done);
+    for (a, b) in opt.groups.iter().zip(&opt2.groups) {
+        assert_states_bit_equal(&a.opt.state, &b.opt.state, &a.name);
+    }
+    assert_eq!(opt.master_weights(n), opt2.master_weights(n));
+
+    // training continues identically after the reload (scalar engine is
+    // bit-exact to parallel by the backend equivalence guarantee)
+    for t in 11..=14usize {
+        let g = grad(&mut rng, n, Variant::Flash);
+        let g2 = g.clone();
+        opt.step(&g, 1e-3, t, |_, _| {}).unwrap();
+        opt2.step(&g2, 1e-3, t, |_, _| {}).unwrap();
+    }
+    assert_eq!(opt.compute_weights_bf16(n), opt2.compute_weights_bf16(n));
+    std::fs::remove_file(path).ok();
+}
+
+/// The no_decay override changes the trajectory of norm/bias params
+/// relative to a single-group run (weight decay really is per-group).
+#[test]
+fn decay_split_changes_no_decay_trajectory_only_via_wd() {
+    let model = lm_like_model();
+    let n = model.param_count;
+    let cfg = TrainConfig::default();
+    let mut rng = Rng::new(21);
+    // nonzero init everywhere so decay has something to shrink
+    let t0 = randn(&mut rng, n, 0.2);
+
+    let mut grouped = FlashOptimizer::native(
+        OptKind::AdamW, Variant::Reference, GROUP, &t0,
+        GroupSpec::decay_split(&model), HyperDefaults::of(&cfg),
+        BackendKind::Scalar, 0)
+        .unwrap();
+    let mut single = FlashOptimizer::native(
+        OptKind::AdamW, Variant::Reference, GROUP, &t0,
+        GroupSpec::single(n), HyperDefaults::of(&cfg),
+        BackendKind::Scalar, 0)
+        .unwrap();
+
+    // zero gradients isolate the weight-decay term
+    let g = vec![0f32; n];
+    for t in 1..=3usize {
+        grouped.step(&g, 1e-2, t, |_, _| {}).unwrap();
+        single.step(&g, 1e-2, t, |_, _| {}).unwrap();
+    }
+    let wg = grouped.master_weights(n);
+    let ws = single.master_weights(n);
+    // decay-eligible params identical in both runs...
+    let no_decay_ranges = &grouped.groups[1].ranges;
+    let in_no_decay = |i: usize| {
+        no_decay_ranges.iter().any(|&(lo, hi)| i >= lo && i < hi)
+    };
+    for i in 0..n {
+        if in_no_decay(i) {
+            // ...norms/biases kept exactly (wd 0) in the grouped run
+            assert_eq!(wg[i].to_bits(), t0[i].to_bits(), "idx {i}");
+            assert_ne!(ws[i].to_bits(), t0[i].to_bits(), "idx {i}");
+        } else {
+            assert_eq!(wg[i].to_bits(), ws[i].to_bits(), "idx {i}");
+        }
+    }
+}
+
+/// state_dict round-trips across every (optimizer, variant) pair with
+/// two groups through the in-memory API (file format covered in
+/// checkpoint_v2.rs).
+#[test]
+fn state_dict_all_pairs_two_groups() {
+    let model = lm_like_model();
+    let n = model.param_count;
+    for (opt, variant) in ALL_PAIRS {
+        let cfg = TrainConfig { optimizer: opt, ..Default::default() };
+        let mut rng = Rng::new(0xC0FFEE ^ ((opt as u64) << 3));
+        let t0 = randn(&mut rng, n, 0.1);
+        let mk = || {
+            FlashOptimizer::native(
+                opt, variant, 3 * GROUP, &t0,
+                GroupSpec::decay_split(&model), HyperDefaults::of(&cfg),
+                BackendKind::Scalar, 0)
+                .unwrap()
+        };
+        let mut a = mk();
+        let g = grad(&mut rng, n, variant);
+        a.step(&g, 1e-3, 1, |_, _| {}).unwrap();
+        let sd = a.state_dict(1);
+        sd.validate().unwrap();
+        let mut b = mk();
+        b.load_state_dict(&sd).unwrap();
+        for (x, y) in a.groups.iter().zip(&b.groups) {
+            assert_states_bit_equal(&x.opt.state, &y.opt.state,
+                                    &format!("{opt}/{variant}/{}", x.name));
+        }
+    }
+}

@@ -126,16 +126,52 @@ fn checkpoint_roundtrip_through_trainer() {
     t.run(true).unwrap();
     let path: PathBuf = std::env::temp_dir()
         .join(format!("flashtrain_it_{}.flt", std::process::id()));
-    checkpoint::save(&path, &t.opt.state, cfg.optimizer, cfg.variant, 3,
-                     t.model.param_count as u64)
-        .unwrap();
-    let (meta, st) = checkpoint::load(&path).unwrap();
-    assert_eq!(meta.step, 3);
-    assert_eq!(st.theta_p, t.opt.state.theta_p);
-    assert_eq!(st.vq, t.opt.state.vq);
+    checkpoint::save_state_dict(&path, &t.state_dict()).unwrap();
+    let sd = checkpoint::load_state_dict(&path).unwrap();
+    assert_eq!(sd.step, 3);
+    assert_eq!(sd.groups.len(), 1);
+    let st = &sd.groups[0].state;
+    let live = &t.opt.groups[0].opt.state;
+    assert_eq!(st.theta_p, live.theta_p);
+    assert_eq!(st.vq, live.vq);
     // compact: ~5.1 bytes/param over padded length
     let bpp = st.bytes() as f64 / st.n as f64;
     assert!((bpp - 5.125).abs() < 0.01, "{bpp}");
+
+    // reload into a fresh trainer bit-exactly
+    let mut t2 = Trainer::new(cfg, &manifest, &rt).unwrap();
+    t2.load_state_dict(&sd).unwrap();
+    assert_eq!(t2.current_step(), 3);
+    let p = t.model.param_count;
+    assert_eq!(t.opt.compute_weights_bf16(p),
+               t2.opt.compute_weights_bf16(p));
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn two_group_config_trains_and_checkpoints_v2() {
+    let Some((manifest, rt)) = setup() else { return };
+    use flashtrain::config::GroupConfig;
+    let mut cfg = tiny_cfg(OptKind::AdamW, Variant::Flash, 4);
+    cfg.groups = GroupConfig::decay_pair();
+    let mut t = Trainer::new(cfg.clone(), &manifest, &rt).unwrap();
+    assert_eq!(t.opt.groups.len(), 2);
+    assert_eq!(t.opt.groups[0].name, "decay");
+    assert_eq!(t.opt.groups[1].name, "no_decay");
+    assert_eq!(t.opt.groups[0].count() + t.opt.groups[1].count(),
+               t.model.param_count);
+    t.run(true).unwrap();
+    assert!(t.metrics.final_loss(2).is_finite());
+
+    let path: PathBuf = std::env::temp_dir()
+        .join(format!("flashtrain_it_groups_{}.flt", std::process::id()));
+    checkpoint::save_state_dict(&path, &t.state_dict()).unwrap();
+    let sd = checkpoint::load_state_dict(&path).unwrap();
+    assert_eq!(sd.groups.len(), 2);
+    let mut t2 = Trainer::new(cfg, &manifest, &rt).unwrap();
+    t2.load_state_dict(&sd).unwrap();
+    let p = t.model.param_count;
+    assert_eq!(t.opt.master_weights(p), t2.opt.master_weights(p));
     std::fs::remove_file(path).ok();
 }
 
