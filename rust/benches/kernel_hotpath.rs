@@ -1,15 +1,26 @@
 //! Bench: hot-path microbenchmarks for the §Perf pass (not a paper
-//! table) — native fused-step backend throughput (scalar vs parallel),
-//! the optimizer-step cost through the AOT HLO executables, the
-//! Rust-side format codec throughput, and the literal-marshalling
-//! overhead that dominates the L3 step loop.
+//! table) — per-codec kernel throughput (scalar vs AVX2), native
+//! fused-step throughput (scalar vs AVX2 vs parallel), the
+//! optimizer-step cost through the AOT HLO executables, and the
+//! literal-marshalling overhead.  Writes a machine-readable
+//! `BENCH_kernels.json` (schema in docs/PERF.md) so the repo's perf
+//! trajectory is diffable across PRs.
 //!
-//!   cargo bench --bench kernel_hotpath -- [--quick] [--threads T]
-//!       [--bucket N]
+//!   cargo bench --bench kernel_hotpath -- [--quick] [--check]
+//!       [--threads T] [--bucket N] [--out BENCH_kernels.json]
+//!
+//! `--check` is the CI smoke mode: small sizes, asserts that scalar
+//! and AVX2 kernels (where detected) agree bit-exactly and that the
+//! emitted JSON parses — so kernel regressions fail PRs, not just
+//! benches.
+
+use std::collections::BTreeMap;
 
 use flashtrain::backend::{ParallelBackend, ScalarBackend, StepBackend};
-use flashtrain::config::{OptKind, TrainConfig, Variant};
-use flashtrain::formats::{companding, weight_split, GROUP};
+use flashtrain::config::{Json, KernelKind, OptKind, TrainConfig,
+                         Variant};
+use flashtrain::formats::GROUP;
+use flashtrain::kernels::{avx2_available, kernel_set, KernelSet};
 use flashtrain::optim::{BucketOptimizer, Hyper, State};
 use flashtrain::runtime::literal as lit;
 use flashtrain::util::bench::{bench_for, black_box, fmt_time,
@@ -28,23 +39,198 @@ const STEP_ROWS: [(OptKind, Variant, &str, f64); 5] = [
     (OptKind::Lion, Variant::Flash, "lion flash", 6.125),
 ];
 
+/// Bytes moved per element (read + write) per codec — the traffic
+/// model behind the GB/s column, documented in docs/PERF.md.
+const CODEC_BYTES: [(&str, f64); 10] = [
+    ("split_compress", 4.0 + 3.0),
+    ("split_decompress", 3.0 + 4.0),
+    ("momentum_quant", 4.0 + 1.0625),
+    ("momentum_dequant", 1.0625 + 4.0),
+    ("variance_quant", 4.0 + 1.0625),
+    ("variance_dequant", 1.0625 + 4.0),
+    ("f32_to_bf16", 4.0 + 2.0),
+    ("bf16_to_f32", 2.0 + 4.0),
+    ("f32_to_f16", 4.0 + 2.0),
+    ("f16_to_f32", 2.0 + 4.0),
+];
+
+fn codec_bytes(name: &str) -> f64 {
+    CODEC_BYTES
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, b)| *b)
+        .unwrap_or(8.0)
+}
+
+fn kernel_sets() -> Vec<&'static KernelSet> {
+    let mut v = vec![kernel_set(KernelKind::Scalar).unwrap()];
+    if avx2_available() {
+        v.push(kernel_set(KernelKind::Avx2).unwrap());
+    }
+    v
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect::<BTreeMap<String, Json>>())
+}
+
+fn assert_states_bit_equal(a: &State, b: &State, what: &str) {
+    assert_eq!(a.theta_p, b.theta_p, "{what} theta_p");
+    assert_eq!(a.rho, b.rho, "{what} rho");
+    assert_eq!(a.mq, b.mq, "{what} mq");
+    assert_eq!(a.ms, b.ms, "{what} ms");
+    assert_eq!(a.vq, b.vq, "{what} vq");
+    assert_eq!(a.vs, b.vs, "{what} vs");
+    for (name, x, y) in [("theta", &a.theta, &b.theta), ("m", &a.m, &b.m),
+                         ("v", &a.v, &b.v)] {
+        match (x, y) {
+            (Some(x), Some(y)) => {
+                for (i, (p, q)) in x.iter().zip(y).enumerate() {
+                    assert_eq!(p.to_bits(), q.to_bits(),
+                               "{what} {name}[{i}]");
+                }
+            }
+            (None, None) => {}
+            _ => panic!("{what}: {name} presence differs"),
+        }
+    }
+}
+
 fn main() {
     let args = Args::parse();
-    let budget = if args.flag("quick") { 0.2 } else { 1.0 };
+    let check = args.flag("check");
+    let quick = args.flag("quick") || check;
+    let budget = if check {
+        0.02
+    } else if quick {
+        0.2
+    } else {
+        1.0
+    };
     let threads = args.get_usize("threads", 0);
-    let bucket = args.get_usize("bucket", 1 << 20); // >= 1M params
+    let bucket = args.get_usize(
+        "bucket",
+        if check { 8 * 1024 } else { 1 << 20 });
+    let n = if check { 1 << 14 } else { 1 << 20 };
+    // cargo runs bench binaries with cwd = the package dir (rust/);
+    // anchor the default to the workspace root so the artifact lands in
+    // one predictable place (CI checks it there)
+    let default_out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package dir has a parent")
+        .join("BENCH_kernels.json");
+    let out_path = args
+        .get("out")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| default_out.to_string_lossy().into_owned());
     let mut rng = Rng::new(1);
     let cfg = TrainConfig::default();
+    let mut codec_json: Vec<Json> = Vec::new();
+    let mut fused_json: Vec<Json> = Vec::new();
 
-    // ---- native fused step: scalar vs parallel ----------------------------
+    // ---- per-codec kernel throughput: scalar vs AVX2 ----------------------
+    let theta: Vec<f32> =
+        (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+    let variance: Vec<f32> = theta.iter().map(|x| x * x).collect();
+    let mut tp = vec![0u16; n];
+    let mut rho = vec![0i8; n];
+    let mut out = vec![0f32; n];
+    let mut q8 = vec![0i8; n];
+    let mut u8v = vec![0u8; n];
+    let mut sc = vec![0u16; n / GROUP];
+    let mut bits = vec![0u16; n];
+
+    let mut t = Table::new(
+        &format!("format codec kernels ({n} elements)"),
+        &["codec", "kernels", "median", "Melem/s", "GB/s"]);
+    for ks in kernel_sets() {
+        // seed the compact buffers so decode benches see real codes
+        (ks.split_compress)(&theta, &mut tp, &mut rho);
+        (ks.quant_momentum)(&theta, &mut q8, &mut sc);
+        let mut row = |name: &str,
+                       r: flashtrain::util::bench::BenchResult| {
+            let med = r.median_s();
+            let bpe = codec_bytes(name);
+            t.row(&[name.into(), ks.name.into(), fmt_time(med),
+                    format!("{:.0}", n as f64 / med / 1e6),
+                    format!("{:.2}", bpe * n as f64 / med / 1e9)]);
+            codec_json.push(obj(vec![
+                ("codec", Json::Str(name.into())),
+                ("kernels", Json::Str(ks.name.into())),
+                ("median_s", Json::Num(med)),
+                ("melem_per_s", Json::Num(n as f64 / med / 1e6)),
+                ("gb_per_s",
+                 Json::Num(bpe * n as f64 / med / 1e9)),
+            ]));
+        };
+        row("split_compress",
+            bench_for("sc", budget, 3,
+                      || (ks.split_compress)(&theta, &mut tp,
+                                             &mut rho)));
+        row("split_decompress",
+            bench_for("sd", budget, 3,
+                      || (ks.split_decompress)(&tp, &rho, &mut out)));
+        row("momentum_quant",
+            bench_for("mq", budget, 3,
+                      || (ks.quant_momentum)(&theta, &mut q8,
+                                             &mut sc)));
+        row("momentum_dequant",
+            bench_for("mdq", budget, 3,
+                      || (ks.dequant_momentum)(&q8, &sc, &mut out)));
+        row("variance_quant",
+            bench_for("vq", budget, 3,
+                      || (ks.quant_variance)(&variance, &mut u8v,
+                                             &mut sc)));
+        row("variance_dequant",
+            bench_for("vdq", budget, 3,
+                      || (ks.dequant_variance)(&u8v, &sc, &mut out)));
+        row("f32_to_bf16",
+            bench_for("eb", budget, 3,
+                      || (ks.f32_to_bf16)(&theta, &mut bits)));
+        row("bf16_to_f32",
+            bench_for("db", budget, 3,
+                      || (ks.bf16_to_f32)(&bits, &mut out)));
+        row("f32_to_f16",
+            bench_for("eh", budget, 3,
+                      || (ks.f32_to_f16)(&theta, &mut bits)));
+        row("f16_to_f32",
+            bench_for("dh", budget, 3,
+                      || (ks.f16_to_f32)(&bits, &mut out)));
+    }
+    t.print();
+
+    // ---- check mode: scalar vs AVX2 bit-exactness -------------------------
+    if check {
+        check_kernel_agreement(n);
+    }
+
+    // ---- native fused step: scalar vs AVX2 kernels vs parallel ------------
     let par = ParallelBackend::new(threads);
     let nthreads = par.threads();
+    let mut engines: Vec<(String, String, Box<dyn StepBackend>)> = vec![(
+        "scalar".into(),
+        "scalar".into(),
+        Box::new(ScalarBackend::with_kernels(KernelKind::Scalar)
+            .unwrap()),
+    )];
+    if avx2_available() {
+        engines.push((
+            "scalar".into(),
+            "avx2".into(),
+            Box::new(ScalarBackend::with_kernels(KernelKind::Avx2)
+                .unwrap()),
+        ));
+    }
+    let par_kernels = par.kernels_name().to_string();
     let mut t = Table::new(
         &format!(
             "native fused step (dequant->update->requant), {bucket} \
              params, parallel={nthreads} threads"),
-        &["variant", "scalar", "parallel", "speedup", "Mparam/s (par)",
-          "GB/s state rw (par)"]);
+        &["variant", "backend", "kernels", "median", "Mparam/s",
+          "GB/s state rw"]);
     for (opt, variant, label, state_bytes) in STEP_ROWS {
         let theta: Vec<f32> =
             (0..bucket).map(|_| rng.normal() as f32 * 0.1).collect();
@@ -58,145 +244,250 @@ fn main() {
                 }
             })
             .collect();
-        let n = bucket.next_multiple_of(GROUP);
+        let padded = bucket.next_multiple_of(GROUP);
         let h = Hyper::for_step(&cfg, 1e-3, 10);
         let mut g_pad = g.clone();
-        g_pad.resize(n, 0.0);
+        g_pad.resize(padded, 0.0);
 
-        let mut st_scalar = State::init(&theta, n, opt, variant);
-        let r_scalar = bench_for(label, budget, 3, || {
-            ScalarBackend
-                .step_full(&mut st_scalar, &g_pad, opt, variant, &h)
-                .unwrap();
-        });
-        let mut st_par = State::init(&theta, n, opt, variant);
-        let r_par = bench_for(label, budget, 3, || {
+        let mut record = |backend: &str, kernels: &str, med: f64| {
+            t.row(&[label.into(), backend.into(), kernels.into(),
+                    fmt_time(med),
+                    format!("{:.0}", padded as f64 / med / 1e6),
+                    format!("{:.2}",
+                            2.0 * state_bytes * padded as f64 / med
+                                / 1e9)]);
+            fused_json.push(obj(vec![
+                ("optimizer", Json::Str(opt.name().into())),
+                ("variant", Json::Str(variant.name().into())),
+                ("backend", Json::Str(backend.into())),
+                ("kernels", Json::Str(kernels.into())),
+                ("median_s", Json::Num(med)),
+                ("mparam_per_s",
+                 Json::Num(padded as f64 / med / 1e6)),
+                ("gb_per_s",
+                 Json::Num(2.0 * state_bytes * padded as f64 / med
+                           / 1e9)),
+            ]));
+        };
+        for (backend, kernels, engine) in &engines {
+            let mut st = State::init(&theta, padded, opt, variant);
+            let r = bench_for(label, budget, 3, || {
+                engine
+                    .step_full(&mut st, &g_pad, opt, variant, &h)
+                    .unwrap();
+            });
+            record(backend.as_str(), kernels.as_str(), r.median_s());
+        }
+        let mut st_par = State::init(&theta, padded, opt, variant);
+        let r = bench_for(label, budget, 3, || {
             par.step_full(&mut st_par, &g_pad, opt, variant, &h)
                 .unwrap();
         });
-        let (ms, mp) = (r_scalar.median_s(), r_par.median_s());
-        t.row(&[
-            label.into(),
-            fmt_time(ms),
-            fmt_time(mp),
-            format!("{:.2}x", ms / mp),
-            format!("{:.0}", n as f64 / mp / 1e6),
-            format!("{:.2}", 2.0 * state_bytes * n as f64 / mp / 1e9),
-        ]);
+        record("parallel", par_kernels.as_str(), r.median_s());
+        if check {
+            // every engine ran the same number of steps from the same
+            // start only when iteration counts match, so re-run one
+            // clean step per engine and compare bits
+            let mut clean: Vec<State> = Vec::new();
+            for (_, _, engine) in &engines {
+                let mut st = State::init(&theta, padded, opt, variant);
+                engine
+                    .step_full(&mut st, &g_pad, opt, variant, &h)
+                    .unwrap();
+                clean.push(st);
+            }
+            let mut st = State::init(&theta, padded, opt, variant);
+            par.step_full(&mut st, &g_pad, opt, variant, &h).unwrap();
+            clean.push(st);
+            for other in &clean[1..] {
+                assert_states_bit_equal(&clean[0], other, label);
+            }
+        }
     }
     t.print();
+
+    // ---- machine-readable output ------------------------------------------
+    let doc = obj(vec![
+        ("bench", Json::Str("kernel_hotpath".into())),
+        ("schema_version", Json::Num(1.0)),
+        ("quick", Json::Bool(quick)),
+        ("check", Json::Bool(check)),
+        ("elements", Json::Num(n as f64)),
+        ("step_elements", Json::Num(bucket as f64)),
+        ("threads", Json::Num(nthreads as f64)),
+        ("avx2_detected", Json::Bool(avx2_available())),
+        ("codecs", Json::Arr(codec_json)),
+        ("fused_step", Json::Arr(fused_json)),
+    ]);
+    let text = doc.to_string_pretty();
+    let parsed = Json::parse(&text).expect("emitted JSON must parse");
+    assert!(parsed.get("codecs").and_then(Json::as_arr).is_some());
+    assert!(parsed.get("fused_step").and_then(Json::as_arr).is_some());
+    std::fs::write(&out_path, text + "\n")
+        .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
+    println!("wrote {out_path}");
+    if check {
+        println!("kernel check OK: JSON parses, scalar/AVX2 bit-exact \
+                  (avx2_detected={})", avx2_available());
+        return;
+    }
 
     // ---- optimizer step executable by bucket size & variant ---------------
     // (requires `make artifacts` + a real PJRT runtime; skipped otherwise)
-    // (skip note printed by manifest_or_skip when unavailable)
     if let Some((manifest, rt)) =
         manifest_or_skip("kernel_hotpath HLO section")
     {
-            let mut t = Table::new(
-                "fused optimizer step (HLO via PJRT), per bucket",
-                &["bucket", "variant", "median", "ns/param",
-                  "GB/s (state rw)"]);
-            let mut hlo_ok = true;
-            'outer: for &bucket in
-                manifest.buckets.keys().collect::<Vec<_>>()
-            {
-                for (opt, variant, label, state_bytes) in STEP_ROWS {
-                    if flashtrain::optim::artifact_name(opt, variant)
-                        .is_err()
-                    {
-                        continue;
-                    }
-                    let theta: Vec<f32> = (0..bucket)
-                        .map(|_| rng.normal() as f32 * 0.1)
-                        .collect();
-                    let mut opt_exec = match BucketOptimizer::new(
-                        &rt, &manifest, opt, variant, bucket, &theta)
-                    {
-                        Ok(o) => o,
-                        Err(e) => {
-                            println!("skipping HLO step bench: {e:#}");
-                            hlo_ok = false;
-                            break 'outer;
-                        }
-                    };
-                    let g: Vec<f32> = (0..bucket)
-                        .map(|_| rng.normal() as f32 * 0.01)
-                        .collect();
-                    let h = Hyper::for_step(&cfg, 1e-3, 10);
-                    let r = bench_for(label, budget, 5, || {
-                        opt_exec.step_bucket(0, &g, &h).unwrap();
-                    });
-                    let med = r.median_s();
-                    t.row(&[format!("{bucket}"), label.into(),
-                            fmt_time(med),
-                            format!("{:.1}", med * 1e9 / bucket as f64),
-                            format!("{:.2}",
-                                    2.0 * state_bytes * bucket as f64
-                                        / med / 1e9)]);
+        let mut t = Table::new(
+            "fused optimizer step (HLO via PJRT), per bucket",
+            &["bucket", "variant", "median", "ns/param",
+              "GB/s (state rw)"]);
+        let mut hlo_ok = true;
+        'outer: for &bucket in manifest.buckets.keys().collect::<Vec<_>>()
+        {
+            for (opt, variant, label, state_bytes) in STEP_ROWS {
+                if flashtrain::optim::artifact_name(opt, variant)
+                    .is_err()
+                {
+                    continue;
                 }
+                let theta: Vec<f32> = (0..bucket)
+                    .map(|_| rng.normal() as f32 * 0.1)
+                    .collect();
+                let mut opt_exec = match BucketOptimizer::new(
+                    &rt, &manifest, opt, variant, bucket, &theta)
+                {
+                    Ok(o) => o,
+                    Err(e) => {
+                        println!("skipping HLO step bench: {e:#}");
+                        hlo_ok = false;
+                        break 'outer;
+                    }
+                };
+                let g: Vec<f32> = (0..bucket)
+                    .map(|_| rng.normal() as f32 * 0.01)
+                    .collect();
+                let h = Hyper::for_step(&cfg, 1e-3, 10);
+                let r = bench_for(label, budget, 5, || {
+                    opt_exec.step_bucket(0, &g, &h).unwrap();
+                });
+                let med = r.median_s();
+                t.row(&[format!("{bucket}"), label.into(),
+                        fmt_time(med),
+                        format!("{:.1}", med * 1e9 / bucket as f64),
+                        format!("{:.2}",
+                                2.0 * state_bytes * bucket as f64
+                                    / med / 1e9)]);
             }
-            if hlo_ok {
-                t.print();
-            }
+        }
+        if hlo_ok {
+            t.print();
+        }
     }
-
-    // ---- Rust codec throughput --------------------------------------------
-    let n = 1 << 20;
-    let theta: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1)
-        .collect();
-    let mut tp = vec![0u16; n];
-    let mut rho = vec![0i8; n];
-    let mut out = vec![0f32; n];
-    let mut q8 = vec![0i8; n];
-    let mut u8v = vec![0u8; n];
-    let mut sc = vec![0u16; n / GROUP];
-
-    let mut t = Table::new("rust format codecs (1M elements)", &[
-        "codec", "median", "Melem/s"]);
-    let mut row = |name: &str, r: flashtrain::util::bench::BenchResult| {
-        let med = r.median_s();
-        t.row(&[name.into(), fmt_time(med),
-                format!("{:.0}", n as f64 / med / 1e6)]);
-    };
-    row("split compress",
-        bench_for("c", budget, 3,
-                  || weight_split::compress_slice(&theta, &mut tp,
-                                                  &mut rho)));
-    row("split decompress",
-        bench_for("d", budget, 3,
-                  || weight_split::decompress_slice(&tp, &rho, &mut out)));
-    row("momentum quant",
-        bench_for("mq", budget, 3,
-                  || companding::quant_momentum(&theta, &mut q8, &mut sc)));
-    row("momentum dequant",
-        bench_for("mdq", budget, 3,
-                  || companding::dequant_momentum(&q8, &sc, &mut out)));
-    row("variance quant", bench_for("vq", budget, 3, || {
-        let v: &Vec<f32> = &theta;
-        let vv: Vec<f32> = v.iter().map(|x| x * x).collect();
-        companding::quant_variance(&vv, &mut u8v, &mut sc)
-    }));
-    t.print();
 
     // ---- literal marshalling overhead --------------------------------------
     let mut t = Table::new("literal marshalling (65536 elements)", &[
         "op", "median"]);
-    let bits: Vec<u16> = (0..65536u32).map(|i| (i & 0x7FFF) as u16)
+    let lbits: Vec<u16> = (0..65536u32).map(|i| (i & 0x7FFF) as u16)
         .collect();
     let f32s: Vec<f32> = (0..65536).map(|i| i as f32).collect();
     let r = bench_for("bf16 literal create", budget, 10, || {
-        black_box(lit::lit_bf16_bits(&bits, &[65536]).unwrap());
+        black_box(lit::lit_bf16_bits(&lbits, &[65536]).unwrap());
     });
     t.row(&["bf16 literal create".into(), fmt_time(r.median_s())]);
     let r = bench_for("f32 literal create", budget, 10, || {
         black_box(lit::lit_f32(&f32s, &[65536]).unwrap());
     });
     t.row(&["f32 literal create".into(), fmt_time(r.median_s())]);
-    let l = lit::lit_bf16_bits(&bits, &[65536]).unwrap();
+    let l = lit::lit_bf16_bits(&lbits, &[65536]).unwrap();
     let r = bench_for("bf16 literal extract", budget, 10, || {
         black_box(lit::to_bf16_bits(&l).unwrap());
     });
     t.row(&["bf16 literal extract (convert+rebits)".into(),
             fmt_time(r.median_s())]);
     t.print();
+}
+
+/// `--check`: every codec, scalar vs AVX2 (when detected), bit-exact on
+/// random + adversarial data.  Panics (failing the CI job) on any
+/// mismatch.
+fn check_kernel_agreement(n: usize) {
+    let sets = kernel_sets();
+    if sets.len() < 2 {
+        println!("kernel check: AVX2 not detected, scalar-only build \
+                  verified for self-consistency");
+    }
+    let n = n.next_multiple_of(GROUP);
+    let mut rng = Rng::new(0xC43C);
+    let mut data: Vec<f32> = (0..n)
+        .map(|_| {
+            let mag = (rng.f32() * 60.0 - 45.0).exp2();
+            let sign = if rng.f32() < 0.5 { -1.0 } else { 1.0 };
+            sign * mag * (0.5 + rng.f32())
+        })
+        .collect();
+    // adversarial prefix: zeros, f16-scale saturation, denormals
+    for x in data.iter_mut().take(GROUP) {
+        *x = 0.0;
+    }
+    for (i, x) in data.iter_mut().skip(GROUP).take(GROUP).enumerate() {
+        *x = 1e30 * (i as f32 + 1.0);
+    }
+    for (i, x) in
+        data.iter_mut().skip(2 * GROUP).take(GROUP).enumerate()
+    {
+        *x = 1e-42 * i as f32;
+    }
+    let pos: Vec<f32> = data.iter().map(|x| x.abs()).collect();
+
+    let reference = sets[0];
+    for ks in &sets[1..] {
+        // companding
+        let (mut qa, mut sa) = (vec![0i8; n], vec![0u16; n / GROUP]);
+        let (mut qb, mut sb) = (qa.clone(), sa.clone());
+        (reference.quant_momentum)(&data, &mut qa, &mut sa);
+        (ks.quant_momentum)(&data, &mut qb, &mut sb);
+        assert_eq!(qa, qb, "momentum codes differ");
+        assert_eq!(sa, sb, "momentum scales differ");
+        let (mut oa, mut ob) = (vec![0f32; n], vec![0f32; n]);
+        (reference.dequant_momentum)(&qa, &sa, &mut oa);
+        (ks.dequant_momentum)(&qa, &sa, &mut ob);
+        assert!(oa.iter().zip(&ob).all(|(x, y)| x.to_bits()
+                == y.to_bits()), "momentum dequant differs");
+        let (mut ua, mut ub) = (vec![0u8; n], vec![0u8; n]);
+        (reference.quant_variance)(&pos, &mut ua, &mut sa);
+        (ks.quant_variance)(&pos, &mut ub, &mut sb);
+        assert_eq!(ua, ub, "variance codes differ");
+        assert_eq!(sa, sb, "variance scales differ");
+        // split + conversions
+        let (mut ta, mut ra) = (vec![0u16; n], vec![0i8; n]);
+        let (mut tb, mut rb) = (ta.clone(), ra.clone());
+        (reference.split_compress)(&data, &mut ta, &mut ra);
+        (ks.split_compress)(&data, &mut tb, &mut rb);
+        assert_eq!(ta, tb, "split theta_p differs");
+        assert_eq!(ra, rb, "split rho differs");
+        (reference.split_decompress)(&ta, &ra, &mut oa);
+        (ks.split_decompress)(&ta, &ra, &mut ob);
+        assert!(oa.iter().zip(&ob).all(|(x, y)| x.to_bits()
+                == y.to_bits()), "split decompress differs");
+        let (mut ba, mut bb) = (vec![0u16; n], vec![0u16; n]);
+        (reference.f32_to_bf16)(&data, &mut ba);
+        (ks.f32_to_bf16)(&data, &mut bb);
+        assert_eq!(ba, bb, "f32_to_bf16 differs");
+        (reference.f32_to_f16)(&data, &mut ba);
+        (ks.f32_to_f16)(&data, &mut bb);
+        assert_eq!(ba, bb, "f32_to_f16 differs");
+        let patterns: Vec<u16> = (0..=u16::MAX).collect();
+        let (mut fa, mut fb) =
+            (vec![0f32; patterns.len()], vec![0f32; patterns.len()]);
+        (reference.f16_to_f32)(&patterns, &mut fa);
+        (ks.f16_to_f32)(&patterns, &mut fb);
+        assert!(fa.iter().zip(&fb).all(|(x, y)| x.to_bits()
+                == y.to_bits()), "f16_to_f32 differs");
+        (reference.bf16_to_f32)(&patterns, &mut fa);
+        (ks.bf16_to_f32)(&patterns, &mut fb);
+        assert!(fa.iter().zip(&fb).all(|(x, y)| x.to_bits()
+                == y.to_bits()), "bf16_to_f32 differs");
+        println!("kernel check: {} == {} on {} elements + exhaustive \
+                  16-bit sweeps", reference.name, ks.name, n);
+    }
 }

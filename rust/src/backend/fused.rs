@@ -1,131 +1,217 @@
-//! The fused dequant → update → requant chain over one partition.
+//! The fused dequant → update → requant chain over one partition,
+//! tiled through fixed scratch buffers.
 //!
 //! This is the native mirror of the AOT fused-step kernels (paper
-//! Algorithms 4/5/6): reconstruct fp32 working copies for the
-//! partition only, apply the shared `scalar_ref` update rule, and
-//! restore the compact storage formats in place.  Scratch memory is
-//! bounded by the partition size (3 fp32 vectors worst case), never by
-//! the full parameter count — that is what makes the parallel backend's
-//! peak memory `O(partition × threads)` on top of the compact state.
+//! Algorithms 4/5/6).  Instead of materializing partition-sized fp32
+//! working copies (which tripled memory traffic on a memory-bound
+//! kernel), the partition streams through GROUP-multiple tiles of
+//! [`TILE`] elements: dequant a tile into fixed scratch, apply the
+//! shared `scalar_ref` update rule to the tile, requant the tile back —
+//! so scratch is **O(tile)**, not O(partition), and each byte of
+//! compact state is touched exactly once per step.  Buffers the variant
+//! already stores in fp32 (reference master weights, unquantized
+//! moments) are updated **in place** with no scratch at all.
 //!
-//! Bit-exactness: every step below runs the exact same element-wise and
-//! group-wise code as `scalar_ref::step_state` does on the whole
-//! buffer, so any GROUP-aligned partitioning yields identical bits.
+//! Codec work goes through a [`KernelSet`] (scalar reference loops or
+//! runtime-dispatched AVX2 — see `crate::kernels`); the element-wise
+//! update itself always runs the `scalar_ref` slice rules, which keeps
+//! a single source of update truth.
+//!
+//! Bit-exactness: updates are element-wise and requantization is
+//! group-wise over whole GROUPs, so tiling at GROUP boundaries — like
+//! partitioning at GROUP boundaries — cannot change a single bit
+//! relative to the legacy whole-buffer `scalar_ref::step_state`
+//! (enforced by `rust/tests/backend_equivalence.rs`).
+
+use std::cell::Cell;
 
 use crate::backend::partition::Part;
 use crate::config::{OptKind, Variant};
-use crate::formats::{companding, weight_split};
+use crate::formats::GROUP;
+use crate::kernels::KernelSet;
 use crate::optim::hyper::Hyper;
 use crate::optim::scalar_ref;
 
+/// Tile length in elements (16 quantization groups).  Large enough to
+/// amortize the per-tile call overhead and keep the SIMD kernels in
+/// their main loops, small enough that the three fp32 scratch tiles
+/// (6 KiB) live comfortably in L1.
+pub const TILE: usize = 16 * GROUP;
+
+thread_local! {
+    /// High-water mark of fused-step scratch bytes on this thread;
+    /// lets tests assert the O(tile) bound through the memory tracker.
+    static SCRATCH_PEAK: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Reset this thread's fused-scratch high-water mark.
+pub fn reset_scratch_peak() {
+    SCRATCH_PEAK.with(|c| c.set(0));
+}
+
+/// Peak fused-step scratch bytes observed on this thread since the
+/// last [`reset_scratch_peak`].
+pub fn scratch_peak_bytes() -> u64 {
+    SCRATCH_PEAK.with(|c| c.get())
+}
+
+fn note_scratch(bytes: u64) {
+    SCRATCH_PEAK.with(|c| c.set(c.get().max(bytes)));
+}
+
 /// One fused optimizer step over a single partition.
 pub fn step_part(p: &mut Part<'_>, opt: OptKind, variant: Variant,
-                 h: &Hyper) {
+                 h: &Hyper, ks: &KernelSet) {
     let n = p.len;
     debug_assert_eq!(p.g.len(), n);
     if n == 0 {
         return;
     }
     let nocompand = variant == Variant::NoCompand;
+    let split = variant.splits_weights();
+    let quant = variant.quantizes_state();
+    let var = opt.has_variance();
 
-    // prologue: reconstruct fp32 working copies (partition-sized)
-    let mut theta = vec![0f32; n];
-    if variant.splits_weights() {
-        weight_split::decompress_slice(
-            p.theta_p.as_deref().expect("split state missing theta_p"),
-            p.rho.as_deref().expect("split state missing rho"),
-            &mut theta,
-        );
-    } else {
-        theta.copy_from_slice(p.theta.as_deref().expect("missing theta"));
-    }
+    // fixed tile scratch: only the streams the variant actually
+    // reconstructs count toward the scratch footprint
+    let mut theta_t = [0f32; TILE];
+    let mut m_t = [0f32; TILE];
+    let mut v_t = [0f32; TILE];
+    let tile = n.min(TILE);
+    let streams =
+        usize::from(split) + usize::from(quant) * (1 + usize::from(var));
+    note_scratch((streams * tile * 4) as u64);
 
-    let mut m = vec![0f32; n];
-    if variant.quantizes_state() {
-        let mq = p.mq.as_deref().expect("quant state missing mq");
-        let ms = p.ms.as_deref().expect("quant state missing ms");
-        if nocompand {
-            companding::dequant_momentum_linear(mq, ms, &mut m);
+    // reborrow every buffer once; tiles slice per iteration
+    let mut theta_b = p.theta.as_deref_mut();
+    let mut tp_b = p.theta_p.as_deref_mut();
+    let mut rho_b = p.rho.as_deref_mut();
+    let mut m_b = p.m.as_deref_mut();
+    let mut v_b = p.v.as_deref_mut();
+    let mut mq_b = p.mq.as_deref_mut();
+    let mut ms_b = p.ms.as_deref_mut();
+    let mut vq_b = p.vq.as_deref_mut();
+    let mut vs_b = p.vs.as_deref_mut();
+    let g_all = p.g;
+
+    let mut lo = 0usize;
+    while lo < n {
+        let hi = (lo + TILE).min(n);
+        let len = hi - lo;
+        let (glo, ghi) = (lo / GROUP, hi / GROUP);
+        let g = &g_all[lo..hi];
+
+        // dequant tile (or borrow fp32 storage in place)
+        let theta_s: &mut [f32] = if split {
+            (ks.split_decompress)(
+                &tp_b.as_deref().expect("split state missing theta_p")
+                    [lo..hi],
+                &rho_b.as_deref().expect("split state missing rho")
+                    [lo..hi],
+                &mut theta_t[..len]);
+            &mut theta_t[..len]
         } else {
-            companding::dequant_momentum(mq, ms, &mut m);
-        }
-    } else {
-        m.copy_from_slice(p.m.as_deref().expect("missing momentum"));
-    }
-
-    let mut v = Vec::new();
-    if opt.has_variance() {
-        v = vec![0f32; n];
-        if variant.quantizes_state() {
-            let vq = p.vq.as_deref().expect("quant state missing vq");
-            let vs = p.vs.as_deref().expect("quant state missing vs");
+            &mut theta_b.as_deref_mut().expect("missing theta")[lo..hi]
+        };
+        let m_s: &mut [f32] = if quant {
+            let mq = &mq_b.as_deref().expect("quant state missing mq")
+                [lo..hi];
+            let ms = &ms_b.as_deref().expect("quant state missing ms")
+                [glo..ghi];
             if nocompand {
-                companding::dequant_variance_linear(vq, vs, &mut v);
+                (ks.dequant_momentum_linear)(mq, ms, &mut m_t[..len]);
             } else {
-                companding::dequant_variance(vq, vs, &mut v);
+                (ks.dequant_momentum)(mq, ms, &mut m_t[..len]);
             }
+            &mut m_t[..len]
         } else {
-            v.copy_from_slice(p.v.as_deref().expect("missing variance"));
-        }
-    }
+            &mut m_b.as_deref_mut().expect("missing momentum")[lo..hi]
+        };
 
-    // update: shared scalar rules (the single source of update truth)
-    match opt {
-        OptKind::AdamW => {
-            scalar_ref::adamw_f32(&mut theta, &mut m, &mut v, p.g, h)
+        // update tile: shared scalar rules (the single source of truth)
+        match opt {
+            OptKind::AdamW => {
+                let v_s: &mut [f32] = if quant {
+                    let vq = &vq_b
+                        .as_deref()
+                        .expect("quant state missing vq")[lo..hi];
+                    let vs = &vs_b
+                        .as_deref()
+                        .expect("quant state missing vs")[glo..ghi];
+                    if nocompand {
+                        (ks.dequant_variance_linear)(vq, vs,
+                                                     &mut v_t[..len]);
+                    } else {
+                        (ks.dequant_variance)(vq, vs, &mut v_t[..len]);
+                    }
+                    &mut v_t[..len]
+                } else {
+                    &mut v_b.as_deref_mut().expect("missing variance")
+                        [lo..hi]
+                };
+                scalar_ref::adamw_f32(theta_s, m_s, v_s, g, h);
+            }
+            OptKind::Sgd => scalar_ref::sgd_f32(theta_s, m_s, g, h),
+            OptKind::Lion => scalar_ref::lion_f32(theta_s, m_s, g, h),
         }
-        OptKind::Sgd => scalar_ref::sgd_f32(&mut theta, &mut m, p.g, h),
-        OptKind::Lion => scalar_ref::lion_f32(&mut theta, &mut m, p.g, h),
-    }
 
-    // epilogue: restore storage formats in place
-    if variant.splits_weights() {
-        weight_split::compress_slice(
-            &theta,
-            p.theta_p.as_deref_mut().unwrap(),
-            p.rho.as_deref_mut().unwrap(),
-        );
-    } else {
-        p.theta.as_deref_mut().unwrap().copy_from_slice(&theta);
-    }
-    if variant.quantizes_state() {
-        let mq = p.mq.as_deref_mut().unwrap();
-        let ms = p.ms.as_deref_mut().unwrap();
-        if nocompand {
-            companding::quant_momentum_linear(&m, mq, ms);
-        } else {
-            companding::quant_momentum(&m, mq, ms);
+        // requant tile back into the compact formats
+        if split {
+            (ks.split_compress)(
+                &theta_t[..len],
+                &mut tp_b.as_deref_mut().unwrap()[lo..hi],
+                &mut rho_b.as_deref_mut().unwrap()[lo..hi]);
         }
-        if opt.has_variance() {
-            let vq = p.vq.as_deref_mut().unwrap();
-            let vs = p.vs.as_deref_mut().unwrap();
-            if nocompand {
-                companding::quant_variance_linear(&v, vq, vs);
-            } else {
-                companding::quant_variance(&v, vq, vs);
+        if quant {
+            {
+                let mq = &mut mq_b.as_deref_mut().unwrap()[lo..hi];
+                let ms = &mut ms_b.as_deref_mut().unwrap()[glo..ghi];
+                if nocompand {
+                    (ks.quant_momentum_linear)(&m_t[..len], mq, ms);
+                } else {
+                    (ks.quant_momentum)(&m_t[..len], mq, ms);
+                }
+            }
+            if var {
+                let vq = &mut vq_b.as_deref_mut().unwrap()[lo..hi];
+                let vs = &mut vs_b.as_deref_mut().unwrap()[glo..ghi];
+                if nocompand {
+                    (ks.quant_variance_linear)(&v_t[..len], vq, vs);
+                } else {
+                    (ks.quant_variance)(&v_t[..len], vq, vs);
+                }
             }
         }
-    } else {
-        p.m.as_deref_mut().unwrap().copy_from_slice(&m);
-        if opt.has_variance() {
-            p.v.as_deref_mut().unwrap().copy_from_slice(&v);
-        }
+        lo = hi;
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::TrainConfig;
-    use crate::formats::GROUP;
+    use crate::config::{KernelKind, TrainConfig};
+    use crate::kernels::kernel_set;
     use crate::optim::state::State;
     use crate::util::rng::Rng;
 
-    /// A single full-range step_part must equal the legacy whole-buffer
-    /// scalar mirror bit for bit.
+    fn states_eq(a: &State, b: &State, what: &str) {
+        assert_eq!(a.theta, b.theta, "{what} theta");
+        assert_eq!(a.theta_p, b.theta_p, "{what} theta_p");
+        assert_eq!(a.rho, b.rho, "{what} rho");
+        assert_eq!(a.mq, b.mq, "{what} mq");
+        assert_eq!(a.ms, b.ms, "{what} ms");
+        assert_eq!(a.vq, b.vq, "{what} vq");
+        assert_eq!(a.vs, b.vs, "{what} vs");
+        assert_eq!(a.m, b.m, "{what} m");
+        assert_eq!(a.v, b.v, "{what} v");
+    }
+
+    /// A single full-range (multi-tile) step_part must equal the legacy
+    /// whole-buffer scalar mirror bit for bit — for every kernel set.
     #[test]
     fn full_range_part_matches_step_state() {
-        let n = 8 * GROUP;
+        // 2.5 tiles: exercises full tiles and a partial trailing tile
+        let n = 2 * TILE + TILE / 2;
         let mut rng = Rng::new(41);
         let theta0: Vec<f32> =
             (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
@@ -137,26 +223,51 @@ mod tests {
             .collect();
         let cfg = TrainConfig::default();
         let h = Hyper::for_step(&cfg, 1e-3, 2);
+        let kinds = [KernelKind::Scalar, KernelKind::Auto];
 
         for opt in [OptKind::Sgd, OptKind::AdamW, OptKind::Lion] {
             for variant in [Variant::Reference, Variant::Flash,
                             Variant::WeightSplit, Variant::OptQuant,
                             Variant::NoCompand] {
                 let mut a = State::init(&theta0, n, opt, variant);
-                let mut b = a.clone();
-                scalar_ref::step_state(&mut a, &g, opt, variant, &h);
-                let mut part = Part::of_range(&mut b, 0, n, &g);
-                step_part(&mut part, opt, variant, &h);
-                assert_eq!(a.theta, b.theta, "{opt}/{variant} theta");
-                assert_eq!(a.theta_p, b.theta_p, "{opt}/{variant} theta_p");
-                assert_eq!(a.rho, b.rho, "{opt}/{variant} rho");
-                assert_eq!(a.mq, b.mq, "{opt}/{variant} mq");
-                assert_eq!(a.ms, b.ms, "{opt}/{variant} ms");
-                assert_eq!(a.vq, b.vq, "{opt}/{variant} vq");
-                assert_eq!(a.vs, b.vs, "{opt}/{variant} vs");
-                assert_eq!(a.m, b.m, "{opt}/{variant} m");
-                assert_eq!(a.v, b.v, "{opt}/{variant} v");
+                crate::optim::scalar_ref::step_state(&mut a, &g, opt,
+                                                     variant, &h);
+                for kind in kinds {
+                    let ks = kernel_set(kind).unwrap();
+                    let mut b = State::init(&theta0, n, opt, variant);
+                    let mut part = Part::of_range(&mut b, 0, n, &g);
+                    step_part(&mut part, opt, variant, &h, ks);
+                    states_eq(&a, &b,
+                              &format!("{opt}/{variant}/{}", ks.name));
+                }
             }
         }
+    }
+
+    /// Scratch is bounded by the tile, not the partition.
+    #[test]
+    fn scratch_is_o_tile_not_o_partition() {
+        let n = 64 * TILE; // a partition 64x the tile size
+        let theta0 = vec![0.05f32; n];
+        let g = vec![0.01f32; n];
+        let g: Vec<f32> = g
+            .iter()
+            .map(|&x| crate::formats::bf16::round_f32_to_bf16(x))
+            .collect();
+        let cfg = TrainConfig::default();
+        let h = Hyper::for_step(&cfg, 1e-3, 1);
+        let ks = kernel_set(KernelKind::Auto).unwrap();
+
+        reset_scratch_peak();
+        let mut st = State::init(&theta0, n, OptKind::AdamW,
+                                 Variant::Flash);
+        let mut part = Part::of_range(&mut st, 0, n, &g);
+        step_part(&mut part, OptKind::AdamW, Variant::Flash, &h, ks);
+        let peak = scratch_peak_bytes();
+        assert!(peak > 0);
+        // 3 fp32 streams (theta, m, v) of one tile each
+        assert_eq!(peak, (3 * TILE * 4) as u64);
+        assert!(peak < (n * 4) as u64 / 16,
+                "scratch {peak} not O(tile) for partition of {n}");
     }
 }

@@ -5,12 +5,16 @@
 //! `optim::scalar_ref` as a sequential whole-buffer mirror).  This
 //! subsystem gives the same semantics two native implementations:
 //!
-//! * [`ScalarBackend`] — the fused chain over a single partition,
-//!   driven by the `scalar_ref` update rules and the `formats` codecs;
+//! * [`ScalarBackend`] — the tiled fused chain over a single
+//!   partition, driven by the `scalar_ref` update rules and a resolved
+//!   SIMD [`KernelSet`] (`crate::kernels`: scalar or AVX2 codecs);
 //! * [`ParallelBackend`] — the same chain sharded into GROUP-aligned
 //!   partitions executed on a persistent worker pool (`pool.rs`),
 //!   touching only each partition's compact state slices (int8 codes +
-//!   f16 scales + split weights) plus a partition-sized f32 scratch.
+//!   f16 scales + split weights) plus O(tile) f32 scratch per thread
+//!   (`fused::TILE`).
+//!
+//! [`KernelSet`]: crate::kernels::KernelSet
 //!
 //! Both are bit-exact with each other and with
 //! `scalar_ref::step_state` (enforced by
@@ -30,18 +34,24 @@ pub mod scalar;
 
 use anyhow::{bail, Result};
 
-use crate::config::{BackendKind, OptKind, Variant};
+use crate::config::{BackendKind, KernelKind, OptKind, Variant};
 use crate::formats::GROUP;
 use crate::optim::hyper::Hyper;
 use crate::optim::state::State;
 
-pub use parallel::ParallelBackend;
+pub use parallel::{FusedJob, ParallelBackend};
 pub use partition::Part;
 pub use scalar::ScalarBackend;
 
 /// A native engine for the fused optimizer step over compact state.
 pub trait StepBackend: Send + Sync {
     fn name(&self) -> &'static str;
+
+    /// Downcast hook: the parallel backend exposes its worker pool for
+    /// batched multi-partition dispatch and sharded all-reduce.
+    fn as_parallel(&self) -> Option<&ParallelBackend> {
+        None
+    }
 
     /// Fused step over elements `[lo, hi)` of `state` (both bounds
     /// GROUP-aligned), with `g` the gradient slice for that range.
@@ -60,13 +70,26 @@ pub trait StepBackend: Send + Sync {
     }
 }
 
-/// Instantiate a native backend.  `threads` is only meaningful for
-/// `parallel` (0 = use `std::thread::available_parallelism`).
+/// Instantiate a native backend with auto-detected kernels.  `threads`
+/// is only meaningful for `parallel` (0 = use
+/// `std::thread::available_parallelism`).
 pub fn make_backend(kind: BackendKind, threads: usize)
                     -> Result<Box<dyn StepBackend>> {
+    make_backend_with(kind, threads, KernelKind::Auto)
+}
+
+/// Instantiate a native backend with an explicit SIMD kernel-set
+/// selection (`kernels = "auto" | "scalar" | "avx2"` in `TrainConfig`).
+pub fn make_backend_with(kind: BackendKind, threads: usize,
+                         kernels: KernelKind)
+                         -> Result<Box<dyn StepBackend>> {
     match kind {
-        BackendKind::Scalar => Ok(Box::new(ScalarBackend)),
-        BackendKind::Parallel => Ok(Box::new(ParallelBackend::new(threads))),
+        BackendKind::Scalar => {
+            Ok(Box::new(ScalarBackend::with_kernels(kernels)?))
+        }
+        BackendKind::Parallel => {
+            Ok(Box::new(ParallelBackend::with_kernels(threads, kernels)?))
+        }
         BackendKind::Hlo => bail!(
             "the hlo backend runs through the AOT executables \
              (BucketOptimizer::new), not a native StepBackend"
@@ -105,12 +128,30 @@ mod tests {
     }
 
     #[test]
+    fn factory_honors_kernel_selection() {
+        let be = make_backend_with(BackendKind::Scalar, 0,
+                                   KernelKind::Scalar)
+            .unwrap();
+        assert!(be.as_parallel().is_none());
+        let pb = make_backend_with(BackendKind::Parallel, 2,
+                                   KernelKind::Scalar)
+            .unwrap();
+        let par = pb.as_parallel().expect("parallel downcast");
+        assert_eq!(par.kernels_name(), "scalar");
+        if !crate::kernels::avx2_available() {
+            assert!(make_backend_with(BackendKind::Scalar, 0,
+                                      KernelKind::Avx2)
+                .is_err());
+        }
+    }
+
+    #[test]
     fn misaligned_range_rejected() {
         let st = State::init(&[0.5f32; 64], 64, OptKind::AdamW,
                              Variant::Flash);
         let mut s2 = st.clone();
         let g = vec![0f32; 10];
-        let be = ScalarBackend;
+        let be = ScalarBackend::default();
         let h = Hyper::for_step(&crate::config::TrainConfig::default(),
                                 1e-3, 1);
         assert!(be.step_range(&mut s2, 0, 10, &g, OptKind::AdamW,

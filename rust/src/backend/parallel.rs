@@ -2,12 +2,17 @@
 //! worker pool.
 //!
 //! Flash-attention-style fusion applied to the optimizer step: each
-//! worker loads its partition's compact state once (bf16+i8 split
-//! weights, int8 codes, f16 scales), runs the whole
-//! dequant → update → requant chain in partition-local scratch, and
-//! writes the compact formats back once.  No worker ever touches
-//! another worker's groups, so the result is bit-identical to the
-//! sequential backend regardless of thread count or scheduling.
+//! worker streams its shard's compact state through the tiled fused
+//! chain (`fused::step_part`) in O(tile) scratch, using the backend's
+//! resolved SIMD [`KernelSet`].  No worker ever touches another
+//! worker's groups, so the result is bit-identical to the sequential
+//! backend regardless of thread count or scheduling.
+//!
+//! [`step_parts`](ParallelBackend::step_parts) generalizes the per-step
+//! dispatch to *many disjoint partitions under one barrier*: the
+//! param-group optimizer hands every group's partition (each with its
+//! own resolved hyper vector) to a single pool dispatch, so small
+//! groups (biases, norms) no longer pay a full synchronization each.
 //!
 //! The pool threads live as long as the backend (see [`WorkerPool`]),
 //! so per-step cost is a channel send + barrier instead of a
@@ -22,13 +27,30 @@ use crate::backend::fused::step_part;
 use crate::backend::partition::Part;
 use crate::backend::pool::WorkerPool;
 use crate::backend::{validate_range, StepBackend};
-use crate::config::{OptKind, Variant};
+use crate::config::{KernelKind, OptKind, Variant};
 use crate::formats::GROUP;
+use crate::kernels::{kernel_set, KernelSet};
 use crate::optim::hyper::Hyper;
 use crate::optim::state::State;
 
+/// One fused-step work item for a batched dispatch: a partition view
+/// plus the update rule and hyper vector to apply to it.
+pub struct FusedJob<'a> {
+    pub part: Part<'a>,
+    pub opt: OptKind,
+    pub variant: Variant,
+    pub h: Hyper,
+}
+
+fn run_chunks(bin: &mut [FusedJob<'_>], ks: &'static KernelSet) {
+    for c in bin.iter_mut() {
+        step_part(&mut c.part, c.opt, c.variant, &c.h, ks);
+    }
+}
+
 pub struct ParallelBackend {
     threads: usize,
+    kernels: &'static KernelSet,
     /// persistent `threads - 1` worker threads (the calling thread
     /// always takes the first shard); the Mutex serializes steps and
     /// keeps the backend `Sync`
@@ -36,8 +58,16 @@ pub struct ParallelBackend {
 }
 
 impl ParallelBackend {
-    /// `threads == 0` selects `std::thread::available_parallelism()`.
+    /// `threads == 0` selects `std::thread::available_parallelism()`;
+    /// kernels auto-detect.
     pub fn new(threads: usize) -> ParallelBackend {
+        Self::with_kernels(threads, KernelKind::Auto)
+            .expect("auto kernel selection always resolves")
+    }
+
+    /// Like [`new`](Self::new) with an explicit kernel-set selection.
+    pub fn with_kernels(threads: usize, kind: KernelKind)
+                        -> Result<ParallelBackend> {
         let t = if threads == 0 {
             std::thread::available_parallelism()
                 .map(|n| n.get())
@@ -46,32 +76,103 @@ impl ParallelBackend {
             threads
         }
         .max(1);
-        ParallelBackend {
+        Ok(ParallelBackend {
             threads: t,
+            kernels: kernel_set(kind)?,
             pool: Mutex::new(WorkerPool::new(t - 1)),
-        }
+        })
     }
 
     pub fn threads(&self) -> usize {
         self.threads
     }
 
-    /// GROUP-aligned partition sizes for `n` elements over at most
-    /// `self.threads` workers (remainder groups spread over the head).
-    fn partition_sizes(&self, n: usize) -> Vec<usize> {
-        let n_groups = n / GROUP;
-        let t = self.threads.min(n_groups).max(1);
-        let base = n_groups / t;
-        let rem = n_groups % t;
-        (0..t)
-            .map(|i| (base + usize::from(i < rem)) * GROUP)
-            .collect()
+    /// Name of the resolved kernel set ("scalar" or "avx2").
+    pub fn kernels_name(&self) -> &'static str {
+        self.kernels.name
+    }
+
+    /// Run `f` with this backend's worker pool (e.g. to shard the
+    /// data-parallel gradient all-reduce over the same threads the
+    /// fused step uses).  Serializes against concurrent steps.
+    pub fn with_pool<R>(&self, f: impl FnOnce(&WorkerPool) -> R) -> R {
+        let pool = match self.pool.lock() {
+            Ok(p) => p,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        f(&pool)
+    }
+
+    /// Execute many disjoint fused-step partitions under **one** pool
+    /// dispatch and barrier.  Each job's part is split into
+    /// GROUP-aligned chunks; chunks are bin-packed across the threads
+    /// balanced by element count, so a batch of one big `decay` group
+    /// and a tiny `no_decay` group costs a single synchronization.
+    /// Bit-exact for any chunking: updates are element-wise and
+    /// requantization only ever sees whole groups.
+    pub fn step_parts(&self, jobs: Vec<FusedJob<'_>>) {
+        for j in &jobs {
+            // a misaligned part would make the group-granular chunking
+            // below lose its progress guarantee (and requantization
+            // needs whole groups anyway)
+            assert_eq!(j.part.len % GROUP, 0,
+                       "step_parts requires GROUP({GROUP})-aligned \
+                        partitions, got length {}", j.part.len);
+        }
+        let total_groups: usize =
+            jobs.iter().map(|j| j.part.len / GROUP).sum();
+        if total_groups == 0 {
+            return;
+        }
+        let t = self.threads.min(total_groups).max(1);
+        let target = total_groups.div_ceil(t); // groups per bin
+        let mut bins: Vec<Vec<FusedJob<'_>>> = Vec::with_capacity(t);
+        let mut cur: Vec<FusedJob<'_>> = Vec::new();
+        let mut cur_groups = 0usize;
+        for FusedJob { mut part, opt, variant, h } in jobs {
+            while part.len > 0 {
+                let take = (part.len / GROUP).min(target - cur_groups);
+                let (head, rest) = part.split_at(take * GROUP);
+                cur.push(FusedJob { part: head, opt, variant, h });
+                cur_groups += take;
+                part = rest;
+                if cur_groups == target {
+                    bins.push(std::mem::take(&mut cur));
+                    cur_groups = 0;
+                }
+            }
+        }
+        if !cur.is_empty() {
+            bins.push(cur);
+        }
+
+        let ks = self.kernels;
+        let mut own = bins.remove(0);
+        if bins.is_empty() {
+            run_chunks(&mut own, ks);
+            return;
+        }
+        let jobs_boxed: Vec<Box<dyn FnOnce() + Send + '_>> = bins
+            .into_iter()
+            .map(|mut bin| -> Box<dyn FnOnce() + Send + '_> {
+                Box::new(move || run_chunks(&mut bin, ks))
+            })
+            .collect();
+        let pool = match self.pool.lock() {
+            Ok(p) => p,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        pool.run_scoped(jobs_boxed, || run_chunks(&mut own, ks));
     }
 }
 
 impl StepBackend for ParallelBackend {
     fn name(&self) -> &'static str {
         "parallel"
+    }
+
+    fn as_parallel(&self) -> Option<&ParallelBackend> {
+        Some(self)
     }
 
     fn step_range(&self, state: &mut State, lo: usize, hi: usize,
@@ -81,27 +182,8 @@ impl StepBackend for ParallelBackend {
         if hi == lo {
             return Ok(());
         }
-        let sizes = self.partition_sizes(hi - lo);
-        let root = Part::of_range(state, lo, hi, g);
-        let mut parts = root.split_many(&sizes);
-        let h = *h;
-        // this thread takes the first shard; the pool gets the rest
-        let mut own = parts.remove(0);
-        if parts.is_empty() {
-            step_part(&mut own, opt, variant, &h);
-            return Ok(());
-        }
-        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = parts
-            .into_iter()
-            .map(|mut part| -> Box<dyn FnOnce() + Send + '_> {
-                Box::new(move || step_part(&mut part, opt, variant, &h))
-            })
-            .collect();
-        let pool = match self.pool.lock() {
-            Ok(p) => p,
-            Err(poisoned) => poisoned.into_inner(),
-        };
-        pool.run_scoped(jobs, || step_part(&mut own, opt, variant, &h));
+        let part = Part::of_range(state, lo, hi, g);
+        self.step_parts(vec![FusedJob { part, opt, variant, h: *h }]);
         Ok(())
     }
 }
@@ -136,20 +218,8 @@ mod tests {
     }
 
     #[test]
-    fn partition_sizes_cover_and_align() {
-        let be = ParallelBackend::new(4);
-        for n_groups in [1usize, 3, 4, 5, 17] {
-            let n = n_groups * GROUP;
-            let sizes = be.partition_sizes(n);
-            assert!(sizes.len() <= 4);
-            assert_eq!(sizes.iter().sum::<usize>(), n);
-            assert!(sizes.iter().all(|s| s % GROUP == 0 && *s > 0));
-        }
-    }
-
-    #[test]
     fn parallel_matches_scalar_on_uneven_shards() {
-        // 5 groups over 3 threads -> shard sizes 2/2/1 groups
+        // 5 groups over 3 threads -> uneven chunking
         let n = 5 * GROUP;
         let mut rng = Rng::new(11);
         let theta0: Vec<f32> =
@@ -163,7 +233,7 @@ mod tests {
         let h = Hyper::for_step(&TrainConfig::default(), 1e-3, 1);
         let mut a = State::init(&theta0, n, OptKind::AdamW, Variant::Flash);
         let mut b = a.clone();
-        ScalarBackend
+        ScalarBackend::default()
             .step_full(&mut a, &g, OptKind::AdamW, Variant::Flash, &h)
             .unwrap();
         ParallelBackend::new(3)
@@ -181,7 +251,7 @@ mod tests {
         let mut a = State::init(&theta0, n, OptKind::Sgd,
                                 Variant::Reference);
         let mut b = a.clone();
-        ScalarBackend
+        ScalarBackend::default()
             .step_full(&mut a, &g, OptKind::Sgd, Variant::Reference, &h)
             .unwrap();
         ParallelBackend::new(16)
@@ -202,6 +272,7 @@ mod tests {
                                 Variant::Flash);
         let mut b = a.clone();
         let par = ParallelBackend::new(4);
+        let sc = ScalarBackend::default();
         for t in 1..=50usize {
             let g: Vec<f32> = (0..n)
                 .map(|_| {
@@ -210,12 +281,69 @@ mod tests {
                 })
                 .collect();
             let h = Hyper::for_step(&TrainConfig::default(), 1e-3, t);
-            ScalarBackend
-                .step_full(&mut a, &g, OptKind::AdamW, Variant::Flash, &h)
+            sc.step_full(&mut a, &g, OptKind::AdamW, Variant::Flash, &h)
                 .unwrap();
             par.step_full(&mut b, &g, OptKind::AdamW, Variant::Flash, &h)
                 .unwrap();
         }
         assert_states_bit_equal(&a, &b, "adamw/flash 50 steps");
+    }
+
+    #[test]
+    fn batched_multi_part_dispatch_matches_separate_steps() {
+        // two disjoint states stepped under one barrier == stepped
+        // separately, including different hyper vectors per job
+        let n1 = 5 * GROUP;
+        let n2 = 2 * GROUP;
+        let mut rng = Rng::new(17);
+        let t1: Vec<f32> =
+            (0..n1).map(|_| rng.normal() as f32 * 0.1).collect();
+        let t2: Vec<f32> =
+            (0..n2).map(|_| rng.normal() as f32 * 0.1).collect();
+        let g1: Vec<f32> = (0..n1)
+            .map(|_| {
+                crate::formats::bf16::round_f32_to_bf16(
+                    rng.normal() as f32 * 0.01)
+            })
+            .collect();
+        let g2: Vec<f32> = (0..n2)
+            .map(|_| {
+                crate::formats::bf16::round_f32_to_bf16(
+                    rng.normal() as f32 * 0.01)
+            })
+            .collect();
+        let cfg = TrainConfig::default();
+        let ha = Hyper::for_step(&cfg, 1e-3, 1);
+        let mut hb = ha;
+        hb.wd = 0.0;
+
+        let mut a1 = State::init(&t1, n1, OptKind::AdamW, Variant::Flash);
+        let mut a2 = State::init(&t2, n2, OptKind::AdamW, Variant::Flash);
+        let mut b1 = a1.clone();
+        let mut b2 = a2.clone();
+
+        let par = ParallelBackend::new(3);
+        par.step_full(&mut a1, &g1, OptKind::AdamW, Variant::Flash, &ha)
+            .unwrap();
+        par.step_full(&mut a2, &g2, OptKind::AdamW, Variant::Flash, &hb)
+            .unwrap();
+
+        let jobs = vec![
+            FusedJob {
+                part: Part::of_range(&mut b1, 0, n1, &g1),
+                opt: OptKind::AdamW,
+                variant: Variant::Flash,
+                h: ha,
+            },
+            FusedJob {
+                part: Part::of_range(&mut b2, 0, n2, &g2),
+                opt: OptKind::AdamW,
+                variant: Variant::Flash,
+                h: hb,
+            },
+        ];
+        par.step_parts(jobs);
+        assert_states_bit_equal(&a1, &b1, "batched part 1");
+        assert_states_bit_equal(&a2, &b2, "batched part 2");
     }
 }

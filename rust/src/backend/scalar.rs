@@ -1,20 +1,49 @@
-//! Sequential native backend: the fused chain over one partition.
+//! Sequential native backend: the tiled fused chain over one partition.
 
 use anyhow::Result;
 
 use crate::backend::fused::step_part;
 use crate::backend::partition::Part;
 use crate::backend::{validate_range, StepBackend};
-use crate::config::{OptKind, Variant};
+use crate::config::{KernelKind, OptKind, Variant};
+use crate::kernels::{kernel_set, KernelSet};
 use crate::optim::hyper::Hyper;
 use crate::optim::state::State;
 
 /// Single-threaded fused step over the whole range, built on the
-/// `scalar_ref` update rules.  Serves as the in-process reference the
-/// differential suite pins [`ParallelBackend`] against.
+/// `scalar_ref` update rules and a [`KernelSet`] resolved once at
+/// construction.  `ScalarBackend::default()` auto-detects the kernel
+/// set; `with_kernels` pins one for differential testing.
+///
+/// Serves as the in-process reference the differential suite pins
+/// [`ParallelBackend`] against.
 ///
 /// [`ParallelBackend`]: crate::backend::ParallelBackend
-pub struct ScalarBackend;
+pub struct ScalarBackend {
+    kernels: &'static KernelSet,
+}
+
+impl Default for ScalarBackend {
+    fn default() -> ScalarBackend {
+        ScalarBackend {
+            kernels: kernel_set(KernelKind::Auto)
+                .expect("auto kernel selection always resolves"),
+        }
+    }
+}
+
+impl ScalarBackend {
+    /// Build with an explicit kernel-set selection (errors when the
+    /// requested set is unsupported on this CPU).
+    pub fn with_kernels(kind: KernelKind) -> Result<ScalarBackend> {
+        Ok(ScalarBackend { kernels: kernel_set(kind)? })
+    }
+
+    /// Name of the resolved kernel set ("scalar" or "avx2").
+    pub fn kernels_name(&self) -> &'static str {
+        self.kernels.name
+    }
+}
 
 impl StepBackend for ScalarBackend {
     fn name(&self) -> &'static str {
@@ -26,7 +55,7 @@ impl StepBackend for ScalarBackend {
                   -> Result<()> {
         validate_range(state, lo, hi, g)?;
         let mut part = Part::of_range(state, lo, hi, g);
-        step_part(&mut part, opt, variant, h);
+        step_part(&mut part, opt, variant, h, self.kernels);
         Ok(())
     }
 }
@@ -53,7 +82,7 @@ mod tests {
             })
             .collect();
         let h = Hyper::for_step(&TrainConfig::default(), 1e-3, 1);
-        let be = ScalarBackend;
+        let be = ScalarBackend::default();
 
         let mut whole = State::init(&theta0, n, OptKind::AdamW,
                                     Variant::Flash);
@@ -76,5 +105,18 @@ mod tests {
         assert_eq!(whole.ms, split.ms);
         assert_eq!(whole.vq, split.vq);
         assert_eq!(whole.vs, split.vs);
+    }
+
+    #[test]
+    fn explicit_kernel_selection() {
+        let sc = ScalarBackend::with_kernels(KernelKind::Scalar).unwrap();
+        assert_eq!(sc.kernels_name(), "scalar");
+        let auto = ScalarBackend::default();
+        assert!(auto.kernels_name() == "scalar"
+                || auto.kernels_name() == "avx2");
+        if !crate::kernels::avx2_available() {
+            assert!(ScalarBackend::with_kernels(KernelKind::Avx2)
+                .is_err());
+        }
     }
 }

@@ -146,6 +146,47 @@ impl fmt::Display for BackendKind {
     }
 }
 
+/// Which SIMD kernel set drives the native fused-step codecs
+/// (companding, weight splitting, bf16/fp16 conversion).  Orthogonal to
+/// `BackendKind`: the backend picks *how the chain is orchestrated*
+/// (sequential vs sharded-on-threads), the kernel set picks *how each
+/// codec's inner loop executes*.  All sets are bit-exact to each other.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// runtime detection: AVX2 where the CPU supports it, else scalar
+    Auto,
+    /// portable scalar/autovectorized loops (the reference)
+    Scalar,
+    /// x86-64 AVX2 intrinsics (requires runtime support; selecting it
+    /// on an unsupported CPU is a configuration error)
+    Avx2,
+}
+
+impl KernelKind {
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(KernelKind::Auto),
+            "scalar" | "portable" => Some(KernelKind::Scalar),
+            "avx2" | "simd" => Some(KernelKind::Avx2),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Auto => "auto",
+            KernelKind::Scalar => "scalar",
+            KernelKind::Avx2 => "avx2",
+        }
+    }
+}
+
+impl fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// One parameter-group override block: a named selector over the model
 /// layout plus per-group hyperparameter overrides (`None` inherits the
 /// run default).  Resolved against a `ModelInfo` by
@@ -267,6 +308,8 @@ pub struct TrainConfig {
     pub backend: BackendKind,
     /// worker threads for the parallel backend (0 = all cores)
     pub threads: usize,
+    /// SIMD kernel set for the native codecs (pin `scalar` to debug)
+    pub kernels: KernelKind,
     /// eagerly free gradient buckets during the optimizer pass
     pub grad_release: bool,
     /// simulated data-parallel worker count (gradients allreduced)
@@ -299,6 +342,7 @@ impl Default for TrainConfig {
             bucket: 65536,
             backend: BackendKind::Hlo,
             threads: 0,
+            kernels: KernelKind::Auto,
             grad_release: true,
             workers: 1,
             groups: Vec::new(),
@@ -339,6 +383,10 @@ impl TrainConfig {
                 .unwrap_or_else(|| panic!("unknown backend {b:?}"));
         }
         self.threads = args.get_usize("threads", self.threads);
+        if let Some(k) = args.get("kernels") {
+            self.kernels = KernelKind::parse(k)
+                .unwrap_or_else(|| panic!("unknown kernel set {k:?}"));
+        }
         self.workers = args.get_usize("workers", self.workers);
         if let Some(g) = args.get("groups") {
             self.groups = match g {
@@ -427,6 +475,11 @@ impl TrainConfig {
                         .ok_or("bad backend")?
                 }
                 "threads" => c.threads = v.as_usize().ok_or("threads")?,
+                "kernels" => {
+                    c.kernels = KernelKind::parse(
+                        v.as_str().ok_or("kernels")?)
+                        .ok_or("bad kernels")?
+                }
                 "grad_release" => {
                     c.grad_release = matches!(v, Json::Bool(true))
                 }
@@ -476,6 +529,7 @@ impl TrainConfig {
         m.insert("bucket".into(), Json::Num(self.bucket as f64));
         m.insert("backend".into(), Json::Str(self.backend.name().into()));
         m.insert("threads".into(), Json::Num(self.threads as f64));
+        m.insert("kernels".into(), Json::Str(self.kernels.name().into()));
         m.insert("grad_release".into(), Json::Bool(self.grad_release));
         m.insert("workers".into(), Json::Num(self.workers as f64));
         m.insert("groups".into(),
@@ -554,6 +608,29 @@ mod tests {
         assert!(BackendKind::parse("gpu").is_none());
         assert!(BackendKind::Parallel.is_native());
         assert!(!BackendKind::Hlo.is_native());
+    }
+
+    #[test]
+    fn kernel_selection_roundtrips() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.kernels, KernelKind::Auto);
+        c.kernels = KernelKind::Avx2;
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.kernels, KernelKind::Avx2);
+
+        let args = Args::parse_from(
+            "--kernels scalar".split_whitespace().map(String::from));
+        let mut c3 = TrainConfig::default();
+        c3.apply_args(&args);
+        assert_eq!(c3.kernels, KernelKind::Scalar);
+
+        assert_eq!(KernelKind::parse("AVX2"), Some(KernelKind::Avx2));
+        assert_eq!(KernelKind::parse("simd"), Some(KernelKind::Avx2));
+        assert_eq!(KernelKind::parse("auto"), Some(KernelKind::Auto));
+        assert!(KernelKind::parse("neon").is_none());
+
+        let j = Json::parse(r#"{"kernels": "sse9"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
     }
 
     #[test]

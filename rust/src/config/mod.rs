@@ -3,6 +3,6 @@
 pub mod experiment;
 pub mod json;
 
-pub use experiment::{BackendKind, GroupConfig, OptKind, TrainConfig,
-                     Variant};
+pub use experiment::{BackendKind, GroupConfig, KernelKind, OptKind,
+                     TrainConfig, Variant};
 pub use json::Json;

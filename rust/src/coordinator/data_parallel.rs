@@ -7,6 +7,9 @@
 //! all-gathered in a sharded deployment; ρ and the quantized states stay
 //! local to the optimizer shard.
 
+use crate::backend::pool::WorkerPool;
+use crate::formats::GROUP;
+
 /// In-place mean all-reduce across worker gradient buffers.
 /// Returns the reduced gradient in `acc` (worker 0's buffer).
 pub fn allreduce_mean(workers: &mut Vec<Vec<f32>>) -> Vec<f32> {
@@ -24,6 +27,75 @@ pub fn allreduce_mean(workers: &mut Vec<Vec<f32>>) -> Vec<f32> {
     }
     for a in acc.iter_mut() {
         *a /= k;
+    }
+    acc
+}
+
+/// [`allreduce_mean`] sharded over a worker pool: the element range is
+/// cut into GROUP-aligned shards (the same alignment rule the step
+/// backend's partitions use; the non-aligned tail rides with the last
+/// shard), one shard per pool worker plus the calling thread.
+///
+/// **Bit-exact to the serial reduction**: each element still
+/// accumulates worker 1, then 2, … then divides by k — sharding only
+/// changes *which thread* owns an element, never the order of its
+/// additions.
+pub fn allreduce_mean_sharded(workers: &mut Vec<Vec<f32>>,
+                              pool: &WorkerPool) -> Vec<f32> {
+    assert!(!workers.is_empty());
+    let n = workers[0].len();
+    for w in workers.iter() {
+        assert_eq!(w.len(), n, "gradient length mismatch across workers");
+    }
+    let k = workers.len() as f32;
+    let mut acc = std::mem::take(&mut workers[0]);
+    let rest: &[Vec<f32>] = &workers[1..];
+
+    let n_groups = n / GROUP;
+    let t = (pool.workers() + 1).min(n_groups).max(1);
+    let base = n_groups / t;
+    let rem = n_groups % t;
+    let mut sizes: Vec<usize> = (0..t)
+        .map(|i| (base + usize::from(i < rem)) * GROUP)
+        .collect();
+    *sizes.last_mut().unwrap() += n % GROUP;
+
+    // split acc into disjoint shard views with their flat offsets
+    let mut shards: Vec<(&mut [f32], usize)> = Vec::with_capacity(t);
+    {
+        let mut restacc: &mut [f32] = &mut acc;
+        let mut off = 0usize;
+        for &sz in &sizes {
+            let (head, tail) = restacc.split_at_mut(sz);
+            shards.push((head, off));
+            off += sz;
+            restacc = tail;
+        }
+    }
+
+    let reduce = |slice: &mut [f32], off: usize| {
+        for w in rest {
+            let src = &w[off..off + slice.len()];
+            for (a, &b) in slice.iter_mut().zip(src) {
+                *a += b;
+            }
+        }
+        for a in slice.iter_mut() {
+            *a /= k;
+        }
+    };
+    let (own_slice, own_off) = shards.remove(0);
+    if shards.is_empty() {
+        reduce(own_slice, own_off);
+    } else {
+        let reduce_ref = &reduce;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = shards
+            .into_iter()
+            .map(|(slice, off)| -> Box<dyn FnOnce() + Send + '_> {
+                Box::new(move || reduce_ref(slice, off))
+            })
+            .collect();
+        pool.run_scoped(jobs, || reduce_ref(own_slice, own_off));
     }
     acc
 }
@@ -113,6 +185,45 @@ mod tests {
             for (a, b) in ring.iter().zip(&mean) {
                 assert!((a - b).abs() < 1e-4, "k={k}: {a} vs {b}");
             }
+        }
+    }
+
+    #[test]
+    fn sharded_matches_serial_bit_exactly() {
+        // bit-exactness, not tolerance: per-element addition order is
+        // identical, so every f32 must come out with the same bits
+        let pool = WorkerPool::new(3);
+        for k in [1usize, 2, 3, 5] {
+            // lengths around GROUP boundaries incl. a non-aligned tail
+            for n in [1usize, GROUP - 1, GROUP, 4 * GROUP,
+                      7 * GROUP + 13, 257] {
+                let w = make_workers(k, n, (k * 1000 + n) as u64);
+                let mut serial_in = w.clone();
+                let serial = allreduce_mean(&mut serial_in);
+                let mut sharded_in = w.clone();
+                let sharded =
+                    allreduce_mean_sharded(&mut sharded_in, &pool);
+                assert_eq!(serial.len(), sharded.len());
+                for (i, (a, b)) in
+                    serial.iter().zip(&sharded).enumerate()
+                {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "k={k} n={n} elem {i}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_works_on_zero_worker_pool() {
+        let pool = WorkerPool::new(0);
+        let w = make_workers(3, 100, 9);
+        let mut a = w.clone();
+        let mut b = w.clone();
+        let serial = allreduce_mean(&mut a);
+        let sharded = allreduce_mean_sharded(&mut b, &pool);
+        for (x, y) in serial.iter().zip(&sharded) {
+            assert_eq!(x.to_bits(), y.to_bits());
         }
     }
 

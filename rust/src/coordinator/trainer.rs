@@ -10,8 +10,10 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::backend::StepBackend;
 use crate::config::{BackendKind, TrainConfig, Variant};
-use crate::coordinator::data_parallel::allreduce_mean;
+use crate::coordinator::data_parallel::{allreduce_mean,
+                                        allreduce_mean_sharded};
 use crate::coordinator::metrics::{EvalRecord, Metrics, StepRecord};
 use crate::coordinator::schedule::Schedule;
 use crate::data::corpus::{Corpus, CorpusConfig};
@@ -74,9 +76,9 @@ impl Trainer {
             BackendKind::Hlo => FlashOptimizer::hlo(
                 rt, manifest, cfg.optimizer, cfg.variant, cfg.bucket,
                 &theta0, specs, defaults)?,
-            kind => FlashOptimizer::native(
+            kind => FlashOptimizer::native_with_kernels(
                 cfg.optimizer, cfg.variant, cfg.bucket, &theta0, specs,
-                defaults, kind, cfg.threads)?,
+                defaults, kind, cfg.threads, cfg.kernels)?,
         };
 
         let data = match model.kind {
@@ -204,8 +206,16 @@ impl Trainer {
         }
         let loss = losses / self.cfg.workers.max(1) as f64;
 
-        // --- allreduce -----------------------------------------------------
-        let grads = allreduce_mean(&mut self.worker_grads);
+        // --- allreduce (sharded over the step backend's worker pool
+        //     when one exists; bit-exact to the serial reduction) -----------
+        let backend = self.opt.step_backend();
+        let grads = match backend.as_deref().and_then(|b| b.as_parallel())
+        {
+            Some(par) => par.with_pool(|pool| {
+                allreduce_mean_sharded(&mut self.worker_grads, pool)
+            }),
+            None => allreduce_mean(&mut self.worker_grads),
+        };
         let wcat = if self.cfg.grad_release {
             Category::Transient
         } else {
@@ -229,6 +239,14 @@ impl Trainer {
             self.tracker.alloc(Category::Gradients, "live_bucket",
                                (bucket as u64) * gbytes);
         }
+        // the batched multi-group fast path stages per-group padded
+        // gradient copies for its single pool dispatch — register them
+        // so the fast path never under-reports peak memory
+        let staged = self.opt.staged_grad_bytes();
+        if staged > 0 {
+            self.tracker.alloc(Category::Transient,
+                               "group_grad_staging", staged);
+        }
         let tracker = &mut self.tracker;
         self.opt.step(&grads, lr, self.step, |_gi, _bi| {
             if release {
@@ -239,6 +257,9 @@ impl Trainer {
                               (bucket as u64) * gbytes);
             }
         })?;
+        if staged > 0 {
+            self.tracker.free(Category::Transient, "group_grad_staging");
+        }
         if release {
             self.tracker.free(Category::Gradients, "live_bucket");
         } else {

@@ -34,8 +34,11 @@ fn group_absmax(g: &[f32]) -> f32 {
     s
 }
 
+/// Shared with the SIMD kernel layer (`kernels::avx2` computes the
+/// group absmax vectorized but must store/normalize by the exact same
+/// f16-quantized scale).
 #[inline]
-fn scale_pair(s: f32) -> (u16, f32) {
+pub(crate) fn scale_pair(s: f32) -> (u16, f32) {
     // saturate to f16 max (an inf scale would turn dequantized zeros
     // into NaN), then store in f16 and use the *stored* value for
     // normalization (matches the kernel: where(s16 > 0, f32(s16), 1.0))
@@ -67,6 +70,8 @@ pub fn quant_momentum(m: &[f32], q: &mut [i8], scales: &mut [u16]) {
 pub fn dequant_momentum(q: &[i8], scales: &[u16], out: &mut [f32]) {
     assert_eq!(q.len() % GROUP, 0);
     assert_eq!(out.len(), q.len());
+    assert_eq!(scales.len() * GROUP, q.len(),
+               "scales must cover q exactly (one f16 scale per group)");
     for gi in 0..scales.len() {
         let s = fp16::f16_bits_to_f32(scales[gi]);
         for j in 0..GROUP {
@@ -99,6 +104,8 @@ pub fn quant_variance(v: &[f32], q: &mut [u8], scales: &mut [u16]) {
 pub fn dequant_variance(q: &[u8], scales: &[u16], out: &mut [f32]) {
     assert_eq!(q.len() % GROUP, 0);
     assert_eq!(out.len(), q.len());
+    assert_eq!(scales.len() * GROUP, q.len(),
+               "scales must cover q exactly (one f16 scale per group)");
     for gi in 0..scales.len() {
         let s = fp16::f16_bits_to_f32(scales[gi]);
         for j in 0..GROUP {
@@ -111,6 +118,9 @@ pub fn dequant_variance(q: &[u8], scales: &[u16], out: &mut [f32]) {
 // Linear (no companding) ablation variants ---------------------------------
 
 pub fn quant_momentum_linear(m: &[f32], q: &mut [i8], scales: &mut [u16]) {
+    assert_eq!(m.len() % GROUP, 0);
+    assert_eq!(q.len(), m.len());
+    assert_eq!(scales.len(), m.len() / GROUP);
     for (gi, chunk) in m.chunks_exact(GROUP).enumerate() {
         let (s16, safe) = scale_pair(group_absmax(chunk));
         scales[gi] = s16;
@@ -122,6 +132,10 @@ pub fn quant_momentum_linear(m: &[f32], q: &mut [i8], scales: &mut [u16]) {
 }
 
 pub fn dequant_momentum_linear(q: &[i8], scales: &[u16], out: &mut [f32]) {
+    assert_eq!(q.len() % GROUP, 0);
+    assert_eq!(out.len(), q.len());
+    assert_eq!(scales.len() * GROUP, q.len(),
+               "scales must cover q exactly (one f16 scale per group)");
     for gi in 0..scales.len() {
         let s = fp16::f16_bits_to_f32(scales[gi]);
         for j in 0..GROUP {
@@ -131,6 +145,9 @@ pub fn dequant_momentum_linear(q: &[i8], scales: &[u16], out: &mut [f32]) {
 }
 
 pub fn quant_variance_linear(v: &[f32], q: &mut [u8], scales: &mut [u16]) {
+    assert_eq!(v.len() % GROUP, 0);
+    assert_eq!(q.len(), v.len());
+    assert_eq!(scales.len(), v.len() / GROUP);
     for (gi, chunk) in v.chunks_exact(GROUP).enumerate() {
         let (s16, safe) = scale_pair(group_absmax(chunk));
         scales[gi] = s16;
@@ -142,6 +159,10 @@ pub fn quant_variance_linear(v: &[f32], q: &mut [u8], scales: &mut [u16]) {
 }
 
 pub fn dequant_variance_linear(q: &[u8], scales: &[u16], out: &mut [f32]) {
+    assert_eq!(q.len() % GROUP, 0);
+    assert_eq!(out.len(), q.len());
+    assert_eq!(scales.len() * GROUP, q.len(),
+               "scales must cover q exactly (one f16 scale per group)");
     for gi in 0..scales.len() {
         let s = fp16::f16_bits_to_f32(scales[gi]);
         for j in 0..GROUP {
@@ -250,6 +271,51 @@ mod tests {
         let mut out = vec![1f32; 64];
         dequant_momentum(&q, &s, &mut out);
         assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "scales must cover q exactly")]
+    fn dequant_momentum_rejects_short_scales() {
+        let q = vec![0i8; 2 * GROUP];
+        let s = vec![0u16; 1]; // one scale missing
+        let mut out = vec![0f32; 2 * GROUP];
+        dequant_momentum(&q, &s, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "scales must cover q exactly")]
+    fn dequant_variance_rejects_long_scales() {
+        let q = vec![0u8; GROUP];
+        let s = vec![0u16; 3]; // stale over-long scale buffer
+        let mut out = vec![0f32; GROUP];
+        dequant_variance(&q, &s, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "scales must cover q exactly")]
+    fn dequant_momentum_linear_rejects_mismatch() {
+        let q = vec![0i8; 2 * GROUP];
+        let s = vec![0u16; 1];
+        let mut out = vec![0f32; 2 * GROUP];
+        dequant_momentum_linear(&q, &s, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "scales must cover q exactly")]
+    fn dequant_variance_linear_rejects_mismatch() {
+        let q = vec![0u8; 2 * GROUP];
+        let s = vec![0u16; 4];
+        let mut out = vec![0f32; 2 * GROUP];
+        dequant_variance_linear(&q, &s, &mut out);
+    }
+
+    #[test]
+    #[should_panic]
+    fn quant_linear_rejects_wrong_scale_len() {
+        let m = vec![0f32; GROUP];
+        let mut q = vec![0i8; GROUP];
+        let mut s = vec![0u16; 2];
+        quant_momentum_linear(&m, &mut q, &mut s);
     }
 
     #[test]

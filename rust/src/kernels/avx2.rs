@@ -1,0 +1,662 @@
+//! AVX2 batch kernels (`core::arch::x86_64`, runtime-dispatched).
+//!
+//! Every kernel here performs the **exact same sequence of IEEE-754
+//! operations** as its scalar counterpart in `formats/`, so outputs are
+//! bit-identical on identical inputs:
+//!
+//! * division stays division (`vdivps`), never a reciprocal estimate;
+//! * `round_ties_even` maps to `vroundps` with
+//!   `_MM_FROUND_TO_NEAREST_INT` (static nearest-even, MXCSR ignored);
+//! * `f32::clamp`'s NaN-propagation and Rust's saturating
+//!   NaN-goes-to-zero `as` casts are emulated lane-wise with ordered
+//!   compares and blends;
+//! * the scalar NaN-skipping group-absmax (`a > s` is false for NaN) is
+//!   reproduced with `_CMP_GT_OQ` + blend before the horizontal max;
+//! * no FMA contraction anywhere (the scalar code has none);
+//! * the fp16/bf16 converters are integer re-implementations of the
+//!   from-scratch converters in `formats::{fp16, bf16}` — **not** the
+//!   F16C instructions, whose NaN quieting differs from our scalar
+//!   reference on signaling-NaN payloads.
+//!
+//! `rust/tests/kernel_equivalence.rs` checks all of this exhaustively.
+//!
+//! Slices that are not a multiple of the vector width finish on the
+//! scalar reference functions, which is trivially bit-exact.
+//!
+//! # Safety
+//!
+//! All `unsafe fn`s in this module require AVX2; they are only ever
+//! reached through [`dispatch`], whose wrappers are handed out by
+//! `kernels::kernel_set` after `is_x86_feature_detected!("avx2")`.
+
+// the safety contract above covers every unsafe fn here
+#![allow(clippy::missing_safety_doc)]
+
+use std::arch::x86_64::*;
+
+use crate::formats::weight_split::{Correction, Target};
+use crate::formats::{bf16, companding, fp16, weight_split, GROUP};
+
+// the group kernels hard-code GROUP = 4 × 8 f32 lanes
+const _: () = assert!(GROUP == 32);
+
+// --- lane helpers --------------------------------------------------------
+
+#[target_feature(enable = "avx2")]
+unsafe fn abs_ps(x: __m256) -> __m256 {
+    _mm256_and_ps(x, _mm256_set1_ps(f32::from_bits(0x7FFF_FFFF)))
+}
+
+/// `round_ties_even`, 8 lanes (static RNE, exceptions suppressed).
+#[target_feature(enable = "avx2")]
+unsafe fn round_ps(x: __m256) -> __m256 {
+    _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(x)
+}
+
+/// `x.clamp(lo, hi)` with scalar `f32::clamp` semantics: NaN lanes stay
+/// NaN (a plain min/max chain would turn NaN into a bound instead).
+#[target_feature(enable = "avx2")]
+unsafe fn clamp_ps(x: __m256, lo: f32, hi: f32) -> __m256 {
+    let l = _mm256_set1_ps(lo);
+    let h = _mm256_set1_ps(hi);
+    let x = _mm256_blendv_ps(x, l, _mm256_cmp_ps::<_CMP_LT_OQ>(x, l));
+    _mm256_blendv_ps(x, h, _mm256_cmp_ps::<_CMP_GT_OQ>(x, h))
+}
+
+/// Rust `as`-cast semantics for values already clamped into the target
+/// integer range (or NaN): NaN lanes become 0, everything else converts
+/// exactly.
+#[target_feature(enable = "avx2")]
+unsafe fn cvt_clamped_epi32(x: __m256) -> __m256i {
+    let nan = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_UNORD_Q>(x, x));
+    _mm256_andnot_si256(nan, _mm256_cvtps_epi32(x))
+}
+
+/// Exact 2^k per lane; every call site keeps k inside the f32 normal
+/// range (see the exponent algebra in `formats::weight_split`).
+#[target_feature(enable = "avx2")]
+unsafe fn pow2_ps(k: __m256i) -> __m256 {
+    _mm256_castsi256_ps(_mm256_slli_epi32::<23>(
+        _mm256_add_epi32(k, _mm256_set1_epi32(127))))
+}
+
+/// Horizontal max of 8 non-NaN lanes.
+#[target_feature(enable = "avx2")]
+unsafe fn hmax_ps(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let m = _mm_max_ps(lo, hi);
+    let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
+    let m = _mm_max_ss(m, _mm_shuffle_ps::<1>(m, m));
+    _mm_cvtss_f32(m)
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn load8_u16_epi32(p: *const u16) -> __m256i {
+    _mm256_cvtepu16_epi32(_mm_loadu_si128(p as *const __m128i))
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn load8_i8_epi32(p: *const i8) -> __m256i {
+    _mm256_cvtepi8_epi32(_mm_loadl_epi64(p as *const __m128i))
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn load8_u8_epi32(p: *const u8) -> __m256i {
+    _mm256_cvtepu8_epi32(_mm_loadl_epi64(p as *const __m128i))
+}
+
+/// 2 × 8 i32 lanes (u16-range values) → 16 u16, order-preserving.
+#[target_feature(enable = "avx2")]
+unsafe fn pack2_epi32_u16(a: __m256i, b: __m256i) -> __m256i {
+    _mm256_permute4x64_epi64::<0b1101_1000>(_mm256_packus_epi32(a, b))
+}
+
+/// 4 × 8 i32 lanes (i8-range values) → 32 i8, order-preserving.
+#[target_feature(enable = "avx2")]
+unsafe fn pack4_epi32_i8(a: __m256i, b: __m256i, c: __m256i,
+                         d: __m256i) -> __m256i {
+    let ab = _mm256_packs_epi32(a, b);
+    let cd = _mm256_packs_epi32(c, d);
+    let r = _mm256_packs_epi16(ab, cd);
+    _mm256_permutevar8x32_epi32(r, _mm256_setr_epi32(0, 4, 1, 5, 2, 6,
+                                                     3, 7))
+}
+
+/// 4 × 8 i32 lanes (u8-range values) → 32 u8, order-preserving.
+#[target_feature(enable = "avx2")]
+unsafe fn pack4_epi32_u8(a: __m256i, b: __m256i, c: __m256i,
+                         d: __m256i) -> __m256i {
+    let ab = _mm256_packs_epi32(a, b);
+    let cd = _mm256_packs_epi32(c, d);
+    let r = _mm256_packus_epi16(ab, cd);
+    _mm256_permutevar8x32_epi32(r, _mm256_setr_epi32(0, 4, 1, 5, 2, 6,
+                                                     3, 7))
+}
+
+/// Scalar `group_absmax` (abs-max skipping NaN) over one GROUP of 32.
+#[target_feature(enable = "avx2")]
+unsafe fn group_absmax32(p: *const f32) -> f32 {
+    let mut acc = _mm256_setzero_ps();
+    for k in 0..4 {
+        let a = abs_ps(_mm256_loadu_ps(p.add(8 * k)));
+        let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(a, acc);
+        acc = _mm256_blendv_ps(acc, a, gt);
+    }
+    hmax_ps(acc)
+}
+
+// --- bf16 lane codecs ----------------------------------------------------
+
+/// `bf16::f32_to_bf16_bits`, 8 lanes (result in the low 16 bits).
+#[target_feature(enable = "avx2")]
+unsafe fn f32_to_bf16_epi32(x: __m256) -> __m256i {
+    let bits = _mm256_castps_si256(x);
+    let nan = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_UNORD_Q>(x, x));
+    let top = _mm256_srli_epi32::<16>(bits);
+    let rb = _mm256_and_si256(top, _mm256_set1_epi32(1));
+    let rounded = _mm256_srli_epi32::<16>(_mm256_add_epi32(
+        _mm256_add_epi32(bits, _mm256_set1_epi32(0x7FFF)), rb));
+    let qnan = _mm256_or_si256(top, _mm256_set1_epi32(0x40));
+    _mm256_blendv_epi8(rounded, qnan, nan)
+}
+
+/// `bf16::bf16_bits_to_f32`, 8 lanes.
+#[target_feature(enable = "avx2")]
+unsafe fn bf16_epi32_to_ps(b: __m256i) -> __m256 {
+    _mm256_castsi256_ps(_mm256_slli_epi32::<16>(b))
+}
+
+/// `bf16::ulp_exponent`, 8 lanes of bf16 bits.
+#[target_feature(enable = "avx2")]
+unsafe fn bf16_ulp_exp_epi32(b: __m256i) -> __m256i {
+    let exp = _mm256_and_si256(_mm256_srli_epi32::<7>(b),
+                               _mm256_set1_epi32(0xFF));
+    let norm = _mm256_sub_epi32(exp, _mm256_set1_epi32(134));
+    let pos = _mm256_cmpgt_epi32(exp, _mm256_setzero_si256());
+    _mm256_blendv_epi8(_mm256_set1_epi32(-133), norm, pos)
+}
+
+// --- 16-bit float slice conversions --------------------------------------
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn f32_to_bf16(src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len());
+    let n = src.len();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let a = f32_to_bf16_epi32(_mm256_loadu_ps(src.as_ptr().add(i)));
+        let b =
+            f32_to_bf16_epi32(_mm256_loadu_ps(src.as_ptr().add(i + 8)));
+        _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i,
+                            pack2_epi32_u16(a, b));
+        i += 16;
+    }
+    for j in i..n {
+        dst[j] = bf16::f32_to_bf16_bits(src[j]);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn bf16_to_f32(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    let n = src.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let b = load8_u16_epi32(src.as_ptr().add(i));
+        _mm256_storeu_ps(dst.as_mut_ptr().add(i), bf16_epi32_to_ps(b));
+        i += 8;
+    }
+    for j in i..n {
+        dst[j] = bf16::bf16_bits_to_f32(src[j]);
+    }
+}
+
+/// `fp16::f32_to_f16_bits`, 8 lanes.  RNE in the normal range uses the
+/// add-carry trick on the rebased exponent (the carry renormalizes the
+/// mantissa and overflows to inf exactly like the scalar branch);
+/// subnormals use variable-shift RNE; NaNs quiet to `sign | 0x7E00`
+/// like the scalar converter.
+#[target_feature(enable = "avx2")]
+unsafe fn f32_to_f16_epi32(x: __m256) -> __m256i {
+    let bits = _mm256_castps_si256(x);
+    let sign = _mm256_and_si256(_mm256_srli_epi32::<16>(bits),
+                                _mm256_set1_epi32(0x8000));
+    let exp = _mm256_and_si256(_mm256_srli_epi32::<23>(bits),
+                               _mm256_set1_epi32(0xFF));
+    let man = _mm256_and_si256(bits, _mm256_set1_epi32(0x007F_FFFF));
+    let e = _mm256_sub_epi32(exp, _mm256_set1_epi32(127));
+
+    // exp == 0xFF: inf -> 0x7C00, NaN -> quiet 0x7E00
+    let man0 = _mm256_cmpeq_epi32(man, _mm256_setzero_si256());
+    let naninf_res = _mm256_or_si256(
+        sign,
+        _mm256_blendv_epi8(_mm256_set1_epi32(0x7E00),
+                           _mm256_set1_epi32(0x7C00), man0));
+
+    // -14 <= e <= 15: normal range
+    let a = _mm256_or_si256(
+        _mm256_slli_epi32::<23>(_mm256_add_epi32(e,
+                                                 _mm256_set1_epi32(15))),
+        man);
+    let lsb = _mm256_and_si256(_mm256_srli_epi32::<13>(a),
+                               _mm256_set1_epi32(1));
+    let norm = _mm256_srli_epi32::<13>(_mm256_add_epi32(
+        _mm256_add_epi32(a, _mm256_set1_epi32(0xFFF)), lsb));
+    let norm_res = _mm256_or_si256(sign, norm);
+
+    // -25 <= e <= -15: f16 subnormal, shift = 13 + (-14 - e) = -1 - e
+    let mant = _mm256_or_si256(man, _mm256_set1_epi32(0x0080_0000));
+    let shift = _mm256_sub_epi32(_mm256_set1_epi32(-1), e);
+    let half_m1 = _mm256_sub_epi32(
+        _mm256_sllv_epi32(_mm256_set1_epi32(1),
+                          _mm256_sub_epi32(shift,
+                                           _mm256_set1_epi32(1))),
+        _mm256_set1_epi32(1));
+    let lsb_s = _mm256_and_si256(_mm256_srlv_epi32(mant, shift),
+                                 _mm256_set1_epi32(1));
+    let sub = _mm256_srlv_epi32(
+        _mm256_add_epi32(_mm256_add_epi32(mant, half_m1), lsb_s), shift);
+    let sub_res = _mm256_or_si256(sign, sub);
+
+    // select, least- to most-specific (later blends win)
+    let is_naninf = _mm256_cmpeq_epi32(exp, _mm256_set1_epi32(0xFF));
+    let is_over = _mm256_cmpgt_epi32(e, _mm256_set1_epi32(15));
+    let is_norm = _mm256_cmpgt_epi32(e, _mm256_set1_epi32(-15));
+    let is_sub = _mm256_cmpgt_epi32(e, _mm256_set1_epi32(-26));
+    let mut out = sign; // e < -25 rounds to signed zero
+    out = _mm256_blendv_epi8(out, sub_res, is_sub);
+    out = _mm256_blendv_epi8(out, norm_res, is_norm);
+    out = _mm256_blendv_epi8(
+        out, _mm256_or_si256(sign, _mm256_set1_epi32(0x7C00)), is_over);
+    _mm256_blendv_epi8(out, naninf_res, is_naninf)
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn f32_to_f16(src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len());
+    let n = src.len();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let a = f32_to_f16_epi32(_mm256_loadu_ps(src.as_ptr().add(i)));
+        let b =
+            f32_to_f16_epi32(_mm256_loadu_ps(src.as_ptr().add(i + 8)));
+        _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i,
+                            pack2_epi32_u16(a, b));
+        i += 16;
+    }
+    for j in i..n {
+        dst[j] = fp16::f32_to_f16_bits(src[j]);
+    }
+}
+
+/// `fp16::f16_bits_to_f32`, 8 lanes.  Subnormal f16 values are
+/// reconstructed as `man * 2^-24` (exact: the product is a normal f32),
+/// which matches the scalar normalization loop bit for bit; inf/NaN
+/// keep their payload un-quieted exactly like the scalar converter.
+#[target_feature(enable = "avx2")]
+pub unsafe fn f16_to_f32(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    let n = src.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let h = load8_u16_epi32(src.as_ptr().add(i));
+        let sign = _mm256_slli_epi32::<16>(
+            _mm256_and_si256(h, _mm256_set1_epi32(0x8000)));
+        let exp = _mm256_and_si256(_mm256_srli_epi32::<10>(h),
+                                   _mm256_set1_epi32(0x1F));
+        let man = _mm256_and_si256(h, _mm256_set1_epi32(0x3FF));
+        let man13 = _mm256_slli_epi32::<13>(man);
+        let normal = _mm256_or_si256(
+            sign,
+            _mm256_or_si256(
+                _mm256_slli_epi32::<23>(_mm256_add_epi32(
+                    exp, _mm256_set1_epi32(112))),
+                man13));
+        let infnan = _mm256_or_si256(
+            sign,
+            _mm256_or_si256(_mm256_set1_epi32(0x7F80_0000), man13));
+        let subf = _mm256_mul_ps(
+            _mm256_cvtepi32_ps(man),
+            _mm256_set1_ps(f32::from_bits(0x3380_0000))); // 2^-24
+        let subz = _mm256_or_si256(sign, _mm256_castps_si256(subf));
+        let is0 = _mm256_cmpeq_epi32(exp, _mm256_setzero_si256());
+        let is31 = _mm256_cmpeq_epi32(exp, _mm256_set1_epi32(31));
+        let mut out = _mm256_blendv_epi8(normal, infnan, is31);
+        out = _mm256_blendv_epi8(out, subz, is0);
+        _mm256_storeu_ps(dst.as_mut_ptr().add(i),
+                         _mm256_castsi256_ps(out));
+        i += 8;
+    }
+    for j in i..n {
+        dst[j] = fp16::f16_bits_to_f32(src[j]);
+    }
+}
+
+// --- weight splitting (Algorithm 1, int8 + bf16) -------------------------
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn split_compress(theta: &[f32], theta_p: &mut [u16],
+                             rho: &mut [i8]) {
+    assert_eq!(theta.len(), theta_p.len());
+    assert_eq!(theta.len(), rho.len());
+    let n = theta.len();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let mut bv = [_mm256_setzero_si256(); 4];
+        let mut rv = [_mm256_setzero_si256(); 4];
+        for (k, (b_out, r_out)) in
+            bv.iter_mut().zip(rv.iter_mut()).enumerate()
+        {
+            let x = _mm256_loadu_ps(theta.as_ptr().add(i + 8 * k));
+            let b = f32_to_bf16_epi32(x);
+            let tp = bf16_epi32_to_ps(b);
+            let ell = _mm256_sub_epi32(bf16_ulp_exp_epi32(b),
+                                       _mm256_set1_epi32(1));
+            let neg_ell =
+                _mm256_sub_epi32(_mm256_setzero_si256(), ell);
+            // (-ell).div_euclid(2) == arithmetic shift right by 1
+            let h = _mm256_srai_epi32::<1>(neg_ell);
+            let e = _mm256_sub_ps(x, tp);
+            let en = _mm256_mul_ps(
+                _mm256_mul_ps(e, pow2_ps(h)),
+                pow2_ps(_mm256_sub_epi32(neg_ell, h)));
+            let en = clamp_ps(en, -1.0, 1.0);
+            let rf =
+                round_ps(_mm256_mul_ps(en, _mm256_set1_ps(127.0)));
+            *b_out = b;
+            *r_out = cvt_clamped_epi32(rf);
+        }
+        _mm256_storeu_si256(theta_p.as_mut_ptr().add(i) as *mut __m256i,
+                            pack2_epi32_u16(bv[0], bv[1]));
+        _mm256_storeu_si256(
+            theta_p.as_mut_ptr().add(i + 16) as *mut __m256i,
+            pack2_epi32_u16(bv[2], bv[3]));
+        _mm256_storeu_si256(rho.as_mut_ptr().add(i) as *mut __m256i,
+                            pack4_epi32_i8(rv[0], rv[1], rv[2], rv[3]));
+        i += 32;
+    }
+    for j in i..n {
+        let (b, r) = weight_split::compress(theta[j], Correction::Int8,
+                                            Target::Bf16);
+        theta_p[j] = b;
+        rho[j] = r as i8;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn split_decompress(theta_p: &[u16], rho: &[i8],
+                               out: &mut [f32]) {
+    assert_eq!(theta_p.len(), rho.len());
+    assert_eq!(theta_p.len(), out.len());
+    let n = out.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let b = load8_u16_epi32(theta_p.as_ptr().add(i));
+        let tp = bf16_epi32_to_ps(b);
+        let ell = _mm256_sub_epi32(bf16_ulp_exp_epi32(b),
+                                   _mm256_set1_epi32(1));
+        // ell.div_euclid(2) == arithmetic shift right by 1
+        let h = _mm256_srai_epi32::<1>(ell);
+        let ri = load8_i8_epi32(rho.as_ptr().add(i));
+        let rf = _mm256_div_ps(_mm256_cvtepi32_ps(ri),
+                               _mm256_set1_ps(127.0));
+        let e = _mm256_mul_ps(
+            _mm256_mul_ps(rf, pow2_ps(h)),
+            pow2_ps(_mm256_sub_epi32(ell, h)));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i),
+                         _mm256_add_ps(tp, e));
+        i += 8;
+    }
+    for j in i..n {
+        out[j] = weight_split::decompress(theta_p[j], rho[j] as i32,
+                                          Correction::Int8, Target::Bf16);
+    }
+}
+
+// --- companded 8-bit state codecs (Algorithms 2/3) -----------------------
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn quant_momentum(m: &[f32], q: &mut [i8],
+                             scales: &mut [u16]) {
+    assert_eq!(m.len() % GROUP, 0);
+    assert_eq!(q.len(), m.len());
+    assert_eq!(scales.len(), m.len() / GROUP);
+    for gi in 0..scales.len() {
+        let base = gi * GROUP;
+        let (s16, safe) =
+            companding::scale_pair(group_absmax32(m.as_ptr().add(base)));
+        scales[gi] = s16;
+        let safe_v = _mm256_set1_ps(safe);
+        let mut rv = [_mm256_setzero_si256(); 4];
+        for (k, r_out) in rv.iter_mut().enumerate() {
+            let x = _mm256_loadu_ps(m.as_ptr().add(base + 8 * k));
+            let xs = _mm256_div_ps(x, safe_v);
+            // phi_m(xs) = (2 * xs) / (1 + |xs|)
+            let z = _mm256_div_ps(
+                _mm256_mul_ps(_mm256_set1_ps(2.0), xs),
+                _mm256_add_ps(_mm256_set1_ps(1.0), abs_ps(xs)));
+            let rf = clamp_ps(
+                round_ps(_mm256_mul_ps(z, _mm256_set1_ps(127.0))),
+                -127.0, 127.0);
+            *r_out = cvt_clamped_epi32(rf);
+        }
+        _mm256_storeu_si256(q.as_mut_ptr().add(base) as *mut __m256i,
+                            pack4_epi32_i8(rv[0], rv[1], rv[2], rv[3]));
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn dequant_momentum(q: &[i8], scales: &[u16],
+                               out: &mut [f32]) {
+    assert_eq!(q.len() % GROUP, 0);
+    assert_eq!(out.len(), q.len());
+    assert_eq!(scales.len() * GROUP, q.len(),
+               "scales must cover q exactly (one f16 scale per group)");
+    for gi in 0..scales.len() {
+        let base = gi * GROUP;
+        let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scales[gi]));
+        for k in 0..4 {
+            let zi = load8_i8_epi32(q.as_ptr().add(base + 8 * k));
+            let z = _mm256_div_ps(_mm256_cvtepi32_ps(zi),
+                                  _mm256_set1_ps(127.0));
+            // phi_m_inv(z) = z / (2 - |z|)
+            let inv = _mm256_div_ps(
+                z, _mm256_sub_ps(_mm256_set1_ps(2.0), abs_ps(z)));
+            _mm256_storeu_ps(out.as_mut_ptr().add(base + 8 * k),
+                             _mm256_mul_ps(inv, s));
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn quant_variance(v: &[f32], q: &mut [u8],
+                             scales: &mut [u16]) {
+    assert_eq!(v.len() % GROUP, 0);
+    assert_eq!(q.len(), v.len());
+    assert_eq!(scales.len(), v.len() / GROUP);
+    for gi in 0..scales.len() {
+        let base = gi * GROUP;
+        // sqrt domain first, absmax over it (NaN-skipping like the
+        // scalar group_absmax)
+        let mut sq = [_mm256_setzero_ps(); 4];
+        let mut acc = _mm256_setzero_ps();
+        for (k, s_out) in sq.iter_mut().enumerate() {
+            let s =
+                _mm256_sqrt_ps(_mm256_loadu_ps(v.as_ptr().add(base + 8 * k)));
+            *s_out = s;
+            let a = abs_ps(s);
+            let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(a, acc);
+            acc = _mm256_blendv_ps(acc, a, gt);
+        }
+        let (s16, safe) = companding::scale_pair(hmax_ps(acc));
+        scales[gi] = s16;
+        let safe_v = _mm256_set1_ps(safe);
+        let mut rv = [_mm256_setzero_si256(); 4];
+        for (k, r_out) in rv.iter_mut().enumerate() {
+            let rf = clamp_ps(
+                round_ps(_mm256_mul_ps(_mm256_div_ps(sq[k], safe_v),
+                                       _mm256_set1_ps(255.0))),
+                0.0, 255.0);
+            *r_out = cvt_clamped_epi32(rf);
+        }
+        _mm256_storeu_si256(q.as_mut_ptr().add(base) as *mut __m256i,
+                            pack4_epi32_u8(rv[0], rv[1], rv[2], rv[3]));
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn dequant_variance(q: &[u8], scales: &[u16],
+                               out: &mut [f32]) {
+    assert_eq!(q.len() % GROUP, 0);
+    assert_eq!(out.len(), q.len());
+    assert_eq!(scales.len() * GROUP, q.len(),
+               "scales must cover q exactly (one f16 scale per group)");
+    for gi in 0..scales.len() {
+        let base = gi * GROUP;
+        let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scales[gi]));
+        for k in 0..4 {
+            let zi = load8_u8_epi32(q.as_ptr().add(base + 8 * k));
+            let vp = _mm256_mul_ps(
+                _mm256_div_ps(_mm256_cvtepi32_ps(zi),
+                              _mm256_set1_ps(255.0)),
+                s);
+            _mm256_storeu_ps(out.as_mut_ptr().add(base + 8 * k),
+                             _mm256_mul_ps(vp, vp));
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn quant_momentum_linear(m: &[f32], q: &mut [i8],
+                                    scales: &mut [u16]) {
+    assert_eq!(m.len() % GROUP, 0);
+    assert_eq!(q.len(), m.len());
+    assert_eq!(scales.len(), m.len() / GROUP);
+    for gi in 0..scales.len() {
+        let base = gi * GROUP;
+        let (s16, safe) =
+            companding::scale_pair(group_absmax32(m.as_ptr().add(base)));
+        scales[gi] = s16;
+        let safe_v = _mm256_set1_ps(safe);
+        let mut rv = [_mm256_setzero_si256(); 4];
+        for (k, r_out) in rv.iter_mut().enumerate() {
+            let x = _mm256_loadu_ps(m.as_ptr().add(base + 8 * k));
+            let rf = clamp_ps(
+                round_ps(_mm256_mul_ps(_mm256_div_ps(x, safe_v),
+                                       _mm256_set1_ps(127.0))),
+                -127.0, 127.0);
+            *r_out = cvt_clamped_epi32(rf);
+        }
+        _mm256_storeu_si256(q.as_mut_ptr().add(base) as *mut __m256i,
+                            pack4_epi32_i8(rv[0], rv[1], rv[2], rv[3]));
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn dequant_momentum_linear(q: &[i8], scales: &[u16],
+                                      out: &mut [f32]) {
+    assert_eq!(q.len() % GROUP, 0);
+    assert_eq!(out.len(), q.len());
+    assert_eq!(scales.len() * GROUP, q.len(),
+               "scales must cover q exactly (one f16 scale per group)");
+    for gi in 0..scales.len() {
+        let base = gi * GROUP;
+        let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scales[gi]));
+        for k in 0..4 {
+            let zi = load8_i8_epi32(q.as_ptr().add(base + 8 * k));
+            let z = _mm256_div_ps(_mm256_cvtepi32_ps(zi),
+                                  _mm256_set1_ps(127.0));
+            _mm256_storeu_ps(out.as_mut_ptr().add(base + 8 * k),
+                             _mm256_mul_ps(z, s));
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn quant_variance_linear(v: &[f32], q: &mut [u8],
+                                    scales: &mut [u16]) {
+    assert_eq!(v.len() % GROUP, 0);
+    assert_eq!(q.len(), v.len());
+    assert_eq!(scales.len(), v.len() / GROUP);
+    for gi in 0..scales.len() {
+        let base = gi * GROUP;
+        let (s16, safe) =
+            companding::scale_pair(group_absmax32(v.as_ptr().add(base)));
+        scales[gi] = s16;
+        let safe_v = _mm256_set1_ps(safe);
+        let mut rv = [_mm256_setzero_si256(); 4];
+        for (k, r_out) in rv.iter_mut().enumerate() {
+            let x = _mm256_loadu_ps(v.as_ptr().add(base + 8 * k));
+            let rf = clamp_ps(
+                round_ps(_mm256_mul_ps(_mm256_div_ps(x, safe_v),
+                                       _mm256_set1_ps(255.0))),
+                0.0, 255.0);
+            *r_out = cvt_clamped_epi32(rf);
+        }
+        _mm256_storeu_si256(q.as_mut_ptr().add(base) as *mut __m256i,
+                            pack4_epi32_u8(rv[0], rv[1], rv[2], rv[3]));
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn dequant_variance_linear(q: &[u8], scales: &[u16],
+                                      out: &mut [f32]) {
+    assert_eq!(q.len() % GROUP, 0);
+    assert_eq!(out.len(), q.len());
+    assert_eq!(scales.len() * GROUP, q.len(),
+               "scales must cover q exactly (one f16 scale per group)");
+    for gi in 0..scales.len() {
+        let base = gi * GROUP;
+        let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scales[gi]));
+        for k in 0..4 {
+            let zi = load8_u8_epi32(q.as_ptr().add(base + 8 * k));
+            let z = _mm256_div_ps(_mm256_cvtepi32_ps(zi),
+                                  _mm256_set1_ps(255.0));
+            _mm256_storeu_ps(out.as_mut_ptr().add(base + 8 * k),
+                             _mm256_mul_ps(z, s));
+        }
+    }
+}
+
+/// Safe wrappers used as the `KernelSet` function-pointer table.
+///
+/// Soundness: the AVX2 `KernelSet` is only handed out by
+/// `kernels::kernel_set` after `is_x86_feature_detected!("avx2")`
+/// confirmed support, so the target-feature calls below can never
+/// execute on a CPU without AVX2.
+pub mod dispatch {
+    use crate::kernels::avx2_available;
+
+    macro_rules! wrap {
+        ($name:ident, ($($arg:ident : $ty:ty),*)) => {
+            pub fn $name($($arg: $ty),*) {
+                debug_assert!(avx2_available());
+                // SAFETY: see module doc — AVX2 presence was verified
+                // before this wrapper became reachable.
+                unsafe { super::$name($($arg),*) }
+            }
+        };
+    }
+
+    wrap!(quant_momentum, (m: &[f32], q: &mut [i8], s: &mut [u16]));
+    wrap!(dequant_momentum, (q: &[i8], s: &[u16], out: &mut [f32]));
+    wrap!(quant_variance, (v: &[f32], q: &mut [u8], s: &mut [u16]));
+    wrap!(dequant_variance, (q: &[u8], s: &[u16], out: &mut [f32]));
+    wrap!(quant_momentum_linear,
+          (m: &[f32], q: &mut [i8], s: &mut [u16]));
+    wrap!(dequant_momentum_linear,
+          (q: &[i8], s: &[u16], out: &mut [f32]));
+    wrap!(quant_variance_linear,
+          (v: &[f32], q: &mut [u8], s: &mut [u16]));
+    wrap!(dequant_variance_linear,
+          (q: &[u8], s: &[u16], out: &mut [f32]));
+    wrap!(split_compress,
+          (theta: &[f32], tp: &mut [u16], rho: &mut [i8]));
+    wrap!(split_decompress,
+          (tp: &[u16], rho: &[i8], out: &mut [f32]));
+    wrap!(f32_to_bf16, (src: &[f32], dst: &mut [u16]));
+    wrap!(bf16_to_f32, (src: &[u16], dst: &mut [f32]));
+    wrap!(f32_to_f16, (src: &[f32], dst: &mut [u16]));
+    wrap!(f16_to_f32, (src: &[u16], dst: &mut [f32]));
+}

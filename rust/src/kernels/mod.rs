@@ -1,0 +1,186 @@
+//! SIMD kernel layer for the fused-step hot path.
+//!
+//! The fused dequant → update → requant chain is memory-bound: once the
+//! optimizer state is compact (int8 codes + f16 scales + split bf16
+//! weights), the codecs in `formats/` dominate step cost (paper
+//! Table 4).  This module gives every codec a *batch* (slice-level)
+//! entry point behind a [`KernelSet`] of function pointers, with two
+//! implementations:
+//!
+//! * [`portable`] — the scalar reference loops (GROUP-tiled, written so
+//!   LLVM can autovectorize them); these are the `formats/` codecs and
+//!   remain the single source of scalar truth;
+//! * [`avx2`] (x86-64 only) — hand-written `core::arch` AVX2
+//!   intrinsics, selected at runtime via `is_x86_feature_detected!`.
+//!
+//! **Bit-exactness is the contract**: every AVX2 kernel performs the
+//! exact same sequence of IEEE operations as its scalar counterpart
+//! (division stays division, no FMA contraction, `round_ties_even`
+//! maps to `_mm256_round_ps` nearest-even, NaN/saturating-cast edge
+//! semantics are emulated lane-wise), so both sets produce identical
+//! bytes on identical inputs.  `rust/tests/kernel_equivalence.rs`
+//! enforces this exhaustively (all 2^16 fp16/bf16 patterns, adversarial
+//! companding groups) and `rust/tests/backend_equivalence.rs` pins the
+//! whole fused step.
+//!
+//! Selection is a config concern (`config::KernelKind`,
+//! `kernels = "auto" | "scalar" | "avx2"`); a backend resolves its
+//! [`KernelSet`] once at construction, so the step loop pays zero
+//! dispatch overhead beyond an indirect call per slice.
+
+pub mod portable;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+use anyhow::{bail, Result};
+
+use crate::config::KernelKind;
+
+/// Batch codec entry points, resolved once per backend.
+///
+/// All companding kernels require GROUP-aligned slices with
+/// `scales.len() * GROUP == codes.len()` (same contract as
+/// `formats::companding`); the split and conversion kernels accept any
+/// length.
+#[derive(Clone, Copy)]
+pub struct KernelSet {
+    pub name: &'static str,
+    // companded 8-bit optimizer state (Algorithms 2/3)
+    pub quant_momentum: fn(&[f32], &mut [i8], &mut [u16]),
+    pub dequant_momentum: fn(&[i8], &[u16], &mut [f32]),
+    pub quant_variance: fn(&[f32], &mut [u8], &mut [u16]),
+    pub dequant_variance: fn(&[u8], &[u16], &mut [f32]),
+    // linear (no companding) ablation codecs
+    pub quant_momentum_linear: fn(&[f32], &mut [i8], &mut [u16]),
+    pub dequant_momentum_linear: fn(&[i8], &[u16], &mut [f32]),
+    pub quant_variance_linear: fn(&[f32], &mut [u8], &mut [u16]),
+    pub dequant_variance_linear: fn(&[u8], &[u16], &mut [f32]),
+    // ULP-normalized weight splitting (Algorithm 1, int8 + bf16)
+    pub split_compress: fn(&[f32], &mut [u16], &mut [i8]),
+    pub split_decompress: fn(&[u16], &[i8], &mut [f32]),
+    // 16-bit float conversions
+    pub f32_to_bf16: fn(&[f32], &mut [u16]),
+    pub bf16_to_f32: fn(&[u16], &mut [f32]),
+    pub f32_to_f16: fn(&[f32], &mut [u16]),
+    pub f16_to_f32: fn(&[u16], &mut [f32]),
+}
+
+/// The portable scalar set (always available).
+pub static SCALAR: KernelSet = KernelSet {
+    name: "scalar",
+    quant_momentum: portable::quant_momentum,
+    dequant_momentum: portable::dequant_momentum,
+    quant_variance: portable::quant_variance,
+    dequant_variance: portable::dequant_variance,
+    quant_momentum_linear: portable::quant_momentum_linear,
+    dequant_momentum_linear: portable::dequant_momentum_linear,
+    quant_variance_linear: portable::quant_variance_linear,
+    dequant_variance_linear: portable::dequant_variance_linear,
+    split_compress: portable::split_compress,
+    split_decompress: portable::split_decompress,
+    f32_to_bf16: portable::f32_to_bf16,
+    bf16_to_f32: portable::bf16_to_f32,
+    f32_to_f16: portable::f32_to_f16,
+    f16_to_f32: portable::f16_to_f32,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: KernelSet = KernelSet {
+    name: "avx2",
+    quant_momentum: avx2::dispatch::quant_momentum,
+    dequant_momentum: avx2::dispatch::dequant_momentum,
+    quant_variance: avx2::dispatch::quant_variance,
+    dequant_variance: avx2::dispatch::dequant_variance,
+    quant_momentum_linear: avx2::dispatch::quant_momentum_linear,
+    dequant_momentum_linear: avx2::dispatch::dequant_momentum_linear,
+    quant_variance_linear: avx2::dispatch::quant_variance_linear,
+    dequant_variance_linear: avx2::dispatch::dequant_variance_linear,
+    split_compress: avx2::dispatch::split_compress,
+    split_decompress: avx2::dispatch::split_decompress,
+    f32_to_bf16: avx2::dispatch::f32_to_bf16,
+    bf16_to_f32: avx2::dispatch::bf16_to_f32,
+    f32_to_f16: avx2::dispatch::f32_to_f16,
+    f16_to_f32: avx2::dispatch::f16_to_f32,
+};
+
+/// True when the AVX2 kernel set can run on this machine.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        return is_x86_feature_detected!("avx2");
+    }
+    #[allow(unreachable_code)]
+    false
+}
+
+/// Resolve a kernel-set selection to a concrete set.  `Auto` picks
+/// AVX2 when the CPU supports it; explicitly requesting `Avx2` on an
+/// unsupported CPU/target is an error (differential testing wants the
+/// selection to be deterministic, never a silent fallback).
+pub fn kernel_set(kind: KernelKind) -> Result<&'static KernelSet> {
+    match kind {
+        KernelKind::Scalar => Ok(&SCALAR),
+        KernelKind::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if avx2_available() {
+                    return Ok(&AVX2);
+                }
+            }
+            bail!(
+                "kernels = \"avx2\" requested but AVX2 is not available \
+                 on this CPU/target; use \"auto\" or \"scalar\""
+            )
+        }
+        KernelKind::Auto => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if avx2_available() {
+                    return Ok(&AVX2);
+                }
+            }
+            Ok(&SCALAR)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_always_resolves() {
+        assert_eq!(kernel_set(KernelKind::Scalar).unwrap().name, "scalar");
+        let auto = kernel_set(KernelKind::Auto).unwrap();
+        assert!(auto.name == "scalar" || auto.name == "avx2");
+    }
+
+    #[test]
+    fn auto_matches_detection() {
+        let auto = kernel_set(KernelKind::Auto).unwrap();
+        if avx2_available() {
+            assert_eq!(auto.name, "avx2");
+            assert_eq!(kernel_set(KernelKind::Avx2).unwrap().name, "avx2");
+        } else {
+            assert_eq!(auto.name, "scalar");
+            assert!(kernel_set(KernelKind::Avx2).is_err());
+        }
+    }
+
+    #[test]
+    fn portable_set_matches_formats_reference() {
+        // the portable set IS the formats reference — a quick smoke
+        // check that the function-pointer plumbing hits the same code
+        use crate::formats::{companding, GROUP};
+        let m: Vec<f32> = (0..2 * GROUP)
+            .map(|i| (i as f32 - 31.0) * 0.01)
+            .collect();
+        let (mut q1, mut q2) = (vec![0i8; m.len()], vec![0i8; m.len()]);
+        let (mut s1, mut s2) = (vec![0u16; 2], vec![0u16; 2]);
+        (SCALAR.quant_momentum)(&m, &mut q1, &mut s1);
+        companding::quant_momentum(&m, &mut q2, &mut s2);
+        assert_eq!(q1, q2);
+        assert_eq!(s1, s2);
+    }
+}

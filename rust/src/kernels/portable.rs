@@ -1,0 +1,112 @@
+//! Portable batch kernels: the scalar reference loops.
+//!
+//! The companding and weight-split codecs delegate to the slice
+//! functions in `formats/` — those loops are already GROUP-tiled
+//! (`chunks_exact`) with bounds checks hoisted, which is the shape LLVM
+//! autovectorizes; keeping a single scalar implementation is what makes
+//! "bit-exact to the scalar reference" a tautology for this set.  The
+//! 16-bit float conversions get the batch entry points the fused tile
+//! path and the AVX2 differential tests need.
+
+use crate::formats::{bf16, companding, fp16, weight_split};
+
+// --- companded 8-bit state codecs (Algorithms 2/3) ----------------------
+
+pub fn quant_momentum(m: &[f32], q: &mut [i8], scales: &mut [u16]) {
+    companding::quant_momentum(m, q, scales);
+}
+
+pub fn dequant_momentum(q: &[i8], scales: &[u16], out: &mut [f32]) {
+    companding::dequant_momentum(q, scales, out);
+}
+
+pub fn quant_variance(v: &[f32], q: &mut [u8], scales: &mut [u16]) {
+    companding::quant_variance(v, q, scales);
+}
+
+pub fn dequant_variance(q: &[u8], scales: &[u16], out: &mut [f32]) {
+    companding::dequant_variance(q, scales, out);
+}
+
+pub fn quant_momentum_linear(m: &[f32], q: &mut [i8],
+                             scales: &mut [u16]) {
+    companding::quant_momentum_linear(m, q, scales);
+}
+
+pub fn dequant_momentum_linear(q: &[i8], scales: &[u16],
+                               out: &mut [f32]) {
+    companding::dequant_momentum_linear(q, scales, out);
+}
+
+pub fn quant_variance_linear(v: &[f32], q: &mut [u8],
+                             scales: &mut [u16]) {
+    companding::quant_variance_linear(v, q, scales);
+}
+
+pub fn dequant_variance_linear(q: &[u8], scales: &[u16],
+                               out: &mut [f32]) {
+    companding::dequant_variance_linear(q, scales, out);
+}
+
+// --- weight splitting (Algorithm 1) -------------------------------------
+
+pub fn split_compress(theta: &[f32], theta_p: &mut [u16],
+                      rho: &mut [i8]) {
+    weight_split::compress_slice(theta, theta_p, rho);
+}
+
+pub fn split_decompress(theta_p: &[u16], rho: &[i8], out: &mut [f32]) {
+    weight_split::decompress_slice(theta_p, rho, out);
+}
+
+// --- 16-bit float conversions -------------------------------------------
+
+pub fn f32_to_bf16(src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = bf16::f32_to_bf16_bits(s);
+    }
+}
+
+pub fn bf16_to_f32(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = bf16::bf16_bits_to_f32(s);
+    }
+}
+
+pub fn f32_to_f16(src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = fp16::f32_to_f16_bits(s);
+    }
+}
+
+pub fn f16_to_f32(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = fp16::f16_bits_to_f32(s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_roundtrip_exact_values() {
+        let xs = [0.0f32, 1.0, -2.5, 65504.0, -0.0];
+        let mut bits = vec![0u16; xs.len()];
+        let mut back = vec![0f32; xs.len()];
+        f32_to_f16(&xs, &mut bits);
+        f16_to_f32(&bits, &mut back);
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        f32_to_bf16(&xs, &mut bits);
+        bf16_to_f32(&bits, &mut back);
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

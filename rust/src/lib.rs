@@ -35,6 +35,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod formats;
+pub mod kernels;
 pub mod memory;
 pub mod optim;
 pub mod runtime;

@@ -62,6 +62,7 @@ fn print_help() {
          --preset lm-tiny --optimizer adamw --variant flash\n                \
          --steps N --lr X --bucket 65536 --workers K\n                \
          --backend hlo|scalar|parallel [--threads T]\n                \
+         --kernels auto|scalar|avx2 (native codec SIMD)\n                \
          --groups decay|none (full per-group specs via --config)\n                \
          [--no-grad-release] [--eval-every N] [--save ckpt.flt]\n                \
          [--csv out.csv] [--plot]\n  \
@@ -92,9 +93,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let rt = Runtime::cpu()?;
     println!(
         "flashtrain: preset={} optimizer={} variant={} steps={} bucket={} \
-         backend={} workers={} grad_release={}",
+         backend={} kernels={} workers={} grad_release={}",
         cfg.preset, cfg.optimizer, cfg.variant, cfg.steps, cfg.bucket,
-        cfg.backend, cfg.workers, cfg.grad_release
+        cfg.backend, cfg.kernels, cfg.workers, cfg.grad_release
     );
     let mut trainer = Trainer::new(cfg.clone(), &manifest, &rt)?;
     if trainer.opt.groups.len() > 1 {

@@ -21,10 +21,12 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::backend::{make_backend, StepBackend};
-use crate::config::{BackendKind, GroupConfig, OptKind, Variant};
+use crate::backend::{make_backend_with, FusedJob, Part, StepBackend};
+use crate::config::{BackendKind, GroupConfig, KernelKind, OptKind,
+                    Variant};
+use crate::formats::bf16;
 use crate::memory::tracker::Tracker;
-use crate::optim::hyper::{GroupHyper, HyperDefaults};
+use crate::optim::hyper::{GroupHyper, Hyper, HyperDefaults};
 use crate::optim::optimizer::BucketOptimizer;
 use crate::optim::state::State;
 use crate::runtime::{Manifest, ModelInfo, Runtime};
@@ -375,15 +377,31 @@ impl FlashOptimizer {
         })
     }
 
-    /// Build on a native step backend; one backend instance (and worker
-    /// pool) is shared across all group partitions.
+    /// Build on a native step backend with auto-detected kernels; one
+    /// backend instance (and worker pool) is shared across all group
+    /// partitions.
     #[allow(clippy::too_many_arguments)]
     pub fn native(kind: OptKind, variant: Variant, bucket: usize,
                   theta0: &[f32], specs: Vec<GroupSpec>,
                   defaults: HyperDefaults, backend: BackendKind,
                   threads: usize) -> Result<FlashOptimizer> {
-        let be: Rc<dyn StepBackend> = Rc::from(make_backend(backend,
-                                                            threads)?);
+        Self::native_with_kernels(kind, variant, bucket, theta0, specs,
+                                  defaults, backend, threads,
+                                  KernelKind::Auto)
+    }
+
+    /// Like [`native`](Self::native) with an explicit SIMD kernel-set
+    /// selection (`config.kernels`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn native_with_kernels(kind: OptKind, variant: Variant,
+                               bucket: usize, theta0: &[f32],
+                               specs: Vec<GroupSpec>,
+                               defaults: HyperDefaults,
+                               backend: BackendKind, threads: usize,
+                               kernels: KernelKind)
+                               -> Result<FlashOptimizer> {
+        let be: Rc<dyn StepBackend> =
+            Rc::from(make_backend_with(backend, threads, kernels)?);
         Self::build(kind, variant, bucket, theta0, specs, defaults,
                     |t0| BucketOptimizer::native_shared(
                         kind, variant, bucket, t0, be.clone()))
@@ -435,16 +453,121 @@ impl FlashOptimizer {
             .collect()
     }
 
+    /// The shared native step backend (`None` on the HLO engine or
+    /// when groups were built on distinct backends).
+    pub fn step_backend(&self) -> Option<Rc<dyn StepBackend>> {
+        let first = self.groups.first()?.opt.step_backend()?;
+        for g in &self.groups[1..] {
+            match g.opt.step_backend() {
+                Some(b) if Rc::ptr_eq(&b, &first) => {}
+                _ => return None,
+            }
+        }
+        Some(first)
+    }
+
+    /// Bytes of the per-group padded gradient staging buffers a
+    /// batched parallel step allocates (see [`step`](Self::step)); 0
+    /// when the per-group bucket loop applies instead.  The trainer
+    /// registers this with the memory tracker as transient, so the
+    /// batched fast path never under-reports peak memory.
+    pub fn staged_grad_bytes(&self) -> u64 {
+        if self.groups.len() < 2 {
+            return 0;
+        }
+        let Some(be) = self.step_backend() else {
+            return 0;
+        };
+        if be.as_parallel().is_none() {
+            return 0;
+        }
+        self.groups.iter().map(|g| g.opt.state.n as u64 * 4).sum()
+    }
+
+    /// Batched step: every group's full partition (with its own
+    /// resolved hyper vector) goes to the parallel backend as ONE pool
+    /// dispatch, so small groups stop paying a full barrier each.
+    /// Returns false when not applicable (single group, HLO engine, or
+    /// a non-parallel backend).  Bit-exact to the per-group loop:
+    /// bucket boundaries never affect the fused math, only when the
+    /// release hooks fire (after the single barrier instead of per
+    /// bucket).
+    fn step_batched(&mut self, grads: &[f32], lr: f64, t: usize)
+                    -> Result<bool> {
+        if self.groups.len() < 2 {
+            return Ok(false);
+        }
+        let Some(be) = self.step_backend() else {
+            return Ok(false);
+        };
+        if be.as_parallel().is_none() {
+            return Ok(false);
+        }
+        let (kind, variant) = (self.kind, self.variant);
+        // stage each group's padded gradient (rounded to bf16 for
+        // split variants, zero-padded to the group's state length)
+        let mut gbufs: Vec<Vec<f32>> =
+            Vec::with_capacity(self.groups.len());
+        for g in &self.groups {
+            let n = g.opt.state.n;
+            let mut gb: Vec<f32> = Vec::with_capacity(n);
+            for &(lo, hi) in &g.ranges {
+                gb.extend_from_slice(&grads[lo..hi]);
+            }
+            if variant.splits_weights() {
+                for x in gb.iter_mut() {
+                    *x = bf16::round_f32_to_bf16(*x);
+                }
+            }
+            gb.resize(n, 0.0);
+            gbufs.push(gb);
+        }
+        let hypers: Vec<Hyper> = self
+            .groups
+            .iter()
+            .map(|g| g.hyper.resolve(&self.defaults, lr, t))
+            .collect();
+        let mut jobs = Vec::with_capacity(self.groups.len());
+        for ((g, gb), h) in
+            self.groups.iter_mut().zip(&gbufs).zip(&hypers)
+        {
+            let n = g.opt.state.n;
+            jobs.push(FusedJob {
+                part: Part::of_range(&mut g.opt.state, 0, n, gb),
+                opt: kind,
+                variant,
+                h: *h,
+            });
+        }
+        be.as_parallel()
+            .expect("checked above")
+            .step_parts(jobs);
+        Ok(true)
+    }
+
     /// One optimizer step over the full flat gradient at scheduled LR
     /// `lr`, step `t` (1-based).  Each group resolves its own hyper
-    /// vector and steps its partition bucket by bucket;
+    /// vector and steps its partition;
     /// `on_bucket(group_idx, bucket_idx)` is the gradient-release hook.
+    ///
+    /// On the parallel backend with multiple groups, all group
+    /// partitions step under a single pool dispatch (the hooks then
+    /// fire, in order, after the barrier); otherwise each group steps
+    /// its partition bucket by bucket.
     pub fn step<F: FnMut(usize, usize)>(&mut self, grads: &[f32],
                                         lr: f64, t: usize,
                                         mut on_bucket: F) -> Result<()> {
         if grads.len() != self.total {
             bail!("gradient length {} != parameter count {}", grads.len(),
                   self.total);
+        }
+        if self.step_batched(grads, lr, t)? {
+            for (gi, g) in self.groups.iter().enumerate() {
+                for bi in 0..g.opt.n_buckets {
+                    on_bucket(gi, bi);
+                }
+            }
+            return Ok(());
         }
         let mut buf = Vec::new();
         for gi in 0..self.groups.len() {
@@ -615,6 +738,7 @@ impl FlashOptimizer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::make_backend;
     use crate::config::TrainConfig;
     use crate::formats::GROUP;
     use crate::optim::hyper::Hyper;

@@ -132,6 +132,17 @@ impl BucketOptimizer {
         }
     }
 
+    /// The native step backend driving this optimizer (`None` on the
+    /// HLO engine).  Lets the param-group facade batch every group's
+    /// partition into one pool dispatch and lets the trainer shard the
+    /// gradient all-reduce over the same worker pool.
+    pub fn step_backend(&self) -> Option<Rc<dyn StepBackend>> {
+        match &self.engine {
+            Engine::Native { backend, .. } => Some(backend.clone()),
+            Engine::Hlo { .. } => None,
+        }
+    }
+
     /// Apply one optimizer step to bucket `i` given its gradient slice
     /// (f32 values; rounded to bf16 for split variants, matching the
     /// gradient dtype of the artifact).

@@ -1,26 +1,30 @@
 //! Differential suite: the native step backends must agree bit for bit.
 //!
-//! Three independent orchestrations of the same fused semantics are
-//! pinned against each other:
+//! Independent orchestrations of the same fused semantics are pinned
+//! against each other:
 //!
-//! * `scalar_ref::step_state` — the legacy whole-buffer scalar mirror;
-//! * `backend::ScalarBackend` — the partition-view fused chain, one
-//!   partition;
-//! * `backend::ParallelBackend` — the fused chain sharded over a
-//!   scoped thread pool.
+//! * `scalar_ref::step_state` — the legacy whole-buffer scalar mirror
+//!   (no tiling, no kernel layer);
+//! * `backend::ScalarBackend` — the TILE-streamed fused chain, one
+//!   partition, with either kernel set (`scalar` / `avx2`);
+//! * `backend::ParallelBackend` — the same chain sharded over a
+//!   persistent worker pool, batched multi-partition dispatch included.
 //!
 //! Every comparison is exact (`to_bits` on floats, `==` on integer
 //! codes): because all updates are element-wise and all requantization
-//! is group-wise over whole GROUPs, any GROUP-aligned partitioning —
-//! and any thread interleaving — must produce identical bits.  No
-//! artifacts or PJRT runtime are required.
+//! is group-wise over whole GROUPs, any GROUP-aligned tiling or
+//! partitioning — and any thread interleaving or SIMD width — must
+//! produce identical bits.  No artifacts or PJRT runtime are required.
 
-use flashtrain::backend::{make_backend, ParallelBackend, ScalarBackend,
-                          StepBackend};
-use flashtrain::config::{BackendKind, OptKind, TrainConfig, Variant};
+use flashtrain::backend::{fused, make_backend, make_backend_with,
+                          ParallelBackend, ScalarBackend, StepBackend};
+use flashtrain::config::{BackendKind, KernelKind, OptKind, TrainConfig,
+                        Variant};
 use flashtrain::formats::{bf16, GROUP};
-use flashtrain::optim::{scalar_ref, BucketOptimizer, Hyper, State};
-use flashtrain::util::rng::Rng;
+use flashtrain::kernels::avx2_available;
+use flashtrain::memory::tracker::{Category, Tracker};
+use flashtrain::optim::{scalar_ref, BucketOptimizer, FlashOptimizer,
+                        GroupSpec, Hyper, HyperDefaults, State};
 
 const ALL_OPTS: [OptKind; 3] =
     [OptKind::Sgd, OptKind::AdamW, OptKind::Lion];
@@ -32,9 +36,12 @@ const ALL_VARIANTS: [Variant; 5] = [
     Variant::NoCompand,
 ];
 
-fn randn(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
+fn randn(rng: &mut flashtrain::util::rng::Rng, n: usize, s: f32)
+         -> Vec<f32> {
     (0..n).map(|_| rng.normal() as f32 * s).collect()
 }
+
+use flashtrain::util::rng::Rng;
 
 /// Gradient in the variant's dtype semantics (bf16 for split tracks).
 fn grad(rng: &mut Rng, n: usize, variant: Variant) -> Vec<f32> {
@@ -90,11 +97,11 @@ fn parallel_matches_scalar_all_pairs_and_seeds() {
                 let cfg = TrainConfig { optimizer: opt, variant,
                                         ..Default::default() };
                 let par = ParallelBackend::new(4);
+                let seq = ScalarBackend::default();
                 for t in 1..=10 {
                     let g = grad(&mut rng, n, variant);
                     let h = Hyper::for_step(&cfg, 1e-3, t);
-                    ScalarBackend
-                        .step_full(&mut sc, &g, opt, variant, &h)
+                    seq.step_full(&mut sc, &g, opt, variant, &h)
                         .unwrap();
                     par.step_full(&mut pa, &g, opt, variant, &h).unwrap();
                     assert_states_bit_equal(
@@ -106,33 +113,60 @@ fn parallel_matches_scalar_all_pairs_and_seeds() {
     }
 }
 
-/// Both native backends == the legacy whole-buffer scalar mirror.
+/// The tiled kernel-layer backends == the legacy whole-buffer scalar
+/// mirror, for every kernel set, all 15 pairs, multiple seeds, on a
+/// state large enough to cross several TILE boundaries (incl. a
+/// partial trailing tile).
 #[test]
-fn backends_match_legacy_scalar_ref() {
-    let mut rng = Rng::new(42);
-    let n = 5 * GROUP;
-    for opt in ALL_OPTS {
-        for variant in ALL_VARIANTS {
-            let theta0 = randn(&mut rng, n, 0.1);
-            let mut legacy = State::init(&theta0, n, opt, variant);
-            let mut sc = legacy.clone();
-            let mut pa = legacy.clone();
-            let cfg = TrainConfig { optimizer: opt, variant,
-                                    ..Default::default() };
-            let par = ParallelBackend::new(3);
-            for t in 1..=5 {
-                let g = grad(&mut rng, n, variant);
-                let h = Hyper::for_step(&cfg, 1e-3, t);
-                scalar_ref::step_state(&mut legacy, &g, opt, variant, &h);
-                ScalarBackend
-                    .step_full(&mut sc, &g, opt, variant, &h)
-                    .unwrap();
-                par.step_full(&mut pa, &g, opt, variant, &h).unwrap();
+fn backends_match_legacy_scalar_ref_all_kernel_sets() {
+    let mut kinds = vec![KernelKind::Scalar];
+    if avx2_available() {
+        kinds.push(KernelKind::Avx2);
+    } else {
+        eprintln!("note: AVX2 not available, differential run covers \
+                   scalar kernels only");
+    }
+    // 2 tiles + 3 groups: tiling must cut mid-partition
+    let n = 2 * fused::TILE + 3 * GROUP;
+    for seed in [42u64, 43, 44] {
+        let mut rng = Rng::new(seed);
+        for opt in ALL_OPTS {
+            for variant in ALL_VARIANTS {
+                let theta0 = randn(&mut rng, n, 0.1);
+                let mut legacy = State::init(&theta0, n, opt, variant);
+                let mut tiled: Vec<State> =
+                    kinds.iter().map(|_| legacy.clone()).collect();
+                let mut par = legacy.clone();
+                let cfg = TrainConfig { optimizer: opt, variant,
+                                        ..Default::default() };
+                let backends: Vec<ScalarBackend> = kinds
+                    .iter()
+                    .map(|&k| ScalarBackend::with_kernels(k).unwrap())
+                    .collect();
+                let pool = ParallelBackend::new(3);
+                for t in 1..=5 {
+                    let g = grad(&mut rng, n, variant);
+                    let h = Hyper::for_step(&cfg, 1e-3, t);
+                    scalar_ref::step_state(&mut legacy, &g, opt, variant,
+                                           &h);
+                    for (st, be) in
+                        tiled.iter_mut().zip(&backends)
+                    {
+                        be.step_full(st, &g, opt, variant, &h).unwrap();
+                    }
+                    pool.step_full(&mut par, &g, opt, variant, &h)
+                        .unwrap();
+                }
+                for (st, &k) in tiled.iter().zip(&kinds) {
+                    assert_states_bit_equal(
+                        &legacy, st,
+                        &format!("{opt}/{variant} seed {seed} \
+                                  kernels={k:?}"));
+                }
+                assert_states_bit_equal(
+                    &legacy, &par,
+                    &format!("{opt}/{variant} seed {seed} parallel"));
             }
-            assert_states_bit_equal(&legacy, &sc,
-                                    &format!("{opt}/{variant} scalar"));
-            assert_states_bit_equal(&legacy, &pa,
-                                    &format!("{opt}/{variant} parallel"));
         }
     }
 }
@@ -149,7 +183,7 @@ fn thread_count_invariance() {
 
     let mut reference = State::init(&theta0, n, OptKind::AdamW,
                                     Variant::Flash);
-    ScalarBackend
+    ScalarBackend::default()
         .step_full(&mut reference, &g, OptKind::AdamW, Variant::Flash, &h)
         .unwrap();
     for threads in [1usize, 2, 3, 8, 0] {
@@ -161,6 +195,31 @@ fn thread_count_invariance() {
         assert_states_bit_equal(&reference, &st,
                                 &format!("threads={threads}"));
     }
+}
+
+/// Mixed kernel sets across backends must also agree: scalar kernels on
+/// the sequential backend vs auto (possibly AVX2) kernels on the
+/// parallel backend.
+#[test]
+fn kernel_set_is_invisible_across_backends() {
+    let mut rng = Rng::new(19);
+    let n = fused::TILE + 5 * GROUP;
+    let theta0 = randn(&mut rng, n, 0.1);
+    let g = grad(&mut rng, n, Variant::Flash);
+    let cfg = TrainConfig::default();
+    let h = Hyper::for_step(&cfg, 1e-3, 3);
+
+    let mut a = State::init(&theta0, n, OptKind::AdamW, Variant::Flash);
+    let mut b = a.clone();
+    make_backend_with(BackendKind::Scalar, 0, KernelKind::Scalar)
+        .unwrap()
+        .step_full(&mut a, &g, OptKind::AdamW, Variant::Flash, &h)
+        .unwrap();
+    make_backend_with(BackendKind::Parallel, 4, KernelKind::Auto)
+        .unwrap()
+        .step_full(&mut b, &g, OptKind::AdamW, Variant::Flash, &h)
+        .unwrap();
+    assert_states_bit_equal(&a, &b, "scalar-kernels vs auto-kernels");
 }
 
 /// Bucket sizes that are NOT multiples of GROUP: the native
@@ -217,7 +276,7 @@ fn boundary_sizes() {
         let mut a = State::init(&theta0, n, OptKind::AdamW,
                                 Variant::OptQuant);
         let mut b = a.clone();
-        ScalarBackend
+        ScalarBackend::default()
             .step_full(&mut a, &g, OptKind::AdamW, Variant::OptQuant, &h)
             .unwrap();
         ParallelBackend::new(4)
@@ -247,7 +306,7 @@ fn native_backends_cover_non_artifact_pairs() {
             let g = grad(&mut rng, n, variant);
             let mut a = State::init(&theta0, n, opt, variant);
             let mut b = a.clone();
-            ScalarBackend
+            ScalarBackend::default()
                 .step_full(&mut a, &g, opt, variant, &h)
                 .unwrap();
             ParallelBackend::new(2)
@@ -275,4 +334,102 @@ fn step_all_fires_bucket_hooks_in_order() {
     let mut seen = Vec::new();
     opt.step_all(&g, &h, |i| seen.push(i)).unwrap();
     assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+}
+
+/// The tiled fused step keeps its scratch O(tile) no matter how large
+/// the partition is — asserted through the memory tracker so the bound
+/// shows up in the same accounting the paper's Table 4 uses.
+#[test]
+fn fused_scratch_is_o_tile_via_memory_tracker() {
+    let cfg = TrainConfig::default();
+    let h = Hyper::for_step(&cfg, 1e-3, 1);
+    // a partition 128x the tile: O(partition) scratch would be 128x
+    // over the asserted bound
+    let n = 128 * fused::TILE;
+    let mut rng = Rng::new(5);
+    let theta0 = randn(&mut rng, n, 0.1);
+    let g = grad(&mut rng, n, Variant::Flash);
+
+    fused::reset_scratch_peak();
+    let mut st = State::init(&theta0, n, OptKind::AdamW, Variant::Flash);
+    ScalarBackend::default()
+        .step_full(&mut st, &g, OptKind::AdamW, Variant::Flash, &h)
+        .unwrap();
+    let scratch = fused::scratch_peak_bytes();
+    assert!(scratch > 0, "scratch accounting not wired");
+
+    let mut tracker = Tracker::new();
+    st.track(&mut tracker);
+    let state_bytes = tracker.current_bytes();
+    tracker.alloc(Category::Transient, "fused_scratch", scratch);
+    // O(tile): 3 fp32 tiles, independent of partition length
+    assert_eq!(scratch, (3 * fused::TILE * 4) as u64);
+    assert!(scratch * 16 < state_bytes,
+            "scratch {scratch} is not small vs state {state_bytes}");
+    assert_eq!(tracker.category_live(Category::Transient), scratch);
+}
+
+/// Multi-group FlashOptimizer on the parallel backend (single batched
+/// pool dispatch) must match the scalar backend's per-group loop bit
+/// for bit, and fire its release hooks once per (group, bucket).
+#[test]
+fn batched_group_dispatch_matches_per_group_loop() {
+    let n = 9 * GROUP;
+    let specs = || {
+        vec![
+            GroupSpec {
+                name: "big".into(),
+                ranges: vec![(0, 7 * GROUP)],
+                hyper: Default::default(),
+            },
+            GroupSpec {
+                name: "small".into(),
+                ranges: vec![(7 * GROUP, n)],
+                hyper: flashtrain::optim::GroupHyper {
+                    weight_decay: Some(0.0),
+                    lr_scale: Some(0.5),
+                    ..Default::default()
+                },
+            },
+        ]
+    };
+    let mut rng = Rng::new(23);
+    let theta0 = randn(&mut rng, n, 0.1);
+    let cfg = TrainConfig::default();
+    let mk = |backend: BackendKind, threads: usize| {
+        FlashOptimizer::native(
+            OptKind::AdamW, Variant::Flash, 2 * GROUP, &theta0, specs(),
+            HyperDefaults::of(&cfg), backend, threads)
+            .unwrap()
+    };
+    let mut scalar = mk(BackendKind::Scalar, 0);
+    let mut parallel = mk(BackendKind::Parallel, 3);
+    // only the batched parallel path stages per-group gradient copies,
+    // and it must report them for the tracker
+    assert_eq!(scalar.staged_grad_bytes(), 0);
+    let expect_staged: u64 = parallel
+        .groups
+        .iter()
+        .map(|g| g.opt.state.n as u64 * 4)
+        .sum();
+    assert_eq!(parallel.staged_grad_bytes(), expect_staged);
+    let mut hooks_scalar = Vec::new();
+    let mut hooks_parallel = Vec::new();
+    for t in 1..=6usize {
+        let g = grad(&mut rng, n, Variant::Flash);
+        scalar.step(&g, 1e-3, t, |gi, bi| hooks_scalar.push((gi, bi)))
+            .unwrap();
+        parallel
+            .step(&g, 1e-3, t, |gi, bi| hooks_parallel.push((gi, bi)))
+            .unwrap();
+    }
+    // same hooks in the same order (the batched path fires them after
+    // its single barrier)
+    assert_eq!(hooks_scalar, hooks_parallel);
+    for (gs, gp) in scalar.groups.iter().zip(&parallel.groups) {
+        assert_eq!(gs.name, gp.name);
+        assert_states_bit_equal(&gs.opt.state, &gp.opt.state,
+                                &format!("group {}", gs.name));
+    }
+    assert_eq!(scalar.master_weights(n), parallel.master_weights(n));
 }

@@ -1,0 +1,391 @@
+//! Kernel-layer differential suite: every `KernelSet` entry point must
+//! be bit-exact to the scalar `formats/` reference.
+//!
+//! The AVX2 checks run only where the CPU supports AVX2 (a skip note is
+//! printed otherwise); the portable set is checked unconditionally,
+//! which also pins the function-pointer plumbing itself.
+//!
+//! Coverage highlights (ISSUE satellite):
+//! * exhaustive 2^16-bit-pattern sweeps for the fp16 and bf16 decoders
+//!   (every NaN payload, every subnormal, both signed zeros, inf);
+//! * encoder sweeps over all values decoded from those patterns, their
+//!   ULP-perturbations (tie-rounding neighborhoods), and dense random
+//!   floats across binades incl. NaN/inf/subnormals;
+//! * adversarial companding groups: all-zero, absmax-saturating
+//!   (f16-scale overflow), denormal-scale, and ±tie-rounding values;
+//! * weight-split compress/decompress over random + special values.
+
+use flashtrain::config::KernelKind;
+use flashtrain::formats::{companding, fp16, weight_split, GROUP};
+use flashtrain::kernels::{avx2_available, kernel_set, KernelSet};
+use flashtrain::util::rng::Rng;
+
+/// Kernel sets to pin against the scalar reference.
+fn sets_under_test() -> Vec<&'static KernelSet> {
+    let mut v = vec![kernel_set(KernelKind::Scalar).unwrap()];
+    if avx2_available() {
+        v.push(kernel_set(KernelKind::Avx2).unwrap());
+    } else {
+        eprintln!(
+            "note: AVX2 not available; kernel equivalence covers the \
+             portable set only"
+        );
+    }
+    v
+}
+
+fn assert_f32_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: len");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(),
+                   "{what}[{i}]: {x:?} ({:#010x}) vs {y:?} ({:#010x})",
+                   x.to_bits(), y.to_bits());
+    }
+}
+
+// --- exhaustive 16-bit decoder sweeps ------------------------------------
+
+#[test]
+fn f16_to_f32_exhaustive_all_65536_patterns() {
+    let src: Vec<u16> = (0..=u16::MAX).collect();
+    let mut reference = vec![0f32; src.len()];
+    for (d, &s) in reference.iter_mut().zip(&src) {
+        *d = fp16::f16_bits_to_f32(s);
+    }
+    for ks in sets_under_test() {
+        let mut out = vec![0f32; src.len()];
+        (ks.f16_to_f32)(&src, &mut out);
+        assert_f32_bits_eq(&reference, &out,
+                           &format!("f16_to_f32[{}]", ks.name));
+    }
+}
+
+#[test]
+fn bf16_to_f32_exhaustive_all_65536_patterns() {
+    let src: Vec<u16> = (0..=u16::MAX).collect();
+    let mut reference = vec![0f32; src.len()];
+    for (d, &s) in reference.iter_mut().zip(&src) {
+        *d = flashtrain::formats::bf16::bf16_bits_to_f32(s);
+    }
+    for ks in sets_under_test() {
+        let mut out = vec![0f32; src.len()];
+        (ks.bf16_to_f32)(&src, &mut out);
+        assert_f32_bits_eq(&reference, &out,
+                           &format!("bf16_to_f32[{}]", ks.name));
+    }
+}
+
+// --- encoder sweeps ------------------------------------------------------
+
+/// Adversarial f32 inputs for the 16-bit encoders: every exactly
+/// representable f16 value, its ULP-neighborhood (tie-rounding cases),
+/// dense random floats across binades, and specials.
+fn encoder_inputs() -> Vec<f32> {
+    let mut v = Vec::with_capacity(5 * 65536 + 4096);
+    for bits in 0..=u16::MAX {
+        let x = fp16::f16_bits_to_f32(bits);
+        v.push(x);
+        // perturb both ways by one f32 ULP: lands just off the exact
+        // value, probing the round-down/round-up boundary
+        v.push(f32::from_bits(x.to_bits().wrapping_add(1)));
+        v.push(f32::from_bits(x.to_bits().wrapping_sub(1)));
+        // exact halfway points between adjacent f16 values (RNE ties)
+        let next = fp16::f16_bits_to_f32(bits.wrapping_add(1));
+        if x.is_finite() && next.is_finite() {
+            v.push(x / 2.0 + next / 2.0);
+        }
+        // bf16-relevant pattern: same 16 bits as the high half
+        v.push(f32::from_bits((bits as u32) << 16));
+    }
+    let mut rng = Rng::new(0xF16);
+    for _ in 0..4096 {
+        v.push(f32::from_bits(rng.u64() as u32));
+    }
+    v.extend_from_slice(&[
+        0.0, -0.0, f32::INFINITY, f32::NEG_INFINITY, f32::NAN,
+        f32::MIN_POSITIVE, f32::MAX, f32::MIN,
+        f32::from_bits(1),          // smallest subnormal
+        f32::from_bits(0x007F_FFFF), // largest subnormal
+        65504.0, 65519.9, 65520.0, // f16 overflow boundary
+        2f32.powi(-24), 2f32.powi(-25), 2f32.powi(-26),
+        1.0 + 2f32.powi(-11), 1.0 + 3.0 * 2f32.powi(-11),
+    ]);
+    v
+}
+
+#[test]
+fn f32_to_f16_matches_scalar_on_adversarial_sweep() {
+    let src = encoder_inputs();
+    let mut reference = vec![0u16; src.len()];
+    for (d, &s) in reference.iter_mut().zip(&src) {
+        *d = fp16::f32_to_f16_bits(s);
+    }
+    for ks in sets_under_test() {
+        let mut out = vec![0u16; src.len()];
+        (ks.f32_to_f16)(&src, &mut out);
+        for (i, (a, b)) in reference.iter().zip(&out).enumerate() {
+            assert_eq!(a, b,
+                       "f32_to_f16[{}] at {i}: input {:?} ({:#010x}) \
+                        -> {a:#06x} vs {b:#06x}",
+                       ks.name, src[i], src[i].to_bits());
+        }
+    }
+}
+
+#[test]
+fn f32_to_bf16_matches_scalar_on_adversarial_sweep() {
+    let src = encoder_inputs();
+    let mut reference = vec![0u16; src.len()];
+    for (d, &s) in reference.iter_mut().zip(&src) {
+        *d = flashtrain::formats::bf16::f32_to_bf16_bits(s);
+    }
+    for ks in sets_under_test() {
+        let mut out = vec![0u16; src.len()];
+        (ks.f32_to_bf16)(&src, &mut out);
+        for (i, (a, b)) in reference.iter().zip(&out).enumerate() {
+            assert_eq!(a, b,
+                       "f32_to_bf16[{}] at {i}: input {:?} ({:#010x}) \
+                        -> {a:#06x} vs {b:#06x}",
+                       ks.name, src[i], src[i].to_bits());
+        }
+    }
+}
+
+// --- companding ----------------------------------------------------------
+
+/// Adversarial momentum/variance groups (GROUP-multiples).
+fn adversarial_groups(signed: bool) -> Vec<f32> {
+    let mut v: Vec<f32> = Vec::new();
+    // all-zero group
+    v.extend(std::iter::repeat(0.0f32).take(GROUP));
+    // absmax saturates the f16 scale (s > 65504 clamps to fp16::MAX)
+    v.extend((0..GROUP).map(|i| 1e30f32 * (i as f32 + 1.0)));
+    // denormal-scale group: absmax so tiny its f16 scale rounds to 0,
+    // forcing the safe = 1.0 fallback
+    v.extend((0..GROUP).map(|i| 1e-42f32 * (i as f32)));
+    // f16-subnormal scale
+    v.extend((0..GROUP).map(|i| 3e-8f32 * (i as f32 + 1.0)));
+    // ±tie-rounding values: group absmax 1.0 (last element), others at
+    // exact multiples of 1/254 whose companded code * 127 lands on .5
+    let mut tie: Vec<f32> = (0..GROUP - 1)
+        .map(|i| (2 * i + 1) as f32 / 254.0)
+        .collect();
+    tie.push(1.0);
+    v.extend(tie.iter().copied());
+    // mixed magnitudes across many binades
+    v.extend((0..GROUP).map(|i| 2f32.powi(i as i32 - 16)));
+    // random heavy-tailed
+    let mut rng = Rng::new(0xC0);
+    v.extend((0..4 * GROUP).map(|_| {
+        let a = rng.normal() as f32;
+        let b = (rng.normal() as f32).abs() + 0.3;
+        a / b * 0.01
+    }));
+    if signed {
+        // alternate signs to hit the negative companding branch
+        for (i, x) in v.iter_mut().enumerate() {
+            if i % 2 == 1 {
+                *x = -*x;
+            }
+        }
+    } else {
+        for x in v.iter_mut() {
+            *x = x.abs();
+        }
+    }
+    assert_eq!(v.len() % GROUP, 0);
+    v
+}
+
+#[test]
+fn companded_momentum_kernels_bit_exact() {
+    let m = adversarial_groups(true);
+    let n = m.len();
+    let (mut q_ref, mut s_ref) =
+        (vec![0i8; n], vec![0u16; n / GROUP]);
+    companding::quant_momentum(&m, &mut q_ref, &mut s_ref);
+    let mut out_ref = vec![0f32; n];
+    companding::dequant_momentum(&q_ref, &s_ref, &mut out_ref);
+
+    for ks in sets_under_test() {
+        let (mut q, mut s) = (vec![0i8; n], vec![0u16; n / GROUP]);
+        (ks.quant_momentum)(&m, &mut q, &mut s);
+        assert_eq!(q, q_ref, "quant_momentum[{}] codes", ks.name);
+        assert_eq!(s, s_ref, "quant_momentum[{}] scales", ks.name);
+        let mut out = vec![0f32; n];
+        (ks.dequant_momentum)(&q, &s, &mut out);
+        assert_f32_bits_eq(&out_ref, &out,
+                           &format!("dequant_momentum[{}]", ks.name));
+    }
+
+    // linear ablation codec
+    let (mut ql_ref, mut sl_ref) =
+        (vec![0i8; n], vec![0u16; n / GROUP]);
+    companding::quant_momentum_linear(&m, &mut ql_ref, &mut sl_ref);
+    let mut outl_ref = vec![0f32; n];
+    companding::dequant_momentum_linear(&ql_ref, &sl_ref, &mut outl_ref);
+    for ks in sets_under_test() {
+        let (mut q, mut s) = (vec![0i8; n], vec![0u16; n / GROUP]);
+        (ks.quant_momentum_linear)(&m, &mut q, &mut s);
+        assert_eq!(q, ql_ref, "quant_momentum_linear[{}]", ks.name);
+        assert_eq!(s, sl_ref, "quant_momentum_linear[{}] scales",
+                   ks.name);
+        let mut out = vec![0f32; n];
+        (ks.dequant_momentum_linear)(&q, &s, &mut out);
+        assert_f32_bits_eq(
+            &outl_ref, &out,
+            &format!("dequant_momentum_linear[{}]", ks.name));
+    }
+}
+
+#[test]
+fn companded_variance_kernels_bit_exact() {
+    let mut v = adversarial_groups(false);
+    // a group with negative entries: sqrt produces NaN lanes, which the
+    // scalar absmax skips and the scalar u8 cast sends to 0 — the SIMD
+    // path must emulate both exactly
+    v.extend((0..GROUP).map(|i| {
+        let x = (i as f32 + 1.0) * 0.01;
+        if i % 3 == 0 { -x } else { x }
+    }));
+    let v = v;
+    let n = v.len();
+    let (mut q_ref, mut s_ref) =
+        (vec![0u8; n], vec![0u16; n / GROUP]);
+    companding::quant_variance(&v, &mut q_ref, &mut s_ref);
+    let mut out_ref = vec![0f32; n];
+    companding::dequant_variance(&q_ref, &s_ref, &mut out_ref);
+
+    for ks in sets_under_test() {
+        let (mut q, mut s) = (vec![0u8; n], vec![0u16; n / GROUP]);
+        (ks.quant_variance)(&v, &mut q, &mut s);
+        assert_eq!(q, q_ref, "quant_variance[{}] codes", ks.name);
+        assert_eq!(s, s_ref, "quant_variance[{}] scales", ks.name);
+        let mut out = vec![0f32; n];
+        (ks.dequant_variance)(&q, &s, &mut out);
+        assert_f32_bits_eq(&out_ref, &out,
+                           &format!("dequant_variance[{}]", ks.name));
+    }
+
+    let (mut ql_ref, mut sl_ref) =
+        (vec![0u8; n], vec![0u16; n / GROUP]);
+    companding::quant_variance_linear(&v, &mut ql_ref, &mut sl_ref);
+    let mut outl_ref = vec![0f32; n];
+    companding::dequant_variance_linear(&ql_ref, &sl_ref, &mut outl_ref);
+    for ks in sets_under_test() {
+        let (mut q, mut s) = (vec![0u8; n], vec![0u16; n / GROUP]);
+        (ks.quant_variance_linear)(&v, &mut q, &mut s);
+        assert_eq!(q, ql_ref, "quant_variance_linear[{}]", ks.name);
+        assert_eq!(s, sl_ref, "quant_variance_linear[{}] scales",
+                   ks.name);
+        let mut out = vec![0f32; n];
+        (ks.dequant_variance_linear)(&q, &s, &mut out);
+        assert_f32_bits_eq(
+            &outl_ref, &out,
+            &format!("dequant_variance_linear[{}]", ks.name));
+    }
+}
+
+#[test]
+fn companding_kernels_random_sweep() {
+    // large random buffer: exercises the packed stores across many
+    // groups and both signs at many magnitudes
+    let mut rng = Rng::new(0xABCD);
+    let n = 256 * GROUP;
+    let m: Vec<f32> = (0..n)
+        .map(|_| {
+            let mag = (rng.f32() * 60.0 - 45.0).exp2();
+            let sign = if rng.f32() < 0.5 { -1.0 } else { 1.0 };
+            sign * mag * (0.5 + rng.f32())
+        })
+        .collect();
+    let (mut q_ref, mut s_ref) = (vec![0i8; n], vec![0u16; n / GROUP]);
+    companding::quant_momentum(&m, &mut q_ref, &mut s_ref);
+    for ks in sets_under_test() {
+        let (mut q, mut s) = (vec![0i8; n], vec![0u16; n / GROUP]);
+        (ks.quant_momentum)(&m, &mut q, &mut s);
+        assert_eq!(q, q_ref, "random momentum codes [{}]", ks.name);
+        assert_eq!(s, s_ref, "random momentum scales [{}]", ks.name);
+    }
+    let vv: Vec<f32> = m.iter().map(|x| x * x).collect();
+    let (mut q_ref, mut s_ref) = (vec![0u8; n], vec![0u16; n / GROUP]);
+    companding::quant_variance(&vv, &mut q_ref, &mut s_ref);
+    for ks in sets_under_test() {
+        let (mut q, mut s) = (vec![0u8; n], vec![0u16; n / GROUP]);
+        (ks.quant_variance)(&vv, &mut q, &mut s);
+        assert_eq!(q, q_ref, "random variance codes [{}]", ks.name);
+        assert_eq!(s, s_ref, "random variance scales [{}]", ks.name);
+    }
+}
+
+// --- weight splitting ----------------------------------------------------
+
+fn split_inputs() -> Vec<f32> {
+    let mut rng = Rng::new(0x5117);
+    let mut v: Vec<f32> = (0..8192)
+        .map(|_| {
+            let mag = (rng.f32() * 40.0 - 30.0).exp2();
+            let sign = if rng.f32() < 0.5 { -1.0 } else { 1.0 };
+            sign * mag * (0.5 + rng.f32())
+        })
+        .collect();
+    v.extend_from_slice(&[
+        0.0, -0.0, f32::INFINITY, f32::NEG_INFINITY, f32::NAN,
+        f32::from_bits(1), f32::from_bits(0x007F_FFFF),
+        f32::MIN_POSITIVE, f32::MAX, f32::MIN, 1.0, -1.0,
+        1.0 + 2f32.powi(-8), // bf16 RNE tie
+    ]);
+    // odd length on purpose: exercises the vector tails
+    v.push(0.12345f32);
+    v
+}
+
+#[test]
+fn weight_split_kernels_bit_exact() {
+    let theta = split_inputs();
+    let n = theta.len();
+    let (mut tp_ref, mut rho_ref) = (vec![0u16; n], vec![0i8; n]);
+    weight_split::compress_slice(&theta, &mut tp_ref, &mut rho_ref);
+    let mut out_ref = vec![0f32; n];
+    weight_split::decompress_slice(&tp_ref, &rho_ref, &mut out_ref);
+
+    for ks in sets_under_test() {
+        let (mut tp, mut rho) = (vec![0u16; n], vec![0i8; n]);
+        (ks.split_compress)(&theta, &mut tp, &mut rho);
+        assert_eq!(tp, tp_ref, "split_compress[{}] theta_p", ks.name);
+        assert_eq!(rho, rho_ref, "split_compress[{}] rho", ks.name);
+        let mut out = vec![0f32; n];
+        (ks.split_decompress)(&tp, &rho, &mut out);
+        assert_f32_bits_eq(&out_ref, &out,
+                           &format!("split_decompress[{}]", ks.name));
+    }
+}
+
+#[test]
+fn kernels_handle_short_and_empty_slices() {
+    // below every vector width: everything goes through the tails
+    for ks in sets_under_test() {
+        for n in [0usize, 1, 3, 7, 15, 31] {
+            let theta: Vec<f32> =
+                (0..n).map(|i| i as f32 * 0.25 - 1.0).collect();
+            let (mut tp, mut rho) = (vec![0u16; n], vec![0i8; n]);
+            (ks.split_compress)(&theta, &mut tp, &mut rho);
+            let mut out = vec![0f32; n];
+            (ks.split_decompress)(&tp, &rho, &mut out);
+            let (mut tp_ref, mut rho_ref) =
+                (vec![0u16; n], vec![0i8; n]);
+            weight_split::compress_slice(&theta, &mut tp_ref,
+                                         &mut rho_ref);
+            assert_eq!(tp, tp_ref, "n={n} [{}]", ks.name);
+            assert_eq!(rho, rho_ref, "n={n} [{}]", ks.name);
+
+            let mut bits = vec![0u16; n];
+            (ks.f32_to_f16)(&theta, &mut bits);
+            let mut bits_ref = vec![0u16; n];
+            for (d, &s) in bits_ref.iter_mut().zip(&theta) {
+                *d = fp16::f32_to_f16_bits(s);
+            }
+            assert_eq!(bits, bits_ref, "f16 n={n} [{}]", ks.name);
+        }
+    }
+}
