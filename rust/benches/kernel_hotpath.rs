@@ -1,18 +1,20 @@
 //! Bench: hot-path microbenchmarks for the §Perf pass (not a paper
 //! table) — per-codec kernel throughput (scalar vs AVX2), native
-//! fused-step throughput (scalar vs AVX2 vs parallel), the
-//! optimizer-step cost through the AOT HLO executables, and the
-//! literal-marshalling overhead.  Writes a machine-readable
-//! `BENCH_kernels.json` (schema in docs/PERF.md) so the repo's perf
-//! trajectory is diffable across PRs.
+//! fused-step throughput (scalar vs AVX2 vs parallel), the fused
+//! single-pass vs tiled three-pass comparison, the optimizer-step cost
+//! through the AOT HLO executables, and the literal-marshalling
+//! overhead.  Writes a machine-readable `BENCH_kernels.json` (schema
+//! in docs/PERF.md) so the repo's perf trajectory is diffable across
+//! PRs.
 //!
 //!   cargo bench --bench kernel_hotpath -- [--quick] [--check]
 //!       [--threads T] [--bucket N] [--out BENCH_kernels.json]
 //!
 //! `--check` is the CI smoke mode: small sizes, asserts that scalar
-//! and AVX2 kernels (where detected) agree bit-exactly and that the
-//! emitted JSON parses — so kernel regressions fail PRs, not just
-//! benches.
+//! and AVX2 kernels (where detected) agree bit-exactly, that the
+//! fused / tiled / legacy-scalar step paths agree three ways, and that
+//! the emitted JSON (including the `fused` section) parses — so kernel
+//! regressions fail PRs, not just benches.
 
 use std::collections::BTreeMap;
 
@@ -21,7 +23,7 @@ use flashtrain::config::{Json, KernelKind, OptKind, TrainConfig,
                          Variant};
 use flashtrain::formats::GROUP;
 use flashtrain::kernels::{avx2_available, kernel_set, KernelSet};
-use flashtrain::optim::{BucketOptimizer, Hyper, State};
+use flashtrain::optim::{scalar_ref, BucketOptimizer, Hyper, State};
 use flashtrain::runtime::literal as lit;
 use flashtrain::util::bench::{bench_for, black_box, fmt_time,
                               manifest_or_skip};
@@ -66,6 +68,14 @@ fn kernel_sets() -> Vec<&'static KernelSet> {
     let mut v = vec![kernel_set(KernelKind::Scalar).unwrap()];
     if avx2_available() {
         v.push(kernel_set(KernelKind::Avx2).unwrap());
+    }
+    v
+}
+
+fn kernel_kinds() -> Vec<KernelKind> {
+    let mut v = vec![KernelKind::Scalar];
+    if avx2_available() {
+        v.push(KernelKind::Avx2);
     }
     v
 }
@@ -130,6 +140,7 @@ fn main() {
     let cfg = TrainConfig::default();
     let mut codec_json: Vec<Json> = Vec::new();
     let mut fused_json: Vec<Json> = Vec::new();
+    let mut fused_vs_tiled_json: Vec<Json> = Vec::new();
 
     // ---- per-codec kernel throughput: scalar vs AVX2 ----------------------
     let theta: Vec<f32> =
@@ -306,10 +317,110 @@ fn main() {
     }
     t.print();
 
+    // ---- fused single-pass vs tiled three-pass ----------------------------
+    // the register-resident fast path against its fallback, per kernel
+    // set; uncovered pairs report the fallback on both sides so the
+    // table shows the full selection matrix
+    const FUSED_ROWS: [(OptKind, Variant, &str); 5] = [
+        (OptKind::AdamW, Variant::Flash, "adamw flash"),
+        (OptKind::Sgd, Variant::Flash, "sgd flash"),
+        (OptKind::Lion, Variant::Flash, "lion flash"),
+        (OptKind::AdamW, Variant::NoCompand, "adamw nocompand"),
+        (OptKind::AdamW, Variant::OptQuant, "adamw quant"),
+    ];
+    let mut t = Table::new(
+        &format!("fused single-pass vs tiled three-pass ({bucket} \
+                  params)"),
+        &["variant", "kernels", "path", "fused", "tiled", "speedup"]);
+    let mut fused_checks = 0usize;
+    for (opt, variant, label) in FUSED_ROWS {
+        let theta: Vec<f32> =
+            (0..bucket).map(|_| rng.normal() as f32 * 0.1).collect();
+        let g: Vec<f32> = (0..bucket)
+            .map(|_| {
+                let x = rng.normal() as f32 * 0.01;
+                if variant.splits_weights() {
+                    flashtrain::formats::bf16::round_f32_to_bf16(x)
+                } else {
+                    x
+                }
+            })
+            .collect();
+        let padded = bucket.next_multiple_of(GROUP);
+        let mut g_pad = g.clone();
+        g_pad.resize(padded, 0.0);
+        let h = Hyper::for_step(&cfg, 1e-3, 10);
+
+        for kind in kernel_kinds() {
+            let covered = kernel_set(kind)
+                .unwrap()
+                .fused_step(opt, variant)
+                .is_some();
+            let fused_be =
+                ScalarBackend::with_options(kind, true).unwrap();
+            let tiled_be =
+                ScalarBackend::with_options(kind, false).unwrap();
+            let mut st = State::init(&theta, padded, opt, variant);
+            let rf = bench_for(label, budget, 3, || {
+                fused_be
+                    .step_full(&mut st, &g_pad, opt, variant, &h)
+                    .unwrap();
+            });
+            let mut st = State::init(&theta, padded, opt, variant);
+            let rt = bench_for(label, budget, 3, || {
+                tiled_be
+                    .step_full(&mut st, &g_pad, opt, variant, &h)
+                    .unwrap();
+            });
+            let (fmed, tmed) = (rf.median_s(), rt.median_s());
+            let path = if covered { "fused" } else { "tiled-fallback" };
+            t.row(&[label.into(), kind.name().into(), path.into(),
+                    fmt_time(fmed), fmt_time(tmed),
+                    format!("{:.2}x", tmed / fmed)]);
+            fused_vs_tiled_json.push(obj(vec![
+                ("optimizer", Json::Str(opt.name().into())),
+                ("variant", Json::Str(variant.name().into())),
+                ("kernels", Json::Str(kind.name().into())),
+                ("covered", Json::Bool(covered)),
+                ("fused_median_s", Json::Num(fmed)),
+                ("tiled_median_s", Json::Num(tmed)),
+                ("speedup", Json::Num(tmed / fmed)),
+            ]));
+
+            if check {
+                // three-way agreement: legacy scalar mirror vs tiled
+                // vs fused, one clean step from the same start
+                let mut legacy =
+                    State::init(&theta, padded, opt, variant);
+                scalar_ref::step_state(&mut legacy, &g_pad, opt,
+                                       variant, &h);
+                let mut a = State::init(&theta, padded, opt, variant);
+                tiled_be
+                    .step_full(&mut a, &g_pad, opt, variant, &h)
+                    .unwrap();
+                let mut b = State::init(&theta, padded, opt, variant);
+                fused_be
+                    .step_full(&mut b, &g_pad, opt, variant, &h)
+                    .unwrap();
+                assert_states_bit_equal(
+                    &legacy, &a, &format!("{label} tiled vs scalar"));
+                assert_states_bit_equal(
+                    &legacy, &b, &format!("{label} fused vs scalar"));
+                fused_checks += 1;
+            }
+        }
+    }
+    t.print();
+    if check {
+        println!("fused check OK: fused/tiled/scalar_ref three-way \
+                  agreement on {fused_checks} (row, kernel-set) \
+                  combinations");
+    }
+
     // ---- machine-readable output ------------------------------------------
     let doc = obj(vec![
         ("bench", Json::Str("kernel_hotpath".into())),
-        ("schema_version", Json::Num(1.0)),
+        ("schema_version", Json::Num(2.0)),
         ("quick", Json::Bool(quick)),
         ("check", Json::Bool(check)),
         ("elements", Json::Num(n as f64)),
@@ -318,11 +429,31 @@ fn main() {
         ("avx2_detected", Json::Bool(avx2_available())),
         ("codecs", Json::Arr(codec_json)),
         ("fused_step", Json::Arr(fused_json)),
+        ("fused", Json::Arr(fused_vs_tiled_json)),
     ]);
     let text = doc.to_string_pretty();
     let parsed = Json::parse(&text).expect("emitted JSON must parse");
     assert!(parsed.get("codecs").and_then(Json::as_arr).is_some());
     assert!(parsed.get("fused_step").and_then(Json::as_arr).is_some());
+    // the `fused` section is schema-validated, not just parsed: every
+    // row must carry the selection matrix + both medians
+    let fused_arr = parsed
+        .get("fused")
+        .and_then(Json::as_arr)
+        .expect("fused section present");
+    assert!(!fused_arr.is_empty(), "fused section must not be empty");
+    for e in fused_arr {
+        for key in ["optimizer", "variant", "kernels"] {
+            assert!(e.get(key).and_then(Json::as_str).is_some(),
+                    "fused entry missing string {key}");
+        }
+        for key in ["fused_median_s", "tiled_median_s", "speedup"] {
+            assert!(e.get(key).and_then(Json::as_f64).is_some(),
+                    "fused entry missing number {key}");
+        }
+        assert!(matches!(e.get("covered"), Some(Json::Bool(_))),
+                "fused entry missing bool covered");
+    }
     std::fs::write(&out_path, text + "\n")
         .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
     println!("wrote {out_path}");

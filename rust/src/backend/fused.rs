@@ -1,34 +1,40 @@
-//! The fused dequant → update → requant chain over one partition,
-//! tiled through fixed scratch buffers.
+//! The fused dequant → update → requant chain over one partition:
+//! a register-resident single-pass fast path, with the tiled
+//! fixed-scratch three-pass path as the fallback.
 //!
 //! This is the native mirror of the AOT fused-step kernels (paper
-//! Algorithms 4/5/6).  Instead of materializing partition-sized fp32
-//! working copies (which tripled memory traffic on a memory-bound
-//! kernel), the partition streams through GROUP-multiple tiles of
-//! [`TILE`] elements: dequant a tile into fixed scratch, apply the
-//! shared `scalar_ref` update rule to the tile, requant the tile back —
-//! so scratch is **O(tile)**, not O(partition), and each byte of
-//! compact state is touched exactly once per step.  Buffers the variant
-//! already stores in fp32 (reference master weights, unquantized
-//! moments) are updated **in place** with no scratch at all.
+//! Algorithms 4/5/6).  Two execution strategies share one semantics:
 //!
-//! Codec work goes through a [`KernelSet`] (scalar reference loops or
-//! runtime-dispatched AVX2 — see `crate::kernels`); the element-wise
-//! update itself always runs the `scalar_ref` slice rules, which keeps
-//! a single source of update truth.
+//! * **Fused single-pass** (the fast path): when the resolved
+//!   [`KernelSet`] has a fused kernel for the `(optimizer, variant)`
+//!   pair (`KernelSet::fused_step` — the fully compact `flash` /
+//!   `nocompand` layouts), the whole partition runs through one
+//!   register-resident kernel: dequant → moment update → weight-split
+//!   update → requant per 8-lane block, **zero** fp32 scratch.  Opt
+//!   out via `fused_step = false` in `TrainConfig` (`--no-fused-step`)
+//!   to pin the tiled path for debugging.
+//! * **Tiled three-pass** (the fallback): the partition streams
+//!   through GROUP-multiple tiles of [`TILE`] elements — dequant a
+//!   tile into fixed scratch, apply the shared `scalar_ref` update
+//!   rule, requant the tile back — so scratch is **O(tile)**, not
+//!   O(partition).  Buffers the variant already stores in fp32
+//!   (reference master weights, unquantized moments) are updated **in
+//!   place** with no scratch at all.
 //!
-//! Bit-exactness: updates are element-wise and requantization is
-//! group-wise over whole GROUPs, so tiling at GROUP boundaries — like
-//! partitioning at GROUP boundaries — cannot change a single bit
-//! relative to the legacy whole-buffer `scalar_ref::step_state`
-//! (enforced by `rust/tests/backend_equivalence.rs`).
+//! Bit-exactness: updates are element-wise, requantization is
+//! group-wise over whole GROUPs, and the fused kernels reuse the exact
+//! codec group helpers + update op sequence of the tiled path — so
+//! fused vs tiled vs the legacy whole-buffer
+//! `scalar_ref::step_state` cannot differ by a single bit (enforced by
+//! `rust/tests/backend_equivalence.rs`, `rust/tests/fused_fuzz.rs`,
+//! and `rust/tests/kernel_equivalence.rs`).
 
 use std::cell::Cell;
 
 use crate::backend::partition::Part;
 use crate::config::{OptKind, Variant};
 use crate::formats::GROUP;
-use crate::kernels::KernelSet;
+use crate::kernels::{FusedPart, KernelSet};
 use crate::optim::hyper::Hyper;
 use crate::optim::scalar_ref;
 
@@ -59,14 +65,40 @@ fn note_scratch(bytes: u64) {
     SCRATCH_PEAK.with(|c| c.set(c.get().max(bytes)));
 }
 
-/// One fused optimizer step over a single partition.
+/// One fused optimizer step over a single partition.  `fused` selects
+/// the register-resident single-pass fast path where the kernel set
+/// covers the `(opt, variant)` pair; pairs without a fused kernel (and
+/// `fused = false`) run the tiled three-pass path.  Both produce
+/// identical bits.
 pub fn step_part(p: &mut Part<'_>, opt: OptKind, variant: Variant,
-                 h: &Hyper, ks: &KernelSet) {
+                 h: &Hyper, ks: &KernelSet, fused: bool) {
     let n = p.len;
     debug_assert_eq!(p.g.len(), n);
     if n == 0 {
         return;
     }
+    let s = h.scalars();
+
+    if fused {
+        if let Some(kernel) = ks.fused_step(opt, variant) {
+            // single pass, registers only: no scratch to account for
+            let mut fp = FusedPart {
+                theta: p.theta.as_deref_mut(),
+                theta_p: p.theta_p.as_deref_mut(),
+                rho: p.rho.as_deref_mut(),
+                m: p.m.as_deref_mut(),
+                v: p.v.as_deref_mut(),
+                mq: p.mq.as_deref_mut(),
+                ms: p.ms.as_deref_mut(),
+                vq: p.vq.as_deref_mut(),
+                vs: p.vs.as_deref_mut(),
+                g: p.g,
+            };
+            kernel(&mut fp, &s);
+            return;
+        }
+    }
+
     let nocompand = variant == Variant::NoCompand;
     let split = variant.splits_weights();
     let quant = variant.quantizes_state();
@@ -149,10 +181,10 @@ pub fn step_part(p: &mut Part<'_>, opt: OptKind, variant: Variant,
                     &mut v_b.as_deref_mut().expect("missing variance")
                         [lo..hi]
                 };
-                scalar_ref::adamw_f32(theta_s, m_s, v_s, g, h);
+                scalar_ref::adamw_f32(theta_s, m_s, v_s, g, &s);
             }
-            OptKind::Sgd => scalar_ref::sgd_f32(theta_s, m_s, g, h),
-            OptKind::Lion => scalar_ref::lion_f32(theta_s, m_s, g, h),
+            OptKind::Sgd => scalar_ref::sgd_f32(theta_s, m_s, g, &s),
+            OptKind::Lion => scalar_ref::lion_f32(theta_s, m_s, g, &s),
         }
 
         // requant tile back into the compact formats
@@ -206,8 +238,9 @@ mod tests {
         assert_eq!(a.v, b.v, "{what} v");
     }
 
-    /// A single full-range (multi-tile) step_part must equal the legacy
-    /// whole-buffer scalar mirror bit for bit — for every kernel set.
+    /// A single full-range (multi-tile) step_part — fused fast path
+    /// and tiled fallback — must equal the legacy whole-buffer scalar
+    /// mirror bit for bit, for every kernel set.
     #[test]
     fn full_range_part_matches_step_state() {
         // 2.5 tiles: exercises full tiles and a partial trailing tile
@@ -234,17 +267,22 @@ mod tests {
                                                      variant, &h);
                 for kind in kinds {
                     let ks = kernel_set(kind).unwrap();
-                    let mut b = State::init(&theta0, n, opt, variant);
-                    let mut part = Part::of_range(&mut b, 0, n, &g);
-                    step_part(&mut part, opt, variant, &h, ks);
-                    states_eq(&a, &b,
-                              &format!("{opt}/{variant}/{}", ks.name));
+                    for fused in [false, true] {
+                        let mut b = State::init(&theta0, n, opt, variant);
+                        let mut part = Part::of_range(&mut b, 0, n, &g);
+                        step_part(&mut part, opt, variant, &h, ks,
+                                  fused);
+                        states_eq(&a, &b,
+                                  &format!("{opt}/{variant}/{}/fused={}",
+                                           ks.name, fused));
+                    }
                 }
             }
         }
     }
 
-    /// Scratch is bounded by the tile, not the partition.
+    /// Tiled-path scratch is bounded by the tile, not the partition;
+    /// the fused fast path uses no scratch at all.
     #[test]
     fn scratch_is_o_tile_not_o_partition() {
         let n = 64 * TILE; // a partition 64x the tile size
@@ -262,12 +300,50 @@ mod tests {
         let mut st = State::init(&theta0, n, OptKind::AdamW,
                                  Variant::Flash);
         let mut part = Part::of_range(&mut st, 0, n, &g);
-        step_part(&mut part, OptKind::AdamW, Variant::Flash, &h, ks);
+        step_part(&mut part, OptKind::AdamW, Variant::Flash, &h, ks,
+                  false);
         let peak = scratch_peak_bytes();
         assert!(peak > 0);
         // 3 fp32 streams (theta, m, v) of one tile each
         assert_eq!(peak, (3 * TILE * 4) as u64);
         assert!(peak < (n * 4) as u64 / 16,
                 "scratch {peak} not O(tile) for partition of {n}");
+
+        // the fused single-pass path never touches the scratch tiles
+        reset_scratch_peak();
+        let mut st = State::init(&theta0, n, OptKind::AdamW,
+                                 Variant::Flash);
+        let mut part = Part::of_range(&mut st, 0, n, &g);
+        step_part(&mut part, OptKind::AdamW, Variant::Flash, &h, ks,
+                  true);
+        assert_eq!(scratch_peak_bytes(), 0,
+                   "fused fast path must be scratch-free");
+    }
+
+    /// An uncovered pair with `fused = true` silently takes the tiled
+    /// path (selection is per (optimizer, variant), never an error).
+    #[test]
+    fn uncovered_pair_falls_back_to_tiled() {
+        let n = TILE + GROUP;
+        let theta0 = vec![0.1f32; n];
+        let g = vec![0.01f32; n];
+        let cfg = TrainConfig::default();
+        let h = Hyper::for_step(&cfg, 1e-3, 1);
+        let ks = kernel_set(KernelKind::Scalar).unwrap();
+        assert!(ks.fused_step(OptKind::AdamW, Variant::OptQuant)
+            .is_none());
+
+        let mut a = State::init(&theta0, n, OptKind::AdamW,
+                                Variant::OptQuant);
+        crate::optim::scalar_ref::step_state(
+            &mut a, &g, OptKind::AdamW, Variant::OptQuant, &h);
+        reset_scratch_peak();
+        let mut b = State::init(&theta0, n, OptKind::AdamW,
+                                Variant::OptQuant);
+        let mut part = Part::of_range(&mut b, 0, n, &g);
+        step_part(&mut part, OptKind::AdamW, Variant::OptQuant, &h, ks,
+                  true);
+        assert!(scratch_peak_bytes() > 0, "expected the tiled fallback");
+        states_eq(&a, &b, "adamw/quant fallback");
     }
 }

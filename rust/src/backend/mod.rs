@@ -80,15 +80,25 @@ pub fn make_backend(kind: BackendKind, threads: usize)
 
 /// Instantiate a native backend with an explicit SIMD kernel-set
 /// selection (`kernels = "auto" | "scalar" | "avx2"` in `TrainConfig`).
+/// The fused single-pass fast path is on by default.
 pub fn make_backend_with(kind: BackendKind, threads: usize,
                          kernels: KernelKind)
                          -> Result<Box<dyn StepBackend>> {
+    make_backend_opts(kind, threads, kernels, true)
+}
+
+/// Instantiate a native backend with explicit kernel-set *and* fused
+/// fast-path selections (`config.kernels` + `config.fused_step`).
+pub fn make_backend_opts(kind: BackendKind, threads: usize,
+                         kernels: KernelKind, fused: bool)
+                         -> Result<Box<dyn StepBackend>> {
     match kind {
         BackendKind::Scalar => {
-            Ok(Box::new(ScalarBackend::with_kernels(kernels)?))
+            Ok(Box::new(ScalarBackend::with_options(kernels, fused)?))
         }
         BackendKind::Parallel => {
-            Ok(Box::new(ParallelBackend::with_kernels(threads, kernels)?))
+            Ok(Box::new(ParallelBackend::with_options(threads, kernels,
+                                                      fused)?))
         }
         BackendKind::Hlo => bail!(
             "the hlo backend runs through the AOT executables \

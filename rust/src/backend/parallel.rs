@@ -42,15 +42,17 @@ pub struct FusedJob<'a> {
     pub h: Hyper,
 }
 
-fn run_chunks(bin: &mut [FusedJob<'_>], ks: &'static KernelSet) {
+fn run_chunks(bin: &mut [FusedJob<'_>], ks: &'static KernelSet,
+              fused: bool) {
     for c in bin.iter_mut() {
-        step_part(&mut c.part, c.opt, c.variant, &c.h, ks);
+        step_part(&mut c.part, c.opt, c.variant, &c.h, ks, fused);
     }
 }
 
 pub struct ParallelBackend {
     threads: usize,
     kernels: &'static KernelSet,
+    fused: bool,
     /// persistent `threads - 1` worker threads (the calling thread
     /// always takes the first shard); the Mutex serializes steps and
     /// keeps the backend `Sync`
@@ -66,7 +68,15 @@ impl ParallelBackend {
     }
 
     /// Like [`new`](Self::new) with an explicit kernel-set selection.
+    /// The fused single-pass fast path is on by default.
     pub fn with_kernels(threads: usize, kind: KernelKind)
+                        -> Result<ParallelBackend> {
+        Self::with_options(threads, kind, true)
+    }
+
+    /// Like [`with_kernels`](Self::with_kernels) with an explicit
+    /// fused-fast-path selection (`config.fused_step`).
+    pub fn with_options(threads: usize, kind: KernelKind, fused: bool)
                         -> Result<ParallelBackend> {
         let t = if threads == 0 {
             std::thread::available_parallelism()
@@ -79,6 +89,7 @@ impl ParallelBackend {
         Ok(ParallelBackend {
             threads: t,
             kernels: kernel_set(kind)?,
+            fused,
             pool: Mutex::new(WorkerPool::new(t - 1)),
         })
     }
@@ -90,6 +101,11 @@ impl ParallelBackend {
     /// Name of the resolved kernel set ("scalar" or "avx2").
     pub fn kernels_name(&self) -> &'static str {
         self.kernels.name
+    }
+
+    /// Whether the fused single-pass fast path is enabled.
+    pub fn fused_enabled(&self) -> bool {
+        self.fused
     }
 
     /// Run `f` with this backend's worker pool (e.g. to shard the
@@ -147,22 +163,23 @@ impl ParallelBackend {
         }
 
         let ks = self.kernels;
+        let fused = self.fused;
         let mut own = bins.remove(0);
         if bins.is_empty() {
-            run_chunks(&mut own, ks);
+            run_chunks(&mut own, ks, fused);
             return;
         }
         let jobs_boxed: Vec<Box<dyn FnOnce() + Send + '_>> = bins
             .into_iter()
             .map(|mut bin| -> Box<dyn FnOnce() + Send + '_> {
-                Box::new(move || run_chunks(&mut bin, ks))
+                Box::new(move || run_chunks(&mut bin, ks, fused))
             })
             .collect();
         let pool = match self.pool.lock() {
             Ok(p) => p,
             Err(poisoned) => poisoned.into_inner(),
         };
-        pool.run_scoped(jobs_boxed, || run_chunks(&mut own, ks));
+        pool.run_scoped(jobs_boxed, || run_chunks(&mut own, ks, fused));
     }
 }
 

@@ -21,6 +21,7 @@ use crate::optim::state::State;
 /// [`ParallelBackend`]: crate::backend::ParallelBackend
 pub struct ScalarBackend {
     kernels: &'static KernelSet,
+    fused: bool,
 }
 
 impl Default for ScalarBackend {
@@ -28,20 +29,35 @@ impl Default for ScalarBackend {
         ScalarBackend {
             kernels: kernel_set(KernelKind::Auto)
                 .expect("auto kernel selection always resolves"),
+            fused: true,
         }
     }
 }
 
 impl ScalarBackend {
     /// Build with an explicit kernel-set selection (errors when the
-    /// requested set is unsupported on this CPU).
+    /// requested set is unsupported on this CPU).  The fused
+    /// single-pass fast path is on by default.
     pub fn with_kernels(kind: KernelKind) -> Result<ScalarBackend> {
-        Ok(ScalarBackend { kernels: kernel_set(kind)? })
+        Self::with_options(kind, true)
+    }
+
+    /// Like [`with_kernels`](Self::with_kernels) with an explicit
+    /// fused-fast-path selection (`config.fused_step`); `fused = false`
+    /// pins the tiled three-pass path for debugging/differential runs.
+    pub fn with_options(kind: KernelKind, fused: bool)
+                        -> Result<ScalarBackend> {
+        Ok(ScalarBackend { kernels: kernel_set(kind)?, fused })
     }
 
     /// Name of the resolved kernel set ("scalar" or "avx2").
     pub fn kernels_name(&self) -> &'static str {
         self.kernels.name
+    }
+
+    /// Whether the fused single-pass fast path is enabled.
+    pub fn fused_enabled(&self) -> bool {
+        self.fused
     }
 }
 
@@ -55,7 +71,7 @@ impl StepBackend for ScalarBackend {
                   -> Result<()> {
         validate_range(state, lo, hi, g)?;
         let mut part = Part::of_range(state, lo, hi, g);
-        step_part(&mut part, opt, variant, h, self.kernels);
+        step_part(&mut part, opt, variant, h, self.kernels, self.fused);
         Ok(())
     }
 }

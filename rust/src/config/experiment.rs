@@ -310,6 +310,10 @@ pub struct TrainConfig {
     pub threads: usize,
     /// SIMD kernel set for the native codecs (pin `scalar` to debug)
     pub kernels: KernelKind,
+    /// register-resident fused single-pass step kernels where the
+    /// (optimizer, variant) pair has one (bit-exact to the tiled path;
+    /// disable to pin the tiled three-pass path for debugging)
+    pub fused_step: bool,
     /// eagerly free gradient buckets during the optimizer pass
     pub grad_release: bool,
     /// simulated data-parallel worker count (gradients allreduced)
@@ -343,6 +347,7 @@ impl Default for TrainConfig {
             backend: BackendKind::Hlo,
             threads: 0,
             kernels: KernelKind::Auto,
+            fused_step: true,
             grad_release: true,
             workers: 1,
             groups: Vec::new(),
@@ -408,6 +413,12 @@ impl TrainConfig {
         }
         if args.flag("grad-release") {
             self.grad_release = true;
+        }
+        if args.flag("no-fused-step") {
+            self.fused_step = false;
+        }
+        if args.flag("fused-step") {
+            self.fused_step = true;
         }
     }
 
@@ -480,6 +491,9 @@ impl TrainConfig {
                         v.as_str().ok_or("kernels")?)
                         .ok_or("bad kernels")?
                 }
+                "fused_step" => {
+                    c.fused_step = matches!(v, Json::Bool(true))
+                }
                 "grad_release" => {
                     c.grad_release = matches!(v, Json::Bool(true))
                 }
@@ -530,6 +544,7 @@ impl TrainConfig {
         m.insert("backend".into(), Json::Str(self.backend.name().into()));
         m.insert("threads".into(), Json::Num(self.threads as f64));
         m.insert("kernels".into(), Json::Str(self.kernels.name().into()));
+        m.insert("fused_step".into(), Json::Bool(self.fused_step));
         m.insert("grad_release".into(), Json::Bool(self.grad_release));
         m.insert("workers".into(), Json::Num(self.workers as f64));
         m.insert("groups".into(),
@@ -631,6 +646,30 @@ mod tests {
 
         let j = Json::parse(r#"{"kernels": "sse9"}"#).unwrap();
         assert!(TrainConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn fused_step_knob_roundtrips() {
+        let mut c = TrainConfig::default();
+        assert!(c.fused_step, "fused fast path is the default");
+        c.fused_step = false;
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert!(!c2.fused_step);
+
+        let j = Json::parse(r#"{"fused_step": false}"#).unwrap();
+        assert!(!TrainConfig::from_json(&j).unwrap().fused_step);
+        let j = Json::parse(r#"{"fused_step": true}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).unwrap().fused_step);
+
+        let mut c3 = TrainConfig::default();
+        let args = Args::parse_from(
+            "--no-fused-step".split_whitespace().map(String::from));
+        c3.apply_args(&args);
+        assert!(!c3.fused_step);
+        let args = Args::parse_from(
+            "--fused-step".split_whitespace().map(String::from));
+        c3.apply_args(&args);
+        assert!(c3.fused_step);
     }
 
     #[test]

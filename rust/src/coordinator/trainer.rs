@@ -76,9 +76,10 @@ impl Trainer {
             BackendKind::Hlo => FlashOptimizer::hlo(
                 rt, manifest, cfg.optimizer, cfg.variant, cfg.bucket,
                 &theta0, specs, defaults)?,
-            kind => FlashOptimizer::native_with_kernels(
+            kind => FlashOptimizer::native_with_opts(
                 cfg.optimizer, cfg.variant, cfg.bucket, &theta0, specs,
-                defaults, kind, cfg.threads, cfg.kernels)?,
+                defaults, kind, cfg.threads, cfg.kernels,
+                cfg.fused_step)?,
         };
 
         let data = match model.kind {

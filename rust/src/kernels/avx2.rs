@@ -36,6 +36,8 @@ use std::arch::x86_64::*;
 
 use crate::formats::weight_split::{Correction, Target};
 use crate::formats::{bf16, companding, fp16, weight_split, GROUP};
+use crate::kernels::{FusedPart, FusedRule};
+use crate::optim::hyper::StepScalars;
 
 // the group kernels hard-code GROUP = 4 × 8 f32 lanes
 const _: () = assert!(GROUP == 32);
@@ -134,12 +136,30 @@ unsafe fn pack4_epi32_u8(a: __m256i, b: __m256i, c: __m256i,
                                                      3, 7))
 }
 
-/// Scalar `group_absmax` (abs-max skipping NaN) over one GROUP of 32.
+/// Load one GROUP (32 f32) into 4 × 8 resident lanes.
 #[target_feature(enable = "avx2")]
-unsafe fn group_absmax32(p: *const f32) -> f32 {
+unsafe fn load_group_ps(p: *const f32) -> [__m256; 4] {
+    [_mm256_loadu_ps(p), _mm256_loadu_ps(p.add(8)),
+     _mm256_loadu_ps(p.add(16)), _mm256_loadu_ps(p.add(24))]
+}
+
+/// Store one resident GROUP back to memory.
+#[target_feature(enable = "avx2")]
+unsafe fn store_group_ps(v: &[__m256; 4], p: *mut f32) {
+    for (k, x) in v.iter().enumerate() {
+        _mm256_storeu_ps(p.add(8 * k), *x);
+    }
+}
+
+/// Scalar `group_absmax` (abs-max skipping NaN) over one resident
+/// GROUP — the exact op sequence of the former memory-walking loop
+/// with the loads elided, so quantizing from registers stores the same
+/// scale bits as quantizing from memory.
+#[target_feature(enable = "avx2")]
+unsafe fn regs_absmax(v: &[__m256; 4]) -> f32 {
     let mut acc = _mm256_setzero_ps();
-    for k in 0..4 {
-        let a = abs_ps(_mm256_loadu_ps(p.add(8 * k)));
+    for x in v {
+        let a = abs_ps(*x);
         let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(a, acc);
         acc = _mm256_blendv_ps(acc, a, gt);
     }
@@ -335,6 +355,70 @@ pub unsafe fn f16_to_f32(src: &[u16], dst: &mut [f32]) {
 
 // --- weight splitting (Algorithm 1, int8 + bf16) -------------------------
 
+/// Split one resident GROUP of master weights into bf16 + int8 stores
+/// (the `split_compress` main-loop body, input from registers).
+#[target_feature(enable = "avx2")]
+unsafe fn split_compress_group(x: &[__m256; 4], theta_p: *mut u16,
+                               rho: *mut i8) {
+    let mut bv = [_mm256_setzero_si256(); 4];
+    let mut rv = [_mm256_setzero_si256(); 4];
+    for (k, (b_out, r_out)) in
+        bv.iter_mut().zip(rv.iter_mut()).enumerate()
+    {
+        let x = x[k];
+        let b = f32_to_bf16_epi32(x);
+        let tp = bf16_epi32_to_ps(b);
+        let ell = _mm256_sub_epi32(bf16_ulp_exp_epi32(b),
+                                   _mm256_set1_epi32(1));
+        let neg_ell = _mm256_sub_epi32(_mm256_setzero_si256(), ell);
+        // (-ell).div_euclid(2) == arithmetic shift right by 1
+        let h = _mm256_srai_epi32::<1>(neg_ell);
+        let e = _mm256_sub_ps(x, tp);
+        let en = _mm256_mul_ps(
+            _mm256_mul_ps(e, pow2_ps(h)),
+            pow2_ps(_mm256_sub_epi32(neg_ell, h)));
+        let en = clamp_ps(en, -1.0, 1.0);
+        let rf = round_ps(_mm256_mul_ps(en, _mm256_set1_ps(127.0)));
+        *b_out = b;
+        *r_out = cvt_clamped_epi32(rf);
+    }
+    _mm256_storeu_si256(theta_p as *mut __m256i,
+                        pack2_epi32_u16(bv[0], bv[1]));
+    _mm256_storeu_si256(theta_p.add(16) as *mut __m256i,
+                        pack2_epi32_u16(bv[2], bv[3]));
+    _mm256_storeu_si256(rho as *mut __m256i,
+                        pack4_epi32_i8(rv[0], rv[1], rv[2], rv[3]));
+}
+
+/// Reconstruct 8 master weights from their bf16 + int8 split.
+#[target_feature(enable = "avx2")]
+unsafe fn split_decompress8(theta_p: *const u16, rho: *const i8)
+                            -> __m256 {
+    let b = load8_u16_epi32(theta_p);
+    let tp = bf16_epi32_to_ps(b);
+    let ell = _mm256_sub_epi32(bf16_ulp_exp_epi32(b),
+                               _mm256_set1_epi32(1));
+    // ell.div_euclid(2) == arithmetic shift right by 1
+    let h = _mm256_srai_epi32::<1>(ell);
+    let ri = load8_i8_epi32(rho);
+    let rf = _mm256_div_ps(_mm256_cvtepi32_ps(ri),
+                           _mm256_set1_ps(127.0));
+    let e = _mm256_mul_ps(
+        _mm256_mul_ps(rf, pow2_ps(h)),
+        pow2_ps(_mm256_sub_epi32(ell, h)));
+    _mm256_add_ps(tp, e)
+}
+
+/// Reconstruct one GROUP of master weights into registers.
+#[target_feature(enable = "avx2")]
+unsafe fn split_decompress_group(theta_p: *const u16, rho: *const i8)
+                                 -> [__m256; 4] {
+    [split_decompress8(theta_p, rho),
+     split_decompress8(theta_p.add(8), rho.add(8)),
+     split_decompress8(theta_p.add(16), rho.add(16)),
+     split_decompress8(theta_p.add(24), rho.add(24))]
+}
+
 #[target_feature(enable = "avx2")]
 pub unsafe fn split_compress(theta: &[f32], theta_p: &mut [u16],
                              rho: &mut [i8]) {
@@ -343,37 +427,9 @@ pub unsafe fn split_compress(theta: &[f32], theta_p: &mut [u16],
     let n = theta.len();
     let mut i = 0usize;
     while i + 32 <= n {
-        let mut bv = [_mm256_setzero_si256(); 4];
-        let mut rv = [_mm256_setzero_si256(); 4];
-        for (k, (b_out, r_out)) in
-            bv.iter_mut().zip(rv.iter_mut()).enumerate()
-        {
-            let x = _mm256_loadu_ps(theta.as_ptr().add(i + 8 * k));
-            let b = f32_to_bf16_epi32(x);
-            let tp = bf16_epi32_to_ps(b);
-            let ell = _mm256_sub_epi32(bf16_ulp_exp_epi32(b),
-                                       _mm256_set1_epi32(1));
-            let neg_ell =
-                _mm256_sub_epi32(_mm256_setzero_si256(), ell);
-            // (-ell).div_euclid(2) == arithmetic shift right by 1
-            let h = _mm256_srai_epi32::<1>(neg_ell);
-            let e = _mm256_sub_ps(x, tp);
-            let en = _mm256_mul_ps(
-                _mm256_mul_ps(e, pow2_ps(h)),
-                pow2_ps(_mm256_sub_epi32(neg_ell, h)));
-            let en = clamp_ps(en, -1.0, 1.0);
-            let rf =
-                round_ps(_mm256_mul_ps(en, _mm256_set1_ps(127.0)));
-            *b_out = b;
-            *r_out = cvt_clamped_epi32(rf);
-        }
-        _mm256_storeu_si256(theta_p.as_mut_ptr().add(i) as *mut __m256i,
-                            pack2_epi32_u16(bv[0], bv[1]));
-        _mm256_storeu_si256(
-            theta_p.as_mut_ptr().add(i + 16) as *mut __m256i,
-            pack2_epi32_u16(bv[2], bv[3]));
-        _mm256_storeu_si256(rho.as_mut_ptr().add(i) as *mut __m256i,
-                            pack4_epi32_i8(rv[0], rv[1], rv[2], rv[3]));
+        let x = load_group_ps(theta.as_ptr().add(i));
+        split_compress_group(&x, theta_p.as_mut_ptr().add(i),
+                             rho.as_mut_ptr().add(i));
         i += 32;
     }
     for j in i..n {
@@ -392,20 +448,9 @@ pub unsafe fn split_decompress(theta_p: &[u16], rho: &[i8],
     let n = out.len();
     let mut i = 0usize;
     while i + 8 <= n {
-        let b = load8_u16_epi32(theta_p.as_ptr().add(i));
-        let tp = bf16_epi32_to_ps(b);
-        let ell = _mm256_sub_epi32(bf16_ulp_exp_epi32(b),
-                                   _mm256_set1_epi32(1));
-        // ell.div_euclid(2) == arithmetic shift right by 1
-        let h = _mm256_srai_epi32::<1>(ell);
-        let ri = load8_i8_epi32(rho.as_ptr().add(i));
-        let rf = _mm256_div_ps(_mm256_cvtepi32_ps(ri),
-                               _mm256_set1_ps(127.0));
-        let e = _mm256_mul_ps(
-            _mm256_mul_ps(rf, pow2_ps(h)),
-            pow2_ps(_mm256_sub_epi32(ell, h)));
-        _mm256_storeu_ps(out.as_mut_ptr().add(i),
-                         _mm256_add_ps(tp, e));
+        let w = split_decompress8(theta_p.as_ptr().add(i),
+                                  rho.as_ptr().add(i));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), w);
         i += 8;
     }
     for j in i..n {
@@ -415,6 +460,161 @@ pub unsafe fn split_decompress(theta_p: &[u16], rho: &[i8],
 }
 
 // --- companded 8-bit state codecs (Algorithms 2/3) -----------------------
+//
+// Each codec is written as a *group* helper operating on one GROUP of
+// 32 values resident in 4 × 8 lanes; the batch entry points loop groups
+// through the helpers, and the fused step kernels call the same
+// helpers with the values already in registers — one implementation,
+// identical bits either way.
+
+/// Dequant one companded momentum group into registers.
+#[target_feature(enable = "avx2")]
+unsafe fn dequant_m_group(q: *const i8, scale_bits: u16) -> [__m256; 4] {
+    let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scale_bits));
+    let mut out = [_mm256_setzero_ps(); 4];
+    for (k, o) in out.iter_mut().enumerate() {
+        let zi = load8_i8_epi32(q.add(8 * k));
+        let z = _mm256_div_ps(_mm256_cvtepi32_ps(zi),
+                              _mm256_set1_ps(127.0));
+        // phi_m_inv(z) = z / (2 - |z|)
+        let inv = _mm256_div_ps(
+            z, _mm256_sub_ps(_mm256_set1_ps(2.0), abs_ps(z)));
+        *o = _mm256_mul_ps(inv, s);
+    }
+    out
+}
+
+/// Quantize one resident momentum group; returns the f16 scale bits.
+#[target_feature(enable = "avx2")]
+unsafe fn quant_m_group(m: &[__m256; 4], q: *mut i8) -> u16 {
+    let (s16, safe) = companding::scale_pair(regs_absmax(m));
+    let safe_v = _mm256_set1_ps(safe);
+    let mut rv = [_mm256_setzero_si256(); 4];
+    for (k, r_out) in rv.iter_mut().enumerate() {
+        let xs = _mm256_div_ps(m[k], safe_v);
+        // phi_m(xs) = (2 * xs) / (1 + |xs|)
+        let z = _mm256_div_ps(
+            _mm256_mul_ps(_mm256_set1_ps(2.0), xs),
+            _mm256_add_ps(_mm256_set1_ps(1.0), abs_ps(xs)));
+        let rf = clamp_ps(
+            round_ps(_mm256_mul_ps(z, _mm256_set1_ps(127.0))),
+            -127.0, 127.0);
+        *r_out = cvt_clamped_epi32(rf);
+    }
+    _mm256_storeu_si256(q as *mut __m256i,
+                        pack4_epi32_i8(rv[0], rv[1], rv[2], rv[3]));
+    s16
+}
+
+/// Dequant one companded variance group into registers.
+#[target_feature(enable = "avx2")]
+unsafe fn dequant_v_group(q: *const u8, scale_bits: u16) -> [__m256; 4] {
+    let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scale_bits));
+    let mut out = [_mm256_setzero_ps(); 4];
+    for (k, o) in out.iter_mut().enumerate() {
+        let zi = load8_u8_epi32(q.add(8 * k));
+        let vp = _mm256_mul_ps(
+            _mm256_div_ps(_mm256_cvtepi32_ps(zi),
+                          _mm256_set1_ps(255.0)),
+            s);
+        *o = _mm256_mul_ps(vp, vp);
+    }
+    out
+}
+
+/// Quantize one resident variance group (sqrt domain, NaN-skipping
+/// absmax like the scalar `group_absmax`); returns the f16 scale bits.
+#[target_feature(enable = "avx2")]
+unsafe fn quant_v_group(v: &[__m256; 4], q: *mut u8) -> u16 {
+    let mut sq = [_mm256_setzero_ps(); 4];
+    let mut acc = _mm256_setzero_ps();
+    for (k, s_out) in sq.iter_mut().enumerate() {
+        let s = _mm256_sqrt_ps(v[k]);
+        *s_out = s;
+        let a = abs_ps(s);
+        let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(a, acc);
+        acc = _mm256_blendv_ps(acc, a, gt);
+    }
+    let (s16, safe) = companding::scale_pair(hmax_ps(acc));
+    let safe_v = _mm256_set1_ps(safe);
+    let mut rv = [_mm256_setzero_si256(); 4];
+    for (k, r_out) in rv.iter_mut().enumerate() {
+        let rf = clamp_ps(
+            round_ps(_mm256_mul_ps(_mm256_div_ps(sq[k], safe_v),
+                                   _mm256_set1_ps(255.0))),
+            0.0, 255.0);
+        *r_out = cvt_clamped_epi32(rf);
+    }
+    _mm256_storeu_si256(q as *mut __m256i,
+                        pack4_epi32_u8(rv[0], rv[1], rv[2], rv[3]));
+    s16
+}
+
+/// Dequant one linear (no-companding) momentum group into registers.
+#[target_feature(enable = "avx2")]
+unsafe fn dequant_m_linear_group(q: *const i8, scale_bits: u16)
+                                 -> [__m256; 4] {
+    let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scale_bits));
+    let mut out = [_mm256_setzero_ps(); 4];
+    for (k, o) in out.iter_mut().enumerate() {
+        let zi = load8_i8_epi32(q.add(8 * k));
+        let z = _mm256_div_ps(_mm256_cvtepi32_ps(zi),
+                              _mm256_set1_ps(127.0));
+        *o = _mm256_mul_ps(z, s);
+    }
+    out
+}
+
+/// Quantize one resident momentum group linearly; returns scale bits.
+#[target_feature(enable = "avx2")]
+unsafe fn quant_m_linear_group(m: &[__m256; 4], q: *mut i8) -> u16 {
+    let (s16, safe) = companding::scale_pair(regs_absmax(m));
+    let safe_v = _mm256_set1_ps(safe);
+    let mut rv = [_mm256_setzero_si256(); 4];
+    for (k, r_out) in rv.iter_mut().enumerate() {
+        let rf = clamp_ps(
+            round_ps(_mm256_mul_ps(_mm256_div_ps(m[k], safe_v),
+                                   _mm256_set1_ps(127.0))),
+            -127.0, 127.0);
+        *r_out = cvt_clamped_epi32(rf);
+    }
+    _mm256_storeu_si256(q as *mut __m256i,
+                        pack4_epi32_i8(rv[0], rv[1], rv[2], rv[3]));
+    s16
+}
+
+/// Dequant one linear variance group into registers.
+#[target_feature(enable = "avx2")]
+unsafe fn dequant_v_linear_group(q: *const u8, scale_bits: u16)
+                                 -> [__m256; 4] {
+    let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scale_bits));
+    let mut out = [_mm256_setzero_ps(); 4];
+    for (k, o) in out.iter_mut().enumerate() {
+        let zi = load8_u8_epi32(q.add(8 * k));
+        let z = _mm256_div_ps(_mm256_cvtepi32_ps(zi),
+                              _mm256_set1_ps(255.0));
+        *o = _mm256_mul_ps(z, s);
+    }
+    out
+}
+
+/// Quantize one resident variance group linearly; returns scale bits.
+#[target_feature(enable = "avx2")]
+unsafe fn quant_v_linear_group(v: &[__m256; 4], q: *mut u8) -> u16 {
+    let (s16, safe) = companding::scale_pair(regs_absmax(v));
+    let safe_v = _mm256_set1_ps(safe);
+    let mut rv = [_mm256_setzero_si256(); 4];
+    for (k, r_out) in rv.iter_mut().enumerate() {
+        let rf = clamp_ps(
+            round_ps(_mm256_mul_ps(_mm256_div_ps(v[k], safe_v),
+                                   _mm256_set1_ps(255.0))),
+            0.0, 255.0);
+        *r_out = cvt_clamped_epi32(rf);
+    }
+    _mm256_storeu_si256(q as *mut __m256i,
+                        pack4_epi32_u8(rv[0], rv[1], rv[2], rv[3]));
+    s16
+}
 
 #[target_feature(enable = "avx2")]
 pub unsafe fn quant_momentum(m: &[f32], q: &mut [i8],
@@ -424,25 +624,8 @@ pub unsafe fn quant_momentum(m: &[f32], q: &mut [i8],
     assert_eq!(scales.len(), m.len() / GROUP);
     for gi in 0..scales.len() {
         let base = gi * GROUP;
-        let (s16, safe) =
-            companding::scale_pair(group_absmax32(m.as_ptr().add(base)));
-        scales[gi] = s16;
-        let safe_v = _mm256_set1_ps(safe);
-        let mut rv = [_mm256_setzero_si256(); 4];
-        for (k, r_out) in rv.iter_mut().enumerate() {
-            let x = _mm256_loadu_ps(m.as_ptr().add(base + 8 * k));
-            let xs = _mm256_div_ps(x, safe_v);
-            // phi_m(xs) = (2 * xs) / (1 + |xs|)
-            let z = _mm256_div_ps(
-                _mm256_mul_ps(_mm256_set1_ps(2.0), xs),
-                _mm256_add_ps(_mm256_set1_ps(1.0), abs_ps(xs)));
-            let rf = clamp_ps(
-                round_ps(_mm256_mul_ps(z, _mm256_set1_ps(127.0))),
-                -127.0, 127.0);
-            *r_out = cvt_clamped_epi32(rf);
-        }
-        _mm256_storeu_si256(q.as_mut_ptr().add(base) as *mut __m256i,
-                            pack4_epi32_i8(rv[0], rv[1], rv[2], rv[3]));
+        let x = load_group_ps(m.as_ptr().add(base));
+        scales[gi] = quant_m_group(&x, q.as_mut_ptr().add(base));
     }
 }
 
@@ -455,17 +638,8 @@ pub unsafe fn dequant_momentum(q: &[i8], scales: &[u16],
                "scales must cover q exactly (one f16 scale per group)");
     for gi in 0..scales.len() {
         let base = gi * GROUP;
-        let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scales[gi]));
-        for k in 0..4 {
-            let zi = load8_i8_epi32(q.as_ptr().add(base + 8 * k));
-            let z = _mm256_div_ps(_mm256_cvtepi32_ps(zi),
-                                  _mm256_set1_ps(127.0));
-            // phi_m_inv(z) = z / (2 - |z|)
-            let inv = _mm256_div_ps(
-                z, _mm256_sub_ps(_mm256_set1_ps(2.0), abs_ps(z)));
-            _mm256_storeu_ps(out.as_mut_ptr().add(base + 8 * k),
-                             _mm256_mul_ps(inv, s));
-        }
+        let m = dequant_m_group(q.as_ptr().add(base), scales[gi]);
+        store_group_ps(&m, out.as_mut_ptr().add(base));
     }
 }
 
@@ -477,31 +651,8 @@ pub unsafe fn quant_variance(v: &[f32], q: &mut [u8],
     assert_eq!(scales.len(), v.len() / GROUP);
     for gi in 0..scales.len() {
         let base = gi * GROUP;
-        // sqrt domain first, absmax over it (NaN-skipping like the
-        // scalar group_absmax)
-        let mut sq = [_mm256_setzero_ps(); 4];
-        let mut acc = _mm256_setzero_ps();
-        for (k, s_out) in sq.iter_mut().enumerate() {
-            let s =
-                _mm256_sqrt_ps(_mm256_loadu_ps(v.as_ptr().add(base + 8 * k)));
-            *s_out = s;
-            let a = abs_ps(s);
-            let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(a, acc);
-            acc = _mm256_blendv_ps(acc, a, gt);
-        }
-        let (s16, safe) = companding::scale_pair(hmax_ps(acc));
-        scales[gi] = s16;
-        let safe_v = _mm256_set1_ps(safe);
-        let mut rv = [_mm256_setzero_si256(); 4];
-        for (k, r_out) in rv.iter_mut().enumerate() {
-            let rf = clamp_ps(
-                round_ps(_mm256_mul_ps(_mm256_div_ps(sq[k], safe_v),
-                                       _mm256_set1_ps(255.0))),
-                0.0, 255.0);
-            *r_out = cvt_clamped_epi32(rf);
-        }
-        _mm256_storeu_si256(q.as_mut_ptr().add(base) as *mut __m256i,
-                            pack4_epi32_u8(rv[0], rv[1], rv[2], rv[3]));
+        let x = load_group_ps(v.as_ptr().add(base));
+        scales[gi] = quant_v_group(&x, q.as_mut_ptr().add(base));
     }
 }
 
@@ -514,16 +665,8 @@ pub unsafe fn dequant_variance(q: &[u8], scales: &[u16],
                "scales must cover q exactly (one f16 scale per group)");
     for gi in 0..scales.len() {
         let base = gi * GROUP;
-        let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scales[gi]));
-        for k in 0..4 {
-            let zi = load8_u8_epi32(q.as_ptr().add(base + 8 * k));
-            let vp = _mm256_mul_ps(
-                _mm256_div_ps(_mm256_cvtepi32_ps(zi),
-                              _mm256_set1_ps(255.0)),
-                s);
-            _mm256_storeu_ps(out.as_mut_ptr().add(base + 8 * k),
-                             _mm256_mul_ps(vp, vp));
-        }
+        let v = dequant_v_group(q.as_ptr().add(base), scales[gi]);
+        store_group_ps(&v, out.as_mut_ptr().add(base));
     }
 }
 
@@ -535,21 +678,8 @@ pub unsafe fn quant_momentum_linear(m: &[f32], q: &mut [i8],
     assert_eq!(scales.len(), m.len() / GROUP);
     for gi in 0..scales.len() {
         let base = gi * GROUP;
-        let (s16, safe) =
-            companding::scale_pair(group_absmax32(m.as_ptr().add(base)));
-        scales[gi] = s16;
-        let safe_v = _mm256_set1_ps(safe);
-        let mut rv = [_mm256_setzero_si256(); 4];
-        for (k, r_out) in rv.iter_mut().enumerate() {
-            let x = _mm256_loadu_ps(m.as_ptr().add(base + 8 * k));
-            let rf = clamp_ps(
-                round_ps(_mm256_mul_ps(_mm256_div_ps(x, safe_v),
-                                       _mm256_set1_ps(127.0))),
-                -127.0, 127.0);
-            *r_out = cvt_clamped_epi32(rf);
-        }
-        _mm256_storeu_si256(q.as_mut_ptr().add(base) as *mut __m256i,
-                            pack4_epi32_i8(rv[0], rv[1], rv[2], rv[3]));
+        let x = load_group_ps(m.as_ptr().add(base));
+        scales[gi] = quant_m_linear_group(&x, q.as_mut_ptr().add(base));
     }
 }
 
@@ -562,14 +692,8 @@ pub unsafe fn dequant_momentum_linear(q: &[i8], scales: &[u16],
                "scales must cover q exactly (one f16 scale per group)");
     for gi in 0..scales.len() {
         let base = gi * GROUP;
-        let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scales[gi]));
-        for k in 0..4 {
-            let zi = load8_i8_epi32(q.as_ptr().add(base + 8 * k));
-            let z = _mm256_div_ps(_mm256_cvtepi32_ps(zi),
-                                  _mm256_set1_ps(127.0));
-            _mm256_storeu_ps(out.as_mut_ptr().add(base + 8 * k),
-                             _mm256_mul_ps(z, s));
-        }
+        let m = dequant_m_linear_group(q.as_ptr().add(base), scales[gi]);
+        store_group_ps(&m, out.as_mut_ptr().add(base));
     }
 }
 
@@ -581,21 +705,8 @@ pub unsafe fn quant_variance_linear(v: &[f32], q: &mut [u8],
     assert_eq!(scales.len(), v.len() / GROUP);
     for gi in 0..scales.len() {
         let base = gi * GROUP;
-        let (s16, safe) =
-            companding::scale_pair(group_absmax32(v.as_ptr().add(base)));
-        scales[gi] = s16;
-        let safe_v = _mm256_set1_ps(safe);
-        let mut rv = [_mm256_setzero_si256(); 4];
-        for (k, r_out) in rv.iter_mut().enumerate() {
-            let x = _mm256_loadu_ps(v.as_ptr().add(base + 8 * k));
-            let rf = clamp_ps(
-                round_ps(_mm256_mul_ps(_mm256_div_ps(x, safe_v),
-                                       _mm256_set1_ps(255.0))),
-                0.0, 255.0);
-            *r_out = cvt_clamped_epi32(rf);
-        }
-        _mm256_storeu_si256(q.as_mut_ptr().add(base) as *mut __m256i,
-                            pack4_epi32_u8(rv[0], rv[1], rv[2], rv[3]));
+        let x = load_group_ps(v.as_ptr().add(base));
+        scales[gi] = quant_v_linear_group(&x, q.as_mut_ptr().add(base));
     }
 }
 
@@ -608,15 +719,236 @@ pub unsafe fn dequant_variance_linear(q: &[u8], scales: &[u16],
                "scales must cover q exactly (one f16 scale per group)");
     for gi in 0..scales.len() {
         let base = gi * GROUP;
-        let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scales[gi]));
-        for k in 0..4 {
-            let zi = load8_u8_epi32(q.as_ptr().add(base + 8 * k));
-            let z = _mm256_div_ps(_mm256_cvtepi32_ps(zi),
-                                  _mm256_set1_ps(255.0));
-            _mm256_storeu_ps(out.as_mut_ptr().add(base + 8 * k),
-                             _mm256_mul_ps(z, s));
-        }
+        let v = dequant_v_linear_group(q.as_ptr().add(base), scales[gi]);
+        store_group_ps(&v, out.as_mut_ptr().add(base));
     }
+}
+
+// --- fused single-pass step kernels (Algorithms 4/5/6) -------------------
+//
+// One GROUP at a time, fully register-resident: split-decompress the
+// weights, dequant the moments, run the update rule, requant — without
+// the fp32 intermediate ever touching memory (per 8-lane block; the
+// group-wise requant scale is reduced across the 4 resident blocks).
+// The codec stages are the *same* group helpers the batch kernels
+// loop over, and the update lanes perform the exact op sequence of
+// `scalar_ref::{adamw,sgd,lion}_f32` (mul/add/sub/div/sqrt in source
+// order, no FMA), so the fused kernels are bit-exact to running the
+// batch codecs + scalar update over the same partition.
+//
+// NaN flow note: for these layouts the dequantized moments are always
+// finite (8-bit codes × finite f16 scales), so NaN can enter an update
+// only through the gradient or θ.  Payload determinism across the
+// scalar and vector encodings then follows case by case:
+//
+// * at most one operand of each add/mul is NaN (single-NaN ops pick
+//   that NaN's payload on every encoding), and div keeps its operand
+//   order on both sides (fdiv is non-commutable), so both-NaN divides
+//   resolve to the dividend's payload identically;
+// * when θ is NaN, the `div + wd*θ` add CAN see two NaNs with
+//   distinct payloads and its result is implementation-chosen — but
+//   that payload is unobservable: the only consumer is the final
+//   `θ' = θ − lr·term` subtraction, which is non-commutable and
+//   selects its *first* operand's NaN (θ) on both encodings, and the
+//   NaN moments requantize to code 0 / NaN-skipping scales regardless
+//   of payload.  So a NaN θ shields the ambiguous term payload.
+//
+// The one reachable ambiguity left is a NaN gradient meeting `wd = 0`
+// at a ±inf (non-NaN) θ: `wd*θ = 0·∞ = NaN(default)` joins the NaN
+// div term in the add, θ does not shield, and IEEE-754 leaves the
+// surviving payload to the implementation.  That triple corner is
+// documented in `rust/tests/fused_fuzz.rs` and excluded from its
+// injection space (wd is kept nonzero whenever NaNs are injected);
+// everything else — NaN/Inf weights, NaN gradients with decay,
+// inf/inf and 0/0 defaults — is fuzzed and asserted bit-exact.
+
+/// Broadcast per-step scalar constants (`StepScalars`, one splat each).
+struct UpdateConsts {
+    lr: __m256,
+    beta1: __m256,
+    beta2: __m256,
+    omb1: __m256,
+    omb2: __m256,
+    eps: __m256,
+    wd: __m256,
+    bc1: __m256,
+    bc2: __m256,
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn update_consts(s: &StepScalars) -> UpdateConsts {
+    UpdateConsts {
+        lr: _mm256_set1_ps(s.lr),
+        beta1: _mm256_set1_ps(s.beta1),
+        beta2: _mm256_set1_ps(s.beta2),
+        omb1: _mm256_set1_ps(s.one_minus_beta1),
+        omb2: _mm256_set1_ps(s.one_minus_beta2),
+        eps: _mm256_set1_ps(s.eps),
+        wd: _mm256_set1_ps(s.wd),
+        bc1: _mm256_set1_ps(s.bc1),
+        bc2: _mm256_set1_ps(s.bc2),
+    }
+}
+
+/// `scalar_ref::adamw_f32` on one resident group.
+#[target_feature(enable = "avx2")]
+unsafe fn adamw_update_group(th: &mut [__m256; 4], m: &mut [__m256; 4],
+                             v: &mut [__m256; 4], g: &[__m256; 4],
+                             c: &UpdateConsts) {
+    for k in 0..4 {
+        let gk = g[k];
+        // m = beta1 * m + (1 - beta1) * g
+        m[k] = _mm256_add_ps(_mm256_mul_ps(c.beta1, m[k]),
+                             _mm256_mul_ps(c.omb1, gk));
+        // v = beta2 * v + ((1 - beta2) * g) * g
+        v[k] = _mm256_add_ps(
+            _mm256_mul_ps(c.beta2, v[k]),
+            _mm256_mul_ps(_mm256_mul_ps(c.omb2, gk), gk));
+        let m_hat = _mm256_mul_ps(m[k], c.bc1);
+        let v_hat = _mm256_mul_ps(v[k], c.bc2);
+        let denom = _mm256_add_ps(_mm256_sqrt_ps(v_hat), c.eps);
+        let term = _mm256_add_ps(_mm256_div_ps(m_hat, denom),
+                                 _mm256_mul_ps(c.wd, th[k]));
+        th[k] = _mm256_sub_ps(th[k], _mm256_mul_ps(c.lr, term));
+    }
+}
+
+/// `scalar_ref::sgd_f32` on one resident group.
+#[target_feature(enable = "avx2")]
+unsafe fn sgd_update_group(th: &mut [__m256; 4], m: &mut [__m256; 4],
+                           g: &[__m256; 4], c: &UpdateConsts) {
+    for k in 0..4 {
+        // m = beta1 * m + g
+        m[k] = _mm256_add_ps(_mm256_mul_ps(c.beta1, m[k]), g[k]);
+        let term = _mm256_add_ps(m[k], _mm256_mul_ps(c.wd, th[k]));
+        th[k] = _mm256_sub_ps(th[k], _mm256_mul_ps(c.lr, term));
+    }
+}
+
+/// `scalar_ref::lion_f32` on one resident group.
+#[target_feature(enable = "avx2")]
+unsafe fn lion_update_group(th: &mut [__m256; 4], m: &mut [__m256; 4],
+                            g: &[__m256; 4], c: &UpdateConsts) {
+    let zero = _mm256_setzero_ps();
+    let one = _mm256_set1_ps(1.0);
+    let neg_one = _mm256_set1_ps(-1.0);
+    for k in 0..4 {
+        let gk = g[k];
+        let ck = _mm256_add_ps(_mm256_mul_ps(c.beta1, m[k]),
+                               _mm256_mul_ps(c.omb1, gk));
+        // sign(c) with NaN -> 0 (ordered compares are false on NaN,
+        // matching the scalar if-chain's else branch)
+        let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(ck, zero);
+        let lt = _mm256_cmp_ps::<_CMP_LT_OQ>(ck, zero);
+        let u = _mm256_blendv_ps(zero, one, gt);
+        let u = _mm256_blendv_ps(u, neg_one, lt);
+        m[k] = _mm256_add_ps(_mm256_mul_ps(c.beta2, m[k]),
+                             _mm256_mul_ps(c.omb2, gk));
+        let term = _mm256_add_ps(u, _mm256_mul_ps(c.wd, th[k]));
+        th[k] = _mm256_sub_ps(th[k], _mm256_mul_ps(c.lr, term));
+    }
+}
+
+/// Shared fused loop over a split-weight + 8-bit-state partition
+/// (`flash` when `linear` is false, `nocompand` when true).
+#[target_feature(enable = "avx2")]
+unsafe fn fused_flash(p: &mut FusedPart<'_>, s: &StepScalars,
+                      rule: FusedRule, linear: bool) {
+    let n = p.g.len();
+    assert_eq!(n % GROUP, 0, "fused kernels step whole groups");
+    let g_all = p.g;
+    let tp = p.theta_p.as_deref_mut().expect("fused: missing theta_p");
+    let rho = p.rho.as_deref_mut().expect("fused: missing rho");
+    let mq = p.mq.as_deref_mut().expect("fused: missing mq");
+    let ms = p.ms.as_deref_mut().expect("fused: missing ms");
+    assert_eq!(tp.len(), n);
+    assert_eq!(rho.len(), n);
+    assert_eq!(mq.len(), n);
+    assert_eq!(ms.len(), n / GROUP);
+    let var = matches!(rule, FusedRule::AdamW);
+    let (vq_p, vs_p) = if var {
+        let vq = p.vq.as_deref_mut().expect("fused: missing vq");
+        let vs = p.vs.as_deref_mut().expect("fused: missing vs");
+        assert_eq!(vq.len(), n);
+        assert_eq!(vs.len(), n / GROUP);
+        (vq.as_mut_ptr(), vs.as_mut_ptr())
+    } else {
+        (std::ptr::null_mut::<u8>(), std::ptr::null_mut::<u16>())
+    };
+    let g_p = g_all.as_ptr();
+    let tp_p = tp.as_mut_ptr();
+    let rho_p = rho.as_mut_ptr();
+    let mq_p = mq.as_mut_ptr();
+    let ms_p = ms.as_mut_ptr();
+    let c = update_consts(s);
+
+    for gi in 0..n / GROUP {
+        let base = gi * GROUP;
+        let g = load_group_ps(g_p.add(base));
+        let mut th =
+            split_decompress_group(tp_p.add(base), rho_p.add(base));
+        let mut m = if linear {
+            dequant_m_linear_group(mq_p.add(base), *ms_p.add(gi))
+        } else {
+            dequant_m_group(mq_p.add(base), *ms_p.add(gi))
+        };
+        match rule {
+            FusedRule::AdamW => {
+                let mut v = if linear {
+                    dequant_v_linear_group(vq_p.add(base), *vs_p.add(gi))
+                } else {
+                    dequant_v_group(vq_p.add(base), *vs_p.add(gi))
+                };
+                adamw_update_group(&mut th, &mut m, &mut v, &g, &c);
+                *vs_p.add(gi) = if linear {
+                    quant_v_linear_group(&v, vq_p.add(base))
+                } else {
+                    quant_v_group(&v, vq_p.add(base))
+                };
+            }
+            FusedRule::Sgdm => sgd_update_group(&mut th, &mut m, &g, &c),
+            FusedRule::Lion => lion_update_group(&mut th, &mut m, &g, &c),
+        }
+        split_compress_group(&th, tp_p.add(base), rho_p.add(base));
+        *ms_p.add(gi) = if linear {
+            quant_m_linear_group(&m, mq_p.add(base))
+        } else {
+            quant_m_group(&m, mq_p.add(base))
+        };
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn fused_step_adamw(p: &mut FusedPart<'_>, s: &StepScalars) {
+    fused_flash(p, s, FusedRule::AdamW, false)
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn fused_step_sgdm(p: &mut FusedPart<'_>, s: &StepScalars) {
+    fused_flash(p, s, FusedRule::Sgdm, false)
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn fused_step_lion(p: &mut FusedPart<'_>, s: &StepScalars) {
+    fused_flash(p, s, FusedRule::Lion, false)
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn fused_step_adamw_nocompand(p: &mut FusedPart<'_>,
+                                         s: &StepScalars) {
+    fused_flash(p, s, FusedRule::AdamW, true)
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn fused_step_sgdm_nocompand(p: &mut FusedPart<'_>,
+                                        s: &StepScalars) {
+    fused_flash(p, s, FusedRule::Sgdm, true)
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn fused_step_lion_nocompand(p: &mut FusedPart<'_>,
+                                        s: &StepScalars) {
+    fused_flash(p, s, FusedRule::Lion, true)
 }
 
 /// Safe wrappers used as the `KernelSet` function-pointer table.
@@ -626,7 +958,8 @@ pub unsafe fn dequant_variance_linear(q: &[u8], scales: &[u16],
 /// confirmed support, so the target-feature calls below can never
 /// execute on a CPU without AVX2.
 pub mod dispatch {
-    use crate::kernels::avx2_available;
+    use crate::kernels::{avx2_available, FusedPart};
+    use crate::optim::hyper::StepScalars;
 
     macro_rules! wrap {
         ($name:ident, ($($arg:ident : $ty:ty),*)) => {
@@ -659,4 +992,16 @@ pub mod dispatch {
     wrap!(bf16_to_f32, (src: &[u16], dst: &mut [f32]));
     wrap!(f32_to_f16, (src: &[f32], dst: &mut [u16]));
     wrap!(f16_to_f32, (src: &[u16], dst: &mut [f32]));
+    wrap!(fused_step_adamw,
+          (p: &mut FusedPart<'_>, s: &StepScalars));
+    wrap!(fused_step_sgdm,
+          (p: &mut FusedPart<'_>, s: &StepScalars));
+    wrap!(fused_step_lion,
+          (p: &mut FusedPart<'_>, s: &StepScalars));
+    wrap!(fused_step_adamw_nocompand,
+          (p: &mut FusedPart<'_>, s: &StepScalars));
+    wrap!(fused_step_sgdm_nocompand,
+          (p: &mut FusedPart<'_>, s: &StepScalars));
+    wrap!(fused_step_lion_nocompand,
+          (p: &mut FusedPart<'_>, s: &StepScalars));
 }

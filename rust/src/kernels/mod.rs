@@ -35,14 +35,56 @@ pub mod avx2;
 
 use anyhow::{bail, Result};
 
-use crate::config::KernelKind;
+use crate::config::{KernelKind, OptKind, Variant};
+use crate::optim::hyper::StepScalars;
+
+/// Borrowed buffer views of one GROUP-aligned partition for the fused
+/// single-pass step kernels — the kernel-layer mirror of
+/// `backend::partition::Part` (which the backend reborrows into this
+/// struct per call).  Only the buffers the (optimizer, variant) layout
+/// actually stores are `Some`; a fused kernel unwraps exactly the set
+/// its layout requires.
+pub struct FusedPart<'a> {
+    pub theta: Option<&'a mut [f32]>,
+    pub theta_p: Option<&'a mut [u16]>,
+    pub rho: Option<&'a mut [i8]>,
+    pub m: Option<&'a mut [f32]>,
+    pub v: Option<&'a mut [f32]>,
+    pub mq: Option<&'a mut [i8]>,
+    /// f16 scale bits, one per GROUP elements of the partition
+    pub ms: Option<&'a mut [u16]>,
+    pub vq: Option<&'a mut [u8]>,
+    pub vs: Option<&'a mut [u16]>,
+    pub g: &'a [f32],
+}
+
+/// Update-rule selector shared by the fused kernel implementations
+/// (`portable` and `avx2` parameterize one loop per codec family).
+#[derive(Clone, Copy)]
+pub(crate) enum FusedRule {
+    AdamW,
+    Sgdm,
+    Lion,
+}
+
+/// A fused single-pass optimizer step over one GROUP-aligned partition:
+/// dequant → moment update → weight-split update → requant without the
+/// state ever leaving registers (per 8-lane block on AVX2, per GROUP
+/// stack window on the portable set).  Must be bit-exact to running the
+/// batch codecs + `scalar_ref` update over the same partition — the
+/// tiled three-pass path is the executable spec.
+pub type FusedStepFn = fn(&mut FusedPart<'_>, &StepScalars);
 
 /// Batch codec entry points, resolved once per backend.
 ///
 /// All companding kernels require GROUP-aligned slices with
 /// `scales.len() * GROUP == codes.len()` (same contract as
 /// `formats::companding`); the split and conversion kernels accept any
-/// length.
+/// length.  The `fused_step_*` entries are whole-partition single-pass
+/// step kernels (`None` = this set has no fused kernel for that layout
+/// and the backend falls back to the tiled three-pass path; the
+/// coverage matrix is documented in docs/CONFIG.md and queried via
+/// [`KernelSet::fused_step`]).
 #[derive(Clone, Copy)]
 pub struct KernelSet {
     pub name: &'static str,
@@ -64,6 +106,44 @@ pub struct KernelSet {
     pub bf16_to_f32: fn(&[u16], &mut [f32]),
     pub f32_to_f16: fn(&[f32], &mut [u16]),
     pub f16_to_f32: fn(&[u16], &mut [f32]),
+    // fused single-pass step kernels (Algorithms 4/5/6 with the codec
+    // stages folded into the update loop), per optimizer × state codec
+    pub fused_step_adamw: Option<FusedStepFn>,
+    pub fused_step_sgdm: Option<FusedStepFn>,
+    pub fused_step_lion: Option<FusedStepFn>,
+    pub fused_step_adamw_nocompand: Option<FusedStepFn>,
+    pub fused_step_sgdm_nocompand: Option<FusedStepFn>,
+    pub fused_step_lion_nocompand: Option<FusedStepFn>,
+}
+
+impl KernelSet {
+    /// The fused single-pass kernel for an (optimizer, variant) pair,
+    /// or `None` when this pair runs on the tiled three-pass path.
+    ///
+    /// Fused kernels exist for the fully compact layouts — `flash`
+    /// (split weights + companded 8-bit states) and `nocompand` (split
+    /// weights + linear 8-bit states) — where all three streams are
+    /// codec-ed and fusion saves the most scratch traffic.  The
+    /// fp32-resident layouts (`reference`, `wsplit`, `quant`) keep the
+    /// tiled path, which already updates their fp32 buffers in place.
+    pub fn fused_step(&self, opt: OptKind, variant: Variant)
+                      -> Option<FusedStepFn> {
+        match (opt, variant) {
+            (OptKind::AdamW, Variant::Flash) => self.fused_step_adamw,
+            (OptKind::Sgd, Variant::Flash) => self.fused_step_sgdm,
+            (OptKind::Lion, Variant::Flash) => self.fused_step_lion,
+            (OptKind::AdamW, Variant::NoCompand) => {
+                self.fused_step_adamw_nocompand
+            }
+            (OptKind::Sgd, Variant::NoCompand) => {
+                self.fused_step_sgdm_nocompand
+            }
+            (OptKind::Lion, Variant::NoCompand) => {
+                self.fused_step_lion_nocompand
+            }
+            _ => None,
+        }
+    }
 }
 
 /// The portable scalar set (always available).
@@ -83,6 +163,12 @@ pub static SCALAR: KernelSet = KernelSet {
     bf16_to_f32: portable::bf16_to_f32,
     f32_to_f16: portable::f32_to_f16,
     f16_to_f32: portable::f16_to_f32,
+    fused_step_adamw: Some(portable::fused_step_adamw),
+    fused_step_sgdm: Some(portable::fused_step_sgdm),
+    fused_step_lion: Some(portable::fused_step_lion),
+    fused_step_adamw_nocompand: Some(portable::fused_step_adamw_nocompand),
+    fused_step_sgdm_nocompand: Some(portable::fused_step_sgdm_nocompand),
+    fused_step_lion_nocompand: Some(portable::fused_step_lion_nocompand),
 };
 
 #[cfg(target_arch = "x86_64")]
@@ -102,6 +188,15 @@ static AVX2: KernelSet = KernelSet {
     bf16_to_f32: avx2::dispatch::bf16_to_f32,
     f32_to_f16: avx2::dispatch::f32_to_f16,
     f16_to_f32: avx2::dispatch::f16_to_f32,
+    fused_step_adamw: Some(avx2::dispatch::fused_step_adamw),
+    fused_step_sgdm: Some(avx2::dispatch::fused_step_sgdm),
+    fused_step_lion: Some(avx2::dispatch::fused_step_lion),
+    fused_step_adamw_nocompand:
+        Some(avx2::dispatch::fused_step_adamw_nocompand),
+    fused_step_sgdm_nocompand:
+        Some(avx2::dispatch::fused_step_sgdm_nocompand),
+    fused_step_lion_nocompand:
+        Some(avx2::dispatch::fused_step_lion_nocompand),
 };
 
 /// True when the AVX2 kernel set can run on this machine.
@@ -165,6 +260,30 @@ mod tests {
         } else {
             assert_eq!(auto.name, "scalar");
             assert!(kernel_set(KernelKind::Avx2).is_err());
+        }
+    }
+
+    #[test]
+    fn fused_coverage_matrix() {
+        // the fully compact layouts fuse; fp32-resident layouts tile —
+        // and coverage is identical across kernel sets, so the `fused`
+        // knob selects the same pairs no matter which set resolved
+        let mut sets = vec![kernel_set(KernelKind::Scalar).unwrap()];
+        if avx2_available() {
+            sets.push(kernel_set(KernelKind::Avx2).unwrap());
+        }
+        for ks in sets {
+            for opt in [OptKind::Sgd, OptKind::AdamW, OptKind::Lion] {
+                for variant in [Variant::Flash, Variant::NoCompand] {
+                    assert!(ks.fused_step(opt, variant).is_some(),
+                            "{}/{opt}/{variant} should fuse", ks.name);
+                }
+                for variant in [Variant::Reference, Variant::WeightSplit,
+                                Variant::OptQuant] {
+                    assert!(ks.fused_step(opt, variant).is_none(),
+                            "{}/{opt}/{variant} should tile", ks.name);
+                }
+            }
         }
     }
 

@@ -8,7 +8,10 @@
 //! 16-bit float conversions get the batch entry points the fused tile
 //! path and the AVX2 differential tests need.
 
-use crate::formats::{bf16, companding, fp16, weight_split};
+use crate::formats::{bf16, companding, fp16, weight_split, GROUP};
+use crate::kernels::{FusedPart, FusedRule};
+use crate::optim::hyper::StepScalars;
+use crate::optim::scalar_ref;
 
 // --- companded 8-bit state codecs (Algorithms 2/3) ----------------------
 
@@ -57,6 +60,135 @@ pub fn split_compress(theta: &[f32], theta_p: &mut [u16],
 
 pub fn split_decompress(theta_p: &[u16], rho: &[i8], out: &mut [f32]) {
     weight_split::decompress_slice(theta_p, rho, out);
+}
+
+// --- fused single-pass step kernels (Algorithms 4/5/6) -------------------
+//
+// One GROUP (32 elements) at a time: dequant the group into stack
+// windows, run the shared `scalar_ref` update rule on the window,
+// requant the group — so the working set is one group of fp32 values
+// (the portable analog of the AVX2 kernels' register residency), and
+// every stage reuses the exact `formats/` codec + `scalar_ref` update
+// functions the tiled path calls on larger slices.  Per-element updates
+// and per-GROUP requantization make the window size unobservable:
+// these kernels are bit-exact to the tiled three-pass path by
+// construction, and `rust/tests/fused_fuzz.rs` +
+// `rust/tests/kernel_equivalence.rs` enforce it.
+
+/// Shared fused loop over a split-weight + 8-bit-state partition
+/// (`flash` when `linear` is false, `nocompand` when true).
+fn fused_flash(p: &mut FusedPart<'_>, s: &StepScalars, rule: FusedRule,
+               linear: bool) {
+    let n = p.g.len();
+    assert_eq!(n % GROUP, 0, "fused kernels step whole groups");
+    let tp = p.theta_p.as_deref_mut().expect("fused: missing theta_p");
+    let rho = p.rho.as_deref_mut().expect("fused: missing rho");
+    let mq = p.mq.as_deref_mut().expect("fused: missing mq");
+    let ms = p.ms.as_deref_mut().expect("fused: missing ms");
+    assert_eq!(tp.len(), n);
+    assert_eq!(rho.len(), n);
+    assert_eq!(mq.len(), n);
+    assert_eq!(ms.len(), n / GROUP);
+    let var = matches!(rule, FusedRule::AdamW);
+    let (mut vq, mut vs) = if var {
+        let vq = p.vq.as_deref_mut().expect("fused: missing vq");
+        let vs = p.vs.as_deref_mut().expect("fused: missing vs");
+        assert_eq!(vq.len(), n);
+        assert_eq!(vs.len(), n / GROUP);
+        (Some(vq), Some(vs))
+    } else {
+        (None, None)
+    };
+
+    let mut th_w = [0f32; GROUP];
+    let mut m_w = [0f32; GROUP];
+    let mut v_w = [0f32; GROUP];
+    for gi in 0..n / GROUP {
+        let lo = gi * GROUP;
+        let hi = lo + GROUP;
+        let g = &p.g[lo..hi];
+
+        // dequant the group into the stack window
+        weight_split::decompress_slice(&tp[lo..hi], &rho[lo..hi],
+                                       &mut th_w);
+        let ms1 = &ms[gi..gi + 1];
+        if linear {
+            companding::dequant_momentum_linear(&mq[lo..hi], ms1,
+                                                &mut m_w);
+        } else {
+            companding::dequant_momentum(&mq[lo..hi], ms1, &mut m_w);
+        }
+
+        // update: the shared scalar rules (single source of truth)
+        match rule {
+            FusedRule::AdamW => {
+                let vq = vq.as_deref().unwrap();
+                let vs1 = &vs.as_deref().unwrap()[gi..gi + 1];
+                if linear {
+                    companding::dequant_variance_linear(&vq[lo..hi], vs1,
+                                                        &mut v_w);
+                } else {
+                    companding::dequant_variance(&vq[lo..hi], vs1,
+                                                 &mut v_w);
+                }
+                scalar_ref::adamw_f32(&mut th_w, &mut m_w, &mut v_w, g,
+                                      s);
+            }
+            FusedRule::Sgdm => {
+                scalar_ref::sgd_f32(&mut th_w, &mut m_w, g, s)
+            }
+            FusedRule::Lion => {
+                scalar_ref::lion_f32(&mut th_w, &mut m_w, g, s)
+            }
+        }
+
+        // requant the group
+        weight_split::compress_slice(&th_w, &mut tp[lo..hi],
+                                     &mut rho[lo..hi]);
+        let ms1 = &mut ms[gi..gi + 1];
+        if linear {
+            companding::quant_momentum_linear(&m_w, &mut mq[lo..hi], ms1);
+        } else {
+            companding::quant_momentum(&m_w, &mut mq[lo..hi], ms1);
+        }
+        if var {
+            let vq = vq.as_deref_mut().unwrap();
+            let vs1 = &mut vs.as_deref_mut().unwrap()[gi..gi + 1];
+            if linear {
+                companding::quant_variance_linear(&v_w, &mut vq[lo..hi],
+                                                  vs1);
+            } else {
+                companding::quant_variance(&v_w, &mut vq[lo..hi], vs1);
+            }
+        }
+    }
+}
+
+pub fn fused_step_adamw(p: &mut FusedPart<'_>, s: &StepScalars) {
+    fused_flash(p, s, FusedRule::AdamW, false);
+}
+
+pub fn fused_step_sgdm(p: &mut FusedPart<'_>, s: &StepScalars) {
+    fused_flash(p, s, FusedRule::Sgdm, false);
+}
+
+pub fn fused_step_lion(p: &mut FusedPart<'_>, s: &StepScalars) {
+    fused_flash(p, s, FusedRule::Lion, false);
+}
+
+pub fn fused_step_adamw_nocompand(p: &mut FusedPart<'_>,
+                                  s: &StepScalars) {
+    fused_flash(p, s, FusedRule::AdamW, true);
+}
+
+pub fn fused_step_sgdm_nocompand(p: &mut FusedPart<'_>,
+                                 s: &StepScalars) {
+    fused_flash(p, s, FusedRule::Sgdm, true);
+}
+
+pub fn fused_step_lion_nocompand(p: &mut FusedPart<'_>,
+                                 s: &StepScalars) {
+    fused_flash(p, s, FusedRule::Lion, true);
 }
 
 // --- 16-bit float conversions -------------------------------------------

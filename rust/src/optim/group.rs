@@ -21,7 +21,7 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::backend::{make_backend_with, FusedJob, Part, StepBackend};
+use crate::backend::{make_backend_opts, FusedJob, Part, StepBackend};
 use crate::config::{BackendKind, GroupConfig, KernelKind, OptKind,
                     Variant};
 use crate::formats::bf16;
@@ -391,7 +391,8 @@ impl FlashOptimizer {
     }
 
     /// Like [`native`](Self::native) with an explicit SIMD kernel-set
-    /// selection (`config.kernels`).
+    /// selection (`config.kernels`).  The fused single-pass fast path
+    /// is on by default.
     #[allow(clippy::too_many_arguments)]
     pub fn native_with_kernels(kind: OptKind, variant: Variant,
                                bucket: usize, theta0: &[f32],
@@ -400,8 +401,23 @@ impl FlashOptimizer {
                                backend: BackendKind, threads: usize,
                                kernels: KernelKind)
                                -> Result<FlashOptimizer> {
+        Self::native_with_opts(kind, variant, bucket, theta0, specs,
+                               defaults, backend, threads, kernels, true)
+    }
+
+    /// Like [`native_with_kernels`](Self::native_with_kernels) with an
+    /// explicit fused fast-path selection (`config.fused_step`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn native_with_opts(kind: OptKind, variant: Variant,
+                            bucket: usize, theta0: &[f32],
+                            specs: Vec<GroupSpec>,
+                            defaults: HyperDefaults,
+                            backend: BackendKind, threads: usize,
+                            kernels: KernelKind, fused: bool)
+                            -> Result<FlashOptimizer> {
         let be: Rc<dyn StepBackend> =
-            Rc::from(make_backend_with(backend, threads, kernels)?);
+            Rc::from(make_backend_opts(backend, threads, kernels,
+                                       fused)?);
         Self::build(kind, variant, bucket, theta0, specs, defaults,
                     |t0| BucketOptimizer::native_shared(
                         kind, variant, bucket, t0, be.clone()))

@@ -95,6 +95,60 @@ impl GroupHyper {
     }
 }
 
+/// Fully precomputed per-step scalar constants of the update rules —
+/// the *only* hyperparameter-derived values the step kernels are
+/// allowed to consume.
+///
+/// `scalar_ref`, the tiled three-pass `backend::fused` path, and the
+/// register-resident fused kernels (`kernels::portable` /
+/// `kernels::avx2`) all read the same precomputed f32 scalars, so a
+/// hyperparameter expression can never be re-associated differently in
+/// one path (e.g. `1 - beta1` recomputed per element vs broadcast once)
+/// — bit-exactness of the update math reduces to the op sequence alone.
+///
+/// `scale_max` records the f16 saturation bound of the requant stage
+/// (`formats::fp16::MAX`).  The in-tree kernels reach that clamp
+/// through `companding::scale_pair` rather than reading this field —
+/// it is carried so the struct is the *complete* per-step constant
+/// set (a dump of `StepScalars` fully describes the step's numeric
+/// configuration), and a unit test pins it to the codec's constant so
+/// the two can never drift apart silently.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepScalars {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    /// `1.0 - beta1`, precomputed once per step
+    pub one_minus_beta1: f32,
+    /// `1.0 - beta2`, precomputed once per step
+    pub one_minus_beta2: f32,
+    pub eps: f32,
+    pub wd: f32,
+    /// Adam bias corrections (exactly `Hyper::{bc1, bc2}`)
+    pub bc1: f32,
+    pub bc2: f32,
+    /// f16 saturation bound for requant scales (`fp16::MAX`; see the
+    /// struct docs — informational, pinned against the codec by test)
+    pub scale_max: f32,
+}
+
+impl StepScalars {
+    pub fn of(h: &Hyper) -> StepScalars {
+        StepScalars {
+            lr: h.lr,
+            beta1: h.beta1,
+            beta2: h.beta2,
+            one_minus_beta1: 1.0 - h.beta1,
+            one_minus_beta2: 1.0 - h.beta2,
+            eps: h.eps,
+            wd: h.wd,
+            bc1: h.bc1,
+            bc2: h.bc2,
+            scale_max: crate::formats::fp16::MAX,
+        }
+    }
+}
+
 /// `beta^t` for the bias corrections, robust at pathological step
 /// counts: `powi` takes an i32 exponent, so a raw `t as i32` cast wraps
 /// negative for `t > i32::MAX` and turns the correction into garbage;
@@ -124,6 +178,12 @@ impl Hyper {
     pub fn to_vec8(self) -> [f32; NHYP] {
         [self.lr, self.beta1, self.beta2, self.eps, self.wd, self.bc1,
          self.bc2, 0.0]
+    }
+
+    /// Precompute the per-step scalar constants every native step path
+    /// consumes (see [`StepScalars`]).
+    pub fn scalars(&self) -> StepScalars {
+        StepScalars::of(self)
     }
 }
 
@@ -201,6 +261,25 @@ mod tests {
             assert!(bc1 >= 1.0 && bc1 <= last, "t={t} bc1={bc1}");
             last = bc1;
         }
+    }
+
+    #[test]
+    fn step_scalars_mirror_hyper_exactly() {
+        let cfg = TrainConfig::default();
+        let h = Hyper::for_step(&cfg, 3e-4, 17);
+        let s = h.scalars();
+        assert_eq!(s.lr, h.lr);
+        assert_eq!(s.beta1, h.beta1);
+        assert_eq!(s.beta2, h.beta2);
+        // the precomputed complements are the same single f32
+        // subtraction the update loops used to perform per element
+        assert_eq!(s.one_minus_beta1.to_bits(), (1.0 - h.beta1).to_bits());
+        assert_eq!(s.one_minus_beta2.to_bits(), (1.0 - h.beta2).to_bits());
+        assert_eq!(s.eps, h.eps);
+        assert_eq!(s.wd, h.wd);
+        assert_eq!(s.bc1, h.bc1);
+        assert_eq!(s.bc2, h.bc2);
+        assert_eq!(s.scale_max, crate::formats::fp16::MAX);
     }
 
     #[test]

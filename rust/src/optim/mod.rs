@@ -10,6 +10,6 @@ pub mod state;
 
 pub use group::{is_no_decay, FlashOptimizer, GroupSpec, GroupState,
                 ParamGroup, StateDict};
-pub use hyper::{GroupHyper, Hyper, HyperDefaults, NHYP};
+pub use hyper::{GroupHyper, Hyper, HyperDefaults, StepScalars, NHYP};
 pub use optimizer::{artifact_name, BucketOptimizer};
 pub use state::State;

@@ -7,35 +7,43 @@
 
 use crate::config::{OptKind, Variant};
 use crate::formats::{companding, weight_split};
-use crate::optim::hyper::Hyper;
+use crate::optim::hyper::{Hyper, StepScalars};
 use crate::optim::state::State;
 
 /// fp32 AdamW step on slices (the paper's Algorithm 4 inner update).
+///
+/// All three update rules consume precomputed [`StepScalars`] so every
+/// native step path (this mirror, the tiled `backend::fused` path, and
+/// the register-resident fused kernels) reads identical f32 constants;
+/// the op sequence below is the bit-exactness contract the SIMD
+/// kernels mirror lane for lane.
 pub fn adamw_f32(theta: &mut [f32], m: &mut [f32], v: &mut [f32],
-                 g: &[f32], h: &Hyper) {
+                 g: &[f32], s: &StepScalars) {
     for i in 0..theta.len() {
         let gi = g[i];
-        m[i] = h.beta1 * m[i] + (1.0 - h.beta1) * gi;
-        v[i] = h.beta2 * v[i] + (1.0 - h.beta2) * gi * gi;
-        let m_hat = m[i] * h.bc1;
-        let v_hat = v[i] * h.bc2;
-        theta[i] -= h.lr * (m_hat / (v_hat.sqrt() + h.eps)
-                            + h.wd * theta[i]);
+        m[i] = s.beta1 * m[i] + s.one_minus_beta1 * gi;
+        v[i] = s.beta2 * v[i] + s.one_minus_beta2 * gi * gi;
+        let m_hat = m[i] * s.bc1;
+        let v_hat = v[i] * s.bc2;
+        theta[i] -= s.lr * (m_hat / (v_hat.sqrt() + s.eps)
+                            + s.wd * theta[i]);
     }
 }
 
 /// fp32 SGD-with-momentum step (Algorithm 5 semantics).
-pub fn sgd_f32(theta: &mut [f32], m: &mut [f32], g: &[f32], h: &Hyper) {
+pub fn sgd_f32(theta: &mut [f32], m: &mut [f32], g: &[f32],
+               s: &StepScalars) {
     for i in 0..theta.len() {
-        m[i] = h.beta1 * m[i] + g[i];
-        theta[i] -= h.lr * (m[i] + h.wd * theta[i]);
+        m[i] = s.beta1 * m[i] + g[i];
+        theta[i] -= s.lr * (m[i] + s.wd * theta[i]);
     }
 }
 
 /// fp32 Lion step (Algorithm 6 semantics).
-pub fn lion_f32(theta: &mut [f32], m: &mut [f32], g: &[f32], h: &Hyper) {
+pub fn lion_f32(theta: &mut [f32], m: &mut [f32], g: &[f32],
+                s: &StepScalars) {
     for i in 0..theta.len() {
-        let c = h.beta1 * m[i] + (1.0 - h.beta1) * g[i];
+        let c = s.beta1 * m[i] + s.one_minus_beta1 * g[i];
         let u = if c > 0.0 {
             1.0
         } else if c < 0.0 {
@@ -43,8 +51,8 @@ pub fn lion_f32(theta: &mut [f32], m: &mut [f32], g: &[f32], h: &Hyper) {
         } else {
             0.0
         };
-        m[i] = h.beta2 * m[i] + (1.0 - h.beta2) * g[i];
-        theta[i] -= h.lr * (u + h.wd * theta[i]);
+        m[i] = s.beta2 * m[i] + s.one_minus_beta2 * g[i];
+        theta[i] -= s.lr * (u + s.wd * theta[i]);
     }
 }
 
@@ -54,6 +62,7 @@ pub fn lion_f32(theta: &mut [f32], m: &mut [f32], g: &[f32], h: &Hyper) {
 pub fn step_state(state: &mut State, g: &[f32], opt: OptKind,
                   variant: Variant, h: &Hyper) {
     assert_eq!(g.len(), state.n);
+    let s = h.scalars();
     let nocompand = variant == Variant::NoCompand;
 
     // prologue: reconstruct fp32 views
@@ -69,9 +78,9 @@ pub fn step_state(state: &mut State, g: &[f32], opt: OptKind,
 
     // update
     match opt {
-        OptKind::AdamW => adamw_f32(&mut theta, &mut m, &mut v, g, h),
-        OptKind::Sgd => sgd_f32(&mut theta, &mut m, g, h),
-        OptKind::Lion => lion_f32(&mut theta, &mut m, g, h),
+        OptKind::AdamW => adamw_f32(&mut theta, &mut m, &mut v, g, &s),
+        OptKind::Sgd => sgd_f32(&mut theta, &mut m, g, &s),
+        OptKind::Lion => lion_f32(&mut theta, &mut m, g, &s),
     }
 
     // epilogue: restore storage formats
@@ -131,7 +140,7 @@ mod tests {
         let mut m = vec![0f32; GROUP];
         let mut v = vec![0f32; GROUP];
         let g = vec![1.0f32; GROUP];
-        adamw_f32(&mut theta, &mut m, &mut v, &g, &hyp(1));
+        adamw_f32(&mut theta, &mut m, &mut v, &g, &hyp(1).scalars());
         assert!(theta.iter().all(|&t| t < 1.0));
     }
 
@@ -145,7 +154,7 @@ mod tests {
         let mut h = hyp(1);
         h.wd = 0.0;
         h.lr = 2e-4;
-        lion_f32(&mut theta, &mut m, &g, &h);
+        lion_f32(&mut theta, &mut m, &g, &h.scalars());
         for (a, b) in theta.iter().zip(&before) {
             // lr plus one f32 rounding of theta at ~0.1 magnitude
             assert!((a - b).abs() <= 2e-4 + 1e-7);
@@ -169,7 +178,7 @@ mod tests {
                 .collect();
             let h = hyp(t);
             step_state(&mut flash, &g, OptKind::AdamW, Variant::Flash, &h);
-            adamw_f32(&mut t32, &mut m32, &mut v32, &g, &h);
+            adamw_f32(&mut t32, &mut m32, &mut v32, &g, &h.scalars());
         }
         let back = flash.master_weights();
         let mut drifts: Vec<f64> = back

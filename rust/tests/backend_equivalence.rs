@@ -171,6 +171,42 @@ fn backends_match_legacy_scalar_ref_all_kernel_sets() {
     }
 }
 
+/// The fused single-pass fast path (the default) == the tiled
+/// three-pass path, all 15 pairs, multi-step — covered pairs exercise
+/// the register-resident kernels, uncovered pairs the silent fallback.
+#[test]
+fn fused_fast_path_matches_tiled_path() {
+    let n = fused::TILE + 3 * GROUP;
+    for opt in ALL_OPTS {
+        for variant in ALL_VARIANTS {
+            let mut rng = Rng::new(0xF05E);
+            let theta0 = randn(&mut rng, n, 0.1);
+            let cfg = TrainConfig { optimizer: opt, variant,
+                                    ..Default::default() };
+            let fused_be =
+                ScalarBackend::with_options(KernelKind::Auto, true)
+                    .unwrap();
+            let tiled_be =
+                ScalarBackend::with_options(KernelKind::Auto, false)
+                    .unwrap();
+            assert!(fused_be.fused_enabled());
+            assert!(!tiled_be.fused_enabled());
+            let mut a = State::init(&theta0, n, opt, variant);
+            let mut b = a.clone();
+            for t in 1..=4 {
+                let g = grad(&mut rng, n, variant);
+                let h = Hyper::for_step(&cfg, 1e-3, t);
+                fused_be.step_full(&mut a, &g, opt, variant, &h)
+                    .unwrap();
+                tiled_be.step_full(&mut b, &g, opt, variant, &h)
+                    .unwrap();
+            }
+            assert_states_bit_equal(
+                &a, &b, &format!("{opt}/{variant} fused-vs-tiled"));
+        }
+    }
+}
+
 /// Thread count must never change a bit (1, 2, 3, 8, and "all cores").
 #[test]
 fn thread_count_invariance() {
@@ -338,7 +374,10 @@ fn step_all_fires_bucket_hooks_in_order() {
 
 /// The tiled fused step keeps its scratch O(tile) no matter how large
 /// the partition is — asserted through the memory tracker so the bound
-/// shows up in the same accounting the paper's Table 4 uses.
+/// shows up in the same accounting the paper's Table 4 uses.  (The
+/// default backend takes the register-resident single-pass fast path,
+/// which uses no scratch at all; the tiled bound is asserted on a
+/// backend with the fast path pinned off.)
 #[test]
 fn fused_scratch_is_o_tile_via_memory_tracker() {
     let cfg = TrainConfig::default();
@@ -350,9 +389,19 @@ fn fused_scratch_is_o_tile_via_memory_tracker() {
     let theta0 = randn(&mut rng, n, 0.1);
     let g = grad(&mut rng, n, Variant::Flash);
 
+    // the default (fused single-pass) backend is scratch-free
     fused::reset_scratch_peak();
     let mut st = State::init(&theta0, n, OptKind::AdamW, Variant::Flash);
     ScalarBackend::default()
+        .step_full(&mut st, &g, OptKind::AdamW, Variant::Flash, &h)
+        .unwrap();
+    assert_eq!(fused::scratch_peak_bytes(), 0,
+               "fused fast path must not touch the tile scratch");
+
+    fused::reset_scratch_peak();
+    let mut st = State::init(&theta0, n, OptKind::AdamW, Variant::Flash);
+    ScalarBackend::with_options(KernelKind::Auto, false)
+        .unwrap()
         .step_full(&mut st, &g, OptKind::AdamW, Variant::Flash, &h)
         .unwrap();
     let scratch = fused::scratch_peak_bytes();

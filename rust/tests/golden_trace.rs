@@ -1,0 +1,254 @@
+//! Golden-trace regression harness: short end-to-end optimizer runs
+//! with pinned CRC32 checksums of the final parameters + optimizer
+//! state, so cross-PR numeric drift in *any* layer (codecs, kernels,
+//! update rules, hyper resolution, group plumbing, checkpoint state
+//! assembly) fails loudly instead of silently shifting results.
+//!
+//! One trace per optimizer family (adamw / sgd / lion, `flash`
+//! variant, two param groups with overrides, scalar backend + scalar
+//! kernels, fixed seed).  Every input is derived from `util::rng::Rng`
+//! bits through exact power-of-two arithmetic only — no libm calls —
+//! so the checksums are identical on any IEEE-754 platform, not just
+//! the machine that generated them.
+//!
+//! Workflow:
+//! * `cargo test --test golden_trace` — compares against
+//!   `tests/golden/golden_trace.txt`; a mismatch is a real numeric
+//!   change and must be explained (then regenerated deliberately).
+//! * missing golden file — the run seeds it, prints the checksums, and
+//!   passes with a note asking to commit the file.
+//! * `UPDATE_GOLDEN=1 cargo test --test golden_trace` — regenerates
+//!   and prints the checksums unconditionally.
+//!
+//! CI carries the checksums across runs through a side cache that is
+//! only copied into place when no golden file is committed (a
+//! committed file always wins — see ci.yml and tests/golden/README.md),
+//! so drift between consecutive CI runs on main fails even before the
+//! file is committed.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use flashtrain::checkpoint::crc32::crc32;
+use flashtrain::config::{BackendKind, KernelKind, OptKind, TrainConfig,
+                         Variant};
+use flashtrain::formats::weight_split::pow2;
+use flashtrain::optim::{FlashOptimizer, GroupHyper, GroupSpec,
+                        HyperDefaults};
+use flashtrain::util::rng::Rng;
+
+const STEPS: usize = 20;
+const PARAMS: usize = 700; // deliberately unaligned (padding paths)
+const BUCKET: usize = 128;
+/// 2^-10: exactly representable so the schedule math is libm-free.
+const LR: f64 = 0.0009765625;
+
+const FAMILIES: [(OptKind, &str); 3] = [
+    (OptKind::AdamW, "adamw_flash"),
+    (OptKind::Sgd, "sgd_flash"),
+    (OptKind::Lion, "lion_flash"),
+];
+
+/// Deterministic value from raw RNG bits: a 24-bit uniform fraction in
+/// [-1, 1) times an exact power of two.  Integer→f32 conversion of a
+/// 24-bit value and multiplication by 2^k are both exact, so identical
+/// bits fall out on every conforming platform.
+fn det_val(rng: &mut Rng) -> f32 {
+    let u = rng.u64();
+    let frac = (u >> 40) as f32 * (1.0 / (1u64 << 23) as f32) - 1.0;
+    let e = ((u >> 32) & 0xF) as i32;
+    frac * pow2(e - 12)
+}
+
+fn det_vec(rng: &mut Rng, n: usize, scale_exp: i32) -> Vec<f32> {
+    (0..n).map(|_| det_val(rng) * pow2(scale_exp)).collect()
+}
+
+/// Two groups with different overrides, tiling the parameter vector:
+/// exercises per-group hyper resolution and the gather/scatter paths.
+fn specs() -> Vec<GroupSpec> {
+    let cut = 300;
+    vec![
+        GroupSpec {
+            name: "head".into(),
+            ranges: vec![(0, cut)],
+            hyper: GroupHyper {
+                weight_decay: Some(0.0),
+                ..Default::default()
+            },
+        },
+        GroupSpec {
+            name: "body".into(),
+            ranges: vec![(cut, PARAMS)],
+            hyper: GroupHyper {
+                lr_scale: Some(0.5),
+                ..Default::default()
+            },
+        },
+    ]
+}
+
+fn push_bytes<T, F: Fn(&T, &mut Vec<u8>)>(out: &mut Vec<u8>, tag: u8,
+                                          v: &Option<Vec<T>>, f: F) {
+    out.push(tag);
+    match v {
+        Some(v) => {
+            out.extend_from_slice(&(v.len() as u64).to_le_bytes());
+            for x in v {
+                f(x, out);
+            }
+        }
+        None => out.extend_from_slice(&u64::MAX.to_le_bytes()),
+    }
+}
+
+/// Run one family trace and checksum the final state dict + compute
+/// weights.
+fn run_trace(opt: OptKind, backend: BackendKind, threads: usize,
+             kernels: KernelKind, fused: bool) -> u32 {
+    let cfg = TrainConfig {
+        optimizer: opt,
+        variant: Variant::Flash,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(0x601D ^ opt.name().len() as u64);
+    let theta0 = det_vec(&mut rng, PARAMS, 0);
+    let mut fo = FlashOptimizer::native_with_opts(
+        opt, Variant::Flash, BUCKET, &theta0, specs(),
+        HyperDefaults::of(&cfg), backend, threads, kernels, fused)
+        .expect("building the golden-trace optimizer");
+    for t in 1..=STEPS {
+        let g = det_vec(&mut rng, PARAMS, -5);
+        fo.step(&g, LR, t, |_, _| {}).expect("golden-trace step");
+    }
+
+    let sd = fo.state_dict(STEPS as u64);
+    let mut bytes: Vec<u8> = Vec::new();
+    for gs in &sd.groups {
+        bytes.extend_from_slice(gs.name.as_bytes());
+        bytes.extend_from_slice(&gs.param_count.to_le_bytes());
+        let st = &gs.state;
+        bytes.extend_from_slice(&(st.n as u64).to_le_bytes());
+        push_bytes(&mut bytes, 1, &st.theta,
+                   |x, o| o.extend_from_slice(&x.to_bits().to_le_bytes()));
+        push_bytes(&mut bytes, 2, &st.theta_p,
+                   |x, o| o.extend_from_slice(&x.to_le_bytes()));
+        push_bytes(&mut bytes, 3, &st.rho,
+                   |x, o| o.push(*x as u8));
+        push_bytes(&mut bytes, 4, &st.m,
+                   |x, o| o.extend_from_slice(&x.to_bits().to_le_bytes()));
+        push_bytes(&mut bytes, 5, &st.v,
+                   |x, o| o.extend_from_slice(&x.to_bits().to_le_bytes()));
+        push_bytes(&mut bytes, 6, &st.mq,
+                   |x, o| o.push(*x as u8));
+        push_bytes(&mut bytes, 7, &st.ms,
+                   |x, o| o.extend_from_slice(&x.to_le_bytes()));
+        push_bytes(&mut bytes, 8, &st.vq,
+                   |x, o| o.push(*x));
+        push_bytes(&mut bytes, 9, &st.vs,
+                   |x, o| o.extend_from_slice(&x.to_le_bytes()));
+    }
+    for w in fo.compute_weights_bf16(PARAMS) {
+        bytes.extend_from_slice(&w.to_le_bytes());
+    }
+    crc32(&bytes)
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/golden_trace.txt")
+}
+
+fn render(entries: &[(&str, u32)]) -> String {
+    let mut s = String::from(
+        "# golden_trace checksums — regenerate with UPDATE_GOLDEN=1 \
+         cargo test --test golden_trace\n");
+    for (name, crc) in entries {
+        writeln!(s, "{name}=0x{crc:08X}").unwrap();
+    }
+    s
+}
+
+/// The golden comparison itself: one checksum per optimizer family on
+/// the reference configuration (scalar backend, scalar kernels).
+#[test]
+fn golden_trace_checksums() {
+    let entries: Vec<(&str, u32)> = FAMILIES
+        .iter()
+        .map(|&(opt, name)| {
+            (name,
+             run_trace(opt, BackendKind::Scalar, 0, KernelKind::Scalar,
+                       true))
+        })
+        .collect();
+
+    // in-process determinism is a precondition for pinning anything
+    for &(opt, name) in &FAMILIES {
+        let again = run_trace(opt, BackendKind::Scalar, 0,
+                              KernelKind::Scalar, true);
+        let first = entries.iter().find(|(n, _)| *n == name).unwrap().1;
+        assert_eq!(first, again, "{name}: trace not deterministic");
+    }
+
+    let path = golden_path();
+    let update = std::env::var("UPDATE_GOLDEN").as_deref() == Ok("1");
+    if update || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, render(&entries)).unwrap();
+        for (name, crc) in &entries {
+            println!("golden_trace: {name}=0x{crc:08X}");
+        }
+        if update {
+            println!("golden_trace: regenerated {}", path.display());
+        } else {
+            println!(
+                "golden_trace: seeded {} — commit it to pin these \
+                 checksums across PRs",
+                path.display());
+        }
+        return;
+    }
+
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    for (name, crc) in &entries {
+        let want = text
+            .lines()
+            .find_map(|l| l.strip_prefix(&format!("{name}=")))
+            .unwrap_or_else(|| {
+                panic!(
+                    "{} has no entry for {name}; regenerate with \
+                     UPDATE_GOLDEN=1",
+                    path.display())
+            })
+            .trim();
+        let got = format!("0x{crc:08X}");
+        assert_eq!(
+            want, got,
+            "{name}: golden checksum drifted ({want} pinned, {got} \
+             computed).  Some layer changed the numerics — if the \
+             change is intentional, rerun with UPDATE_GOLDEN=1 and \
+             commit the new {}",
+            path.display());
+    }
+}
+
+/// The checksum must not depend on which engine computed it: kernels
+/// (scalar vs auto/AVX2), backend (sequential vs thread pool), and the
+/// fused fast path vs the tiled fallback all produce the same bits.
+#[test]
+fn golden_trace_is_engine_invariant() {
+    for &(opt, name) in &FAMILIES {
+        let reference = run_trace(opt, BackendKind::Scalar, 0,
+                                  KernelKind::Scalar, true);
+        let tiled = run_trace(opt, BackendKind::Scalar, 0,
+                              KernelKind::Scalar, false);
+        assert_eq!(reference, tiled, "{name}: fused vs tiled");
+        let auto = run_trace(opt, BackendKind::Scalar, 0,
+                             KernelKind::Auto, true);
+        assert_eq!(reference, auto, "{name}: scalar vs auto kernels");
+        let par = run_trace(opt, BackendKind::Parallel, 3,
+                            KernelKind::Auto, true);
+        assert_eq!(reference, par, "{name}: sequential vs parallel");
+    }
+}

@@ -13,11 +13,18 @@
 //!   floats across binades incl. NaN/inf/subnormals;
 //! * adversarial companding groups: all-zero, absmax-saturating
 //!   (f16-scale overflow), denormal-scale, and ±tie-rounding values;
-//! * weight-split compress/decompress over random + special values.
+//! * weight-split compress/decompress over random + special values;
+//! * fused single-pass step kernels driven through the same
+//!   adversarial groups (plus ±inf / NaN weights, NaN/saturating
+//!   gradients, and NaN-producing hypers like negative beta2), pinned
+//!   three ways against the tiled path and the legacy scalar mirror.
 
-use flashtrain::config::KernelKind;
+use flashtrain::backend::fused::step_part;
+use flashtrain::backend::Part;
+use flashtrain::config::{KernelKind, OptKind, TrainConfig, Variant};
 use flashtrain::formats::{companding, fp16, weight_split, GROUP};
 use flashtrain::kernels::{avx2_available, kernel_set, KernelSet};
+use flashtrain::optim::{scalar_ref, Hyper, State};
 use flashtrain::util::rng::Rng;
 
 /// Kernel sets to pin against the scalar reference.
@@ -358,6 +365,157 @@ fn weight_split_kernels_bit_exact() {
         (ks.split_decompress)(&tp, &rho, &mut out);
         assert_f32_bits_eq(&out_ref, &out,
                            &format!("split_decompress[{}]", ks.name));
+    }
+}
+
+// --- fused single-pass step kernels --------------------------------------
+
+fn assert_states_eq(a: &State, b: &State, what: &str) {
+    assert_eq!(a.theta_p, b.theta_p, "{what}: theta_p");
+    assert_eq!(a.rho, b.rho, "{what}: rho");
+    assert_eq!(a.mq, b.mq, "{what}: mq");
+    assert_eq!(a.ms, b.ms, "{what}: ms");
+    assert_eq!(a.vq, b.vq, "{what}: vq");
+    assert_eq!(a.vs, b.vs, "{what}: vs");
+    assert_eq!(a.theta.is_none(), b.theta.is_none(), "{what}: theta");
+    assert_eq!(a.m.is_none(), b.m.is_none(), "{what}: m");
+    assert_eq!(a.v.is_none(), b.v.is_none(), "{what}: v");
+}
+
+/// Adversarial master weights for the fused sweeps: the signed
+/// companding groups (all-zero, f16-scale saturation, denormal scale,
+/// tie values, cross-binade, heavy-tailed) reused as weights, plus an
+/// all-inf group and a NaN-bearing group.
+fn fused_adversarial_theta() -> Vec<f32> {
+    let mut v = adversarial_groups(true);
+    v.extend((0..GROUP).map(|i| {
+        if i % 2 == 0 { f32::INFINITY } else { f32::NEG_INFINITY }
+    }));
+    v.extend((0..GROUP).map(|i| {
+        if i % 4 == 0 {
+            f32::from_bits(0x7FC0_0000 | (i as u32 * 0x1357 + 1))
+        } else {
+            0.25 * (i as f32 - 15.0)
+        }
+    }));
+    assert_eq!(v.len() % GROUP, 0);
+    v
+}
+
+/// Adversarial gradients (bf16-rounded: the fused pairs are all
+/// split-weight variants): zeros, saturating magnitudes, denormals,
+/// ties, and — when `with_nan` — payload-carrying quiet NaNs plus one
+/// signaling NaN.
+fn fused_adversarial_grads(n: usize, with_nan: bool) -> Vec<f32> {
+    let mut rng = Rng::new(0xFAD5);
+    let mut g: Vec<f32> = (0..n)
+        .map(|i| match (i / GROUP) % 5 {
+            0 => 0.0,
+            1 => 1e30 * ((i % GROUP) as f32 + 1.0),
+            2 => f32::from_bits(1 + (i as u32 % 0xFFFF)),
+            3 => (2 * (i % GROUP) + 1) as f32 / 254.0,
+            _ => {
+                let a = rng.normal() as f32;
+                let b = (rng.normal() as f32).abs() + 0.3;
+                a / b * 0.01
+            }
+        })
+        .collect();
+    if with_nan {
+        for (i, x) in g.iter_mut().enumerate().skip(7).step_by(37) {
+            *x = f32::from_bits(0x7FC0_0000 | (i as u32 & 0x3F_FFFF));
+        }
+        g[3] = f32::from_bits(0x7F80_0001); // sNaN: quieted by bf16
+    }
+    g.iter()
+        .map(|&x| flashtrain::formats::bf16::round_f32_to_bf16(x))
+        .collect()
+}
+
+/// Fused-kernel adversarial sweep, mirroring the per-codec groups
+/// above through the *whole* single-pass step: every covered
+/// (optimizer, variant) pair, every kernel set, against the tiled path
+/// and the legacy scalar mirror — including a negative-beta2 hyper
+/// vector that drives the variance negative (sqrt -> NaN lanes inside
+/// requant), a zero-eps vector (0/0), and a saturating learning rate.
+#[test]
+fn fused_step_kernels_bit_exact_on_adversarial_groups() {
+    let covered = [
+        (OptKind::AdamW, Variant::Flash),
+        (OptKind::Sgd, Variant::Flash),
+        (OptKind::Lion, Variant::Flash),
+        (OptKind::AdamW, Variant::NoCompand),
+        (OptKind::Sgd, Variant::NoCompand),
+        (OptKind::Lion, Variant::NoCompand),
+    ];
+    let theta0 = fused_adversarial_theta();
+    let n = theta0.len();
+    let cfg = TrainConfig::default(); // wd = 0.1 (nonzero: see fuzzer)
+    let base = Hyper::for_step(&cfg, 1e-3, 3);
+    let mut neg_var = base;
+    neg_var.beta2 = -0.5; // negative variance -> NaN through requant
+    let mut zero_eps = base;
+    zero_eps.eps = 0.0;
+    let mut huge_lr = base;
+    huge_lr.lr = 1e30; // saturates the split-weight range
+    let hypers = [("base", base), ("neg_var", neg_var),
+                  ("zero_eps", zero_eps), ("huge_lr", huge_lr)];
+
+    for (opt, variant) in covered {
+        for ks in sets_under_test() {
+            assert!(ks.fused_step(opt, variant).is_some(),
+                    "{}/{opt}/{variant} must be covered", ks.name);
+            for (hname, h) in &hypers {
+                let g = fused_adversarial_grads(n, true);
+                let mut legacy = State::init(&theta0, n, opt, variant);
+                let mut tiled = legacy.clone();
+                let mut fused = legacy.clone();
+                for step in 0..3 {
+                    scalar_ref::step_state(&mut legacy, &g, opt,
+                                           variant, h);
+                    let mut part = Part::of_range(&mut tiled, 0, n, &g);
+                    step_part(&mut part, opt, variant, h, ks, false);
+                    let mut part = Part::of_range(&mut fused, 0, n, &g);
+                    step_part(&mut part, opt, variant, h, ks, true);
+                    let what = format!(
+                        "{opt}/{variant}/{}/{hname} step {step}",
+                        ks.name);
+                    assert_states_eq(&legacy, &tiled,
+                                     &format!("{what} tiled"));
+                    assert_states_eq(&legacy, &fused,
+                                     &format!("{what} fused"));
+                }
+            }
+        }
+    }
+}
+
+/// Zero-wd hypers are exercised with NaN-free gradients (the one
+/// IEEE-underdetermined payload corner — see fused_fuzz — is excluded;
+/// everything else about wd = 0 must still be bit-exact).
+#[test]
+fn fused_step_kernels_bit_exact_with_zero_weight_decay() {
+    let theta0 = fused_adversarial_theta();
+    let n = theta0.len();
+    let cfg = TrainConfig {
+        weight_decay: 0.0,
+        ..Default::default()
+    };
+    let h = Hyper::for_step(&cfg, 1e-3, 1);
+    let g = fused_adversarial_grads(n, false);
+    for (opt, variant) in [(OptKind::AdamW, Variant::Flash),
+                           (OptKind::Sgd, Variant::Flash),
+                           (OptKind::Lion, Variant::NoCompand)] {
+        for ks in sets_under_test() {
+            let mut legacy = State::init(&theta0, n, opt, variant);
+            scalar_ref::step_state(&mut legacy, &g, opt, variant, &h);
+            let mut fused = State::init(&theta0, n, opt, variant);
+            let mut part = Part::of_range(&mut fused, 0, n, &g);
+            step_part(&mut part, opt, variant, &h, ks, true);
+            assert_states_eq(
+                &legacy, &fused,
+                &format!("{opt}/{variant}/{} wd=0", ks.name));
+        }
     }
 }
 
