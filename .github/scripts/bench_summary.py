@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Render the fused-vs-tiled section of BENCH_kernels.json (schema v3)
+as a GitHub job-summary markdown table.
+
+Usage: bench_summary.py BENCH_kernels.json >> "$GITHUB_STEP_SUMMARY"
+
+Keeps zero dependencies (stdlib json only) so the CI step is a single
+python3 invocation on the stock runner image.
+"""
+
+import json
+import sys
+
+
+def fmt_time(seconds):
+    if seconds < 1e-6:
+        return f"{seconds * 1e9:.0f} ns"
+    if seconds < 1e-3:
+        return f"{seconds * 1e6:.1f} us"
+    if seconds < 1.0:
+        return f"{seconds * 1e3:.2f} ms"
+    return f"{seconds:.3f} s"
+
+
+def main():
+    if len(sys.argv) != 2:
+        sys.exit("usage: bench_summary.py BENCH_kernels.json")
+    with open(sys.argv[1], encoding="utf-8") as f:
+        doc = json.load(f)
+
+    schema = doc.get("schema_version")
+    rows = doc.get("fused", [])
+    print("## fused single-pass vs tiled three-pass")
+    print()
+    print(
+        f"schema v{schema:g} · {doc.get('step_elements'):,} params · "
+        f"avx2_detected={str(doc.get('avx2_detected')).lower()} · "
+        f"check={str(doc.get('check')).lower()}"
+    )
+    print()
+    print("| optimizer/variant | kernels | fused | tiled | speedup |"
+          " GB/s fused | GB/s tiled |")
+    print("|---|---|---|---|---|---|---|")
+    for e in rows:
+        pair = f"{e['optimizer']}/{e['variant']}"
+        print(
+            f"| {pair} | {e['kernels']} "
+            f"| {fmt_time(e['fused_median_s'])} "
+            f"| {fmt_time(e['tiled_median_s'])} "
+            f"| {e['speedup']:.2f}x "
+            f"| {e['fused_gb_per_s']:.2f} "
+            f"| {e['tiled_gb_per_s']:.2f} |"
+        )
+    if not rows:
+        print()
+        print("_no fused rows in the bench output_")
+
+    pairs = {(e["optimizer"], e["variant"]) for e in rows}
+    print()
+    print(f"{len(rows)} rows · {len(pairs)} distinct (optimizer, "
+          f"variant) pairs (universe: 15)")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,11 +12,14 @@
 //!
 //! `--check` is the CI smoke mode: small sizes, asserts that scalar
 //! and AVX2 kernels (where detected) agree bit-exactly, that the
-//! fused / tiled / legacy-scalar step paths agree three ways, and that
-//! the emitted JSON (including the `fused` section) parses — so kernel
-//! regressions fail PRs, not just benches.
+//! fused / tiled / legacy-scalar step paths agree three ways over the
+//! **full 15-pair (optimizer, variant) universe** per kernel set, and
+//! that the emitted JSON (schema v3: per-layout fused rows with the
+//! traffic model, field-validated, pair-universe-complete) parses —
+//! so kernel regressions and silently dropped pairs fail PRs, not
+//! just benches.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use flashtrain::backend::{ParallelBackend, ScalarBackend, StepBackend};
 use flashtrain::config::{Json, KernelKind, OptKind, TrainConfig,
@@ -33,13 +36,35 @@ use flashtrain::util::table::Table;
 
 /// (optimizer, variant, label, persistent state bytes/param) rows the
 /// step benchmarks report.
-const STEP_ROWS: [(OptKind, Variant, &str, f64); 5] = [
+const STEP_ROWS: [(OptKind, Variant, &str, f64); 7] = [
     (OptKind::AdamW, Variant::Reference, "adamw ref", 16.0),
     (OptKind::AdamW, Variant::Flash, "adamw flash", 7.125),
+    (OptKind::AdamW, Variant::WeightSplit, "adamw wsplit", 13.0),
     (OptKind::AdamW, Variant::OptQuant, "adamw quant", 10.125),
+    (OptKind::AdamW, Variant::NoCompand, "adamw nocompand", 7.125),
     (OptKind::Sgd, Variant::Flash, "sgd flash", 6.125),
     (OptKind::Lion, Variant::Flash, "lion flash", 6.125),
 ];
+
+/// The traffic model behind the fused table's GB/s columns: every
+/// persistent state byte is read once and written once per step
+/// (2 × state bytes) plus one gradient read, per (optimizer, variant)
+/// layout — the "state r+w, grad r" convention of the docs/PERF.md
+/// traffic table (split weights = bf16 θ' + i8 ρ, 8-bit moments =
+/// i8/u8 code + f16 group scale, gradient = bf16 for split tracks
+/// else f32).  E.g. adamw/flash: 2 × 5.125 + 2 = 12.25 B/param.
+fn layout_bytes_per_param(opt: OptKind, variant: Variant) -> f64 {
+    let weights = if variant.splits_weights() { 2.0 + 1.0 } else { 4.0 };
+    let moment = if variant.quantizes_state() {
+        1.0 + 2.0 / GROUP as f64
+    } else {
+        4.0
+    };
+    let moments =
+        moment * if opt.has_variance() { 2.0 } else { 1.0 };
+    let grad = if variant.splits_weights() { 2.0 } else { 4.0 };
+    2.0 * (weights + moments) + grad
+}
 
 /// Bytes moved per element (read + write) per codec — the traffic
 /// model behind the GB/s column, documented in docs/PERF.md.
@@ -318,22 +343,29 @@ fn main() {
     t.print();
 
     // ---- fused single-pass vs tiled three-pass ----------------------------
-    // the register-resident fast path against its fallback, per kernel
-    // set; uncovered pairs report the fallback on both sides so the
-    // table shows the full selection matrix
-    const FUSED_ROWS: [(OptKind, Variant, &str); 5] = [
-        (OptKind::AdamW, Variant::Flash, "adamw flash"),
-        (OptKind::Sgd, Variant::Flash, "sgd flash"),
-        (OptKind::Lion, Variant::Flash, "lion flash"),
-        (OptKind::AdamW, Variant::NoCompand, "adamw nocompand"),
-        (OptKind::AdamW, Variant::OptQuant, "adamw quant"),
-    ];
+    // the register-resident fast path against the tiled mirror over
+    // the FULL 15-pair (optimizer, variant) universe, per kernel set —
+    // every pair fuses now (fp32-resident layouts included), so the
+    // table is the complete per-layout selection-free matrix and a
+    // missing pair is a loud error, not a silently absent row
+    let all_opts = [OptKind::Sgd, OptKind::AdamW, OptKind::Lion];
+    let all_variants = [Variant::Reference, Variant::Flash,
+                        Variant::WeightSplit, Variant::OptQuant,
+                        Variant::NoCompand];
+    let fused_universe: Vec<(OptKind, Variant)> = all_opts
+        .iter()
+        .flat_map(|&o| all_variants.iter().map(move |&v| (o, v)))
+        .collect();
+    assert_eq!(fused_universe.len(), 15);
     let mut t = Table::new(
         &format!("fused single-pass vs tiled three-pass ({bucket} \
-                  params)"),
-        &["variant", "kernels", "path", "fused", "tiled", "speedup"]);
+                  params, all 15 pairs)"),
+        &["variant", "kernels", "fused", "tiled", "speedup",
+          "GB/s fused"]);
     let mut fused_checks = 0usize;
-    for (opt, variant, label) in FUSED_ROWS {
+    for &(opt, variant) in &fused_universe {
+        let label = format!("{} {}", opt.name(), variant.name());
+        let bpe = layout_bytes_per_param(opt, variant);
         let theta: Vec<f32> =
             (0..bucket).map(|_| rng.normal() as f32 * 0.1).collect();
         let g: Vec<f32> = (0..bucket)
@@ -352,38 +384,42 @@ fn main() {
         let h = Hyper::for_step(&cfg, 1e-3, 10);
 
         for kind in kernel_kinds() {
-            let covered = kernel_set(kind)
-                .unwrap()
-                .fused_step(opt, variant)
-                .is_some();
+            // total coverage: the typed binding fails to compile if
+            // `fused_step` ever regresses to an Option return
+            let _kernel: flashtrain::kernels::FusedStepFn =
+                kernel_set(kind).unwrap().fused_step(opt, variant);
             let fused_be =
                 ScalarBackend::with_options(kind, true).unwrap();
             let tiled_be =
                 ScalarBackend::with_options(kind, false).unwrap();
             let mut st = State::init(&theta, padded, opt, variant);
-            let rf = bench_for(label, budget, 3, || {
+            let rf = bench_for(&label, budget, 3, || {
                 fused_be
                     .step_full(&mut st, &g_pad, opt, variant, &h)
                     .unwrap();
             });
             let mut st = State::init(&theta, padded, opt, variant);
-            let rt = bench_for(label, budget, 3, || {
+            let rt = bench_for(&label, budget, 3, || {
                 tiled_be
                     .step_full(&mut st, &g_pad, opt, variant, &h)
                     .unwrap();
             });
             let (fmed, tmed) = (rf.median_s(), rt.median_s());
-            let path = if covered { "fused" } else { "tiled-fallback" };
-            t.row(&[label.into(), kind.name().into(), path.into(),
+            let fused_gbs = bpe * padded as f64 / fmed / 1e9;
+            let tiled_gbs = bpe * padded as f64 / tmed / 1e9;
+            t.row(&[label.clone(), kind.name().into(),
                     fmt_time(fmed), fmt_time(tmed),
-                    format!("{:.2}x", tmed / fmed)]);
+                    format!("{:.2}x", tmed / fmed),
+                    format!("{fused_gbs:.2}")]);
             fused_vs_tiled_json.push(obj(vec![
                 ("optimizer", Json::Str(opt.name().into())),
                 ("variant", Json::Str(variant.name().into())),
                 ("kernels", Json::Str(kind.name().into())),
-                ("covered", Json::Bool(covered)),
+                ("bytes_per_param", Json::Num(bpe)),
                 ("fused_median_s", Json::Num(fmed)),
                 ("tiled_median_s", Json::Num(tmed)),
+                ("fused_gb_per_s", Json::Num(fused_gbs)),
+                ("tiled_gb_per_s", Json::Num(tiled_gbs)),
                 ("speedup", Json::Num(tmed / fmed)),
             ]));
 
@@ -412,15 +448,25 @@ fn main() {
     }
     t.print();
     if check {
+        // pair-universe guard: a silently dropped pair must fail here
+        let expected = fused_universe.len() * kernel_kinds().len();
+        assert_eq!(fused_checks, expected,
+                   "fused check ran {fused_checks} (pair, kernel-set) \
+                    combinations, expected {expected} — a pair fell \
+                    out of the universe");
         println!("fused check OK: fused/tiled/scalar_ref three-way \
-                  agreement on {fused_checks} (row, kernel-set) \
-                  combinations");
+                  agreement on {fused_checks} (pair, kernel-set) \
+                  combinations covering all 15 pairs");
     }
 
     // ---- machine-readable output ------------------------------------------
+    // schema v3: the `fused` section carries one row per (optimizer,
+    // variant, kernel-set) over the full 15-pair universe, with the
+    // per-layout traffic model (`bytes_per_param`, both GB/s figures);
+    // the v2 `covered` bool is gone — coverage is total
     let doc = obj(vec![
         ("bench", Json::Str("kernel_hotpath".into())),
-        ("schema_version", Json::Num(2.0)),
+        ("schema_version", Json::Num(3.0)),
         ("quick", Json::Bool(quick)),
         ("check", Json::Bool(check)),
         ("elements", Json::Num(n as f64)),
@@ -436,23 +482,38 @@ fn main() {
     assert!(parsed.get("codecs").and_then(Json::as_arr).is_some());
     assert!(parsed.get("fused_step").and_then(Json::as_arr).is_some());
     // the `fused` section is schema-validated, not just parsed: every
-    // row must carry the selection matrix + both medians
+    // row carries the traffic model + both medians, and the rows span
+    // exactly the 15-pair universe per kernel set
     let fused_arr = parsed
         .get("fused")
         .and_then(Json::as_arr)
         .expect("fused section present");
     assert!(!fused_arr.is_empty(), "fused section must not be empty");
+    let mut pairs_per_set: BTreeMap<String, BTreeSet<String>> =
+        BTreeMap::new();
     for e in fused_arr {
         for key in ["optimizer", "variant", "kernels"] {
             assert!(e.get(key).and_then(Json::as_str).is_some(),
                     "fused entry missing string {key}");
         }
-        for key in ["fused_median_s", "tiled_median_s", "speedup"] {
+        for key in ["bytes_per_param", "fused_median_s",
+                    "tiled_median_s", "fused_gb_per_s",
+                    "tiled_gb_per_s", "speedup"] {
             assert!(e.get(key).and_then(Json::as_f64).is_some(),
                     "fused entry missing number {key}");
         }
-        assert!(matches!(e.get("covered"), Some(Json::Bool(_))),
-                "fused entry missing bool covered");
+        let set = e.get("kernels").and_then(Json::as_str).unwrap();
+        let pair = format!(
+            "{}/{}",
+            e.get("optimizer").and_then(Json::as_str).unwrap(),
+            e.get("variant").and_then(Json::as_str).unwrap());
+        pairs_per_set.entry(set.to_string()).or_default().insert(pair);
+    }
+    for (set, pairs) in &pairs_per_set {
+        assert_eq!(pairs.len(), 15,
+                   "fused section covers {} of 15 pairs for kernel \
+                    set {set}",
+                   pairs.len());
     }
     std::fs::write(&out_path, text + "\n")
         .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));

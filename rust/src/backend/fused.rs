@@ -5,21 +5,25 @@
 //! This is the native mirror of the AOT fused-step kernels (paper
 //! Algorithms 4/5/6).  Two execution strategies share one semantics:
 //!
-//! * **Fused single-pass** (the fast path): when the resolved
-//!   [`KernelSet`] has a fused kernel for the `(optimizer, variant)`
-//!   pair (`KernelSet::fused_step` — the fully compact `flash` /
-//!   `nocompand` layouts), the whole partition runs through one
-//!   register-resident kernel: dequant → moment update → weight-split
-//!   update → requant per 8-lane block, **zero** fp32 scratch.  Opt
-//!   out via `fused_step = false` in `TrainConfig` (`--no-fused-step`)
-//!   to pin the tiled path for debugging.
-//! * **Tiled three-pass** (the fallback): the partition streams
-//!   through GROUP-multiple tiles of [`TILE`] elements — dequant a
-//!   tile into fixed scratch, apply the shared `scalar_ref` update
-//!   rule, requant the tile back — so scratch is **O(tile)**, not
-//!   O(partition).  Buffers the variant already stores in fp32
-//!   (reference master weights, unquantized moments) are updated **in
-//!   place** with no scratch at all.
+//! * **Fused single-pass** (the default): every `(optimizer, variant)`
+//!   pair resolves a register-resident kernel
+//!   (`KernelSet::fused_step` is total over all 15 pairs), so the
+//!   whole partition runs through one kernel: dequant → moment update
+//!   → weight-split update → requant per 8-lane block, **zero** fp32
+//!   scratch; streams a layout stores in fp32 (reference master
+//!   weights, unquantized moments) are updated in place inside the
+//!   same pass.  Opt out via `fused_step = false` in `TrainConfig`
+//!   (`--no-fused-step`), or process-wide via the
+//!   [`FLASHOPTIM_FORCE_TILED`](force_tiled) environment override.
+//! * **Tiled three-pass** (the debug/differential mirror): the
+//!   partition streams through GROUP-multiple tiles of [`TILE`]
+//!   elements — dequant a tile into fixed scratch, apply the shared
+//!   `scalar_ref` update rule, requant the tile back — so scratch is
+//!   **O(tile)**, not O(partition).  Buffers the variant already
+//!   stores in fp32 are updated **in place** with no scratch at all.
+//!   This path is no pair's default anymore; it exists so every fused
+//!   kernel has an independently-orchestrated executable spec to
+//!   differ against (and CI pins a whole tier-1 leg onto it).
 //!
 //! Bit-exactness: updates are element-wise, requantization is
 //! group-wise over whole GROUPs, and the fused kernels reuse the exact
@@ -65,11 +69,32 @@ fn note_scratch(bytes: u64) {
     SCRATCH_PEAK.with(|c| c.set(c.get().max(bytes)));
 }
 
-/// One fused optimizer step over a single partition.  `fused` selects
-/// the register-resident single-pass fast path where the kernel set
-/// covers the `(opt, variant)` pair; pairs without a fused kernel (and
-/// `fused = false`) run the tiled three-pass path.  Both produce
-/// identical bits.
+/// Process-wide tiled-path pin: `FLASHOPTIM_FORCE_TILED=1` (or `true`)
+/// makes every native backend constructed afterwards run the tiled
+/// three-pass mirror, overriding even an explicit `fused_step = true`.
+/// This is how CI keeps real end-to-end coverage on the tiled path now
+/// that the fused fast path covers all 15 (optimizer, variant) pairs:
+/// a second `build-test` matrix leg runs the whole tier-1 suite with
+/// this set (see .github/workflows/ci.yml).  Consumed at backend
+/// *construction* ([`ScalarBackend`]/[`ParallelBackend`]
+/// `with_options`), never inside the step loop, so a resolved backend
+/// stays on one path for its lifetime; tests that assert which path
+/// ran (scratch accounting, `fused_enabled`) consult this to state
+/// their expectation.  Bit-exactness makes the override invisible to
+/// every numeric result.
+///
+/// [`ScalarBackend`]: crate::backend::ScalarBackend
+/// [`ParallelBackend`]: crate::backend::ParallelBackend
+pub fn force_tiled() -> bool {
+    matches!(std::env::var("FLASHOPTIM_FORCE_TILED").ok().as_deref(),
+             Some("1") | Some("true"))
+}
+
+/// One fused optimizer step over a single partition.  `fused = true`
+/// (the default) runs the register-resident single-pass kernel —
+/// [`KernelSet::fused_step`] is total, so every `(opt, variant)` pair
+/// has one; `fused = false` runs the tiled three-pass mirror.  Both
+/// produce identical bits.
 pub fn step_part(p: &mut Part<'_>, opt: OptKind, variant: Variant,
                  h: &Hyper, ks: &KernelSet, fused: bool) {
     let n = p.len;
@@ -80,23 +105,22 @@ pub fn step_part(p: &mut Part<'_>, opt: OptKind, variant: Variant,
     let s = h.scalars();
 
     if fused {
-        if let Some(kernel) = ks.fused_step(opt, variant) {
-            // single pass, registers only: no scratch to account for
-            let mut fp = FusedPart {
-                theta: p.theta.as_deref_mut(),
-                theta_p: p.theta_p.as_deref_mut(),
-                rho: p.rho.as_deref_mut(),
-                m: p.m.as_deref_mut(),
-                v: p.v.as_deref_mut(),
-                mq: p.mq.as_deref_mut(),
-                ms: p.ms.as_deref_mut(),
-                vq: p.vq.as_deref_mut(),
-                vs: p.vs.as_deref_mut(),
-                g: p.g,
-            };
-            kernel(&mut fp, &s);
-            return;
-        }
+        // single pass, registers only: no scratch to account for
+        let kernel = ks.fused_step(opt, variant);
+        let mut fp = FusedPart {
+            theta: p.theta.as_deref_mut(),
+            theta_p: p.theta_p.as_deref_mut(),
+            rho: p.rho.as_deref_mut(),
+            m: p.m.as_deref_mut(),
+            v: p.v.as_deref_mut(),
+            mq: p.mq.as_deref_mut(),
+            ms: p.ms.as_deref_mut(),
+            vq: p.vq.as_deref_mut(),
+            vs: p.vs.as_deref_mut(),
+            g: p.g,
+        };
+        kernel(&mut fp, &s);
+        return;
     }
 
     let nocompand = variant == Variant::NoCompand;
@@ -239,7 +263,7 @@ mod tests {
     }
 
     /// A single full-range (multi-tile) step_part — fused fast path
-    /// and tiled fallback — must equal the legacy whole-buffer scalar
+    /// and tiled mirror — must equal the legacy whole-buffer scalar
     /// mirror bit for bit, for every kernel set.
     #[test]
     fn full_range_part_matches_step_state() {
@@ -320,30 +344,50 @@ mod tests {
                    "fused fast path must be scratch-free");
     }
 
-    /// An uncovered pair with `fused = true` silently takes the tiled
-    /// path (selection is per (optimizer, variant), never an error).
+    /// The fp32-resident layouts run the fused single-pass path too
+    /// now: no scratch, same bits as the legacy scalar mirror; and the
+    /// tiled mirror stays selectable (`fused = false`) with its
+    /// O(tile) scratch signature for the streams the layout codecs.
     #[test]
-    fn uncovered_pair_falls_back_to_tiled() {
+    fn fp32_resident_layouts_fuse_scratch_free() {
         let n = TILE + GROUP;
         let theta0 = vec![0.1f32; n];
         let g = vec![0.01f32; n];
         let cfg = TrainConfig::default();
         let h = Hyper::for_step(&cfg, 1e-3, 1);
         let ks = kernel_set(KernelKind::Scalar).unwrap();
-        assert!(ks.fused_step(OptKind::AdamW, Variant::OptQuant)
-            .is_none());
 
-        let mut a = State::init(&theta0, n, OptKind::AdamW,
-                                Variant::OptQuant);
-        crate::optim::scalar_ref::step_state(
-            &mut a, &g, OptKind::AdamW, Variant::OptQuant, &h);
-        reset_scratch_peak();
-        let mut b = State::init(&theta0, n, OptKind::AdamW,
-                                Variant::OptQuant);
-        let mut part = Part::of_range(&mut b, 0, n, &g);
-        step_part(&mut part, OptKind::AdamW, Variant::OptQuant, &h, ks,
-                  true);
-        assert!(scratch_peak_bytes() > 0, "expected the tiled fallback");
-        states_eq(&a, &b, "adamw/quant fallback");
+        for variant in [Variant::Reference, Variant::WeightSplit,
+                        Variant::OptQuant] {
+            let mut a = State::init(&theta0, n, OptKind::AdamW, variant);
+            crate::optim::scalar_ref::step_state(
+                &mut a, &g, OptKind::AdamW, variant, &h);
+
+            reset_scratch_peak();
+            let mut b = State::init(&theta0, n, OptKind::AdamW, variant);
+            let mut part = Part::of_range(&mut b, 0, n, &g);
+            step_part(&mut part, OptKind::AdamW, variant, &h, ks, true);
+            assert_eq!(scratch_peak_bytes(), 0,
+                       "{variant}: fused single pass must be \
+                        scratch-free");
+            states_eq(&a, &b, &format!("adamw/{variant} fused"));
+
+            reset_scratch_peak();
+            let mut c = State::init(&theta0, n, OptKind::AdamW, variant);
+            let mut part = Part::of_range(&mut c, 0, n, &g);
+            step_part(&mut part, OptKind::AdamW, variant, &h, ks, false);
+            // the tiled mirror reconstructs exactly the codec-ed
+            // streams: 1 for wsplit (θ) and 2 for quant (m, v);
+            // reference codecs nothing and tiles with zero scratch
+            let streams = match variant {
+                Variant::Reference => 0,
+                Variant::WeightSplit => 1,
+                _ => 2,
+            };
+            assert_eq!(scratch_peak_bytes(),
+                       (streams * TILE * 4) as u64,
+                       "{variant}: tiled-mirror scratch signature");
+            states_eq(&a, &c, &format!("adamw/{variant} tiled"));
+        }
     }
 }

@@ -2,11 +2,12 @@
 //! worker pool.
 //!
 //! Flash-attention-style fusion applied to the optimizer step: each
-//! worker streams its shard's compact state through the tiled fused
-//! chain (`fused::step_part`) in O(tile) scratch, using the backend's
-//! resolved SIMD [`KernelSet`].  No worker ever touches another
-//! worker's groups, so the result is bit-identical to the sequential
-//! backend regardless of thread count or scheduling.
+//! worker runs its shard through the fused chain (`fused::step_part`
+//! — the register-resident single pass by default, the O(tile)-scratch
+//! tiled mirror when pinned), using the backend's resolved SIMD
+//! [`KernelSet`].  No worker ever touches another worker's groups, so
+//! the result is bit-identical to the sequential backend regardless of
+//! thread count or scheduling.
 //!
 //! [`step_parts`](ParallelBackend::step_parts) generalizes the per-step
 //! dispatch to *many disjoint partitions under one barrier*: the
@@ -75,7 +76,10 @@ impl ParallelBackend {
     }
 
     /// Like [`with_kernels`](Self::with_kernels) with an explicit
-    /// fused-fast-path selection (`config.fused_step`).
+    /// fused-fast-path selection (`config.fused_step`).  The
+    /// `FLASHOPTIM_FORCE_TILED` environment override
+    /// (`backend::fused::force_tiled`, the CI tiled-leg pin) wins over
+    /// `fused = true`.
     pub fn with_options(threads: usize, kind: KernelKind, fused: bool)
                         -> Result<ParallelBackend> {
         let t = if threads == 0 {
@@ -89,7 +93,7 @@ impl ParallelBackend {
         Ok(ParallelBackend {
             threads: t,
             kernels: kernel_set(kind)?,
-            fused,
+            fused: fused && !crate::backend::fused::force_tiled(),
             pool: Mutex::new(WorkerPool::new(t - 1)),
         })
     }
@@ -103,7 +107,9 @@ impl ParallelBackend {
         self.kernels.name
     }
 
-    /// Whether the fused single-pass fast path is enabled.
+    /// Whether the fused single-pass fast path is enabled (the
+    /// *effective* selection, after the `FLASHOPTIM_FORCE_TILED`
+    /// override).
     pub fn fused_enabled(&self) -> bool {
         self.fused
     }

@@ -29,7 +29,7 @@ impl Default for ScalarBackend {
         ScalarBackend {
             kernels: kernel_set(KernelKind::Auto)
                 .expect("auto kernel selection always resolves"),
-            fused: true,
+            fused: !crate::backend::fused::force_tiled(),
         }
     }
 }
@@ -44,10 +44,16 @@ impl ScalarBackend {
 
     /// Like [`with_kernels`](Self::with_kernels) with an explicit
     /// fused-fast-path selection (`config.fused_step`); `fused = false`
-    /// pins the tiled three-pass path for debugging/differential runs.
+    /// pins the tiled three-pass mirror for debugging/differential
+    /// runs.  The `FLASHOPTIM_FORCE_TILED` environment override
+    /// (`backend::fused::force_tiled`, the CI tiled-leg pin) wins over
+    /// `fused = true`.
     pub fn with_options(kind: KernelKind, fused: bool)
                         -> Result<ScalarBackend> {
-        Ok(ScalarBackend { kernels: kernel_set(kind)?, fused })
+        Ok(ScalarBackend {
+            kernels: kernel_set(kind)?,
+            fused: fused && !crate::backend::fused::force_tiled(),
+        })
     }
 
     /// Name of the resolved kernel set ("scalar" or "avx2").
@@ -55,7 +61,9 @@ impl ScalarBackend {
         self.kernels.name
     }
 
-    /// Whether the fused single-pass fast path is enabled.
+    /// Whether the fused single-pass fast path is enabled (the
+    /// *effective* selection, after the `FLASHOPTIM_FORCE_TILED`
+    /// override).
     pub fn fused_enabled(&self) -> bool {
         self.fused
     }

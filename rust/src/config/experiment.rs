@@ -310,9 +310,10 @@ pub struct TrainConfig {
     pub threads: usize,
     /// SIMD kernel set for the native codecs (pin `scalar` to debug)
     pub kernels: KernelKind,
-    /// register-resident fused single-pass step kernels where the
-    /// (optimizer, variant) pair has one (bit-exact to the tiled path;
-    /// disable to pin the tiled three-pass path for debugging)
+    /// register-resident fused single-pass step kernels — every
+    /// (optimizer, variant) pair has one (bit-exact to the tiled
+    /// mirror; disable to pin the tiled three-pass path for debugging,
+    /// or set FLASHOPTIM_FORCE_TILED=1 to pin it process-wide)
     pub fused_step: bool,
     /// eagerly free gradient buckets during the optimizer pass
     pub grad_release: bool,

@@ -70,9 +70,10 @@ pub(crate) enum FusedRule {
 /// A fused single-pass optimizer step over one GROUP-aligned partition:
 /// dequant → moment update → weight-split update → requant without the
 /// state ever leaving registers (per 8-lane block on AVX2, per GROUP
-/// stack window on the portable set).  Must be bit-exact to running the
-/// batch codecs + `scalar_ref` update over the same partition — the
-/// tiled three-pass path is the executable spec.
+/// stack window on the portable set; buffers a layout already stores in
+/// fp32 are updated in place).  Must be bit-exact to running the batch
+/// codecs + `scalar_ref` update over the same partition — the tiled
+/// three-pass path is the executable spec.
 pub type FusedStepFn = fn(&mut FusedPart<'_>, &StepScalars);
 
 /// Batch codec entry points, resolved once per backend.
@@ -81,10 +82,12 @@ pub type FusedStepFn = fn(&mut FusedPart<'_>, &StepScalars);
 /// `scales.len() * GROUP == codes.len()` (same contract as
 /// `formats::companding`); the split and conversion kernels accept any
 /// length.  The `fused_step_*` entries are whole-partition single-pass
-/// step kernels (`None` = this set has no fused kernel for that layout
-/// and the backend falls back to the tiled three-pass path; the
-/// coverage matrix is documented in docs/CONFIG.md and queried via
-/// [`KernelSet::fused_step`]).
+/// step kernels; every (optimizer, variant) pair has one on every set
+/// — coverage is total by construction ([`KernelSet::fused_step`]
+/// matches all 15 pairs exhaustively with no fallback arm), so a
+/// missing kernel is a compile error, never a silent tiled fallback.
+/// The tiled three-pass path survives only as the `fused_step = false`
+/// debug/differential mirror (see `backend::fused`).
 #[derive(Clone, Copy)]
 pub struct KernelSet {
     pub name: &'static str,
@@ -107,27 +110,37 @@ pub struct KernelSet {
     pub f32_to_f16: fn(&[f32], &mut [u16]),
     pub f16_to_f32: fn(&[u16], &mut [f32]),
     // fused single-pass step kernels (Algorithms 4/5/6 with the codec
-    // stages folded into the update loop), per optimizer × state codec
-    pub fused_step_adamw: Option<FusedStepFn>,
-    pub fused_step_sgdm: Option<FusedStepFn>,
-    pub fused_step_lion: Option<FusedStepFn>,
-    pub fused_step_adamw_nocompand: Option<FusedStepFn>,
-    pub fused_step_sgdm_nocompand: Option<FusedStepFn>,
-    pub fused_step_lion_nocompand: Option<FusedStepFn>,
+    // stages folded into the update loop), per optimizer × layout:
+    // the unsuffixed entries are the fully compact `flash` layout
+    pub fused_step_adamw: FusedStepFn,
+    pub fused_step_sgdm: FusedStepFn,
+    pub fused_step_lion: FusedStepFn,
+    pub fused_step_adamw_nocompand: FusedStepFn,
+    pub fused_step_sgdm_nocompand: FusedStepFn,
+    pub fused_step_lion_nocompand: FusedStepFn,
+    pub fused_step_adamw_reference: FusedStepFn,
+    pub fused_step_sgdm_reference: FusedStepFn,
+    pub fused_step_lion_reference: FusedStepFn,
+    pub fused_step_adamw_wsplit: FusedStepFn,
+    pub fused_step_sgdm_wsplit: FusedStepFn,
+    pub fused_step_lion_wsplit: FusedStepFn,
+    pub fused_step_adamw_quant: FusedStepFn,
+    pub fused_step_sgdm_quant: FusedStepFn,
+    pub fused_step_lion_quant: FusedStepFn,
 }
 
 impl KernelSet {
-    /// The fused single-pass kernel for an (optimizer, variant) pair,
-    /// or `None` when this pair runs on the tiled three-pass path.
+    /// The fused single-pass kernel for an (optimizer, variant) pair.
     ///
-    /// Fused kernels exist for the fully compact layouts — `flash`
-    /// (split weights + companded 8-bit states) and `nocompand` (split
-    /// weights + linear 8-bit states) — where all three streams are
-    /// codec-ed and fusion saves the most scratch traffic.  The
-    /// fp32-resident layouts (`reference`, `wsplit`, `quant`) keep the
-    /// tiled path, which already updates their fp32 buffers in place.
+    /// Total over all 15 pairs: the fully compact layouts (`flash`,
+    /// `nocompand`) fuse all three codec streams; the fp32-resident
+    /// layouts (`reference`, `wsplit`, `quant`) fuse whatever streams
+    /// they codec and update their fp32 buffers in place within the
+    /// same single pass.  The match is exhaustive on purpose — adding
+    /// an optimizer or variant without a fused kernel fails to
+    /// compile instead of silently tiling.
     pub fn fused_step(&self, opt: OptKind, variant: Variant)
-                      -> Option<FusedStepFn> {
+                      -> FusedStepFn {
         match (opt, variant) {
             (OptKind::AdamW, Variant::Flash) => self.fused_step_adamw,
             (OptKind::Sgd, Variant::Flash) => self.fused_step_sgdm,
@@ -141,7 +154,33 @@ impl KernelSet {
             (OptKind::Lion, Variant::NoCompand) => {
                 self.fused_step_lion_nocompand
             }
-            _ => None,
+            (OptKind::AdamW, Variant::Reference) => {
+                self.fused_step_adamw_reference
+            }
+            (OptKind::Sgd, Variant::Reference) => {
+                self.fused_step_sgdm_reference
+            }
+            (OptKind::Lion, Variant::Reference) => {
+                self.fused_step_lion_reference
+            }
+            (OptKind::AdamW, Variant::WeightSplit) => {
+                self.fused_step_adamw_wsplit
+            }
+            (OptKind::Sgd, Variant::WeightSplit) => {
+                self.fused_step_sgdm_wsplit
+            }
+            (OptKind::Lion, Variant::WeightSplit) => {
+                self.fused_step_lion_wsplit
+            }
+            (OptKind::AdamW, Variant::OptQuant) => {
+                self.fused_step_adamw_quant
+            }
+            (OptKind::Sgd, Variant::OptQuant) => {
+                self.fused_step_sgdm_quant
+            }
+            (OptKind::Lion, Variant::OptQuant) => {
+                self.fused_step_lion_quant
+            }
         }
     }
 }
@@ -163,12 +202,21 @@ pub static SCALAR: KernelSet = KernelSet {
     bf16_to_f32: portable::bf16_to_f32,
     f32_to_f16: portable::f32_to_f16,
     f16_to_f32: portable::f16_to_f32,
-    fused_step_adamw: Some(portable::fused_step_adamw),
-    fused_step_sgdm: Some(portable::fused_step_sgdm),
-    fused_step_lion: Some(portable::fused_step_lion),
-    fused_step_adamw_nocompand: Some(portable::fused_step_adamw_nocompand),
-    fused_step_sgdm_nocompand: Some(portable::fused_step_sgdm_nocompand),
-    fused_step_lion_nocompand: Some(portable::fused_step_lion_nocompand),
+    fused_step_adamw: portable::fused_step_adamw,
+    fused_step_sgdm: portable::fused_step_sgdm,
+    fused_step_lion: portable::fused_step_lion,
+    fused_step_adamw_nocompand: portable::fused_step_adamw_nocompand,
+    fused_step_sgdm_nocompand: portable::fused_step_sgdm_nocompand,
+    fused_step_lion_nocompand: portable::fused_step_lion_nocompand,
+    fused_step_adamw_reference: portable::fused_step_adamw_reference,
+    fused_step_sgdm_reference: portable::fused_step_sgdm_reference,
+    fused_step_lion_reference: portable::fused_step_lion_reference,
+    fused_step_adamw_wsplit: portable::fused_step_adamw_wsplit,
+    fused_step_sgdm_wsplit: portable::fused_step_sgdm_wsplit,
+    fused_step_lion_wsplit: portable::fused_step_lion_wsplit,
+    fused_step_adamw_quant: portable::fused_step_adamw_quant,
+    fused_step_sgdm_quant: portable::fused_step_sgdm_quant,
+    fused_step_lion_quant: portable::fused_step_lion_quant,
 };
 
 #[cfg(target_arch = "x86_64")]
@@ -188,15 +236,21 @@ static AVX2: KernelSet = KernelSet {
     bf16_to_f32: avx2::dispatch::bf16_to_f32,
     f32_to_f16: avx2::dispatch::f32_to_f16,
     f16_to_f32: avx2::dispatch::f16_to_f32,
-    fused_step_adamw: Some(avx2::dispatch::fused_step_adamw),
-    fused_step_sgdm: Some(avx2::dispatch::fused_step_sgdm),
-    fused_step_lion: Some(avx2::dispatch::fused_step_lion),
-    fused_step_adamw_nocompand:
-        Some(avx2::dispatch::fused_step_adamw_nocompand),
-    fused_step_sgdm_nocompand:
-        Some(avx2::dispatch::fused_step_sgdm_nocompand),
-    fused_step_lion_nocompand:
-        Some(avx2::dispatch::fused_step_lion_nocompand),
+    fused_step_adamw: avx2::dispatch::fused_step_adamw,
+    fused_step_sgdm: avx2::dispatch::fused_step_sgdm,
+    fused_step_lion: avx2::dispatch::fused_step_lion,
+    fused_step_adamw_nocompand: avx2::dispatch::fused_step_adamw_nocompand,
+    fused_step_sgdm_nocompand: avx2::dispatch::fused_step_sgdm_nocompand,
+    fused_step_lion_nocompand: avx2::dispatch::fused_step_lion_nocompand,
+    fused_step_adamw_reference: avx2::dispatch::fused_step_adamw_reference,
+    fused_step_sgdm_reference: avx2::dispatch::fused_step_sgdm_reference,
+    fused_step_lion_reference: avx2::dispatch::fused_step_lion_reference,
+    fused_step_adamw_wsplit: avx2::dispatch::fused_step_adamw_wsplit,
+    fused_step_sgdm_wsplit: avx2::dispatch::fused_step_sgdm_wsplit,
+    fused_step_lion_wsplit: avx2::dispatch::fused_step_lion_wsplit,
+    fused_step_adamw_quant: avx2::dispatch::fused_step_adamw_quant,
+    fused_step_sgdm_quant: avx2::dispatch::fused_step_sgdm_quant,
+    fused_step_lion_quant: avx2::dispatch::fused_step_lion_quant,
 };
 
 /// True when the AVX2 kernel set can run on this machine.
@@ -264,26 +318,32 @@ mod tests {
     }
 
     #[test]
-    fn fused_coverage_matrix() {
-        // the fully compact layouts fuse; fp32-resident layouts tile —
-        // and coverage is identical across kernel sets, so the `fused`
-        // knob selects the same pairs no matter which set resolved
+    fn fused_coverage_is_total_and_per_pair_distinct() {
+        // every (optimizer, variant) pair resolves a fused kernel on
+        // every set the CPU supports (coverage is total — the tiled
+        // path survives only as the fused_step = false mirror), and
+        // distinct layouts never alias to the same kernel within a set
         let mut sets = vec![kernel_set(KernelKind::Scalar).unwrap()];
         if avx2_available() {
             sets.push(kernel_set(KernelKind::Avx2).unwrap());
         }
         for ks in sets {
+            let mut seen: Vec<usize> = Vec::new();
             for opt in [OptKind::Sgd, OptKind::AdamW, OptKind::Lion] {
-                for variant in [Variant::Flash, Variant::NoCompand] {
-                    assert!(ks.fused_step(opt, variant).is_some(),
-                            "{}/{opt}/{variant} should fuse", ks.name);
-                }
-                for variant in [Variant::Reference, Variant::WeightSplit,
-                                Variant::OptQuant] {
-                    assert!(ks.fused_step(opt, variant).is_none(),
-                            "{}/{opt}/{variant} should tile", ks.name);
+                for variant in [Variant::Reference, Variant::Flash,
+                                Variant::WeightSplit, Variant::OptQuant,
+                                Variant::NoCompand] {
+                    let k = ks.fused_step(opt, variant);
+                    seen.push(k as usize);
                 }
             }
+            assert_eq!(seen.len(), 15, "{}: 15-pair universe", ks.name);
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), 15,
+                       "{}: two (optimizer, variant) pairs share one \
+                        fused kernel entry point",
+                       ks.name);
         }
     }
 

@@ -74,6 +74,14 @@ pub fn split_decompress(theta_p: &[u16], rho: &[i8], out: &mut [f32]) {
 // these kernels are bit-exact to the tiled three-pass path by
 // construction, and `rust/tests/fused_fuzz.rs` +
 // `rust/tests/kernel_equivalence.rs` enforce it.
+//
+// The fp32-resident layouts fuse too (coverage is total — see
+// `KernelSet::fused_step`): buffers a layout stores in fp32 (reference
+// master weights, unquantized moments) are updated in place inside the
+// same single pass, so only the streams the layout actually codecs pay
+// a window at all.  `reference` has no codec stage and collapses to
+// one whole-partition `scalar_ref` call — element-wise updates make
+// any chunking (whole buffer, TILE, GROUP) produce identical bits.
 
 /// Shared fused loop over a split-weight + 8-bit-state partition
 /// (`flash` when `linear` is false, `nocompand` when true).
@@ -164,6 +172,132 @@ fn fused_flash(p: &mut FusedPart<'_>, s: &StepScalars, rule: FusedRule,
     }
 }
 
+/// Fused loop over the all-fp32 `reference` layout: no codec stage, so
+/// the single pass is one whole-partition call of the shared scalar
+/// update rules over the in-place buffers.
+fn fused_reference(p: &mut FusedPart<'_>, s: &StepScalars,
+                   rule: FusedRule) {
+    let n = p.g.len();
+    assert_eq!(n % GROUP, 0, "fused kernels step whole groups");
+    let theta = p.theta.as_deref_mut().expect("fused: missing theta");
+    let m = p.m.as_deref_mut().expect("fused: missing m");
+    assert_eq!(theta.len(), n);
+    assert_eq!(m.len(), n);
+    match rule {
+        FusedRule::AdamW => {
+            let v = p.v.as_deref_mut().expect("fused: missing v");
+            assert_eq!(v.len(), n);
+            scalar_ref::adamw_f32(theta, m, v, p.g, s);
+        }
+        FusedRule::Sgdm => scalar_ref::sgd_f32(theta, m, p.g, s),
+        FusedRule::Lion => scalar_ref::lion_f32(theta, m, p.g, s),
+    }
+}
+
+/// Fused loop over the `wsplit` layout (split weights, fp32 moments):
+/// per GROUP, decompress the weights into a stack window, update
+/// against the in-place fp32 moment slices, recompress.
+fn fused_wsplit(p: &mut FusedPart<'_>, s: &StepScalars,
+                rule: FusedRule) {
+    let n = p.g.len();
+    assert_eq!(n % GROUP, 0, "fused kernels step whole groups");
+    let tp = p.theta_p.as_deref_mut().expect("fused: missing theta_p");
+    let rho = p.rho.as_deref_mut().expect("fused: missing rho");
+    let m = p.m.as_deref_mut().expect("fused: missing m");
+    assert_eq!(tp.len(), n);
+    assert_eq!(rho.len(), n);
+    assert_eq!(m.len(), n);
+    let var = matches!(rule, FusedRule::AdamW);
+    let mut v = if var {
+        let v = p.v.as_deref_mut().expect("fused: missing v");
+        assert_eq!(v.len(), n);
+        Some(v)
+    } else {
+        None
+    };
+
+    let mut th_w = [0f32; GROUP];
+    for gi in 0..n / GROUP {
+        let lo = gi * GROUP;
+        let hi = lo + GROUP;
+        let g = &p.g[lo..hi];
+        weight_split::decompress_slice(&tp[lo..hi], &rho[lo..hi],
+                                       &mut th_w);
+        match rule {
+            FusedRule::AdamW => {
+                let v = v.as_deref_mut().unwrap();
+                scalar_ref::adamw_f32(&mut th_w, &mut m[lo..hi],
+                                      &mut v[lo..hi], g, s);
+            }
+            FusedRule::Sgdm => {
+                scalar_ref::sgd_f32(&mut th_w, &mut m[lo..hi], g, s)
+            }
+            FusedRule::Lion => {
+                scalar_ref::lion_f32(&mut th_w, &mut m[lo..hi], g, s)
+            }
+        }
+        weight_split::compress_slice(&th_w, &mut tp[lo..hi],
+                                     &mut rho[lo..hi]);
+    }
+}
+
+/// Fused loop over the `quant` layout (fp32 weights, companded 8-bit
+/// moments): per GROUP, dequant the moments into stack windows, update
+/// against the in-place fp32 weight slice, requant.
+fn fused_quant(p: &mut FusedPart<'_>, s: &StepScalars, rule: FusedRule) {
+    let n = p.g.len();
+    assert_eq!(n % GROUP, 0, "fused kernels step whole groups");
+    let theta = p.theta.as_deref_mut().expect("fused: missing theta");
+    let mq = p.mq.as_deref_mut().expect("fused: missing mq");
+    let ms = p.ms.as_deref_mut().expect("fused: missing ms");
+    assert_eq!(theta.len(), n);
+    assert_eq!(mq.len(), n);
+    assert_eq!(ms.len(), n / GROUP);
+    let var = matches!(rule, FusedRule::AdamW);
+    let (mut vq, mut vs) = if var {
+        let vq = p.vq.as_deref_mut().expect("fused: missing vq");
+        let vs = p.vs.as_deref_mut().expect("fused: missing vs");
+        assert_eq!(vq.len(), n);
+        assert_eq!(vs.len(), n / GROUP);
+        (Some(vq), Some(vs))
+    } else {
+        (None, None)
+    };
+
+    let mut m_w = [0f32; GROUP];
+    let mut v_w = [0f32; GROUP];
+    for gi in 0..n / GROUP {
+        let lo = gi * GROUP;
+        let hi = lo + GROUP;
+        let g = &p.g[lo..hi];
+        companding::dequant_momentum(&mq[lo..hi], &ms[gi..gi + 1],
+                                     &mut m_w);
+        match rule {
+            FusedRule::AdamW => {
+                let vq_s = vq.as_deref().unwrap();
+                let vs_s = &vs.as_deref().unwrap()[gi..gi + 1];
+                companding::dequant_variance(&vq_s[lo..hi], vs_s,
+                                             &mut v_w);
+                scalar_ref::adamw_f32(&mut theta[lo..hi], &mut m_w,
+                                      &mut v_w, g, s);
+            }
+            FusedRule::Sgdm => {
+                scalar_ref::sgd_f32(&mut theta[lo..hi], &mut m_w, g, s)
+            }
+            FusedRule::Lion => {
+                scalar_ref::lion_f32(&mut theta[lo..hi], &mut m_w, g, s)
+            }
+        }
+        companding::quant_momentum(&m_w, &mut mq[lo..hi],
+                                   &mut ms[gi..gi + 1]);
+        if var {
+            let vq_s = vq.as_deref_mut().unwrap();
+            let vs_s = &mut vs.as_deref_mut().unwrap()[gi..gi + 1];
+            companding::quant_variance(&v_w, &mut vq_s[lo..hi], vs_s);
+        }
+    }
+}
+
 pub fn fused_step_adamw(p: &mut FusedPart<'_>, s: &StepScalars) {
     fused_flash(p, s, FusedRule::AdamW, false);
 }
@@ -189,6 +323,45 @@ pub fn fused_step_sgdm_nocompand(p: &mut FusedPart<'_>,
 pub fn fused_step_lion_nocompand(p: &mut FusedPart<'_>,
                                  s: &StepScalars) {
     fused_flash(p, s, FusedRule::Lion, true);
+}
+
+pub fn fused_step_adamw_reference(p: &mut FusedPart<'_>,
+                                  s: &StepScalars) {
+    fused_reference(p, s, FusedRule::AdamW);
+}
+
+pub fn fused_step_sgdm_reference(p: &mut FusedPart<'_>,
+                                 s: &StepScalars) {
+    fused_reference(p, s, FusedRule::Sgdm);
+}
+
+pub fn fused_step_lion_reference(p: &mut FusedPart<'_>,
+                                 s: &StepScalars) {
+    fused_reference(p, s, FusedRule::Lion);
+}
+
+pub fn fused_step_adamw_wsplit(p: &mut FusedPart<'_>, s: &StepScalars) {
+    fused_wsplit(p, s, FusedRule::AdamW);
+}
+
+pub fn fused_step_sgdm_wsplit(p: &mut FusedPart<'_>, s: &StepScalars) {
+    fused_wsplit(p, s, FusedRule::Sgdm);
+}
+
+pub fn fused_step_lion_wsplit(p: &mut FusedPart<'_>, s: &StepScalars) {
+    fused_wsplit(p, s, FusedRule::Lion);
+}
+
+pub fn fused_step_adamw_quant(p: &mut FusedPart<'_>, s: &StepScalars) {
+    fused_quant(p, s, FusedRule::AdamW);
+}
+
+pub fn fused_step_sgdm_quant(p: &mut FusedPart<'_>, s: &StepScalars) {
+    fused_quant(p, s, FusedRule::Sgdm);
+}
+
+pub fn fused_step_lion_quant(p: &mut FusedPart<'_>, s: &StepScalars) {
+    fused_quant(p, s, FusedRule::Lion);
 }
 
 // --- 16-bit float conversions -------------------------------------------

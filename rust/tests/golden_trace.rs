@@ -104,17 +104,17 @@ fn push_bytes<T, F: Fn(&T, &mut Vec<u8>)>(out: &mut Vec<u8>, tag: u8,
 
 /// Run one family trace and checksum the final state dict + compute
 /// weights.
-fn run_trace(opt: OptKind, backend: BackendKind, threads: usize,
-             kernels: KernelKind, fused: bool) -> u32 {
+fn run_trace(opt: OptKind, variant: Variant, backend: BackendKind,
+             threads: usize, kernels: KernelKind, fused: bool) -> u32 {
     let cfg = TrainConfig {
         optimizer: opt,
-        variant: Variant::Flash,
+        variant,
         ..Default::default()
     };
     let mut rng = Rng::new(0x601D ^ opt.name().len() as u64);
     let theta0 = det_vec(&mut rng, PARAMS, 0);
     let mut fo = FlashOptimizer::native_with_opts(
-        opt, Variant::Flash, BUCKET, &theta0, specs(),
+        opt, variant, BUCKET, &theta0, specs(),
         HyperDefaults::of(&cfg), backend, threads, kernels, fused)
         .expect("building the golden-trace optimizer");
     for t in 1..=STEPS {
@@ -177,15 +177,15 @@ fn golden_trace_checksums() {
         .iter()
         .map(|&(opt, name)| {
             (name,
-             run_trace(opt, BackendKind::Scalar, 0, KernelKind::Scalar,
-                       true))
+             run_trace(opt, Variant::Flash, BackendKind::Scalar, 0,
+                       KernelKind::Scalar, true))
         })
         .collect();
 
     // in-process determinism is a precondition for pinning anything
     for &(opt, name) in &FAMILIES {
-        let again = run_trace(opt, BackendKind::Scalar, 0,
-                              KernelKind::Scalar, true);
+        let again = run_trace(opt, Variant::Flash, BackendKind::Scalar,
+                              0, KernelKind::Scalar, true);
         let first = entries.iter().find(|(n, _)| *n == name).unwrap().1;
         assert_eq!(first, again, "{name}: trace not deterministic");
     }
@@ -235,20 +235,37 @@ fn golden_trace_checksums() {
 
 /// The checksum must not depend on which engine computed it: kernels
 /// (scalar vs auto/AVX2), backend (sequential vs thread pool), and the
-/// fused fast path vs the tiled fallback all produce the same bits.
+/// fused single pass vs the tiled mirror all produce the same bits —
+/// for **every variant**, the fp32-resident layouts included now that
+/// the fused kernels cover all 15 (optimizer, variant) pairs.  Only
+/// the `flash` families are pinned in the golden file; the other
+/// variants are asserted engine-invariant in-process, which is the
+/// property the new coverage must uphold.
 #[test]
 fn golden_trace_is_engine_invariant() {
+    const ALL_VARIANTS: [Variant; 5] = [
+        Variant::Reference,
+        Variant::Flash,
+        Variant::WeightSplit,
+        Variant::OptQuant,
+        Variant::NoCompand,
+    ];
     for &(opt, name) in &FAMILIES {
-        let reference = run_trace(opt, BackendKind::Scalar, 0,
-                                  KernelKind::Scalar, true);
-        let tiled = run_trace(opt, BackendKind::Scalar, 0,
-                              KernelKind::Scalar, false);
-        assert_eq!(reference, tiled, "{name}: fused vs tiled");
-        let auto = run_trace(opt, BackendKind::Scalar, 0,
-                             KernelKind::Auto, true);
-        assert_eq!(reference, auto, "{name}: scalar vs auto kernels");
-        let par = run_trace(opt, BackendKind::Parallel, 3,
-                            KernelKind::Auto, true);
-        assert_eq!(reference, par, "{name}: sequential vs parallel");
+        for variant in ALL_VARIANTS {
+            let what = format!("{name}/{variant}");
+            let reference = run_trace(opt, variant, BackendKind::Scalar,
+                                      0, KernelKind::Scalar, true);
+            let tiled = run_trace(opt, variant, BackendKind::Scalar, 0,
+                                  KernelKind::Scalar, false);
+            assert_eq!(reference, tiled, "{what}: fused vs tiled");
+            let auto = run_trace(opt, variant, BackendKind::Scalar, 0,
+                                 KernelKind::Auto, true);
+            assert_eq!(reference, auto,
+                       "{what}: scalar vs auto kernels");
+            let par = run_trace(opt, variant, BackendKind::Parallel, 3,
+                                KernelKind::Auto, true);
+            assert_eq!(reference, par,
+                       "{what}: sequential vs parallel");
+        }
     }
 }

@@ -16,8 +16,16 @@
 //! * weight-split compress/decompress over random + special values;
 //! * fused single-pass step kernels driven through the same
 //!   adversarial groups (plus ±inf / NaN weights, NaN/saturating
-//!   gradients, and NaN-producing hypers like negative beta2), pinned
-//!   three ways against the tiled path and the legacy scalar mirror.
+//!   gradients, and NaN-producing hypers like negative beta2), over
+//!   the **full 15-pair (optimizer, variant) universe** — the
+//!   fp32-resident layouts `reference`/`wsplit`/`quant` included —
+//!   pinned three ways against the tiled path and the legacy scalar
+//!   mirror on every kernel set.  (Multi-step NaN determinism for the
+//!   fp32-resident-moment layouts holds here because the same
+//!   gradient vector repeats each step, so a NaN moment always meets
+//!   the NaN gradient it was minted from — identical payload bits;
+//!   see the NaN-flow notes in `kernels/avx2.rs` and the fuzzer's
+//!   canonical-payload carve-out for the fresh-gradient case.)
 
 use flashtrain::backend::fused::step_part;
 use flashtrain::backend::Part;
@@ -377,9 +385,24 @@ fn assert_states_eq(a: &State, b: &State, what: &str) {
     assert_eq!(a.ms, b.ms, "{what}: ms");
     assert_eq!(a.vq, b.vq, "{what}: vq");
     assert_eq!(a.vs, b.vs, "{what}: vs");
-    assert_eq!(a.theta.is_none(), b.theta.is_none(), "{what}: theta");
-    assert_eq!(a.m.is_none(), b.m.is_none(), "{what}: m");
-    assert_eq!(a.v.is_none(), b.v.is_none(), "{what}: v");
+    // the fp32-resident buffers compare by raw bits (NaN payloads and
+    // signed zeros included), not by float equality
+    for (name, x, y) in [("theta", &a.theta, &b.theta),
+                         ("m", &a.m, &b.m), ("v", &a.v, &b.v)] {
+        match (x, y) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.len(), y.len(), "{what}: {name} len");
+                for (i, (p, q)) in x.iter().zip(y).enumerate() {
+                    assert_eq!(p.to_bits(), q.to_bits(),
+                               "{what}: {name}[{i}] {p:?} \
+                                ({:#010x}) vs {q:?} ({:#010x})",
+                               p.to_bits(), q.to_bits());
+                }
+            }
+            (None, None) => {}
+            _ => panic!("{what}: {name} presence differs"),
+        }
+    }
 }
 
 /// Adversarial master weights for the fused sweeps: the signed
@@ -402,11 +425,15 @@ fn fused_adversarial_theta() -> Vec<f32> {
     v
 }
 
-/// Adversarial gradients (bf16-rounded: the fused pairs are all
-/// split-weight variants): zeros, saturating magnitudes, denormals,
+/// Adversarial gradients in the variant's dtype semantics
+/// (bf16-rounded for the split-weight variants, raw f32 for
+/// `reference`/`quant`): zeros, saturating magnitudes, denormals,
 /// ties, and — when `with_nan` — payload-carrying quiet NaNs plus one
-/// signaling NaN.
-fn fused_adversarial_grads(n: usize, with_nan: bool) -> Vec<f32> {
+/// signaling NaN (quieted by the bf16 rounding on split tracks, and
+/// deterministically quieted by the first arithmetic op on the raw
+/// tracks).
+fn fused_adversarial_grads(n: usize, variant: Variant,
+                           with_nan: bool) -> Vec<f32> {
     let mut rng = Rng::new(0xFAD5);
     let mut g: Vec<f32> = (0..n)
         .map(|i| match (i / GROUP) % 5 {
@@ -425,29 +452,27 @@ fn fused_adversarial_grads(n: usize, with_nan: bool) -> Vec<f32> {
         for (i, x) in g.iter_mut().enumerate().skip(7).step_by(37) {
             *x = f32::from_bits(0x7FC0_0000 | (i as u32 & 0x3F_FFFF));
         }
-        g[3] = f32::from_bits(0x7F80_0001); // sNaN: quieted by bf16
+        g[3] = f32::from_bits(0x7F80_0001); // sNaN
     }
-    g.iter()
-        .map(|&x| flashtrain::formats::bf16::round_f32_to_bf16(x))
-        .collect()
+    if variant.splits_weights() {
+        g.iter()
+            .map(|&x| flashtrain::formats::bf16::round_f32_to_bf16(x))
+            .collect()
+    } else {
+        g
+    }
 }
 
 /// Fused-kernel adversarial sweep, mirroring the per-codec groups
-/// above through the *whole* single-pass step: every covered
-/// (optimizer, variant) pair, every kernel set, against the tiled path
-/// and the legacy scalar mirror — including a negative-beta2 hyper
-/// vector that drives the variance negative (sqrt -> NaN lanes inside
-/// requant), a zero-eps vector (0/0), and a saturating learning rate.
+/// above through the *whole* single-pass step: the full 15-pair
+/// (optimizer, variant) universe, every kernel set, against the tiled
+/// path and the legacy scalar mirror — including a negative-beta2
+/// hyper vector that drives the variance negative (sqrt -> NaN lanes
+/// inside requant, or a persistent NaN fp32 variance on the
+/// fp32-resident layouts), a zero-eps vector (0/0), and a saturating
+/// learning rate.
 #[test]
 fn fused_step_kernels_bit_exact_on_adversarial_groups() {
-    let covered = [
-        (OptKind::AdamW, Variant::Flash),
-        (OptKind::Sgd, Variant::Flash),
-        (OptKind::Lion, Variant::Flash),
-        (OptKind::AdamW, Variant::NoCompand),
-        (OptKind::Sgd, Variant::NoCompand),
-        (OptKind::Lion, Variant::NoCompand),
-    ];
     let theta0 = fused_adversarial_theta();
     let n = theta0.len();
     let cfg = TrainConfig::default(); // wd = 0.1 (nonzero: see fuzzer)
@@ -461,29 +486,40 @@ fn fused_step_kernels_bit_exact_on_adversarial_groups() {
     let hypers = [("base", base), ("neg_var", neg_var),
                   ("zero_eps", zero_eps), ("huge_lr", huge_lr)];
 
-    for (opt, variant) in covered {
-        for ks in sets_under_test() {
-            assert!(ks.fused_step(opt, variant).is_some(),
-                    "{}/{opt}/{variant} must be covered", ks.name);
-            for (hname, h) in &hypers {
-                let g = fused_adversarial_grads(n, true);
-                let mut legacy = State::init(&theta0, n, opt, variant);
-                let mut tiled = legacy.clone();
-                let mut fused = legacy.clone();
-                for step in 0..3 {
-                    scalar_ref::step_state(&mut legacy, &g, opt,
-                                           variant, h);
-                    let mut part = Part::of_range(&mut tiled, 0, n, &g);
-                    step_part(&mut part, opt, variant, h, ks, false);
-                    let mut part = Part::of_range(&mut fused, 0, n, &g);
-                    step_part(&mut part, opt, variant, h, ks, true);
-                    let what = format!(
-                        "{opt}/{variant}/{}/{hname} step {step}",
-                        ks.name);
-                    assert_states_eq(&legacy, &tiled,
-                                     &format!("{what} tiled"));
-                    assert_states_eq(&legacy, &fused,
-                                     &format!("{what} fused"));
+    for opt in [OptKind::Sgd, OptKind::AdamW, OptKind::Lion] {
+        for variant in [Variant::Reference, Variant::Flash,
+                        Variant::WeightSplit, Variant::OptQuant,
+                        Variant::NoCompand] {
+            for ks in sets_under_test() {
+                // total coverage: the typed binding fails to compile
+                // if `fused_step` ever regresses to an Option return
+                let _kernel: flashtrain::kernels::FusedStepFn =
+                    ks.fused_step(opt, variant);
+                for (hname, h) in &hypers {
+                    let g = fused_adversarial_grads(n, variant, true);
+                    let mut legacy =
+                        State::init(&theta0, n, opt, variant);
+                    let mut tiled = legacy.clone();
+                    let mut fused = legacy.clone();
+                    for step in 0..3 {
+                        scalar_ref::step_state(&mut legacy, &g, opt,
+                                               variant, h);
+                        let mut part =
+                            Part::of_range(&mut tiled, 0, n, &g);
+                        step_part(&mut part, opt, variant, h, ks,
+                                  false);
+                        let mut part =
+                            Part::of_range(&mut fused, 0, n, &g);
+                        step_part(&mut part, opt, variant, h, ks,
+                                  true);
+                        let what = format!(
+                            "{opt}/{variant}/{}/{hname} step {step}",
+                            ks.name);
+                        assert_states_eq(&legacy, &tiled,
+                                         &format!("{what} tiled"));
+                        assert_states_eq(&legacy, &fused,
+                                         &format!("{what} fused"));
+                    }
                 }
             }
         }
@@ -492,7 +528,8 @@ fn fused_step_kernels_bit_exact_on_adversarial_groups() {
 
 /// Zero-wd hypers are exercised with NaN-free gradients (the one
 /// IEEE-underdetermined payload corner — see fused_fuzz — is excluded;
-/// everything else about wd = 0 must still be bit-exact).
+/// everything else about wd = 0 must still be bit-exact), one pair
+/// per layout family including the fp32-resident ones.
 #[test]
 fn fused_step_kernels_bit_exact_with_zero_weight_decay() {
     let theta0 = fused_adversarial_theta();
@@ -502,10 +539,13 @@ fn fused_step_kernels_bit_exact_with_zero_weight_decay() {
         ..Default::default()
     };
     let h = Hyper::for_step(&cfg, 1e-3, 1);
-    let g = fused_adversarial_grads(n, false);
     for (opt, variant) in [(OptKind::AdamW, Variant::Flash),
                            (OptKind::Sgd, Variant::Flash),
-                           (OptKind::Lion, Variant::NoCompand)] {
+                           (OptKind::Lion, Variant::NoCompand),
+                           (OptKind::AdamW, Variant::Reference),
+                           (OptKind::Sgd, Variant::WeightSplit),
+                           (OptKind::Lion, Variant::OptQuant)] {
+        let g = fused_adversarial_grads(n, variant, false);
         for ks in sets_under_test() {
             let mut legacy = State::init(&theta0, n, opt, variant);
             scalar_ref::step_state(&mut legacy, &g, opt, variant, &h);
