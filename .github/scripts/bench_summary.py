@@ -1,8 +1,13 @@
 #!/usr/bin/env python3
-"""Render the fused-vs-tiled section of BENCH_kernels.json (schema v3)
-as a GitHub job-summary markdown table.
+"""Render a bench artifact as a GitHub job-summary markdown table.
 
-Usage: bench_summary.py BENCH_kernels.json >> "$GITHUB_STEP_SUMMARY"
+Dispatches on the document's `bench` field:
+* `kernel_hotpath` (BENCH_kernels.json, schema v3) — the
+  fused-vs-tiled section;
+* `train_step` (BENCH_train.json, schema v1) — batch vs
+  gradient-release streaming step time and peak bytes/param.
+
+Usage: bench_summary.py BENCH_<name>.json >> "$GITHUB_STEP_SUMMARY"
 
 Keeps zero dependencies (stdlib json only) so the CI step is a single
 python3 invocation on the stock runner image.
@@ -22,12 +27,7 @@ def fmt_time(seconds):
     return f"{seconds:.3f} s"
 
 
-def main():
-    if len(sys.argv) != 2:
-        sys.exit("usage: bench_summary.py BENCH_kernels.json")
-    with open(sys.argv[1], encoding="utf-8") as f:
-        doc = json.load(f)
-
+def render_kernels(doc):
     schema = doc.get("schema_version")
     rows = doc.get("fused", [])
     print("## fused single-pass vs tiled three-pass")
@@ -59,6 +59,61 @@ def main():
     print()
     print(f"{len(rows)} rows · {len(pairs)} distinct (optimizer, "
           f"variant) pairs (universe: 15)")
+
+
+def render_train(doc):
+    schema = doc.get("schema_version")
+    rows = doc.get("rows", [])
+    print("## train step: batch vs gradient-release streaming")
+    print()
+    print(
+        f"schema v{schema:g} · {doc.get('params'):,} params · "
+        f"bucket {doc.get('bucket'):,} · "
+        f"{doc.get('threads')} threads · "
+        f"check={str(doc.get('check')).lower()}"
+    )
+    print()
+    by_pair = {}
+    for e in rows:
+        pair = f"{e['optimizer']}/{e['variant']}"
+        by_pair.setdefault(pair, {})[e["mode"]] = e
+    print("| optimizer/variant | batch | streaming | step overhead |"
+          " peak B/param batch | peak B/param streaming |")
+    print("|---|---|---|---|---|---|")
+    for pair, modes in by_pair.items():
+        b, s = modes.get("batch"), modes.get("streaming")
+        if not b or not s:
+            print(f"| {pair} | _missing a mode_ | | | | |")
+            continue
+        over = s["median_s"] / b["median_s"] - 1.0
+        print(
+            f"| {pair} | {fmt_time(b['median_s'])} "
+            f"| {fmt_time(s['median_s'])} "
+            f"| {over:+.1%} "
+            f"| {b['peak_bytes_per_param']:.3f} "
+            f"| {s['peak_bytes_per_param']:.3f} |"
+        )
+    if not rows:
+        print()
+        print("_no rows in the bench output_")
+    print()
+    print(f"{len(rows)} rows · {len(by_pair)} (optimizer, variant) "
+          f"pairs × 2 modes")
+
+
+def main():
+    if len(sys.argv) != 2:
+        sys.exit("usage: bench_summary.py BENCH_<name>.json")
+    with open(sys.argv[1], encoding="utf-8") as f:
+        doc = json.load(f)
+
+    bench = doc.get("bench")
+    if bench == "train_step":
+        render_train(doc)
+    elif bench == "kernel_hotpath":
+        render_kernels(doc)
+    else:
+        sys.exit(f"unknown bench document: {bench!r}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,301 @@
+//! Bench: full optimizer-step wall time + tracker-measured peak
+//! bytes/param, **batch vs gradient-release streaming** — the paper's
+//! 7-vs-5-bytes/param claim as a same-machine, machine-readable
+//! number.  Writes `BENCH_train.json` (schema v1, described in
+//! docs/PERF.md) next to `BENCH_kernels.json` so the memory/speed
+//! trade of the streaming step is diffable across PRs.
+//!
+//!   cargo bench --bench train_step -- [--quick] [--check]
+//!       [--threads T] [--params N] [--bucket B]
+//!       [--out BENCH_train.json]
+//!
+//! `--check` is the CI smoke mode: small sizes, asserts that the
+//! streaming step is bit-exact to the batch step (same final state,
+//! same bf16 compute weights), that its measured gradient high-water
+//! mark stays under the batch footprint for every pair, and that the
+//! emitted JSON parses and is pair×mode complete.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use flashtrain::backend::ParallelBackend;
+use flashtrain::config::{BackendKind, Json, OptKind, TrainConfig,
+                         Variant};
+use flashtrain::formats::bf16;
+use flashtrain::memory::tracker::{Category, Tracker};
+use flashtrain::optim::{FlashOptimizer, GroupSpec, HyperDefaults,
+                        State};
+use flashtrain::util::bench::{bench_for, fmt_time};
+use flashtrain::util::cli::Args;
+use flashtrain::util::rng::Rng;
+use flashtrain::util::table::Table;
+
+/// The (optimizer, variant) rows the bench reports — the same set the
+/// kernel bench steps, so the two artifacts line up.
+const ROWS: [(OptKind, Variant, &str); 7] = [
+    (OptKind::AdamW, Variant::Reference, "adamw ref"),
+    (OptKind::AdamW, Variant::Flash, "adamw flash"),
+    (OptKind::AdamW, Variant::WeightSplit, "adamw wsplit"),
+    (OptKind::AdamW, Variant::OptQuant, "adamw quant"),
+    (OptKind::AdamW, Variant::NoCompand, "adamw nocompand"),
+    (OptKind::Sgd, Variant::Flash, "sgd flash"),
+    (OptKind::Lion, Variant::Flash, "lion flash"),
+];
+
+fn grad_elem_bytes(variant: Variant) -> u64 {
+    if variant.splits_weights() {
+        2
+    } else {
+        4
+    }
+}
+
+fn grad(n: usize, variant: Variant, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let x = rng.normal() as f32 * 0.01;
+            if variant.splits_weights() {
+                bf16::round_f32_to_bf16(x)
+            } else {
+                x
+            }
+        })
+        .collect()
+}
+
+fn build(opt: OptKind, variant: Variant, n: usize, bucket: usize,
+         backend: BackendKind, threads: usize) -> FlashOptimizer {
+    let mut rng = Rng::new(0x7A51 ^ n as u64);
+    let theta0: Vec<f32> =
+        (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+    let cfg = TrainConfig {
+        optimizer: opt,
+        ..Default::default()
+    };
+    FlashOptimizer::native(opt, variant, bucket, &theta0,
+                           GroupSpec::single(n), HyperDefaults::of(&cfg),
+                           backend, threads)
+        .expect("building the train_step bench optimizer")
+}
+
+/// Trainer-equivalent peak accounting over the Table-1 categories
+/// (Params + OptimState + Gradients), two steps.  Returns the peak
+/// bytes/param and the streaming live-gradient high-water mark (0 in
+/// batch mode).  Footprint is engine-invariant, so this always runs
+/// the cheap scalar backend.
+fn measure_peak(opt: OptKind, variant: Variant, streaming: bool,
+                n: usize, bucket: usize) -> (f64, u64) {
+    let mut fo =
+        build(opt, variant, n, bucket, BackendKind::Scalar, 0);
+    let mut tracker = Tracker::new();
+    fo.track(&mut tracker);
+    let gbytes = grad_elem_bytes(variant);
+    let mut live = 0u64;
+    for t in 1..=2usize {
+        let g = grad(n, variant, 0x6E0D + t as u64);
+        if streaming {
+            let stats =
+                fo.step_streaming(&g, 1e-3, t, |_, _| {}).unwrap();
+            tracker.note_transient(Category::Gradients,
+                                   "stream_live_bucket",
+                                   stats.peak_live_grad_bytes);
+            tracker.note_transient(Category::Transient,
+                                   "stream_staging",
+                                   stats.peak_staging_bytes);
+            live = live.max(stats.peak_live_grad_bytes);
+        } else {
+            tracker.alloc(Category::Gradients, "full_grad",
+                          n as u64 * gbytes);
+            fo.step(&g, 1e-3, t, |_, _| {}).unwrap();
+            tracker.free(Category::Gradients, "full_grad");
+        }
+    }
+    let peak = tracker.category_peak(Category::Params)
+        + tracker.category_peak(Category::OptimState)
+        + tracker.category_peak(Category::Gradients);
+    (peak as f64 / n as f64, live)
+}
+
+fn assert_states_bit_equal(a: &State, b: &State, what: &str) {
+    assert_eq!(a.theta_p, b.theta_p, "{what} theta_p");
+    assert_eq!(a.rho, b.rho, "{what} rho");
+    assert_eq!(a.mq, b.mq, "{what} mq");
+    assert_eq!(a.ms, b.ms, "{what} ms");
+    assert_eq!(a.vq, b.vq, "{what} vq");
+    assert_eq!(a.vs, b.vs, "{what} vs");
+    for (name, x, y) in [("theta", &a.theta, &b.theta),
+                         ("m", &a.m, &b.m), ("v", &a.v, &b.v)] {
+        match (x, y) {
+            (Some(x), Some(y)) => {
+                for (i, (p, q)) in x.iter().zip(y).enumerate() {
+                    assert_eq!(p.to_bits(), q.to_bits(),
+                               "{what} {name}[{i}]");
+                }
+            }
+            (None, None) => {}
+            _ => panic!("{what}: {name} presence differs"),
+        }
+    }
+}
+
+/// `--check`: the streaming step must land on the exact batch bits —
+/// same per-group state, same bf16 compute weights — after a short
+/// multi-step run on the parallel backend (overlap path included).
+fn check_bit_exact(opt: OptKind, variant: Variant, label: &str,
+                   n: usize, bucket: usize, threads: usize) {
+    let mut a =
+        build(opt, variant, n, bucket, BackendKind::Parallel, threads);
+    let mut b =
+        build(opt, variant, n, bucket, BackendKind::Parallel, threads);
+    for t in 1..=3usize {
+        let g = grad(n, variant, 0xB17 + t as u64);
+        a.step(&g, 1e-3, t, |_, _| {}).unwrap();
+        b.step_streaming(&g, 1e-3, t, |_, _| {}).unwrap();
+    }
+    for (ga, gb) in a.groups.iter().zip(&b.groups) {
+        assert_states_bit_equal(
+            &ga.opt.state, &gb.opt.state,
+            &format!("{label} streaming vs batch ({})", ga.name));
+    }
+    assert_eq!(a.compute_weights_bf16(n), b.compute_weights_bf16(n),
+               "{label}: streaming compute weights drifted");
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect::<BTreeMap<String, Json>>())
+}
+
+fn main() {
+    let args = Args::parse();
+    let check = args.flag("check");
+    let quick = args.flag("quick") || check;
+    let budget = if check {
+        0.02
+    } else if quick {
+        0.2
+    } else {
+        1.0
+    };
+    let n = args.get_usize("params", if check { 1 << 14 } else { 1 << 20 });
+    let bucket =
+        args.get_usize("bucket", if check { 2048 } else { 16 * 1024 });
+    let threads = args.get_usize("threads", 0);
+    let nthreads = ParallelBackend::new(threads).threads();
+    // anchor the default artifact path to the workspace root, like
+    // BENCH_kernels.json (cargo runs benches with cwd = rust/)
+    let default_out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package dir has a parent")
+        .join("BENCH_train.json");
+    let out_path = args
+        .get("out")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| default_out.to_string_lossy().into_owned());
+
+    let mut t = Table::new(
+        &format!("train step: batch vs gradient-release streaming \
+                  ({n} params, bucket {bucket}, parallel={nthreads} \
+                  threads)"),
+        &["variant", "mode", "median", "Mparam/s", "peak B/param"]);
+    let mut rows_json: Vec<Json> = Vec::new();
+    for (opt, variant, label) in ROWS {
+        let g = grad(n, variant, 0xBE7);
+        let mut peaks = [0.0f64; 2];
+        for (mi, mode) in ["batch", "streaming"].iter().enumerate() {
+            let streaming = mi == 1;
+            let mut fo = build(opt, variant, n, bucket,
+                               BackendKind::Parallel, threads);
+            let r = bench_for(label, budget, 3, || {
+                if streaming {
+                    fo.step_streaming(&g, 1e-3, 10, |_, _| {}).unwrap();
+                } else {
+                    fo.step(&g, 1e-3, 10, |_, _| {}).unwrap();
+                }
+            });
+            let med = r.median_s();
+            let (bpp, live) =
+                measure_peak(opt, variant, streaming, n, bucket);
+            peaks[mi] = bpp;
+            t.row(&[label.into(), (*mode).into(), fmt_time(med),
+                    format!("{:.0}", n as f64 / med / 1e6),
+                    format!("{bpp:.3}")]);
+            rows_json.push(obj(vec![
+                ("optimizer", Json::Str(opt.name().into())),
+                ("variant", Json::Str(variant.name().into())),
+                ("mode", Json::Str((*mode).into())),
+                ("median_s", Json::Num(med)),
+                ("mparam_per_s", Json::Num(n as f64 / med / 1e6)),
+                ("peak_bytes_per_param", Json::Num(bpp)),
+                ("peak_live_grad_bytes", Json::Num(live as f64)),
+            ]));
+        }
+        // the memory claim itself holds in every mode of this bench,
+        // not only under --check: streaming must beat batch
+        assert!(peaks[1] < peaks[0],
+                "{label}: streaming peak {:.3} B/param is not below \
+                 the batch peak {:.3}",
+                peaks[1], peaks[0]);
+        if check {
+            check_bit_exact(opt, variant, label, n, bucket, threads);
+        }
+    }
+    t.print();
+    if check {
+        println!("train check OK: streaming bit-exact to batch on \
+                  {} pairs (parallel backend, {nthreads} threads)",
+                 ROWS.len());
+    }
+
+    // ---- machine-readable output ------------------------------------------
+    // schema v1: one row per (optimizer, variant, mode) with the step
+    // median, throughput, and the tracker-measured Table-1 peak
+    let doc = obj(vec![
+        ("bench", Json::Str("train_step".into())),
+        ("schema_version", Json::Num(1.0)),
+        ("quick", Json::Bool(quick)),
+        ("check", Json::Bool(check)),
+        ("params", Json::Num(n as f64)),
+        ("bucket", Json::Num(bucket as f64)),
+        ("threads", Json::Num(nthreads as f64)),
+        ("rows", Json::Arr(rows_json)),
+    ]);
+    let text = doc.to_string_pretty();
+    let parsed = Json::parse(&text).expect("emitted JSON must parse");
+    let rows = parsed
+        .get("rows")
+        .and_then(Json::as_arr)
+        .expect("rows section present");
+    assert_eq!(rows.len(), 2 * ROWS.len(), "one row per pair per mode");
+    let mut modes_per_pair: BTreeMap<String, BTreeSet<String>> =
+        BTreeMap::new();
+    for e in rows {
+        for key in ["optimizer", "variant", "mode"] {
+            assert!(e.get(key).and_then(Json::as_str).is_some(),
+                    "row missing string {key}");
+        }
+        for key in ["median_s", "mparam_per_s", "peak_bytes_per_param",
+                    "peak_live_grad_bytes"] {
+            assert!(e.get(key).and_then(Json::as_f64).is_some(),
+                    "row missing number {key}");
+        }
+        let pair = format!(
+            "{}/{}",
+            e.get("optimizer").and_then(Json::as_str).unwrap(),
+            e.get("variant").and_then(Json::as_str).unwrap());
+        modes_per_pair
+            .entry(pair)
+            .or_default()
+            .insert(e.get("mode").and_then(Json::as_str).unwrap()
+                .to_string());
+    }
+    for (pair, modes) in &modes_per_pair {
+        assert_eq!(modes.len(), 2,
+                   "{pair} is missing a mode (has {modes:?})");
+    }
+    std::fs::write(&out_path, text + "\n")
+        .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
+    println!("wrote {out_path}");
+}

@@ -32,6 +32,14 @@
 //! `scalar_ref::step_state` cannot differ by a single bit (enforced by
 //! `rust/tests/backend_equivalence.rs`, `rust/tests/fused_fuzz.rs`,
 //! and `rust/tests/kernel_equivalence.rs`).
+//!
+//! The same two properties are what let the gradient-release streaming
+//! step ([`stream::GradBucketStream`](crate::backend::stream) +
+//! `optim::FlashOptimizer::step_streaming`) feed this chain one
+//! GROUP-aligned bucket at a time — in any arrival order, overlapped
+//! with the next bucket's reduce — and still land bit-identical to a
+//! whole-buffer batch step: each ready range becomes one [`Part`] and
+//! runs through [`step_part`] unchanged.
 
 use std::cell::Cell;
 

@@ -31,6 +31,7 @@ pub mod parallel;
 pub mod partition;
 pub mod pool;
 pub mod scalar;
+pub mod stream;
 
 use anyhow::{bail, Result};
 
@@ -42,6 +43,7 @@ use crate::optim::state::State;
 pub use parallel::{FusedJob, ParallelBackend};
 pub use partition::Part;
 pub use scalar::ScalarBackend;
+pub use stream::{GradBucketStream, ReadyRange, StreamStats};
 
 /// A native engine for the fused optimizer step over compact state.
 pub trait StepBackend: Send + Sync {

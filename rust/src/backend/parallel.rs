@@ -133,6 +133,30 @@ impl ParallelBackend {
     /// Bit-exact for any chunking: updates are element-wise and
     /// requantization only ever sees whole groups.
     pub fn step_parts(&self, jobs: Vec<FusedJob<'_>>) {
+        self.step_parts_overlapped(jobs, None);
+    }
+
+    /// [`step_parts`](Self::step_parts) with an optional auxiliary
+    /// closure overlapped onto the **same** pool dispatch — the
+    /// streaming optimizer pipelines the per-bucket gradient reduce of
+    /// bucket `k + 1` with the fused step of bucket `k` this way
+    /// (`optim::FlashOptimizer::step_streaming`).
+    ///
+    /// When the pool has spare workers, one is reserved for `aux` (the
+    /// step chunks bin-pack over `threads - 1`) so the reduce and the
+    /// step genuinely run concurrently; on a single-thread backend
+    /// `aux` runs serially on the calling thread before the step.
+    /// Either way `aux` has run to completion by the time this
+    /// returns.  `aux` must not call back into this backend: the pool
+    /// mutex is held for the whole dispatch, so re-entry would
+    /// deadlock.  Bit-exactness is untouched — `aux` only ever works
+    /// on the *next* bucket's gradient staging buffer, disjoint from
+    /// every partition being stepped.
+    pub fn step_parts_overlapped<'a>(
+        &self, jobs: Vec<FusedJob<'a>>,
+        aux: Option<Box<dyn FnOnce() + Send + 'a>>)
+    {
+        let mut aux = aux;
         for j in &jobs {
             // a misaligned part would make the group-granular chunking
             // below lose its progress guarantee (and requantization
@@ -144,9 +168,19 @@ impl ParallelBackend {
         let total_groups: usize =
             jobs.iter().map(|j| j.part.len / GROUP).sum();
         if total_groups == 0 {
+            if let Some(a) = aux.take() {
+                a();
+            }
             return;
         }
-        let t = self.threads.min(total_groups).max(1);
+        // reserve one pool worker for the overlapped aux job (when
+        // there is a worker to give)
+        let avail = if aux.is_some() && self.threads > 1 {
+            self.threads - 1
+        } else {
+            self.threads
+        };
+        let t = avail.min(total_groups).max(1);
         let target = total_groups.div_ceil(t); // groups per bin
         let mut bins: Vec<Vec<FusedJob<'_>>> = Vec::with_capacity(t);
         let mut cur: Vec<FusedJob<'_>> = Vec::new();
@@ -171,16 +205,27 @@ impl ParallelBackend {
         let ks = self.kernels;
         let fused = self.fused;
         let mut own = bins.remove(0);
-        if bins.is_empty() {
-            run_chunks(&mut own, ks, fused);
-            return;
-        }
-        let jobs_boxed: Vec<Box<dyn FnOnce() + Send + '_>> = bins
+        let mut jobs_boxed: Vec<Box<dyn FnOnce() + Send + 'a>> = bins
             .into_iter()
-            .map(|mut bin| -> Box<dyn FnOnce() + Send + '_> {
+            .map(|mut bin| -> Box<dyn FnOnce() + Send + 'a> {
                 Box::new(move || run_chunks(&mut bin, ks, fused))
             })
             .collect();
+        if self.threads > 1 {
+            // `avail` left a worker free: bins <= threads - 1, so the
+            // aux job fits the `workers() == threads - 1` pool
+            if let Some(a) = aux.take() {
+                jobs_boxed.push(a);
+            }
+        } else if let Some(a) = aux.take() {
+            // zero pool workers: no overlap, but the protocol (and its
+            // completion guarantee) is identical
+            a();
+        }
+        if jobs_boxed.is_empty() {
+            run_chunks(&mut own, ks, fused);
+            return;
+        }
         let pool = match self.pool.lock() {
             Ok(p) => p,
             Err(poisoned) => poisoned.into_inner(),
@@ -368,5 +413,55 @@ mod tests {
         par.step_parts(jobs);
         assert_states_bit_equal(&a1, &b1, "batched part 1");
         assert_states_bit_equal(&a2, &b2, "batched part 2");
+    }
+
+    #[test]
+    fn overlapped_aux_runs_and_step_stays_bit_exact() {
+        // the aux closure (the streaming pipeline's next-bucket
+        // reduce) must run to completion on every code path — spare
+        // workers, single thread, and the empty-jobs prologue — while
+        // the stepped state stays identical to a plain step
+        let n = 6 * GROUP;
+        let mut rng = Rng::new(19);
+        let theta0: Vec<f32> =
+            (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+        let g: Vec<f32> = (0..n)
+            .map(|_| {
+                crate::formats::bf16::round_f32_to_bf16(
+                    rng.normal() as f32 * 0.01)
+            })
+            .collect();
+        let h = Hyper::for_step(&TrainConfig::default(), 1e-3, 1);
+        let mut plain = State::init(&theta0, n, OptKind::AdamW,
+                                    Variant::Flash);
+        ScalarBackend::default()
+            .step_full(&mut plain, &g, OptKind::AdamW, Variant::Flash,
+                       &h)
+            .unwrap();
+
+        for threads in [1usize, 4] {
+            let par = ParallelBackend::new(threads);
+            let mut st = State::init(&theta0, n, OptKind::AdamW,
+                                     Variant::Flash);
+            let mut side = vec![0u64; 3];
+            {
+                let (s0, rest) = side.split_at_mut(1);
+                let job = FusedJob {
+                    part: Part::of_range(&mut st, 0, n, &g),
+                    opt: OptKind::AdamW,
+                    variant: Variant::Flash,
+                    h,
+                };
+                par.step_parts_overlapped(
+                    vec![job], Some(Box::new(|| s0[0] = 7)));
+                par.step_parts_overlapped(
+                    Vec::new(), Some(Box::new(|| rest[0] = 8)));
+                par.step_parts_overlapped(Vec::new(), None);
+            }
+            assert_eq!(&side[..2], &[7, 8],
+                       "aux must have completed ({threads} threads)");
+            assert_states_bit_equal(&plain, &st,
+                                    "overlapped step vs plain");
+        }
     }
 }

@@ -1,0 +1,353 @@
+//! Gradient bucket stream: the produce / step / release protocol
+//! behind the paper's 5-bytes/param gradient-release mode.
+//!
+//! Batch mode materializes the full reduced gradient vector next to
+//! the optimizer state, so peak memory carries gradients for every
+//! parameter at once (the 7-bytes/param row of Table 1).  A
+//! [`GradBucketStream`] instead accepts gradient *spans* as they
+//! become available — in any order, with any (even non-GROUP) bucket
+//! boundaries — and hands back maximal GROUP-aligned ready ranges for
+//! the fused step (`fused::step_part` via a [`StepBackend`]); each
+//! range's buffer is dropped right after its step, so live gradient
+//! bytes never exceed the spans currently in flight.
+//!
+//! Bit-exactness to batch mode falls out of the same argument the
+//! parallel backend relies on (see `backend/mod.rs`): every element
+//! update is independent and requantization only ever sees whole
+//! GROUPs, so *any* GROUP-aligned cover of the state in *any* order
+//! produces identical bits.  The stream only releases GROUP-aligned
+//! ranges — partial groups at span edges are held until their
+//! neighbors arrive — which is exactly what makes out-of-order and
+//! unaligned bucket arrival safe.
+//!
+//! The stream also does the byte accounting for the memory tracker:
+//! `live_grad_bytes` / `peak_grad_bytes` measure produced-but-not-yet-
+//! released spans in the *deployment* gradient dtype (bf16 for split
+//! variants), which `Tracker::note_transient` folds into the measured
+//! peak (`memory::tracker`).
+//!
+//! [`StepBackend`]: crate::backend::StepBackend
+
+use anyhow::{bail, Result};
+
+use crate::formats::GROUP;
+
+/// One produced-but-unstepped gradient span `[lo, lo + g.len())`.
+struct Span {
+    lo: usize,
+    g: Vec<f32>,
+}
+
+impl Span {
+    fn hi(&self) -> usize {
+        self.lo + self.g.len()
+    }
+}
+
+/// A GROUP-aligned ready range handed out by [`take_ready`]: step it
+/// (`lo` is the state offset, `g` the gradient values), then hand it
+/// back to [`release`] to drop the buffer and record completion.
+///
+/// [`take_ready`]: GradBucketStream::take_ready
+/// [`release`]: GradBucketStream::release
+pub struct ReadyRange {
+    pub lo: usize,
+    pub g: Vec<f32>,
+}
+
+impl ReadyRange {
+    pub fn hi(&self) -> usize {
+        self.lo + self.g.len()
+    }
+}
+
+/// Aggregate stats of one streaming step (what the trainer folds into
+/// the memory tracker).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamStats {
+    /// high-water bytes of gradient spans held by the bucket streams
+    /// (produced but not yet released), in the deployment gradient
+    /// dtype
+    pub peak_live_grad_bytes: u64,
+    /// high-water bytes of the produce-side staging buffer (the
+    /// bucket being reduced while the previous one steps)
+    pub peak_staging_bytes: u64,
+    /// number of buckets streamed
+    pub buckets: usize,
+}
+
+/// Streaming gradient intake for one optimizer partition, indexed in
+/// that partition's padded group-local element space `[0, n)`.
+pub struct GradBucketStream {
+    n: usize,
+    /// bytes one gradient element costs in deployment (2 for bf16
+    /// split-variant gradients, 4 for fp32) — accounting only, the
+    /// staged values are always f32
+    grad_elem_bytes: u64,
+    /// produced spans awaiting a complete GROUP, sorted by `lo`
+    pending: Vec<Span>,
+    /// sorted, non-overlapping record of everything ever produced
+    /// (pending + in-flight + stepped) for overlap rejection
+    produced: Vec<(usize, usize)>,
+    pending_bytes: u64,
+    inflight_bytes: u64,
+    peak_bytes: u64,
+    stepped_elems: usize,
+}
+
+impl GradBucketStream {
+    /// `n` is the partition's padded state length (a GROUP multiple);
+    /// `grad_elem_bytes` the deployment gradient dtype width.
+    pub fn new(n: usize, grad_elem_bytes: u64) -> GradBucketStream {
+        assert_eq!(n % GROUP, 0,
+                   "stream space must be GROUP({GROUP})-aligned, got {n}");
+        GradBucketStream {
+            n,
+            grad_elem_bytes,
+            pending: Vec::new(),
+            produced: Vec::new(),
+            pending_bytes: 0,
+            inflight_bytes: 0,
+            peak_bytes: 0,
+            stepped_elems: 0,
+        }
+    }
+
+    /// Accept the gradient span `[lo, lo + g.len())`.  Spans may
+    /// arrive in any order but must not overlap anything produced
+    /// before; an empty span is a no-op.
+    pub fn produce(&mut self, lo: usize, g: Vec<f32>) -> Result<()> {
+        let hi = lo + g.len();
+        if hi > self.n {
+            bail!("gradient span [{lo}, {hi}) exceeds stream space {}",
+                  self.n);
+        }
+        if g.is_empty() {
+            return Ok(());
+        }
+        let idx = self.produced.partition_point(|&(l, _)| l < lo);
+        if (idx > 0 && self.produced[idx - 1].1 > lo)
+            || (idx < self.produced.len() && self.produced[idx].0 < hi)
+        {
+            bail!("gradient span [{lo}, {hi}) overlaps an earlier span");
+        }
+        self.produced.insert(idx, (lo, hi));
+
+        let at = self.pending.partition_point(|s| s.lo < lo);
+        self.pending.insert(at, Span { lo, g });
+        self.pending_bytes += (hi - lo) as u64 * self.grad_elem_bytes;
+        self.peak_bytes = self
+            .peak_bytes
+            .max(self.pending_bytes + self.inflight_bytes);
+        Ok(())
+    }
+
+    /// Extract every maximal GROUP-aligned range now fully covered by
+    /// pending spans (coalescing adjacent spans; unaligned span edges
+    /// stay pending until their neighbors arrive).  The caller steps
+    /// each range and hands it back to [`release`](Self::release).
+    pub fn take_ready(&mut self) -> Vec<ReadyRange> {
+        // split the sorted pending spans into contiguous runs
+        let mut runs: Vec<Vec<Span>> = Vec::new();
+        for s in std::mem::take(&mut self.pending) {
+            match runs.last_mut() {
+                Some(run)
+                    if run.last().map(Span::hi) == Some(s.lo) =>
+                {
+                    run.push(s);
+                }
+                _ => runs.push(vec![s]),
+            }
+        }
+
+        let mut out = Vec::new();
+        let mut keep: Vec<Span> = Vec::new();
+        let mut emitted = 0usize;
+        for run in runs {
+            let a = run[0].lo;
+            let b = run.last().expect("runs are non-empty").hi();
+            let al = a.next_multiple_of(GROUP);
+            let ah = b / GROUP * GROUP;
+            if al >= ah {
+                // no whole group covered yet: hold the run
+                keep.extend(run);
+                continue;
+            }
+            emitted += ah - al;
+            if run.len() == 1 && al == a && ah == b {
+                // exact aligned span (the common case): move, no copy
+                let s = run.into_iter().next().expect("len checked");
+                out.push(ReadyRange { lo: s.lo, g: s.g });
+                continue;
+            }
+            let mut mid = Vec::with_capacity(ah - al);
+            for s in run {
+                let (slo, shi) = (s.lo, s.hi());
+                if slo < al {
+                    let cut = (al - slo).min(s.g.len());
+                    keep.push(Span { lo: slo, g: s.g[..cut].to_vec() });
+                }
+                let mlo = slo.max(al);
+                let mhi = shi.min(ah);
+                if mlo < mhi {
+                    mid.extend_from_slice(&s.g[mlo - slo..mhi - slo]);
+                }
+                if shi > ah {
+                    let cut = ah.max(slo);
+                    keep.push(Span { lo: cut, g: s.g[cut - slo..].to_vec() });
+                }
+            }
+            out.push(ReadyRange { lo: al, g: mid });
+        }
+        keep.sort_by_key(|s| s.lo);
+        self.pending = keep;
+        let bytes = emitted as u64 * self.grad_elem_bytes;
+        self.pending_bytes -= bytes;
+        self.inflight_bytes += bytes;
+        out
+    }
+
+    /// Drop a stepped range's gradient buffer — THE release of
+    /// gradient release — and record its elements as complete.
+    pub fn release(&mut self, r: ReadyRange) {
+        self.inflight_bytes -= r.g.len() as u64 * self.grad_elem_bytes;
+        self.stepped_elems += r.g.len();
+    }
+
+    /// Gradient bytes currently held (pending spans + ranges handed
+    /// out by `take_ready` but not yet released).
+    pub fn live_grad_bytes(&self) -> u64 {
+        self.pending_bytes + self.inflight_bytes
+    }
+
+    /// High-water mark of [`live_grad_bytes`](Self::live_grad_bytes).
+    pub fn peak_grad_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+
+    pub fn stepped_elems(&self) -> usize {
+        self.stepped_elems
+    }
+
+    /// True once every element of `[0, n)` has been produced, stepped
+    /// and released.
+    pub fn is_complete(&self) -> bool {
+        self.stepped_elems == self.n
+            && self.pending.is_empty()
+            && self.inflight_bytes == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vals(lo: usize, len: usize) -> Vec<f32> {
+        (lo..lo + len).map(|i| i as f32).collect()
+    }
+
+    fn drain(s: &mut GradBucketStream) -> Vec<(usize, Vec<f32>)> {
+        s.take_ready()
+            .into_iter()
+            .map(|r| {
+                let pair = (r.lo, r.g.clone());
+                s.release(r);
+                pair
+            })
+            .collect()
+    }
+
+    #[test]
+    fn aligned_buckets_pass_straight_through() {
+        let mut s = GradBucketStream::new(4 * GROUP, 2);
+        s.produce(0, vals(0, 2 * GROUP)).unwrap();
+        let got = drain(&mut s);
+        assert_eq!(got, vec![(0, vals(0, 2 * GROUP))]);
+        s.produce(2 * GROUP, vals(2 * GROUP, 2 * GROUP)).unwrap();
+        let got = drain(&mut s);
+        assert_eq!(got, vec![(2 * GROUP, vals(2 * GROUP, 2 * GROUP))]);
+        assert!(s.is_complete());
+    }
+
+    #[test]
+    fn unaligned_edges_wait_for_neighbors() {
+        let n = 4 * GROUP;
+        let mut s = GradBucketStream::new(n, 4);
+        // [0, 100): only groups 0..3 (96 elems) are whole
+        s.produce(0, vals(0, 100)).unwrap();
+        let got = drain(&mut s);
+        assert_eq!(got, vec![(0, vals(0, 96))]);
+        assert_eq!(s.live_grad_bytes(), 4 * 4); // 4 held elements
+        // [100, n): completes group 3 and covers the rest
+        s.produce(100, vals(100, n - 100)).unwrap();
+        let got = drain(&mut s);
+        assert_eq!(got, vec![(96, vals(96, n - 96))]);
+        assert!(s.is_complete());
+    }
+
+    #[test]
+    fn out_of_order_spans_coalesce() {
+        let n = 3 * GROUP;
+        let mut s = GradBucketStream::new(n, 2);
+        s.produce(40, vals(40, 30)).unwrap(); // [40, 70): no whole group
+        assert!(drain(&mut s).is_empty());
+        s.produce(70, vals(70, n - 70)).unwrap(); // [70, 96)
+        // [40, 96) covers group 2 only
+        let got = drain(&mut s);
+        assert_eq!(got, vec![(2 * GROUP, vals(2 * GROUP, GROUP))]);
+        s.produce(0, vals(0, 40)).unwrap(); // [0, 40) joins [40, 64)
+        let got = drain(&mut s);
+        assert_eq!(got, vec![(0, vals(0, 2 * GROUP))]);
+        assert!(s.is_complete());
+        assert_eq!(s.stepped_elems(), n);
+    }
+
+    #[test]
+    fn overlap_and_oob_rejected() {
+        let mut s = GradBucketStream::new(2 * GROUP, 2);
+        s.produce(0, vals(0, GROUP)).unwrap();
+        assert!(s.produce(GROUP - 1, vals(0, 2)).is_err());
+        assert!(s.produce(GROUP, vals(0, 2 * GROUP)).is_err());
+        // stepped coverage still blocks re-production
+        drain(&mut s);
+        assert!(s.produce(0, vals(0, GROUP)).is_err());
+        s.produce(GROUP, vals(GROUP, GROUP)).unwrap();
+        drain(&mut s);
+        assert!(s.is_complete());
+    }
+
+    #[test]
+    fn byte_accounting_tracks_peak() {
+        let n = 2 * GROUP;
+        let mut s = GradBucketStream::new(n, 2);
+        s.produce(0, vals(0, GROUP)).unwrap();
+        assert_eq!(s.live_grad_bytes(), (GROUP * 2) as u64);
+        let ready = s.take_ready();
+        // taken ranges stay live until released
+        assert_eq!(s.live_grad_bytes(), (GROUP * 2) as u64);
+        s.produce(GROUP, vals(GROUP, GROUP)).unwrap();
+        assert_eq!(s.live_grad_bytes(), (n * 2) as u64);
+        for r in ready {
+            s.release(r);
+        }
+        assert_eq!(s.live_grad_bytes(), (GROUP * 2) as u64);
+        assert_eq!(s.peak_grad_bytes(), (n * 2) as u64);
+        for r in s.take_ready() {
+            s.release(r);
+        }
+        assert!(s.is_complete());
+        assert_eq!(s.peak_grad_bytes(), (n * 2) as u64);
+    }
+
+    #[test]
+    fn empty_span_is_noop_and_space_must_align() {
+        let mut s = GradBucketStream::new(GROUP, 4);
+        s.produce(GROUP, Vec::new()).unwrap();
+        assert_eq!(s.live_grad_bytes(), 0);
+        assert!(!s.is_complete());
+        let caught = std::panic::catch_unwind(|| {
+            GradBucketStream::new(GROUP + 1, 4)
+        });
+        assert!(caught.is_err());
+    }
+}

@@ -207,66 +207,120 @@ impl Trainer {
         }
         let loss = losses / self.cfg.workers.max(1) as f64;
 
-        // --- allreduce (sharded over the step backend's worker pool
-        //     when one exists; bit-exact to the serial reduction) -----------
         let backend = self.opt.step_backend();
-        let grads = match backend.as_deref().and_then(|b| b.as_parallel())
-        {
-            Some(par) => par.with_pool(|pool| {
-                allreduce_mean_sharded(&mut self.worker_grads, pool)
-            }),
-            None => allreduce_mean(&mut self.worker_grads),
-        };
-        let wcat = if self.cfg.grad_release {
-            Category::Transient
-        } else {
-            Category::Gradients
-        };
-        for w in 1..self.cfg.workers.max(1) {
-            self.tracker.free(wcat, &format!("worker{w}_grads"));
-        }
-
-        // --- per-group bucketed optimizer pass (with gradient release) -----
-        let t_opt = Instant::now();
         let lr = self.schedule.lr(self.step);
-        let bucket = self.opt.bucket();
-        let gbytes = self.grad_elem_bytes();
-        let release = self.cfg.grad_release;
-        if release {
-            // interleaved-release accounting: the full gradient never
-            // coexists with the updated state; only one bucket's gradient
-            // is live at a time on top of the state.
-            self.tracker.free(Category::Transient, "worker0_grads");
-            self.tracker.alloc(Category::Gradients, "live_bucket",
-                               (bucket as u64) * gbytes);
-        }
-        // the batched multi-group fast path stages per-group padded
-        // gradient copies for its single pool dispatch — register them
-        // so the fast path never under-reports peak memory
-        let staged = self.opt.staged_grad_bytes();
-        if staged > 0 {
-            self.tracker.alloc(Category::Transient,
-                               "group_grad_staging", staged);
-        }
-        let tracker = &mut self.tracker;
-        self.opt.step(&grads, lr, self.step, |_gi, _bi| {
-            if release {
-                // freed and immediately re-registered for the next bucket;
-                // peak gradient memory stays at one bucket
-                tracker.free(Category::Gradients, "live_bucket");
-                tracker.alloc(Category::Gradients, "live_bucket",
-                              (bucket as u64) * gbytes);
+        let nworkers = self.cfg.workers.max(1);
+        let opt_time;
+        if self.cfg.grad_release && backend.is_some() {
+            // --- gradient-release streaming step --------------------------
+            // no full reduced gradient is ever materialized: each
+            // bucket's allreduce runs on demand inside the streaming
+            // step (pipelined with the previous bucket's fused step on
+            // the parallel backend) and its buffer is dropped right
+            // after the bucket is stepped.  The per-element reduction
+            // order matches `allreduce_mean` exactly — worker 0 first,
+            // then `+=` workers 1.., then an unconditional `/ k` —
+            // which is what keeps this bit-exact to the batch path.
+            let t_opt = Instant::now();
+            let worker_grads = &self.worker_grads;
+            let kw = nworkers as f32;
+            let stats = self.opt.step_streaming_with(
+                lr, self.step, None,
+                |_k, flat: &[(usize, usize)], out: &mut Vec<f32>| {
+                    for &(lo, hi) in flat {
+                        let start = out.len();
+                        out.extend_from_slice(&worker_grads[0][lo..hi]);
+                        for w in &worker_grads[1..] {
+                            for (a, &b) in
+                                out[start..].iter_mut().zip(&w[lo..hi])
+                            {
+                                *a += b;
+                            }
+                        }
+                        for a in out[start..].iter_mut() {
+                            *a /= kw;
+                        }
+                    }
+                    Ok(())
+                },
+                |_, _| {})?;
+            // fold the streaming high-water marks into the measured
+            // peak: the live bucket is the only gradient-category
+            // memory, the reduce staging double-buffer is transient
+            self.tracker.note_transient(Category::Gradients,
+                                        "stream_live_bucket",
+                                        stats.peak_live_grad_bytes);
+            self.tracker.note_transient(Category::Transient,
+                                        "stream_staging",
+                                        stats.peak_staging_bytes);
+            for w in 0..nworkers {
+                self.tracker.free(Category::Transient,
+                                  &format!("worker{w}_grads"));
             }
-        })?;
-        if staged > 0 {
-            self.tracker.free(Category::Transient, "group_grad_staging");
-        }
-        if release {
-            self.tracker.free(Category::Gradients, "live_bucket");
+            opt_time = t_opt.elapsed().as_secs_f64();
         } else {
-            self.tracker.free(Category::Gradients, "worker0_grads");
+            // --- allreduce (sharded over the step backend's worker pool
+            //     when one exists; bit-exact to the serial reduction) -------
+            let grads =
+                match backend.as_deref().and_then(|b| b.as_parallel()) {
+                    Some(par) => par.with_pool(|pool| {
+                        allreduce_mean_sharded(&mut self.worker_grads,
+                                               pool)
+                    }),
+                    None => allreduce_mean(&mut self.worker_grads),
+                };
+            let wcat = if self.cfg.grad_release {
+                Category::Transient
+            } else {
+                Category::Gradients
+            };
+            for w in 1..nworkers {
+                self.tracker.free(wcat, &format!("worker{w}_grads"));
+            }
+
+            // --- per-group bucketed optimizer pass (with gradient
+            //     release accounting on the HLO engine) -------------------
+            let t_opt = Instant::now();
+            let bucket = self.opt.bucket();
+            let gbytes = self.grad_elem_bytes();
+            let release = self.cfg.grad_release;
+            if release {
+                // interleaved-release accounting: the full gradient never
+                // coexists with the updated state; only one bucket's
+                // gradient is live at a time on top of the state.
+                self.tracker.free(Category::Transient, "worker0_grads");
+                self.tracker.alloc(Category::Gradients, "live_bucket",
+                                   (bucket as u64) * gbytes);
+            }
+            // the batched multi-group fast path stages per-group padded
+            // gradient copies for its single pool dispatch — register
+            // them so the fast path never under-reports peak memory
+            let staged = self.opt.staged_grad_bytes();
+            if staged > 0 {
+                self.tracker.alloc(Category::Transient,
+                                   "group_grad_staging", staged);
+            }
+            let tracker = &mut self.tracker;
+            self.opt.step(&grads, lr, self.step, |_gi, _bi| {
+                if release {
+                    // freed and immediately re-registered for the next
+                    // bucket; peak gradient memory stays at one bucket
+                    tracker.free(Category::Gradients, "live_bucket");
+                    tracker.alloc(Category::Gradients, "live_bucket",
+                                  (bucket as u64) * gbytes);
+                }
+            })?;
+            if staged > 0 {
+                self.tracker.free(Category::Transient,
+                                  "group_grad_staging");
+            }
+            if release {
+                self.tracker.free(Category::Gradients, "live_bucket");
+            } else {
+                self.tracker.free(Category::Gradients, "worker0_grads");
+            }
+            opt_time = t_opt.elapsed().as_secs_f64();
         }
-        let opt_time = t_opt.elapsed().as_secs_f64();
 
         self.metrics.record_step(StepRecord {
             step: self.step,

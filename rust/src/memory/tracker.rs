@@ -62,6 +62,18 @@ impl Tracker {
         }
     }
 
+    /// Record a short-lived allocation that already came and went:
+    /// alloc + immediate free, so the global and per-category peaks
+    /// see it but no live entry remains.  This is how externally
+    /// metered high-water marks (the streaming step's
+    /// `StreamStats::peak_live_grad_bytes`, whose buffers live inside
+    /// the optimizer call) fold into the measured footprint.
+    pub fn note_transient(&mut self, cat: Category, name: &str,
+                          bytes: u64) {
+        self.alloc(cat, name, bytes);
+        self.free(cat, name);
+    }
+
     pub fn current_bytes(&self) -> u64 {
         self.current
     }
@@ -160,6 +172,17 @@ mod tests {
         assert_eq!(e.len(), 2);
         assert!(e.contains(&("optimizer_state/decay".to_string(), 100)));
         assert!(e.contains(&("optimizer_state/no_decay".to_string(), 20)));
+    }
+
+    #[test]
+    fn note_transient_peaks_without_lingering() {
+        let mut t = Tracker::new();
+        t.alloc(Category::Params, "theta", 100);
+        t.note_transient(Category::Gradients, "stream_live_bucket", 40);
+        assert_eq!(t.current_bytes(), 100);
+        assert_eq!(t.peak_bytes(), 140);
+        assert_eq!(t.category_peak(Category::Gradients), 40);
+        assert!(t.category_entries(Category::Gradients).is_empty());
     }
 
     #[test]

@@ -21,7 +21,8 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::backend::{make_backend_opts, FusedJob, Part, StepBackend};
+use crate::backend::{make_backend_opts, FusedJob, GradBucketStream,
+                     Part, StepBackend, StreamStats};
 use crate::config::{BackendKind, GroupConfig, KernelKind, OptKind,
                     Variant};
 use crate::formats::bf16;
@@ -210,6 +211,43 @@ fn scatter_from<T: Copy>(vals: &[T], ranges: &[(usize, usize)],
         }
         pos += len;
     }
+}
+
+/// One streaming unit: global bucket `bi` of group `gi`, its padded
+/// span `[span_lo, span_lo + span_len)` in the group's state (the last
+/// bucket absorbs the GROUP padding), the real (unpadded) element
+/// count, and the flat-vector ranges whose reduced gradient feeds it.
+struct BucketMeta {
+    gi: usize,
+    bi: usize,
+    span_lo: usize,
+    span_len: usize,
+    real_len: usize,
+    flat: Vec<(usize, usize)>,
+}
+
+/// Fill `out` with bucket `k`'s reduced gradient via `produce`,
+/// validating the element count, rounding to bf16 for weight-split
+/// variants (the batch path's gradient dtype semantics) and
+/// zero-padding to the padded span length.
+fn fill_bucket<P>(produce: &mut P, k: usize, meta: &BucketMeta,
+                  split: bool, out: &mut Vec<f32>) -> Result<()>
+where
+    P: FnMut(usize, &[(usize, usize)], &mut Vec<f32>) -> Result<()>,
+{
+    out.clear();
+    produce(k, &meta.flat, out)?;
+    if out.len() != meta.real_len {
+        bail!("bucket {k}: producer delivered {} elements, expected {}",
+              out.len(), meta.real_len);
+    }
+    if split {
+        for x in out.iter_mut() {
+            *x = bf16::round_f32_to_bf16(*x);
+        }
+    }
+    out.resize(meta.span_len, 0.0);
+    Ok(())
 }
 
 /// One named parameter group: its ranges in the flat vector, its hyper
@@ -603,6 +641,259 @@ impl FlashOptimizer {
         Ok(())
     }
 
+    /// Global streaming bucket table: every group's buckets in group
+    /// order, each with its padded state span and flat-vector ranges.
+    fn bucket_metas(&self) -> Vec<BucketMeta> {
+        let mut metas = Vec::with_capacity(self.n_buckets());
+        for (gi, g) in self.groups.iter().enumerate() {
+            let b = g.opt.bucket;
+            let nb = g.opt.n_buckets;
+            let padded = g.opt.state.n;
+            for bi in 0..nb {
+                let span_lo = bi * b;
+                // the last bucket absorbs the GROUP padding
+                let span_hi =
+                    if bi + 1 == nb { padded } else { (bi + 1) * b };
+                let wlo = span_lo.min(g.count);
+                let whi = ((bi + 1) * b).min(g.count);
+                let mut flat = Vec::new();
+                let mut pos = 0usize;
+                for &(lo, hi) in &g.ranges {
+                    let len = hi - lo;
+                    let s = wlo.max(pos).min(pos + len);
+                    let e = whi.max(pos).min(pos + len);
+                    if e > s {
+                        flat.push((lo + (s - pos), lo + (e - pos)));
+                    }
+                    pos += len;
+                }
+                metas.push(BucketMeta {
+                    gi,
+                    bi,
+                    span_lo,
+                    span_len: span_hi - span_lo,
+                    real_len: whi - wlo,
+                    flat,
+                });
+            }
+        }
+        metas
+    }
+
+    /// Gradient-release streaming step off a full flat gradient:
+    /// buckets arrive in natural order.  Mostly useful for
+    /// differential tests against [`step`](Self::step); real pipelines
+    /// use [`step_streaming_with`](Self::step_streaming_with) to
+    /// reduce each bucket on demand so the full vector never has to
+    /// exist.
+    pub fn step_streaming<F: FnMut(usize, usize)>(
+        &mut self, grads: &[f32], lr: f64, t: usize, on_bucket: F)
+        -> Result<StreamStats>
+    {
+        self.step_streaming_order(grads, lr, t, None, on_bucket)
+    }
+
+    /// [`step_streaming`](Self::step_streaming) with an explicit
+    /// bucket arrival `order` (any permutation of the global bucket
+    /// indices `0..n_buckets()`) — the out-of-order differential axis
+    /// of the fuzz harness.
+    pub fn step_streaming_order<F: FnMut(usize, usize)>(
+        &mut self, grads: &[f32], lr: f64, t: usize,
+        order: Option<&[usize]>, on_bucket: F) -> Result<StreamStats>
+    {
+        if grads.len() != self.total {
+            bail!("gradient length {} != parameter count {}",
+                  grads.len(), self.total);
+        }
+        self.step_streaming_with(
+            lr, t, order,
+            |_k, flat: &[(usize, usize)], out: &mut Vec<f32>| {
+                for &(lo, hi) in flat {
+                    out.extend_from_slice(&grads[lo..hi]);
+                }
+                Ok(())
+            },
+            on_bucket)
+    }
+
+    /// Gradient-release streaming step — the paper's 5-bytes/param
+    /// mode.  `produce(k, flat_ranges, out)` appends the reduced
+    /// gradient of global bucket `k` (the concatenation of
+    /// `flat_ranges` of the flat vector) to `out`; each bucket is
+    /// stepped as GROUP-aligned partitions and its buffer is dropped
+    /// immediately after, so peak gradient memory is one bucket plus
+    /// any partial-group edges held for coalescing — never the full
+    /// vector.  On the parallel backend the produce of bucket `k + 1`
+    /// overlaps the fused step of bucket `k` on the same pool dispatch
+    /// ([`ParallelBackend::step_parts_overlapped`]); `produce` must
+    /// therefore be `Send` and must not call back into the backend.
+    ///
+    /// [`ParallelBackend::step_parts_overlapped`]:
+    /// crate::backend::ParallelBackend::step_parts_overlapped
+    ///
+    /// Bit-exact to [`step`](Self::step) for any `order`: updates are
+    /// element-wise, requantization only ever sees whole GROUPs, and
+    /// the stream only emits GROUP-aligned ranges — provided `produce`
+    /// reduces each element in the same serial order as the batch
+    /// all-reduce (`coordinator::allreduce_mean`: worker 0 first, then
+    /// `+=` workers 1.., then `/ k`).
+    ///
+    /// Errors on the HLO engine (its buckets release through
+    /// [`step`](Self::step)'s hooks instead) and on a producer that
+    /// delivers the wrong element count.  The returned
+    /// [`StreamStats`] carry the observed gradient high-water marks
+    /// for the memory tracker.
+    pub fn step_streaming_with<P, F>(&mut self, lr: f64, t: usize,
+                                     order: Option<&[usize]>,
+                                     mut produce: P, mut on_bucket: F)
+                                     -> Result<StreamStats>
+    where
+        P: FnMut(usize, &[(usize, usize)], &mut Vec<f32>) -> Result<()>
+            + Send,
+        F: FnMut(usize, usize),
+    {
+        let Some(be) = self.step_backend() else {
+            bail!("step_streaming needs a shared native step backend; \
+                   the hlo engine releases buckets through step's \
+                   per-bucket hooks instead");
+        };
+        let metas = self.bucket_metas();
+        let natural: Vec<usize>;
+        let order: &[usize] = match order {
+            Some(o) => o,
+            None => {
+                natural = (0..metas.len()).collect();
+                &natural
+            }
+        };
+        if order.len() != metas.len() {
+            bail!("bucket order has {} entries for {} buckets",
+                  order.len(), metas.len());
+        }
+        let mut seen = vec![false; metas.len()];
+        for &k in order {
+            if k >= metas.len() || seen[k] {
+                bail!("bucket order is not a permutation of 0..{}: \
+                       bucket {k} repeated or out of range",
+                      metas.len());
+            }
+            seen[k] = true;
+        }
+        let mut stats = StreamStats::default();
+        if metas.is_empty() {
+            return Ok(stats);
+        }
+
+        let (kind, variant) = (self.kind, self.variant);
+        let split = variant.splits_weights();
+        let geb: u64 = if split { 2 } else { 4 };
+        let hypers: Vec<Hyper> = self
+            .groups
+            .iter()
+            .map(|g| g.hyper.resolve(&self.defaults, lr, t))
+            .collect();
+        let mut streams: Vec<GradBucketStream> = self
+            .groups
+            .iter()
+            .map(|g| GradBucketStream::new(g.opt.state.n, geb))
+            .collect();
+
+        let mut staging_peak = 0u64;
+        let mut cur: Vec<f32> = Vec::new();
+        let mut next: Vec<f32> = Vec::new();
+        let mut produce_err: Option<anyhow::Error> = None;
+
+        // prologue: nothing to overlap the first reduce with
+        fill_bucket(&mut produce, order[0], &metas[order[0]], split,
+                    &mut cur)?;
+        staging_peak = staging_peak.max(cur.len() as u64 * geb);
+
+        let par = be.as_parallel();
+        for (j, &k) in order.iter().enumerate() {
+            let meta = &metas[k];
+            let gi = meta.gi;
+            streams[gi].produce(meta.span_lo,
+                                std::mem::take(&mut cur))?;
+            let live: u64 =
+                streams.iter().map(|s| s.live_grad_bytes()).sum();
+            stats.peak_live_grad_bytes =
+                stats.peak_live_grad_bytes.max(live);
+            let ready = streams[gi].take_ready();
+            {
+                // the pipeline: stage bucket j+1 while bucket j steps
+                // (the aux Option's borrows of produce/next/... end at
+                // this scope's close, before the error check below)
+                let mut aux: Option<Box<dyn FnOnce() + Send + '_>> =
+                    order.get(j + 1).map(|&nk| {
+                        let p = &mut produce;
+                        let nb = &mut next;
+                        let err = &mut produce_err;
+                        let sp = &mut staging_peak;
+                        let m = &metas[nk];
+                        Box::new(move || {
+                            if let Err(e) =
+                                fill_bucket(p, nk, m, split, nb)
+                            {
+                                *err = Some(e);
+                            }
+                            *sp = (*sp).max(nb.len() as u64 * geb);
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    });
+                match par {
+                    Some(pb) => {
+                        if ready.is_empty() {
+                            if let Some(a) = aux.take() {
+                                a();
+                            }
+                        }
+                        for (ri, r) in ready.iter().enumerate() {
+                            let st = &mut self.groups[gi].opt.state;
+                            let job = FusedJob {
+                                part: Part::of_range(st, r.lo, r.hi(),
+                                                     &r.g),
+                                opt: kind,
+                                variant,
+                                h: hypers[gi],
+                            };
+                            pb.step_parts_overlapped(
+                                vec![job],
+                                if ri == 0 { aux.take() } else { None });
+                        }
+                    }
+                    None => {
+                        // sequential backend: no overlap, same order
+                        if let Some(a) = aux.take() {
+                            a();
+                        }
+                        for r in &ready {
+                            be.step_range(&mut self.groups[gi].opt.state,
+                                          r.lo, r.hi(), &r.g, kind,
+                                          variant, &hypers[gi])?;
+                        }
+                    }
+                }
+            }
+            if let Some(e) = produce_err.take() {
+                return Err(e);
+            }
+            for r in ready {
+                streams[gi].release(r);
+            }
+            on_bucket(gi, meta.bi);
+            std::mem::swap(&mut cur, &mut next);
+        }
+        for (g, s) in self.groups.iter().zip(&streams) {
+            if !s.is_complete() {
+                bail!("streaming step left group {:?} incomplete: {} \
+                       of {} elements stepped", g.name,
+                      s.stepped_elems(), g.opt.state.n);
+            }
+        }
+        stats.peak_staging_bytes = staging_peak;
+        stats.buckets = metas.len();
+        Ok(stats)
+    }
+
     /// True when one group maps the flat vector identically (the
     /// default config) — the assemble-and-scatter paths short-circuit.
     fn single_identity_group(&self) -> bool {
@@ -962,6 +1253,121 @@ mod tests {
         opt.step(&g, 1e-3, 1, |gi, bi| fired.push((gi, bi))).unwrap();
         assert_eq!(fired, vec![(0, 0), (0, 1), (1, 0)]);
         assert_eq!(opt.n_buckets(), 3);
+    }
+
+    fn assert_same_states(a: &FlashOptimizer, b: &FlashOptimizer,
+                          what: &str) {
+        assert_eq!(a.groups.len(), b.groups.len(), "{what} group count");
+        for (ga, gb) in a.groups.iter().zip(&b.groups) {
+            let (sa, sb) = (&ga.opt.state, &gb.opt.state);
+            assert_eq!(sa.theta_p, sb.theta_p, "{what} {} theta_p",
+                       ga.name);
+            assert_eq!(sa.rho, sb.rho, "{what} {} rho", ga.name);
+            assert_eq!(sa.mq, sb.mq, "{what} {} mq", ga.name);
+            assert_eq!(sa.ms, sb.ms, "{what} {} ms", ga.name);
+            assert_eq!(sa.vq, sb.vq, "{what} {} vq", ga.name);
+            assert_eq!(sa.vs, sb.vs, "{what} {} vs", ga.name);
+        }
+        let n = a.total_params();
+        assert_eq!(a.compute_weights_bf16(n), b.compute_weights_bf16(n),
+                   "{what} compute weights");
+    }
+
+    #[test]
+    fn streaming_matches_batch_in_any_order() {
+        // multi-group with unaligned counts, sequential and parallel
+        // backends, natural and reversed bucket arrival: all must land
+        // bit-identical to the batch step
+        let m = model(&[("h0.w", 3 * GROUP + 5), ("ln0.g", GROUP + 3)]);
+        let n = m.param_count;
+        let t0 = theta(n, 21);
+        let cfg = TrainConfig::default();
+        let g: Vec<f32> = theta(n, 22)
+            .iter()
+            .map(|&x| crate::formats::bf16::round_f32_to_bf16(x * 0.1))
+            .collect();
+        for (backend, threads) in [(BackendKind::Scalar, 0),
+                                   (BackendKind::Parallel, 3)]
+        {
+            let mk = || {
+                FlashOptimizer::native(
+                    OptKind::AdamW, Variant::Flash, 2 * GROUP, &t0,
+                    GroupSpec::decay_split(&m), HyperDefaults::of(&cfg),
+                    backend, threads)
+                    .unwrap()
+            };
+            let mut batch = mk();
+            let mut nat = mk();
+            let mut rev = mk();
+            for t in 1..=3usize {
+                batch.step(&g, 1e-3, t, |_, _| {}).unwrap();
+                let stats =
+                    nat.step_streaming(&g, 1e-3, t, |_, _| {}).unwrap();
+                assert_eq!(stats.buckets, nat.n_buckets());
+                // one released bucket at a time: the live peak is one
+                // bucket span in the bf16 deployment dtype, far below
+                // the full vector
+                assert!(stats.peak_live_grad_bytes
+                            <= (2 * GROUP) as u64 * 2,
+                        "live peak {} > one bucket",
+                        stats.peak_live_grad_bytes);
+                let order: Vec<usize> =
+                    (0..rev.n_buckets()).rev().collect();
+                rev.step_streaming_order(&g, 1e-3, t, Some(&order),
+                                         |_, _| {})
+                    .unwrap();
+            }
+            assert_same_states(&batch, &nat, "streaming natural");
+            assert_same_states(&batch, &rev, "streaming reversed");
+        }
+    }
+
+    #[test]
+    fn streaming_hooks_fire_in_arrival_order() {
+        let m = model(&[("h0.w", 4 * GROUP), ("ln0.g", 2 * GROUP)]);
+        let t0 = theta(m.param_count, 23);
+        let cfg = TrainConfig::default();
+        let mut opt = FlashOptimizer::native(
+            OptKind::AdamW, Variant::Flash, 2 * GROUP, &t0,
+            GroupSpec::decay_split(&m), HyperDefaults::of(&cfg),
+            BackendKind::Scalar, 0)
+            .unwrap();
+        let g = vec![0.01f32; m.param_count];
+        let mut fired = Vec::new();
+        let order = [2usize, 0, 1]; // decay has buckets 0..2, no_decay 2
+        opt.step_streaming_order(&g, 1e-3, 1, Some(&order),
+                                 |gi, bi| fired.push((gi, bi)))
+            .unwrap();
+        assert_eq!(fired, vec![(1, 0), (0, 0), (0, 1)]);
+    }
+
+    #[test]
+    fn streaming_rejects_bad_orders_and_producers() {
+        let n = 4 * GROUP;
+        let t0 = theta(n, 24);
+        let cfg = TrainConfig::default();
+        let mk = || {
+            FlashOptimizer::native(
+                OptKind::AdamW, Variant::Flash, 2 * GROUP, &t0,
+                GroupSpec::single(n), HyperDefaults::of(&cfg),
+                BackendKind::Scalar, 0)
+                .unwrap()
+        };
+        let g = vec![0.01f32; n];
+        // repeated bucket index
+        assert!(mk()
+            .step_streaming_order(&g, 1e-3, 1, Some(&[0, 0]), |_, _| {})
+            .is_err());
+        // wrong-length producer
+        assert!(mk()
+            .step_streaming_with(
+                1e-3, 1, None,
+                |_k, _flat: &[(usize, usize)], out: &mut Vec<f32>| {
+                    out.push(0.0);
+                    Ok(())
+                },
+                |_, _| {})
+            .is_err());
     }
 
     #[test]

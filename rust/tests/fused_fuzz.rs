@@ -25,6 +25,15 @@
 //! change that silently drops a pair fails the coverage assertion at
 //! the end of the run, loudly.
 //!
+//! A second leg (`streaming_vs_batch_differential_fuzz`) drives the
+//! gradient-release streaming step against the batch step at the
+//! `FlashOptimizer` level: random bucket sizes (including non-GROUP
+//! tails), random out-of-order bucket arrival, unaligned parameter
+//! counts, multi-group splits and 1–4 steps under the same injection
+//! machinery, asserting a bit-exact final state — the paper's
+//! 5-bytes/param mode must never buy its memory back with drift.  Its
+//! deterministic prefix covers streaming on all 15 pairs.
+//!
 //! Determinism: the case stream derives from one seed
 //! (`FUSED_FUZZ_SEED`, default `0xF5ED`), so a CI failure names a case
 //! index that replays locally with the same env.  The case budget is
@@ -35,10 +44,12 @@
 
 use flashtrain::backend::fused::TILE;
 use flashtrain::backend::{ParallelBackend, ScalarBackend, StepBackend};
-use flashtrain::config::{KernelKind, OptKind, TrainConfig, Variant};
+use flashtrain::config::{BackendKind, KernelKind, OptKind, TrainConfig,
+                         Variant};
 use flashtrain::formats::{bf16, GROUP};
 use flashtrain::kernels::avx2_available;
-use flashtrain::optim::{scalar_ref, Hyper, State};
+use flashtrain::optim::{scalar_ref, FlashOptimizer, GroupHyper,
+                        GroupSpec, Hyper, HyperDefaults, State};
 use flashtrain::util::rng::Rng;
 
 const ALL_OPTS: [OptKind; 3] =
@@ -394,4 +405,155 @@ fn fused_vs_tiled_vs_scalar_ref_differential_fuzz() {
         "fused_fuzz: {cases} cases OK (seed {seed}, {} kernel sets, \
          {}/15 pairs, all fused-covered)",
         kinds.len(), pairs_seen.len());
+}
+
+#[test]
+fn streaming_vs_batch_differential_fuzz() {
+    let cases = env_u64("FUSED_FUZZ_CASES", 48) as usize;
+    let seed = env_u64("FUSED_FUZZ_SEED", 0xF5ED) ^ 0x57_EA11;
+    let mut rng = Rng::new(seed);
+    let universe: Vec<(OptKind, Variant)> = ALL_OPTS
+        .iter()
+        .flat_map(|&o| ALL_VARIANTS.iter().map(move |&v| (o, v)))
+        .collect();
+    let mut pairs_seen = std::collections::BTreeSet::new();
+
+    for case in 0..cases {
+        // same deterministic-prefix scheme as the fused leg: the first
+        // 15 cases cover streaming on every (optimizer, variant) pair
+        let (opt, variant) = if case < universe.len() {
+            universe[case]
+        } else {
+            (ALL_OPTS[rng.below(3) as usize],
+             ALL_VARIANTS[rng.below(5) as usize])
+        };
+        pairs_seen.insert((opt.name(), variant.name()));
+        let steps = 1 + rng.below(4) as usize;
+        let inj = Inject::draw(&mut rng).constrain_for(variant);
+        // real parameter count: usually a non-GROUP tail
+        let count =
+            (gen_len(&mut rng) - rng.below(GROUP as u64) as usize).max(1);
+        // bucket size: GROUP-aligned or deliberately unaligned, so the
+        // stream must hold and coalesce partial-group edges
+        let bucket = match rng.below(3) {
+            0 => GROUP * (1 + rng.below(3) as usize),
+            1 => 100,
+            _ => GROUP + 1 + rng.below(2 * GROUP as u64) as usize,
+        };
+
+        // random hypers through the defaults-resolution path both
+        // modes share, with the same NaN carve-outs as gen_hyper
+        // (nonzero wd under NaN injection; no NaN-manufacturing
+        // mutations for fp32-resident-moment layouts)
+        let wd = if inj.nan {
+            0.05 + rng.f64() * 0.15
+        } else if rng.below(2) == 0 {
+            0.0
+        } else {
+            rng.f64() * 0.2
+        };
+        let mut cfg = TrainConfig {
+            optimizer: opt,
+            beta1: 0.5 + rng.f64() * 0.49,
+            beta2: 0.8 + rng.f64() * 0.199,
+            eps: 1e-8,
+            weight_decay: wd,
+            ..Default::default()
+        };
+        if rng.below(4) == 0 && !inj.benign_hypers() {
+            match rng.below(2) {
+                0 => cfg.beta2 = -0.5,
+                _ => cfg.eps = 0.0,
+            }
+        }
+        let lr = if rng.below(8) == 0 && !inj.benign_hypers() {
+            1e30
+        } else {
+            1e-4 + rng.f64() * 5e-3
+        };
+        let t_base = rng.below(2000) as usize;
+
+        let theta0 = gen_values(&mut rng, count, 0.1, inj);
+        let specs = if case % 3 == 0 && count >= 2 {
+            // multi-group split with per-group overrides (wd only when
+            // the NaN carve-out allows zero decay)
+            let s = 1 + rng.below(count as u64 - 1) as usize;
+            let mut h2 = GroupHyper {
+                lr_scale: Some(0.5),
+                ..GroupHyper::default()
+            };
+            if !inj.nan {
+                h2.weight_decay = Some(0.0);
+            }
+            vec![GroupSpec {
+                     name: "head".into(),
+                     ranges: vec![(0, s)],
+                     hyper: GroupHyper::default(),
+                 },
+                 GroupSpec {
+                     name: "body".into(),
+                     ranges: vec![(s, count)],
+                     hyper: h2,
+                 }]
+        } else {
+            GroupSpec::single(count)
+        };
+        let (backend, threads) = if case % 4 == 0 {
+            (BackendKind::Parallel, 1 + rng.below(4) as usize)
+        } else {
+            (BackendKind::Scalar, 0)
+        };
+        let kernels = if case % 2 == 0 {
+            KernelKind::Scalar
+        } else {
+            KernelKind::Auto
+        };
+        let fused = case % 3 != 1; // in-test tiled-mirror coverage
+        let ctx = format!(
+            "streaming case {case} (seed {seed}): {opt}/{variant} \
+             count={count} bucket={bucket} steps={steps} \
+             groups={} {backend:?}x{threads} {inj:?}",
+            specs.len());
+
+        let mk = || {
+            FlashOptimizer::native_with_opts(
+                opt, variant, bucket, &theta0, specs.clone(),
+                HyperDefaults::of(&cfg), backend, threads, kernels,
+                fused)
+                .unwrap()
+        };
+        let mut batch = mk();
+        let mut stream = mk();
+        let nb = batch.n_buckets();
+        for s in 1..=steps {
+            let t = t_base + s;
+            let g = gen_grad(&mut rng, count, variant, inj);
+            batch.step(&g, lr, t, |_, _| {}).unwrap();
+            // random out-of-order bucket arrival (Fisher–Yates)
+            let mut order: Vec<usize> = (0..nb).collect();
+            for i in (1..order.len()).rev() {
+                order.swap(i, rng.below(i as u64 + 1) as usize);
+            }
+            stream
+                .step_streaming_order(&g, lr, t, Some(&order), |_, _| {})
+                .unwrap();
+            for (ga, gb) in batch.groups.iter().zip(&stream.groups) {
+                assert_states_bit_equal(
+                    &ga.opt.state, &gb.opt.state,
+                    &format!("{ctx} step {s} group {}", ga.name));
+            }
+        }
+        assert_eq!(batch.compute_weights_bf16(count),
+                   stream.compute_weights_bf16(count),
+                   "{ctx}: compute weights");
+    }
+    assert!(cases < universe.len()
+                || pairs_seen.len() == universe.len(),
+            "only {} of {} (optimizer, variant) pairs exercised in \
+             {cases} streaming cases — the deterministic round-robin \
+             prefix should have covered every pair",
+            pairs_seen.len(), universe.len());
+    println!(
+        "streaming_fuzz: {cases} cases OK (seed {seed}, {}/15 pairs)",
+        pairs_seen.len());
 }

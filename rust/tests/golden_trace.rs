@@ -103,9 +103,13 @@ fn push_bytes<T, F: Fn(&T, &mut Vec<u8>)>(out: &mut Vec<u8>, tag: u8,
 }
 
 /// Run one family trace and checksum the final state dict + compute
-/// weights.
+/// weights.  `streaming` routes every step through the
+/// gradient-release streaming path, which must land on the exact same
+/// pinned checksum as the batch step.
+#[allow(clippy::too_many_arguments)]
 fn run_trace(opt: OptKind, variant: Variant, backend: BackendKind,
-             threads: usize, kernels: KernelKind, fused: bool) -> u32 {
+             threads: usize, kernels: KernelKind, fused: bool,
+             streaming: bool) -> u32 {
     let cfg = TrainConfig {
         optimizer: opt,
         variant,
@@ -119,7 +123,12 @@ fn run_trace(opt: OptKind, variant: Variant, backend: BackendKind,
         .expect("building the golden-trace optimizer");
     for t in 1..=STEPS {
         let g = det_vec(&mut rng, PARAMS, -5);
-        fo.step(&g, LR, t, |_, _| {}).expect("golden-trace step");
+        if streaming {
+            fo.step_streaming(&g, LR, t, |_, _| {})
+                .expect("golden-trace streaming step");
+        } else {
+            fo.step(&g, LR, t, |_, _| {}).expect("golden-trace step");
+        }
     }
 
     let sd = fo.state_dict(STEPS as u64);
@@ -178,16 +187,24 @@ fn golden_trace_checksums() {
         .map(|&(opt, name)| {
             (name,
              run_trace(opt, Variant::Flash, BackendKind::Scalar, 0,
-                       KernelKind::Scalar, true))
+                       KernelKind::Scalar, true, false))
         })
         .collect();
 
     // in-process determinism is a precondition for pinning anything
     for &(opt, name) in &FAMILIES {
         let again = run_trace(opt, Variant::Flash, BackendKind::Scalar,
-                              0, KernelKind::Scalar, true);
+                              0, KernelKind::Scalar, true, false);
         let first = entries.iter().find(|(n, _)| *n == name).unwrap().1;
         assert_eq!(first, again, "{name}: trace not deterministic");
+        // gradient-release streaming must reproduce the *pinned* CRCs,
+        // not merely be self-consistent: same bits as the batch step
+        let streamed = run_trace(opt, Variant::Flash,
+                                 BackendKind::Scalar, 0,
+                                 KernelKind::Scalar, true, true);
+        assert_eq!(first, streamed,
+                   "{name}: streaming step drifted off the pinned \
+                    batch checksum");
     }
 
     let path = golden_path();
@@ -234,13 +251,14 @@ fn golden_trace_checksums() {
 }
 
 /// The checksum must not depend on which engine computed it: kernels
-/// (scalar vs auto/AVX2), backend (sequential vs thread pool), and the
-/// fused single pass vs the tiled mirror all produce the same bits —
-/// for **every variant**, the fp32-resident layouts included now that
-/// the fused kernels cover all 15 (optimizer, variant) pairs.  Only
-/// the `flash` families are pinned in the golden file; the other
-/// variants are asserted engine-invariant in-process, which is the
-/// property the new coverage must uphold.
+/// (scalar vs auto/AVX2), backend (sequential vs thread pool), the
+/// fused single pass vs the tiled mirror, and the batch step vs the
+/// gradient-release streaming step all produce the same bits — for
+/// **every variant**, the fp32-resident layouts included now that the
+/// fused kernels cover all 15 (optimizer, variant) pairs.  Only the
+/// `flash` families are pinned in the golden file; the other variants
+/// are asserted engine-invariant in-process, which is the property the
+/// new coverage must uphold.
 #[test]
 fn golden_trace_is_engine_invariant() {
     const ALL_VARIANTS: [Variant; 5] = [
@@ -254,18 +272,34 @@ fn golden_trace_is_engine_invariant() {
         for variant in ALL_VARIANTS {
             let what = format!("{name}/{variant}");
             let reference = run_trace(opt, variant, BackendKind::Scalar,
-                                      0, KernelKind::Scalar, true);
+                                      0, KernelKind::Scalar, true,
+                                      false);
             let tiled = run_trace(opt, variant, BackendKind::Scalar, 0,
-                                  KernelKind::Scalar, false);
+                                  KernelKind::Scalar, false, false);
             assert_eq!(reference, tiled, "{what}: fused vs tiled");
             let auto = run_trace(opt, variant, BackendKind::Scalar, 0,
-                                 KernelKind::Auto, true);
+                                 KernelKind::Auto, true, false);
             assert_eq!(reference, auto,
                        "{what}: scalar vs auto kernels");
             let par = run_trace(opt, variant, BackendKind::Parallel, 3,
-                                KernelKind::Auto, true);
+                                KernelKind::Auto, true, false);
             assert_eq!(reference, par,
                        "{what}: sequential vs parallel");
+            // gradient-release streaming spans the same axes: fused
+            // and tiled kernels, sequential and parallel backends all
+            // reproduce the batch bits bucket-by-bucket
+            let s_fused = run_trace(opt, variant, BackendKind::Scalar,
+                                    0, KernelKind::Scalar, true, true);
+            assert_eq!(reference, s_fused,
+                       "{what}: streaming (fused) vs batch");
+            let s_tiled = run_trace(opt, variant, BackendKind::Scalar,
+                                    0, KernelKind::Scalar, false, true);
+            assert_eq!(reference, s_tiled,
+                       "{what}: streaming (tiled) vs batch");
+            let s_par = run_trace(opt, variant, BackendKind::Parallel,
+                                  3, KernelKind::Auto, true, true);
+            assert_eq!(reference, s_par,
+                       "{what}: streaming (parallel) vs batch");
         }
     }
 }
