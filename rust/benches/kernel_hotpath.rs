@@ -34,17 +34,38 @@ use flashtrain::util::cli::Args;
 use flashtrain::util::rng::Rng;
 use flashtrain::util::table::Table;
 
-/// (optimizer, variant, label, persistent state bytes/param) rows the
-/// step benchmarks report.
-const STEP_ROWS: [(OptKind, Variant, &str, f64); 7] = [
-    (OptKind::AdamW, Variant::Reference, "adamw ref", 16.0),
-    (OptKind::AdamW, Variant::Flash, "adamw flash", 7.125),
-    (OptKind::AdamW, Variant::WeightSplit, "adamw wsplit", 13.0),
-    (OptKind::AdamW, Variant::OptQuant, "adamw quant", 10.125),
-    (OptKind::AdamW, Variant::NoCompand, "adamw nocompand", 7.125),
-    (OptKind::Sgd, Variant::Flash, "sgd flash", 6.125),
-    (OptKind::Lion, Variant::Flash, "lion flash", 6.125),
+/// The (optimizer, variant) rows the step benchmarks report: the
+/// full 15-pair universe, so the bench tables stay in lockstep with
+/// the fused-vs-tiled matrix (the static-analysis pass, rule A3,
+/// machine-checks that this spans every pair).
+const STEP_ROWS: [(OptKind, Variant); 15] = [
+    (OptKind::AdamW, Variant::Reference),
+    (OptKind::AdamW, Variant::Flash),
+    (OptKind::AdamW, Variant::WeightSplit),
+    (OptKind::AdamW, Variant::OptQuant),
+    (OptKind::AdamW, Variant::NoCompand),
+    (OptKind::Sgd, Variant::Reference),
+    (OptKind::Sgd, Variant::Flash),
+    (OptKind::Sgd, Variant::WeightSplit),
+    (OptKind::Sgd, Variant::OptQuant),
+    (OptKind::Sgd, Variant::NoCompand),
+    (OptKind::Lion, Variant::Reference),
+    (OptKind::Lion, Variant::Flash),
+    (OptKind::Lion, Variant::WeightSplit),
+    (OptKind::Lion, Variant::OptQuant),
+    (OptKind::Lion, Variant::NoCompand),
 ];
+
+/// Human row label, matching the fused-vs-tiled table's convention.
+fn step_row_label(opt: OptKind, variant: Variant) -> String {
+    format!("{} {}", opt.name(), variant.name())
+}
+
+/// Persistent state bytes/param for the traffic columns, derived
+/// from the memory model instead of hand-maintained literals.
+fn step_row_state_bytes(opt: OptKind, variant: Variant) -> f64 {
+    flashtrain::memory::per_param(opt, variant, false).total()
+}
 
 /// The traffic model behind the fused table's GB/s columns: every
 /// persistent state byte is read once and written once per step
@@ -267,7 +288,9 @@ fn main() {
              params, parallel={nthreads} threads"),
         &["variant", "backend", "kernels", "median", "Mparam/s",
           "GB/s state rw"]);
-    for (opt, variant, label, state_bytes) in STEP_ROWS {
+    for (opt, variant) in STEP_ROWS {
+        let label = step_row_label(opt, variant);
+        let state_bytes = step_row_state_bytes(opt, variant);
         let theta: Vec<f32> =
             (0..bucket).map(|_| rng.normal() as f32 * 0.1).collect();
         let g: Vec<f32> = (0..bucket)
@@ -286,7 +309,7 @@ fn main() {
         g_pad.resize(padded, 0.0);
 
         let mut record = |backend: &str, kernels: &str, med: f64| {
-            t.row(&[label.into(), backend.into(), kernels.into(),
+            t.row(&[label.clone(), backend.into(), kernels.into(),
                     fmt_time(med),
                     format!("{:.0}", padded as f64 / med / 1e6),
                     format!("{:.2}",
@@ -307,7 +330,7 @@ fn main() {
         };
         for (backend, kernels, engine) in &engines {
             let mut st = State::init(&theta, padded, opt, variant);
-            let r = bench_for(label, budget, 3, || {
+            let r = bench_for(&label, budget, 3, || {
                 engine
                     .step_full(&mut st, &g_pad, opt, variant, &h)
                     .unwrap();
@@ -315,7 +338,7 @@ fn main() {
             record(backend.as_str(), kernels.as_str(), r.median_s());
         }
         let mut st_par = State::init(&theta, padded, opt, variant);
-        let r = bench_for(label, budget, 3, || {
+        let r = bench_for(&label, budget, 3, || {
             par.step_full(&mut st_par, &g_pad, opt, variant, &h)
                 .unwrap();
         });
@@ -336,7 +359,7 @@ fn main() {
             par.step_full(&mut st, &g_pad, opt, variant, &h).unwrap();
             clean.push(st);
             for other in &clean[1..] {
-                assert_states_bit_equal(&clean[0], other, label);
+                assert_states_bit_equal(&clean[0], other, &label);
             }
         }
     }
@@ -536,7 +559,9 @@ fn main() {
         let mut hlo_ok = true;
         'outer: for &bucket in manifest.buckets.keys().collect::<Vec<_>>()
         {
-            for (opt, variant, label, state_bytes) in STEP_ROWS {
+            for (opt, variant) in STEP_ROWS {
+                let label = step_row_label(opt, variant);
+                let state_bytes = step_row_state_bytes(opt, variant);
                 if flashtrain::optim::artifact_name(opt, variant)
                     .is_err()
                 {
@@ -559,11 +584,11 @@ fn main() {
                     .map(|_| rng.normal() as f32 * 0.01)
                     .collect();
                 let h = Hyper::for_step(&cfg, 1e-3, 10);
-                let r = bench_for(label, budget, 5, || {
+                let r = bench_for(&label, budget, 5, || {
                     opt_exec.step_bucket(0, &g, &h).unwrap();
                 });
                 let med = r.median_s();
-                t.row(&[format!("{bucket}"), label.into(),
+                t.row(&[format!("{bucket}"), label,
                         fmt_time(med),
                         format!("{:.1}", med * 1e9 / bucket as f64),
                         format!("{:.2}",

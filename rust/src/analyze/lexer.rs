@@ -1,0 +1,311 @@
+//! A minimal Rust lexer for the static-analysis pass: just enough to
+//! see code the way `rustc` does — comments, strings, char literals,
+//! lifetimes, identifiers, numbers, punctuation — without pulling in
+//! `syn` (the build stays offline, see rule A5).  It does NOT parse:
+//! rules that need structure (brace spans, attribute prefixes) count
+//! delimiters over the token stream themselves.
+//!
+//! Guarantees the rules rely on:
+//!   - nothing inside a comment or string literal ever becomes a
+//!     token, so `// unsafe` or `"unwrap"` cannot trip a rule;
+//!   - every token carries the 1-based source line it starts on, so
+//!     findings are clickable `file:line` diagnostics;
+//!   - keywords are ordinary `Ident` tokens (`unsafe`, `fn`, `mod`):
+//!     rules match on text.
+
+/// Token class.  Punctuation is one token per character — `::` is two
+/// `Punct(':')` tokens — which keeps the lexer trivial and is
+/// sufficient for the pattern windows the rules scan for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unsafe`, `_mm256_add_ps`, `cfg`).
+    Ident,
+    /// Numeric literal (`15`, `0x7FFF`, `1.0e3` minus the exponent
+    /// sign — precise enough for the rules, which never read values).
+    Num,
+    /// Single punctuation character (`{`, `.`, `#`, …).
+    Punct(char),
+}
+
+/// One lexed token with its starting line (1-based).
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct(c)
+    }
+}
+
+/// Lex `src` into a token stream, discarding comments, whitespace,
+/// and the contents of string/char literals.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if peek(&b, i + 1) == Some('/') => {
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '/' if peek(&b, i + 1) == Some('*') => {
+                i = skip_block_comment(&b, i, &mut line);
+            }
+            '"' => i = skip_string(&b, i + 1, &mut line),
+            'r' | 'b' if raw_string_start(&b, i).is_some() => {
+                // r"..", r#".."#, br".."  (b".." is handled below:
+                // `b` lexes as the start of an ident unless followed
+                // by a quote, which `raw_string_start` also reports)
+                let (body, hashes) = raw_string_start(&b, i).unwrap();
+                i = skip_raw_string(&b, body, hashes, &mut line);
+            }
+            '\'' => {
+                if char_literal_here(&b, i) {
+                    i = skip_char_literal(&b, i + 1, &mut line);
+                } else {
+                    // lifetime: consume the quote; the name lexes as
+                    // an ordinary ident, which no rule cares about
+                    i += 1;
+                }
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_alphanumeric() || b[i] == '_')
+                {
+                    i += 1;
+                }
+                // byte-string prefix: `b"..."` — the ident swallowed
+                // the `b`; if we stopped at a quote re-enter as string
+                let text: String = b[start..i].iter().collect();
+                if (text == "b" || text == "br")
+                    && peek(&b, i) == Some('"')
+                {
+                    i = skip_string(&b, i + 1, &mut line);
+                    continue;
+                }
+                toks.push(Tok { kind: TokKind::Ident, text, line });
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_alphanumeric()
+                        || b[i] == '_'
+                        || b[i] == '.')
+                {
+                    // `0..n` range: don't eat the second dot
+                    if b[i] == '.' && peek(&b, i + 1) == Some('.') {
+                        break;
+                    }
+                    i += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Num,
+                    text: b[start..i].iter().collect(),
+                    line,
+                });
+            }
+            c => {
+                toks.push(Tok {
+                    kind: TokKind::Punct(c),
+                    text: c.to_string(),
+                    line,
+                });
+                i += 1;
+            }
+        }
+    }
+    toks
+}
+
+fn peek(b: &[char], i: usize) -> Option<char> {
+    b.get(i).copied()
+}
+
+/// `/* … */` with nesting (Rust block comments nest).
+fn skip_block_comment(b: &[char], mut i: usize, line: &mut usize)
+                      -> usize {
+    let mut depth = 0usize;
+    while i < b.len() {
+        if b[i] == '\n' {
+            *line += 1;
+            i += 1;
+        } else if b[i] == '/' && peek(b, i + 1) == Some('*') {
+            depth += 1;
+            i += 2;
+        } else if b[i] == '*' && peek(b, i + 1) == Some('/') {
+            depth -= 1;
+            i += 2;
+            if depth == 0 {
+                return i;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    i
+}
+
+/// Body of a `"…"` string, `i` just past the opening quote.
+fn skip_string(b: &[char], mut i: usize, line: &mut usize) -> usize {
+    while i < b.len() {
+        match b[i] {
+            '\\' => i += 2,
+            '"' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Detect `r"`, `r#"`, `br"`, `br#"` at `i`; returns (index just past
+/// the opening quote, number of hashes).
+fn raw_string_start(b: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if peek(b, j) == Some('b') {
+        j += 1;
+    }
+    if peek(b, j) != Some('r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while peek(b, j) == Some('#') {
+        hashes += 1;
+        j += 1;
+    }
+    if peek(b, j) == Some('"') {
+        Some((j + 1, hashes))
+    } else {
+        None
+    }
+}
+
+fn skip_raw_string(b: &[char], mut i: usize, hashes: usize,
+                   line: &mut usize) -> usize {
+    while i < b.len() {
+        if b[i] == '\n' {
+            *line += 1;
+            i += 1;
+        } else if b[i] == '"'
+            && (0..hashes).all(|k| peek(b, i + 1 + k) == Some('#'))
+        {
+            return i + 1 + hashes;
+        } else {
+            i += 1;
+        }
+    }
+    i
+}
+
+/// Disambiguate `'a'` (char literal) from `'a` (lifetime) at a `'`.
+fn char_literal_here(b: &[char], i: usize) -> bool {
+    match peek(b, i + 1) {
+        Some('\\') => true,                   // '\n', '\'', '\u{..}'
+        Some(c) if c.is_alphanumeric() || c == '_' => {
+            peek(b, i + 2) == Some('\'')      // 'x' yes, 'static no
+        }
+        Some(_) => true,                      // '(' , ' ' , …
+        None => false,
+    }
+}
+
+/// Body of a `'…'` char literal, `i` just past the opening quote.
+fn skip_char_literal(b: &[char], mut i: usize, line: &mut usize)
+                     -> usize {
+    while i < b.len() {
+        match b[i] {
+            '\\' => i += 2,
+            '\'' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_produce_no_tokens() {
+        let src = r##"
+            // unsafe unwrap in a line comment
+            /* unsafe /* nested */ still comment */
+            let s = "unsafe \" unwrap";
+            let r = r#"unsafe "quoted" unwrap"#;
+            let b = b"unsafe";
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"unsafe".to_string()), "{ids:?}");
+        assert!(!ids.contains(&"unwrap".to_string()), "{ids:?}");
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let ids = idents("fn f<'a>(x: &'a str) { let c = 'x'; }");
+        assert!(ids.contains(&"a".to_string()));
+        assert!(!ids.contains(&"x\'".to_string()));
+        // the literal 'x' body must not appear as a token either:
+        // only idents f, a, x (param), str, let, c, fn remain
+        assert!(idents("let c = '\\'';").contains(&"c".to_string()));
+    }
+
+    #[test]
+    fn line_numbers_are_one_based_and_track_newlines() {
+        let toks = lex("a\nb\n  c");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 2);
+        assert_eq!(toks[2].line, 3);
+    }
+
+    #[test]
+    fn double_colon_is_two_puncts() {
+        let toks = lex("OptKind::AdamW");
+        assert!(toks[0].is_ident("OptKind"));
+        assert!(toks[1].is_punct(':'));
+        assert!(toks[2].is_punct(':'));
+        assert!(toks[3].is_ident("AdamW"));
+    }
+
+    #[test]
+    fn numbers_do_not_eat_range_dots() {
+        let toks = lex("0..n");
+        assert_eq!(toks[0].kind, TokKind::Num);
+        assert!(toks[1].is_punct('.'));
+        assert!(toks[2].is_punct('.'));
+    }
+}

@@ -1,0 +1,207 @@
+//! `flashoptim-analyze`: the in-tree static-analysis pass that turns
+//! the repo's conventions into machine-checked contracts.
+//!
+//! The codebase's core guarantees — bit-exact SIMD kernels (no FMA,
+//! no F16C, RNE-only rounding), total 15-pair (optimizer × variant)
+//! fused coverage, sound `unsafe` at the AVX2/pool boundaries, no
+//! panics on the hot path, and a fully offline build — used to live
+//! in comments and out-of-band audit scripts.  This module makes them
+//! tier-1: `tests/static_analysis.rs` runs every rule over the repo
+//! and fails on any finding, and `src/bin/flashoptim_analyze.rs` is
+//! the same pass as a CLI for CI and local use.
+//!
+//! Deliberately dependency-free (rule A5 guards the property the
+//! analyzer itself relies on): a minimal lexer in [`lexer`], rules in
+//! [`rules`], nothing from outside the standard library.  The rule
+//! catalog, rationale, and the suppression-tag syntax are documented
+//! in `docs/ANALYSIS.md`, and a self-test keeps that table in sync
+//! with [`rules::rules`].
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One source file in the corpus.  `path` is repo-relative with
+/// forward slashes (`rust/src/kernels/avx2.rs`) — rules scope
+/// themselves by prefix/suffix matches on it, and findings echo it.
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+impl SourceFile {
+    /// Lex the file.  Small corpus, no caching needed.
+    pub fn toks(&self) -> Vec<lexer::Tok> {
+        lexer::lex(&self.text)
+    }
+
+    /// The 1-based source line, or `""` past EOF.
+    pub fn line(&self, n: usize) -> &str {
+        self.text.lines().nth(n.wrapping_sub(1)).unwrap_or("")
+    }
+}
+
+/// The file set a run analyzes.
+pub struct Corpus {
+    pub files: Vec<SourceFile>,
+}
+
+impl Corpus {
+    /// Build a corpus from in-memory `(path, text)` pairs — the
+    /// fixture tests use this to plant violations under scope-matched
+    /// synthetic paths without touching the real tree.
+    pub fn from_sources(sources: Vec<(&str, String)>) -> Corpus {
+        Corpus {
+            files: sources
+                .into_iter()
+                .map(|(path, text)| SourceFile {
+                    path: path.to_string(),
+                    text,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn file(&self, path: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.path == path)
+    }
+
+    /// Files whose repo-relative path starts with `prefix`.
+    pub fn under<'a>(&'a self, prefix: &'a str)
+                     -> impl Iterator<Item = &'a SourceFile> {
+        self.files.iter().filter(move |f| f.path.starts_with(prefix))
+    }
+}
+
+/// A rule violation: which rule, where, and why.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}:{}: {}", self.rule, self.path, self.line,
+               self.msg)
+    }
+}
+
+/// A registered rule.  `summary` must match the catalog row in
+/// `docs/ANALYSIS.md` (enforced by the docs-sync self-test).
+pub struct Rule {
+    pub id: &'static str,
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub check: fn(&Corpus, &mut Vec<Finding>),
+}
+
+/// Run every registered rule over a corpus.
+pub fn run(corpus: &Corpus) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for rule in rules::rules() {
+        (rule.check)(corpus, &mut findings);
+    }
+    findings
+}
+
+/// Load the real repo corpus rooted at `root` (the directory holding
+/// `rust/`) and run every rule.  Collects:
+///   - `rust/src/**/*.rs` (recursive — the analyzer analyzes itself),
+///   - `rust/tests/*.rs` and `rust/benches/*.rs` (top level only:
+///     `tests/fixtures/` holds planted violations and `tests/golden/`
+///     data, neither is code under contract),
+///   - every `Cargo.toml` under `root` except inside `target/`.
+pub fn run_repo(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    let rust = root.join("rust");
+    collect_rs(&rust.join("src"), root, true, &mut files)?;
+    collect_rs(&rust.join("tests"), root, false, &mut files)?;
+    collect_rs(&rust.join("benches"), root, false, &mut files)?;
+    collect_cargo_tomls(root, root, &mut files)?;
+    files.sort_by(|a, b| a.path.cmp(&b.path));
+    Ok(run(&Corpus { files }))
+}
+
+fn rel(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root)
+        .unwrap_or(p)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+fn collect_rs(dir: &Path, root: &Path, recurse: bool,
+              out: &mut Vec<SourceFile>) -> std::io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let p = entry?.path();
+        if p.is_dir() {
+            if recurse {
+                collect_rs(&p, root, true, out)?;
+            }
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(SourceFile {
+                path: rel(root, &p),
+                text: std::fs::read_to_string(&p)?,
+            });
+        }
+    }
+    Ok(())
+}
+
+fn collect_cargo_tomls(dir: &Path, root: &Path,
+                       out: &mut Vec<SourceFile>)
+                       -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let p: PathBuf = entry?.path();
+        let name = p.file_name().unwrap_or_default();
+        if p.is_dir() {
+            if name != "target" && name != ".git" {
+                collect_cargo_tomls(&p, root, out)?;
+            }
+        } else if name == "Cargo.toml" {
+            out.push(SourceFile {
+                path: rel(root, &p),
+                text: std::fs::read_to_string(&p)?,
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finding_display_is_clickable() {
+        let f = Finding {
+            rule: "A1",
+            path: "rust/src/x.rs".into(),
+            line: 7,
+            msg: "boom".into(),
+        };
+        assert_eq!(f.to_string(), "[A1] rust/src/x.rs:7: boom");
+    }
+
+    #[test]
+    fn corpus_scoping_helpers() {
+        let c = Corpus::from_sources(vec![
+            ("rust/src/a.rs", "fn a() {}".into()),
+            ("rust/tests/b.rs", "fn b() {}".into()),
+        ]);
+        assert_eq!(c.under("rust/src/").count(), 1);
+        assert!(c.file("rust/tests/b.rs").is_some());
+        assert_eq!(c.file("rust/src/a.rs").unwrap().line(1),
+                   "fn a() {}");
+        assert_eq!(c.file("rust/src/a.rs").unwrap().line(99), "");
+    }
+}

@@ -1,0 +1,810 @@
+//! The rule catalog (A1–A5).  Each rule is a pure function over the
+//! [`Corpus`]; the registry in [`rules`] is the single source of
+//! truth mirrored by the table in `docs/ANALYSIS.md` (a self-test in
+//! `tests/static_analysis.rs` keeps the two in sync).
+//!
+//! Suppression: a finding can be waived in place with
+//! `// analyze: allow(<rule-name>) — <justification>` on the
+//! offending line or in the contiguous comment block directly above
+//! it.  Only A4 honors the tag today — the other rules guard
+//! invariants that have no legitimate exceptions.
+
+use super::lexer::{Tok, TokKind};
+use super::{Corpus, Finding, Rule, SourceFile};
+
+/// All registered rules, in documentation order.
+pub fn rules() -> &'static [Rule] {
+    &[
+        Rule {
+            id: "A1",
+            name: "unsafe-hygiene",
+            summary: "every unsafe block or fn carries an adjacent \
+                      SAFETY justification",
+            check: check_unsafe_hygiene,
+        },
+        Rule {
+            id: "A2",
+            name: "simd-bit-exactness",
+            summary: "avx2.rs uses no FMA/F16C/approximation \
+                      intrinsics, only allowlisted ones, and rounds \
+                      RNE-only",
+            check: check_simd_policy,
+        },
+        Rule {
+            id: "A3",
+            name: "pair-totality",
+            summary: "KernelSet fields, fused_step arms, the fuzz \
+                      universe, and bench STEP_ROWS all span the \
+                      identical 15-pair universe",
+            check: check_pair_totality,
+        },
+        Rule {
+            id: "A4",
+            name: "panic_policy",
+            summary: "no unwrap or expect in kernels, backend, or \
+                      formats outside cfg(test)",
+            check: check_panic_policy,
+        },
+        Rule {
+            id: "A5",
+            name: "dependency-allowlist",
+            summary: "Cargo.toml dependency sections reference only \
+                      the vendored anyhow and xla path shims",
+            check: check_dependency_allowlist,
+        },
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// shared helpers
+
+fn is_comment_line(s: &str) -> bool {
+    s.trim_start().starts_with("//")
+}
+
+fn is_attr_line(s: &str) -> bool {
+    let t = s.trim_start();
+    t.starts_with("#[") || t.starts_with("#!")
+}
+
+/// Is the finding on `line` waived by an
+/// `// analyze: allow(<name>)` tag on the line itself or in the
+/// contiguous comment block directly above it?
+fn suppressed(f: &SourceFile, line: usize, name: &str) -> bool {
+    let tag = format!("analyze: allow({name})");
+    if f.line(line).contains(&tag) {
+        return true;
+    }
+    let mut n = line.saturating_sub(1);
+    while n >= 1 && is_comment_line(f.line(n)) {
+        if f.line(n).contains(&tag) {
+            return true;
+        }
+        n -= 1;
+    }
+    false
+}
+
+/// Index of the `}` matching the `{` at `toks[open]` (or the end of
+/// the stream if unbalanced — callers treat that as "to EOF").
+fn brace_match(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (i, t) in toks.iter().enumerate().skip(open) {
+        match t.kind {
+            TokKind::Punct('{') => depth += 1,
+            TokKind::Punct('}') => {
+                depth -= 1;
+                if depth == 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Line spans (inclusive) of every `#[cfg(test)]`-gated item body.
+fn cfg_test_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < toks.len() {
+        let w = &toks[i..i + 7];
+        let is_cfg_test = w[0].is_punct('#')
+            && w[1].is_punct('[')
+            && w[2].is_ident("cfg")
+            && w[3].is_punct('(')
+            && w[4].is_ident("test")
+            && w[5].is_punct(')')
+            && w[6].is_punct(']');
+        if is_cfg_test {
+            // the gated item's body is the next top-level `{ … }`;
+            // a `;` first means a braceless item (use/extern) — skip
+            let mut j = i + 7;
+            while j < toks.len()
+                && !toks[j].is_punct('{')
+                && !toks[j].is_punct(';')
+            {
+                j += 1;
+            }
+            if j < toks.len() && toks[j].is_punct('{') {
+                let k = brace_match(toks, j);
+                spans.push((toks[j].line, toks[k].line));
+                i = k;
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+fn in_spans(spans: &[(usize, usize)], line: usize) -> bool {
+    spans.iter().any(|&(lo, hi)| lo <= line && line <= hi)
+}
+
+// ---------------------------------------------------------------------------
+// A1: unsafe-hygiene
+
+/// An `unsafe` token is justified if its own line mentions `SAFETY:`
+/// (trailing or preceding comment on the same line) or the contiguous
+/// comment/attribute block directly above it contains `SAFETY:` or a
+/// `# Safety` doc section.  Blank lines and code break the block.
+fn has_safety_note(f: &SourceFile, line: usize) -> bool {
+    if f.line(line).contains("SAFETY:") {
+        return true;
+    }
+    let mut n = line.saturating_sub(1);
+    while n >= 1 {
+        let s = f.line(n);
+        if is_comment_line(s) {
+            if s.contains("SAFETY:") || s.contains("# Safety") {
+                return true;
+            }
+        } else if !is_attr_line(s) {
+            return false;
+        }
+        n -= 1;
+    }
+    false
+}
+
+fn check_unsafe_hygiene(c: &Corpus, out: &mut Vec<Finding>) {
+    for f in c.under("rust/src/") {
+        for t in f.toks() {
+            if t.is_ident("unsafe") && !has_safety_note(f, t.line) {
+                out.push(Finding {
+                    rule: "A1",
+                    path: f.path.clone(),
+                    line: t.line,
+                    msg: "`unsafe` without an adjacent `// SAFETY:` \
+                          comment or `# Safety` doc section"
+                        .into(),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// A2: SIMD bit-exactness policy
+
+/// Intrinsic-name substrings that can never appear in the bit-exact
+/// kernels, with the reason (part of the diagnostic).
+const A2_FORBIDDEN: &[(&str, &str)] = &[
+    ("fmadd", "FMA contracts mul+add into one rounding — breaks \
+               bit-exactness vs the scalar two-rounding sequence"),
+    ("fmsub", "FMA-family fused rounding"),
+    ("fnmadd", "FMA-family fused rounding"),
+    ("fnmsub", "FMA-family fused rounding"),
+    ("cvtph", "F16C hardware f16 conversion — rounding must come \
+               from the in-tree RNE sequence, not the ISA"),
+    ("cvtps_ph", "F16C hardware f16 conversion"),
+    ("rcp", "reciprocal approximation — division must stay division"),
+    ("rsqrt", "rsqrt approximation — sqrt must stay exact sqrt"),
+];
+
+/// Every `_mm*`/`_MM_*`/`_CMP_*` identifier the AVX2 kernels are
+/// audited to use.  A new intrinsic must be reviewed for rounding
+/// behavior and added here (see docs/ANALYSIS.md, rule A2) before it
+/// compiles past the analyzer.
+const A2_ALLOWED: &[&str] = &[
+    "_CMP_GT_OQ",
+    "_CMP_LT_OQ",
+    "_CMP_UNORD_Q",
+    "_MM_FROUND_NO_EXC",
+    "_MM_FROUND_TO_NEAREST_INT",
+    "_mm256_add_epi32",
+    "_mm256_add_ps",
+    "_mm256_and_ps",
+    "_mm256_and_si256",
+    "_mm256_andnot_si256",
+    "_mm256_blendv_epi8",
+    "_mm256_blendv_ps",
+    "_mm256_castps256_ps128",
+    "_mm256_castps_si256",
+    "_mm256_castsi256_ps",
+    "_mm256_cmp_ps",
+    "_mm256_cmpeq_epi32",
+    "_mm256_cmpgt_epi32",
+    "_mm256_cvtepi32_ps",
+    "_mm256_cvtepi8_epi32",
+    "_mm256_cvtepu16_epi32",
+    "_mm256_cvtepu8_epi32",
+    "_mm256_cvtps_epi32",
+    "_mm256_div_ps",
+    "_mm256_extractf128_ps",
+    "_mm256_loadu_ps",
+    "_mm256_mul_ps",
+    "_mm256_or_si256",
+    "_mm256_packs_epi16",
+    "_mm256_packs_epi32",
+    "_mm256_packus_epi16",
+    "_mm256_packus_epi32",
+    "_mm256_permute4x64_epi64",
+    "_mm256_permutevar8x32_epi32",
+    "_mm256_round_ps",
+    "_mm256_set1_epi32",
+    "_mm256_set1_ps",
+    "_mm256_setr_epi32",
+    "_mm256_setzero_ps",
+    "_mm256_setzero_si256",
+    "_mm256_slli_epi32",
+    "_mm256_sllv_epi32",
+    "_mm256_sqrt_ps",
+    "_mm256_srai_epi32",
+    "_mm256_srli_epi32",
+    "_mm256_srlv_epi32",
+    "_mm256_storeu_ps",
+    "_mm256_storeu_si256",
+    "_mm256_sub_epi32",
+    "_mm256_sub_ps",
+    "_mm_cvtss_f32",
+    "_mm_loadl_epi64",
+    "_mm_loadu_si128",
+    "_mm_max_ps",
+    "_mm_max_ss",
+    "_mm_movehl_ps",
+    "_mm_shuffle_ps",
+];
+
+fn intrinsic_like(name: &str) -> bool {
+    name.starts_with("_mm")
+        || name.starts_with("_MM_")
+        || name.starts_with("_CMP_")
+}
+
+/// `_mm256_round_ps::<{ A | B }>` — the const-generic immediate must
+/// be exactly RNE + no-exceptions.  Returns an error message if not.
+fn round_immediate_error(toks: &[Tok], i: usize) -> Option<String> {
+    let turbofish = toks.get(i + 1).is_some_and(|t| t.is_punct(':'))
+        && toks.get(i + 2).is_some_and(|t| t.is_punct(':'))
+        && toks.get(i + 3).is_some_and(|t| t.is_punct('<'));
+    if !turbofish {
+        return Some(
+            "rounding immediate not pinned at the call site — spell \
+             it `_mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | \
+             _MM_FROUND_NO_EXC }>`"
+                .into(),
+        );
+    }
+    let mut j = i + 4;
+    let mut idents: Vec<&str> = Vec::new();
+    while let Some(t) = toks.get(j) {
+        if t.is_punct('>') {
+            break;
+        }
+        if t.kind == TokKind::Ident {
+            idents.push(&t.text);
+        }
+        j += 1;
+    }
+    let rne = idents.contains(&"_MM_FROUND_TO_NEAREST_INT");
+    let only_known = idents.iter().all(|s| {
+        *s == "_MM_FROUND_TO_NEAREST_INT" || *s == "_MM_FROUND_NO_EXC"
+    });
+    if rne && only_known {
+        None
+    } else {
+        Some(format!(
+            "non-RNE rounding immediate {idents:?} — only \
+             _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC is \
+             bit-exact to the scalar round-to-nearest-even sequence"
+        ))
+    }
+}
+
+fn check_simd_policy(c: &Corpus, out: &mut Vec<Finding>) {
+    for f in c.files.iter() {
+        if !f.path.ends_with("kernels/avx2.rs") {
+            continue;
+        }
+        let toks = f.toks();
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind != TokKind::Ident || !intrinsic_like(&t.text) {
+                continue;
+            }
+            if let Some((_, why)) = A2_FORBIDDEN
+                .iter()
+                .find(|(pat, _)| t.text.contains(pat))
+            {
+                out.push(Finding {
+                    rule: "A2",
+                    path: f.path.clone(),
+                    line: t.line,
+                    msg: format!(
+                        "forbidden intrinsic `{}`: {}",
+                        t.text,
+                        why.split_whitespace()
+                            .collect::<Vec<_>>()
+                            .join(" ")
+                    ),
+                });
+                continue;
+            }
+            if !A2_ALLOWED.contains(&t.text.as_str()) {
+                out.push(Finding {
+                    rule: "A2",
+                    path: f.path.clone(),
+                    line: t.line,
+                    msg: format!(
+                        "intrinsic `{}` is not on the audited \
+                         allowlist — review its rounding behavior \
+                         and add it to A2_ALLOWED (docs/ANALYSIS.md)",
+                        t.text
+                    ),
+                });
+            }
+            if t.text == "_mm256_round_ps" {
+                if let Some(msg) = round_immediate_error(&toks, i) {
+                    out.push(Finding {
+                        rule: "A2",
+                        path: f.path.clone(),
+                        line: t.line,
+                        msg,
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// A3: 15-pair totality cross-reference
+
+const A3_OPTS: [&str; 3] = ["Sgd", "AdamW", "Lion"];
+const A3_VARIANTS: [&str; 5] =
+    ["Reference", "Flash", "WeightSplit", "OptQuant", "NoCompand"];
+
+fn universe() -> Vec<(String, String)> {
+    let mut v = Vec::new();
+    for o in A3_OPTS {
+        for va in A3_VARIANTS {
+            v.push((o.to_string(), va.to_string()));
+        }
+    }
+    v
+}
+
+/// Collect every `(OptKind::X, Variant::Y)`-shaped token window in a
+/// slice, with the line of its first token.
+fn pair_windows(toks: &[Tok]) -> Vec<(String, String, usize)> {
+    let mut found = Vec::new();
+    for i in 0..toks.len().saturating_sub(8) {
+        let w = &toks[i..i + 9];
+        if w[0].is_ident("OptKind")
+            && w[1].is_punct(':')
+            && w[2].is_punct(':')
+            && w[3].kind == TokKind::Ident
+            && w[4].is_punct(',')
+            && w[5].is_ident("Variant")
+            && w[6].is_punct(':')
+            && w[7].is_punct(':')
+            && w[8].kind == TokKind::Ident
+        {
+            found.push((w[3].text.clone(), w[8].text.clone(),
+                        w[0].line));
+        }
+    }
+    found
+}
+
+/// Collect `Kind::X` variant names in a token slice (for the fuzzer's
+/// `ALL_OPTS` / `ALL_VARIANTS` arrays).
+fn enum_refs(toks: &[Tok], kind: &str) -> Vec<String> {
+    let mut found = Vec::new();
+    for i in 0..toks.len().saturating_sub(3) {
+        if toks[i].is_ident(kind)
+            && toks[i + 1].is_punct(':')
+            && toks[i + 2].is_punct(':')
+            && toks[i + 3].kind == TokKind::Ident
+        {
+            found.push(toks[i + 3].text.clone());
+        }
+    }
+    found
+}
+
+/// Tokens of `name`'s initializer: everything between the `=` after
+/// the first `name` token and the closing `;` (type annotations
+/// before the `=` — e.g. `[(OptKind, Variant); 15]` — are skipped, so
+/// their `;` can't truncate the scan).
+fn initializer_of<'t>(toks: &'t [Tok], name: &str)
+                      -> Option<(&'t [Tok], usize)> {
+    let at = toks.iter().position(|t| t.is_ident(name))?;
+    let line = toks[at].line;
+    let mut depth = 0i32;
+    let mut eq = None;
+    for (i, t) in toks.iter().enumerate().skip(at) {
+        match t.kind {
+            TokKind::Punct('[' | '(' | '<') => depth += 1,
+            TokKind::Punct(']' | ')' | '>') => depth -= 1,
+            TokKind::Punct('=') if depth == 0 => {
+                eq = Some(i);
+                break;
+            }
+            _ => {}
+        }
+    }
+    let eq = eq?;
+    let end = toks[eq..]
+        .iter()
+        .position(|t| t.is_punct(';'))
+        .map(|p| eq + p)
+        .unwrap_or(toks.len());
+    Some((&toks[eq..end], line))
+}
+
+/// Body tokens of the item introduced by `kw name` (e.g. `struct
+/// KernelSet`, `fn fused_step`), with the line of the name.
+fn item_body<'t>(toks: &'t [Tok], kw: &str, name: &str)
+                 -> Option<(&'t [Tok], usize)> {
+    for i in 0..toks.len().saturating_sub(1) {
+        if toks[i].is_ident(kw) && toks[i + 1].is_ident(name) {
+            let mut j = i + 2;
+            while j < toks.len() && !toks[j].is_punct('{') {
+                j += 1;
+            }
+            if j == toks.len() {
+                return None;
+            }
+            let k = brace_match(toks, j);
+            return Some((&toks[j..=k], toks[i + 1].line));
+        }
+    }
+    None
+}
+
+/// Compare one source's pair set against the 15-pair universe.
+fn diff_universe(source: &str, f: &SourceFile, anchor_line: usize,
+                 pairs: &[(String, String)], out: &mut Vec<Finding>) {
+    let want = universe();
+    for (o, v) in &want {
+        if !pairs.iter().any(|(po, pv)| po == o && pv == v) {
+            out.push(Finding {
+                rule: "A3",
+                path: f.path.clone(),
+                line: anchor_line,
+                msg: format!(
+                    "{source} is missing the (OptKind::{o}, \
+                     Variant::{v}) pair of the 15-pair universe"
+                ),
+            });
+        }
+    }
+    for (o, v) in pairs {
+        if !want.iter().any(|(wo, wv)| wo == o && wv == v) {
+            out.push(Finding {
+                rule: "A3",
+                path: f.path.clone(),
+                line: anchor_line,
+                msg: format!(
+                    "{source} names (OptKind::{o}, Variant::{v}), \
+                     which is outside the 15-pair universe"
+                ),
+            });
+        }
+    }
+}
+
+fn missing_anchor(rule_src: &str, f: &SourceFile,
+                  out: &mut Vec<Finding>) {
+    out.push(Finding {
+        rule: "A3",
+        path: f.path.clone(),
+        line: 1,
+        msg: format!("could not locate {rule_src} to cross-reference"),
+    });
+}
+
+/// Map a `fused_step_*` KernelSet field name to its (opt, variant).
+fn field_pair(name: &str) -> Option<(String, String)> {
+    let rest = name.strip_prefix("fused_step_")?;
+    let mut it = rest.splitn(2, '_');
+    let opt = match it.next()? {
+        "adamw" => "AdamW",
+        "sgdm" => "Sgd",
+        "lion" => "Lion",
+        _ => return None,
+    };
+    let variant = match it.next() {
+        None => "Flash",
+        Some("nocompand") => "NoCompand",
+        Some("reference") => "Reference",
+        Some("wsplit") => "WeightSplit",
+        Some("quant") => "OptQuant",
+        Some(_) => return None,
+    };
+    Some((opt.to_string(), variant.to_string()))
+}
+
+fn check_pair_totality(c: &Corpus, out: &mut Vec<Finding>) {
+    // 1+2: KernelSet fused fields and the fused_step match arms
+    if let Some(f) = c
+        .files
+        .iter()
+        .find(|f| f.path.ends_with("src/kernels/mod.rs"))
+    {
+        let toks = f.toks();
+        match item_body(&toks, "struct", "KernelSet") {
+            Some((body, line)) => {
+                let mut pairs = Vec::new();
+                for (i, t) in body.iter().enumerate() {
+                    let is_field = t.kind == TokKind::Ident
+                        && t.text.starts_with("fused_step_")
+                        && body
+                            .get(i + 1)
+                            .is_some_and(|n| n.is_punct(':'));
+                    if !is_field {
+                        continue;
+                    }
+                    match field_pair(&t.text) {
+                        Some(p) => pairs.push(p),
+                        None => out.push(Finding {
+                            rule: "A3",
+                            path: f.path.clone(),
+                            line: t.line,
+                            msg: format!(
+                                "KernelSet field `{}` does not map \
+                                 to a known (optimizer, variant) \
+                                 pair",
+                                t.text
+                            ),
+                        }),
+                    }
+                }
+                diff_universe("KernelSet fused fields", f, line,
+                              &pairs, out);
+            }
+            None => missing_anchor("struct KernelSet", f, out),
+        }
+        match item_body(&toks, "fn", "fused_step") {
+            Some((body, line)) => {
+                let pairs: Vec<(String, String)> = pair_windows(body)
+                    .into_iter()
+                    .map(|(o, v, _)| (o, v))
+                    .collect();
+                diff_universe("fused_step match", f, line, &pairs,
+                              out);
+            }
+            None => missing_anchor("fn fused_step", f, out),
+        }
+    }
+
+    // 3: the fuzzer's deterministic round-robin prefix covers
+    // ALL_OPTS × ALL_VARIANTS — so the cross product of those two
+    // arrays must be the universe
+    if let Some(f) = c
+        .files
+        .iter()
+        .find(|f| f.path.ends_with("tests/fused_fuzz.rs"))
+    {
+        let toks = f.toks();
+        let opts = initializer_of(&toks, "ALL_OPTS")
+            .map(|(t, l)| (enum_refs(t, "OptKind"), l));
+        let vars = initializer_of(&toks, "ALL_VARIANTS")
+            .map(|(t, l)| (enum_refs(t, "Variant"), l));
+        match (opts, vars) {
+            (Some((opts, line)), Some((vars, _))) => {
+                let mut pairs = Vec::new();
+                for o in &opts {
+                    for v in &vars {
+                        pairs.push((o.clone(), v.clone()));
+                    }
+                }
+                diff_universe("fused_fuzz ALL_OPTS × ALL_VARIANTS",
+                              f, line, &pairs, out);
+            }
+            _ => missing_anchor("ALL_OPTS / ALL_VARIANTS", f, out),
+        }
+    }
+
+    // 4: the bench's STEP_ROWS table
+    if let Some(f) = c
+        .files
+        .iter()
+        .find(|f| f.path.ends_with("benches/kernel_hotpath.rs"))
+    {
+        let toks = f.toks();
+        match initializer_of(&toks, "STEP_ROWS") {
+            Some((init, line)) => {
+                let pairs: Vec<(String, String)> = pair_windows(init)
+                    .into_iter()
+                    .map(|(o, v, _)| (o, v))
+                    .collect();
+                diff_universe("bench STEP_ROWS", f, line, &pairs,
+                              out);
+            }
+            None => missing_anchor("STEP_ROWS", f, out),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// A4: hot-path panic policy
+
+const A4_SCOPE: [&str; 3] = [
+    "rust/src/kernels/",
+    "rust/src/backend/",
+    "rust/src/formats/",
+];
+
+fn check_panic_policy(c: &Corpus, out: &mut Vec<Finding>) {
+    for f in c.files.iter() {
+        if !A4_SCOPE.iter().any(|p| f.path.starts_with(p)) {
+            continue;
+        }
+        let toks = f.toks();
+        let tests = cfg_test_spans(&toks);
+        for i in 1..toks.len().saturating_sub(1) {
+            let call = (toks[i].is_ident("unwrap")
+                || toks[i].is_ident("expect"))
+                && toks[i - 1].is_punct('.')
+                && toks[i + 1].is_punct('(');
+            if !call
+                || in_spans(&tests, toks[i].line)
+                || suppressed(f, toks[i].line, "panic_policy")
+            {
+                continue;
+            }
+            out.push(Finding {
+                rule: "A4",
+                path: f.path.clone(),
+                line: toks[i].line,
+                msg: format!(
+                    "`.{}()` on the hot path — propagate the error, \
+                     use the layout_mut/layout_ref contract helpers, \
+                     or justify with `// analyze: \
+                     allow(panic_policy) — …`",
+                    toks[i].text
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// A5: dependency allowlist
+
+const A5_ALLOWED: [&str; 2] = ["anyhow", "xla"];
+
+fn strip_brackets(s: &str) -> &str {
+    s.trim_matches(|c| c == '[' || c == ']')
+}
+
+fn dep_section(header: &str) -> bool {
+    let h = strip_brackets(header.trim());
+    h == "dependencies"
+        || h == "workspace.dependencies"
+        || h.ends_with(".dependencies")
+        || h == "dev-dependencies"
+        || h.ends_with(".dev-dependencies")
+        || h == "build-dependencies"
+        || h.ends_with(".build-dependencies")
+}
+
+fn check_dependency_allowlist(c: &Corpus, out: &mut Vec<Finding>) {
+    for f in c.files.iter() {
+        if !f.path.ends_with("Cargo.toml") {
+            continue;
+        }
+        let mut in_deps = false;
+        for (n, raw) in f.text.lines().enumerate() {
+            let line = raw.trim();
+            let lineno = n + 1;
+            if line.starts_with('[') {
+                in_deps = dep_section(line);
+                // `[dependencies.foo]` table-header form names a dep
+                // (its body then holds keys like `version`, not dep
+                // names, so `in_deps` stays false for it)
+                let h = strip_brackets(line);
+                for prefix in ["dependencies.", "dev-dependencies.",
+                               "build-dependencies."] {
+                    if let Some(name) = h.strip_prefix(prefix) {
+                        check_dep_name(f, lineno, name, out);
+                    }
+                }
+                continue;
+            }
+            if !in_deps || line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((name, value)) = line.split_once('=') else {
+                continue;
+            };
+            let name = name.trim().trim_matches('"');
+            check_dep_name(f, lineno, name, out);
+            if A5_ALLOWED.contains(&name) && !value.contains("path")
+            {
+                out.push(Finding {
+                    rule: "A5",
+                    path: f.path.clone(),
+                    line: lineno,
+                    msg: format!(
+                        "dependency `{name}` must be the vendored \
+                         path shim (`path = \"vendor/{name}\"`), \
+                         not a registry version"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn check_dep_name(f: &SourceFile, line: usize, name: &str,
+                  out: &mut Vec<Finding>) {
+    if !A5_ALLOWED.contains(&name) {
+        out.push(Finding {
+            rule: "A5",
+            path: f.path.clone(),
+            line,
+            msg: format!(
+                "dependency `{name}` is outside the offline \
+                 allowlist (vendored anyhow/xla only) — tier-1 must \
+                 build with no network or registry access"
+            ),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_are_unique_and_ordered() {
+        let ids: Vec<&str> = rules().iter().map(|r| r.id).collect();
+        assert_eq!(ids, ["A1", "A2", "A3", "A4", "A5"]);
+    }
+
+    #[test]
+    fn field_pair_mapping() {
+        assert_eq!(field_pair("fused_step_adamw"),
+                   Some(("AdamW".into(), "Flash".into())));
+        assert_eq!(field_pair("fused_step_sgdm_wsplit"),
+                   Some(("Sgd".into(), "WeightSplit".into())));
+        assert_eq!(field_pair("fused_step_lion_quant"),
+                   Some(("Lion".into(), "OptQuant".into())));
+        assert_eq!(field_pair("fused_step_rmsprop"), None);
+        assert_eq!(field_pair("split_compress"), None);
+    }
+
+    #[test]
+    fn universe_is_15() {
+        assert_eq!(universe().len(), 15);
+    }
+
+    #[test]
+    fn suppression_reaches_through_comment_blocks() {
+        let f = SourceFile {
+            path: "rust/src/backend/x.rs".into(),
+            text: "fn f() {\n\
+                   // analyze: allow(panic_policy) — reason\n\
+                   // second comment line\n\
+                   x.expect(\"y\");\n\
+                   }\n"
+                .into(),
+        };
+        assert!(suppressed(&f, 4, "panic_policy"));
+        assert!(!suppressed(&f, 4, "unsafe-hygiene"));
+    }
+}

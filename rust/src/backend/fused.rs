@@ -46,7 +46,7 @@ use std::cell::Cell;
 use crate::backend::partition::Part;
 use crate::config::{OptKind, Variant};
 use crate::formats::GROUP;
-use crate::kernels::{FusedPart, KernelSet};
+use crate::kernels::{layout_mut, layout_ref, FusedPart, KernelSet};
 use crate::optim::hyper::Hyper;
 use crate::optim::scalar_ref;
 
@@ -168,20 +168,16 @@ pub fn step_part(p: &mut Part<'_>, opt: OptKind, variant: Variant,
         // dequant tile (or borrow fp32 storage in place)
         let theta_s: &mut [f32] = if split {
             (ks.split_decompress)(
-                &tp_b.as_deref().expect("split state missing theta_p")
-                    [lo..hi],
-                &rho_b.as_deref().expect("split state missing rho")
-                    [lo..hi],
+                &layout_ref(tp_b.as_deref(), "theta_p")[lo..hi],
+                &layout_ref(rho_b.as_deref(), "rho")[lo..hi],
                 &mut theta_t[..len]);
             &mut theta_t[..len]
         } else {
-            &mut theta_b.as_deref_mut().expect("missing theta")[lo..hi]
+            &mut layout_mut(theta_b.as_deref_mut(), "theta")[lo..hi]
         };
         let m_s: &mut [f32] = if quant {
-            let mq = &mq_b.as_deref().expect("quant state missing mq")
-                [lo..hi];
-            let ms = &ms_b.as_deref().expect("quant state missing ms")
-                [glo..ghi];
+            let mq = &layout_ref(mq_b.as_deref(), "mq")[lo..hi];
+            let ms = &layout_ref(ms_b.as_deref(), "ms")[glo..ghi];
             if nocompand {
                 (ks.dequant_momentum_linear)(mq, ms, &mut m_t[..len]);
             } else {
@@ -189,19 +185,16 @@ pub fn step_part(p: &mut Part<'_>, opt: OptKind, variant: Variant,
             }
             &mut m_t[..len]
         } else {
-            &mut m_b.as_deref_mut().expect("missing momentum")[lo..hi]
+            &mut layout_mut(m_b.as_deref_mut(), "m")[lo..hi]
         };
 
         // update tile: shared scalar rules (the single source of truth)
         match opt {
             OptKind::AdamW => {
                 let v_s: &mut [f32] = if quant {
-                    let vq = &vq_b
-                        .as_deref()
-                        .expect("quant state missing vq")[lo..hi];
-                    let vs = &vs_b
-                        .as_deref()
-                        .expect("quant state missing vs")[glo..ghi];
+                    let vq = &layout_ref(vq_b.as_deref(), "vq")[lo..hi];
+                    let vs =
+                        &layout_ref(vs_b.as_deref(), "vs")[glo..ghi];
                     if nocompand {
                         (ks.dequant_variance_linear)(vq, vs,
                                                      &mut v_t[..len]);
@@ -210,8 +203,7 @@ pub fn step_part(p: &mut Part<'_>, opt: OptKind, variant: Variant,
                     }
                     &mut v_t[..len]
                 } else {
-                    &mut v_b.as_deref_mut().expect("missing variance")
-                        [lo..hi]
+                    &mut layout_mut(v_b.as_deref_mut(), "v")[lo..hi]
                 };
                 scalar_ref::adamw_f32(theta_s, m_s, v_s, g, &s);
             }
@@ -223,13 +215,16 @@ pub fn step_part(p: &mut Part<'_>, opt: OptKind, variant: Variant,
         if split {
             (ks.split_compress)(
                 &theta_t[..len],
-                &mut tp_b.as_deref_mut().unwrap()[lo..hi],
-                &mut rho_b.as_deref_mut().unwrap()[lo..hi]);
+                &mut layout_mut(tp_b.as_deref_mut(), "theta_p")
+                    [lo..hi],
+                &mut layout_mut(rho_b.as_deref_mut(), "rho")[lo..hi]);
         }
         if quant {
             {
-                let mq = &mut mq_b.as_deref_mut().unwrap()[lo..hi];
-                let ms = &mut ms_b.as_deref_mut().unwrap()[glo..ghi];
+                let mq =
+                    &mut layout_mut(mq_b.as_deref_mut(), "mq")[lo..hi];
+                let ms = &mut layout_mut(ms_b.as_deref_mut(), "ms")
+                    [glo..ghi];
                 if nocompand {
                     (ks.quant_momentum_linear)(&m_t[..len], mq, ms);
                 } else {
@@ -237,8 +232,10 @@ pub fn step_part(p: &mut Part<'_>, opt: OptKind, variant: Variant,
                 }
             }
             if var {
-                let vq = &mut vq_b.as_deref_mut().unwrap()[lo..hi];
-                let vs = &mut vs_b.as_deref_mut().unwrap()[glo..ghi];
+                let vq =
+                    &mut layout_mut(vq_b.as_deref_mut(), "vq")[lo..hi];
+                let vs = &mut layout_mut(vs_b.as_deref_mut(), "vs")
+                    [glo..ghi];
                 if nocompand {
                     (ks.quant_variance_linear)(&v_t[..len], vq, vs);
                 } else {

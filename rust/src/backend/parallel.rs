@@ -65,7 +65,11 @@ impl ParallelBackend {
     /// kernels auto-detect.
     pub fn new(threads: usize) -> ParallelBackend {
         Self::with_kernels(threads, KernelKind::Auto)
-            .expect("auto kernel selection always resolves")
+            // analyze: allow(panic_policy) — infallible convenience
+            // ctor: Auto kernels always resolve, and a failed worker
+            // spawn at construction is unrecoverable resource
+            // exhaustion.  Fallible construction is `with_options`.
+            .expect("default parallel backend construction")
     }
 
     /// Like [`new`](Self::new) with an explicit kernel-set selection.
@@ -94,7 +98,7 @@ impl ParallelBackend {
             threads: t,
             kernels: kernel_set(kind)?,
             fused: fused && !crate::backend::fused::force_tiled(),
-            pool: Mutex::new(WorkerPool::new(t - 1)),
+            pool: Mutex::new(WorkerPool::new(t - 1)?),
         })
     }
 

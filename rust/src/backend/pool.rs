@@ -14,8 +14,8 @@ use std::thread::JoinHandle;
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 struct Worker {
-    tx: Option<Sender<Job>>,
-    handle: Option<JoinHandle<()>>,
+    tx: Sender<Job>,
+    handle: JoinHandle<()>,
 }
 
 pub struct WorkerPool {
@@ -24,23 +24,24 @@ pub struct WorkerPool {
 
 impl WorkerPool {
     /// Spawn `n` long-lived worker threads (0 is fine: every
-    /// `run_scoped` then executes only its local closure).
-    pub fn new(n: usize) -> WorkerPool {
-        let workers = (0..n)
-            .map(|i| {
-                let (tx, rx) = channel::<Job>();
-                let handle = std::thread::Builder::new()
-                    .name(format!("flashtrain-step-{i}"))
-                    .spawn(move || {
-                        while let Ok(job) = rx.recv() {
-                            job();
-                        }
-                    })
-                    .expect("spawning pool worker thread");
-                Worker { tx: Some(tx), handle: Some(handle) }
-            })
-            .collect();
-        WorkerPool { workers }
+    /// `run_scoped` then executes only its local closure).  Surfaces
+    /// the OS error if a thread fails to spawn (resource exhaustion);
+    /// threads spawned before the failure exit when their job
+    /// channels drop with the partial pool.
+    pub fn new(n: usize) -> std::io::Result<WorkerPool> {
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = channel::<Job>();
+            let handle = std::thread::Builder::new()
+                .name(format!("flashtrain-step-{i}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                })?;
+            workers.push(Worker { tx, handle });
+        }
+        Ok(WorkerPool { workers })
     }
 
     pub fn workers(&self) -> usize {
@@ -78,8 +79,7 @@ impl WorkerPool {
                 job();
                 let _ = done.send(());
             });
-            let tx = worker.tx.as_ref().expect("pool not shut down");
-            if tx.send(wrapped).is_err() {
+            if worker.tx.send(wrapped).is_err() {
                 // worker died (a previous job panicked); stop
                 // dispatching, drain what did go out, then report
                 send_failed = true;
@@ -113,13 +113,16 @@ impl Drop for WorkerPool {
     fn drop(&mut self) {
         // close every channel first so all workers see disconnect,
         // then join them
-        for w in &mut self.workers {
-            w.tx.take();
-        }
-        for w in &mut self.workers {
-            if let Some(h) = w.handle.take() {
-                let _ = h.join();
-            }
+        let handles: Vec<JoinHandle<()>> = self
+            .workers
+            .drain(..)
+            .map(|w| {
+                drop(w.tx);
+                w.handle
+            })
+            .collect();
+        for h in handles {
+            let _ = h.join();
         }
     }
 }
@@ -131,7 +134,7 @@ mod tests {
 
     #[test]
     fn runs_borrowed_jobs_to_completion() {
-        let pool = WorkerPool::new(3);
+        let pool = WorkerPool::new(3).unwrap();
         let mut data = vec![0u64; 4];
         {
             let (first, rest) = data.split_at_mut(1);
@@ -149,7 +152,7 @@ mod tests {
 
     #[test]
     fn pool_survives_many_rounds() {
-        let pool = WorkerPool::new(2);
+        let pool = WorkerPool::new(2).unwrap();
         let hits = AtomicUsize::new(0);
         for _ in 0..100 {
             let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
@@ -168,7 +171,7 @@ mod tests {
 
     #[test]
     fn zero_worker_pool_runs_local_only() {
-        let pool = WorkerPool::new(0);
+        let pool = WorkerPool::new(0).unwrap();
         let mut x = 0;
         pool.run_scoped(Vec::new(), || x = 7);
         assert_eq!(x, 7);

@@ -27,8 +27,7 @@ pub struct ScalarBackend {
 impl Default for ScalarBackend {
     fn default() -> ScalarBackend {
         ScalarBackend {
-            kernels: kernel_set(KernelKind::Auto)
-                .expect("auto kernel selection always resolves"),
+            kernels: crate::kernels::auto_set(),
             fused: !crate::backend::fused::force_tiled(),
         }
     }

@@ -165,7 +165,13 @@ impl GradBucketStream {
         let mut emitted = 0usize;
         for run in runs {
             let a = run[0].lo;
-            let b = run.last().expect("runs are non-empty").hi();
+            let b = run
+                .last()
+                // analyze: allow(panic_policy) — `runs` never holds an
+                // empty run: every run is created around one span and
+                // only ever pushed to.
+                .expect("runs are non-empty")
+                .hi();
             let al = a.next_multiple_of(GROUP);
             let ah = b / GROUP * GROUP;
             if al >= ah {
@@ -176,7 +182,12 @@ impl GradBucketStream {
             emitted += ah - al;
             if run.len() == 1 && al == a && ah == b {
                 // exact aligned span (the common case): move, no copy
-                let s = run.into_iter().next().expect("len checked");
+                let s = run
+                    .into_iter()
+                    .next()
+                    // analyze: allow(panic_policy) — guarded by the
+                    // `run.len() == 1` test on this branch.
+                    .expect("len checked");
                 out.push(ReadyRange { lo: s.lo, g: s.g });
                 continue;
             }

@@ -1,0 +1,46 @@
+//! `flashoptim-analyze`: CLI front end for the in-tree static-analysis
+//! pass (`flashtrain::analyze`, rule catalog in docs/ANALYSIS.md).
+//!
+//!   cargo run --bin flashoptim-analyze [-- REPO_ROOT]
+//!
+//! Runs every rule over the repo rooted at `REPO_ROOT` (default: the
+//! checkout containing this crate), prints one `[RULE] path:line: msg`
+//! diagnostic per finding, and exits non-zero when anything fires —
+//! the same pass `tests/static_analysis.rs` pins into tier-1.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use flashtrain::analyze;
+
+fn main() -> ExitCode {
+    let root = match std::env::args().nth(1) {
+        Some(p) => PathBuf::from(p),
+        // the crate lives at <repo>/rust, so the default root is the
+        // manifest dir's parent
+        None => PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from(".")),
+    };
+    let findings = match analyze::run_repo(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("flashoptim-analyze: cannot read {}: {e}",
+                      root.display());
+            return ExitCode::from(2);
+        }
+    };
+    let rules = analyze::rules::rules();
+    if findings.is_empty() {
+        println!("flashoptim-analyze: {} rules, 0 findings — clean",
+                 rules.len());
+        return ExitCode::SUCCESS;
+    }
+    for f in &findings {
+        println!("{f}");
+    }
+    println!("flashoptim-analyze: {} finding(s) across {} rules",
+             findings.len(), rules.len());
+    ExitCode::FAILURE
+}

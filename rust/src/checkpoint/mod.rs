@@ -128,6 +128,10 @@ pub struct CheckpointMeta {
 }
 
 fn as_bytes<T: Copy>(v: &[T]) -> &[u8] {
+    // SAFETY: viewing a POD (`Copy`, no-padding numeric) slice as
+    // bytes — `u8` has alignment 1, the length is exactly
+    // `size_of_val(v)`, and the view borrows `v` so it cannot
+    // outlive it.
     unsafe {
         std::slice::from_raw_parts(v.as_ptr() as *const u8,
                                    std::mem::size_of_val(v))
@@ -141,6 +145,10 @@ fn vec_from_bytes<T: Copy + Default>(bytes: &[u8]) -> Result<Vec<T>> {
     }
     let n = bytes.len() / sz;
     let mut out = vec![T::default(); n];
+    // SAFETY: byte-copy into the freshly allocated `out` — the
+    // divisibility check above makes `bytes.len()` exactly
+    // `n * size_of::<T>()`, the destination owns that many bytes,
+    // and the two buffers cannot overlap.
     unsafe {
         std::ptr::copy_nonoverlapping(bytes.as_ptr(),
                                       out.as_mut_ptr() as *mut u8,

@@ -192,7 +192,7 @@ mod tests {
     fn sharded_matches_serial_bit_exactly() {
         // bit-exactness, not tolerance: per-element addition order is
         // identical, so every f32 must come out with the same bits
-        let pool = WorkerPool::new(3);
+        let pool = WorkerPool::new(3).unwrap();
         for k in [1usize, 2, 3, 5] {
             // lengths around GROUP boundaries incl. a non-aligned tail
             for n in [1usize, GROUP - 1, GROUP, 4 * GROUP,
@@ -216,7 +216,7 @@ mod tests {
 
     #[test]
     fn sharded_works_on_zero_worker_pool() {
-        let pool = WorkerPool::new(0);
+        let pool = WorkerPool::new(0).unwrap();
         let w = make_workers(3, 100, 9);
         let mut a = w.clone();
         let mut b = w.clone();

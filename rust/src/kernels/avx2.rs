@@ -29,14 +29,20 @@
 //! reached through [`dispatch`], whose wrappers are handed out by
 //! `kernels::kernel_set` after `is_x86_feature_detected!("avx2")`.
 
-// the safety contract above covers every unsafe fn here
-#![allow(clippy::missing_safety_doc)]
+// The crate-level `deny(unsafe_op_in_unsafe_fn)` wants every unsafe
+// operation in an explicit `unsafe {}` block even inside `unsafe fn`s,
+// so each body below carries one with its SAFETY justification.  On
+// toolchains where same-feature `#[target_feature]` calls are already
+// safe (target_feature_11, Rust >= 1.86) the blocks in the
+// register-only helpers become redundant — allow the leftovers so one
+// source tree serves both sides of that stabilization.
+#![allow(unused_unsafe)]
 
 use std::arch::x86_64::*;
 
 use crate::formats::weight_split::{Correction, Target};
 use crate::formats::{bf16, companding, fp16, weight_split, GROUP};
-use crate::kernels::{FusedPart, FusedRule};
+use crate::kernels::{layout_mut, FusedPart, FusedRule};
 use crate::optim::hyper::StepScalars;
 
 // the group kernels hard-code GROUP = 4 × 8 f32 lanes
@@ -44,110 +50,227 @@ const _: () = assert!(GROUP == 32);
 
 // --- lane helpers --------------------------------------------------------
 
+/// # Safety
+/// Requires AVX2 (every path here starts at [`dispatch`], which runs
+/// after feature detection).  Register/stack values only — no
+/// pointer is formed or dereferenced.
 #[target_feature(enable = "avx2")]
 unsafe fn abs_ps(x: __m256) -> __m256 {
-    _mm256_and_ps(x, _mm256_set1_ps(f32::from_bits(0x7FFF_FFFF)))
+    // SAFETY: AVX2 is available per this fn's contract; everything
+    // below is register arithmetic.
+    unsafe {
+        _mm256_and_ps(x, _mm256_set1_ps(f32::from_bits(0x7FFF_FFFF)))
+    }
 }
 
 /// `round_ties_even`, 8 lanes (static RNE, exceptions suppressed).
+///
+/// # Safety
+/// Requires AVX2 (every path here starts at [`dispatch`], which runs
+/// after feature detection).  Register/stack values only — no
+/// pointer is formed or dereferenced.
 #[target_feature(enable = "avx2")]
 unsafe fn round_ps(x: __m256) -> __m256 {
-    _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(x)
+    // SAFETY: AVX2 is available per this fn's contract; everything
+    // below is register arithmetic.
+    unsafe {
+        _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(x)
+    }
 }
 
 /// `x.clamp(lo, hi)` with scalar `f32::clamp` semantics: NaN lanes stay
 /// NaN (a plain min/max chain would turn NaN into a bound instead).
+///
+/// # Safety
+/// Requires AVX2 (every path here starts at [`dispatch`], which runs
+/// after feature detection).  Register/stack values only — no
+/// pointer is formed or dereferenced.
 #[target_feature(enable = "avx2")]
 unsafe fn clamp_ps(x: __m256, lo: f32, hi: f32) -> __m256 {
-    let l = _mm256_set1_ps(lo);
-    let h = _mm256_set1_ps(hi);
-    let x = _mm256_blendv_ps(x, l, _mm256_cmp_ps::<_CMP_LT_OQ>(x, l));
-    _mm256_blendv_ps(x, h, _mm256_cmp_ps::<_CMP_GT_OQ>(x, h))
+    // SAFETY: AVX2 is available per this fn's contract; everything
+    // below is register arithmetic.
+    unsafe {
+        let l = _mm256_set1_ps(lo);
+        let h = _mm256_set1_ps(hi);
+        let x = _mm256_blendv_ps(x, l, _mm256_cmp_ps::<_CMP_LT_OQ>(x, l));
+        _mm256_blendv_ps(x, h, _mm256_cmp_ps::<_CMP_GT_OQ>(x, h))
+    }
 }
 
 /// Rust `as`-cast semantics for values already clamped into the target
 /// integer range (or NaN): NaN lanes become 0, everything else converts
 /// exactly.
+///
+/// # Safety
+/// Requires AVX2 (every path here starts at [`dispatch`], which runs
+/// after feature detection).  Register/stack values only — no
+/// pointer is formed or dereferenced.
 #[target_feature(enable = "avx2")]
 unsafe fn cvt_clamped_epi32(x: __m256) -> __m256i {
-    let nan = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_UNORD_Q>(x, x));
-    _mm256_andnot_si256(nan, _mm256_cvtps_epi32(x))
+    // SAFETY: AVX2 is available per this fn's contract; everything
+    // below is register arithmetic.
+    unsafe {
+        let nan = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_UNORD_Q>(x, x));
+        _mm256_andnot_si256(nan, _mm256_cvtps_epi32(x))
+    }
 }
 
 /// Exact 2^k per lane; every call site keeps k inside the f32 normal
 /// range (see the exponent algebra in `formats::weight_split`).
+///
+/// # Safety
+/// Requires AVX2 (every path here starts at [`dispatch`], which runs
+/// after feature detection).  Register/stack values only — no
+/// pointer is formed or dereferenced.
 #[target_feature(enable = "avx2")]
 unsafe fn pow2_ps(k: __m256i) -> __m256 {
-    _mm256_castsi256_ps(_mm256_slli_epi32::<23>(
-        _mm256_add_epi32(k, _mm256_set1_epi32(127))))
+    // SAFETY: AVX2 is available per this fn's contract; everything
+    // below is register arithmetic.
+    unsafe {
+        _mm256_castsi256_ps(_mm256_slli_epi32::<23>(
+            _mm256_add_epi32(k, _mm256_set1_epi32(127))))
+    }
 }
 
 /// Horizontal max of 8 non-NaN lanes.
+///
+/// # Safety
+/// Requires AVX2 (every path here starts at [`dispatch`], which runs
+/// after feature detection).  Register/stack values only — no
+/// pointer is formed or dereferenced.
 #[target_feature(enable = "avx2")]
 unsafe fn hmax_ps(v: __m256) -> f32 {
-    let lo = _mm256_castps256_ps128(v);
-    let hi = _mm256_extractf128_ps::<1>(v);
-    let m = _mm_max_ps(lo, hi);
-    let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
-    let m = _mm_max_ss(m, _mm_shuffle_ps::<1>(m, m));
-    _mm_cvtss_f32(m)
+    // SAFETY: AVX2 is available per this fn's contract; everything
+    // below is register arithmetic.
+    unsafe {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let m = _mm_max_ps(lo, hi);
+        let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
+        let m = _mm_max_ss(m, _mm_shuffle_ps::<1>(m, m));
+        _mm_cvtss_f32(m)
+    }
 }
 
+/// # Safety
+/// Requires AVX2; `p` must be valid for reads of 8 consecutive `u16`
+/// (unaligned is fine — only unaligned load/store forms are used).
 #[target_feature(enable = "avx2")]
 unsafe fn load8_u16_epi32(p: *const u16) -> __m256i {
-    _mm256_cvtepu16_epi32(_mm_loadu_si128(p as *const __m128i))
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        _mm256_cvtepu16_epi32(_mm_loadu_si128(p as *const __m128i))
+    }
 }
 
+/// # Safety
+/// Requires AVX2; `p` must be valid for reads of 8 consecutive `i8`
+/// (unaligned is fine — only unaligned load/store forms are used).
 #[target_feature(enable = "avx2")]
 unsafe fn load8_i8_epi32(p: *const i8) -> __m256i {
-    _mm256_cvtepi8_epi32(_mm_loadl_epi64(p as *const __m128i))
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        _mm256_cvtepi8_epi32(_mm_loadl_epi64(p as *const __m128i))
+    }
 }
 
+/// # Safety
+/// Requires AVX2; `p` must be valid for reads of 8 consecutive `u8`
+/// (unaligned is fine — only unaligned load/store forms are used).
 #[target_feature(enable = "avx2")]
 unsafe fn load8_u8_epi32(p: *const u8) -> __m256i {
-    _mm256_cvtepu8_epi32(_mm_loadl_epi64(p as *const __m128i))
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        _mm256_cvtepu8_epi32(_mm_loadl_epi64(p as *const __m128i))
+    }
 }
 
 /// 2 × 8 i32 lanes (u16-range values) → 16 u16, order-preserving.
+///
+/// # Safety
+/// Requires AVX2 (every path here starts at [`dispatch`], which runs
+/// after feature detection).  Register/stack values only — no
+/// pointer is formed or dereferenced.
 #[target_feature(enable = "avx2")]
 unsafe fn pack2_epi32_u16(a: __m256i, b: __m256i) -> __m256i {
-    _mm256_permute4x64_epi64::<0b1101_1000>(_mm256_packus_epi32(a, b))
+    // SAFETY: AVX2 is available per this fn's contract; everything
+    // below is register arithmetic.
+    unsafe {
+        _mm256_permute4x64_epi64::<0b1101_1000>(_mm256_packus_epi32(a, b))
+    }
 }
 
 /// 4 × 8 i32 lanes (i8-range values) → 32 i8, order-preserving.
+///
+/// # Safety
+/// Requires AVX2 (every path here starts at [`dispatch`], which runs
+/// after feature detection).  Register/stack values only — no
+/// pointer is formed or dereferenced.
 #[target_feature(enable = "avx2")]
 unsafe fn pack4_epi32_i8(a: __m256i, b: __m256i, c: __m256i,
                          d: __m256i) -> __m256i {
-    let ab = _mm256_packs_epi32(a, b);
-    let cd = _mm256_packs_epi32(c, d);
-    let r = _mm256_packs_epi16(ab, cd);
-    _mm256_permutevar8x32_epi32(r, _mm256_setr_epi32(0, 4, 1, 5, 2, 6,
-                                                     3, 7))
+    // SAFETY: AVX2 is available per this fn's contract; everything
+    // below is register arithmetic.
+    unsafe {
+        let ab = _mm256_packs_epi32(a, b);
+        let cd = _mm256_packs_epi32(c, d);
+        let r = _mm256_packs_epi16(ab, cd);
+        _mm256_permutevar8x32_epi32(r, _mm256_setr_epi32(0, 4, 1, 5, 2, 6,
+                                                         3, 7))
+    }
 }
 
 /// 4 × 8 i32 lanes (u8-range values) → 32 u8, order-preserving.
+///
+/// # Safety
+/// Requires AVX2 (every path here starts at [`dispatch`], which runs
+/// after feature detection).  Register/stack values only — no
+/// pointer is formed or dereferenced.
 #[target_feature(enable = "avx2")]
 unsafe fn pack4_epi32_u8(a: __m256i, b: __m256i, c: __m256i,
                          d: __m256i) -> __m256i {
-    let ab = _mm256_packs_epi32(a, b);
-    let cd = _mm256_packs_epi32(c, d);
-    let r = _mm256_packus_epi16(ab, cd);
-    _mm256_permutevar8x32_epi32(r, _mm256_setr_epi32(0, 4, 1, 5, 2, 6,
-                                                     3, 7))
+    // SAFETY: AVX2 is available per this fn's contract; everything
+    // below is register arithmetic.
+    unsafe {
+        let ab = _mm256_packs_epi32(a, b);
+        let cd = _mm256_packs_epi32(c, d);
+        let r = _mm256_packus_epi16(ab, cd);
+        _mm256_permutevar8x32_epi32(r, _mm256_setr_epi32(0, 4, 1, 5, 2, 6,
+                                                         3, 7))
+    }
 }
 
 /// Load one GROUP (32 f32) into 4 × 8 resident lanes.
+///
+/// # Safety
+/// Requires AVX2; `p` must be valid for reads of GROUP (32) `f32`
+/// (unaligned is fine — only unaligned load/store forms are used).
 #[target_feature(enable = "avx2")]
 unsafe fn load_group_ps(p: *const f32) -> [__m256; 4] {
-    [_mm256_loadu_ps(p), _mm256_loadu_ps(p.add(8)),
-     _mm256_loadu_ps(p.add(16)), _mm256_loadu_ps(p.add(24))]
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        [_mm256_loadu_ps(p), _mm256_loadu_ps(p.add(8)),
+         _mm256_loadu_ps(p.add(16)), _mm256_loadu_ps(p.add(24))]
+    }
 }
 
 /// Store one resident GROUP back to memory.
+///
+/// # Safety
+/// Requires AVX2; `p` must be valid for writes of GROUP (32) `f32`
+/// (unaligned is fine — only unaligned load/store forms are used).
 #[target_feature(enable = "avx2")]
 unsafe fn store_group_ps(v: &[__m256; 4], p: *mut f32) {
-    for (k, x) in v.iter().enumerate() {
-        _mm256_storeu_ps(p.add(8 * k), *x);
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        for (k, x) in v.iter().enumerate() {
+            _mm256_storeu_ps(p.add(8 * k), *x);
+        }
     }
 }
 
@@ -155,80 +278,136 @@ unsafe fn store_group_ps(v: &[__m256; 4], p: *mut f32) {
 /// GROUP — the exact op sequence of the former memory-walking loop
 /// with the loads elided, so quantizing from registers stores the same
 /// scale bits as quantizing from memory.
+///
+/// # Safety
+/// Requires AVX2 (every path here starts at [`dispatch`], which runs
+/// after feature detection).  Register/stack values only — no
+/// pointer is formed or dereferenced.
 #[target_feature(enable = "avx2")]
 unsafe fn regs_absmax(v: &[__m256; 4]) -> f32 {
-    let mut acc = _mm256_setzero_ps();
-    for x in v {
-        let a = abs_ps(*x);
-        let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(a, acc);
-        acc = _mm256_blendv_ps(acc, a, gt);
+    // SAFETY: AVX2 is available per this fn's contract; everything
+    // below is register arithmetic.
+    unsafe {
+        let mut acc = _mm256_setzero_ps();
+        for x in v {
+            let a = abs_ps(*x);
+            let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(a, acc);
+            acc = _mm256_blendv_ps(acc, a, gt);
+        }
+        hmax_ps(acc)
     }
-    hmax_ps(acc)
 }
 
 // --- bf16 lane codecs ----------------------------------------------------
 
 /// `bf16::f32_to_bf16_bits`, 8 lanes (result in the low 16 bits).
+///
+/// # Safety
+/// Requires AVX2 (every path here starts at [`dispatch`], which runs
+/// after feature detection).  Register/stack values only — no
+/// pointer is formed or dereferenced.
 #[target_feature(enable = "avx2")]
 unsafe fn f32_to_bf16_epi32(x: __m256) -> __m256i {
-    let bits = _mm256_castps_si256(x);
-    let nan = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_UNORD_Q>(x, x));
-    let top = _mm256_srli_epi32::<16>(bits);
-    let rb = _mm256_and_si256(top, _mm256_set1_epi32(1));
-    let rounded = _mm256_srli_epi32::<16>(_mm256_add_epi32(
-        _mm256_add_epi32(bits, _mm256_set1_epi32(0x7FFF)), rb));
-    let qnan = _mm256_or_si256(top, _mm256_set1_epi32(0x40));
-    _mm256_blendv_epi8(rounded, qnan, nan)
+    // SAFETY: AVX2 is available per this fn's contract; everything
+    // below is register arithmetic.
+    unsafe {
+        let bits = _mm256_castps_si256(x);
+        let nan = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_UNORD_Q>(x, x));
+        let top = _mm256_srli_epi32::<16>(bits);
+        let rb = _mm256_and_si256(top, _mm256_set1_epi32(1));
+        let rounded = _mm256_srli_epi32::<16>(_mm256_add_epi32(
+            _mm256_add_epi32(bits, _mm256_set1_epi32(0x7FFF)), rb));
+        let qnan = _mm256_or_si256(top, _mm256_set1_epi32(0x40));
+        _mm256_blendv_epi8(rounded, qnan, nan)
+    }
 }
 
 /// `bf16::bf16_bits_to_f32`, 8 lanes.
+///
+/// # Safety
+/// Requires AVX2 (every path here starts at [`dispatch`], which runs
+/// after feature detection).  Register/stack values only — no
+/// pointer is formed or dereferenced.
 #[target_feature(enable = "avx2")]
 unsafe fn bf16_epi32_to_ps(b: __m256i) -> __m256 {
-    _mm256_castsi256_ps(_mm256_slli_epi32::<16>(b))
+    // SAFETY: AVX2 is available per this fn's contract; everything
+    // below is register arithmetic.
+    unsafe {
+        _mm256_castsi256_ps(_mm256_slli_epi32::<16>(b))
+    }
 }
 
 /// `bf16::ulp_exponent`, 8 lanes of bf16 bits.
+///
+/// # Safety
+/// Requires AVX2 (every path here starts at [`dispatch`], which runs
+/// after feature detection).  Register/stack values only — no
+/// pointer is formed or dereferenced.
 #[target_feature(enable = "avx2")]
 unsafe fn bf16_ulp_exp_epi32(b: __m256i) -> __m256i {
-    let exp = _mm256_and_si256(_mm256_srli_epi32::<7>(b),
-                               _mm256_set1_epi32(0xFF));
-    let norm = _mm256_sub_epi32(exp, _mm256_set1_epi32(134));
-    let pos = _mm256_cmpgt_epi32(exp, _mm256_setzero_si256());
-    _mm256_blendv_epi8(_mm256_set1_epi32(-133), norm, pos)
+    // SAFETY: AVX2 is available per this fn's contract; everything
+    // below is register arithmetic.
+    unsafe {
+        let exp = _mm256_and_si256(_mm256_srli_epi32::<7>(b),
+                                   _mm256_set1_epi32(0xFF));
+        let norm = _mm256_sub_epi32(exp, _mm256_set1_epi32(134));
+        let pos = _mm256_cmpgt_epi32(exp, _mm256_setzero_si256());
+        _mm256_blendv_epi8(_mm256_set1_epi32(-133), norm, pos)
+    }
 }
 
 // --- 16-bit float slice conversions --------------------------------------
 
+/// # Safety
+/// Requires AVX2.  No caller invariant beyond the slice arguments
+/// themselves: lengths are cross-checked by the asserts at entry and
+/// every pointer offset stays inside them.
 #[target_feature(enable = "avx2")]
 pub unsafe fn f32_to_bf16(src: &[f32], dst: &mut [u16]) {
-    assert_eq!(src.len(), dst.len());
-    let n = src.len();
-    let mut i = 0usize;
-    while i + 16 <= n {
-        let a = f32_to_bf16_epi32(_mm256_loadu_ps(src.as_ptr().add(i)));
-        let b =
-            f32_to_bf16_epi32(_mm256_loadu_ps(src.as_ptr().add(i + 8)));
-        _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i,
-                            pack2_epi32_u16(a, b));
-        i += 16;
-    }
-    for j in i..n {
-        dst[j] = bf16::f32_to_bf16_bits(src[j]);
+    // SAFETY: AVX2 per contract; pointer offsets stay in bounds of
+    // the slice arguments (lengths cross-checked by the asserts at
+    // entry; the vector loop stops a whole block before the end and
+    // the tail uses checked indexing).
+    unsafe {
+        assert_eq!(src.len(), dst.len());
+        let n = src.len();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let a = f32_to_bf16_epi32(_mm256_loadu_ps(src.as_ptr().add(i)));
+            let b =
+                f32_to_bf16_epi32(_mm256_loadu_ps(src.as_ptr().add(i + 8)));
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i,
+                                pack2_epi32_u16(a, b));
+            i += 16;
+        }
+        for j in i..n {
+            dst[j] = bf16::f32_to_bf16_bits(src[j]);
+        }
     }
 }
 
+/// # Safety
+/// Requires AVX2.  No caller invariant beyond the slice arguments
+/// themselves: lengths are cross-checked by the asserts at entry and
+/// every pointer offset stays inside them.
 #[target_feature(enable = "avx2")]
 pub unsafe fn bf16_to_f32(src: &[u16], dst: &mut [f32]) {
-    assert_eq!(src.len(), dst.len());
-    let n = src.len();
-    let mut i = 0usize;
-    while i + 8 <= n {
-        let b = load8_u16_epi32(src.as_ptr().add(i));
-        _mm256_storeu_ps(dst.as_mut_ptr().add(i), bf16_epi32_to_ps(b));
-        i += 8;
-    }
-    for j in i..n {
-        dst[j] = bf16::bf16_bits_to_f32(src[j]);
+    // SAFETY: AVX2 per contract; pointer offsets stay in bounds of
+    // the slice arguments (lengths cross-checked by the asserts at
+    // entry; the vector loop stops a whole block before the end and
+    // the tail uses checked indexing).
+    unsafe {
+        assert_eq!(src.len(), dst.len());
+        let n = src.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let b = load8_u16_epi32(src.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), bf16_epi32_to_ps(b));
+            i += 8;
+        }
+        for j in i..n {
+            dst[j] = bf16::bf16_bits_to_f32(src[j]);
+        }
     }
 }
 
@@ -237,76 +416,95 @@ pub unsafe fn bf16_to_f32(src: &[u16], dst: &mut [f32]) {
 /// mantissa and overflows to inf exactly like the scalar branch);
 /// subnormals use variable-shift RNE; NaNs quiet to `sign | 0x7E00`
 /// like the scalar converter.
+///
+/// # Safety
+/// Requires AVX2 (every path here starts at [`dispatch`], which runs
+/// after feature detection).  Register/stack values only — no
+/// pointer is formed or dereferenced.
 #[target_feature(enable = "avx2")]
 unsafe fn f32_to_f16_epi32(x: __m256) -> __m256i {
-    let bits = _mm256_castps_si256(x);
-    let sign = _mm256_and_si256(_mm256_srli_epi32::<16>(bits),
-                                _mm256_set1_epi32(0x8000));
-    let exp = _mm256_and_si256(_mm256_srli_epi32::<23>(bits),
-                               _mm256_set1_epi32(0xFF));
-    let man = _mm256_and_si256(bits, _mm256_set1_epi32(0x007F_FFFF));
-    let e = _mm256_sub_epi32(exp, _mm256_set1_epi32(127));
+    // SAFETY: AVX2 is available per this fn's contract; everything
+    // below is register arithmetic.
+    unsafe {
+        let bits = _mm256_castps_si256(x);
+        let sign = _mm256_and_si256(_mm256_srli_epi32::<16>(bits),
+                                    _mm256_set1_epi32(0x8000));
+        let exp = _mm256_and_si256(_mm256_srli_epi32::<23>(bits),
+                                   _mm256_set1_epi32(0xFF));
+        let man = _mm256_and_si256(bits, _mm256_set1_epi32(0x007F_FFFF));
+        let e = _mm256_sub_epi32(exp, _mm256_set1_epi32(127));
 
-    // exp == 0xFF: inf -> 0x7C00, NaN -> quiet 0x7E00
-    let man0 = _mm256_cmpeq_epi32(man, _mm256_setzero_si256());
-    let naninf_res = _mm256_or_si256(
-        sign,
-        _mm256_blendv_epi8(_mm256_set1_epi32(0x7E00),
-                           _mm256_set1_epi32(0x7C00), man0));
+        // exp == 0xFF: inf -> 0x7C00, NaN -> quiet 0x7E00
+        let man0 = _mm256_cmpeq_epi32(man, _mm256_setzero_si256());
+        let naninf_res = _mm256_or_si256(
+            sign,
+            _mm256_blendv_epi8(_mm256_set1_epi32(0x7E00),
+                               _mm256_set1_epi32(0x7C00), man0));
 
-    // -14 <= e <= 15: normal range
-    let a = _mm256_or_si256(
-        _mm256_slli_epi32::<23>(_mm256_add_epi32(e,
-                                                 _mm256_set1_epi32(15))),
-        man);
-    let lsb = _mm256_and_si256(_mm256_srli_epi32::<13>(a),
-                               _mm256_set1_epi32(1));
-    let norm = _mm256_srli_epi32::<13>(_mm256_add_epi32(
-        _mm256_add_epi32(a, _mm256_set1_epi32(0xFFF)), lsb));
-    let norm_res = _mm256_or_si256(sign, norm);
+        // -14 <= e <= 15: normal range
+        let a = _mm256_or_si256(
+            _mm256_slli_epi32::<23>(_mm256_add_epi32(e,
+                                                     _mm256_set1_epi32(15))),
+            man);
+        let lsb = _mm256_and_si256(_mm256_srli_epi32::<13>(a),
+                                   _mm256_set1_epi32(1));
+        let norm = _mm256_srli_epi32::<13>(_mm256_add_epi32(
+            _mm256_add_epi32(a, _mm256_set1_epi32(0xFFF)), lsb));
+        let norm_res = _mm256_or_si256(sign, norm);
 
-    // -25 <= e <= -15: f16 subnormal, shift = 13 + (-14 - e) = -1 - e
-    let mant = _mm256_or_si256(man, _mm256_set1_epi32(0x0080_0000));
-    let shift = _mm256_sub_epi32(_mm256_set1_epi32(-1), e);
-    let half_m1 = _mm256_sub_epi32(
-        _mm256_sllv_epi32(_mm256_set1_epi32(1),
-                          _mm256_sub_epi32(shift,
-                                           _mm256_set1_epi32(1))),
-        _mm256_set1_epi32(1));
-    let lsb_s = _mm256_and_si256(_mm256_srlv_epi32(mant, shift),
-                                 _mm256_set1_epi32(1));
-    let sub = _mm256_srlv_epi32(
-        _mm256_add_epi32(_mm256_add_epi32(mant, half_m1), lsb_s), shift);
-    let sub_res = _mm256_or_si256(sign, sub);
+        // -25 <= e <= -15: f16 subnormal, shift = 13 + (-14 - e) = -1 - e
+        let mant = _mm256_or_si256(man, _mm256_set1_epi32(0x0080_0000));
+        let shift = _mm256_sub_epi32(_mm256_set1_epi32(-1), e);
+        let half_m1 = _mm256_sub_epi32(
+            _mm256_sllv_epi32(_mm256_set1_epi32(1),
+                              _mm256_sub_epi32(shift,
+                                               _mm256_set1_epi32(1))),
+            _mm256_set1_epi32(1));
+        let lsb_s = _mm256_and_si256(_mm256_srlv_epi32(mant, shift),
+                                     _mm256_set1_epi32(1));
+        let sub = _mm256_srlv_epi32(
+            _mm256_add_epi32(_mm256_add_epi32(mant, half_m1), lsb_s), shift);
+        let sub_res = _mm256_or_si256(sign, sub);
 
-    // select, least- to most-specific (later blends win)
-    let is_naninf = _mm256_cmpeq_epi32(exp, _mm256_set1_epi32(0xFF));
-    let is_over = _mm256_cmpgt_epi32(e, _mm256_set1_epi32(15));
-    let is_norm = _mm256_cmpgt_epi32(e, _mm256_set1_epi32(-15));
-    let is_sub = _mm256_cmpgt_epi32(e, _mm256_set1_epi32(-26));
-    let mut out = sign; // e < -25 rounds to signed zero
-    out = _mm256_blendv_epi8(out, sub_res, is_sub);
-    out = _mm256_blendv_epi8(out, norm_res, is_norm);
-    out = _mm256_blendv_epi8(
-        out, _mm256_or_si256(sign, _mm256_set1_epi32(0x7C00)), is_over);
-    _mm256_blendv_epi8(out, naninf_res, is_naninf)
+        // select, least- to most-specific (later blends win)
+        let is_naninf = _mm256_cmpeq_epi32(exp, _mm256_set1_epi32(0xFF));
+        let is_over = _mm256_cmpgt_epi32(e, _mm256_set1_epi32(15));
+        let is_norm = _mm256_cmpgt_epi32(e, _mm256_set1_epi32(-15));
+        let is_sub = _mm256_cmpgt_epi32(e, _mm256_set1_epi32(-26));
+        let mut out = sign; // e < -25 rounds to signed zero
+        out = _mm256_blendv_epi8(out, sub_res, is_sub);
+        out = _mm256_blendv_epi8(out, norm_res, is_norm);
+        out = _mm256_blendv_epi8(
+            out, _mm256_or_si256(sign, _mm256_set1_epi32(0x7C00)), is_over);
+        _mm256_blendv_epi8(out, naninf_res, is_naninf)
+    }
 }
 
+/// # Safety
+/// Requires AVX2.  No caller invariant beyond the slice arguments
+/// themselves: lengths are cross-checked by the asserts at entry and
+/// every pointer offset stays inside them.
 #[target_feature(enable = "avx2")]
 pub unsafe fn f32_to_f16(src: &[f32], dst: &mut [u16]) {
-    assert_eq!(src.len(), dst.len());
-    let n = src.len();
-    let mut i = 0usize;
-    while i + 16 <= n {
-        let a = f32_to_f16_epi32(_mm256_loadu_ps(src.as_ptr().add(i)));
-        let b =
-            f32_to_f16_epi32(_mm256_loadu_ps(src.as_ptr().add(i + 8)));
-        _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i,
-                            pack2_epi32_u16(a, b));
-        i += 16;
-    }
-    for j in i..n {
-        dst[j] = fp16::f32_to_f16_bits(src[j]);
+    // SAFETY: AVX2 per contract; pointer offsets stay in bounds of
+    // the slice arguments (lengths cross-checked by the asserts at
+    // entry; the vector loop stops a whole block before the end and
+    // the tail uses checked indexing).
+    unsafe {
+        assert_eq!(src.len(), dst.len());
+        let n = src.len();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let a = f32_to_f16_epi32(_mm256_loadu_ps(src.as_ptr().add(i)));
+            let b =
+                f32_to_f16_epi32(_mm256_loadu_ps(src.as_ptr().add(i + 8)));
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i,
+                                pack2_epi32_u16(a, b));
+            i += 16;
+        }
+        for j in i..n {
+            dst[j] = fp16::f32_to_f16_bits(src[j]);
+        }
     }
 }
 
@@ -314,42 +512,53 @@ pub unsafe fn f32_to_f16(src: &[f32], dst: &mut [u16]) {
 /// reconstructed as `man * 2^-24` (exact: the product is a normal f32),
 /// which matches the scalar normalization loop bit for bit; inf/NaN
 /// keep their payload un-quieted exactly like the scalar converter.
+///
+/// # Safety
+/// Requires AVX2.  No caller invariant beyond the slice arguments
+/// themselves: lengths are cross-checked by the asserts at entry and
+/// every pointer offset stays inside them.
 #[target_feature(enable = "avx2")]
 pub unsafe fn f16_to_f32(src: &[u16], dst: &mut [f32]) {
-    assert_eq!(src.len(), dst.len());
-    let n = src.len();
-    let mut i = 0usize;
-    while i + 8 <= n {
-        let h = load8_u16_epi32(src.as_ptr().add(i));
-        let sign = _mm256_slli_epi32::<16>(
-            _mm256_and_si256(h, _mm256_set1_epi32(0x8000)));
-        let exp = _mm256_and_si256(_mm256_srli_epi32::<10>(h),
-                                   _mm256_set1_epi32(0x1F));
-        let man = _mm256_and_si256(h, _mm256_set1_epi32(0x3FF));
-        let man13 = _mm256_slli_epi32::<13>(man);
-        let normal = _mm256_or_si256(
-            sign,
-            _mm256_or_si256(
-                _mm256_slli_epi32::<23>(_mm256_add_epi32(
-                    exp, _mm256_set1_epi32(112))),
-                man13));
-        let infnan = _mm256_or_si256(
-            sign,
-            _mm256_or_si256(_mm256_set1_epi32(0x7F80_0000), man13));
-        let subf = _mm256_mul_ps(
-            _mm256_cvtepi32_ps(man),
-            _mm256_set1_ps(f32::from_bits(0x3380_0000))); // 2^-24
-        let subz = _mm256_or_si256(sign, _mm256_castps_si256(subf));
-        let is0 = _mm256_cmpeq_epi32(exp, _mm256_setzero_si256());
-        let is31 = _mm256_cmpeq_epi32(exp, _mm256_set1_epi32(31));
-        let mut out = _mm256_blendv_epi8(normal, infnan, is31);
-        out = _mm256_blendv_epi8(out, subz, is0);
-        _mm256_storeu_ps(dst.as_mut_ptr().add(i),
-                         _mm256_castsi256_ps(out));
-        i += 8;
-    }
-    for j in i..n {
-        dst[j] = fp16::f16_bits_to_f32(src[j]);
+    // SAFETY: AVX2 per contract; pointer offsets stay in bounds of
+    // the slice arguments (lengths cross-checked by the asserts at
+    // entry; the vector loop stops a whole block before the end and
+    // the tail uses checked indexing).
+    unsafe {
+        assert_eq!(src.len(), dst.len());
+        let n = src.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let h = load8_u16_epi32(src.as_ptr().add(i));
+            let sign = _mm256_slli_epi32::<16>(
+                _mm256_and_si256(h, _mm256_set1_epi32(0x8000)));
+            let exp = _mm256_and_si256(_mm256_srli_epi32::<10>(h),
+                                       _mm256_set1_epi32(0x1F));
+            let man = _mm256_and_si256(h, _mm256_set1_epi32(0x3FF));
+            let man13 = _mm256_slli_epi32::<13>(man);
+            let normal = _mm256_or_si256(
+                sign,
+                _mm256_or_si256(
+                    _mm256_slli_epi32::<23>(_mm256_add_epi32(
+                        exp, _mm256_set1_epi32(112))),
+                    man13));
+            let infnan = _mm256_or_si256(
+                sign,
+                _mm256_or_si256(_mm256_set1_epi32(0x7F80_0000), man13));
+            let subf = _mm256_mul_ps(
+                _mm256_cvtepi32_ps(man),
+                _mm256_set1_ps(f32::from_bits(0x3380_0000))); // 2^-24
+            let subz = _mm256_or_si256(sign, _mm256_castps_si256(subf));
+            let is0 = _mm256_cmpeq_epi32(exp, _mm256_setzero_si256());
+            let is31 = _mm256_cmpeq_epi32(exp, _mm256_set1_epi32(31));
+            let mut out = _mm256_blendv_epi8(normal, infnan, is31);
+            out = _mm256_blendv_epi8(out, subz, is0);
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i),
+                             _mm256_castsi256_ps(out));
+            i += 8;
+        }
+        for j in i..n {
+            dst[j] = fp16::f16_bits_to_f32(src[j]);
+        }
     }
 }
 
@@ -357,105 +566,152 @@ pub unsafe fn f16_to_f32(src: &[u16], dst: &mut [f32]) {
 
 /// Split one resident GROUP of master weights into bf16 + int8 stores
 /// (the `split_compress` main-loop body, input from registers).
+///
+/// # Safety
+/// Requires AVX2; `theta_p` must be valid for writes of 32 `u16` and `rho` for
+/// writes of 32 `i8`
+/// (unaligned is fine — only unaligned load/store forms are used).
 #[target_feature(enable = "avx2")]
 unsafe fn split_compress_group(x: &[__m256; 4], theta_p: *mut u16,
                                rho: *mut i8) {
-    let mut bv = [_mm256_setzero_si256(); 4];
-    let mut rv = [_mm256_setzero_si256(); 4];
-    for (k, (b_out, r_out)) in
-        bv.iter_mut().zip(rv.iter_mut()).enumerate()
-    {
-        let x = x[k];
-        let b = f32_to_bf16_epi32(x);
-        let tp = bf16_epi32_to_ps(b);
-        let ell = _mm256_sub_epi32(bf16_ulp_exp_epi32(b),
-                                   _mm256_set1_epi32(1));
-        let neg_ell = _mm256_sub_epi32(_mm256_setzero_si256(), ell);
-        // (-ell).div_euclid(2) == arithmetic shift right by 1
-        let h = _mm256_srai_epi32::<1>(neg_ell);
-        let e = _mm256_sub_ps(x, tp);
-        let en = _mm256_mul_ps(
-            _mm256_mul_ps(e, pow2_ps(h)),
-            pow2_ps(_mm256_sub_epi32(neg_ell, h)));
-        let en = clamp_ps(en, -1.0, 1.0);
-        let rf = round_ps(_mm256_mul_ps(en, _mm256_set1_ps(127.0)));
-        *b_out = b;
-        *r_out = cvt_clamped_epi32(rf);
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        let mut bv = [_mm256_setzero_si256(); 4];
+        let mut rv = [_mm256_setzero_si256(); 4];
+        for (k, (b_out, r_out)) in
+            bv.iter_mut().zip(rv.iter_mut()).enumerate()
+        {
+            let x = x[k];
+            let b = f32_to_bf16_epi32(x);
+            let tp = bf16_epi32_to_ps(b);
+            let ell = _mm256_sub_epi32(bf16_ulp_exp_epi32(b),
+                                       _mm256_set1_epi32(1));
+            let neg_ell = _mm256_sub_epi32(_mm256_setzero_si256(), ell);
+            // (-ell).div_euclid(2) == arithmetic shift right by 1
+            let h = _mm256_srai_epi32::<1>(neg_ell);
+            let e = _mm256_sub_ps(x, tp);
+            let en = _mm256_mul_ps(
+                _mm256_mul_ps(e, pow2_ps(h)),
+                pow2_ps(_mm256_sub_epi32(neg_ell, h)));
+            let en = clamp_ps(en, -1.0, 1.0);
+            let rf = round_ps(_mm256_mul_ps(en, _mm256_set1_ps(127.0)));
+            *b_out = b;
+            *r_out = cvt_clamped_epi32(rf);
+        }
+        _mm256_storeu_si256(theta_p as *mut __m256i,
+                            pack2_epi32_u16(bv[0], bv[1]));
+        _mm256_storeu_si256(theta_p.add(16) as *mut __m256i,
+                            pack2_epi32_u16(bv[2], bv[3]));
+        _mm256_storeu_si256(rho as *mut __m256i,
+                            pack4_epi32_i8(rv[0], rv[1], rv[2], rv[3]));
     }
-    _mm256_storeu_si256(theta_p as *mut __m256i,
-                        pack2_epi32_u16(bv[0], bv[1]));
-    _mm256_storeu_si256(theta_p.add(16) as *mut __m256i,
-                        pack2_epi32_u16(bv[2], bv[3]));
-    _mm256_storeu_si256(rho as *mut __m256i,
-                        pack4_epi32_i8(rv[0], rv[1], rv[2], rv[3]));
 }
 
 /// Reconstruct 8 master weights from their bf16 + int8 split.
+///
+/// # Safety
+/// Requires AVX2; `theta_p` must be valid for reads of 8 `u16` and `rho` for
+/// reads of 8 `i8`
+/// (unaligned is fine — only unaligned load/store forms are used).
 #[target_feature(enable = "avx2")]
 unsafe fn split_decompress8(theta_p: *const u16, rho: *const i8)
                             -> __m256 {
-    let b = load8_u16_epi32(theta_p);
-    let tp = bf16_epi32_to_ps(b);
-    let ell = _mm256_sub_epi32(bf16_ulp_exp_epi32(b),
-                               _mm256_set1_epi32(1));
-    // ell.div_euclid(2) == arithmetic shift right by 1
-    let h = _mm256_srai_epi32::<1>(ell);
-    let ri = load8_i8_epi32(rho);
-    let rf = _mm256_div_ps(_mm256_cvtepi32_ps(ri),
-                           _mm256_set1_ps(127.0));
-    let e = _mm256_mul_ps(
-        _mm256_mul_ps(rf, pow2_ps(h)),
-        pow2_ps(_mm256_sub_epi32(ell, h)));
-    _mm256_add_ps(tp, e)
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        let b = load8_u16_epi32(theta_p);
+        let tp = bf16_epi32_to_ps(b);
+        let ell = _mm256_sub_epi32(bf16_ulp_exp_epi32(b),
+                                   _mm256_set1_epi32(1));
+        // ell.div_euclid(2) == arithmetic shift right by 1
+        let h = _mm256_srai_epi32::<1>(ell);
+        let ri = load8_i8_epi32(rho);
+        let rf = _mm256_div_ps(_mm256_cvtepi32_ps(ri),
+                               _mm256_set1_ps(127.0));
+        let e = _mm256_mul_ps(
+            _mm256_mul_ps(rf, pow2_ps(h)),
+            pow2_ps(_mm256_sub_epi32(ell, h)));
+        _mm256_add_ps(tp, e)
+    }
 }
 
 /// Reconstruct one GROUP of master weights into registers.
+///
+/// # Safety
+/// Requires AVX2; `theta_p` must be valid for reads of 32 `u16` and `rho` for
+/// reads of 32 `i8`
+/// (unaligned is fine — only unaligned load/store forms are used).
 #[target_feature(enable = "avx2")]
 unsafe fn split_decompress_group(theta_p: *const u16, rho: *const i8)
                                  -> [__m256; 4] {
-    [split_decompress8(theta_p, rho),
-     split_decompress8(theta_p.add(8), rho.add(8)),
-     split_decompress8(theta_p.add(16), rho.add(16)),
-     split_decompress8(theta_p.add(24), rho.add(24))]
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        [split_decompress8(theta_p, rho),
+         split_decompress8(theta_p.add(8), rho.add(8)),
+         split_decompress8(theta_p.add(16), rho.add(16)),
+         split_decompress8(theta_p.add(24), rho.add(24))]
+    }
 }
 
+/// # Safety
+/// Requires AVX2.  No caller invariant beyond the slice arguments
+/// themselves: lengths are cross-checked by the asserts at entry and
+/// every pointer offset stays inside them.
 #[target_feature(enable = "avx2")]
 pub unsafe fn split_compress(theta: &[f32], theta_p: &mut [u16],
                              rho: &mut [i8]) {
-    assert_eq!(theta.len(), theta_p.len());
-    assert_eq!(theta.len(), rho.len());
-    let n = theta.len();
-    let mut i = 0usize;
-    while i + 32 <= n {
-        let x = load_group_ps(theta.as_ptr().add(i));
-        split_compress_group(&x, theta_p.as_mut_ptr().add(i),
-                             rho.as_mut_ptr().add(i));
-        i += 32;
-    }
-    for j in i..n {
-        let (b, r) = weight_split::compress(theta[j], Correction::Int8,
-                                            Target::Bf16);
-        theta_p[j] = b;
-        rho[j] = r as i8;
+    // SAFETY: AVX2 per contract; pointer offsets stay in bounds of
+    // the slice arguments (lengths cross-checked by the asserts at
+    // entry; the vector loop stops a whole block before the end and
+    // the tail uses checked indexing).
+    unsafe {
+        assert_eq!(theta.len(), theta_p.len());
+        assert_eq!(theta.len(), rho.len());
+        let n = theta.len();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let x = load_group_ps(theta.as_ptr().add(i));
+            split_compress_group(&x, theta_p.as_mut_ptr().add(i),
+                                 rho.as_mut_ptr().add(i));
+            i += 32;
+        }
+        for j in i..n {
+            let (b, r) = weight_split::compress(theta[j], Correction::Int8,
+                                                Target::Bf16);
+            theta_p[j] = b;
+            rho[j] = r as i8;
+        }
     }
 }
 
+/// # Safety
+/// Requires AVX2.  No caller invariant beyond the slice arguments
+/// themselves: lengths are cross-checked by the asserts at entry and
+/// every pointer offset stays inside them.
 #[target_feature(enable = "avx2")]
 pub unsafe fn split_decompress(theta_p: &[u16], rho: &[i8],
                                out: &mut [f32]) {
-    assert_eq!(theta_p.len(), rho.len());
-    assert_eq!(theta_p.len(), out.len());
-    let n = out.len();
-    let mut i = 0usize;
-    while i + 8 <= n {
-        let w = split_decompress8(theta_p.as_ptr().add(i),
-                                  rho.as_ptr().add(i));
-        _mm256_storeu_ps(out.as_mut_ptr().add(i), w);
-        i += 8;
-    }
-    for j in i..n {
-        out[j] = weight_split::decompress(theta_p[j], rho[j] as i32,
-                                          Correction::Int8, Target::Bf16);
+    // SAFETY: AVX2 per contract; pointer offsets stay in bounds of
+    // the slice arguments (lengths cross-checked by the asserts at
+    // entry; the vector loop stops a whole block before the end and
+    // the tail uses checked indexing).
+    unsafe {
+        assert_eq!(theta_p.len(), rho.len());
+        assert_eq!(theta_p.len(), out.len());
+        let n = out.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let w = split_decompress8(theta_p.as_ptr().add(i),
+                                      rho.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), w);
+            i += 8;
+        }
+        for j in i..n {
+            out[j] = weight_split::decompress(theta_p[j], rho[j] as i32,
+                                              Correction::Int8, Target::Bf16);
+        }
     }
 }
 
@@ -468,259 +724,403 @@ pub unsafe fn split_decompress(theta_p: &[u16], rho: &[i8],
 // identical bits either way.
 
 /// Dequant one companded momentum group into registers.
+///
+/// # Safety
+/// Requires AVX2; `q` must be valid for reads of GROUP (32) `i8`
+/// (unaligned is fine — only unaligned load/store forms are used).
 #[target_feature(enable = "avx2")]
 unsafe fn dequant_m_group(q: *const i8, scale_bits: u16) -> [__m256; 4] {
-    let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scale_bits));
-    let mut out = [_mm256_setzero_ps(); 4];
-    for (k, o) in out.iter_mut().enumerate() {
-        let zi = load8_i8_epi32(q.add(8 * k));
-        let z = _mm256_div_ps(_mm256_cvtepi32_ps(zi),
-                              _mm256_set1_ps(127.0));
-        // phi_m_inv(z) = z / (2 - |z|)
-        let inv = _mm256_div_ps(
-            z, _mm256_sub_ps(_mm256_set1_ps(2.0), abs_ps(z)));
-        *o = _mm256_mul_ps(inv, s);
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scale_bits));
+        let mut out = [_mm256_setzero_ps(); 4];
+        for (k, o) in out.iter_mut().enumerate() {
+            let zi = load8_i8_epi32(q.add(8 * k));
+            let z = _mm256_div_ps(_mm256_cvtepi32_ps(zi),
+                                  _mm256_set1_ps(127.0));
+            // phi_m_inv(z) = z / (2 - |z|)
+            let inv = _mm256_div_ps(
+                z, _mm256_sub_ps(_mm256_set1_ps(2.0), abs_ps(z)));
+            *o = _mm256_mul_ps(inv, s);
+        }
+        out
     }
-    out
 }
 
 /// Quantize one resident momentum group; returns the f16 scale bits.
+///
+/// # Safety
+/// Requires AVX2; `q` must be valid for writes of GROUP (32) `i8`
+/// (unaligned is fine — only unaligned load/store forms are used).
 #[target_feature(enable = "avx2")]
 unsafe fn quant_m_group(m: &[__m256; 4], q: *mut i8) -> u16 {
-    let (s16, safe) = companding::scale_pair(regs_absmax(m));
-    let safe_v = _mm256_set1_ps(safe);
-    let mut rv = [_mm256_setzero_si256(); 4];
-    for (k, r_out) in rv.iter_mut().enumerate() {
-        let xs = _mm256_div_ps(m[k], safe_v);
-        // phi_m(xs) = (2 * xs) / (1 + |xs|)
-        let z = _mm256_div_ps(
-            _mm256_mul_ps(_mm256_set1_ps(2.0), xs),
-            _mm256_add_ps(_mm256_set1_ps(1.0), abs_ps(xs)));
-        let rf = clamp_ps(
-            round_ps(_mm256_mul_ps(z, _mm256_set1_ps(127.0))),
-            -127.0, 127.0);
-        *r_out = cvt_clamped_epi32(rf);
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        let (s16, safe) = companding::scale_pair(regs_absmax(m));
+        let safe_v = _mm256_set1_ps(safe);
+        let mut rv = [_mm256_setzero_si256(); 4];
+        for (k, r_out) in rv.iter_mut().enumerate() {
+            let xs = _mm256_div_ps(m[k], safe_v);
+            // phi_m(xs) = (2 * xs) / (1 + |xs|)
+            let z = _mm256_div_ps(
+                _mm256_mul_ps(_mm256_set1_ps(2.0), xs),
+                _mm256_add_ps(_mm256_set1_ps(1.0), abs_ps(xs)));
+            let rf = clamp_ps(
+                round_ps(_mm256_mul_ps(z, _mm256_set1_ps(127.0))),
+                -127.0, 127.0);
+            *r_out = cvt_clamped_epi32(rf);
+        }
+        _mm256_storeu_si256(q as *mut __m256i,
+                            pack4_epi32_i8(rv[0], rv[1], rv[2], rv[3]));
+        s16
     }
-    _mm256_storeu_si256(q as *mut __m256i,
-                        pack4_epi32_i8(rv[0], rv[1], rv[2], rv[3]));
-    s16
 }
 
 /// Dequant one companded variance group into registers.
+///
+/// # Safety
+/// Requires AVX2; `q` must be valid for reads of GROUP (32) `u8`
+/// (unaligned is fine — only unaligned load/store forms are used).
 #[target_feature(enable = "avx2")]
 unsafe fn dequant_v_group(q: *const u8, scale_bits: u16) -> [__m256; 4] {
-    let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scale_bits));
-    let mut out = [_mm256_setzero_ps(); 4];
-    for (k, o) in out.iter_mut().enumerate() {
-        let zi = load8_u8_epi32(q.add(8 * k));
-        let vp = _mm256_mul_ps(
-            _mm256_div_ps(_mm256_cvtepi32_ps(zi),
-                          _mm256_set1_ps(255.0)),
-            s);
-        *o = _mm256_mul_ps(vp, vp);
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scale_bits));
+        let mut out = [_mm256_setzero_ps(); 4];
+        for (k, o) in out.iter_mut().enumerate() {
+            let zi = load8_u8_epi32(q.add(8 * k));
+            let vp = _mm256_mul_ps(
+                _mm256_div_ps(_mm256_cvtepi32_ps(zi),
+                              _mm256_set1_ps(255.0)),
+                s);
+            *o = _mm256_mul_ps(vp, vp);
+        }
+        out
     }
-    out
 }
 
 /// Quantize one resident variance group (sqrt domain, NaN-skipping
 /// absmax like the scalar `group_absmax`); returns the f16 scale bits.
+///
+/// # Safety
+/// Requires AVX2; `q` must be valid for writes of GROUP (32) `u8`
+/// (unaligned is fine — only unaligned load/store forms are used).
 #[target_feature(enable = "avx2")]
 unsafe fn quant_v_group(v: &[__m256; 4], q: *mut u8) -> u16 {
-    let mut sq = [_mm256_setzero_ps(); 4];
-    let mut acc = _mm256_setzero_ps();
-    for (k, s_out) in sq.iter_mut().enumerate() {
-        let s = _mm256_sqrt_ps(v[k]);
-        *s_out = s;
-        let a = abs_ps(s);
-        let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(a, acc);
-        acc = _mm256_blendv_ps(acc, a, gt);
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        let mut sq = [_mm256_setzero_ps(); 4];
+        let mut acc = _mm256_setzero_ps();
+        for (k, s_out) in sq.iter_mut().enumerate() {
+            let s = _mm256_sqrt_ps(v[k]);
+            *s_out = s;
+            let a = abs_ps(s);
+            let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(a, acc);
+            acc = _mm256_blendv_ps(acc, a, gt);
+        }
+        let (s16, safe) = companding::scale_pair(hmax_ps(acc));
+        let safe_v = _mm256_set1_ps(safe);
+        let mut rv = [_mm256_setzero_si256(); 4];
+        for (k, r_out) in rv.iter_mut().enumerate() {
+            let rf = clamp_ps(
+                round_ps(_mm256_mul_ps(_mm256_div_ps(sq[k], safe_v),
+                                       _mm256_set1_ps(255.0))),
+                0.0, 255.0);
+            *r_out = cvt_clamped_epi32(rf);
+        }
+        _mm256_storeu_si256(q as *mut __m256i,
+                            pack4_epi32_u8(rv[0], rv[1], rv[2], rv[3]));
+        s16
     }
-    let (s16, safe) = companding::scale_pair(hmax_ps(acc));
-    let safe_v = _mm256_set1_ps(safe);
-    let mut rv = [_mm256_setzero_si256(); 4];
-    for (k, r_out) in rv.iter_mut().enumerate() {
-        let rf = clamp_ps(
-            round_ps(_mm256_mul_ps(_mm256_div_ps(sq[k], safe_v),
-                                   _mm256_set1_ps(255.0))),
-            0.0, 255.0);
-        *r_out = cvt_clamped_epi32(rf);
-    }
-    _mm256_storeu_si256(q as *mut __m256i,
-                        pack4_epi32_u8(rv[0], rv[1], rv[2], rv[3]));
-    s16
 }
 
 /// Dequant one linear (no-companding) momentum group into registers.
+///
+/// # Safety
+/// Requires AVX2; `q` must be valid for reads of GROUP (32) `i8`
+/// (unaligned is fine — only unaligned load/store forms are used).
 #[target_feature(enable = "avx2")]
 unsafe fn dequant_m_linear_group(q: *const i8, scale_bits: u16)
                                  -> [__m256; 4] {
-    let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scale_bits));
-    let mut out = [_mm256_setzero_ps(); 4];
-    for (k, o) in out.iter_mut().enumerate() {
-        let zi = load8_i8_epi32(q.add(8 * k));
-        let z = _mm256_div_ps(_mm256_cvtepi32_ps(zi),
-                              _mm256_set1_ps(127.0));
-        *o = _mm256_mul_ps(z, s);
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scale_bits));
+        let mut out = [_mm256_setzero_ps(); 4];
+        for (k, o) in out.iter_mut().enumerate() {
+            let zi = load8_i8_epi32(q.add(8 * k));
+            let z = _mm256_div_ps(_mm256_cvtepi32_ps(zi),
+                                  _mm256_set1_ps(127.0));
+            *o = _mm256_mul_ps(z, s);
+        }
+        out
     }
-    out
 }
 
 /// Quantize one resident momentum group linearly; returns scale bits.
+///
+/// # Safety
+/// Requires AVX2; `q` must be valid for writes of GROUP (32) `i8`
+/// (unaligned is fine — only unaligned load/store forms are used).
 #[target_feature(enable = "avx2")]
 unsafe fn quant_m_linear_group(m: &[__m256; 4], q: *mut i8) -> u16 {
-    let (s16, safe) = companding::scale_pair(regs_absmax(m));
-    let safe_v = _mm256_set1_ps(safe);
-    let mut rv = [_mm256_setzero_si256(); 4];
-    for (k, r_out) in rv.iter_mut().enumerate() {
-        let rf = clamp_ps(
-            round_ps(_mm256_mul_ps(_mm256_div_ps(m[k], safe_v),
-                                   _mm256_set1_ps(127.0))),
-            -127.0, 127.0);
-        *r_out = cvt_clamped_epi32(rf);
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        let (s16, safe) = companding::scale_pair(regs_absmax(m));
+        let safe_v = _mm256_set1_ps(safe);
+        let mut rv = [_mm256_setzero_si256(); 4];
+        for (k, r_out) in rv.iter_mut().enumerate() {
+            let rf = clamp_ps(
+                round_ps(_mm256_mul_ps(_mm256_div_ps(m[k], safe_v),
+                                       _mm256_set1_ps(127.0))),
+                -127.0, 127.0);
+            *r_out = cvt_clamped_epi32(rf);
+        }
+        _mm256_storeu_si256(q as *mut __m256i,
+                            pack4_epi32_i8(rv[0], rv[1], rv[2], rv[3]));
+        s16
     }
-    _mm256_storeu_si256(q as *mut __m256i,
-                        pack4_epi32_i8(rv[0], rv[1], rv[2], rv[3]));
-    s16
 }
 
 /// Dequant one linear variance group into registers.
+///
+/// # Safety
+/// Requires AVX2; `q` must be valid for reads of GROUP (32) `u8`
+/// (unaligned is fine — only unaligned load/store forms are used).
 #[target_feature(enable = "avx2")]
 unsafe fn dequant_v_linear_group(q: *const u8, scale_bits: u16)
                                  -> [__m256; 4] {
-    let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scale_bits));
-    let mut out = [_mm256_setzero_ps(); 4];
-    for (k, o) in out.iter_mut().enumerate() {
-        let zi = load8_u8_epi32(q.add(8 * k));
-        let z = _mm256_div_ps(_mm256_cvtepi32_ps(zi),
-                              _mm256_set1_ps(255.0));
-        *o = _mm256_mul_ps(z, s);
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scale_bits));
+        let mut out = [_mm256_setzero_ps(); 4];
+        for (k, o) in out.iter_mut().enumerate() {
+            let zi = load8_u8_epi32(q.add(8 * k));
+            let z = _mm256_div_ps(_mm256_cvtepi32_ps(zi),
+                                  _mm256_set1_ps(255.0));
+            *o = _mm256_mul_ps(z, s);
+        }
+        out
     }
-    out
 }
 
 /// Quantize one resident variance group linearly; returns scale bits.
+///
+/// # Safety
+/// Requires AVX2; `q` must be valid for writes of GROUP (32) `u8`
+/// (unaligned is fine — only unaligned load/store forms are used).
 #[target_feature(enable = "avx2")]
 unsafe fn quant_v_linear_group(v: &[__m256; 4], q: *mut u8) -> u16 {
-    let (s16, safe) = companding::scale_pair(regs_absmax(v));
-    let safe_v = _mm256_set1_ps(safe);
-    let mut rv = [_mm256_setzero_si256(); 4];
-    for (k, r_out) in rv.iter_mut().enumerate() {
-        let rf = clamp_ps(
-            round_ps(_mm256_mul_ps(_mm256_div_ps(v[k], safe_v),
-                                   _mm256_set1_ps(255.0))),
-            0.0, 255.0);
-        *r_out = cvt_clamped_epi32(rf);
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        let (s16, safe) = companding::scale_pair(regs_absmax(v));
+        let safe_v = _mm256_set1_ps(safe);
+        let mut rv = [_mm256_setzero_si256(); 4];
+        for (k, r_out) in rv.iter_mut().enumerate() {
+            let rf = clamp_ps(
+                round_ps(_mm256_mul_ps(_mm256_div_ps(v[k], safe_v),
+                                       _mm256_set1_ps(255.0))),
+                0.0, 255.0);
+            *r_out = cvt_clamped_epi32(rf);
+        }
+        _mm256_storeu_si256(q as *mut __m256i,
+                            pack4_epi32_u8(rv[0], rv[1], rv[2], rv[3]));
+        s16
     }
-    _mm256_storeu_si256(q as *mut __m256i,
-                        pack4_epi32_u8(rv[0], rv[1], rv[2], rv[3]));
-    s16
 }
 
+/// # Safety
+/// Requires AVX2.  No caller invariant beyond the slice arguments
+/// themselves: lengths are cross-checked by the asserts at entry and
+/// every pointer offset stays inside them.
 #[target_feature(enable = "avx2")]
 pub unsafe fn quant_momentum(m: &[f32], q: &mut [i8],
                              scales: &mut [u16]) {
-    assert_eq!(m.len() % GROUP, 0);
-    assert_eq!(q.len(), m.len());
-    assert_eq!(scales.len(), m.len() / GROUP);
-    for gi in 0..scales.len() {
-        let base = gi * GROUP;
-        let x = load_group_ps(m.as_ptr().add(base));
-        scales[gi] = quant_m_group(&x, q.as_mut_ptr().add(base));
+    // SAFETY: AVX2 per contract; pointer offsets stay in bounds of
+    // the slice arguments (lengths cross-checked by the asserts at
+    // entry; the vector loop stops a whole block before the end and
+    // the tail uses checked indexing).
+    unsafe {
+        assert_eq!(m.len() % GROUP, 0);
+        assert_eq!(q.len(), m.len());
+        assert_eq!(scales.len(), m.len() / GROUP);
+        for gi in 0..scales.len() {
+            let base = gi * GROUP;
+            let x = load_group_ps(m.as_ptr().add(base));
+            scales[gi] = quant_m_group(&x, q.as_mut_ptr().add(base));
+        }
     }
 }
 
+/// # Safety
+/// Requires AVX2.  No caller invariant beyond the slice arguments
+/// themselves: lengths are cross-checked by the asserts at entry and
+/// every pointer offset stays inside them.
 #[target_feature(enable = "avx2")]
 pub unsafe fn dequant_momentum(q: &[i8], scales: &[u16],
                                out: &mut [f32]) {
-    assert_eq!(q.len() % GROUP, 0);
-    assert_eq!(out.len(), q.len());
-    assert_eq!(scales.len() * GROUP, q.len(),
-               "scales must cover q exactly (one f16 scale per group)");
-    for gi in 0..scales.len() {
-        let base = gi * GROUP;
-        let m = dequant_m_group(q.as_ptr().add(base), scales[gi]);
-        store_group_ps(&m, out.as_mut_ptr().add(base));
+    // SAFETY: AVX2 per contract; pointer offsets stay in bounds of
+    // the slice arguments (lengths cross-checked by the asserts at
+    // entry; the vector loop stops a whole block before the end and
+    // the tail uses checked indexing).
+    unsafe {
+        assert_eq!(q.len() % GROUP, 0);
+        assert_eq!(out.len(), q.len());
+        assert_eq!(scales.len() * GROUP, q.len(),
+                   "scales must cover q exactly (one f16 scale per group)");
+        for gi in 0..scales.len() {
+            let base = gi * GROUP;
+            let m = dequant_m_group(q.as_ptr().add(base), scales[gi]);
+            store_group_ps(&m, out.as_mut_ptr().add(base));
+        }
     }
 }
 
+/// # Safety
+/// Requires AVX2.  No caller invariant beyond the slice arguments
+/// themselves: lengths are cross-checked by the asserts at entry and
+/// every pointer offset stays inside them.
 #[target_feature(enable = "avx2")]
 pub unsafe fn quant_variance(v: &[f32], q: &mut [u8],
                              scales: &mut [u16]) {
-    assert_eq!(v.len() % GROUP, 0);
-    assert_eq!(q.len(), v.len());
-    assert_eq!(scales.len(), v.len() / GROUP);
-    for gi in 0..scales.len() {
-        let base = gi * GROUP;
-        let x = load_group_ps(v.as_ptr().add(base));
-        scales[gi] = quant_v_group(&x, q.as_mut_ptr().add(base));
+    // SAFETY: AVX2 per contract; pointer offsets stay in bounds of
+    // the slice arguments (lengths cross-checked by the asserts at
+    // entry; the vector loop stops a whole block before the end and
+    // the tail uses checked indexing).
+    unsafe {
+        assert_eq!(v.len() % GROUP, 0);
+        assert_eq!(q.len(), v.len());
+        assert_eq!(scales.len(), v.len() / GROUP);
+        for gi in 0..scales.len() {
+            let base = gi * GROUP;
+            let x = load_group_ps(v.as_ptr().add(base));
+            scales[gi] = quant_v_group(&x, q.as_mut_ptr().add(base));
+        }
     }
 }
 
+/// # Safety
+/// Requires AVX2.  No caller invariant beyond the slice arguments
+/// themselves: lengths are cross-checked by the asserts at entry and
+/// every pointer offset stays inside them.
 #[target_feature(enable = "avx2")]
 pub unsafe fn dequant_variance(q: &[u8], scales: &[u16],
                                out: &mut [f32]) {
-    assert_eq!(q.len() % GROUP, 0);
-    assert_eq!(out.len(), q.len());
-    assert_eq!(scales.len() * GROUP, q.len(),
-               "scales must cover q exactly (one f16 scale per group)");
-    for gi in 0..scales.len() {
-        let base = gi * GROUP;
-        let v = dequant_v_group(q.as_ptr().add(base), scales[gi]);
-        store_group_ps(&v, out.as_mut_ptr().add(base));
+    // SAFETY: AVX2 per contract; pointer offsets stay in bounds of
+    // the slice arguments (lengths cross-checked by the asserts at
+    // entry; the vector loop stops a whole block before the end and
+    // the tail uses checked indexing).
+    unsafe {
+        assert_eq!(q.len() % GROUP, 0);
+        assert_eq!(out.len(), q.len());
+        assert_eq!(scales.len() * GROUP, q.len(),
+                   "scales must cover q exactly (one f16 scale per group)");
+        for gi in 0..scales.len() {
+            let base = gi * GROUP;
+            let v = dequant_v_group(q.as_ptr().add(base), scales[gi]);
+            store_group_ps(&v, out.as_mut_ptr().add(base));
+        }
     }
 }
 
+/// # Safety
+/// Requires AVX2.  No caller invariant beyond the slice arguments
+/// themselves: lengths are cross-checked by the asserts at entry and
+/// every pointer offset stays inside them.
 #[target_feature(enable = "avx2")]
 pub unsafe fn quant_momentum_linear(m: &[f32], q: &mut [i8],
                                     scales: &mut [u16]) {
-    assert_eq!(m.len() % GROUP, 0);
-    assert_eq!(q.len(), m.len());
-    assert_eq!(scales.len(), m.len() / GROUP);
-    for gi in 0..scales.len() {
-        let base = gi * GROUP;
-        let x = load_group_ps(m.as_ptr().add(base));
-        scales[gi] = quant_m_linear_group(&x, q.as_mut_ptr().add(base));
+    // SAFETY: AVX2 per contract; pointer offsets stay in bounds of
+    // the slice arguments (lengths cross-checked by the asserts at
+    // entry; the vector loop stops a whole block before the end and
+    // the tail uses checked indexing).
+    unsafe {
+        assert_eq!(m.len() % GROUP, 0);
+        assert_eq!(q.len(), m.len());
+        assert_eq!(scales.len(), m.len() / GROUP);
+        for gi in 0..scales.len() {
+            let base = gi * GROUP;
+            let x = load_group_ps(m.as_ptr().add(base));
+            scales[gi] = quant_m_linear_group(&x, q.as_mut_ptr().add(base));
+        }
     }
 }
 
+/// # Safety
+/// Requires AVX2.  No caller invariant beyond the slice arguments
+/// themselves: lengths are cross-checked by the asserts at entry and
+/// every pointer offset stays inside them.
 #[target_feature(enable = "avx2")]
 pub unsafe fn dequant_momentum_linear(q: &[i8], scales: &[u16],
                                       out: &mut [f32]) {
-    assert_eq!(q.len() % GROUP, 0);
-    assert_eq!(out.len(), q.len());
-    assert_eq!(scales.len() * GROUP, q.len(),
-               "scales must cover q exactly (one f16 scale per group)");
-    for gi in 0..scales.len() {
-        let base = gi * GROUP;
-        let m = dequant_m_linear_group(q.as_ptr().add(base), scales[gi]);
-        store_group_ps(&m, out.as_mut_ptr().add(base));
+    // SAFETY: AVX2 per contract; pointer offsets stay in bounds of
+    // the slice arguments (lengths cross-checked by the asserts at
+    // entry; the vector loop stops a whole block before the end and
+    // the tail uses checked indexing).
+    unsafe {
+        assert_eq!(q.len() % GROUP, 0);
+        assert_eq!(out.len(), q.len());
+        assert_eq!(scales.len() * GROUP, q.len(),
+                   "scales must cover q exactly (one f16 scale per group)");
+        for gi in 0..scales.len() {
+            let base = gi * GROUP;
+            let m = dequant_m_linear_group(q.as_ptr().add(base), scales[gi]);
+            store_group_ps(&m, out.as_mut_ptr().add(base));
+        }
     }
 }
 
+/// # Safety
+/// Requires AVX2.  No caller invariant beyond the slice arguments
+/// themselves: lengths are cross-checked by the asserts at entry and
+/// every pointer offset stays inside them.
 #[target_feature(enable = "avx2")]
 pub unsafe fn quant_variance_linear(v: &[f32], q: &mut [u8],
                                     scales: &mut [u16]) {
-    assert_eq!(v.len() % GROUP, 0);
-    assert_eq!(q.len(), v.len());
-    assert_eq!(scales.len(), v.len() / GROUP);
-    for gi in 0..scales.len() {
-        let base = gi * GROUP;
-        let x = load_group_ps(v.as_ptr().add(base));
-        scales[gi] = quant_v_linear_group(&x, q.as_mut_ptr().add(base));
+    // SAFETY: AVX2 per contract; pointer offsets stay in bounds of
+    // the slice arguments (lengths cross-checked by the asserts at
+    // entry; the vector loop stops a whole block before the end and
+    // the tail uses checked indexing).
+    unsafe {
+        assert_eq!(v.len() % GROUP, 0);
+        assert_eq!(q.len(), v.len());
+        assert_eq!(scales.len(), v.len() / GROUP);
+        for gi in 0..scales.len() {
+            let base = gi * GROUP;
+            let x = load_group_ps(v.as_ptr().add(base));
+            scales[gi] = quant_v_linear_group(&x, q.as_mut_ptr().add(base));
+        }
     }
 }
 
+/// # Safety
+/// Requires AVX2.  No caller invariant beyond the slice arguments
+/// themselves: lengths are cross-checked by the asserts at entry and
+/// every pointer offset stays inside them.
 #[target_feature(enable = "avx2")]
 pub unsafe fn dequant_variance_linear(q: &[u8], scales: &[u16],
                                       out: &mut [f32]) {
-    assert_eq!(q.len() % GROUP, 0);
-    assert_eq!(out.len(), q.len());
-    assert_eq!(scales.len() * GROUP, q.len(),
-               "scales must cover q exactly (one f16 scale per group)");
-    for gi in 0..scales.len() {
-        let base = gi * GROUP;
-        let v = dequant_v_linear_group(q.as_ptr().add(base), scales[gi]);
-        store_group_ps(&v, out.as_mut_ptr().add(base));
+    // SAFETY: AVX2 per contract; pointer offsets stay in bounds of
+    // the slice arguments (lengths cross-checked by the asserts at
+    // entry; the vector loop stops a whole block before the end and
+    // the tail uses checked indexing).
+    unsafe {
+        assert_eq!(q.len() % GROUP, 0);
+        assert_eq!(out.len(), q.len());
+        assert_eq!(scales.len() * GROUP, q.len(),
+                   "scales must cover q exactly (one f16 scale per group)");
+        for gi in 0..scales.len() {
+            let base = gi * GROUP;
+            let v = dequant_v_linear_group(q.as_ptr().add(base), scales[gi]);
+            store_group_ps(&v, out.as_mut_ptr().add(base));
+        }
     }
 }
 
@@ -802,77 +1202,112 @@ struct UpdateConsts {
     bc2: __m256,
 }
 
+/// # Safety
+/// Requires AVX2 (every path here starts at [`dispatch`], which runs
+/// after feature detection).  Register/stack values only — no
+/// pointer is formed or dereferenced.
 #[target_feature(enable = "avx2")]
 unsafe fn update_consts(s: &StepScalars) -> UpdateConsts {
-    UpdateConsts {
-        lr: _mm256_set1_ps(s.lr),
-        beta1: _mm256_set1_ps(s.beta1),
-        beta2: _mm256_set1_ps(s.beta2),
-        omb1: _mm256_set1_ps(s.one_minus_beta1),
-        omb2: _mm256_set1_ps(s.one_minus_beta2),
-        eps: _mm256_set1_ps(s.eps),
-        wd: _mm256_set1_ps(s.wd),
-        bc1: _mm256_set1_ps(s.bc1),
-        bc2: _mm256_set1_ps(s.bc2),
+    // SAFETY: AVX2 is available per this fn's contract; everything
+    // below is register arithmetic.
+    unsafe {
+        UpdateConsts {
+            lr: _mm256_set1_ps(s.lr),
+            beta1: _mm256_set1_ps(s.beta1),
+            beta2: _mm256_set1_ps(s.beta2),
+            omb1: _mm256_set1_ps(s.one_minus_beta1),
+            omb2: _mm256_set1_ps(s.one_minus_beta2),
+            eps: _mm256_set1_ps(s.eps),
+            wd: _mm256_set1_ps(s.wd),
+            bc1: _mm256_set1_ps(s.bc1),
+            bc2: _mm256_set1_ps(s.bc2),
+        }
     }
 }
 
 /// `scalar_ref::adamw_f32` on one resident group.
+///
+/// # Safety
+/// Requires AVX2 (every path here starts at [`dispatch`], which runs
+/// after feature detection).  Register/stack values only — no
+/// pointer is formed or dereferenced.
 #[target_feature(enable = "avx2")]
 unsafe fn adamw_update_group(th: &mut [__m256; 4], m: &mut [__m256; 4],
                              v: &mut [__m256; 4], g: &[__m256; 4],
                              c: &UpdateConsts) {
-    for k in 0..4 {
-        let gk = g[k];
-        // m = beta1 * m + (1 - beta1) * g
-        m[k] = _mm256_add_ps(_mm256_mul_ps(c.beta1, m[k]),
-                             _mm256_mul_ps(c.omb1, gk));
-        // v = beta2 * v + ((1 - beta2) * g) * g
-        v[k] = _mm256_add_ps(
-            _mm256_mul_ps(c.beta2, v[k]),
-            _mm256_mul_ps(_mm256_mul_ps(c.omb2, gk), gk));
-        let m_hat = _mm256_mul_ps(m[k], c.bc1);
-        let v_hat = _mm256_mul_ps(v[k], c.bc2);
-        let denom = _mm256_add_ps(_mm256_sqrt_ps(v_hat), c.eps);
-        let term = _mm256_add_ps(_mm256_div_ps(m_hat, denom),
-                                 _mm256_mul_ps(c.wd, th[k]));
-        th[k] = _mm256_sub_ps(th[k], _mm256_mul_ps(c.lr, term));
+    // SAFETY: AVX2 is available per this fn's contract; everything
+    // below is register arithmetic.
+    unsafe {
+        for k in 0..4 {
+            let gk = g[k];
+            // m = beta1 * m + (1 - beta1) * g
+            m[k] = _mm256_add_ps(_mm256_mul_ps(c.beta1, m[k]),
+                                 _mm256_mul_ps(c.omb1, gk));
+            // v = beta2 * v + ((1 - beta2) * g) * g
+            v[k] = _mm256_add_ps(
+                _mm256_mul_ps(c.beta2, v[k]),
+                _mm256_mul_ps(_mm256_mul_ps(c.omb2, gk), gk));
+            let m_hat = _mm256_mul_ps(m[k], c.bc1);
+            let v_hat = _mm256_mul_ps(v[k], c.bc2);
+            let denom = _mm256_add_ps(_mm256_sqrt_ps(v_hat), c.eps);
+            let term = _mm256_add_ps(_mm256_div_ps(m_hat, denom),
+                                     _mm256_mul_ps(c.wd, th[k]));
+            th[k] = _mm256_sub_ps(th[k], _mm256_mul_ps(c.lr, term));
+        }
     }
 }
 
 /// `scalar_ref::sgd_f32` on one resident group.
+///
+/// # Safety
+/// Requires AVX2 (every path here starts at [`dispatch`], which runs
+/// after feature detection).  Register/stack values only — no
+/// pointer is formed or dereferenced.
 #[target_feature(enable = "avx2")]
 unsafe fn sgd_update_group(th: &mut [__m256; 4], m: &mut [__m256; 4],
                            g: &[__m256; 4], c: &UpdateConsts) {
-    for k in 0..4 {
-        // m = beta1 * m + g
-        m[k] = _mm256_add_ps(_mm256_mul_ps(c.beta1, m[k]), g[k]);
-        let term = _mm256_add_ps(m[k], _mm256_mul_ps(c.wd, th[k]));
-        th[k] = _mm256_sub_ps(th[k], _mm256_mul_ps(c.lr, term));
+    // SAFETY: AVX2 is available per this fn's contract; everything
+    // below is register arithmetic.
+    unsafe {
+        for k in 0..4 {
+            // m = beta1 * m + g
+            m[k] = _mm256_add_ps(_mm256_mul_ps(c.beta1, m[k]), g[k]);
+            let term = _mm256_add_ps(m[k], _mm256_mul_ps(c.wd, th[k]));
+            th[k] = _mm256_sub_ps(th[k], _mm256_mul_ps(c.lr, term));
+        }
     }
 }
 
 /// `scalar_ref::lion_f32` on one resident group.
+///
+/// # Safety
+/// Requires AVX2 (every path here starts at [`dispatch`], which runs
+/// after feature detection).  Register/stack values only — no
+/// pointer is formed or dereferenced.
 #[target_feature(enable = "avx2")]
 unsafe fn lion_update_group(th: &mut [__m256; 4], m: &mut [__m256; 4],
                             g: &[__m256; 4], c: &UpdateConsts) {
-    let zero = _mm256_setzero_ps();
-    let one = _mm256_set1_ps(1.0);
-    let neg_one = _mm256_set1_ps(-1.0);
-    for k in 0..4 {
-        let gk = g[k];
-        let ck = _mm256_add_ps(_mm256_mul_ps(c.beta1, m[k]),
-                               _mm256_mul_ps(c.omb1, gk));
-        // sign(c) with NaN -> 0 (ordered compares are false on NaN,
-        // matching the scalar if-chain's else branch)
-        let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(ck, zero);
-        let lt = _mm256_cmp_ps::<_CMP_LT_OQ>(ck, zero);
-        let u = _mm256_blendv_ps(zero, one, gt);
-        let u = _mm256_blendv_ps(u, neg_one, lt);
-        m[k] = _mm256_add_ps(_mm256_mul_ps(c.beta2, m[k]),
-                             _mm256_mul_ps(c.omb2, gk));
-        let term = _mm256_add_ps(u, _mm256_mul_ps(c.wd, th[k]));
-        th[k] = _mm256_sub_ps(th[k], _mm256_mul_ps(c.lr, term));
+    // SAFETY: AVX2 is available per this fn's contract; everything
+    // below is register arithmetic.
+    unsafe {
+        let zero = _mm256_setzero_ps();
+        let one = _mm256_set1_ps(1.0);
+        let neg_one = _mm256_set1_ps(-1.0);
+        for k in 0..4 {
+            let gk = g[k];
+            let ck = _mm256_add_ps(_mm256_mul_ps(c.beta1, m[k]),
+                                   _mm256_mul_ps(c.omb1, gk));
+            // sign(c) with NaN -> 0 (ordered compares are false on NaN,
+            // matching the scalar if-chain's else branch)
+            let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(ck, zero);
+            let lt = _mm256_cmp_ps::<_CMP_LT_OQ>(ck, zero);
+            let u = _mm256_blendv_ps(zero, one, gt);
+            let u = _mm256_blendv_ps(u, neg_one, lt);
+            m[k] = _mm256_add_ps(_mm256_mul_ps(c.beta2, m[k]),
+                                 _mm256_mul_ps(c.omb2, gk));
+            let term = _mm256_add_ps(u, _mm256_mul_ps(c.wd, th[k]));
+            th[k] = _mm256_sub_ps(th[k], _mm256_mul_ps(c.lr, term));
+        }
     }
 }
 
@@ -882,196 +1317,299 @@ unsafe fn lion_update_group(th: &mut [__m256; 4], m: &mut [__m256; 4],
 /// companded 8-bit codec (meaningful only with `quant`).  Buffers the
 /// layout does not store stay null and are never dereferenced (each
 /// access is guarded by the flag that proved the buffer present).
+///
+/// # Safety
+/// Requires AVX2.  All pointers below derive from the `FusedPart`
+/// slices — valid for `p.g.len()` elements (asserted GROUP-aligned
+/// at entry, scale slices `n / GROUP` long).  The null placeholders
+/// for buffers a layout does not store are never dereferenced:
+/// every access is guarded by the flag that proved the buffer
+/// present via `layout_mut`.
 #[target_feature(enable = "avx2")]
 unsafe fn fused_any(p: &mut FusedPart<'_>, s: &StepScalars,
                     rule: FusedRule, split: bool, quant: bool,
                     linear: bool) {
-    let n = p.g.len();
-    assert_eq!(n % GROUP, 0, "fused kernels step whole groups");
-    let g_all = p.g;
-    let var = matches!(rule, FusedRule::AdamW);
+    // SAFETY: AVX2 per contract; pointer provenance and bounds per
+    // the `# Safety` section — null placeholders are never
+    // dereferenced (each access is guarded by its layout flag).
+    unsafe {
+        let n = p.g.len();
+        assert_eq!(n % GROUP, 0, "fused kernels step whole groups");
+        let g_all = p.g;
+        let var = matches!(rule, FusedRule::AdamW);
 
-    let (tp_p, rho_p, th_p) = if split {
-        let tp =
-            p.theta_p.as_deref_mut().expect("fused: missing theta_p");
-        let rho = p.rho.as_deref_mut().expect("fused: missing rho");
-        assert_eq!(tp.len(), n);
-        assert_eq!(rho.len(), n);
-        (tp.as_mut_ptr(), rho.as_mut_ptr(),
-         std::ptr::null_mut::<f32>())
-    } else {
-        let th = p.theta.as_deref_mut().expect("fused: missing theta");
-        assert_eq!(th.len(), n);
-        (std::ptr::null_mut::<u16>(), std::ptr::null_mut::<i8>(),
-         th.as_mut_ptr())
-    };
-    let (mq_p, ms_p, m_p) = if quant {
-        let mq = p.mq.as_deref_mut().expect("fused: missing mq");
-        let ms = p.ms.as_deref_mut().expect("fused: missing ms");
-        assert_eq!(mq.len(), n);
-        assert_eq!(ms.len(), n / GROUP);
-        (mq.as_mut_ptr(), ms.as_mut_ptr(), std::ptr::null_mut::<f32>())
-    } else {
-        let m = p.m.as_deref_mut().expect("fused: missing m");
-        assert_eq!(m.len(), n);
-        (std::ptr::null_mut::<i8>(), std::ptr::null_mut::<u16>(),
-         m.as_mut_ptr())
-    };
-    let (vq_p, vs_p, v_p) = if !var {
-        (std::ptr::null_mut::<u8>(), std::ptr::null_mut::<u16>(),
-         std::ptr::null_mut::<f32>())
-    } else if quant {
-        let vq = p.vq.as_deref_mut().expect("fused: missing vq");
-        let vs = p.vs.as_deref_mut().expect("fused: missing vs");
-        assert_eq!(vq.len(), n);
-        assert_eq!(vs.len(), n / GROUP);
-        (vq.as_mut_ptr(), vs.as_mut_ptr(), std::ptr::null_mut::<f32>())
-    } else {
-        let v = p.v.as_deref_mut().expect("fused: missing v");
-        assert_eq!(v.len(), n);
-        (std::ptr::null_mut::<u8>(), std::ptr::null_mut::<u16>(),
-         v.as_mut_ptr())
-    };
-    let g_p = g_all.as_ptr();
-    let c = update_consts(s);
+        let (tp_p, rho_p, th_p) = if split {
+            let tp =
+                layout_mut(p.theta_p.as_deref_mut(), "theta_p");
+            let rho = layout_mut(p.rho.as_deref_mut(), "rho");
+            assert_eq!(tp.len(), n);
+            assert_eq!(rho.len(), n);
+            (tp.as_mut_ptr(), rho.as_mut_ptr(),
+             std::ptr::null_mut::<f32>())
+        } else {
+            let th = layout_mut(p.theta.as_deref_mut(), "theta");
+            assert_eq!(th.len(), n);
+            (std::ptr::null_mut::<u16>(), std::ptr::null_mut::<i8>(),
+             th.as_mut_ptr())
+        };
+        let (mq_p, ms_p, m_p) = if quant {
+            let mq = layout_mut(p.mq.as_deref_mut(), "mq");
+            let ms = layout_mut(p.ms.as_deref_mut(), "ms");
+            assert_eq!(mq.len(), n);
+            assert_eq!(ms.len(), n / GROUP);
+            (mq.as_mut_ptr(), ms.as_mut_ptr(), std::ptr::null_mut::<f32>())
+        } else {
+            let m = layout_mut(p.m.as_deref_mut(), "m");
+            assert_eq!(m.len(), n);
+            (std::ptr::null_mut::<i8>(), std::ptr::null_mut::<u16>(),
+             m.as_mut_ptr())
+        };
+        let (vq_p, vs_p, v_p) = if !var {
+            (std::ptr::null_mut::<u8>(), std::ptr::null_mut::<u16>(),
+             std::ptr::null_mut::<f32>())
+        } else if quant {
+            let vq = layout_mut(p.vq.as_deref_mut(), "vq");
+            let vs = layout_mut(p.vs.as_deref_mut(), "vs");
+            assert_eq!(vq.len(), n);
+            assert_eq!(vs.len(), n / GROUP);
+            (vq.as_mut_ptr(), vs.as_mut_ptr(), std::ptr::null_mut::<f32>())
+        } else {
+            let v = layout_mut(p.v.as_deref_mut(), "v");
+            assert_eq!(v.len(), n);
+            (std::ptr::null_mut::<u8>(), std::ptr::null_mut::<u16>(),
+             v.as_mut_ptr())
+        };
+        let g_p = g_all.as_ptr();
+        let c = update_consts(s);
 
-    for gi in 0..n / GROUP {
-        let base = gi * GROUP;
-        let g = load_group_ps(g_p.add(base));
-        let mut th = if split {
-            split_decompress_group(tp_p.add(base), rho_p.add(base))
-        } else {
-            load_group_ps(th_p.add(base))
-        };
-        let mut m = if !quant {
-            load_group_ps(m_p.add(base))
-        } else if linear {
-            dequant_m_linear_group(mq_p.add(base), *ms_p.add(gi))
-        } else {
-            dequant_m_group(mq_p.add(base), *ms_p.add(gi))
-        };
-        match rule {
-            FusedRule::AdamW => {
-                let mut v = if !quant {
-                    load_group_ps(v_p.add(base))
-                } else if linear {
-                    dequant_v_linear_group(vq_p.add(base), *vs_p.add(gi))
-                } else {
-                    dequant_v_group(vq_p.add(base), *vs_p.add(gi))
-                };
-                adamw_update_group(&mut th, &mut m, &mut v, &g, &c);
-                if !quant {
-                    store_group_ps(&v, v_p.add(base));
-                } else if linear {
-                    *vs_p.add(gi) =
-                        quant_v_linear_group(&v, vq_p.add(base));
-                } else {
-                    *vs_p.add(gi) = quant_v_group(&v, vq_p.add(base));
+        for gi in 0..n / GROUP {
+            let base = gi * GROUP;
+            let g = load_group_ps(g_p.add(base));
+            let mut th = if split {
+                split_decompress_group(tp_p.add(base), rho_p.add(base))
+            } else {
+                load_group_ps(th_p.add(base))
+            };
+            let mut m = if !quant {
+                load_group_ps(m_p.add(base))
+            } else if linear {
+                dequant_m_linear_group(mq_p.add(base), *ms_p.add(gi))
+            } else {
+                dequant_m_group(mq_p.add(base), *ms_p.add(gi))
+            };
+            match rule {
+                FusedRule::AdamW => {
+                    let mut v = if !quant {
+                        load_group_ps(v_p.add(base))
+                    } else if linear {
+                        dequant_v_linear_group(vq_p.add(base), *vs_p.add(gi))
+                    } else {
+                        dequant_v_group(vq_p.add(base), *vs_p.add(gi))
+                    };
+                    adamw_update_group(&mut th, &mut m, &mut v, &g, &c);
+                    if !quant {
+                        store_group_ps(&v, v_p.add(base));
+                    } else if linear {
+                        *vs_p.add(gi) =
+                            quant_v_linear_group(&v, vq_p.add(base));
+                    } else {
+                        *vs_p.add(gi) = quant_v_group(&v, vq_p.add(base));
+                    }
                 }
+                FusedRule::Sgdm => sgd_update_group(&mut th, &mut m, &g, &c),
+                FusedRule::Lion => lion_update_group(&mut th, &mut m, &g, &c),
             }
-            FusedRule::Sgdm => sgd_update_group(&mut th, &mut m, &g, &c),
-            FusedRule::Lion => lion_update_group(&mut th, &mut m, &g, &c),
-        }
-        if split {
-            split_compress_group(&th, tp_p.add(base), rho_p.add(base));
-        } else {
-            store_group_ps(&th, th_p.add(base));
-        }
-        if !quant {
-            store_group_ps(&m, m_p.add(base));
-        } else if linear {
-            *ms_p.add(gi) = quant_m_linear_group(&m, mq_p.add(base));
-        } else {
-            *ms_p.add(gi) = quant_m_group(&m, mq_p.add(base));
+            if split {
+                split_compress_group(&th, tp_p.add(base), rho_p.add(base));
+            } else {
+                store_group_ps(&th, th_p.add(base));
+            }
+            if !quant {
+                store_group_ps(&m, m_p.add(base));
+            } else if linear {
+                *ms_p.add(gi) = quant_m_linear_group(&m, mq_p.add(base));
+            } else {
+                *ms_p.add(gi) = quant_m_group(&m, mq_p.add(base));
+            }
         }
     }
 }
 
+/// # Safety
+/// Requires AVX2; see [`fused_any`] — this entry only pins the
+/// layout flags.
 #[target_feature(enable = "avx2")]
 pub unsafe fn fused_step_adamw(p: &mut FusedPart<'_>, s: &StepScalars) {
-    fused_any(p, s, FusedRule::AdamW, true, true, false)
+    // SAFETY: forwards to `fused_any` under the same AVX2 contract.
+    unsafe {
+        fused_any(p, s, FusedRule::AdamW, true, true, false)
+    }
 }
 
+/// # Safety
+/// Requires AVX2; see [`fused_any`] — this entry only pins the
+/// layout flags.
 #[target_feature(enable = "avx2")]
 pub unsafe fn fused_step_sgdm(p: &mut FusedPart<'_>, s: &StepScalars) {
-    fused_any(p, s, FusedRule::Sgdm, true, true, false)
+    // SAFETY: forwards to `fused_any` under the same AVX2 contract.
+    unsafe {
+        fused_any(p, s, FusedRule::Sgdm, true, true, false)
+    }
 }
 
+/// # Safety
+/// Requires AVX2; see [`fused_any`] — this entry only pins the
+/// layout flags.
 #[target_feature(enable = "avx2")]
 pub unsafe fn fused_step_lion(p: &mut FusedPart<'_>, s: &StepScalars) {
-    fused_any(p, s, FusedRule::Lion, true, true, false)
+    // SAFETY: forwards to `fused_any` under the same AVX2 contract.
+    unsafe {
+        fused_any(p, s, FusedRule::Lion, true, true, false)
+    }
 }
 
+/// # Safety
+/// Requires AVX2; see [`fused_any`] — this entry only pins the
+/// layout flags.
 #[target_feature(enable = "avx2")]
 pub unsafe fn fused_step_adamw_nocompand(p: &mut FusedPart<'_>,
                                          s: &StepScalars) {
-    fused_any(p, s, FusedRule::AdamW, true, true, true)
+    // SAFETY: forwards to `fused_any` under the same AVX2 contract.
+    unsafe {
+        fused_any(p, s, FusedRule::AdamW, true, true, true)
+    }
 }
 
+/// # Safety
+/// Requires AVX2; see [`fused_any`] — this entry only pins the
+/// layout flags.
 #[target_feature(enable = "avx2")]
 pub unsafe fn fused_step_sgdm_nocompand(p: &mut FusedPart<'_>,
                                         s: &StepScalars) {
-    fused_any(p, s, FusedRule::Sgdm, true, true, true)
+    // SAFETY: forwards to `fused_any` under the same AVX2 contract.
+    unsafe {
+        fused_any(p, s, FusedRule::Sgdm, true, true, true)
+    }
 }
 
+/// # Safety
+/// Requires AVX2; see [`fused_any`] — this entry only pins the
+/// layout flags.
 #[target_feature(enable = "avx2")]
 pub unsafe fn fused_step_lion_nocompand(p: &mut FusedPart<'_>,
                                         s: &StepScalars) {
-    fused_any(p, s, FusedRule::Lion, true, true, true)
+    // SAFETY: forwards to `fused_any` under the same AVX2 contract.
+    unsafe {
+        fused_any(p, s, FusedRule::Lion, true, true, true)
+    }
 }
 
+/// # Safety
+/// Requires AVX2; see [`fused_any`] — this entry only pins the
+/// layout flags.
 #[target_feature(enable = "avx2")]
 pub unsafe fn fused_step_adamw_reference(p: &mut FusedPart<'_>,
                                          s: &StepScalars) {
-    fused_any(p, s, FusedRule::AdamW, false, false, false)
+    // SAFETY: forwards to `fused_any` under the same AVX2 contract.
+    unsafe {
+        fused_any(p, s, FusedRule::AdamW, false, false, false)
+    }
 }
 
+/// # Safety
+/// Requires AVX2; see [`fused_any`] — this entry only pins the
+/// layout flags.
 #[target_feature(enable = "avx2")]
 pub unsafe fn fused_step_sgdm_reference(p: &mut FusedPart<'_>,
                                         s: &StepScalars) {
-    fused_any(p, s, FusedRule::Sgdm, false, false, false)
+    // SAFETY: forwards to `fused_any` under the same AVX2 contract.
+    unsafe {
+        fused_any(p, s, FusedRule::Sgdm, false, false, false)
+    }
 }
 
+/// # Safety
+/// Requires AVX2; see [`fused_any`] — this entry only pins the
+/// layout flags.
 #[target_feature(enable = "avx2")]
 pub unsafe fn fused_step_lion_reference(p: &mut FusedPart<'_>,
                                         s: &StepScalars) {
-    fused_any(p, s, FusedRule::Lion, false, false, false)
+    // SAFETY: forwards to `fused_any` under the same AVX2 contract.
+    unsafe {
+        fused_any(p, s, FusedRule::Lion, false, false, false)
+    }
 }
 
+/// # Safety
+/// Requires AVX2; see [`fused_any`] — this entry only pins the
+/// layout flags.
 #[target_feature(enable = "avx2")]
 pub unsafe fn fused_step_adamw_wsplit(p: &mut FusedPart<'_>,
                                       s: &StepScalars) {
-    fused_any(p, s, FusedRule::AdamW, true, false, false)
+    // SAFETY: forwards to `fused_any` under the same AVX2 contract.
+    unsafe {
+        fused_any(p, s, FusedRule::AdamW, true, false, false)
+    }
 }
 
+/// # Safety
+/// Requires AVX2; see [`fused_any`] — this entry only pins the
+/// layout flags.
 #[target_feature(enable = "avx2")]
 pub unsafe fn fused_step_sgdm_wsplit(p: &mut FusedPart<'_>,
                                      s: &StepScalars) {
-    fused_any(p, s, FusedRule::Sgdm, true, false, false)
+    // SAFETY: forwards to `fused_any` under the same AVX2 contract.
+    unsafe {
+        fused_any(p, s, FusedRule::Sgdm, true, false, false)
+    }
 }
 
+/// # Safety
+/// Requires AVX2; see [`fused_any`] — this entry only pins the
+/// layout flags.
 #[target_feature(enable = "avx2")]
 pub unsafe fn fused_step_lion_wsplit(p: &mut FusedPart<'_>,
                                      s: &StepScalars) {
-    fused_any(p, s, FusedRule::Lion, true, false, false)
+    // SAFETY: forwards to `fused_any` under the same AVX2 contract.
+    unsafe {
+        fused_any(p, s, FusedRule::Lion, true, false, false)
+    }
 }
 
+/// # Safety
+/// Requires AVX2; see [`fused_any`] — this entry only pins the
+/// layout flags.
 #[target_feature(enable = "avx2")]
 pub unsafe fn fused_step_adamw_quant(p: &mut FusedPart<'_>,
                                      s: &StepScalars) {
-    fused_any(p, s, FusedRule::AdamW, false, true, false)
+    // SAFETY: forwards to `fused_any` under the same AVX2 contract.
+    unsafe {
+        fused_any(p, s, FusedRule::AdamW, false, true, false)
+    }
 }
 
+/// # Safety
+/// Requires AVX2; see [`fused_any`] — this entry only pins the
+/// layout flags.
 #[target_feature(enable = "avx2")]
 pub unsafe fn fused_step_sgdm_quant(p: &mut FusedPart<'_>,
                                     s: &StepScalars) {
-    fused_any(p, s, FusedRule::Sgdm, false, true, false)
+    // SAFETY: forwards to `fused_any` under the same AVX2 contract.
+    unsafe {
+        fused_any(p, s, FusedRule::Sgdm, false, true, false)
+    }
 }
 
+/// # Safety
+/// Requires AVX2; see [`fused_any`] — this entry only pins the
+/// layout flags.
 #[target_feature(enable = "avx2")]
 pub unsafe fn fused_step_lion_quant(p: &mut FusedPart<'_>,
                                     s: &StepScalars) {
-    fused_any(p, s, FusedRule::Lion, false, true, false)
+    // SAFETY: forwards to `fused_any` under the same AVX2 contract.
+    unsafe {
+        fused_any(p, s, FusedRule::Lion, false, true, false)
+    }
 }
 
 /// Safe wrappers used as the `KernelSet` function-pointer table.

@@ -58,6 +58,33 @@ pub struct FusedPart<'a> {
     pub g: &'a [f32],
 }
 
+/// Unwrap a layout-contract buffer: the backend allocates exactly the
+/// buffers an (optimizer, variant) layout stores (`State::init`), and
+/// each fused kernel touches exactly the set its layout requires — so
+/// a `None` here is a construction-time bug in the caller, never a
+/// runtime condition.  Centralizing the check keeps the contract (and
+/// its panic message) in one audited place; the hot-path panic policy
+/// (rule A4, docs/ANALYSIS.md) bans ad-hoc `unwrap`/`expect` in favor
+/// of this documented infallible pattern.
+#[track_caller]
+pub fn layout_mut<'a, T: ?Sized>(buf: Option<&'a mut T>, what: &str)
+                                 -> &'a mut T {
+    match buf {
+        Some(b) => b,
+        None => panic!("layout contract violated: {what} missing"),
+    }
+}
+
+/// Shared-borrow twin of [`layout_mut`], same contract.
+#[track_caller]
+pub fn layout_ref<'a, T: ?Sized>(buf: Option<&'a T>, what: &str)
+                                 -> &'a T {
+    match buf {
+        Some(b) => b,
+        None => panic!("layout contract violated: {what} missing"),
+    }
+}
+
 /// Update-rule selector shared by the fused kernel implementations
 /// (`portable` and `avx2` parameterize one loop per codec family).
 #[derive(Clone, Copy)]
@@ -282,16 +309,22 @@ pub fn kernel_set(kind: KernelKind) -> Result<&'static KernelSet> {
                  on this CPU/target; use \"auto\" or \"scalar\""
             )
         }
-        KernelKind::Auto => {
-            #[cfg(target_arch = "x86_64")]
-            {
-                if avx2_available() {
-                    return Ok(&AVX2);
-                }
-            }
-            Ok(&SCALAR)
+        KernelKind::Auto => Ok(auto_set()),
+    }
+}
+
+/// The `Auto` selection as an infallible lookup: AVX2 when the CPU
+/// supports it, the portable scalar set otherwise.  Backends that
+/// hard-code `Auto` (e.g. `ScalarBackend::default`) use this directly
+/// so construction cannot fail.
+pub fn auto_set() -> &'static KernelSet {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            return &AVX2;
         }
     }
+    &SCALAR
 }
 
 #[cfg(test)]

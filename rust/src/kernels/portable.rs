@@ -9,7 +9,7 @@
 //! path and the AVX2 differential tests need.
 
 use crate::formats::{bf16, companding, fp16, weight_split, GROUP};
-use crate::kernels::{FusedPart, FusedRule};
+use crate::kernels::{layout_mut, layout_ref, FusedPart, FusedRule};
 use crate::optim::hyper::StepScalars;
 use crate::optim::scalar_ref;
 
@@ -89,18 +89,18 @@ fn fused_flash(p: &mut FusedPart<'_>, s: &StepScalars, rule: FusedRule,
                linear: bool) {
     let n = p.g.len();
     assert_eq!(n % GROUP, 0, "fused kernels step whole groups");
-    let tp = p.theta_p.as_deref_mut().expect("fused: missing theta_p");
-    let rho = p.rho.as_deref_mut().expect("fused: missing rho");
-    let mq = p.mq.as_deref_mut().expect("fused: missing mq");
-    let ms = p.ms.as_deref_mut().expect("fused: missing ms");
+    let tp = layout_mut(p.theta_p.as_deref_mut(), "theta_p");
+    let rho = layout_mut(p.rho.as_deref_mut(), "rho");
+    let mq = layout_mut(p.mq.as_deref_mut(), "mq");
+    let ms = layout_mut(p.ms.as_deref_mut(), "ms");
     assert_eq!(tp.len(), n);
     assert_eq!(rho.len(), n);
     assert_eq!(mq.len(), n);
     assert_eq!(ms.len(), n / GROUP);
     let var = matches!(rule, FusedRule::AdamW);
     let (mut vq, mut vs) = if var {
-        let vq = p.vq.as_deref_mut().expect("fused: missing vq");
-        let vs = p.vs.as_deref_mut().expect("fused: missing vs");
+        let vq = layout_mut(p.vq.as_deref_mut(), "vq");
+        let vs = layout_mut(p.vs.as_deref_mut(), "vs");
         assert_eq!(vq.len(), n);
         assert_eq!(vs.len(), n / GROUP);
         (Some(vq), Some(vs))
@@ -130,8 +130,8 @@ fn fused_flash(p: &mut FusedPart<'_>, s: &StepScalars, rule: FusedRule,
         // update: the shared scalar rules (single source of truth)
         match rule {
             FusedRule::AdamW => {
-                let vq = vq.as_deref().unwrap();
-                let vs1 = &vs.as_deref().unwrap()[gi..gi + 1];
+                let vq = layout_ref(vq.as_deref(), "vq");
+                let vs1 = &layout_ref(vs.as_deref(), "vs")[gi..gi + 1];
                 if linear {
                     companding::dequant_variance_linear(&vq[lo..hi], vs1,
                                                         &mut v_w);
@@ -160,8 +160,9 @@ fn fused_flash(p: &mut FusedPart<'_>, s: &StepScalars, rule: FusedRule,
             companding::quant_momentum(&m_w, &mut mq[lo..hi], ms1);
         }
         if var {
-            let vq = vq.as_deref_mut().unwrap();
-            let vs1 = &mut vs.as_deref_mut().unwrap()[gi..gi + 1];
+            let vq = layout_mut(vq.as_deref_mut(), "vq");
+            let vs1 = &mut layout_mut(vs.as_deref_mut(),
+                                      "vs")[gi..gi + 1];
             if linear {
                 companding::quant_variance_linear(&v_w, &mut vq[lo..hi],
                                                   vs1);
@@ -179,13 +180,13 @@ fn fused_reference(p: &mut FusedPart<'_>, s: &StepScalars,
                    rule: FusedRule) {
     let n = p.g.len();
     assert_eq!(n % GROUP, 0, "fused kernels step whole groups");
-    let theta = p.theta.as_deref_mut().expect("fused: missing theta");
-    let m = p.m.as_deref_mut().expect("fused: missing m");
+    let theta = layout_mut(p.theta.as_deref_mut(), "theta");
+    let m = layout_mut(p.m.as_deref_mut(), "m");
     assert_eq!(theta.len(), n);
     assert_eq!(m.len(), n);
     match rule {
         FusedRule::AdamW => {
-            let v = p.v.as_deref_mut().expect("fused: missing v");
+            let v = layout_mut(p.v.as_deref_mut(), "v");
             assert_eq!(v.len(), n);
             scalar_ref::adamw_f32(theta, m, v, p.g, s);
         }
@@ -201,15 +202,15 @@ fn fused_wsplit(p: &mut FusedPart<'_>, s: &StepScalars,
                 rule: FusedRule) {
     let n = p.g.len();
     assert_eq!(n % GROUP, 0, "fused kernels step whole groups");
-    let tp = p.theta_p.as_deref_mut().expect("fused: missing theta_p");
-    let rho = p.rho.as_deref_mut().expect("fused: missing rho");
-    let m = p.m.as_deref_mut().expect("fused: missing m");
+    let tp = layout_mut(p.theta_p.as_deref_mut(), "theta_p");
+    let rho = layout_mut(p.rho.as_deref_mut(), "rho");
+    let m = layout_mut(p.m.as_deref_mut(), "m");
     assert_eq!(tp.len(), n);
     assert_eq!(rho.len(), n);
     assert_eq!(m.len(), n);
     let var = matches!(rule, FusedRule::AdamW);
     let mut v = if var {
-        let v = p.v.as_deref_mut().expect("fused: missing v");
+        let v = layout_mut(p.v.as_deref_mut(), "v");
         assert_eq!(v.len(), n);
         Some(v)
     } else {
@@ -225,7 +226,7 @@ fn fused_wsplit(p: &mut FusedPart<'_>, s: &StepScalars,
                                        &mut th_w);
         match rule {
             FusedRule::AdamW => {
-                let v = v.as_deref_mut().unwrap();
+                let v = layout_mut(v.as_deref_mut(), "v");
                 scalar_ref::adamw_f32(&mut th_w, &mut m[lo..hi],
                                       &mut v[lo..hi], g, s);
             }
@@ -247,16 +248,16 @@ fn fused_wsplit(p: &mut FusedPart<'_>, s: &StepScalars,
 fn fused_quant(p: &mut FusedPart<'_>, s: &StepScalars, rule: FusedRule) {
     let n = p.g.len();
     assert_eq!(n % GROUP, 0, "fused kernels step whole groups");
-    let theta = p.theta.as_deref_mut().expect("fused: missing theta");
-    let mq = p.mq.as_deref_mut().expect("fused: missing mq");
-    let ms = p.ms.as_deref_mut().expect("fused: missing ms");
+    let theta = layout_mut(p.theta.as_deref_mut(), "theta");
+    let mq = layout_mut(p.mq.as_deref_mut(), "mq");
+    let ms = layout_mut(p.ms.as_deref_mut(), "ms");
     assert_eq!(theta.len(), n);
     assert_eq!(mq.len(), n);
     assert_eq!(ms.len(), n / GROUP);
     let var = matches!(rule, FusedRule::AdamW);
     let (mut vq, mut vs) = if var {
-        let vq = p.vq.as_deref_mut().expect("fused: missing vq");
-        let vs = p.vs.as_deref_mut().expect("fused: missing vs");
+        let vq = layout_mut(p.vq.as_deref_mut(), "vq");
+        let vs = layout_mut(p.vs.as_deref_mut(), "vs");
         assert_eq!(vq.len(), n);
         assert_eq!(vs.len(), n / GROUP);
         (Some(vq), Some(vs))
@@ -274,8 +275,8 @@ fn fused_quant(p: &mut FusedPart<'_>, s: &StepScalars, rule: FusedRule) {
                                      &mut m_w);
         match rule {
             FusedRule::AdamW => {
-                let vq_s = vq.as_deref().unwrap();
-                let vs_s = &vs.as_deref().unwrap()[gi..gi + 1];
+                let vq_s = layout_ref(vq.as_deref(), "vq");
+                let vs_s = &layout_ref(vs.as_deref(), "vs")[gi..gi + 1];
                 companding::dequant_variance(&vq_s[lo..hi], vs_s,
                                              &mut v_w);
                 scalar_ref::adamw_f32(&mut theta[lo..hi], &mut m_w,
@@ -291,8 +292,9 @@ fn fused_quant(p: &mut FusedPart<'_>, s: &StepScalars, rule: FusedRule) {
         companding::quant_momentum(&m_w, &mut mq[lo..hi],
                                    &mut ms[gi..gi + 1]);
         if var {
-            let vq_s = vq.as_deref_mut().unwrap();
-            let vs_s = &mut vs.as_deref_mut().unwrap()[gi..gi + 1];
+            let vq_s = layout_mut(vq.as_deref_mut(), "vq");
+            let vs_s = &mut layout_mut(vs.as_deref_mut(),
+                                       "vs")[gi..gi + 1];
             companding::quant_variance(&v_w, &mut vq_s[lo..hi], vs_s);
         }
     }

@@ -29,6 +29,12 @@
 //! cargo run --release --example quickstart
 //! ```
 
+// Every unsafe operation must sit in an explicit `unsafe {}` block
+// even inside `unsafe fn` — the static-analysis pass (rule A1,
+// docs/ANALYSIS.md) then pins a SAFETY justification to each block.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analyze;
 pub mod backend;
 pub mod checkpoint;
 pub mod config;

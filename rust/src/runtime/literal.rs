@@ -14,6 +14,9 @@ use crate::formats::{bf16, fp16};
 
 /// f32 vector literal (1-D unless dims given).
 pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    // SAFETY: viewing a POD `[f32]` as bytes — `u8` has
+    // alignment 1, the length is exactly `size_of_val(data)`,
+    // and the view borrows `data` so it cannot outlive it.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8,
                                    data.len() * 4)
@@ -24,6 +27,9 @@ pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
 
 /// i32 literal.
 pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    // SAFETY: viewing a POD `[i32]` as bytes — `u8` has
+    // alignment 1, the length is exactly `size_of_val(data)`,
+    // and the view borrows `data` so it cannot outlive it.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8,
                                    data.len() * 4)
@@ -34,6 +40,9 @@ pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
 
 /// bf16 literal from raw bits.
 pub fn lit_bf16_bits(bits: &[u16], dims: &[usize]) -> Result<Literal> {
+    // SAFETY: viewing a POD `[u16]` as bytes — `u8` has
+    // alignment 1, the length is exactly `size_of_val(bits)`,
+    // and the view borrows `bits` so it cannot outlive it.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(bits.as_ptr() as *const u8,
                                    bits.len() * 2)
@@ -44,6 +53,9 @@ pub fn lit_bf16_bits(bits: &[u16], dims: &[usize]) -> Result<Literal> {
 
 /// f16 literal from raw bits.
 pub fn lit_f16_bits(bits: &[u16], dims: &[usize]) -> Result<Literal> {
+    // SAFETY: viewing a POD `[u16]` as bytes — `u8` has
+    // alignment 1, the length is exactly `size_of_val(bits)`,
+    // and the view borrows `bits` so it cannot outlive it.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(bits.as_ptr() as *const u8,
                                    bits.len() * 2)
@@ -54,6 +66,9 @@ pub fn lit_f16_bits(bits: &[u16], dims: &[usize]) -> Result<Literal> {
 
 /// i8 literal.
 pub fn lit_i8(data: &[i8], dims: &[usize]) -> Result<Literal> {
+    // SAFETY: viewing a POD `[i8]` as bytes — `u8` has
+    // alignment 1, the length is exactly `size_of_val(data)`,
+    // and the view borrows `data` so it cannot outlive it.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len())
     };
@@ -63,6 +78,9 @@ pub fn lit_i8(data: &[i8], dims: &[usize]) -> Result<Literal> {
 
 /// i16 literal.
 pub fn lit_i16(data: &[i16], dims: &[usize]) -> Result<Literal> {
+    // SAFETY: viewing a POD `[i16]` as bytes — `u8` has
+    // alignment 1, the length is exactly `size_of_val(data)`,
+    // and the view borrows `data` so it cannot outlive it.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8,
                                    data.len() * 2)

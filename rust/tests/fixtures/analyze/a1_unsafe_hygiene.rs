@@ -1,0 +1,23 @@
+// A1 negative fixture (never compiled — scanned as text by
+// tests/static_analysis.rs under a synthetic rust/src/ path).
+
+/// Justified: contiguous comment block above the keyword.
+pub fn good(p: *const u8) -> u8 {
+    // SAFETY: fixture — `p` is valid for reads by construction.
+    unsafe { *p }
+}
+
+pub fn also_good(p: *const u8) -> u8 {
+    unsafe { *p } // SAFETY: trailing justification on the same line
+}
+
+pub fn bad(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+
+// a comment that is not a justification
+
+pub fn bad_too(p: *const u8) -> u8 {
+    // this comment block has no justification keyword in it
+    unsafe { *p }
+}

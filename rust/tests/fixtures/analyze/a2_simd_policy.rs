@@ -1,0 +1,24 @@
+// A2 negative fixture (never compiled — scanned as text by
+// tests/static_analysis.rs under the synthetic path
+// rust/src/kernels/avx2.rs).
+
+fn fixture(a: __m256, b: __m256, c: __m256) -> __m256 {
+    // allowlisted + correctly pinned RNE immediate: no findings
+    let ok = _mm256_add_ps(a, b);
+    let ok2 = _mm256_round_ps::<{
+        _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC
+    }>(ok);
+
+    // forbidden: FMA contracts two roundings into one
+    let bad_fma = _mm256_fmadd_ps(a, b, c);
+
+    // not on the audited allowlist
+    let bad_unknown = _mm256_madd_epi16(a, b);
+
+    // non-RNE rounding immediate
+    let bad_round = _mm256_round_ps::<{ _MM_FROUND_TO_ZERO }>(a);
+
+    // immediate not pinned at the call site
+    let bad_unpinned = _mm256_round_ps(a);
+    bad_unpinned
+}

@@ -1,0 +1,12 @@
+// A3 negative fixture: the pre-totality 7-row bench table.  Scanned
+// as text under the synthetic path rust/benches/kernel_hotpath.rs.
+
+const STEP_ROWS: [(OptKind, Variant); 7] = [
+    (OptKind::AdamW, Variant::Reference),
+    (OptKind::AdamW, Variant::Flash),
+    (OptKind::AdamW, Variant::WeightSplit),
+    (OptKind::AdamW, Variant::OptQuant),
+    (OptKind::AdamW, Variant::NoCompand),
+    (OptKind::Sgd, Variant::Flash),
+    (OptKind::Lion, Variant::Flash),
+];

@@ -1,0 +1,11 @@
+// A3 negative fixture: a fuzz universe that dropped Lion.  Scanned
+// as text under the synthetic path rust/tests/fused_fuzz.rs.
+
+const ALL_OPTS: [OptKind; 2] = [OptKind::Sgd, OptKind::AdamW];
+const ALL_VARIANTS: [Variant; 5] = [
+    Variant::Reference,
+    Variant::Flash,
+    Variant::WeightSplit,
+    Variant::OptQuant,
+    Variant::NoCompand,
+];

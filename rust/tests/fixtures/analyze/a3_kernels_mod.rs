@@ -1,0 +1,43 @@
+// A3 negative fixture: a KernelSet whose fused coverage dropped
+// (Lion, OptQuant) and grew an unmappable field, with a fused_step
+// match that also lost the (Lion, OptQuant) arm.  Scanned as text
+// under the synthetic path rust/src/kernels/mod.rs.
+
+pub struct KernelSet {
+    pub fused_step_adamw: FusedFn,
+    pub fused_step_sgdm: FusedFn,
+    pub fused_step_lion: FusedFn,
+    pub fused_step_adamw_nocompand: FusedFn,
+    pub fused_step_sgdm_nocompand: FusedFn,
+    pub fused_step_lion_nocompand: FusedFn,
+    pub fused_step_adamw_reference: FusedFn,
+    pub fused_step_sgdm_reference: FusedFn,
+    pub fused_step_lion_reference: FusedFn,
+    pub fused_step_adamw_wsplit: FusedFn,
+    pub fused_step_sgdm_wsplit: FusedFn,
+    pub fused_step_lion_wsplit: FusedFn,
+    pub fused_step_adamw_quant: FusedFn,
+    pub fused_step_sgdm_quant: FusedFn,
+    pub fused_step_rmsprop: FusedFn,
+}
+
+impl KernelSet {
+    pub fn fused_step(&self, opt: OptKind, variant: Variant) -> FusedFn {
+        match (opt, variant) {
+            (OptKind::AdamW, Variant::Flash) => self.fused_step_adamw,
+            (OptKind::Sgd, Variant::Flash) => self.fused_step_sgdm,
+            (OptKind::Lion, Variant::Flash) => self.fused_step_lion,
+            (OptKind::AdamW, Variant::NoCompand) => todo(),
+            (OptKind::Sgd, Variant::NoCompand) => todo(),
+            (OptKind::Lion, Variant::NoCompand) => todo(),
+            (OptKind::AdamW, Variant::Reference) => todo(),
+            (OptKind::Sgd, Variant::Reference) => todo(),
+            (OptKind::Lion, Variant::Reference) => todo(),
+            (OptKind::AdamW, Variant::WeightSplit) => todo(),
+            (OptKind::Sgd, Variant::WeightSplit) => todo(),
+            (OptKind::Lion, Variant::WeightSplit) => todo(),
+            (OptKind::AdamW, Variant::OptQuant) => todo(),
+            (OptKind::Sgd, Variant::OptQuant) => todo(),
+        }
+    }
+}

@@ -1,0 +1,25 @@
+// A4 negative fixture (never compiled — scanned as text by
+// tests/static_analysis.rs under a synthetic rust/src/backend/ path).
+
+pub fn hot(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+
+pub fn justified(x: Option<u32>) -> u32 {
+    // analyze: allow(panic_policy) — fixture: structurally
+    // guaranteed present by the caller.
+    x.expect("present")
+}
+
+pub fn strings_do_not_count() -> &'static str {
+    "call .unwrap() and .expect() here all you like"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_panic() {
+        Some(1).unwrap();
+        Some(2).expect("fine in tests");
+    }
+}

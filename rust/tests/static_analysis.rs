@@ -1,0 +1,219 @@
+//! Tier-1 gate for `flashoptim-analyze` (rule catalog in
+//! docs/ANALYSIS.md):
+//!
+//! * `repo_is_clean` runs every rule over the real checkout and fails
+//!   on any finding — the same pass the
+//!   `cargo run --bin flashoptim-analyze` CLI and both CI matrix legs
+//!   run;
+//! * one negative test per rule scans a planted fixture
+//!   (`tests/fixtures/analyze/`, never compiled) under a
+//!   scope-matched synthetic path and asserts the rule fires with
+//!   `file:line` diagnostics;
+//! * `docs_table_matches_registry` keeps the docs/ANALYSIS.md rule
+//!   table cell-for-cell in sync with the registry.
+
+use std::path::Path;
+
+use flashtrain::analyze::rules::rules;
+use flashtrain::analyze::{run, Corpus, Finding};
+
+fn repo_root() -> &'static Path {
+    // the crate lives at <repo>/rust
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+}
+
+fn findings_for(rule: &str, findings: &[Finding]) -> Vec<Finding> {
+    findings.iter().filter(|f| f.rule == rule).cloned().collect()
+}
+
+fn render(findings: &[Finding]) -> String {
+    findings
+        .iter()
+        .map(|f| f.to_string())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+// ---------------------------------------------------------------------------
+// the gate: zero findings over the real tree
+
+#[test]
+fn repo_is_clean() {
+    let findings = flashtrain::analyze::run_repo(repo_root())
+        .expect("reading the repo corpus");
+    assert!(
+        findings.is_empty(),
+        "static analysis found {} violation(s):\n{}",
+        findings.len(),
+        render(&findings)
+    );
+}
+
+// ---------------------------------------------------------------------------
+// per-rule negative fixtures
+
+#[test]
+fn a1_flags_unjustified_unsafe() {
+    let c = Corpus::from_sources(vec![(
+        "rust/src/fixture_a1.rs",
+        include_str!("fixtures/analyze/a1_unsafe_hygiene.rs").into(),
+    )]);
+    let a1 = findings_for("A1", &run(&c));
+    // `bad` and `bad_too` fire; the two justified sites do not
+    assert_eq!(a1.len(), 2, "{}", render(&a1));
+    assert!(a1.iter().all(|f| f.path == "rust/src/fixture_a1.rs"));
+    assert_eq!([a1[0].line, a1[1].line], [15, 22], "{}", render(&a1));
+}
+
+#[test]
+fn a2_flags_fma_unknown_and_non_rne() {
+    let c = Corpus::from_sources(vec![(
+        "rust/src/kernels/avx2.rs",
+        include_str!("fixtures/analyze/a2_simd_policy.rs").into(),
+    )]);
+    let a2 = findings_for("A2", &run(&c));
+    let count = |needle: &str| {
+        a2.iter().filter(|f| f.msg.contains(needle)).count()
+    };
+    assert_eq!(count("forbidden intrinsic `_mm256_fmadd_ps`"), 1,
+               "{}", render(&a2));
+    assert_eq!(count("`_mm256_madd_epi16` is not on the audited"), 1,
+               "{}", render(&a2));
+    assert_eq!(count("non-RNE rounding immediate"), 1, "{}",
+               render(&a2));
+    assert_eq!(count("not pinned at the call site"), 1, "{}",
+               render(&a2));
+    // the stray _MM_FROUND_TO_ZERO const also falls off the allowlist
+    assert_eq!(a2.len(), 5, "{}", render(&a2));
+}
+
+#[test]
+fn a3_flags_dropped_pairs_everywhere() {
+    let c = Corpus::from_sources(vec![
+        (
+            "rust/src/kernels/mod.rs",
+            include_str!("fixtures/analyze/a3_kernels_mod.rs").into(),
+        ),
+        (
+            "rust/tests/fused_fuzz.rs",
+            include_str!("fixtures/analyze/a3_fused_fuzz.rs").into(),
+        ),
+        (
+            "rust/benches/kernel_hotpath.rs",
+            include_str!("fixtures/analyze/a3_bench.rs").into(),
+        ),
+    ]);
+    let a3 = findings_for("A3", &run(&c));
+    let count = |needle: &str| {
+        a3.iter().filter(|f| f.msg.contains(needle)).count()
+    };
+    // fields: (Lion, OptQuant) dropped + one unmappable extra
+    assert_eq!(count("KernelSet fused fields is missing"), 1, "{}",
+               render(&a3));
+    assert_eq!(count("does not map to a known"), 1, "{}", render(&a3));
+    // match: the same dropped arm
+    assert_eq!(count("fused_step match is missing"), 1, "{}",
+               render(&a3));
+    // fuzz universe: Lion × all 5 variants
+    assert_eq!(count("ALL_OPTS × ALL_VARIANTS is missing"), 5, "{}",
+               render(&a3));
+    // bench: the 8 rows the 7-row table never had
+    assert_eq!(count("bench STEP_ROWS is missing"), 8, "{}",
+               render(&a3));
+    assert_eq!(a3.len(), 16, "{}", render(&a3));
+}
+
+#[test]
+fn a3_is_silent_on_the_real_universe() {
+    // the real tree already passes via repo_is_clean; this pins that
+    // A3 specifically ran there (an anchor rename would otherwise
+    // surface as a confusing missing_anchor finding)
+    let findings = flashtrain::analyze::run_repo(repo_root())
+        .expect("reading the repo corpus");
+    let a3 = findings_for("A3", &findings);
+    assert!(a3.is_empty(), "{}", render(&a3));
+}
+
+#[test]
+fn a4_flags_hot_path_panics_only() {
+    let c = Corpus::from_sources(vec![(
+        "rust/src/backend/fixture_a4.rs",
+        include_str!("fixtures/analyze/a4_panic_policy.rs").into(),
+    )]);
+    let a4 = findings_for("A4", &run(&c));
+    // only the untagged, non-test `.unwrap()` fires; the suppressed
+    // `.expect()`, the string literal, and the cfg(test) mod do not
+    assert_eq!(a4.len(), 1, "{}", render(&a4));
+    assert_eq!(a4[0].line, 5, "{}", render(&a4));
+    assert!(a4[0].msg.contains("`.unwrap()`"), "{}", render(&a4));
+}
+
+#[test]
+fn a4_ignores_out_of_scope_paths() {
+    let c = Corpus::from_sources(vec![(
+        "rust/src/util/fixture_a4.rs",
+        include_str!("fixtures/analyze/a4_panic_policy.rs").into(),
+    )]);
+    assert!(findings_for("A4", &run(&c)).is_empty());
+}
+
+#[test]
+fn a5_flags_registry_deps() {
+    let c = Corpus::from_sources(vec![(
+        "rust/fixture/Cargo.toml",
+        include_str!("fixtures/analyze/a5_cargo.toml").into(),
+    )]);
+    let a5 = findings_for("A5", &run(&c));
+    let count = |needle: &str| {
+        a5.iter().filter(|f| f.msg.contains(needle)).count()
+    };
+    // xla from the registry instead of the vendored path shim
+    assert_eq!(count("`xla` must be the vendored path shim"), 1, "{}",
+               render(&a5));
+    // serde inline + criterion table-header, both off the allowlist
+    assert_eq!(count("`serde` is outside the offline allowlist"), 1,
+               "{}", render(&a5));
+    assert_eq!(count("`criterion` is outside the offline allowlist"),
+               1, "{}", render(&a5));
+    assert_eq!(a5.len(), 3, "{}", render(&a5));
+}
+
+// ---------------------------------------------------------------------------
+// docs/ANALYSIS.md stays in sync with the registry
+
+#[test]
+fn docs_table_matches_registry() {
+    let doc = std::fs::read_to_string(
+        repo_root().join("docs/ANALYSIS.md"))
+        .expect("docs/ANALYSIS.md exists");
+    let mut rows: Vec<(String, String, String)> = Vec::new();
+    for line in doc.lines() {
+        let cells: Vec<&str> =
+            line.split('|').map(str::trim).collect();
+        // | id | name | summary | → ["", id, name, summary, ""]
+        if cells.len() == 5
+            && cells[1].len() == 2
+            && cells[1].starts_with('A')
+            && cells[1][1..].chars().all(|c| c.is_ascii_digit())
+        {
+            rows.push((cells[1].into(), cells[2].into(),
+                       cells[3].into()));
+        }
+    }
+    let want: Vec<(String, String, String)> = rules()
+        .iter()
+        .map(|r| {
+            (r.id.to_string(), format!("`{}`", r.name),
+             r.summary.to_string())
+        })
+        .collect();
+    assert_eq!(
+        rows, want,
+        "docs/ANALYSIS.md rule table is out of sync with \
+         analyze::rules::rules() — regenerate the table from the \
+         registry (one `| id | `name` | summary |` row per rule, in \
+         order)"
+    );
+}
