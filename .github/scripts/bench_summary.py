@@ -5,7 +5,10 @@ Dispatches on the document's `bench` field:
 * `kernel_hotpath` (BENCH_kernels.json, schema v3) — the
   fused-vs-tiled section;
 * `train_step` (BENCH_train.json, schema v1) — batch vs
-  gradient-release streaming step time and peak bytes/param.
+  gradient-release streaming vs shard-owner sharded step time and
+  peak bytes/param;
+* `checkpoint` (BENCH_checkpoint.json, schema v1) — serial vs
+  shard-parallel checkpoint save/load throughput.
 
 Usage: bench_summary.py BENCH_<name>.json >> "$GITHUB_STEP_SUMMARY"
 
@@ -64,7 +67,7 @@ def render_kernels(doc):
 def render_train(doc):
     schema = doc.get("schema_version")
     rows = doc.get("rows", [])
-    print("## train step: batch vs gradient-release streaming")
+    print("## train step: batch vs streaming vs sharded")
     print()
     print(
         f"schema v{schema:g} · {doc.get('params'):,} params · "
@@ -77,19 +80,25 @@ def render_train(doc):
     for e in rows:
         pair = f"{e['optimizer']}/{e['variant']}"
         by_pair.setdefault(pair, {})[e["mode"]] = e
-    print("| optimizer/variant | batch | streaming | step overhead |"
+    print("| optimizer/variant | batch | streaming | sharded |"
+          " sharded speedup |"
           " peak B/param batch | peak B/param streaming |")
-    print("|---|---|---|---|---|---|")
+    print("|---|---|---|---|---|---|---|")
     for pair, modes in by_pair.items():
         b, s = modes.get("batch"), modes.get("streaming")
+        sh = modes.get("sharded")
         if not b or not s:
-            print(f"| {pair} | _missing a mode_ | | | | |")
+            print(f"| {pair} | _missing a mode_ | | | | | |")
             continue
-        over = s["median_s"] / b["median_s"] - 1.0
+        sh_med = fmt_time(sh["median_s"]) if sh else "—"
+        sh_speed = (
+            f"{b['median_s'] / sh['median_s']:.2f}x" if sh else "—"
+        )
         print(
             f"| {pair} | {fmt_time(b['median_s'])} "
             f"| {fmt_time(s['median_s'])} "
-            f"| {over:+.1%} "
+            f"| {sh_med} "
+            f"| {sh_speed} "
             f"| {b['peak_bytes_per_param']:.3f} "
             f"| {s['peak_bytes_per_param']:.3f} |"
         )
@@ -98,7 +107,46 @@ def render_train(doc):
         print("_no rows in the bench output_")
     print()
     print(f"{len(rows)} rows · {len(by_pair)} (optimizer, variant) "
-          f"pairs × 2 modes")
+          f"pairs × 3 modes")
+
+
+def render_checkpoint(doc):
+    schema = doc.get("schema_version")
+    rows = doc.get("rows", [])
+    print("## checkpoint v2: serial vs shard-parallel section I/O")
+    print()
+    print(
+        f"schema v{schema:g} · {doc.get('params'):,} params · "
+        f"{doc.get('file_bytes'):,} file bytes · "
+        f"{doc.get('threads')} threads · "
+        f"check={str(doc.get('check')).lower()}"
+    )
+    print()
+    by_op = {}
+    for e in rows:
+        by_op.setdefault(e["op"], {})[e["mode"]] = e
+    print("| op | serial | parallel | speedup |"
+          " MB/s serial | MB/s parallel |")
+    print("|---|---|---|---|---|---|")
+    for op, modes in by_op.items():
+        ser, par = modes.get("serial"), modes.get("parallel")
+        if not ser or not par:
+            print(f"| {op} | _missing a mode_ | | | | |")
+            continue
+        speed = ser["median_s"] / par["median_s"]
+        print(
+            f"| {op} | {fmt_time(ser['median_s'])} "
+            f"| {fmt_time(par['median_s'])} "
+            f"| {speed:.2f}x "
+            f"| {ser['mb_per_s']:.0f} "
+            f"| {par['mb_per_s']:.0f} |"
+        )
+    if not rows:
+        print()
+        print("_no rows in the bench output_")
+    print()
+    print(f"{len(rows)} rows · {len(by_op)} ops × 2 modes "
+          f"(parallel bytes are bit-identical to serial)")
 
 
 def main():
@@ -110,6 +158,8 @@ def main():
     bench = doc.get("bench")
     if bench == "train_step":
         render_train(doc)
+    elif bench == "checkpoint":
+        render_checkpoint(doc)
     elif bench == "kernel_hotpath":
         render_kernels(doc)
     else:

@@ -1,0 +1,237 @@
+//! Bench: checkpoint v2 save/load wall time, **serial vs
+//! shard-parallel section I/O** — the parallel writer computes
+//! per-shard CRC32s on the step worker pool and pipelines the file
+//! write with the checksum passes, producing bytes that are
+//! bit-identical to the serial writer.  Writes
+//! `BENCH_checkpoint.json` (schema v1, described in docs/PERF.md)
+//! next to the other bench artifacts so checkpoint throughput is
+//! diffable across PRs.
+//!
+//!   cargo bench --bench checkpoint -- [--quick] [--check]
+//!       [--threads T] [--params N] [--out BENCH_checkpoint.json]
+//!
+//! `--check` is the CI smoke mode: small sizes, and the invariants
+//! the bench asserts in every mode — the parallel save emits bytes
+//! identical to the serial writer, both loaders read both files to
+//! the same state, and the emitted JSON parses and is op×mode
+//! complete.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use flashtrain::backend::ParallelBackend;
+use flashtrain::checkpoint::{load_state_dict, load_state_dict_sharded,
+                             save_state_dict, save_state_dict_sharded};
+use flashtrain::config::{BackendKind, Json, OptKind, TrainConfig,
+                         Variant};
+use flashtrain::formats::bf16;
+use flashtrain::optim::{FlashOptimizer, GroupHyper, GroupSpec,
+                        HyperDefaults, StateDict};
+use flashtrain::util::bench::{bench_for, fmt_time};
+use flashtrain::util::cli::Args;
+use flashtrain::util::rng::Rng;
+use flashtrain::util::table::Table;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "flashtrain_bench_ckpt_{}_{name}", std::process::id()))
+}
+
+/// A realistic dict: two groups (decay / no-decay split), AdamW/Flash
+/// compact state after a couple of real steps.
+fn build_dict(n: usize, bucket: usize) -> StateDict {
+    let mut rng = Rng::new(0xC4EC ^ n as u64);
+    let theta0: Vec<f32> =
+        (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+    let cfg = TrainConfig {
+        optimizer: OptKind::AdamW,
+        ..Default::default()
+    };
+    let split = n / 2;
+    let specs = vec![
+        GroupSpec {
+            name: "decay".into(),
+            ranges: vec![(0, split)],
+            hyper: GroupHyper::default(),
+        },
+        GroupSpec {
+            name: "no_decay".into(),
+            ranges: vec![(split, n)],
+            hyper: GroupHyper {
+                weight_decay: Some(0.0),
+                ..GroupHyper::default()
+            },
+        },
+    ];
+    let mut fo = FlashOptimizer::native(
+        OptKind::AdamW, Variant::Flash, bucket, &theta0, specs,
+        HyperDefaults::of(&cfg), BackendKind::Scalar, 0)
+        .expect("building the checkpoint bench optimizer");
+    for t in 1..=2usize {
+        let g: Vec<f32> = (0..n)
+            .map(|_| {
+                bf16::round_f32_to_bf16(rng.normal() as f32 * 0.01)
+            })
+            .collect();
+        fo.step(&g, 1e-3, t, |_, _| {}).unwrap();
+    }
+    fo.state_dict(2)
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect::<BTreeMap<String, Json>>())
+}
+
+fn main() {
+    let args = Args::parse();
+    let check = args.flag("check");
+    let quick = args.flag("quick") || check;
+    let budget = if check {
+        0.02
+    } else if quick {
+        0.2
+    } else {
+        1.0
+    };
+    let n =
+        args.get_usize("params", if check { 1 << 14 } else { 1 << 21 });
+    let bucket = 16 * 1024;
+    let threads = args.get_usize("threads", 4);
+    let pb = ParallelBackend::new(threads);
+    let nthreads = pb.threads();
+    let default_out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package dir has a parent")
+        .join("BENCH_checkpoint.json");
+    let out_path = args
+        .get("out")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| default_out.to_string_lossy().into_owned());
+
+    let sd = build_dict(n, bucket);
+    let p_serial = tmp("serial.ckpt");
+    let p_par = tmp("parallel.ckpt");
+
+    // the invariant the whole feature rests on, asserted in every
+    // mode before any timing: identical bytes, cross-readable files
+    let file_bytes = save_state_dict(&p_serial, &sd).unwrap();
+    pb.with_pool(|pool| save_state_dict_sharded(&p_par, &sd, pool))
+        .unwrap();
+    let bytes_serial = std::fs::read(&p_serial).unwrap();
+    let bytes_par = std::fs::read(&p_par).unwrap();
+    assert!(bytes_serial == bytes_par,
+            "parallel save is not byte-identical to the serial \
+             writer ({} vs {} bytes)",
+            bytes_serial.len(), bytes_par.len());
+    // cross-read: serial loader on the parallel file and vice versa,
+    // then re-serialize each — landing on the original bytes proves
+    // state equality without a field-by-field walk
+    let ld_a = load_state_dict(&p_par).unwrap();
+    let ld_b =
+        pb.with_pool(|pool| load_state_dict_sharded(&p_serial, pool))
+            .unwrap();
+    for (what, ld) in [("serial loader", &ld_a),
+                       ("parallel loader", &ld_b)] {
+        let p_rt = tmp("roundtrip.ckpt");
+        save_state_dict(&p_rt, ld).unwrap();
+        let rt = std::fs::read(&p_rt).unwrap();
+        assert!(rt == bytes_serial,
+                "{what} round-trip did not reproduce the original \
+                 bytes");
+        std::fs::remove_file(&p_rt).ok();
+    }
+
+    let mut t = Table::new(
+        &format!("checkpoint v2: serial vs shard-parallel section \
+                  I/O ({n} params, {file_bytes} bytes, \
+                  parallel={nthreads} threads)"),
+        &["op", "mode", "median", "MB/s"]);
+    let mut rows_json: Vec<Json> = Vec::new();
+    for (op, mode) in [("save", "serial"), ("save", "parallel"),
+                       ("load", "serial"), ("load", "parallel")] {
+        let label = format!("{op} {mode}");
+        let r = bench_for(&label, budget, 3, || match (op, mode) {
+            ("save", "serial") => {
+                save_state_dict(&p_serial, &sd).unwrap();
+            }
+            ("save", "parallel") => {
+                pb.with_pool(|pool| {
+                    save_state_dict_sharded(&p_par, &sd, pool)
+                })
+                    .unwrap();
+            }
+            ("load", "serial") => {
+                load_state_dict(&p_serial).unwrap();
+            }
+            _ => {
+                pb.with_pool(|pool| {
+                    load_state_dict_sharded(&p_par, pool)
+                })
+                    .unwrap();
+            }
+        });
+        let med = r.median_s();
+        let mbps = file_bytes as f64 / med / 1e6;
+        t.row(&[op.into(), mode.into(), fmt_time(med),
+                format!("{mbps:.0}")]);
+        rows_json.push(obj(vec![
+            ("op", Json::Str(op.into())),
+            ("mode", Json::Str(mode.into())),
+            ("median_s", Json::Num(med)),
+            ("mb_per_s", Json::Num(mbps)),
+        ]));
+    }
+    t.print();
+    if check {
+        println!("checkpoint check OK: parallel save byte-identical \
+                  to serial, loaders cross-read ({nthreads} threads)");
+    }
+    std::fs::remove_file(&p_serial).ok();
+    std::fs::remove_file(&p_par).ok();
+
+    // ---- machine-readable output ------------------------------------------
+    // schema v1: one row per (op, mode) with the wall-time median and
+    // file-size throughput
+    let doc = obj(vec![
+        ("bench", Json::Str("checkpoint".into())),
+        ("schema_version", Json::Num(1.0)),
+        ("quick", Json::Bool(quick)),
+        ("check", Json::Bool(check)),
+        ("params", Json::Num(n as f64)),
+        ("file_bytes", Json::Num(file_bytes as f64)),
+        ("threads", Json::Num(nthreads as f64)),
+        ("rows", Json::Arr(rows_json)),
+    ]);
+    let text = doc.to_string_pretty();
+    let parsed = Json::parse(&text).expect("emitted JSON must parse");
+    let rows = parsed
+        .get("rows")
+        .and_then(Json::as_arr)
+        .expect("rows section present");
+    assert_eq!(rows.len(), 4, "one row per (op, mode)");
+    let mut seen = std::collections::BTreeSet::new();
+    for e in rows {
+        for key in ["op", "mode"] {
+            assert!(e.get(key).and_then(Json::as_str).is_some(),
+                    "row missing string {key}");
+        }
+        for key in ["median_s", "mb_per_s"] {
+            assert!(e.get(key).and_then(Json::as_f64).is_some(),
+                    "row missing number {key}");
+        }
+        seen.insert(format!(
+            "{}/{}",
+            e.get("op").and_then(Json::as_str).unwrap(),
+            e.get("mode").and_then(Json::as_str).unwrap()));
+    }
+    for want in ["save/serial", "save/parallel", "load/serial",
+                 "load/parallel"] {
+        assert!(seen.contains(want), "missing row {want}");
+    }
+    std::fs::write(&out_path, text + "\n")
+        .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
+    println!("wrote {out_path}");
+}

@@ -1,19 +1,21 @@
 //! Bench: full optimizer-step wall time + tracker-measured peak
-//! bytes/param, **batch vs gradient-release streaming** — the paper's
-//! 7-vs-5-bytes/param claim as a same-machine, machine-readable
-//! number.  Writes `BENCH_train.json` (schema v1, described in
-//! docs/PERF.md) next to `BENCH_kernels.json` so the memory/speed
-//! trade of the streaming step is diffable across PRs.
+//! bytes/param, **batch vs gradient-release streaming vs shard-owner
+//! sharded** — the paper's 7-vs-5-bytes/param claim as a
+//! same-machine, machine-readable number, plus the sharded mode's
+//! zero-staging dispatch on the same rows.  Writes `BENCH_train.json`
+//! (schema v1, described in docs/PERF.md) next to
+//! `BENCH_kernels.json` so the memory/speed trade of the streaming
+//! and sharded steps is diffable across PRs.
 //!
 //!   cargo bench --bench train_step -- [--quick] [--check]
 //!       [--threads T] [--params N] [--bucket B]
 //!       [--out BENCH_train.json]
 //!
 //! `--check` is the CI smoke mode: small sizes, asserts that the
-//! streaming step is bit-exact to the batch step (same final state,
-//! same bf16 compute weights), that its measured gradient high-water
-//! mark stays under the batch footprint for every pair, and that the
-//! emitted JSON parses and is pair×mode complete.
+//! streaming and sharded steps are bit-exact to the batch step (same
+//! final state, same bf16 compute weights), that streaming's measured
+//! gradient high-water mark stays under the batch footprint for every
+//! pair, and that the emitted JSON parses and is pair×mode complete.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -82,11 +84,14 @@ fn build(opt: OptKind, variant: Variant, n: usize, bucket: usize,
 /// (Params + OptimState + Gradients), two steps.  Returns the peak
 /// bytes/param and the streaming live-gradient high-water mark (0 in
 /// batch mode).  Footprint is engine-invariant, so this always runs
-/// the cheap scalar backend.
-fn measure_peak(opt: OptKind, variant: Variant, streaming: bool,
+/// the cheap scalar backend; sharded mode re-partitions work, not
+/// state, so its resident footprint is the batch one.
+fn measure_peak(opt: OptKind, variant: Variant, mode: &str,
                 n: usize, bucket: usize) -> (f64, u64) {
+    let streaming = mode == "streaming";
     let mut fo =
         build(opt, variant, n, bucket, BackendKind::Scalar, 0);
+    fo.set_shard_state(mode == "sharded");
     let mut tracker = Tracker::new();
     fo.track(&mut tracker);
     let gbytes = grad_elem_bytes(variant);
@@ -138,27 +143,35 @@ fn assert_states_bit_equal(a: &State, b: &State, what: &str) {
     }
 }
 
-/// `--check`: the streaming step must land on the exact batch bits —
-/// same per-group state, same bf16 compute weights — after a short
-/// multi-step run on the parallel backend (overlap path included).
+/// `--check`: the streaming and shard-owner sharded steps must land
+/// on the exact batch bits — same per-group state, same bf16 compute
+/// weights — after a short multi-step run on the parallel backend
+/// (overlap and shard-local reduce paths included).
 fn check_bit_exact(opt: OptKind, variant: Variant, label: &str,
                    n: usize, bucket: usize, threads: usize) {
     let mut a =
         build(opt, variant, n, bucket, BackendKind::Parallel, threads);
     let mut b =
         build(opt, variant, n, bucket, BackendKind::Parallel, threads);
+    let mut c =
+        build(opt, variant, n, bucket, BackendKind::Parallel, threads);
+    c.set_shard_state(true);
     for t in 1..=3usize {
         let g = grad(n, variant, 0xB17 + t as u64);
         a.step(&g, 1e-3, t, |_, _| {}).unwrap();
         b.step_streaming(&g, 1e-3, t, |_, _| {}).unwrap();
+        c.step(&g, 1e-3, t, |_, _| {}).unwrap();
     }
-    for (ga, gb) in a.groups.iter().zip(&b.groups) {
-        assert_states_bit_equal(
-            &ga.opt.state, &gb.opt.state,
-            &format!("{label} streaming vs batch ({})", ga.name));
+    for (name, other) in [("streaming", &b), ("sharded", &c)] {
+        for (ga, gb) in a.groups.iter().zip(&other.groups) {
+            assert_states_bit_equal(
+                &ga.opt.state, &gb.opt.state,
+                &format!("{label} {name} vs batch ({})", ga.name));
+        }
+        assert_eq!(a.compute_weights_bf16(n),
+                   other.compute_weights_bf16(n),
+                   "{label}: {name} compute weights drifted");
     }
-    assert_eq!(a.compute_weights_bf16(n), b.compute_weights_bf16(n),
-               "{label}: streaming compute weights drifted");
 }
 
 fn obj(entries: Vec<(&str, Json)>) -> Json {
@@ -196,18 +209,20 @@ fn main() {
         .unwrap_or_else(|| default_out.to_string_lossy().into_owned());
 
     let mut t = Table::new(
-        &format!("train step: batch vs gradient-release streaming \
-                  ({n} params, bucket {bucket}, parallel={nthreads} \
-                  threads)"),
+        &format!("train step: batch vs gradient-release streaming vs \
+                  shard-owner sharded ({n} params, bucket {bucket}, \
+                  parallel={nthreads} threads)"),
         &["variant", "mode", "median", "Mparam/s", "peak B/param"]);
     let mut rows_json: Vec<Json> = Vec::new();
     for (opt, variant, label) in ROWS {
         let g = grad(n, variant, 0xBE7);
-        let mut peaks = [0.0f64; 2];
-        for (mi, mode) in ["batch", "streaming"].iter().enumerate() {
+        let mut peaks = [0.0f64; 3];
+        let modes = ["batch", "streaming", "sharded"];
+        for (mi, mode) in modes.iter().enumerate() {
             let streaming = mi == 1;
             let mut fo = build(opt, variant, n, bucket,
                                BackendKind::Parallel, threads);
+            fo.set_shard_state(mi == 2);
             let r = bench_for(label, budget, 3, || {
                 if streaming {
                     fo.step_streaming(&g, 1e-3, 10, |_, _| {}).unwrap();
@@ -217,7 +232,7 @@ fn main() {
             });
             let med = r.median_s();
             let (bpp, live) =
-                measure_peak(opt, variant, streaming, n, bucket);
+                measure_peak(opt, variant, mode, n, bucket);
             peaks[mi] = bpp;
             t.row(&[label.into(), (*mode).into(), fmt_time(med),
                     format!("{:.0}", n as f64 / med / 1e6),
@@ -232,20 +247,28 @@ fn main() {
                 ("peak_live_grad_bytes", Json::Num(live as f64)),
             ]));
         }
-        // the memory claim itself holds in every mode of this bench,
-        // not only under --check: streaming must beat batch
+        // the memory claims themselves hold in every mode of this
+        // bench, not only under --check: streaming must beat batch,
+        // and shard-owner mode re-partitions work, not state, so its
+        // resident footprint must be exactly the batch one
         assert!(peaks[1] < peaks[0],
                 "{label}: streaming peak {:.3} B/param is not below \
                  the batch peak {:.3}",
                 peaks[1], peaks[0]);
+        assert!(peaks[2] == peaks[0],
+                "{label}: sharded peak {:.3} B/param differs from \
+                 the batch peak {:.3} — sharding must not add \
+                 resident state",
+                peaks[2], peaks[0]);
         if check {
             check_bit_exact(opt, variant, label, n, bucket, threads);
         }
     }
     t.print();
     if check {
-        println!("train check OK: streaming bit-exact to batch on \
-                  {} pairs (parallel backend, {nthreads} threads)",
+        println!("train check OK: streaming and sharded bit-exact to \
+                  batch on {} pairs (parallel backend, {nthreads} \
+                  threads)",
                  ROWS.len());
     }
 
@@ -268,7 +291,7 @@ fn main() {
         .get("rows")
         .and_then(Json::as_arr)
         .expect("rows section present");
-    assert_eq!(rows.len(), 2 * ROWS.len(), "one row per pair per mode");
+    assert_eq!(rows.len(), 3 * ROWS.len(), "one row per pair per mode");
     let mut modes_per_pair: BTreeMap<String, BTreeSet<String>> =
         BTreeMap::new();
     for e in rows {
@@ -292,7 +315,7 @@ fn main() {
                 .to_string());
     }
     for (pair, modes) in &modes_per_pair {
-        assert_eq!(modes.len(), 2,
+        assert_eq!(modes.len(), 3,
                    "{pair} is missing a mode (has {modes:?})");
     }
     std::fs::write(&out_path, text + "\n")

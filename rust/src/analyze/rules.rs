@@ -34,8 +34,9 @@ pub fn rules() -> &'static [Rule] {
             id: "A3",
             name: "pair-totality",
             summary: "KernelSet fields, fused_step arms, the fuzz \
-                      universe, and bench STEP_ROWS all span the \
-                      identical 15-pair universe",
+                      universe, bench STEP_ROWS, and the sharded \
+                      SHARDED_PAIRS table all span the identical \
+                      15-pair universe",
             check: check_pair_totality,
         },
         Rule {
@@ -635,6 +636,28 @@ fn check_pair_totality(c: &Corpus, out: &mut Vec<Finding>) {
                               out);
             }
             None => missing_anchor("STEP_ROWS", f, out),
+        }
+    }
+
+    // 5: the shard-owner differential's pair table — a pair dropped
+    // from SHARDED_PAIRS would silently shrink the sharded-vs-batch
+    // bit-exactness sweep
+    if let Some(f) = c
+        .files
+        .iter()
+        .find(|f| f.path.ends_with("tests/backend_equivalence.rs"))
+    {
+        let toks = f.toks();
+        match initializer_of(&toks, "SHARDED_PAIRS") {
+            Some((init, line)) => {
+                let pairs: Vec<(String, String)> = pair_windows(init)
+                    .into_iter()
+                    .map(|(o, v, _)| (o, v))
+                    .collect();
+                diff_universe("sharded SHARDED_PAIRS", f, line,
+                              &pairs, out);
+            }
+            None => missing_anchor("SHARDED_PAIRS", f, out),
         }
     }
 }

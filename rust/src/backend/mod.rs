@@ -31,6 +31,7 @@ pub mod parallel;
 pub mod partition;
 pub mod pool;
 pub mod scalar;
+pub mod shard;
 pub mod stream;
 
 use anyhow::{bail, Result};
@@ -43,6 +44,7 @@ use crate::optim::state::State;
 pub use parallel::{FusedJob, ParallelBackend};
 pub use partition::Part;
 pub use scalar::ScalarBackend;
+pub use shard::{fill_shards, ShardMap};
 pub use stream::{GradBucketStream, ReadyRange, StreamStats};
 
 /// A native engine for the fused optimizer step over compact state.

@@ -27,6 +27,7 @@ use anyhow::Result;
 use crate::backend::fused::step_part;
 use crate::backend::partition::Part;
 use crate::backend::pool::WorkerPool;
+use crate::backend::shard::ShardMap;
 use crate::backend::{validate_range, StepBackend};
 use crate::config::{KernelKind, OptKind, Variant};
 use crate::formats::GROUP;
@@ -235,6 +236,80 @@ impl ParallelBackend {
             Err(poisoned) => poisoned.into_inner(),
         };
         pool.run_scoped(jobs_boxed, || run_chunks(&mut own, ks, fused));
+    }
+
+    /// Shard-owner variant of [`step_parts`](Self::step_parts): each
+    /// job's partition is split at its [`ShardMap`]'s owner boundaries
+    /// instead of being re-bin-packed for load balance, and owner
+    /// `w`'s chunks run on the *same* thread every call (owner 0 on
+    /// the calling thread, owner `w >= 1` on pool worker `w - 1`).
+    /// Every map must have [`threads()`](Self::threads) owners and
+    /// cover its job's partition exactly.
+    ///
+    /// `aux` (the streaming pipeline's next-bucket reduce) is folded
+    /// into the calling thread's work — run to completion before
+    /// owner 0's chunks, concurrent with every other owner's step —
+    /// rather than onto a reserved worker as in
+    /// [`step_parts_overlapped`](Self::step_parts_overlapped), so the
+    /// owner ↔ worker mapping is identical with and without an
+    /// overlapped reduce.  Bit-exactness: owner boundaries are GROUP
+    /// boundaries, so the usual partitioning argument applies
+    /// unchanged; what stable ownership buys is that the shard a
+    /// worker steps is the shard it just reduced/filled, eliminating
+    /// the central gather/scatter staging pass and its cross-worker
+    /// traffic.
+    pub fn step_parts_sharded<'a>(
+        &self, jobs: Vec<FusedJob<'a>>, maps: &[ShardMap],
+        aux: Option<Box<dyn FnOnce() + Send + 'a>>)
+    {
+        assert_eq!(jobs.len(), maps.len(),
+                   "one shard map per sharded job");
+        let owners = self.threads;
+        let mut bins: Vec<Vec<FusedJob<'a>>> =
+            (0..owners).map(|_| Vec::new()).collect();
+        for (job, map) in jobs.into_iter().zip(maps) {
+            assert_eq!(map.owners(), owners,
+                       "shard map has {} owners, backend has {owners} \
+                        threads", map.owners());
+            assert_eq!(map.n(), job.part.len,
+                       "shard map covers {} elements, partition has {}",
+                       map.n(), job.part.len);
+            let FusedJob { mut part, opt, variant, h } = job;
+            for (w, bin) in bins.iter_mut().enumerate() {
+                let (lo, hi) = map.range(w);
+                let (head, rest) = part.split_at(hi - lo);
+                if hi > lo {
+                    bin.push(FusedJob { part: head, opt, variant, h });
+                }
+                part = rest;
+            }
+        }
+        let ks = self.kernels;
+        let fused = self.fused;
+        let mut own = bins.remove(0);
+        // empty bins still dispatch (as no-ops) so owner w always
+        // lands on worker w - 1, never a shifted neighbor
+        let jobs_boxed: Vec<Box<dyn FnOnce() + Send + 'a>> = bins
+            .into_iter()
+            .map(|mut bin| -> Box<dyn FnOnce() + Send + 'a> {
+                Box::new(move || run_chunks(&mut bin, ks, fused))
+            })
+            .collect();
+        let local = move || {
+            if let Some(a) = aux {
+                a();
+            }
+            run_chunks(&mut own, ks, fused);
+        };
+        if jobs_boxed.is_empty() {
+            local();
+            return;
+        }
+        let pool = match self.pool.lock() {
+            Ok(p) => p,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        pool.run_scoped(jobs_boxed, local);
     }
 }
 
@@ -466,6 +541,53 @@ mod tests {
                        "aux must have completed ({threads} threads)");
             assert_states_bit_equal(&plain, &st,
                                     "overlapped step vs plain");
+        }
+    }
+
+    #[test]
+    fn sharded_dispatch_matches_plain_step() {
+        // shard-owner splits (including empty shards when owners >
+        // groups) must be invisible in the bits, with and without a
+        // folded-in aux closure
+        let n = 5 * GROUP;
+        let mut rng = Rng::new(29);
+        let theta0: Vec<f32> =
+            (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+        let g: Vec<f32> = (0..n)
+            .map(|_| {
+                crate::formats::bf16::round_f32_to_bf16(
+                    rng.normal() as f32 * 0.01)
+            })
+            .collect();
+        let h = Hyper::for_step(&TrainConfig::default(), 1e-3, 1);
+        let mut plain = State::init(&theta0, n, OptKind::AdamW,
+                                    Variant::Flash);
+        ScalarBackend::default()
+            .step_full(&mut plain, &g, OptKind::AdamW, Variant::Flash,
+                       &h)
+            .unwrap();
+
+        for threads in [1usize, 3, 8] {
+            let par = ParallelBackend::new(threads);
+            let map = ShardMap::group_aligned(n, par.threads()).unwrap();
+            let mut st = State::init(&theta0, n, OptKind::AdamW,
+                                     Variant::Flash);
+            let mut aux_ran = 0u64;
+            {
+                let job = FusedJob {
+                    part: Part::of_range(&mut st, 0, n, &g),
+                    opt: OptKind::AdamW,
+                    variant: Variant::Flash,
+                    h,
+                };
+                par.step_parts_sharded(
+                    vec![job], std::slice::from_ref(&map),
+                    Some(Box::new(|| aux_ran = 1)));
+            }
+            assert_eq!(aux_ran, 1,
+                       "aux must have completed ({threads} threads)");
+            assert_states_bit_equal(
+                &plain, &st, &format!("sharded vs plain ({threads})"));
         }
     }
 }

@@ -1,0 +1,297 @@
+//! Shard-owner partitioning: stable worker ownership of GROUP-aligned
+//! slices of compact optimizer state.
+//!
+//! The batched dispatch in `parallel.rs` re-bin-packs every step for
+//! load balance, so which thread touches which elements changes call
+//! to call.  That is fine for bit-exactness (updates are element-wise,
+//! requantization group-wise) but it forces a central staging pass:
+//! someone has to gather/reduce the whole gradient before workers can
+//! be handed balanced chunks.  A [`ShardMap`] instead fixes, once, a
+//! GROUP-aligned partition of each param group's `[0, n)` element
+//! range into one shard per *owner* (the calling thread is owner 0,
+//! pool worker `w - 1` is owner `w`).  Ownership is stable across
+//! steps, buckets, and checkpoints, so:
+//!
+//! * each owner can reduce **its own shard** of the incoming worker
+//!   gradients (reduce-scatter shape) and step it fused in place, with
+//!   zero cross-worker gather/scatter staging — see
+//!   `ParallelBackend::step_parts_sharded` and
+//!   `FlashOptimizer::step_workers`;
+//! * the shard a worker steps is the shard it reduced on the previous
+//!   dispatch (cache/NUMA locality by construction);
+//! * checkpoint I/O can CRC per shard on the pool and combine
+//!   (`checkpoint::save_state_dict_sharded`), byte-identical to the
+//!   serial writer.
+//!
+//! The distribution rule mirrors
+//! `coordinator::data_parallel::allreduce_mean_sharded`: `n / GROUP`
+//! groups are dealt `base = n_groups / owners` each, the first
+//! `n_groups % owners` owners getting one extra.  Owners past the
+//! group count simply hold empty shards — the dispatch still runs them
+//! so the owner ↔ worker mapping never shifts.
+//!
+//! Bit-exactness: a shard boundary is a GROUP boundary, exactly like
+//! every other partition cut in this backend, so sharded execution is
+//! bit-identical to the batch path by the same argument
+//! (`rust/tests/backend_equivalence.rs` pins it for all 15 pairs).
+
+use anyhow::{bail, Result};
+
+use crate::backend::pool::WorkerPool;
+use crate::formats::GROUP;
+
+/// A fixed partition of `[0, n)` into one contiguous shard per owner.
+#[derive(Clone, Debug)]
+pub struct ShardMap {
+    /// `owners + 1` monotone offsets; owner `w` holds
+    /// `bounds[w] .. bounds[w + 1]`.
+    bounds: Vec<usize>,
+}
+
+impl ShardMap {
+    /// GROUP-aligned shards over `n` state elements (`n` must be a
+    /// GROUP multiple — padded state lengths always are).
+    pub fn group_aligned(n: usize, owners: usize) -> Result<ShardMap> {
+        if owners == 0 {
+            bail!("a shard map needs at least one owner");
+        }
+        if n % GROUP != 0 {
+            bail!("shard map length {n} is not GROUP({GROUP})-aligned; \
+                   group-wise requantization needs whole groups");
+        }
+        let n_groups = n / GROUP;
+        let base = n_groups / owners;
+        let rem = n_groups % owners;
+        let mut bounds = Vec::with_capacity(owners + 1);
+        let mut off = 0usize;
+        bounds.push(0);
+        for w in 0..owners {
+            off += (base + usize::from(w < rem)) * GROUP;
+            bounds.push(off);
+        }
+        Ok(ShardMap { bounds })
+    }
+
+    /// Arbitrary-granularity shards over `len` bytes — the checkpoint
+    /// writer's flavor, where shard cuts only feed `crc32_combine` and
+    /// need no alignment.
+    pub fn bytes(len: usize, owners: usize) -> Result<ShardMap> {
+        if owners == 0 {
+            bail!("a shard map needs at least one owner");
+        }
+        let base = len / owners;
+        let rem = len % owners;
+        let mut bounds = Vec::with_capacity(owners + 1);
+        let mut off = 0usize;
+        bounds.push(0);
+        for w in 0..owners {
+            off += base + usize::from(w < rem);
+            bounds.push(off);
+        }
+        Ok(ShardMap { bounds })
+    }
+
+    pub fn owners(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Total element (or byte) count covered.
+    pub fn n(&self) -> usize {
+        self.bounds[self.bounds.len() - 1]
+    }
+
+    /// Owner `w`'s `[lo, hi)` range.
+    pub fn range(&self, w: usize) -> (usize, usize) {
+        (self.bounds[w], self.bounds[w + 1])
+    }
+
+    /// Owner `w`'s shard length.
+    pub fn len(&self, w: usize) -> usize {
+        self.bounds[w + 1] - self.bounds[w]
+    }
+
+    /// The map restricted to the sub-range `[lo, hi)`, re-based to 0:
+    /// owner `w`'s new shard is the intersection of its shard with
+    /// `[lo, hi)`.  Used by the streaming step to shard one bucket of
+    /// a group while keeping *global* element ownership stable — an
+    /// element is stepped by the same owner no matter which bucket
+    /// carries it.
+    pub fn slice(&self, lo: usize, hi: usize) -> ShardMap {
+        debug_assert!(lo <= hi && hi <= self.n());
+        let bounds = self
+            .bounds
+            .iter()
+            .map(|&b| b.clamp(lo, hi) - lo)
+            .collect();
+        ShardMap { bounds }
+    }
+}
+
+/// Fill disjoint shards of many buffers in one pool dispatch: for
+/// every `(map, buf)` pair, owner `w` runs
+/// `fill(bi, lo, hi, &mut buf[lo..hi])` over its own shard
+/// (`bi` is the buffer's index in `bufs`).  Owner 0 is the calling
+/// thread; owner `w >= 1` is pool worker `w - 1`, so every map must
+/// have exactly `pool.workers() + 1` owners.  `fill` must be
+/// infallible and must write (or deliberately keep) every element of
+/// its range — shards of one buffer never overlap, so no
+/// synchronization is needed beyond the dispatch barrier.
+///
+/// This is the reduce half of the shard-owner step: each owner reduces
+/// the worker gradients for exactly the elements it is about to step,
+/// replacing the serial whole-gradient gather with `owners`
+/// concurrent shard-local passes in the serial per-element order
+/// (bit-exact — see `FlashOptimizer::step_workers`).
+pub fn fill_shards<F>(pool: &WorkerPool, bufs: Vec<(&ShardMap, &mut [f32])>,
+                      fill: &F)
+where
+    F: Fn(usize, usize, usize, &mut [f32]) + Sync,
+{
+    let owners = pool.workers() + 1;
+    let mut bins: Vec<Vec<(usize, usize, &mut [f32])>> =
+        (0..owners).map(|_| Vec::new()).collect();
+    for (bi, (map, buf)) in bufs.into_iter().enumerate() {
+        assert_eq!(map.owners(), owners,
+                   "shard map has {} owners, pool dispatch has {owners}",
+                   map.owners());
+        assert_eq!(map.n(), buf.len(),
+                   "shard map covers {} elements, buffer has {}",
+                   map.n(), buf.len());
+        let mut rest = buf;
+        for (w, bin) in bins.iter_mut().enumerate() {
+            let (lo, hi) = map.range(w);
+            let (head, tail) = rest.split_at_mut(hi - lo);
+            if hi > lo {
+                bin.push((bi, lo, head));
+            }
+            rest = tail;
+        }
+    }
+    let run = |bin: Vec<(usize, usize, &mut [f32])>| {
+        for (bi, lo, dst) in bin {
+            let hi = lo + dst.len();
+            fill(bi, lo, hi, dst);
+        }
+    };
+    let mut bins = bins.into_iter();
+    // owners >= 1 by construction, so the first bin always exists
+    let own = match bins.next() {
+        Some(b) => b,
+        None => return,
+    };
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = bins
+        .map(|bin| -> Box<dyn FnOnce() + Send + '_> {
+            let run = &run;
+            Box::new(move || run(bin))
+        })
+        .collect();
+    if jobs.is_empty() {
+        run(own);
+    } else {
+        pool.run_scoped(jobs, || run(own));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_aligned_deals_like_the_sharded_allreduce() {
+        // 7 groups over 3 owners: 3 / 2 / 2 groups
+        let m = ShardMap::group_aligned(7 * GROUP, 3).unwrap();
+        assert_eq!(m.owners(), 3);
+        assert_eq!(m.n(), 7 * GROUP);
+        assert_eq!(m.range(0), (0, 3 * GROUP));
+        assert_eq!(m.range(1), (3 * GROUP, 5 * GROUP));
+        assert_eq!(m.range(2), (5 * GROUP, 7 * GROUP));
+        for w in 0..3 {
+            assert_eq!(m.range(w).0 % GROUP, 0);
+        }
+    }
+
+    #[test]
+    fn more_owners_than_groups_leaves_empty_shards() {
+        let m = ShardMap::group_aligned(2 * GROUP, 5).unwrap();
+        assert_eq!(m.owners(), 5);
+        assert_eq!(m.len(0), GROUP);
+        assert_eq!(m.len(1), GROUP);
+        for w in 2..5 {
+            assert_eq!(m.len(w), 0, "owner {w}");
+        }
+        assert_eq!(m.n(), 2 * GROUP);
+    }
+
+    #[test]
+    fn misaligned_or_ownerless_maps_are_rejected() {
+        assert!(ShardMap::group_aligned(GROUP + 1, 2).is_err());
+        assert!(ShardMap::group_aligned(GROUP, 0).is_err());
+        assert!(ShardMap::bytes(10, 0).is_err());
+    }
+
+    #[test]
+    fn byte_maps_split_exactly() {
+        let m = ShardMap::bytes(10, 4).unwrap();
+        assert_eq!((0..4).map(|w| m.len(w)).collect::<Vec<_>>(),
+                   vec![3, 3, 2, 2]);
+        assert_eq!(m.n(), 10);
+        let m = ShardMap::bytes(0, 3).unwrap();
+        assert_eq!(m.n(), 0);
+        assert_eq!(m.owners(), 3);
+    }
+
+    #[test]
+    fn slice_clips_every_owner_to_the_window() {
+        let m = ShardMap::group_aligned(8 * GROUP, 3).unwrap();
+        // owners hold [0,3), [3,6), [6,8) groups
+        let s = m.slice(2 * GROUP, 7 * GROUP);
+        assert_eq!(s.owners(), 3);
+        assert_eq!(s.n(), 5 * GROUP);
+        assert_eq!(s.range(0), (0, GROUP));
+        assert_eq!(s.range(1), (GROUP, 4 * GROUP));
+        assert_eq!(s.range(2), (4 * GROUP, 5 * GROUP));
+        // a window inside one owner leaves the others empty
+        let s = m.slice(4 * GROUP, 5 * GROUP);
+        assert_eq!(s.len(0), 0);
+        assert_eq!(s.len(1), GROUP);
+        assert_eq!(s.len(2), 0);
+    }
+
+    #[test]
+    fn fill_shards_covers_every_element_once() {
+        let pool = WorkerPool::new(2).unwrap();
+        let owners = pool.workers() + 1;
+        let m1 = ShardMap::group_aligned(5 * GROUP, owners).unwrap();
+        let m2 = ShardMap::group_aligned(GROUP, owners).unwrap();
+        let mut b1 = vec![0.0f32; 5 * GROUP];
+        let mut b2 = vec![0.0f32; GROUP];
+        fill_shards(&pool,
+                    vec![(&m1, &mut b1[..]), (&m2, &mut b2[..])],
+                    &|bi, lo, hi, dst| {
+                        assert_eq!(dst.len(), hi - lo);
+                        for (i, d) in dst.iter_mut().enumerate() {
+                            *d = (bi * 1_000_000 + lo + i) as f32;
+                        }
+                    });
+        for (i, &x) in b1.iter().enumerate() {
+            assert_eq!(x, i as f32, "buffer 0 elem {i}");
+        }
+        for (i, &x) in b2.iter().enumerate() {
+            assert_eq!(x, (1_000_000 + i) as f32, "buffer 1 elem {i}");
+        }
+    }
+
+    #[test]
+    fn fill_shards_works_on_a_zero_worker_pool() {
+        let pool = WorkerPool::new(0).unwrap();
+        let m = ShardMap::group_aligned(3 * GROUP, 1).unwrap();
+        let mut b = vec![0.0f32; 3 * GROUP];
+        fill_shards(&pool, vec![(&m, &mut b[..])],
+                    &|_, lo, _, dst| {
+                        for (i, d) in dst.iter_mut().enumerate() {
+                            *d = (lo + i) as f32 + 1.0;
+                        }
+                    });
+        assert!(b.iter().enumerate().all(|(i, &x)| x == i as f32 + 1.0));
+    }
+}

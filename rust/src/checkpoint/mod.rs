@@ -32,8 +32,15 @@
 //! detected, not silently consumed (failure-injection tested in
 //! `rust/tests/checkpoint_v2.rs`).  `load_state_dict` reads both
 //! versions — a v1 file loads as a single group named `all`.
+//!
+//! [`save_state_dict_sharded`] / [`load_state_dict_sharded`] (module
+//! [`sharded`]) produce/consume the identical v2 bytes with section
+//! CRCs computed in parallel on the step worker pool.
 
 pub mod crc32;
+pub mod sharded;
+
+pub use sharded::{load_state_dict_sharded, save_state_dict_sharded};
 
 use std::io::{Read, Write};
 use std::path::Path;

@@ -1,0 +1,425 @@
+//! Parallel per-shard checkpoint I/O on the step worker pool.
+//!
+//! The v2 writer spends nearly all its time in two places: CRC32 over
+//! the section payloads and the payload `write()`s themselves.  Both
+//! are byte-streams, and CRC32 admits an exact parallel decomposition:
+//! `crc32(A ‖ B) == crc32_combine(crc32(A), crc32(B), len(B))` (see
+//! `checkpoint::crc32`).  So [`save_state_dict_sharded`] cuts every
+//! section payload into `pool.workers() + 1` byte shards
+//! (`ShardMap::bytes` — no GROUP alignment needed, the cuts only feed
+//! the combine), has the pool CRC the worker shards while the calling
+//! thread writes the payload into the file and CRCs its own shard,
+//! and folds the per-shard CRCs left-to-right with `crc32_combine`.
+//!
+//! The output is **byte-for-byte identical** to
+//! [`super::save_state_dict`]: same layout, same ordering, same CRC
+//! values — only *who computes each CRC* changes.  Old readers are
+//! untouched; files cross-load between the serial and sharded
+//! reader/writer in every combination
+//! (`rust/tests/checkpoint_v2.rs` pins this).
+//!
+//! [`load_state_dict_sharded`] is the mirror: it reads the file image
+//! once, then verifies each section CRC on the pool while the calling
+//! thread decodes the payload into the typed state vectors; a failed
+//! CRC discards the decoded group before anything escapes.  It is also
+//! slightly stricter than the serial reader: trailing bytes after the
+//! last group are rejected (the writers never produce them).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::backend::pool::WorkerPool;
+use crate::backend::shard::ShardMap;
+use crate::optim::group::{GroupState, StateDict};
+use crate::optim::state::State;
+
+use super::crc32::{crc32, crc32_combine};
+use super::{opt_from_u8, opt_to_u8, state_sections, take, var_from_u8,
+            var_to_u8, vec_from_bytes, Tag, MAGIC, V1, V2};
+
+/// CRC32 of `data`, computed as one CRC per owner shard in a single
+/// pool dispatch and folded with `crc32_combine` — equal to
+/// `crc32(data)` by the combine identity.  `local_io` runs on the
+/// calling thread *during* the dispatch, so the caller's payload write
+/// (save) or payload decode (load) overlaps the workers' CRC passes;
+/// the calling thread then CRCs its own shard (owner 0).
+fn crc32_pooled(pool: &WorkerPool, data: &[u8],
+                local_io: impl FnOnce() -> Result<()>) -> Result<u32> {
+    let owners = pool.workers() + 1;
+    let map = ShardMap::bytes(data.len(), owners)?;
+    let mut crcs = vec![0u32; owners];
+    let mut io_res: Result<()> = Ok(());
+    {
+        let (own, rest) = crcs.split_at_mut(1);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = rest
+            .iter_mut()
+            .enumerate()
+            .map(|(i, slot)| -> Box<dyn FnOnce() + Send + '_> {
+                let (lo, hi) = map.range(i + 1);
+                let shard = &data[lo..hi];
+                Box::new(move || *slot = crc32(shard))
+            })
+            .collect();
+        pool.run_scoped(jobs, || {
+            io_res = local_io();
+            let (lo, hi) = map.range(0);
+            own[0] = crc32(&data[lo..hi]);
+        });
+    }
+    io_res?;
+    let mut crc = crcs[0];
+    for w in 1..owners {
+        crc = crc32_combine(crc, crcs[w], map.len(w) as u64);
+    }
+    Ok(crc)
+}
+
+/// Serialize a `StateDict` in the v2 layout with section CRCs computed
+/// in parallel on `pool`.  Byte-identical to [`super::save_state_dict`]
+/// — see the module docs for the decomposition argument.  Returns
+/// bytes written.
+pub fn save_state_dict_sharded(path: &Path, sd: &StateDict,
+                               pool: &WorkerPool) -> Result<u64> {
+    sd.validate()?;
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {path:?}"))?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&V2.to_le_bytes())?;
+
+    // the file head and group headers are tens of bytes — CRC'd
+    // serially, exactly like the serial writer (sharding them would
+    // be dispatch overhead for no work)
+    let mut head: Vec<u8> = Vec::with_capacity(22);
+    head.push(opt_to_u8(sd.optimizer));
+    head.push(var_to_u8(sd.variant));
+    head.extend_from_slice(&sd.step.to_le_bytes());
+    head.extend_from_slice(&sd.total_params.to_le_bytes());
+    head.extend_from_slice(&(sd.groups.len() as u32).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(&crc32(&head).to_le_bytes())?;
+
+    for g in &sd.groups {
+        let mut gh: Vec<u8> = Vec::new();
+        gh.extend_from_slice(&(g.name.len() as u16).to_le_bytes());
+        gh.extend_from_slice(g.name.as_bytes());
+        gh.extend_from_slice(&g.param_count.to_le_bytes());
+        gh.extend_from_slice(&(g.state.n as u64).to_le_bytes());
+        gh.extend_from_slice(&(g.ranges.len() as u32).to_le_bytes());
+        for &(lo, hi) in &g.ranges {
+            gh.extend_from_slice(&lo.to_le_bytes());
+            gh.extend_from_slice(&hi.to_le_bytes());
+        }
+        w.write_all(&(gh.len() as u32).to_le_bytes())?;
+        w.write_all(&gh)?;
+        w.write_all(&crc32(&gh).to_le_bytes())?;
+
+        let sections = state_sections(&g.state);
+        w.write_all(&(sections.len() as u32).to_le_bytes())?;
+        for (tag, payload) in &sections {
+            w.write_all(&[*tag as u8])?;
+            w.write_all(&(payload.len() as u64).to_le_bytes())?;
+            let crc = crc32_pooled(pool, payload, || {
+                // file I/O for this payload overlaps the pool's CRC
+                // passes over the same bytes
+                w.write_all(payload)?;
+                Ok(())
+            })?;
+            w.write_all(&crc.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(std::fs::metadata(path)?.len())
+}
+
+/// Consume `n` bytes of the in-memory file image at cursor `p`.  Every
+/// length field read from the file flows through here, so a corrupt
+/// length fails against the *real* file size before any allocation.
+fn need<'a>(buf: &'a [u8], p: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if *p + n > buf.len() {
+        bail!("truncated checkpoint");
+    }
+    let s = &buf[*p..*p + n];
+    *p += n;
+    Ok(s)
+}
+
+fn need_u32(buf: &[u8], p: &mut usize) -> Result<u32> {
+    Ok(u32::from_le_bytes(need(buf, p, 4)?.try_into().unwrap()))
+}
+
+/// Load a checkpoint with section CRCs verified in parallel on `pool`.
+/// Reads everything [`super::load_state_dict`] reads (a v1 file
+/// delegates to the serial reader — flat legacy states are too small
+/// to benefit) and applies the same corruption checks; payload
+/// decoding overlaps the pool's CRC pass per section.
+pub fn load_state_dict_sharded(path: &Path, pool: &WorkerPool)
+                               -> Result<StateDict> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("opening {path:?}"))?;
+    let mut p = 0usize;
+    if need(&bytes, &mut p, 8)? != MAGIC {
+        bail!("not a flashtrain checkpoint (bad magic)");
+    }
+    match need_u32(&bytes, &mut p)? {
+        V2 => {}
+        V1 => {
+            drop(bytes);
+            return super::load_state_dict(path);
+        }
+        other => bail!("unsupported checkpoint version {other}"),
+    }
+
+    let head = need(&bytes, &mut p, 22)?;
+    let want = need_u32(&bytes, &mut p)?;
+    let got = crc32(head);
+    if want != got {
+        bail!("checkpoint corruption: file header crc {got:#x} != \
+               {want:#x}");
+    }
+    let optimizer = opt_from_u8(head[0])?;
+    let variant = var_from_u8(head[1])?;
+    let step = u64::from_le_bytes(head[2..10].try_into().unwrap());
+    let total_params = u64::from_le_bytes(head[10..18].try_into().unwrap());
+    let n_groups = u32::from_le_bytes(head[18..22].try_into().unwrap());
+    if n_groups == 0 || n_groups > 65536 {
+        bail!("implausible group count {n_groups}");
+    }
+
+    let mut groups = Vec::with_capacity(n_groups as usize);
+    for _ in 0..n_groups {
+        let gh_len = need_u32(&bytes, &mut p)? as usize;
+        if gh_len > (1 << 24) {
+            bail!("implausible group header length {gh_len}");
+        }
+        let gh = need(&bytes, &mut p, gh_len)?;
+        let want = need_u32(&bytes, &mut p)?;
+        let got = crc32(gh);
+        if want != got {
+            bail!("checkpoint corruption: group header crc {got:#x} != \
+                   {want:#x}");
+        }
+        // field-level parse identical to the serial reader's
+        let mut q = 0usize;
+        let name_len =
+            u16::from_le_bytes(take(gh, &mut q, 2)?.try_into().unwrap())
+                as usize;
+        let name = String::from_utf8(take(gh, &mut q, name_len)?.to_vec())
+            .map_err(|_| anyhow!("group name is not utf-8"))?;
+        let param_count =
+            u64::from_le_bytes(take(gh, &mut q, 8)?.try_into().unwrap());
+        let padded_len =
+            u64::from_le_bytes(take(gh, &mut q, 8)?.try_into().unwrap());
+        let n_ranges =
+            u32::from_le_bytes(take(gh, &mut q, 4)?.try_into().unwrap());
+        if n_ranges as usize > (1 << 20) {
+            bail!("implausible range count {n_ranges}");
+        }
+        let mut ranges = Vec::with_capacity(n_ranges as usize);
+        for _ in 0..n_ranges {
+            let lo = u64::from_le_bytes(take(gh, &mut q, 8)?
+                                        .try_into().unwrap());
+            let hi = u64::from_le_bytes(take(gh, &mut q, 8)?
+                                        .try_into().unwrap());
+            ranges.push((lo, hi));
+        }
+        if q != gh.len() {
+            bail!("group header has {} trailing bytes", gh.len() - q);
+        }
+
+        let n_sections = need_u32(&bytes, &mut p)?;
+        if n_sections > 16 {
+            bail!("implausible section count {n_sections}");
+        }
+        let mut state = State::empty(padded_len as usize);
+        for _ in 0..n_sections {
+            let tag = Tag::from_u8(need(&bytes, &mut p, 1)?[0])?;
+            let len = u64::from_le_bytes(need(&bytes, &mut p, 8)?
+                                         .try_into().unwrap()) as usize;
+            let payload = need(&bytes, &mut p, len)?;
+            let want = need_u32(&bytes, &mut p)?;
+            // decode on the calling thread while the pool CRCs the
+            // worker shards; a CRC mismatch bails right after, so a
+            // decoded-but-corrupt state never escapes this function
+            let got = crc32_pooled(pool, payload, || {
+                match tag {
+                    Tag::ThetaF32 => {
+                        state.theta = Some(vec_from_bytes(payload)?)
+                    }
+                    Tag::ThetaPBf16 => {
+                        state.theta_p = Some(vec_from_bytes(payload)?)
+                    }
+                    Tag::RhoI8 => state.rho = Some(vec_from_bytes(payload)?),
+                    Tag::MF32 => state.m = Some(vec_from_bytes(payload)?),
+                    Tag::VF32 => state.v = Some(vec_from_bytes(payload)?),
+                    Tag::MqI8 => state.mq = Some(vec_from_bytes(payload)?),
+                    Tag::MsF16 => state.ms = Some(vec_from_bytes(payload)?),
+                    Tag::VqU8 => state.vq = Some(vec_from_bytes(payload)?),
+                    Tag::VsF16 => state.vs = Some(vec_from_bytes(payload)?),
+                }
+                Ok(())
+            })?;
+            if want != got {
+                bail!("checkpoint corruption: section {tag:?} crc \
+                       {got:#x} != {want:#x}");
+            }
+        }
+        state.validate().map_err(|e| {
+            anyhow!("group {name:?} state invalid: {e}")
+        })?;
+        groups.push(GroupState { name, param_count, ranges, state });
+    }
+    if p != bytes.len() {
+        bail!("checkpoint has {} trailing bytes", bytes.len() - p);
+    }
+    let sd = StateDict { optimizer, variant, step, total_params, groups };
+    sd.validate()
+        .map_err(|e| anyhow!("loaded checkpoint invalid: {e}"))?;
+    Ok(sd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{OptKind, Variant};
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("flashtrain_test_sharded_{}_{name}",
+                       std::process::id()));
+        p
+    }
+
+    fn demo_state(n: usize, seed: u64) -> State {
+        let mut rng = Rng::new(seed);
+        let theta: Vec<f32> =
+            (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+        State::init(&theta, n, OptKind::AdamW, Variant::Flash)
+    }
+
+    fn demo_dict() -> StateDict {
+        StateDict {
+            optimizer: OptKind::AdamW,
+            variant: Variant::Flash,
+            step: 23,
+            total_params: 384,
+            groups: vec![
+                GroupState {
+                    name: "decay".into(),
+                    param_count: 256,
+                    ranges: vec![(0, 192), (320, 384)],
+                    state: demo_state(256, 10),
+                },
+                GroupState {
+                    name: "no_decay".into(),
+                    param_count: 128,
+                    ranges: vec![(192, 320)],
+                    state: demo_state(128, 11),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn pooled_crc_matches_serial_over_odd_lengths() {
+        let pool = WorkerPool::new(3).unwrap();
+        for n in [0usize, 1, 2, 7, 8, 9, 63, 64, 65, 1000] {
+            let data: Vec<u8> = (0..n).map(|i| (i * 37 + 11) as u8).collect();
+            let got = crc32_pooled(&pool, &data, || Ok(())).unwrap();
+            assert_eq!(got, crc32(&data), "n={n}");
+        }
+    }
+
+    #[test]
+    fn sharded_save_is_byte_identical_to_serial() {
+        let sd = demo_dict();
+        let p_serial = tmp("ser");
+        super::super::save_state_dict(&p_serial, &sd).unwrap();
+        let want = std::fs::read(&p_serial).unwrap();
+        for workers in [0usize, 1, 3, 7] {
+            let pool = WorkerPool::new(workers).unwrap();
+            let p_par = tmp(&format!("par{workers}"));
+            let n = save_state_dict_sharded(&p_par, &sd, &pool).unwrap();
+            let got = std::fs::read(&p_par).unwrap();
+            assert_eq!(n as usize, got.len());
+            assert!(want == got,
+                    "{workers}-worker file differs from the serial writer");
+            std::fs::remove_file(p_par).ok();
+        }
+        std::fs::remove_file(p_serial).ok();
+    }
+
+    #[test]
+    fn both_loaders_read_both_writers() {
+        let sd = demo_dict();
+        let pool = WorkerPool::new(2).unwrap();
+        let p = tmp("cross");
+        save_state_dict_sharded(&p, &sd, &pool).unwrap();
+        let serial = super::super::load_state_dict(&p).unwrap();
+        let sharded = load_state_dict_sharded(&p, &pool).unwrap();
+        for sd2 in [&serial, &sharded] {
+            assert_eq!(sd2.step, 23);
+            assert_eq!(sd2.total_params, 384);
+            assert_eq!(sd2.groups.len(), 2);
+            for (a, b) in sd.groups.iter().zip(&sd2.groups) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.ranges, b.ranges);
+                assert_eq!(a.state.theta_p, b.state.theta_p);
+                assert_eq!(a.state.rho, b.state.rho);
+                assert_eq!(a.state.mq, b.state.mq);
+                assert_eq!(a.state.ms, b.state.ms);
+                assert_eq!(a.state.vq, b.state.vq);
+                assert_eq!(a.state.vs, b.state.vs);
+            }
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn sharded_loader_detects_corruption_anywhere() {
+        let sd = demo_dict();
+        let pool = WorkerPool::new(2).unwrap();
+        let p = tmp("corrupt");
+        save_state_dict_sharded(&p, &sd, &pool).unwrap();
+        let clean = std::fs::read(&p).unwrap();
+        // one flip in the file head, a group header, a payload, and
+        // the final section's crc trailer
+        for &at in &[14usize, 60, clean.len() / 2, clean.len() - 3] {
+            let mut bad = clean.clone();
+            bad[at] ^= 0x40;
+            std::fs::write(&p, &bad).unwrap();
+            let err = load_state_dict_sharded(&p, &pool)
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("crc") || err.contains("corrupt")
+                    || err.contains("tag") || err.contains("length")
+                    || err.contains("truncated") || err.contains("trailing")
+                    || err.contains("implausible") || err.contains("utf"),
+                    "flip at {at}: {err}");
+        }
+        // truncation anywhere also fails
+        std::fs::write(&p, &clean[..clean.len() - 2]).unwrap();
+        assert!(load_state_dict_sharded(&p, &pool).is_err());
+        std::fs::write(&p, &clean).unwrap();
+        load_state_dict_sharded(&p, &pool).unwrap();
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn v1_files_load_through_the_sharded_reader() {
+        let st = demo_state(256, 12);
+        let p = tmp("v1");
+        super::super::save(&p, &st, OptKind::AdamW, Variant::Flash, 9, 250)
+            .unwrap();
+        let pool = WorkerPool::new(2).unwrap();
+        let sd = load_state_dict_sharded(&p, &pool).unwrap();
+        assert_eq!(sd.step, 9);
+        assert_eq!(sd.groups.len(), 1);
+        assert_eq!(sd.groups[0].name, "all");
+        assert_eq!(sd.groups[0].state.theta_p, st.theta_p);
+        std::fs::remove_file(p).ok();
+    }
+}

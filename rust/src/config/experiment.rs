@@ -203,6 +203,9 @@ pub struct GroupConfig {
     pub beta1: Option<f64>,
     pub beta2: Option<f64>,
     pub eps: Option<f64>,
+    /// group-local linear LR warmup over this many steps (multiplies
+    /// the scheduled LR by `t / warmup_steps` while `t` is below it)
+    pub warmup_steps: Option<usize>,
 }
 
 impl GroupConfig {
@@ -246,6 +249,10 @@ impl GroupConfig {
                 "beta1" => g.beta1 = Some(v.as_f64().ok_or("beta1")?),
                 "beta2" => g.beta2 = Some(v.as_f64().ok_or("beta2")?),
                 "eps" => g.eps = Some(v.as_f64().ok_or("eps")?),
+                "warmup_steps" => {
+                    g.warmup_steps =
+                        Some(v.as_usize().ok_or("warmup_steps")?)
+                }
                 other => {
                     return Err(format!("unknown group key {other:?}"))
                 }
@@ -279,6 +286,9 @@ impl GroupConfig {
         }
         if let Some(x) = self.eps {
             m.insert("eps".into(), Json::Num(x));
+        }
+        if let Some(x) = self.warmup_steps {
+            m.insert("warmup_steps".into(), Json::Num(x as f64));
         }
         Json::Obj(m)
     }
@@ -317,6 +327,11 @@ pub struct TrainConfig {
     pub fused_step: bool,
     /// eagerly free gradient buckets during the optimizer pass
     pub grad_release: bool,
+    /// shard-owner execution: stable worker ownership of GROUP-aligned
+    /// state shards (reduce-scatter step + parallel checkpoint CRC);
+    /// bit-exact to the default bin-packed dispatch, a no-op fallback
+    /// on non-parallel backends
+    pub shard_state: bool,
     /// simulated data-parallel worker count (gradients allreduced)
     pub workers: usize,
     /// parameter-group override blocks (empty = one group over all
@@ -350,6 +365,7 @@ impl Default for TrainConfig {
             kernels: KernelKind::Auto,
             fused_step: true,
             grad_release: true,
+            shard_state: false,
             workers: 1,
             groups: Vec::new(),
             eval_every: 0,
@@ -420,6 +436,12 @@ impl TrainConfig {
         }
         if args.flag("fused-step") {
             self.fused_step = true;
+        }
+        if args.flag("no-shard-state") {
+            self.shard_state = false;
+        }
+        if args.flag("shard-state") {
+            self.shard_state = true;
         }
     }
 
@@ -498,6 +520,9 @@ impl TrainConfig {
                 "grad_release" => {
                     c.grad_release = matches!(v, Json::Bool(true))
                 }
+                "shard_state" => {
+                    c.shard_state = matches!(v, Json::Bool(true))
+                }
                 "workers" => c.workers = v.as_usize().ok_or("workers")?,
                 "groups" => {
                     c.groups = v
@@ -547,6 +572,7 @@ impl TrainConfig {
         m.insert("kernels".into(), Json::Str(self.kernels.name().into()));
         m.insert("fused_step".into(), Json::Bool(self.fused_step));
         m.insert("grad_release".into(), Json::Bool(self.grad_release));
+        m.insert("shard_state".into(), Json::Bool(self.shard_state));
         m.insert("workers".into(), Json::Num(self.workers as f64));
         m.insert("groups".into(),
                  Json::Arr(self.groups.iter()
@@ -671,6 +697,51 @@ mod tests {
             "--fused-step".split_whitespace().map(String::from));
         c3.apply_args(&args);
         assert!(c3.fused_step);
+    }
+
+    #[test]
+    fn shard_state_knob_roundtrips() {
+        let mut c = TrainConfig::default();
+        assert!(!c.shard_state, "shard-owner mode is opt-in");
+        c.shard_state = true;
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert!(c2.shard_state);
+
+        let j = Json::parse(r#"{"shard_state": true}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).unwrap().shard_state);
+        let j = Json::parse(r#"{"shard_state": false}"#).unwrap();
+        assert!(!TrainConfig::from_json(&j).unwrap().shard_state);
+
+        let mut c3 = TrainConfig::default();
+        let args = Args::parse_from(
+            "--shard-state".split_whitespace().map(String::from));
+        c3.apply_args(&args);
+        assert!(c3.shard_state);
+        let args = Args::parse_from(
+            "--no-shard-state".split_whitespace().map(String::from));
+        c3.apply_args(&args);
+        assert!(!c3.shard_state);
+    }
+
+    #[test]
+    fn group_warmup_steps_roundtrips() {
+        let doc = r#"{
+          "groups": [
+            {"name": "head", "params": "head", "warmup_steps": 50}
+          ]
+        }"#;
+        let c = TrainConfig::from_json(&Json::parse(doc).unwrap())
+            .unwrap();
+        assert_eq!(c.groups[0].warmup_steps, Some(50));
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.groups, c.groups);
+        // absent stays None through the round trip
+        let d = TrainConfig::from_json(
+            &Json::parse(r#"{"groups": [{"name": "x"}]}"#).unwrap())
+            .unwrap();
+        assert_eq!(d.groups[0].warmup_steps, None);
+        assert_eq!(TrainConfig::from_json(&d.to_json()).unwrap().groups,
+                   d.groups);
     }
 
     #[test]

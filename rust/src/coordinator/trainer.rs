@@ -72,7 +72,7 @@ impl Trainer {
         // backend, one partition per group
         let specs = GroupSpec::from_config(&cfg.groups, &model)?;
         let defaults = HyperDefaults::of(&cfg);
-        let opt = match cfg.backend {
+        let mut opt = match cfg.backend {
             BackendKind::Hlo => FlashOptimizer::hlo(
                 rt, manifest, cfg.optimizer, cfg.variant, cfg.bucket,
                 &theta0, specs, defaults)?,
@@ -81,6 +81,10 @@ impl Trainer {
                 defaults, kind, cfg.threads, cfg.kernels,
                 cfg.fused_step)?,
         };
+        // shard-owner execution (a graceful no-op off the parallel
+        // backend): batch steps become reduce-scatter, streaming
+        // buckets shard through stable per-group ownership
+        opt.set_shard_state(cfg.shard_state);
 
         let data = match model.kind {
             ModelKind::Lm { vocab, seq_len, .. } => DataSource::Lm {
@@ -258,6 +262,12 @@ impl Trainer {
                                   &format!("worker{w}_grads"));
             }
             opt_time = t_opt.elapsed().as_secs_f64();
+        } else if let Some(t) = self.try_step_sharded(lr)? {
+            // --- shard-owner reduce-scatter step (config.shard_state):
+            //     each pool owner means and steps exactly its own
+            //     shards, so no flat reduced gradient or central
+            //     gather pass ever exists ----------------------------
+            opt_time = t;
         } else {
             // --- allreduce (sharded over the step backend's worker pool
             //     when one exists; bit-exact to the serial reduction) -------
@@ -330,6 +340,46 @@ impl Trainer {
             opt_time_s: opt_time,
         });
         Ok(loss)
+    }
+
+    /// Shard-owner batch step: hand the raw per-worker gradients to
+    /// the optimizer, whose pool owners mean and step exactly their
+    /// own shards ([`FlashOptimizer::step_workers`]) in the serial
+    /// all-reduce's per-element order — bit-exact to
+    /// `allreduce_mean` + `step`, with the central staging passes
+    /// gone.  Returns the optimizer wall time when it ran (the reduce
+    /// is fused into the step dispatch, so it is included), `None` to
+    /// fall back (mode off, or no parallel backend).
+    fn try_step_sharded(&mut self, lr: f64) -> Result<Option<f64>> {
+        if !self.cfg.shard_state {
+            return Ok(None);
+        }
+        let t_opt = Instant::now();
+        // the per-group padded staging buffers are the same ones the
+        // batched path stages — each now filled shard-locally by its
+        // owner — registered so peak memory is never under-reported
+        let staged = self.opt.staged_grad_bytes();
+        if staged > 0 {
+            self.tracker.alloc(Category::Transient,
+                               "group_grad_staging", staged);
+        }
+        let stepped = self.opt.step_workers(
+            &self.worker_grads, lr, self.step, |_, _| {})?;
+        if staged > 0 {
+            self.tracker.free(Category::Transient, "group_grad_staging");
+        }
+        if !stepped {
+            return Ok(None);
+        }
+        let wcat = if self.cfg.grad_release {
+            Category::Transient
+        } else {
+            Category::Gradients
+        };
+        for w in 0..self.cfg.workers.max(1) {
+            self.tracker.free(wcat, &format!("worker{w}_grads"));
+        }
+        Ok(Some(t_opt.elapsed().as_secs_f64()))
     }
 
     fn next_batch_literals(&mut self) -> Result<(xla::Literal,

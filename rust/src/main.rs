@@ -146,8 +146,18 @@ fn cmd_train(args: &Args) -> Result<()> {
                                         &[("loss", &pts)], 72, 14));
     }
     if let Some(path) = args.get("save") {
-        let bytes = checkpoint::save_state_dict(Path::new(path),
-                                                &trainer.state_dict())?;
+        let sd = trainer.state_dict();
+        // shard-owner mode also parallelizes checkpoint I/O: per-shard
+        // CRCs on the step pool, byte-identical to the serial writer
+        let be = trainer.opt.step_backend();
+        let par = be.as_ref().and_then(|b| b.as_parallel());
+        let bytes = match (cfg.shard_state, par) {
+            (true, Some(pb)) => pb.with_pool(|pool| {
+                checkpoint::save_state_dict_sharded(Path::new(path), &sd,
+                                                    pool)
+            })?,
+            _ => checkpoint::save_state_dict(Path::new(path), &sd)?,
+        };
         println!("checkpoint (v2, {} group{}): {path} ({})",
                  trainer.opt.groups.len(),
                  if trainer.opt.groups.len() == 1 { "" } else { "s" },

@@ -21,8 +21,9 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::backend::{make_backend_opts, FusedJob, GradBucketStream,
-                     Part, StepBackend, StreamStats};
+use crate::backend::{fill_shards, make_backend_opts, FusedJob,
+                     GradBucketStream, Part, ShardMap, StepBackend,
+                     StreamStats};
 use crate::config::{BackendKind, GroupConfig, KernelKind, OptKind,
                     Variant};
 use crate::formats::bf16;
@@ -355,6 +356,10 @@ pub struct FlashOptimizer {
     pub groups: Vec<ParamGroup>,
     bucket: usize,
     total: usize,
+    /// shard-owner execution mode (`config.shard_state`): batch and
+    /// streaming steps run under stable worker ownership
+    /// ([`ShardMap`]) instead of per-step bin-packing
+    shard_state: bool,
 }
 
 impl FlashOptimizer {
@@ -412,6 +417,7 @@ impl FlashOptimizer {
             groups,
             bucket,
             total: theta0.len(),
+            shard_state: false,
         })
     }
 
@@ -522,11 +528,13 @@ impl FlashOptimizer {
 
     /// Bytes of the per-group padded gradient staging buffers a
     /// batched parallel step allocates (see [`step`](Self::step)); 0
-    /// when the per-group bucket loop applies instead.  The trainer
-    /// registers this with the memory tracker as transient, so the
-    /// batched fast path never under-reports peak memory.
+    /// when the per-group bucket loop applies instead.  The
+    /// shard-owner mode stages the same padded buffers (each filled
+    /// shard-locally by its owner), so the figure covers it too.  The
+    /// trainer registers this with the memory tracker as transient, so
+    /// the batched fast path never under-reports peak memory.
     pub fn staged_grad_bytes(&self) -> u64 {
-        if self.groups.len() < 2 {
+        if self.groups.len() < 2 && !self.shard_state {
             return 0;
         }
         let Some(be) = self.step_backend() else {
@@ -536,6 +544,182 @@ impl FlashOptimizer {
             return 0;
         }
         self.groups.iter().map(|g| g.opt.state.n as u64 * 4).sum()
+    }
+
+    /// Select the shard-owner execution mode (`config.shard_state`).
+    /// When on and the shared backend is parallel, batch steps reduce
+    /// (or gather) each gradient shard on the thread that owns it and
+    /// step it in place under stable ownership
+    /// ([`ParallelBackend::step_parts_sharded`]), and streaming
+    /// buckets shard through the same per-group [`ShardMap`]s so
+    /// *global* element ownership never shifts between buckets.  On a
+    /// sequential backend the flag is kept but every path routes
+    /// exactly as before (graceful fallback).  Bit-exactness is
+    /// unaffected either way — pinned by
+    /// `rust/tests/backend_equivalence.rs` for all 15 pairs.
+    ///
+    /// [`ParallelBackend::step_parts_sharded`]:
+    /// crate::backend::ParallelBackend::step_parts_sharded
+    pub fn set_shard_state(&mut self, on: bool) {
+        self.shard_state = on;
+    }
+
+    pub fn shard_state(&self) -> bool {
+        self.shard_state
+    }
+
+    /// One shard map per group with `owners` shards each — the stable
+    /// ownership every sharded dispatch (step, streaming bucket,
+    /// checkpoint CRC) agrees on.  Padded state lengths are always
+    /// GROUP multiples, so construction cannot fail in practice.
+    fn shard_maps(&self, owners: usize) -> Result<Vec<ShardMap>> {
+        self.groups
+            .iter()
+            .map(|g| ShardMap::group_aligned(g.opt.state.n, owners))
+            .collect()
+    }
+
+    /// Shard-owner step core: every owner fills (reduces) exactly the
+    /// gradient shards it is about to step (`fill_shards`), then all
+    /// groups' shards step fused in place under a second
+    /// stable-ownership dispatch (`step_parts_sharded`) — no central
+    /// gather pass, no cross-worker staging traffic.  `workers` holds
+    /// the unreduced per-worker flat gradients when `reduce` (the
+    /// reduce-scatter shape), or one already-reduced flat gradient
+    /// when not.
+    ///
+    /// Bit-exact to the batch path: the reduce applies
+    /// `coordinator::allreduce_mean`'s per-element serial order
+    /// (worker 0's value, `+=` workers 1.., then an unconditional
+    /// `/ k`), the bf16 rounding for split variants happens after the
+    /// full reduction exactly like the batch staging pass, and shard
+    /// boundaries are GROUP boundaries.  Returns false (touching
+    /// nothing) when no parallel backend is shared.
+    fn step_sharded(&mut self, workers: &[&[f32]], reduce: bool,
+                    lr: f64, t: usize) -> Result<bool> {
+        let Some(be) = self.step_backend() else {
+            return Ok(false);
+        };
+        let Some(par) = be.as_parallel() else {
+            return Ok(false);
+        };
+        if workers.is_empty() {
+            bail!("sharded step needs at least one worker gradient");
+        }
+        for w in workers {
+            if w.len() != self.total {
+                bail!("gradient length {} != parameter count {}",
+                      w.len(), self.total);
+            }
+        }
+        let maps = self.shard_maps(par.threads())?;
+        let mut gbufs: Vec<Vec<f32>> = self
+            .groups
+            .iter()
+            .map(|g| vec![0.0f32; g.opt.state.n])
+            .collect();
+        let split = self.variant.splits_weights();
+        let k = workers.len() as f32;
+        {
+            // geometry snapshot: plain range slices, so the fill
+            // closure is Sync (ParamGroup itself holds an Rc'd engine)
+            let geoms: Vec<&[(usize, usize)]> = self
+                .groups
+                .iter()
+                .map(|g| &g.ranges[..])
+                .collect();
+            let fill = |gi: usize, lo: usize, hi: usize,
+                        dst: &mut [f32]| {
+                // translate the group-local window [lo, hi) to flat
+                // segments and reduce straight into the owner's shard;
+                // padding past the real count keeps its 0.0 pre-fill
+                let mut pos = 0usize;
+                for &(flo, fhi) in geoms[gi] {
+                    let len = fhi - flo;
+                    let s = lo.max(pos).min(pos + len);
+                    let e = hi.max(pos).min(pos + len);
+                    if e > s {
+                        let d = &mut dst[s - lo..e - lo];
+                        let f0 = flo + (s - pos);
+                        d.copy_from_slice(&workers[0][f0..f0 + e - s]);
+                        for w in &workers[1..] {
+                            let src = &w[f0..f0 + e - s];
+                            for (a, &b) in d.iter_mut().zip(src) {
+                                *a += b;
+                            }
+                        }
+                        if reduce {
+                            for a in d.iter_mut() {
+                                *a /= k;
+                            }
+                        }
+                        if split {
+                            for a in d.iter_mut() {
+                                *a = bf16::round_f32_to_bf16(*a);
+                            }
+                        }
+                    }
+                    pos += len;
+                }
+            };
+            par.with_pool(|pool| {
+                let bufs: Vec<(&ShardMap, &mut [f32])> = maps
+                    .iter()
+                    .zip(gbufs.iter_mut())
+                    .map(|(m, b)| (m, &mut b[..]))
+                    .collect();
+                fill_shards(pool, bufs, &fill);
+            });
+        }
+        let (kind, variant) = (self.kind, self.variant);
+        let hypers: Vec<Hyper> = self
+            .groups
+            .iter()
+            .map(|g| g.hyper.resolve(&self.defaults, lr, t))
+            .collect();
+        let mut jobs = Vec::with_capacity(self.groups.len());
+        for ((g, gb), h) in
+            self.groups.iter_mut().zip(&gbufs).zip(&hypers)
+        {
+            let n = g.opt.state.n;
+            jobs.push(FusedJob {
+                part: Part::of_range(&mut g.opt.state, 0, n, gb),
+                opt: kind,
+                variant,
+                h: *h,
+            });
+        }
+        par.step_parts_sharded(jobs, &maps, None);
+        Ok(true)
+    }
+
+    /// Data-parallel shard-owner step: reduce the per-worker gradients
+    /// and step in one pass, skipping the central `allreduce_mean` +
+    /// gather staging entirely — each owner computes the mean of
+    /// exactly its own shard's elements (in the all-reduce's serial
+    /// order) and steps them in place.  This is the reduce-scatter
+    /// shape of ZeRO-style sharded optimizer state, on threads.
+    /// Returns false (and touches nothing) when shard-state mode is
+    /// off or the backend has no pool; the trainer then falls back to
+    /// `allreduce_mean` + [`step`](Self::step).
+    pub fn step_workers<F: FnMut(usize, usize)>(
+        &mut self, workers: &[Vec<f32>], lr: f64, t: usize,
+        mut on_bucket: F) -> Result<bool>
+    {
+        if !self.shard_state {
+            return Ok(false);
+        }
+        let views: Vec<&[f32]> =
+            workers.iter().map(|w| &w[..]).collect();
+        if !self.step_sharded(&views, true, lr, t)? {
+            return Ok(false);
+        }
+        for (gi, g) in self.groups.iter().enumerate() {
+            for bi in 0..g.opt.n_buckets {
+                on_bucket(gi, bi);
+            }
+        }
+        Ok(true)
     }
 
     /// Batched step: every group's full partition (with its own
@@ -614,6 +798,15 @@ impl FlashOptimizer {
         if grads.len() != self.total {
             bail!("gradient length {} != parameter count {}", grads.len(),
                   self.total);
+        }
+        if self.shard_state && self.step_sharded(&[grads], false, lr, t)?
+        {
+            for (gi, g) in self.groups.iter().enumerate() {
+                for bi in 0..g.opt.n_buckets {
+                    on_bucket(gi, bi);
+                }
+            }
+            return Ok(());
         }
         if self.step_batched(grads, lr, t)? {
             for (gi, g) in self.groups.iter().enumerate() {
@@ -809,6 +1002,14 @@ impl FlashOptimizer {
         staging_peak = staging_peak.max(cur.len() as u64 * geb);
 
         let par = be.as_parallel();
+        // shard-owner composition: every bucket's ready ranges shard
+        // through the group's *full* map (windowed via `slice`), so an
+        // element is stepped by the same owner no matter which bucket
+        // carries it or in what order buckets arrive
+        let shard_maps = match (self.shard_state, par) {
+            (true, Some(pb)) => Some(self.shard_maps(pb.threads())?),
+            _ => None,
+        };
         for (j, &k) in order.iter().enumerate() {
             let meta = &metas[k];
             let gi = meta.gi;
@@ -855,9 +1056,19 @@ impl FlashOptimizer {
                                 variant,
                                 h: hypers[gi],
                             };
-                            pb.step_parts_overlapped(
-                                vec![job],
-                                if ri == 0 { aux.take() } else { None });
+                            let a =
+                                if ri == 0 { aux.take() } else { None };
+                            match &shard_maps {
+                                Some(maps) => {
+                                    let sm =
+                                        maps[gi].slice(r.lo, r.hi());
+                                    pb.step_parts_sharded(
+                                        vec![job],
+                                        std::slice::from_ref(&sm), a);
+                                }
+                                None => pb.step_parts_overlapped(
+                                    vec![job], a),
+                            }
                         }
                     }
                     None => {
@@ -1320,6 +1531,114 @@ mod tests {
             assert_same_states(&batch, &nat, "streaming natural");
             assert_same_states(&batch, &rev, "streaming reversed");
         }
+    }
+
+    #[test]
+    fn sharded_mode_matches_batch_bit_exactly() {
+        // shard-owner execution (batch and streaming) vs the plain
+        // batch path, across thread counts including owners > groups;
+        // unaligned group sizes exercise the zero padding
+        let m = model(&[("h0.w", 3 * GROUP + 5), ("ln0.g", GROUP + 3)]);
+        let n = m.param_count;
+        let t0 = theta(n, 31);
+        let cfg = TrainConfig::default();
+        let g: Vec<f32> = theta(n, 32)
+            .iter()
+            .map(|&x| crate::formats::bf16::round_f32_to_bf16(x * 0.1))
+            .collect();
+        for threads in [1usize, 3, 8] {
+            let mk = || {
+                FlashOptimizer::native(
+                    OptKind::AdamW, Variant::Flash, 2 * GROUP, &t0,
+                    GroupSpec::decay_split(&m), HyperDefaults::of(&cfg),
+                    BackendKind::Parallel, threads)
+                    .unwrap()
+            };
+            let mut batch = mk();
+            let mut shard = mk();
+            shard.set_shard_state(true);
+            assert!(shard.shard_state());
+            let mut stream = mk();
+            stream.set_shard_state(true);
+            for t in 1..=3usize {
+                batch.step(&g, 1e-3, t, |_, _| {}).unwrap();
+                let mut fired = Vec::new();
+                shard
+                    .step(&g, 1e-3, t, |gi, bi| fired.push((gi, bi)))
+                    .unwrap();
+                assert_eq!(fired.len(), shard.n_buckets(),
+                           "sharded step must fire every hook");
+                stream.step_streaming(&g, 1e-3, t, |_, _| {}).unwrap();
+            }
+            assert_same_states(&batch, &shard,
+                               &format!("sharded batch ({threads}t)"));
+            assert_same_states(&batch, &stream,
+                               &format!("sharded stream ({threads}t)"));
+        }
+    }
+
+    #[test]
+    fn sharded_mode_is_a_noop_on_sequential_backends() {
+        let m = model(&[("h0.w", 2 * GROUP), ("ln0.g", GROUP)]);
+        let t0 = theta(m.param_count, 33);
+        let cfg = TrainConfig::default();
+        let mk = |shard| {
+            let mut o = FlashOptimizer::native(
+                OptKind::AdamW, Variant::Flash, GROUP, &t0,
+                GroupSpec::decay_split(&m), HyperDefaults::of(&cfg),
+                BackendKind::Scalar, 0)
+                .unwrap();
+            o.set_shard_state(shard);
+            o
+        };
+        let g = vec![0.01f32; m.param_count];
+        let mut plain = mk(false);
+        let mut sharded = mk(true);
+        plain.step(&g, 1e-3, 1, |_, _| {}).unwrap();
+        sharded.step(&g, 1e-3, 1, |_, _| {}).unwrap();
+        assert_same_states(&plain, &sharded, "scalar fallback");
+        // step_workers declines instead of erroring
+        let ws = vec![g.clone()];
+        assert!(!sharded
+            .step_workers(&ws, 1e-3, 2, |_, _| {})
+            .unwrap());
+    }
+
+    #[test]
+    fn step_workers_matches_allreduce_then_step() {
+        // the shard-owner reduce-scatter (each owner means its own
+        // shard, then steps it) vs the serial all-reduce + batch step
+        let m = model(&[("h0.w", 2 * GROUP + 9), ("ln0.g", GROUP)]);
+        let n = m.param_count;
+        let t0 = theta(n, 41);
+        let cfg = TrainConfig::default();
+        let mk = || {
+            FlashOptimizer::native(
+                OptKind::AdamW, Variant::Flash, 2 * GROUP, &t0,
+                GroupSpec::decay_split(&m), HyperDefaults::of(&cfg),
+                BackendKind::Parallel, 3)
+                .unwrap()
+        };
+        let mut serial = mk();
+        let mut sharded = mk();
+        sharded.set_shard_state(true);
+        for t in 1..=3usize {
+            let grads: Vec<Vec<f32>> = (0..3u64)
+                .map(|i| theta(n, 100 * t as u64 + i))
+                .collect();
+            let mut ws = grads.clone();
+            let reduced =
+                crate::coordinator::data_parallel::allreduce_mean(
+                    &mut ws);
+            serial.step(&reduced, 1e-3, t, |_, _| {}).unwrap();
+            let mut fired = Vec::new();
+            assert!(sharded
+                .step_workers(&grads, 1e-3, t,
+                              |gi, bi| fired.push((gi, bi)))
+                .unwrap());
+            assert_eq!(fired.len(), sharded.n_buckets());
+        }
+        assert_same_states(&serial, &sharded, "step_workers");
     }
 
     #[test]

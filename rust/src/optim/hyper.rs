@@ -49,7 +49,8 @@ impl HyperDefaults {
 
 /// Per-group hyperparameter overrides; `None` inherits the run default.
 /// `lr_scale` multiplies the scheduled learning rate (so per-layer LR
-/// still follows warmup/cosine).
+/// still follows warmup/cosine); `warmup_steps` adds a group-local
+/// linear ramp on top of it (see [`resolve`](Self::resolve)).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct GroupHyper {
     pub lr_scale: Option<f64>,
@@ -57,6 +58,8 @@ pub struct GroupHyper {
     pub beta1: Option<f64>,
     pub beta2: Option<f64>,
     pub eps: Option<f64>,
+    /// group-local linear LR warmup over this many steps
+    pub warmup_steps: Option<usize>,
 }
 
 impl GroupHyper {
@@ -67,12 +70,21 @@ impl GroupHyper {
             beta1: g.beta1,
             beta2: g.beta2,
             eps: g.eps,
+            warmup_steps: g.warmup_steps,
         }
     }
 
     /// Resolve the overrides against the defaults into the concrete
     /// hyper vector for scheduled LR `lr` at optimizer step `t`
     /// (1-based).
+    ///
+    /// `warmup_steps = Some(w)` multiplies the scheduled LR (after
+    /// `lr_scale`) by `t / w` while `t < w` — a group-local linear
+    /// ramp on top of whatever run-level schedule produced `lr`, the
+    /// standard recipe for freshly initialized heads riding along a
+    /// warm backbone.  From `t >= w` the factor is exactly 1: the
+    /// multiplication is skipped entirely, so the resolved LR bits are
+    /// identical to a group with no warmup.
     pub fn resolve(&self, d: &HyperDefaults, lr: f64, t: usize) -> Hyper {
         let beta1 = self.beta1.unwrap_or(d.beta1);
         let beta2 = self.beta2.unwrap_or(d.beta2);
@@ -83,8 +95,14 @@ impl GroupHyper {
             }
             _ => (1.0, 1.0),
         };
+        let mut lr = lr * self.lr_scale.unwrap_or(1.0);
+        if let Some(w) = self.warmup_steps {
+            if t < w {
+                lr = lr * t as f64 / w as f64;
+            }
+        }
         Hyper {
-            lr: (lr * self.lr_scale.unwrap_or(1.0)) as f32,
+            lr: lr as f32,
             beta1: beta1 as f32,
             beta2: beta2 as f32,
             eps: self.eps.unwrap_or(d.eps) as f32,
@@ -289,7 +307,7 @@ mod tests {
         let none = GroupHyper::default();
         assert_eq!(none, GroupHyper { lr_scale: None, weight_decay: None,
                                       beta1: None, beta2: None,
-                                      eps: None });
+                                      eps: None, warmup_steps: None });
         assert_eq!(none.resolve(&d, 1e-3, 7),
                    Hyper::for_step(&cfg, 1e-3, 7));
 
@@ -306,5 +324,41 @@ mod tests {
         assert_eq!(h.beta1, cfg.beta1 as f32); // inherited
         // bias correction follows the overridden beta2
         assert!((h.bc2 - 1000.0).abs() < 0.5, "{}", h.bc2);
+    }
+
+    #[test]
+    fn group_warmup_ramps_linearly_then_vanishes() {
+        let cfg = TrainConfig::default();
+        let d = HyperDefaults::of(&cfg);
+        let warm = GroupHyper {
+            warmup_steps: Some(4),
+            ..Default::default()
+        };
+        // linear ramp in f64 before the single f32 cast
+        for t in 1..4usize {
+            let h = warm.resolve(&d, 1e-3, t);
+            assert_eq!(h.lr, (1e-3 * t as f64 / 4.0) as f32, "t={t}");
+        }
+        // at and past t = w the factor is exactly 1: bit-identical to
+        // a group with no warmup at all (the multiply is skipped)
+        for t in [4usize, 5, 100] {
+            let h = warm.resolve(&d, 1e-3, t);
+            let plain = GroupHyper::default().resolve(&d, 1e-3, t);
+            assert_eq!(h.lr.to_bits(), plain.lr.to_bits(), "t={t}");
+        }
+        // composes with lr_scale (scale first, then the ramp)
+        let both = GroupHyper {
+            lr_scale: Some(0.5),
+            warmup_steps: Some(2),
+            ..Default::default()
+        };
+        let h = both.resolve(&d, 1e-3, 1);
+        assert_eq!(h.lr, (1e-3 * 0.5 * 1.0 / 2.0) as f32);
+        // warmup_steps = 0 never ramps (t >= 1 > nothing)
+        let zero = GroupHyper {
+            warmup_steps: Some(0),
+            ..Default::default()
+        };
+        assert_eq!(zero.resolve(&d, 1e-3, 1).lr, 1e-3f64 as f32);
     }
 }

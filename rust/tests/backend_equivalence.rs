@@ -24,7 +24,8 @@ use flashtrain::formats::{bf16, GROUP};
 use flashtrain::kernels::avx2_available;
 use flashtrain::memory::tracker::{Category, Tracker};
 use flashtrain::optim::{scalar_ref, BucketOptimizer, FlashOptimizer,
-                        GroupSpec, Hyper, HyperDefaults, State};
+                        GroupHyper, GroupSpec, Hyper, HyperDefaults,
+                        State};
 
 const ALL_OPTS: [OptKind; 3] =
     [OptKind::Sgd, OptKind::AdamW, OptKind::Lion];
@@ -34,6 +35,28 @@ const ALL_VARIANTS: [Variant; 5] = [
     Variant::WeightSplit,
     Variant::OptQuant,
     Variant::NoCompand,
+];
+
+/// The pair universe of the shard-owner differential axis
+/// (`sharded_mode_matches_batch_all_pairs` below) — `flashoptim-analyze`
+/// A3 pins this list against the kernel registry, so a pair dropped
+/// here cannot silently shrink sharded coverage.
+const SHARDED_PAIRS: [(OptKind, Variant); 15] = [
+    (OptKind::Sgd, Variant::Reference),
+    (OptKind::Sgd, Variant::Flash),
+    (OptKind::Sgd, Variant::WeightSplit),
+    (OptKind::Sgd, Variant::OptQuant),
+    (OptKind::Sgd, Variant::NoCompand),
+    (OptKind::AdamW, Variant::Reference),
+    (OptKind::AdamW, Variant::Flash),
+    (OptKind::AdamW, Variant::WeightSplit),
+    (OptKind::AdamW, Variant::OptQuant),
+    (OptKind::AdamW, Variant::NoCompand),
+    (OptKind::Lion, Variant::Reference),
+    (OptKind::Lion, Variant::Flash),
+    (OptKind::Lion, Variant::WeightSplit),
+    (OptKind::Lion, Variant::OptQuant),
+    (OptKind::Lion, Variant::NoCompand),
 ];
 
 fn randn(rng: &mut flashtrain::util::rng::Rng, n: usize, s: f32)
@@ -530,4 +553,189 @@ fn batched_group_dispatch_matches_per_group_loop() {
                                 &format!("group {}", gs.name));
     }
     assert_eq!(scalar.master_weights(n), parallel.master_weights(n));
+}
+
+/// Two-group spec for the shard-owner differential axes: uneven sizes
+/// so the GROUP-aligned shard deal is ragged, plus a scaled head so
+/// per-group hyper resolution is exercised under sharding.
+fn sharded_specs(n: usize) -> Vec<GroupSpec> {
+    vec![
+        GroupSpec {
+            name: "body".into(),
+            ranges: vec![(0, 7 * GROUP)],
+            hyper: Default::default(),
+        },
+        GroupSpec {
+            name: "head".into(),
+            ranges: vec![(7 * GROUP, n)],
+            hyper: GroupHyper {
+                lr_scale: Some(0.5),
+                ..Default::default()
+            },
+        },
+    ]
+}
+
+/// Shard-owner execution (`shard_state = true`) == the batched path,
+/// bit for bit: all 15 pairs, several thread counts, both kernel sets,
+/// fused and forced-tiled.  Compares the full state dict and the
+/// assembled compute weights after a 4-step trajectory — the stable
+/// owner partition and the fused shard-local reduce must be invisible.
+#[test]
+fn sharded_mode_matches_batch_all_pairs() {
+    let mut kinds = vec![KernelKind::Scalar];
+    if avx2_available() {
+        kinds.push(KernelKind::Avx2);
+    } else {
+        eprintln!("note: AVX2 not available, sharded differential run \
+                   covers scalar kernels only");
+    }
+    let n = 9 * GROUP;
+    for (opt, variant) in SHARDED_PAIRS {
+        let cfg = TrainConfig { optimizer: opt, variant,
+                                ..Default::default() };
+        for threads in [1usize, 3, 8] {
+            for &kernels in &kinds {
+                for fused_on in [true, false] {
+                    let mut rng = Rng::new(
+                        0x5AD0 ^ threads as u64 ^ ((fused_on as u64) << 8));
+                    let theta0 = randn(&mut rng, n, 0.1);
+                    let mk = || {
+                        FlashOptimizer::native_with_opts(
+                            opt, variant, 2 * GROUP, &theta0,
+                            sharded_specs(n), HyperDefaults::of(&cfg),
+                            BackendKind::Parallel, threads, kernels,
+                            fused_on)
+                            .unwrap()
+                    };
+                    let mut batch = mk();
+                    let mut shard = mk();
+                    shard.set_shard_state(true);
+                    for t in 1..=4 {
+                        let g = grad(&mut rng, n, variant);
+                        batch.step(&g, 1e-3, t, |_, _| {}).unwrap();
+                        shard.step(&g, 1e-3, t, |_, _| {}).unwrap();
+                    }
+                    let what = format!(
+                        "{opt}/{variant} threads={threads} \
+                         kernels={kernels:?} fused={fused_on}");
+                    let a = batch.state_dict(4);
+                    let b = shard.state_dict(4);
+                    for (x, y) in a.groups.iter().zip(&b.groups) {
+                        assert_states_bit_equal(
+                            &x.state, &y.state,
+                            &format!("{what} group {}", x.name));
+                    }
+                    assert_eq!(batch.compute_weights_bf16(n),
+                               shard.compute_weights_bf16(n),
+                               "{what}: compute weights");
+                }
+            }
+        }
+    }
+}
+
+/// Shard-owner mode composes with the streaming step: the sliced
+/// shard maps keep *global* element ownership stable, so any bucket
+/// arrival order produces the batched bits at any thread count.
+#[test]
+fn sharded_streaming_matches_batch() {
+    let n = 9 * GROUP;
+    let cfg = TrainConfig::default();
+    for threads in [1usize, 2, 5] {
+        let mut rng = Rng::new(0x57A0 ^ threads as u64);
+        let theta0 = randn(&mut rng, n, 0.1);
+        let mk = || {
+            FlashOptimizer::native(
+                OptKind::AdamW, Variant::Flash, 2 * GROUP, &theta0,
+                sharded_specs(n), HyperDefaults::of(&cfg),
+                BackendKind::Parallel, threads)
+                .unwrap()
+        };
+        let mut batch = mk();
+        let mut stream = mk();
+        stream.set_shard_state(true);
+        let nb = stream.n_buckets();
+        for t in 1..=4 {
+            let g = grad(&mut rng, n, Variant::Flash);
+            batch.step(&g, 1e-3, t, |_, _| {}).unwrap();
+            // alternate in-order and reversed bucket arrival
+            let order: Vec<usize> = if t % 2 == 0 {
+                (0..nb).rev().collect()
+            } else {
+                (0..nb).collect()
+            };
+            stream
+                .step_streaming_order(&g, 1e-3, t, Some(&order), |_, _| {})
+                .unwrap();
+        }
+        for (x, y) in batch.groups.iter().zip(&stream.groups) {
+            assert_states_bit_equal(
+                &x.opt.state, &y.opt.state,
+                &format!("threads={threads} group {}", x.name));
+        }
+        assert_eq!(batch.compute_weights_bf16(n),
+                   stream.compute_weights_bf16(n),
+                   "threads={threads}: compute weights");
+    }
+}
+
+/// Per-group `warmup_steps` rides the run schedule exactly: the
+/// warming group follows `scalar_ref` stepped with the hand-computed
+/// ramped LR (scale first, then the linear ramp, all in f64, one f32
+/// cast), while the backbone group is untouched by its neighbor's
+/// ramp.
+#[test]
+fn per_group_warmup_matches_scalar_ref_schedule() {
+    let n = 6 * GROUP;
+    let w = 4usize;
+    let base = 1e-3f64;
+    let cfg = TrainConfig { optimizer: OptKind::AdamW,
+                            variant: Variant::Flash,
+                            ..Default::default() };
+    let specs = vec![
+        GroupSpec {
+            name: "backbone".into(),
+            ranges: vec![(0, 4 * GROUP)],
+            hyper: Default::default(),
+        },
+        GroupSpec {
+            name: "fresh_head".into(),
+            ranges: vec![(4 * GROUP, n)],
+            hyper: GroupHyper {
+                lr_scale: Some(0.5),
+                warmup_steps: Some(w),
+                ..Default::default()
+            },
+        },
+    ];
+    let mut rng = Rng::new(0x3A3);
+    let theta0 = randn(&mut rng, n, 0.1);
+    let mut opt = FlashOptimizer::native(
+        OptKind::AdamW, Variant::Flash, 2 * GROUP, &theta0, specs,
+        HyperDefaults::of(&cfg), BackendKind::Scalar, 0)
+        .unwrap();
+    // independent scalar_ref mirrors of the two group partitions
+    // (group sizes are exact GROUP multiples, so padded == count)
+    let mut back = opt.groups[0].opt.state.clone();
+    let mut head = opt.groups[1].opt.state.clone();
+    for t in 1..=6 {
+        let g = grad(&mut rng, n, Variant::Flash);
+        opt.step(&g, base, t, |_, _| {}).unwrap();
+        let hb = Hyper::for_step(&cfg, base, t);
+        scalar_ref::step_state(&mut back, &g[..4 * GROUP], OptKind::AdamW,
+                               Variant::Flash, &hb);
+        let mut hh = Hyper::for_step(&cfg, base, t);
+        let mut lr = base * 0.5;
+        if t < w {
+            lr = lr * t as f64 / w as f64;
+        }
+        hh.lr = lr as f32;
+        scalar_ref::step_state(&mut head, &g[4 * GROUP..], OptKind::AdamW,
+                               Variant::Flash, &hh);
+    }
+    assert_states_bit_equal(&back, &opt.groups[0].opt.state,
+                            "backbone vs scalar_ref");
+    assert_states_bit_equal(&head, &opt.groups[1].opt.state,
+                            "warmup head vs scalar_ref");
 }

@@ -1,10 +1,12 @@
 //! Checkpoint v2 (named param-group sections) integration tests:
 //! round-trips across every (optimizer, variant) pair with ≥2 groups,
-//! v1 → v2 read-compat, and per-section corruption injection on group
-//! payloads and headers.
+//! v1 → v2 read-compat, per-section corruption injection on group
+//! payloads and headers, and serial ↔ sharded writer/reader
+//! equivalence (parallel per-shard CRC I/O must be byte-identical).
 
 use std::path::PathBuf;
 
+use flashtrain::backend::pool::WorkerPool;
 use flashtrain::checkpoint;
 use flashtrain::config::{OptKind, Variant};
 use flashtrain::formats::GROUP;
@@ -204,6 +206,94 @@ fn per_section_corruption_injection_detected() {
     // the pristine file still loads after all that
     std::fs::write(&path, &clean).unwrap();
     checkpoint::load_state_dict(&path).unwrap();
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn sharded_writer_is_byte_identical_for_all_pairs() {
+    // the parallel writer must emit the exact serial v2 bytes for
+    // every (optimizer, variant) state shape, at any worker count —
+    // including section payloads whose length is not a multiple of
+    // the shard count
+    for (i, (opt, variant)) in ALL_PAIRS.iter().enumerate() {
+        let sd = demo_dict(*opt, *variant, i as u64 * 10 + 500);
+        let p_ser = tmp(&format!("shardser_{opt}_{variant}"));
+        checkpoint::save_state_dict(&p_ser, &sd).unwrap();
+        let want = std::fs::read(&p_ser).unwrap();
+        for workers in [0usize, 3] {
+            let pool = WorkerPool::new(workers).unwrap();
+            let p_par = tmp(&format!("shardpar{workers}_{opt}_{variant}"));
+            checkpoint::save_state_dict_sharded(&p_par, &sd, &pool)
+                .unwrap();
+            let got = std::fs::read(&p_par).unwrap();
+            assert!(want == got,
+                    "{opt}/{variant} workers={workers}: sharded bytes \
+                     differ from serial");
+            std::fs::remove_file(p_par).ok();
+        }
+        std::fs::remove_file(p_ser).ok();
+    }
+}
+
+#[test]
+fn sharded_and_serial_loaders_cross_read() {
+    let sd = demo_dict(OptKind::AdamW, Variant::Flash, 77);
+    let pool = WorkerPool::new(2).unwrap();
+    let path = tmp("cross");
+    for sharded_writer in [false, true] {
+        if sharded_writer {
+            checkpoint::save_state_dict_sharded(&path, &sd, &pool)
+                .unwrap();
+        } else {
+            checkpoint::save_state_dict(&path, &sd).unwrap();
+        }
+        let serial = checkpoint::load_state_dict(&path).unwrap();
+        let shard = checkpoint::load_state_dict_sharded(&path, &pool)
+            .unwrap();
+        for sd2 in [&serial, &shard] {
+            assert_eq!(sd2.step, 123);
+            assert_eq!(sd2.groups.len(), 3);
+            for (a, b) in sd.groups.iter().zip(&sd2.groups) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.ranges, b.ranges);
+                assert_states_bit_equal(
+                    &a.state, &b.state,
+                    &format!("writer_sharded={sharded_writer}/{}", a.name));
+            }
+        }
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn sharded_loader_detects_per_section_corruption() {
+    // same injection walk as the serial loader's test: the pooled CRC
+    // verification must catch a flip in every header and payload
+    let sd = demo_dict(OptKind::AdamW, Variant::Flash, 99);
+    let pool = WorkerPool::new(3).unwrap();
+    let path = tmp("shardcorrupt");
+    checkpoint::save_state_dict_sharded(&path, &sd, &pool).unwrap();
+    let clean = std::fs::read(&path).unwrap();
+    for (label, off, len) in &v2_regions(&clean) {
+        if *len == 0 {
+            continue;
+        }
+        let mut bytes = clean.clone();
+        bytes[off + len / 2] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = match checkpoint::load_state_dict_sharded(&path, &pool) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("corruption in {label} went undetected"),
+        };
+        assert!(
+            err.contains("crc") || err.contains("corrupt")
+                || err.contains("tag") || err.contains("length")
+                || err.contains("invalid") || err.contains("byte"),
+            "{label}: unexpected error {err}"
+        );
+    }
+    std::fs::write(&path, &clean).unwrap();
+    checkpoint::load_state_dict_sharded(&path, &pool).unwrap();
     std::fs::remove_file(path).ok();
 }
 

@@ -1,0 +1,19 @@
+// A3 negative fixture: a sharded pair table that dropped two pairs.
+// Scanned as text under the synthetic path
+// rust/tests/backend_equivalence.rs.
+
+const SHARDED_PAIRS: [(OptKind, Variant); 13] = [
+    (OptKind::Sgd, Variant::Flash),
+    (OptKind::Sgd, Variant::WeightSplit),
+    (OptKind::Sgd, Variant::OptQuant),
+    (OptKind::Sgd, Variant::NoCompand),
+    (OptKind::AdamW, Variant::Reference),
+    (OptKind::AdamW, Variant::Flash),
+    (OptKind::AdamW, Variant::WeightSplit),
+    (OptKind::AdamW, Variant::OptQuant),
+    (OptKind::AdamW, Variant::NoCompand),
+    (OptKind::Lion, Variant::Reference),
+    (OptKind::Lion, Variant::Flash),
+    (OptKind::Lion, Variant::WeightSplit),
+    (OptKind::Lion, Variant::OptQuant),
+];

@@ -34,6 +34,15 @@
 //! 5-bytes/param mode must never buy its memory back with drift.  Its
 //! deterministic prefix covers streaming on all 15 pairs.
 //!
+//! A third leg (`sharded_vs_batch_differential_fuzz`) turns on
+//! shard-owner execution (`shard_state`) and drives it against the
+//! plain batch step under the same machinery: random thread counts,
+//! batch and streaming (out-of-order) sharded steps, multi-group
+//! splits, unaligned counts/buckets, plus the sequential no-op
+//! fallback — the stable owner partition and the fused shard-local
+//! reduce must be invisible in the bits.  Its deterministic prefix
+//! covers sharding on all 15 pairs.
+//!
 //! Determinism: the case stream derives from one seed
 //! (`FUSED_FUZZ_SEED`, default `0xF5ED`), so a CI failure names a case
 //! index that replays locally with the same env.  The case budget is
@@ -555,5 +564,161 @@ fn streaming_vs_batch_differential_fuzz() {
             pairs_seen.len(), universe.len());
     println!(
         "streaming_fuzz: {cases} cases OK (seed {seed}, {}/15 pairs)",
+        pairs_seen.len());
+}
+
+#[test]
+fn sharded_vs_batch_differential_fuzz() {
+    let cases = env_u64("FUSED_FUZZ_CASES", 48) as usize;
+    let seed = env_u64("FUSED_FUZZ_SEED", 0xF5ED) ^ 0x5A_ADED;
+    let mut rng = Rng::new(seed);
+    let universe: Vec<(OptKind, Variant)> = ALL_OPTS
+        .iter()
+        .flat_map(|&o| ALL_VARIANTS.iter().map(move |&v| (o, v)))
+        .collect();
+    let mut pairs_seen = std::collections::BTreeSet::new();
+
+    for case in 0..cases {
+        // same deterministic-prefix scheme as the other legs: the
+        // first 15 cases cover sharding on every (optimizer, variant)
+        let (opt, variant) = if case < universe.len() {
+            universe[case]
+        } else {
+            (ALL_OPTS[rng.below(3) as usize],
+             ALL_VARIANTS[rng.below(5) as usize])
+        };
+        pairs_seen.insert((opt.name(), variant.name()));
+        let steps = 1 + rng.below(4) as usize;
+        let inj = Inject::draw(&mut rng).constrain_for(variant);
+        let count =
+            (gen_len(&mut rng) - rng.below(GROUP as u64) as usize).max(1);
+        let bucket = match rng.below(3) {
+            0 => GROUP * (1 + rng.below(3) as usize),
+            1 => 100,
+            _ => GROUP + 1 + rng.below(2 * GROUP as u64) as usize,
+        };
+
+        // same hyper scheme and NaN carve-outs as the streaming leg
+        let wd = if inj.nan {
+            0.05 + rng.f64() * 0.15
+        } else if rng.below(2) == 0 {
+            0.0
+        } else {
+            rng.f64() * 0.2
+        };
+        let mut cfg = TrainConfig {
+            optimizer: opt,
+            beta1: 0.5 + rng.f64() * 0.49,
+            beta2: 0.8 + rng.f64() * 0.199,
+            eps: 1e-8,
+            weight_decay: wd,
+            ..Default::default()
+        };
+        if rng.below(4) == 0 && !inj.benign_hypers() {
+            match rng.below(2) {
+                0 => cfg.beta2 = -0.5,
+                _ => cfg.eps = 0.0,
+            }
+        }
+        let lr = if rng.below(8) == 0 && !inj.benign_hypers() {
+            1e30
+        } else {
+            1e-4 + rng.f64() * 5e-3
+        };
+        let t_base = rng.below(2000) as usize;
+
+        let theta0 = gen_values(&mut rng, count, 0.1, inj);
+        let specs = if case % 3 == 0 && count >= 2 {
+            let s = 1 + rng.below(count as u64 - 1) as usize;
+            let mut h2 = GroupHyper {
+                lr_scale: Some(0.5),
+                ..GroupHyper::default()
+            };
+            if !inj.nan {
+                h2.weight_decay = Some(0.0);
+            }
+            vec![GroupSpec {
+                     name: "head".into(),
+                     ranges: vec![(0, s)],
+                     hyper: GroupHyper::default(),
+                 },
+                 GroupSpec {
+                     name: "body".into(),
+                     ranges: vec![(s, count)],
+                     hyper: h2,
+                 }]
+        } else {
+            GroupSpec::single(count)
+        };
+        // sharding only engages on the pool backend, so most cases run
+        // there with a random worker count; every fourth exercises the
+        // documented sequential no-op fallback on the scalar backend
+        let (backend, threads) = if case % 4 == 3 {
+            (BackendKind::Scalar, 0)
+        } else {
+            (BackendKind::Parallel, 1 + rng.below(8) as usize)
+        };
+        let kernels = if case % 2 == 0 {
+            KernelKind::Scalar
+        } else {
+            KernelKind::Auto
+        };
+        let fused = case % 3 != 1; // in-test tiled-mirror coverage
+        // half the sharded cases arrive through the streaming path, so
+        // shard ownership composes with out-of-order bucket release
+        let streaming = case % 2 == 1;
+        let ctx = format!(
+            "sharded case {case} (seed {seed}): {opt}/{variant} \
+             count={count} bucket={bucket} steps={steps} \
+             groups={} {backend:?}x{threads} streaming={streaming} \
+             {inj:?}",
+            specs.len());
+
+        let mk = || {
+            FlashOptimizer::native_with_opts(
+                opt, variant, bucket, &theta0, specs.clone(),
+                HyperDefaults::of(&cfg), backend, threads, kernels,
+                fused)
+                .unwrap()
+        };
+        let mut batch = mk();
+        let mut shard = mk();
+        shard.set_shard_state(true);
+        let nb = batch.n_buckets();
+        for s in 1..=steps {
+            let t = t_base + s;
+            let g = gen_grad(&mut rng, count, variant, inj);
+            batch.step(&g, lr, t, |_, _| {}).unwrap();
+            if streaming {
+                // random out-of-order bucket arrival (Fisher–Yates)
+                let mut order: Vec<usize> = (0..nb).collect();
+                for i in (1..order.len()).rev() {
+                    order.swap(i, rng.below(i as u64 + 1) as usize);
+                }
+                shard
+                    .step_streaming_order(&g, lr, t, Some(&order),
+                                          |_, _| {})
+                    .unwrap();
+            } else {
+                shard.step(&g, lr, t, |_, _| {}).unwrap();
+            }
+            for (ga, gb) in batch.groups.iter().zip(&shard.groups) {
+                assert_states_bit_equal(
+                    &ga.opt.state, &gb.opt.state,
+                    &format!("{ctx} step {s} group {}", ga.name));
+            }
+        }
+        assert_eq!(batch.compute_weights_bf16(count),
+                   shard.compute_weights_bf16(count),
+                   "{ctx}: compute weights");
+    }
+    assert!(cases < universe.len()
+                || pairs_seen.len() == universe.len(),
+            "only {} of {} (optimizer, variant) pairs exercised in \
+             {cases} sharded cases — the deterministic round-robin \
+             prefix should have covered every pair",
+            pairs_seen.len(), universe.len());
+    println!(
+        "sharded_fuzz: {cases} cases OK (seed {seed}, {}/15 pairs)",
         pairs_seen.len());
 }

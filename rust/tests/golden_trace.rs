@@ -104,12 +104,13 @@ fn push_bytes<T, F: Fn(&T, &mut Vec<u8>)>(out: &mut Vec<u8>, tag: u8,
 
 /// Run one family trace and checksum the final state dict + compute
 /// weights.  `streaming` routes every step through the
-/// gradient-release streaming path, which must land on the exact same
-/// pinned checksum as the batch step.
+/// gradient-release streaming path; `sharded` turns on shard-owner
+/// execution (`shard_state`).  Both must land on the exact same
+/// pinned checksum as the plain batch step.
 #[allow(clippy::too_many_arguments)]
 fn run_trace(opt: OptKind, variant: Variant, backend: BackendKind,
              threads: usize, kernels: KernelKind, fused: bool,
-             streaming: bool) -> u32 {
+             streaming: bool, sharded: bool) -> u32 {
     let cfg = TrainConfig {
         optimizer: opt,
         variant,
@@ -121,6 +122,7 @@ fn run_trace(opt: OptKind, variant: Variant, backend: BackendKind,
         opt, variant, BUCKET, &theta0, specs(),
         HyperDefaults::of(&cfg), backend, threads, kernels, fused)
         .expect("building the golden-trace optimizer");
+    fo.set_shard_state(sharded);
     for t in 1..=STEPS {
         let g = det_vec(&mut rng, PARAMS, -5);
         if streaming {
@@ -187,21 +189,21 @@ fn golden_trace_checksums() {
         .map(|&(opt, name)| {
             (name,
              run_trace(opt, Variant::Flash, BackendKind::Scalar, 0,
-                       KernelKind::Scalar, true, false))
+                       KernelKind::Scalar, true, false, false))
         })
         .collect();
 
     // in-process determinism is a precondition for pinning anything
     for &(opt, name) in &FAMILIES {
         let again = run_trace(opt, Variant::Flash, BackendKind::Scalar,
-                              0, KernelKind::Scalar, true, false);
+                              0, KernelKind::Scalar, true, false, false);
         let first = entries.iter().find(|(n, _)| *n == name).unwrap().1;
         assert_eq!(first, again, "{name}: trace not deterministic");
         // gradient-release streaming must reproduce the *pinned* CRCs,
         // not merely be self-consistent: same bits as the batch step
         let streamed = run_trace(opt, Variant::Flash,
                                  BackendKind::Scalar, 0,
-                                 KernelKind::Scalar, true, true);
+                                 KernelKind::Scalar, true, true, false);
         assert_eq!(first, streamed,
                    "{name}: streaming step drifted off the pinned \
                     batch checksum");
@@ -252,8 +254,9 @@ fn golden_trace_checksums() {
 
 /// The checksum must not depend on which engine computed it: kernels
 /// (scalar vs auto/AVX2), backend (sequential vs thread pool), the
-/// fused single pass vs the tiled mirror, and the batch step vs the
-/// gradient-release streaming step all produce the same bits — for
+/// fused single pass vs the tiled mirror, the batch step vs the
+/// gradient-release streaming step, and shard-owner execution
+/// (`shard_state`) all produce the same bits — for
 /// **every variant**, the fp32-resident layouts included now that the
 /// fused kernels cover all 15 (optimizer, variant) pairs.  Only the
 /// `flash` families are pinned in the golden file; the other variants
@@ -273,33 +276,56 @@ fn golden_trace_is_engine_invariant() {
             let what = format!("{name}/{variant}");
             let reference = run_trace(opt, variant, BackendKind::Scalar,
                                       0, KernelKind::Scalar, true,
-                                      false);
+                                      false, false);
             let tiled = run_trace(opt, variant, BackendKind::Scalar, 0,
-                                  KernelKind::Scalar, false, false);
+                                  KernelKind::Scalar, false, false,
+                                  false);
             assert_eq!(reference, tiled, "{what}: fused vs tiled");
             let auto = run_trace(opt, variant, BackendKind::Scalar, 0,
-                                 KernelKind::Auto, true, false);
+                                 KernelKind::Auto, true, false, false);
             assert_eq!(reference, auto,
                        "{what}: scalar vs auto kernels");
             let par = run_trace(opt, variant, BackendKind::Parallel, 3,
-                                KernelKind::Auto, true, false);
+                                KernelKind::Auto, true, false, false);
             assert_eq!(reference, par,
                        "{what}: sequential vs parallel");
             // gradient-release streaming spans the same axes: fused
             // and tiled kernels, sequential and parallel backends all
             // reproduce the batch bits bucket-by-bucket
             let s_fused = run_trace(opt, variant, BackendKind::Scalar,
-                                    0, KernelKind::Scalar, true, true);
+                                    0, KernelKind::Scalar, true, true,
+                                    false);
             assert_eq!(reference, s_fused,
                        "{what}: streaming (fused) vs batch");
             let s_tiled = run_trace(opt, variant, BackendKind::Scalar,
-                                    0, KernelKind::Scalar, false, true);
+                                    0, KernelKind::Scalar, false, true,
+                                    false);
             assert_eq!(reference, s_tiled,
                        "{what}: streaming (tiled) vs batch");
             let s_par = run_trace(opt, variant, BackendKind::Parallel,
-                                  3, KernelKind::Auto, true, true);
+                                  3, KernelKind::Auto, true, true,
+                                  false);
             assert_eq!(reference, s_par,
                        "{what}: streaming (parallel) vs batch");
+            // shard-owner execution is one more engine axis: batch and
+            // streaming sharded runs on the pool, plus the sequential
+            // no-op fallback, all land on the same pinned checksum
+            let sh_par = run_trace(opt, variant, BackendKind::Parallel,
+                                   3, KernelKind::Auto, true, false,
+                                   true);
+            assert_eq!(reference, sh_par,
+                       "{what}: sharded (parallel) vs batch");
+            let sh_stream = run_trace(opt, variant,
+                                      BackendKind::Parallel, 3,
+                                      KernelKind::Auto, true, true,
+                                      true);
+            assert_eq!(reference, sh_stream,
+                       "{what}: sharded streaming vs batch");
+            let sh_seq = run_trace(opt, variant, BackendKind::Scalar,
+                                   0, KernelKind::Scalar, true, false,
+                                   true);
+            assert_eq!(reference, sh_seq,
+                       "{what}: sharded fallback (sequential) vs batch");
         }
     }
 }

@@ -104,6 +104,10 @@ fn a3_flags_dropped_pairs_everywhere() {
             "rust/benches/kernel_hotpath.rs",
             include_str!("fixtures/analyze/a3_bench.rs").into(),
         ),
+        (
+            "rust/tests/backend_equivalence.rs",
+            include_str!("fixtures/analyze/a3_sharded.rs").into(),
+        ),
     ]);
     let a3 = findings_for("A3", &run(&c));
     let count = |needle: &str| {
@@ -122,7 +126,10 @@ fn a3_flags_dropped_pairs_everywhere() {
     // bench: the 8 rows the 7-row table never had
     assert_eq!(count("bench STEP_ROWS is missing"), 8, "{}",
                render(&a3));
-    assert_eq!(a3.len(), 16, "{}", render(&a3));
+    // sharded table: (Sgd, Reference) and (Lion, NoCompand) dropped
+    assert_eq!(count("sharded SHARDED_PAIRS is missing"), 2, "{}",
+               render(&a3));
+    assert_eq!(a3.len(), 18, "{}", render(&a3));
 }
 
 #[test]
