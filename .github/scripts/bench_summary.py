@@ -7,8 +7,9 @@ Dispatches on the document's `bench` field:
 * `train_step` (BENCH_train.json, schema v1) — batch vs
   gradient-release streaming vs shard-owner sharded step time and
   peak bytes/param;
-* `checkpoint` (BENCH_checkpoint.json, schema v1) — serial vs
-  shard-parallel checkpoint save/load throughput.
+* `checkpoint` (BENCH_checkpoint.json, schema v2) — serial vs
+  shard-parallel checkpoint save/load throughput plus on-disk state
+  size per layout (`state_files`).
 
 Usage: bench_summary.py BENCH_<name>.json >> "$GITHUB_STEP_SUMMARY"
 
@@ -61,7 +62,7 @@ def render_kernels(doc):
     pairs = {(e["optimizer"], e["variant"]) for e in rows}
     print()
     print(f"{len(rows)} rows · {len(pairs)} distinct (optimizer, "
-          f"variant) pairs (universe: 15)")
+          f"variant) pairs (universe: 21)")
 
 
 def render_train(doc):
@@ -147,6 +148,19 @@ def render_checkpoint(doc):
     print()
     print(f"{len(rows)} rows · {len(by_op)} ops × 2 modes "
           f"(parallel bytes are bit-identical to serial)")
+    state_files = doc.get("state_files", [])
+    if state_files:
+        print()
+        print("### on-disk state size by layout (adamw)")
+        print()
+        print("| optimizer/variant | file bytes | B/param |")
+        print("|---|---|---|")
+        for e in state_files:
+            pair = f"{e['optimizer']}/{e['variant']}"
+            print(
+                f"| {pair} | {e['file_bytes']:,.0f} "
+                f"| {e['bytes_per_param']:.3f} |"
+            )
 
 
 def main():

@@ -13,8 +13,10 @@
 //! `--check` is the CI smoke mode: small sizes, and the invariants
 //! the bench asserts in every mode — the parallel save emits bytes
 //! identical to the serial writer, both loaders read both files to
-//! the same state, and the emitted JSON parses and is op×mode
-//! complete.
+//! the same state, the emitted JSON parses and is op×mode complete,
+//! and the nibble-packed `quant4` checkpoint is measurably smaller
+//! on disk than the 8-bit `quant` one (the 4-bit payoff, asserted
+//! over real saved files, reported in the `state_files` section).
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -37,9 +39,9 @@ fn tmp(name: &str) -> PathBuf {
         "flashtrain_bench_ckpt_{}_{name}", std::process::id()))
 }
 
-/// A realistic dict: two groups (decay / no-decay split), AdamW/Flash
-/// compact state after a couple of real steps.
-fn build_dict(n: usize, bucket: usize) -> StateDict {
+/// A realistic dict: two groups (decay / no-decay split), compact
+/// AdamW state for the given variant after a couple of real steps.
+fn build_dict(variant: Variant, n: usize, bucket: usize) -> StateDict {
     let mut rng = Rng::new(0xC4EC ^ n as u64);
     let theta0: Vec<f32> =
         (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
@@ -64,13 +66,18 @@ fn build_dict(n: usize, bucket: usize) -> StateDict {
         },
     ];
     let mut fo = FlashOptimizer::native(
-        OptKind::AdamW, Variant::Flash, bucket, &theta0, specs,
+        OptKind::AdamW, variant, bucket, &theta0, specs,
         HyperDefaults::of(&cfg), BackendKind::Scalar, 0)
         .expect("building the checkpoint bench optimizer");
     for t in 1..=2usize {
         let g: Vec<f32> = (0..n)
             .map(|_| {
-                bf16::round_f32_to_bf16(rng.normal() as f32 * 0.01)
+                let x = rng.normal() as f32 * 0.01;
+                if variant.splits_weights() {
+                    bf16::round_f32_to_bf16(x)
+                } else {
+                    x
+                }
             })
             .collect();
         fo.step(&g, 1e-3, t, |_, _| {}).unwrap();
@@ -111,7 +118,7 @@ fn main() {
         .map(|s| s.to_string())
         .unwrap_or_else(|| default_out.to_string_lossy().into_owned());
 
-    let sd = build_dict(n, bucket);
+    let sd = build_dict(Variant::Flash, n, bucket);
     let p_serial = tmp("serial.ckpt");
     let p_par = tmp("parallel.ckpt");
 
@@ -192,18 +199,53 @@ fn main() {
     std::fs::remove_file(&p_serial).ok();
     std::fs::remove_file(&p_par).ok();
 
+    // ---- on-disk state size per variant -----------------------------------
+    // the point of the 4-bit layouts: an adamw/quant4 checkpoint must
+    // be measurably smaller than the 8-bit adamw/quant one, and the
+    // nibble-packed tracks must also beat flash (same split weights,
+    // half the moment payload); mixed84 sits strictly between
+    let mut t2 = Table::new(
+        &format!("checkpoint size by state layout (adamw, {n} params)"),
+        &["variant", "file bytes", "B/param"]);
+    let mut state_json: Vec<Json> = Vec::new();
+    let mut size_of: BTreeMap<&str, u64> = BTreeMap::new();
+    for variant in [Variant::Flash, Variant::OptQuant, Variant::Quant4,
+                    Variant::Mixed84] {
+        let p_v = tmp(variant.name());
+        let vd = build_dict(variant, n, bucket);
+        let vb = save_state_dict(&p_v, &vd).unwrap();
+        std::fs::remove_file(&p_v).ok();
+        size_of.insert(variant.name(), vb);
+        t2.row(&[variant.name().into(), format!("{vb}"),
+                 format!("{:.3}", vb as f64 / n as f64)]);
+        state_json.push(obj(vec![
+            ("optimizer", Json::Str("adamw".into())),
+            ("variant", Json::Str(variant.name().into())),
+            ("file_bytes", Json::Num(vb as f64)),
+            ("bytes_per_param", Json::Num(vb as f64 / n as f64)),
+        ]));
+    }
+    t2.print();
+    let (flash, quant) = (size_of["flash"], size_of["quant"]);
+    let (quant4, mixed84) = (size_of["quant4"], size_of["mixed84"]);
+    assert!((quant4 as f64) < 0.9 * quant as f64,
+            "adamw/quant4 checkpoint ({quant4} bytes) is not              measurably smaller than adamw/quant ({quant} bytes)");
+    assert!(quant4 < mixed84 && mixed84 < flash,
+            "4-bit layout sizes out of order: quant4 {quant4} vs              mixed84 {mixed84} vs flash {flash}");
+
     // ---- machine-readable output ------------------------------------------
-    // schema v1: one row per (op, mode) with the wall-time median and
-    // file-size throughput
+    // schema v2: one row per (op, mode) with the wall-time median and
+    // file-size throughput, plus the per-variant `state_files` sizes
     let doc = obj(vec![
         ("bench", Json::Str("checkpoint".into())),
-        ("schema_version", Json::Num(1.0)),
+        ("schema_version", Json::Num(2.0)),
         ("quick", Json::Bool(quick)),
         ("check", Json::Bool(check)),
         ("params", Json::Num(n as f64)),
         ("file_bytes", Json::Num(file_bytes as f64)),
         ("threads", Json::Num(nthreads as f64)),
         ("rows", Json::Arr(rows_json)),
+        ("state_files", Json::Arr(state_json)),
     ]);
     let text = doc.to_string_pretty();
     let parsed = Json::parse(&text).expect("emitted JSON must parse");
@@ -231,6 +273,11 @@ fn main() {
                  "load/parallel"] {
         assert!(seen.contains(want), "missing row {want}");
     }
+    let state_files = parsed
+        .get("state_files")
+        .and_then(Json::as_arr)
+        .expect("state_files section present");
+    assert_eq!(state_files.len(), 4, "one size row per state layout");
     std::fs::write(&out_path, text + "\n")
         .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
     println!("wrote {out_path}");

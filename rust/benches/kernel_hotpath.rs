@@ -13,7 +13,7 @@
 //! `--check` is the CI smoke mode: small sizes, asserts that scalar
 //! and AVX2 kernels (where detected) agree bit-exactly, that the
 //! fused / tiled / legacy-scalar step paths agree three ways over the
-//! **full 15-pair (optimizer, variant) universe** per kernel set, and
+//! **full 21-pair (optimizer, variant) universe** per kernel set, and
 //! that the emitted JSON (schema v3: per-layout fused rows with the
 //! traffic model, field-validated, pair-universe-complete) parses —
 //! so kernel regressions and silently dropped pairs fail PRs, not
@@ -35,25 +35,31 @@ use flashtrain::util::rng::Rng;
 use flashtrain::util::table::Table;
 
 /// The (optimizer, variant) rows the step benchmarks report: the
-/// full 15-pair universe, so the bench tables stay in lockstep with
+/// full 21-pair universe, so the bench tables stay in lockstep with
 /// the fused-vs-tiled matrix (the static-analysis pass, rule A3,
 /// machine-checks that this spans every pair).
-const STEP_ROWS: [(OptKind, Variant); 15] = [
+const STEP_ROWS: [(OptKind, Variant); 21] = [
     (OptKind::AdamW, Variant::Reference),
     (OptKind::AdamW, Variant::Flash),
     (OptKind::AdamW, Variant::WeightSplit),
     (OptKind::AdamW, Variant::OptQuant),
     (OptKind::AdamW, Variant::NoCompand),
+    (OptKind::AdamW, Variant::Quant4),
+    (OptKind::AdamW, Variant::Mixed84),
     (OptKind::Sgd, Variant::Reference),
     (OptKind::Sgd, Variant::Flash),
     (OptKind::Sgd, Variant::WeightSplit),
     (OptKind::Sgd, Variant::OptQuant),
     (OptKind::Sgd, Variant::NoCompand),
+    (OptKind::Sgd, Variant::Quant4),
+    (OptKind::Sgd, Variant::Mixed84),
     (OptKind::Lion, Variant::Reference),
     (OptKind::Lion, Variant::Flash),
     (OptKind::Lion, Variant::WeightSplit),
     (OptKind::Lion, Variant::OptQuant),
     (OptKind::Lion, Variant::NoCompand),
+    (OptKind::Lion, Variant::Quant4),
+    (OptKind::Lion, Variant::Mixed84),
 ];
 
 /// Human row label, matching the fused-vs-tiled table's convention.
@@ -72,30 +78,44 @@ fn step_row_state_bytes(opt: OptKind, variant: Variant) -> f64 {
 /// (2 × state bytes) plus one gradient read, per (optimizer, variant)
 /// layout — the "state r+w, grad r" convention of the docs/PERF.md
 /// traffic table (split weights = bf16 θ' + i8 ρ, 8-bit moments =
-/// i8/u8 code + f16 group scale, gradient = bf16 for split tracks
-/// else f32).  E.g. adamw/flash: 2 × 5.125 + 2 = 12.25 B/param.
+/// i8/u8 code + f16 group scale, nibble-packed 4-bit moments = half a
+/// byte + f16 group scale, gradient = bf16 for split tracks else
+/// f32).  E.g. adamw/flash: 2 × 5.125 + 2 = 12.25 B/param;
+/// adamw/quant4: 2 × 4.125 + 2 = 10.25.
 fn layout_bytes_per_param(opt: OptKind, variant: Variant) -> f64 {
     let weights = if variant.splits_weights() { 2.0 + 1.0 } else { 4.0 };
-    let moment = if variant.quantizes_state() {
-        1.0 + 2.0 / GROUP as f64
+    let code = |four_bit: bool| {
+        if four_bit { 0.5 } else { 1.0 } + 2.0 / GROUP as f64
+    };
+    let momentum = if variant.quantizes_state() {
+        code(variant.momentum_4bit())
     } else {
         4.0
     };
-    let moments =
-        moment * if opt.has_variance() { 2.0 } else { 1.0 };
+    let variance = if !opt.has_variance() {
+        0.0
+    } else if variant.quantizes_state() {
+        code(variant.variance_4bit())
+    } else {
+        4.0
+    };
     let grad = if variant.splits_weights() { 2.0 } else { 4.0 };
-    2.0 * (weights + moments) + grad
+    2.0 * (weights + momentum + variance) + grad
 }
 
 /// Bytes moved per element (read + write) per codec — the traffic
 /// model behind the GB/s column, documented in docs/PERF.md.
-const CODEC_BYTES: [(&str, f64); 10] = [
+const CODEC_BYTES: [(&str, f64); 14] = [
     ("split_compress", 4.0 + 3.0),
     ("split_decompress", 3.0 + 4.0),
     ("momentum_quant", 4.0 + 1.0625),
     ("momentum_dequant", 1.0625 + 4.0),
     ("variance_quant", 4.0 + 1.0625),
     ("variance_dequant", 1.0625 + 4.0),
+    ("momentum_quant4", 4.0 + 0.5625),
+    ("momentum_dequant4", 0.5625 + 4.0),
+    ("variance_quant4", 4.0 + 0.5625),
+    ("variance_dequant4", 0.5625 + 4.0),
     ("f32_to_bf16", 4.0 + 2.0),
     ("bf16_to_f32", 2.0 + 4.0),
     ("f32_to_f16", 4.0 + 2.0),
@@ -140,6 +160,8 @@ fn assert_states_bit_equal(a: &State, b: &State, what: &str) {
     assert_eq!(a.ms, b.ms, "{what} ms");
     assert_eq!(a.vq, b.vq, "{what} vq");
     assert_eq!(a.vs, b.vs, "{what} vs");
+    assert_eq!(a.mq4, b.mq4, "{what} mq4");
+    assert_eq!(a.vq4, b.vq4, "{what} vq4");
     for (name, x, y) in [("theta", &a.theta, &b.theta), ("m", &a.m, &b.m),
                          ("v", &a.v, &b.v)] {
         match (x, y) {
@@ -197,6 +219,8 @@ fn main() {
     let mut out = vec![0f32; n];
     let mut q8 = vec![0i8; n];
     let mut u8v = vec![0u8; n];
+    let mut q4m = vec![0u8; n / 2];
+    let mut q4v = vec![0u8; n / 2];
     let mut sc = vec![0u16; n / GROUP];
     let mut bits = vec![0u16; n];
 
@@ -244,6 +268,25 @@ fn main() {
         row("variance_dequant",
             bench_for("vdq", budget, 3,
                       || (ks.dequant_variance)(&u8v, &sc, &mut out)));
+        // nibble-packed 4-bit codecs: half the code traffic of the
+        // 8-bit tracks, same one-f16-scale-per-group overhead
+        (ks.quant_momentum4)(&theta, &mut q4m, &mut sc);
+        (ks.quant_variance4)(&variance, &mut q4v, &mut sc);
+        row("momentum_quant4",
+            bench_for("mq4", budget, 3,
+                      || (ks.quant_momentum4)(&theta, &mut q4m,
+                                              &mut sc)));
+        row("momentum_dequant4",
+            bench_for("mdq4", budget, 3,
+                      || (ks.dequant_momentum4)(&q4m, &sc, &mut out)));
+        row("variance_quant4",
+            bench_for("vq4", budget, 3,
+                      || (ks.quant_variance4)(&variance, &mut q4v,
+                                              &mut sc)));
+        row("variance_dequant4",
+            bench_for("vdq4", budget, 3,
+                      || (ks.dequant_variance4)(&q4v, &sc,
+                                                &mut out)));
         row("f32_to_bf16",
             bench_for("eb", budget, 3,
                       || (ks.f32_to_bf16)(&theta, &mut bits)));
@@ -367,22 +410,23 @@ fn main() {
 
     // ---- fused single-pass vs tiled three-pass ----------------------------
     // the register-resident fast path against the tiled mirror over
-    // the FULL 15-pair (optimizer, variant) universe, per kernel set —
+    // the FULL 21-pair (optimizer, variant) universe, per kernel set —
     // every pair fuses now (fp32-resident layouts included), so the
     // table is the complete per-layout selection-free matrix and a
     // missing pair is a loud error, not a silently absent row
     let all_opts = [OptKind::Sgd, OptKind::AdamW, OptKind::Lion];
     let all_variants = [Variant::Reference, Variant::Flash,
                         Variant::WeightSplit, Variant::OptQuant,
-                        Variant::NoCompand];
+                        Variant::NoCompand, Variant::Quant4,
+                        Variant::Mixed84];
     let fused_universe: Vec<(OptKind, Variant)> = all_opts
         .iter()
         .flat_map(|&o| all_variants.iter().map(move |&v| (o, v)))
         .collect();
-    assert_eq!(fused_universe.len(), 15);
+    assert_eq!(fused_universe.len(), 21);
     let mut t = Table::new(
         &format!("fused single-pass vs tiled three-pass ({bucket} \
-                  params, all 15 pairs)"),
+                  params, all 21 pairs)"),
         &["variant", "kernels", "fused", "tiled", "speedup",
           "GB/s fused"]);
     let mut fused_checks = 0usize;
@@ -479,12 +523,12 @@ fn main() {
                     out of the universe");
         println!("fused check OK: fused/tiled/scalar_ref three-way \
                   agreement on {fused_checks} (pair, kernel-set) \
-                  combinations covering all 15 pairs");
+                  combinations covering all 21 pairs");
     }
 
     // ---- machine-readable output ------------------------------------------
     // schema v3: the `fused` section carries one row per (optimizer,
-    // variant, kernel-set) over the full 15-pair universe, with the
+    // variant, kernel-set) over the full 21-pair universe, with the
     // per-layout traffic model (`bytes_per_param`, both GB/s figures);
     // the v2 `covered` bool is gone — coverage is total
     let doc = obj(vec![
@@ -506,7 +550,7 @@ fn main() {
     assert!(parsed.get("fused_step").and_then(Json::as_arr).is_some());
     // the `fused` section is schema-validated, not just parsed: every
     // row carries the traffic model + both medians, and the rows span
-    // exactly the 15-pair universe per kernel set
+    // exactly the 21-pair universe per kernel set
     let fused_arr = parsed
         .get("fused")
         .and_then(Json::as_arr)
@@ -533,8 +577,8 @@ fn main() {
         pairs_per_set.entry(set.to_string()).or_default().insert(pair);
     }
     for (set, pairs) in &pairs_per_set {
-        assert_eq!(pairs.len(), 15,
-                   "fused section covers {} of 15 pairs for kernel \
+        assert_eq!(pairs.len(), 21,
+                   "fused section covers {} of 21 pairs for kernel \
                     set {set}",
                    pairs.len());
     }
@@ -675,6 +719,24 @@ fn check_kernel_agreement(n: usize) {
         (ks.quant_variance)(&pos, &mut ub, &mut sb);
         assert_eq!(ua, ub, "variance codes differ");
         assert_eq!(sa, sb, "variance scales differ");
+        // nibble-packed 4-bit tracks
+        let (mut pa, mut pb) = (vec![0u8; n / 2], vec![0u8; n / 2]);
+        (reference.quant_momentum4)(&data, &mut pa, &mut sa);
+        (ks.quant_momentum4)(&data, &mut pb, &mut sb);
+        assert_eq!(pa, pb, "momentum4 packed codes differ");
+        assert_eq!(sa, sb, "momentum4 scales differ");
+        (reference.dequant_momentum4)(&pa, &sa, &mut oa);
+        (ks.dequant_momentum4)(&pa, &sa, &mut ob);
+        assert!(oa.iter().zip(&ob).all(|(x, y)| x.to_bits()
+                == y.to_bits()), "momentum4 dequant differs");
+        (reference.quant_variance4)(&pos, &mut pa, &mut sa);
+        (ks.quant_variance4)(&pos, &mut pb, &mut sb);
+        assert_eq!(pa, pb, "variance4 packed codes differ");
+        assert_eq!(sa, sb, "variance4 scales differ");
+        (reference.dequant_variance4)(&pa, &sa, &mut oa);
+        (ks.dequant_variance4)(&pa, &sa, &mut ob);
+        assert!(oa.iter().zip(&ob).all(|(x, y)| x.to_bits()
+                == y.to_bits()), "variance4 dequant differs");
         // split + conversions
         let (mut ta, mut ra) = (vec![0u16; n], vec![0i8; n]);
         let (mut tb, mut rb) = (ta.clone(), ra.clone());

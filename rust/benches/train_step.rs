@@ -31,16 +31,31 @@ use flashtrain::util::cli::Args;
 use flashtrain::util::rng::Rng;
 use flashtrain::util::table::Table;
 
-/// The (optimizer, variant) rows the bench reports — the same set the
-/// kernel bench steps, so the two artifacts line up.
-const ROWS: [(OptKind, Variant, &str); 7] = [
+/// The (optimizer, variant) rows the bench reports — the full 21-pair
+/// universe the kernel bench steps, so the two artifacts line up (the
+/// emitted JSON is schema-checked to span exactly these pairs).
+const ROWS: [(OptKind, Variant, &str); 21] = [
     (OptKind::AdamW, Variant::Reference, "adamw ref"),
     (OptKind::AdamW, Variant::Flash, "adamw flash"),
     (OptKind::AdamW, Variant::WeightSplit, "adamw wsplit"),
     (OptKind::AdamW, Variant::OptQuant, "adamw quant"),
     (OptKind::AdamW, Variant::NoCompand, "adamw nocompand"),
+    (OptKind::AdamW, Variant::Quant4, "adamw quant4"),
+    (OptKind::AdamW, Variant::Mixed84, "adamw mixed84"),
+    (OptKind::Sgd, Variant::Reference, "sgd ref"),
     (OptKind::Sgd, Variant::Flash, "sgd flash"),
+    (OptKind::Sgd, Variant::WeightSplit, "sgd wsplit"),
+    (OptKind::Sgd, Variant::OptQuant, "sgd quant"),
+    (OptKind::Sgd, Variant::NoCompand, "sgd nocompand"),
+    (OptKind::Sgd, Variant::Quant4, "sgd quant4"),
+    (OptKind::Sgd, Variant::Mixed84, "sgd mixed84"),
+    (OptKind::Lion, Variant::Reference, "lion ref"),
     (OptKind::Lion, Variant::Flash, "lion flash"),
+    (OptKind::Lion, Variant::WeightSplit, "lion wsplit"),
+    (OptKind::Lion, Variant::OptQuant, "lion quant"),
+    (OptKind::Lion, Variant::NoCompand, "lion nocompand"),
+    (OptKind::Lion, Variant::Quant4, "lion quant4"),
+    (OptKind::Lion, Variant::Mixed84, "lion mixed84"),
 ];
 
 fn grad_elem_bytes(variant: Variant) -> u64 {
@@ -128,6 +143,8 @@ fn assert_states_bit_equal(a: &State, b: &State, what: &str) {
     assert_eq!(a.ms, b.ms, "{what} ms");
     assert_eq!(a.vq, b.vq, "{what} vq");
     assert_eq!(a.vs, b.vs, "{what} vs");
+    assert_eq!(a.mq4, b.mq4, "{what} mq4");
+    assert_eq!(a.vq4, b.vq4, "{what} vq4");
     for (name, x, y) in [("theta", &a.theta, &b.theta),
                          ("m", &a.m, &b.m), ("v", &a.v, &b.v)] {
         match (x, y) {
@@ -314,6 +331,9 @@ fn main() {
             .insert(e.get("mode").and_then(Json::as_str).unwrap()
                 .to_string());
     }
+    assert_eq!(modes_per_pair.len(), 21,
+               "rows span {} of the 21 (optimizer, variant) pairs",
+               modes_per_pair.len());
     for (pair, modes) in &modes_per_pair {
         assert_eq!(modes.len(), 3,
                    "{pair} is missing a mode (has {modes:?})");

@@ -2,7 +2,7 @@
 //! the repo's conventions into machine-checked contracts.
 //!
 //! The codebase's core guarantees — bit-exact SIMD kernels (no FMA,
-//! no F16C, RNE-only rounding), total 15-pair (optimizer × variant)
+//! no F16C, RNE-only rounding), total 21-pair (optimizer × variant)
 //! fused coverage, sound `unsafe` at the AVX2/pool boundaries, no
 //! panics on the hot path, and a fully offline build — used to live
 //! in comments and out-of-band audit scripts.  This module makes them

@@ -36,7 +36,7 @@ pub fn rules() -> &'static [Rule] {
             summary: "KernelSet fields, fused_step arms, the fuzz \
                       universe, bench STEP_ROWS, and the sharded \
                       SHARDED_PAIRS table all span the identical \
-                      15-pair universe",
+                      21-pair universe",
             check: check_pair_totality,
         },
         Rule {
@@ -370,11 +370,12 @@ fn check_simd_policy(c: &Corpus, out: &mut Vec<Finding>) {
 }
 
 // ---------------------------------------------------------------------------
-// A3: 15-pair totality cross-reference
+// A3: 21-pair totality cross-reference
 
 const A3_OPTS: [&str; 3] = ["Sgd", "AdamW", "Lion"];
-const A3_VARIANTS: [&str; 5] =
-    ["Reference", "Flash", "WeightSplit", "OptQuant", "NoCompand"];
+const A3_VARIANTS: [&str; 7] =
+    ["Reference", "Flash", "WeightSplit", "OptQuant", "NoCompand",
+     "Quant4", "Mixed84"];
 
 fn universe() -> Vec<(String, String)> {
     let mut v = Vec::new();
@@ -475,7 +476,7 @@ fn item_body<'t>(toks: &'t [Tok], kw: &str, name: &str)
     None
 }
 
-/// Compare one source's pair set against the 15-pair universe.
+/// Compare one source's pair set against the 21-pair universe.
 fn diff_universe(source: &str, f: &SourceFile, anchor_line: usize,
                  pairs: &[(String, String)], out: &mut Vec<Finding>) {
     let want = universe();
@@ -487,7 +488,7 @@ fn diff_universe(source: &str, f: &SourceFile, anchor_line: usize,
                 line: anchor_line,
                 msg: format!(
                     "{source} is missing the (OptKind::{o}, \
-                     Variant::{v}) pair of the 15-pair universe"
+                     Variant::{v}) pair of the 21-pair universe"
                 ),
             });
         }
@@ -500,7 +501,7 @@ fn diff_universe(source: &str, f: &SourceFile, anchor_line: usize,
                 line: anchor_line,
                 msg: format!(
                     "{source} names (OptKind::{o}, Variant::{v}), \
-                     which is outside the 15-pair universe"
+                     which is outside the 21-pair universe"
                 ),
             });
         }
@@ -533,6 +534,8 @@ fn field_pair(name: &str) -> Option<(String, String)> {
         Some("reference") => "Reference",
         Some("wsplit") => "WeightSplit",
         Some("quant") => "OptQuant",
+        Some("quant4") => "Quant4",
+        Some("mixed84") => "Mixed84",
         Some(_) => return None,
     };
     Some((opt.to_string(), variant.to_string()))
@@ -807,13 +810,17 @@ mod tests {
                    Some(("Sgd".into(), "WeightSplit".into())));
         assert_eq!(field_pair("fused_step_lion_quant"),
                    Some(("Lion".into(), "OptQuant".into())));
+        assert_eq!(field_pair("fused_step_adamw_quant4"),
+                   Some(("AdamW".into(), "Quant4".into())));
+        assert_eq!(field_pair("fused_step_sgdm_mixed84"),
+                   Some(("Sgd".into(), "Mixed84".into())));
         assert_eq!(field_pair("fused_step_rmsprop"), None);
         assert_eq!(field_pair("split_compress"), None);
     }
 
     #[test]
-    fn universe_is_15() {
-        assert_eq!(universe().len(), 15);
+    fn universe_is_21() {
+        assert_eq!(universe().len(), 21);
     }
 
     #[test]

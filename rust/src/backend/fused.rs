@@ -7,7 +7,7 @@
 //!
 //! * **Fused single-pass** (the default): every `(optimizer, variant)`
 //!   pair resolves a register-resident kernel
-//!   (`KernelSet::fused_step` is total over all 15 pairs), so the
+//!   (`KernelSet::fused_step` is total over all 21 pairs), so the
 //!   whole partition runs through one kernel: dequant → moment update
 //!   → weight-split update → requant per 8-lane block, **zero** fp32
 //!   scratch; streams a layout stores in fp32 (reference master
@@ -81,7 +81,7 @@ fn note_scratch(bytes: u64) {
 /// makes every native backend constructed afterwards run the tiled
 /// three-pass mirror, overriding even an explicit `fused_step = true`.
 /// This is how CI keeps real end-to-end coverage on the tiled path now
-/// that the fused fast path covers all 15 (optimizer, variant) pairs:
+/// that the fused fast path covers all 21 (optimizer, variant) pairs:
 /// a second `build-test` matrix leg runs the whole tier-1 suite with
 /// this set (see .github/workflows/ci.yml).  Consumed at backend
 /// *construction* ([`ScalarBackend`]/[`ParallelBackend`]
@@ -125,6 +125,8 @@ pub fn step_part(p: &mut Part<'_>, opt: OptKind, variant: Variant,
             ms: p.ms.as_deref_mut(),
             vq: p.vq.as_deref_mut(),
             vs: p.vs.as_deref_mut(),
+            mq4: p.mq4.as_deref_mut(),
+            vq4: p.vq4.as_deref_mut(),
             g: p.g,
         };
         kernel(&mut fp, &s);
@@ -134,6 +136,8 @@ pub fn step_part(p: &mut Part<'_>, opt: OptKind, variant: Variant,
     let nocompand = variant == Variant::NoCompand;
     let split = variant.splits_weights();
     let quant = variant.quantizes_state();
+    let m4 = variant.momentum_4bit();
+    let v4 = variant.variance_4bit();
     let var = opt.has_variance();
 
     // fixed tile scratch: only the streams the variant actually
@@ -156,6 +160,8 @@ pub fn step_part(p: &mut Part<'_>, opt: OptKind, variant: Variant,
     let mut ms_b = p.ms.as_deref_mut();
     let mut vq_b = p.vq.as_deref_mut();
     let mut vs_b = p.vs.as_deref_mut();
+    let mut mq4_b = p.mq4.as_deref_mut();
+    let mut vq4_b = p.vq4.as_deref_mut();
     let g_all = p.g;
 
     let mut lo = 0usize;
@@ -176,12 +182,20 @@ pub fn step_part(p: &mut Part<'_>, opt: OptKind, variant: Variant,
             &mut layout_mut(theta_b.as_deref_mut(), "theta")[lo..hi]
         };
         let m_s: &mut [f32] = if quant {
-            let mq = &layout_ref(mq_b.as_deref(), "mq")[lo..hi];
             let ms = &layout_ref(ms_b.as_deref(), "ms")[glo..ghi];
-            if nocompand {
-                (ks.dequant_momentum_linear)(mq, ms, &mut m_t[..len]);
+            if m4 {
+                // nibble-packed codes: half a byte per element
+                let mq4 = &layout_ref(mq4_b.as_deref(), "mq4")
+                    [lo / 2..hi / 2];
+                (ks.dequant_momentum4)(mq4, ms, &mut m_t[..len]);
             } else {
-                (ks.dequant_momentum)(mq, ms, &mut m_t[..len]);
+                let mq = &layout_ref(mq_b.as_deref(), "mq")[lo..hi];
+                if nocompand {
+                    (ks.dequant_momentum_linear)(mq, ms,
+                                                 &mut m_t[..len]);
+                } else {
+                    (ks.dequant_momentum)(mq, ms, &mut m_t[..len]);
+                }
             }
             &mut m_t[..len]
         } else {
@@ -192,14 +206,23 @@ pub fn step_part(p: &mut Part<'_>, opt: OptKind, variant: Variant,
         match opt {
             OptKind::AdamW => {
                 let v_s: &mut [f32] = if quant {
-                    let vq = &layout_ref(vq_b.as_deref(), "vq")[lo..hi];
                     let vs =
                         &layout_ref(vs_b.as_deref(), "vs")[glo..ghi];
-                    if nocompand {
-                        (ks.dequant_variance_linear)(vq, vs,
-                                                     &mut v_t[..len]);
+                    if v4 {
+                        let vq4 = &layout_ref(vq4_b.as_deref(), "vq4")
+                            [lo / 2..hi / 2];
+                        (ks.dequant_variance4)(vq4, vs,
+                                               &mut v_t[..len]);
                     } else {
-                        (ks.dequant_variance)(vq, vs, &mut v_t[..len]);
+                        let vq =
+                            &layout_ref(vq_b.as_deref(), "vq")[lo..hi];
+                        if nocompand {
+                            (ks.dequant_variance_linear)(
+                                vq, vs, &mut v_t[..len]);
+                        } else {
+                            (ks.dequant_variance)(vq, vs,
+                                                  &mut v_t[..len]);
+                        }
                     }
                     &mut v_t[..len]
                 } else {
@@ -221,25 +244,37 @@ pub fn step_part(p: &mut Part<'_>, opt: OptKind, variant: Variant,
         }
         if quant {
             {
-                let mq =
-                    &mut layout_mut(mq_b.as_deref_mut(), "mq")[lo..hi];
                 let ms = &mut layout_mut(ms_b.as_deref_mut(), "ms")
                     [glo..ghi];
-                if nocompand {
-                    (ks.quant_momentum_linear)(&m_t[..len], mq, ms);
+                if m4 {
+                    let mq4 = &mut layout_mut(mq4_b.as_deref_mut(),
+                                              "mq4")[lo / 2..hi / 2];
+                    (ks.quant_momentum4)(&m_t[..len], mq4, ms);
                 } else {
-                    (ks.quant_momentum)(&m_t[..len], mq, ms);
+                    let mq = &mut layout_mut(mq_b.as_deref_mut(),
+                                             "mq")[lo..hi];
+                    if nocompand {
+                        (ks.quant_momentum_linear)(&m_t[..len], mq, ms);
+                    } else {
+                        (ks.quant_momentum)(&m_t[..len], mq, ms);
+                    }
                 }
             }
             if var {
-                let vq =
-                    &mut layout_mut(vq_b.as_deref_mut(), "vq")[lo..hi];
                 let vs = &mut layout_mut(vs_b.as_deref_mut(), "vs")
                     [glo..ghi];
-                if nocompand {
-                    (ks.quant_variance_linear)(&v_t[..len], vq, vs);
+                if v4 {
+                    let vq4 = &mut layout_mut(vq4_b.as_deref_mut(),
+                                              "vq4")[lo / 2..hi / 2];
+                    (ks.quant_variance4)(&v_t[..len], vq4, vs);
                 } else {
-                    (ks.quant_variance)(&v_t[..len], vq, vs);
+                    let vq = &mut layout_mut(vq_b.as_deref_mut(),
+                                             "vq")[lo..hi];
+                    if nocompand {
+                        (ks.quant_variance_linear)(&v_t[..len], vq, vs);
+                    } else {
+                        (ks.quant_variance)(&v_t[..len], vq, vs);
+                    }
                 }
             }
         }
@@ -263,6 +298,8 @@ mod tests {
         assert_eq!(a.ms, b.ms, "{what} ms");
         assert_eq!(a.vq, b.vq, "{what} vq");
         assert_eq!(a.vs, b.vs, "{what} vs");
+        assert_eq!(a.mq4, b.mq4, "{what} mq4");
+        assert_eq!(a.vq4, b.vq4, "{what} vq4");
         assert_eq!(a.m, b.m, "{what} m");
         assert_eq!(a.v, b.v, "{what} v");
     }
@@ -290,7 +327,8 @@ mod tests {
         for opt in [OptKind::Sgd, OptKind::AdamW, OptKind::Lion] {
             for variant in [Variant::Reference, Variant::Flash,
                             Variant::WeightSplit, Variant::OptQuant,
-                            Variant::NoCompand] {
+                            Variant::NoCompand, Variant::Quant4,
+                            Variant::Mixed84] {
                 let mut a = State::init(&theta0, n, opt, variant);
                 crate::optim::scalar_ref::step_state(&mut a, &g, opt,
                                                      variant, &h);

@@ -22,6 +22,10 @@ pub struct Part<'a> {
     pub ms: Option<&'a mut [u16]>,
     pub vq: Option<&'a mut [u8]>,
     pub vs: Option<&'a mut [u16]>,
+    /// nibble-packed 4-bit codes: `len / 2` bytes (GROUP is even, so
+    /// group-aligned bounds always land on whole bytes)
+    pub mq4: Option<&'a mut [u8]>,
+    pub vq4: Option<&'a mut [u8]>,
     pub g: &'a [f32],
     pub len: usize,
 }
@@ -58,6 +62,8 @@ impl<'a> Part<'a> {
             ms: state.ms.as_mut().map(|b| &mut b[glo..ghi]),
             vq: state.vq.as_mut().map(|b| &mut b[lo..hi]),
             vs: state.vs.as_mut().map(|b| &mut b[glo..ghi]),
+            mq4: state.mq4.as_mut().map(|b| &mut b[lo / 2..hi / 2]),
+            vq4: state.vq4.as_mut().map(|b| &mut b[lo / 2..hi / 2]),
             g,
             len: hi - lo,
         }
@@ -78,13 +84,16 @@ impl<'a> Part<'a> {
         let (ms0, ms1) = split_opt(self.ms, gs);
         let (vq0, vq1) = split_opt(self.vq, at);
         let (vs0, vs1) = split_opt(self.vs, gs);
+        let (mq40, mq41) = split_opt(self.mq4, at / 2);
+        let (vq40, vq41) = split_opt(self.vq4, at / 2);
         let (g0, g1) = self.g.split_at(at);
         (
             Part { theta: theta0, theta_p: tp0, rho: rho0, m: m0, v: v0,
-                   mq: mq0, ms: ms0, vq: vq0, vs: vs0, g: g0, len: at },
+                   mq: mq0, ms: ms0, vq: vq0, vs: vs0, mq4: mq40,
+                   vq4: vq40, g: g0, len: at },
             Part { theta: theta1, theta_p: tp1, rho: rho1, m: m1, v: v1,
-                   mq: mq1, ms: ms1, vq: vq1, vs: vs1, g: g1,
-                   len: self.len - at },
+                   mq: mq1, ms: ms1, vq: vq1, vs: vs1, mq4: mq41,
+                   vq4: vq41, g: g1, len: self.len - at },
         )
     }
 
@@ -138,6 +147,23 @@ mod tests {
         assert_eq!(parts[2].len, GROUP);
         assert_eq!(parts[1].ms.as_ref().unwrap().len(), 4);
         assert_eq!(parts[2].g.len(), GROUP);
+    }
+
+    #[test]
+    fn nibble_packed_buffers_slice_at_half_resolution() {
+        let n = 4 * GROUP;
+        let mut st = State::init(&vec![0.25f32; n], n, OptKind::AdamW,
+                                 Variant::Quant4);
+        let g = vec![0f32; 2 * GROUP];
+        let p = Part::of_range(&mut st, GROUP, 3 * GROUP, &g);
+        assert_eq!(p.mq4.as_ref().unwrap().len(), GROUP);
+        assert_eq!(p.vq4.as_ref().unwrap().len(), GROUP);
+        assert!(p.mq.is_none());
+        assert!(p.vq.is_none());
+        let (a, b) = p.split_at(GROUP);
+        assert_eq!(a.mq4.as_ref().unwrap().len(), GROUP / 2);
+        assert_eq!(b.vq4.as_ref().unwrap().len(), GROUP / 2);
+        assert_eq!(a.ms.as_ref().unwrap().len(), 1);
     }
 
     #[test]

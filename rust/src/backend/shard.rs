@@ -33,7 +33,7 @@
 //! Bit-exactness: a shard boundary is a GROUP boundary, exactly like
 //! every other partition cut in this backend, so sharded execution is
 //! bit-identical to the batch path by the same argument
-//! (`rust/tests/backend_equivalence.rs` pins it for all 15 pairs).
+//! (`rust/tests/backend_equivalence.rs` pins it for all 21 pairs).
 
 use anyhow::{bail, Result};
 

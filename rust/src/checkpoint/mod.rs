@@ -67,6 +67,10 @@ enum Tag {
     MsF16 = 6,
     VqU8 = 7,
     VsF16 = 8,
+    /// nibble-packed 4-bit momentum codes (two per byte)
+    Mq4U8 = 9,
+    /// nibble-packed 4-bit variance codes (two per byte)
+    Vq4U8 = 10,
 }
 
 impl Tag {
@@ -81,6 +85,8 @@ impl Tag {
             6 => Tag::MsF16,
             7 => Tag::VqU8,
             8 => Tag::VsF16,
+            9 => Tag::Mq4U8,
+            10 => Tag::Vq4U8,
             other => bail!("unknown checkpoint section tag {other}"),
         })
     }
@@ -110,6 +116,8 @@ fn var_to_u8(v: Variant) -> u8 {
         Variant::WeightSplit => 2,
         Variant::OptQuant => 3,
         Variant::NoCompand => 4,
+        Variant::Quant4 => 5,
+        Variant::Mixed84 => 6,
     }
 }
 
@@ -120,6 +128,8 @@ fn var_from_u8(b: u8) -> Result<Variant> {
         2 => Variant::WeightSplit,
         3 => Variant::OptQuant,
         4 => Variant::NoCompand,
+        5 => Variant::Quant4,
+        6 => Variant::Mixed84,
         other => bail!("bad variant byte {other}"),
     })
 }
@@ -194,6 +204,12 @@ fn state_sections(state: &State) -> Vec<(Tag, &[u8])> {
     if let Some(v) = &state.vs {
         sections.push((Tag::VsF16, as_bytes(v)));
     }
+    if let Some(v) = &state.mq4 {
+        sections.push((Tag::Mq4U8, as_bytes(v)));
+    }
+    if let Some(v) = &state.vq4 {
+        sections.push((Tag::Vq4U8, as_bytes(v)));
+    }
     sections
 }
 
@@ -259,6 +275,8 @@ fn read_state_sections<R: Read>(f: &mut R, n_sections: u32,
             Tag::MsF16 => state.ms = Some(vec_from_bytes(&payload)?),
             Tag::VqU8 => state.vq = Some(vec_from_bytes(&payload)?),
             Tag::VsF16 => state.vs = Some(vec_from_bytes(&payload)?),
+            Tag::Mq4U8 => state.mq4 = Some(vec_from_bytes(&payload)?),
+            Tag::Vq4U8 => state.vq4 = Some(vec_from_bytes(&payload)?),
         }
     }
     Ok(state)
@@ -539,6 +557,25 @@ mod tests {
         assert_eq!(st.mq, st2.mq);
         assert_eq!(st.ms, st2.ms);
         assert_eq!(st.vq, st2.vq);
+        assert_eq!(st.vs, st2.vs);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn roundtrip_quant4_nibble_sections() {
+        let n = 256;
+        let mut rng = Rng::new(9);
+        let theta: Vec<f32> =
+            (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+        let st = State::init(&theta, n, OptKind::AdamW, Variant::Quant4);
+        let path = tmp("q4rt");
+        save(&path, &st, OptKind::AdamW, Variant::Quant4, 3, n as u64)
+            .unwrap();
+        let (meta, st2) = load(&path).unwrap();
+        assert_eq!(meta.variant, Variant::Quant4);
+        assert_eq!(st.mq4, st2.mq4);
+        assert_eq!(st.vq4, st2.vq4);
+        assert_eq!(st.ms, st2.ms);
         assert_eq!(st.vs, st2.vs);
         std::fs::remove_file(path).ok();
     }

@@ -258,6 +258,12 @@ pub fn load_state_dict_sharded(path: &Path, pool: &WorkerPool)
                     Tag::MsF16 => state.ms = Some(vec_from_bytes(payload)?),
                     Tag::VqU8 => state.vq = Some(vec_from_bytes(payload)?),
                     Tag::VsF16 => state.vs = Some(vec_from_bytes(payload)?),
+                    Tag::Mq4U8 => {
+                        state.mq4 = Some(vec_from_bytes(payload)?)
+                    }
+                    Tag::Vq4U8 => {
+                        state.vq4 = Some(vec_from_bytes(payload)?)
+                    }
                 }
                 Ok(())
             })?;

@@ -61,6 +61,13 @@ pub enum Variant {
     OptQuant,
     /// Fig. 5: 8-bit states with *linear* quantization (no companding).
     NoCompand,
+    /// 4-bit companded momentum AND variance (nibble-packed, two codes
+    /// per byte, per-GROUP scales) on top of weight splitting — the
+    /// "beyond 7 bytes/param" frontier (Li et al., arXiv:2309.01507).
+    Quant4,
+    /// mixed 8/4: 8-bit companded momentum (the error-sensitive
+    /// moment, per Li et al.), 4-bit companded variance.
+    Mixed84,
 }
 
 impl Variant {
@@ -71,6 +78,8 @@ impl Variant {
             "wsplit" | "weight-split" => Some(Variant::WeightSplit),
             "quant" | "opt-quant" => Some(Variant::OptQuant),
             "nocompand" | "no-compand" => Some(Variant::NoCompand),
+            "quant4" | "4bit" => Some(Variant::Quant4),
+            "mixed84" | "mixed-84" => Some(Variant::Mixed84),
             _ => None,
         }
     }
@@ -82,19 +91,33 @@ impl Variant {
             Variant::WeightSplit => "wsplit",
             Variant::OptQuant => "quant",
             Variant::NoCompand => "nocompand",
+            Variant::Quant4 => "quant4",
+            Variant::Mixed84 => "mixed84",
         }
     }
 
     /// Are master weights stored split (bf16 + int8 rho)?
     pub fn splits_weights(self) -> bool {
         matches!(self, Variant::Flash | Variant::WeightSplit
-                 | Variant::NoCompand)
+                 | Variant::NoCompand | Variant::Quant4
+                 | Variant::Mixed84)
     }
 
-    /// Are optimizer states stored 8-bit?
+    /// Are optimizer states stored quantized (8-bit or 4-bit)?
     pub fn quantizes_state(self) -> bool {
         matches!(self, Variant::Flash | Variant::OptQuant
-                 | Variant::NoCompand)
+                 | Variant::NoCompand | Variant::Quant4
+                 | Variant::Mixed84)
+    }
+
+    /// Is the first moment stored as 4-bit nibble-packed codes?
+    pub fn momentum_4bit(self) -> bool {
+        matches!(self, Variant::Quant4)
+    }
+
+    /// Is the second moment stored as 4-bit nibble-packed codes?
+    pub fn variance_4bit(self) -> bool {
+        matches!(self, Variant::Quant4 | Variant::Mixed84)
     }
 }
 
@@ -802,5 +825,30 @@ mod tests {
         assert!(!Variant::OptQuant.splits_weights());
         assert!(Variant::OptQuant.quantizes_state());
         assert!(!Variant::Reference.splits_weights());
+        // 4-bit layouts are flash-family: split + quantized
+        assert!(Variant::Quant4.splits_weights());
+        assert!(Variant::Quant4.quantizes_state());
+        assert!(Variant::Mixed84.splits_weights());
+        assert!(Variant::Mixed84.quantizes_state());
+        // moment-width predicates: quant4 is 4/4, mixed84 is 8/4
+        assert!(Variant::Quant4.momentum_4bit());
+        assert!(Variant::Quant4.variance_4bit());
+        assert!(!Variant::Mixed84.momentum_4bit());
+        assert!(Variant::Mixed84.variance_4bit());
+        for v in [Variant::Reference, Variant::Flash,
+                  Variant::WeightSplit, Variant::OptQuant,
+                  Variant::NoCompand] {
+            assert!(!v.momentum_4bit());
+            assert!(!v.variance_4bit());
+        }
+        // parse round-trip for the grown universe
+        for v in [Variant::Reference, Variant::Flash,
+                  Variant::WeightSplit, Variant::OptQuant,
+                  Variant::NoCompand, Variant::Quant4,
+                  Variant::Mixed84] {
+            assert_eq!(Variant::parse(v.name()), Some(v));
+        }
+        assert_eq!(Variant::parse("mixed-84"), Some(Variant::Mixed84));
+        assert_eq!(Variant::parse("4bit"), Some(Variant::Quant4));
     }
 }

@@ -11,6 +11,7 @@ pub mod baselines;
 pub mod bf16;
 pub mod companding;
 pub mod fp16;
+pub mod quant4;
 pub mod weight_split;
 
 pub use companding::GROUP;

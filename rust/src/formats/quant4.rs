@@ -1,0 +1,404 @@
+//! 4-bit companded group-wise optimizer-state quantization — the
+//! "beyond 7 bytes/param" layouts (`quant4`, `mixed84`), in the lineage
+//! of Li et al., "Memory Efficient Optimizers with 4-bit States"
+//! (arXiv:2309.01507) on top of the paper's Algorithm 2/3 companding.
+//!
+//! Same group structure as the 8-bit codecs (`companding`): G = 32
+//! elements per group, one f16 absmax scale per group.  Codes are
+//! nibble-packed two per byte — the **low nibble holds the even index,
+//! the high nibble the odd index**; an odd-length tail leaves the
+//! dangling high nibble zero.  A GROUP is always even, so every
+//! kernel-facing packed slice is exactly `len / 2` bytes.
+//!
+//! # Momentum code table
+//!
+//! Signed codes k ∈ −7..=7 over the companded domain z = φ_m(x/s),
+//! quantized as `round_ties_even(z·7)` clamped to ±7 (code −8 is never
+//! produced; it decodes as −8/21 for forward compatibility).  The
+//! decoded value is φ_m⁻¹(k/7)·s = k/(14−|k|)·s:
+//!
+//! | k  | value / s | k  | value / s |
+//! |----|-----------|----|-----------|
+//! | 0  |  0        | ±4 | ±2/5      |
+//! | ±1 | ±1/13     | ±5 | ±5/9      |
+//! | ±2 | ±1/6      | ±6 | ±3/4      |
+//! | ±3 | ±3/11     | ±7 | ±1        |
+//!
+//! The table is strictly monotone in k and symmetric about zero.
+//! Worst-case round-trip error: the z-domain grid step is 1/7, so the
+//! rounding error is ≤ 1/14 in z; |dφ_m⁻¹/dz| = 2/(2−|z|)² ≤ 2 on
+//! |z| ≤ 1, giving |x̂ − x| ≤ 1/7 of the group absmax (documented
+//! bound: **< 0.15 × absmax**, vs 0.02 for the 8-bit codec).
+//!
+//! # Variance code table
+//!
+//! Unsigned codes k ∈ 0..=15 in the sqrt domain (Algorithm 3 with 15
+//! in place of 255): decoded value is (k/15·s)² = k²/225·s².  The
+//! sqrt-domain grid step is 1/15, so the decoded variance is within
+//! 2·(1/30) = 1/15 of the group absmax (documented bound:
+//! **< 0.07 × absmax**).
+//!
+//! # NaN semantics
+//!
+//! NaN inputs (and negative variance, whose sqrt is NaN) quantize to
+//! **code 0** — `round_ties_even`/`clamp` propagate the NaN and the
+//! saturating `as` cast maps it to 0 — exactly matching the 8-bit
+//! codecs and the AVX2 `cvt_clamped_epi32` emulation.
+
+use super::companding::{phi_m, phi_m_inv, scale_pair, GROUP};
+use super::fp16;
+
+/// Bytes needed to nibble-pack `n` codes (dangling high nibble zero).
+#[inline]
+pub fn packed_len(n: usize) -> usize {
+    n.div_ceil(2)
+}
+
+/// Sign-extend a low nibble (4-bit two's complement) to an i8 code.
+#[inline]
+pub fn nibble_to_i4(nib: u8) -> i8 {
+    ((nib << 4) as i8) >> 4
+}
+
+/// Truncate an i8 code in −8..=7 to its 4-bit two's-complement nibble.
+#[inline]
+pub fn i4_to_nibble(c: i8) -> u8 {
+    (c as u8) & 0x0F
+}
+
+/// Pack `nibbles` (each value < 16) two per byte: low nibble = even
+/// index, high nibble = odd index; an odd tail leaves the high nibble
+/// of the last byte zero.
+pub fn pack_nibbles(nibbles: &[u8], packed: &mut [u8]) {
+    assert_eq!(packed.len(), packed_len(nibbles.len()),
+               "packed must be exactly ceil(n/2) bytes");
+    for (i, b) in packed.iter_mut().enumerate() {
+        let lo = nibbles[2 * i] & 0x0F;
+        let hi = if 2 * i + 1 < nibbles.len() {
+            nibbles[2 * i + 1] & 0x0F
+        } else {
+            0
+        };
+        *b = lo | (hi << 4);
+    }
+}
+
+/// Inverse of `pack_nibbles`: unpack `out.len()` nibbles from `packed`.
+pub fn unpack_nibbles(packed: &[u8], out: &mut [u8]) {
+    assert_eq!(packed.len(), packed_len(out.len()),
+               "packed must be exactly ceil(n/2) bytes");
+    for (j, o) in out.iter_mut().enumerate() {
+        let b = packed[j / 2];
+        *o = if j % 2 == 0 { b & 0x0F } else { b >> 4 };
+    }
+}
+
+/// Q_m4: momentum -> (nibble-packed 4-bit codes, f16 scale bits).
+/// Slices must be GROUP-aligned; `q` holds two codes per byte.
+pub fn quant_momentum4(m: &[f32], q: &mut [u8], scales: &mut [u16]) {
+    assert_eq!(m.len() % GROUP, 0);
+    assert_eq!(q.len() * 2, m.len(),
+               "q must hold two 4-bit codes per byte");
+    assert_eq!(scales.len(), m.len() / GROUP);
+    for (gi, chunk) in m.chunks_exact(GROUP).enumerate() {
+        let (s16, safe) = scale_pair(group_absmax(chunk));
+        scales[gi] = s16;
+        let qg = &mut q[gi * GROUP / 2..(gi + 1) * GROUP / 2];
+        for (j, b) in qg.iter_mut().enumerate() {
+            let lo = m4_code(chunk[2 * j], safe);
+            let hi = m4_code(chunk[2 * j + 1], safe);
+            *b = i4_to_nibble(lo) | (i4_to_nibble(hi) << 4);
+        }
+    }
+}
+
+#[inline]
+fn m4_code(x: f32, safe: f32) -> i8 {
+    let z = phi_m(x / safe);
+    (z * 7.0).round_ties_even().clamp(-7.0, 7.0) as i8
+}
+
+/// Q_m4⁻¹.
+pub fn dequant_momentum4(q: &[u8], scales: &[u16], out: &mut [f32]) {
+    assert_eq!(out.len() % GROUP, 0);
+    assert_eq!(q.len() * 2, out.len(),
+               "q must hold two 4-bit codes per byte");
+    assert_eq!(scales.len() * GROUP, out.len(),
+               "scales must cover q exactly (one f16 scale per group)");
+    for gi in 0..scales.len() {
+        let s = fp16::f16_bits_to_f32(scales[gi]);
+        let qg = &q[gi * GROUP / 2..(gi + 1) * GROUP / 2];
+        let og = &mut out[gi * GROUP..(gi + 1) * GROUP];
+        for (j, &b) in qg.iter().enumerate() {
+            let lo = nibble_to_i4(b & 0x0F) as f32 / 7.0;
+            let hi = nibble_to_i4(b >> 4) as f32 / 7.0;
+            og[2 * j] = phi_m_inv(lo) * s;
+            og[2 * j + 1] = phi_m_inv(hi) * s;
+        }
+    }
+}
+
+/// Q_v4: variance -> (nibble-packed 4-bit codes, f16 scale bits of the
+/// sqrt-domain absmax).  Slices must be GROUP-aligned.
+pub fn quant_variance4(v: &[f32], q: &mut [u8], scales: &mut [u16]) {
+    assert_eq!(v.len() % GROUP, 0);
+    assert_eq!(q.len() * 2, v.len(),
+               "q must hold two 4-bit codes per byte");
+    assert_eq!(scales.len(), v.len() / GROUP);
+    let mut sq = [0f32; GROUP];
+    for (gi, chunk) in v.chunks_exact(GROUP).enumerate() {
+        for (j, &x) in chunk.iter().enumerate() {
+            sq[j] = x.sqrt();
+        }
+        let (s16, safe) = scale_pair(group_absmax(&sq));
+        scales[gi] = s16;
+        let qg = &mut q[gi * GROUP / 2..(gi + 1) * GROUP / 2];
+        for (j, b) in qg.iter_mut().enumerate() {
+            let lo = v4_code(sq[2 * j], safe);
+            let hi = v4_code(sq[2 * j + 1], safe);
+            *b = lo | (hi << 4);
+        }
+    }
+}
+
+#[inline]
+fn v4_code(sq: f32, safe: f32) -> u8 {
+    (sq / safe * 15.0).round_ties_even().clamp(0.0, 15.0) as u8
+}
+
+/// Q_v4⁻¹.
+pub fn dequant_variance4(q: &[u8], scales: &[u16], out: &mut [f32]) {
+    assert_eq!(out.len() % GROUP, 0);
+    assert_eq!(q.len() * 2, out.len(),
+               "q must hold two 4-bit codes per byte");
+    assert_eq!(scales.len() * GROUP, out.len(),
+               "scales must cover q exactly (one f16 scale per group)");
+    for gi in 0..scales.len() {
+        let s = fp16::f16_bits_to_f32(scales[gi]);
+        let qg = &q[gi * GROUP / 2..(gi + 1) * GROUP / 2];
+        let og = &mut out[gi * GROUP..(gi + 1) * GROUP];
+        for (j, &b) in qg.iter().enumerate() {
+            let lo = (b & 0x0F) as f32 / 15.0 * s;
+            let hi = (b >> 4) as f32 / 15.0 * s;
+            og[2 * j] = lo * lo;
+            og[2 * j + 1] = hi * hi;
+        }
+    }
+}
+
+#[inline]
+fn group_absmax(g: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for &x in g {
+        let a = x.abs();
+        if a > s {
+            s = a;
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn heavy(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                let a = rng.normal() as f32;
+                let b = (rng.normal() as f32).abs() + 0.3;
+                a / b * scale
+            })
+            .collect()
+    }
+
+    #[test]
+    fn momentum_code_table_matches_doc() {
+        // value(k) = k / (14 − |k|), strictly monotone in k
+        let mut prev = f32::NEG_INFINITY;
+        for k in -7i8..=7 {
+            let v = phi_m_inv(k as f32 / 7.0);
+            let expect = k as f32 / (14.0 - k.abs() as f32);
+            assert!((v - expect).abs() < 1e-6, "k={k}: {v} vs {expect}");
+            assert!(v > prev, "table not monotone at k={k}");
+            prev = v;
+        }
+        assert_eq!(phi_m_inv(0.0), 0.0);
+        assert_eq!(phi_m_inv(1.0), 1.0);
+        assert_eq!(phi_m_inv(-1.0), -1.0);
+    }
+
+    #[test]
+    fn variance_code_table_matches_doc() {
+        // value(k) = k²/225 in units of s², monotone in k
+        let mut prev = -1.0f32;
+        for k in 0u8..=15 {
+            let vp = k as f32 / 15.0;
+            let v = vp * vp;
+            assert!((v - k as f32 * k as f32 / 225.0).abs() < 1e-6);
+            assert!(v > prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn nibble_sign_extension_roundtrips() {
+        for c in -8i8..=7 {
+            assert_eq!(nibble_to_i4(i4_to_nibble(c)), c);
+        }
+        for nib in 0u8..16 {
+            assert_eq!(i4_to_nibble(nibble_to_i4(nib)), nib);
+        }
+    }
+
+    #[test]
+    fn pack_unpack_even_and_odd_lengths() {
+        let mut rng = Rng::new(7);
+        for n in [0usize, 1, 2, 5, 31, 32, 33, 64, 101] {
+            let nibbles: Vec<u8> =
+                (0..n).map(|_| rng.below(16) as u8).collect();
+            let mut packed = vec![0u8; packed_len(n)];
+            pack_nibbles(&nibbles, &mut packed);
+            if n % 2 == 1 {
+                // dangling high nibble must be zero
+                assert_eq!(packed[n / 2] >> 4, 0);
+            }
+            let mut out = vec![0u8; n];
+            unpack_nibbles(&packed, &mut out);
+            assert_eq!(out, nibbles, "n={n}");
+        }
+    }
+
+    #[test]
+    fn momentum_roundtrip_within_documented_bound() {
+        let mut rng = Rng::new(11);
+        let m = heavy(&mut rng, 4096, 0.01);
+        let mut q = vec![0u8; 4096 / 2];
+        let mut s = vec![0u16; 128];
+        quant_momentum4(&m, &mut q, &mut s);
+        let mut out = vec![0f32; 4096];
+        dequant_momentum4(&q, &s, &mut out);
+        for (g, og) in m.chunks_exact(GROUP).zip(out.chunks_exact(GROUP)) {
+            let absmax = group_absmax(g).max(1e-30);
+            for (a, b) in g.iter().zip(og) {
+                assert!((a - b).abs() / absmax < 0.15,
+                        "momentum error above documented bound");
+            }
+        }
+    }
+
+    #[test]
+    fn variance_roundtrip_within_documented_bound() {
+        let mut rng = Rng::new(12);
+        let v: Vec<f32> = heavy(&mut rng, 4096, 1e-2)
+            .iter()
+            .map(|x| x * x)
+            .collect();
+        let mut q = vec![0u8; 4096 / 2];
+        let mut s = vec![0u16; 128];
+        quant_variance4(&v, &mut q, &mut s);
+        let mut out = vec![0f32; 4096];
+        dequant_variance4(&q, &s, &mut out);
+        for (g, og) in v.chunks_exact(GROUP).zip(out.chunks_exact(GROUP)) {
+            let absmax = group_absmax(g).max(1e-38);
+            for (a, b) in g.iter().zip(og) {
+                assert!((a - b).abs() / absmax < 0.07,
+                        "variance error above documented bound");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_groups_stable() {
+        let m = vec![0f32; 64];
+        let mut q = vec![0xFFu8; 32];
+        let mut s = vec![0u16; 2];
+        quant_momentum4(&m, &mut q, &mut s);
+        assert!(q.iter().all(|&b| b == 0));
+        let mut out = vec![1f32; 64];
+        dequant_momentum4(&q, &s, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn nan_quantizes_to_code_zero() {
+        let mut m = vec![0.5f32; GROUP];
+        m[3] = f32::NAN;
+        let mut q = vec![0u8; GROUP / 2];
+        let mut s = vec![0u16; 1];
+        quant_momentum4(&m, &mut q, &mut s);
+        assert_eq!(q[1] & 0xF0, 0, "NaN momentum must encode as code 0");
+        // negative variance -> sqrt NaN -> code 0, and the NaN is
+        // skipped by the absmax so the rest of the group is unaffected
+        let mut v = vec![0.25f32; GROUP];
+        v[0] = -1.0;
+        quant_variance4(&v, &mut q, &mut s);
+        assert_eq!(q[0] & 0x0F, 0, "negative variance must encode as 0");
+        let mut out = vec![0f32; GROUP];
+        dequant_variance4(&q, &s, &mut out);
+        assert_eq!(out[0], 0.0);
+        assert!(out[1] > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "scales must cover q exactly")]
+    fn dequant_momentum4_rejects_short_scales() {
+        let q = vec![0u8; GROUP]; // 2 groups packed
+        let s = vec![0u16; 1]; // one scale missing
+        let mut out = vec![0f32; 2 * GROUP];
+        dequant_momentum4(&q, &s, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "scales must cover q exactly")]
+    fn dequant_variance4_rejects_long_scales() {
+        let q = vec![0u8; GROUP / 2];
+        let s = vec![0u16; 3]; // stale over-long scale buffer
+        let mut out = vec![0f32; GROUP];
+        dequant_variance4(&q, &s, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "two 4-bit codes per byte")]
+    fn dequant_momentum4_rejects_unpacked_len() {
+        let q = vec![0u8; GROUP]; // full-byte buffer for one group
+        let s = vec![0u16; 1];
+        let mut out = vec![0f32; GROUP];
+        dequant_momentum4(&q, &s, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "two 4-bit codes per byte")]
+    fn quant_variance4_rejects_unpacked_len() {
+        let v = vec![0f32; GROUP];
+        let mut q = vec![0u8; GROUP];
+        let mut s = vec![0u16; 1];
+        quant_variance4(&v, &mut q, &mut s);
+    }
+
+    #[test]
+    #[should_panic(expected = "ceil(n/2)")]
+    fn pack_nibbles_rejects_wrong_packed_len() {
+        let nibbles = vec![0u8; 5];
+        let mut packed = vec![0u8; 2]; // needs 3
+        pack_nibbles(&nibbles, &mut packed);
+    }
+
+    #[test]
+    fn saturating_inputs_hit_extreme_codes() {
+        // group absmax element lands exactly on code ±7 / 15
+        let mut m = vec![0f32; GROUP];
+        m[0] = 2.0;
+        m[1] = -2.0;
+        let mut q = vec![0u8; GROUP / 2];
+        let mut s = vec![0u16; 1];
+        quant_momentum4(&m, &mut q, &mut s);
+        assert_eq!(nibble_to_i4(q[0] & 0x0F), 7);
+        assert_eq!(nibble_to_i4(q[0] >> 4), -7);
+        let mut v = vec![0f32; GROUP];
+        v[0] = 4.0;
+        quant_variance4(&v, &mut q, &mut s);
+        assert_eq!(q[0] & 0x0F, 15);
+    }
+}

@@ -936,6 +936,302 @@ unsafe fn quant_v_linear_group(v: &[__m256; 4], q: *mut u8) -> u16 {
     }
 }
 
+// --- companded 4-bit nibble-packed state codecs (quant4/mixed84) ---------
+//
+// The float pipeline is the exact 8-bit helper structure with the
+// 4-bit constants (7.0 / 15.0) — same scale_pair, same NaN-skipping
+// absmax, same clamp/round/saturating-cast lane emulation.  The nibble
+// pack/unpack stage is pure integer work on a GROUP stack buffer
+// (two's-complement truncation / sign extension), which is exact on
+// any encoding — so these kernels need no intrinsics beyond the
+// existing allowlist and stay bit-identical to `formats::quant4`.
+
+/// Nibble-unpack one GROUP (16 packed bytes) of signed 4-bit codes
+/// into a sign-extended i8 stack buffer (low nibble = even index).
+///
+/// # Safety
+/// Requires AVX2; `q` must be valid for reads of GROUP/2 (16) `u8`
+/// (unaligned is fine — byte loads only).
+#[target_feature(enable = "avx2")]
+unsafe fn unpack_i4_group(q: *const u8) -> [i8; GROUP] {
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        let mut codes = [0i8; GROUP];
+        for j in 0..GROUP / 2 {
+            let b = *q.add(j);
+            codes[2 * j] = ((b << 4) as i8) >> 4;
+            codes[2 * j + 1] = (b as i8) >> 4;
+        }
+        codes
+    }
+}
+
+/// Nibble-unpack one GROUP of unsigned 4-bit codes into a u8 stack
+/// buffer (low nibble = even index).
+///
+/// # Safety
+/// Requires AVX2; `q` must be valid for reads of GROUP/2 (16) `u8`
+/// (unaligned is fine — byte loads only).
+#[target_feature(enable = "avx2")]
+unsafe fn unpack_u4_group(q: *const u8) -> [u8; GROUP] {
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        let mut codes = [0u8; GROUP];
+        for j in 0..GROUP / 2 {
+            let b = *q.add(j);
+            codes[2 * j] = b & 0x0F;
+            codes[2 * j + 1] = b >> 4;
+        }
+        codes
+    }
+}
+
+/// Nibble-pack one GROUP of codes (each already in 4-bit range) from a
+/// byte stack buffer into GROUP/2 packed bytes.
+///
+/// # Safety
+/// Requires AVX2; `q` must be valid for writes of GROUP/2 (16) `u8`
+/// (unaligned is fine — byte stores only).
+#[target_feature(enable = "avx2")]
+unsafe fn pack_nibbles_group(codes: &[u8; GROUP], q: *mut u8) {
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above).
+    unsafe {
+        for j in 0..GROUP / 2 {
+            *q.add(j) = (codes[2 * j] & 0x0F)
+                | ((codes[2 * j + 1] & 0x0F) << 4);
+        }
+    }
+}
+
+/// Dequant one 4-bit companded momentum group into registers.
+///
+/// # Safety
+/// Requires AVX2; `q` must be valid for reads of GROUP/2 (16) `u8`
+/// (unaligned is fine — only unaligned load/store forms are used).
+#[target_feature(enable = "avx2")]
+unsafe fn dequant_m4_group(q: *const u8, scale_bits: u16)
+                           -> [__m256; 4] {
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above); the stack buffer is
+    // GROUP i8 long and each 8-lane load stays inside it.
+    unsafe {
+        let codes = unpack_i4_group(q);
+        let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scale_bits));
+        let mut out = [_mm256_setzero_ps(); 4];
+        for (k, o) in out.iter_mut().enumerate() {
+            let zi = load8_i8_epi32(codes.as_ptr().add(8 * k));
+            let z = _mm256_div_ps(_mm256_cvtepi32_ps(zi),
+                                  _mm256_set1_ps(7.0));
+            // phi_m_inv(z) = z / (2 - |z|)
+            let inv = _mm256_div_ps(
+                z, _mm256_sub_ps(_mm256_set1_ps(2.0), abs_ps(z)));
+            *o = _mm256_mul_ps(inv, s);
+        }
+        out
+    }
+}
+
+/// Quantize one resident momentum group to 4-bit nibble-packed codes;
+/// returns the f16 scale bits.
+///
+/// # Safety
+/// Requires AVX2; `q` must be valid for writes of GROUP/2 (16) `u8`
+/// (unaligned is fine — only unaligned load/store forms are used).
+#[target_feature(enable = "avx2")]
+unsafe fn quant_m4_group(m: &[__m256; 4], q: *mut u8) -> u16 {
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above); the stack buffer is
+    // GROUP i8 long and the 32-byte store covers exactly it.
+    unsafe {
+        let (s16, safe) = companding::scale_pair(regs_absmax(m));
+        let safe_v = _mm256_set1_ps(safe);
+        let mut rv = [_mm256_setzero_si256(); 4];
+        for (k, r_out) in rv.iter_mut().enumerate() {
+            let xs = _mm256_div_ps(m[k], safe_v);
+            // phi_m(xs) = (2 * xs) / (1 + |xs|)
+            let z = _mm256_div_ps(
+                _mm256_mul_ps(_mm256_set1_ps(2.0), xs),
+                _mm256_add_ps(_mm256_set1_ps(1.0), abs_ps(xs)));
+            let rf = clamp_ps(
+                round_ps(_mm256_mul_ps(z, _mm256_set1_ps(7.0))),
+                -7.0, 7.0);
+            *r_out = cvt_clamped_epi32(rf);
+        }
+        let mut codes = [0u8; GROUP];
+        _mm256_storeu_si256(codes.as_mut_ptr() as *mut __m256i,
+                            pack4_epi32_i8(rv[0], rv[1], rv[2], rv[3]));
+        pack_nibbles_group(&codes, q);
+        s16
+    }
+}
+
+/// Dequant one 4-bit companded variance group into registers.
+///
+/// # Safety
+/// Requires AVX2; `q` must be valid for reads of GROUP/2 (16) `u8`
+/// (unaligned is fine — only unaligned load/store forms are used).
+#[target_feature(enable = "avx2")]
+unsafe fn dequant_v4_group(q: *const u8, scale_bits: u16)
+                           -> [__m256; 4] {
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above); the stack buffer is
+    // GROUP u8 long and each 8-lane load stays inside it.
+    unsafe {
+        let codes = unpack_u4_group(q);
+        let s = _mm256_set1_ps(fp16::f16_bits_to_f32(scale_bits));
+        let mut out = [_mm256_setzero_ps(); 4];
+        for (k, o) in out.iter_mut().enumerate() {
+            let zi = load8_u8_epi32(codes.as_ptr().add(8 * k));
+            let vp = _mm256_mul_ps(
+                _mm256_div_ps(_mm256_cvtepi32_ps(zi),
+                              _mm256_set1_ps(15.0)),
+                s);
+            *o = _mm256_mul_ps(vp, vp);
+        }
+        out
+    }
+}
+
+/// Quantize one resident variance group to 4-bit nibble-packed codes
+/// (sqrt domain, NaN-skipping absmax); returns the f16 scale bits.
+///
+/// # Safety
+/// Requires AVX2; `q` must be valid for writes of GROUP/2 (16) `u8`
+/// (unaligned is fine — only unaligned load/store forms are used).
+#[target_feature(enable = "avx2")]
+unsafe fn quant_v4_group(v: &[__m256; 4], q: *mut u8) -> u16 {
+    // SAFETY: AVX2 per contract; accesses stay inside the ranges the
+    // caller guarantees (see `# Safety` above); the stack buffer is
+    // GROUP u8 long and the 32-byte store covers exactly it.
+    unsafe {
+        let mut sq = [_mm256_setzero_ps(); 4];
+        let mut acc = _mm256_setzero_ps();
+        for (k, s_out) in sq.iter_mut().enumerate() {
+            let s = _mm256_sqrt_ps(v[k]);
+            *s_out = s;
+            let a = abs_ps(s);
+            let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(a, acc);
+            acc = _mm256_blendv_ps(acc, a, gt);
+        }
+        let (s16, safe) = companding::scale_pair(hmax_ps(acc));
+        let safe_v = _mm256_set1_ps(safe);
+        let mut rv = [_mm256_setzero_si256(); 4];
+        for (k, r_out) in rv.iter_mut().enumerate() {
+            let rf = clamp_ps(
+                round_ps(_mm256_mul_ps(_mm256_div_ps(sq[k], safe_v),
+                                       _mm256_set1_ps(15.0))),
+                0.0, 15.0);
+            *r_out = cvt_clamped_epi32(rf);
+        }
+        let mut codes = [0u8; GROUP];
+        _mm256_storeu_si256(codes.as_mut_ptr() as *mut __m256i,
+                            pack4_epi32_u8(rv[0], rv[1], rv[2], rv[3]));
+        pack_nibbles_group(&codes, q);
+        s16
+    }
+}
+
+/// # Safety
+/// Requires AVX2.  No caller invariant beyond the slice arguments
+/// themselves: lengths are cross-checked by the asserts at entry and
+/// every pointer offset stays inside them.
+#[target_feature(enable = "avx2")]
+pub unsafe fn quant_momentum4(m: &[f32], q: &mut [u8],
+                              scales: &mut [u16]) {
+    // SAFETY: AVX2 per contract; pointer offsets stay in bounds of
+    // the slice arguments (lengths cross-checked by the asserts at
+    // entry; every group touches GROUP source elements and GROUP/2
+    // packed bytes).
+    unsafe {
+        assert_eq!(m.len() % GROUP, 0);
+        assert_eq!(q.len() * 2, m.len(),
+                   "q must hold two 4-bit codes per byte");
+        assert_eq!(scales.len(), m.len() / GROUP);
+        for gi in 0..scales.len() {
+            let x = load_group_ps(m.as_ptr().add(gi * GROUP));
+            scales[gi] =
+                quant_m4_group(&x, q.as_mut_ptr().add(gi * GROUP / 2));
+        }
+    }
+}
+
+/// # Safety
+/// Requires AVX2.  No caller invariant beyond the slice arguments
+/// themselves: lengths are cross-checked by the asserts at entry and
+/// every pointer offset stays inside them.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dequant_momentum4(q: &[u8], scales: &[u16],
+                                out: &mut [f32]) {
+    // SAFETY: AVX2 per contract; pointer offsets stay in bounds of
+    // the slice arguments (lengths cross-checked by the asserts at
+    // entry; every group touches GROUP/2 packed bytes and GROUP
+    // destination elements).
+    unsafe {
+        assert_eq!(out.len() % GROUP, 0);
+        assert_eq!(q.len() * 2, out.len(),
+                   "q must hold two 4-bit codes per byte");
+        assert_eq!(scales.len() * GROUP, out.len(),
+                   "scales must cover q exactly (one f16 scale per group)");
+        for gi in 0..scales.len() {
+            let m = dequant_m4_group(q.as_ptr().add(gi * GROUP / 2),
+                                     scales[gi]);
+            store_group_ps(&m, out.as_mut_ptr().add(gi * GROUP));
+        }
+    }
+}
+
+/// # Safety
+/// Requires AVX2.  No caller invariant beyond the slice arguments
+/// themselves: lengths are cross-checked by the asserts at entry and
+/// every pointer offset stays inside them.
+#[target_feature(enable = "avx2")]
+pub unsafe fn quant_variance4(v: &[f32], q: &mut [u8],
+                              scales: &mut [u16]) {
+    // SAFETY: AVX2 per contract; pointer offsets stay in bounds of
+    // the slice arguments (lengths cross-checked by the asserts at
+    // entry; every group touches GROUP source elements and GROUP/2
+    // packed bytes).
+    unsafe {
+        assert_eq!(v.len() % GROUP, 0);
+        assert_eq!(q.len() * 2, v.len(),
+                   "q must hold two 4-bit codes per byte");
+        assert_eq!(scales.len(), v.len() / GROUP);
+        for gi in 0..scales.len() {
+            let x = load_group_ps(v.as_ptr().add(gi * GROUP));
+            scales[gi] =
+                quant_v4_group(&x, q.as_mut_ptr().add(gi * GROUP / 2));
+        }
+    }
+}
+
+/// # Safety
+/// Requires AVX2.  No caller invariant beyond the slice arguments
+/// themselves: lengths are cross-checked by the asserts at entry and
+/// every pointer offset stays inside them.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dequant_variance4(q: &[u8], scales: &[u16],
+                                out: &mut [f32]) {
+    // SAFETY: AVX2 per contract; pointer offsets stay in bounds of
+    // the slice arguments (lengths cross-checked by the asserts at
+    // entry; every group touches GROUP/2 packed bytes and GROUP
+    // destination elements).
+    unsafe {
+        assert_eq!(out.len() % GROUP, 0);
+        assert_eq!(q.len() * 2, out.len(),
+                   "q must hold two 4-bit codes per byte");
+        assert_eq!(scales.len() * GROUP, out.len(),
+                   "scales must cover q exactly (one f16 scale per group)");
+        for gi in 0..scales.len() {
+            let v = dequant_v4_group(q.as_ptr().add(gi * GROUP / 2),
+                                     scales[gi]);
+            store_group_ps(&v, out.as_mut_ptr().add(gi * GROUP));
+        }
+    }
+}
+
 /// # Safety
 /// Requires AVX2.  No caller invariant beyond the slice arguments
 /// themselves: lengths are cross-checked by the asserts at entry and
@@ -1612,6 +1908,171 @@ pub unsafe fn fused_step_lion_quant(p: &mut FusedPart<'_>,
     }
 }
 
+/// Shared fused loop over the 4-bit state layouts (`quant4` when `m4`
+/// is true — both moments nibble-packed — and `mixed84` when false —
+/// 8-bit companded momentum, 4-bit variance).  Same register flow as
+/// the split+quant arm of [`fused_any`]; the packed code pointers step
+/// at half resolution (`base / 2` — GROUP is even, so every group
+/// window is whole bytes and the nibble pairing is preserved).  The
+/// NaN analysis for quantized layouts applies unchanged: dequantized
+/// 4-bit moments are always finite, so a NaN gradient stays confined
+/// exactly as in the 8-bit layouts.
+///
+/// # Safety
+/// Requires AVX2.  All pointers below derive from the `FusedPart`
+/// slices — valid for `p.g.len()` elements (asserted GROUP-aligned at
+/// entry; packed code slices `n / 2` bytes, scale slices `n / GROUP`
+/// long).  The null placeholders for buffers a layout does not store
+/// are never dereferenced: every access is guarded by the flag that
+/// proved the buffer present via `layout_mut`.
+#[target_feature(enable = "avx2")]
+unsafe fn fused_any4(p: &mut FusedPart<'_>, s: &StepScalars,
+                     rule: FusedRule, m4: bool) {
+    // SAFETY: AVX2 per contract; pointer provenance and bounds per
+    // the `# Safety` section — null placeholders are never
+    // dereferenced (each access is guarded by its layout flag).
+    unsafe {
+        let n = p.g.len();
+        assert_eq!(n % GROUP, 0, "fused kernels step whole groups");
+        let g_all = p.g;
+        let var = matches!(rule, FusedRule::AdamW);
+
+        let tp = layout_mut(p.theta_p.as_deref_mut(), "theta_p");
+        let rho = layout_mut(p.rho.as_deref_mut(), "rho");
+        let ms = layout_mut(p.ms.as_deref_mut(), "ms");
+        assert_eq!(tp.len(), n);
+        assert_eq!(rho.len(), n);
+        assert_eq!(ms.len(), n / GROUP);
+        let (tp_p, rho_p, ms_p) =
+            (tp.as_mut_ptr(), rho.as_mut_ptr(), ms.as_mut_ptr());
+        let (mq4_p, mq_p) = if m4 {
+            let mq4 = layout_mut(p.mq4.as_deref_mut(), "mq4");
+            assert_eq!(mq4.len() * 2, n);
+            (mq4.as_mut_ptr(), std::ptr::null_mut::<i8>())
+        } else {
+            let mq = layout_mut(p.mq.as_deref_mut(), "mq");
+            assert_eq!(mq.len(), n);
+            (std::ptr::null_mut::<u8>(), mq.as_mut_ptr())
+        };
+        let (vq4_p, vs_p) = if var {
+            let vq4 = layout_mut(p.vq4.as_deref_mut(), "vq4");
+            let vs = layout_mut(p.vs.as_deref_mut(), "vs");
+            assert_eq!(vq4.len() * 2, n);
+            assert_eq!(vs.len(), n / GROUP);
+            (vq4.as_mut_ptr(), vs.as_mut_ptr())
+        } else {
+            (std::ptr::null_mut::<u8>(), std::ptr::null_mut::<u16>())
+        };
+        let g_p = g_all.as_ptr();
+        let c = update_consts(s);
+
+        for gi in 0..n / GROUP {
+            let base = gi * GROUP;
+            let g = load_group_ps(g_p.add(base));
+            let mut th =
+                split_decompress_group(tp_p.add(base), rho_p.add(base));
+            let mut m = if m4 {
+                dequant_m4_group(mq4_p.add(base / 2), *ms_p.add(gi))
+            } else {
+                dequant_m_group(mq_p.add(base), *ms_p.add(gi))
+            };
+            match rule {
+                FusedRule::AdamW => {
+                    let mut v = dequant_v4_group(vq4_p.add(base / 2),
+                                                 *vs_p.add(gi));
+                    adamw_update_group(&mut th, &mut m, &mut v, &g, &c);
+                    *vs_p.add(gi) =
+                        quant_v4_group(&v, vq4_p.add(base / 2));
+                }
+                FusedRule::Sgdm => {
+                    sgd_update_group(&mut th, &mut m, &g, &c)
+                }
+                FusedRule::Lion => {
+                    lion_update_group(&mut th, &mut m, &g, &c)
+                }
+            }
+            split_compress_group(&th, tp_p.add(base), rho_p.add(base));
+            if m4 {
+                *ms_p.add(gi) = quant_m4_group(&m, mq4_p.add(base / 2));
+            } else {
+                *ms_p.add(gi) = quant_m_group(&m, mq_p.add(base));
+            }
+        }
+    }
+}
+
+/// # Safety
+/// Requires AVX2; see [`fused_any4`] — this entry only pins the
+/// layout flags.
+#[target_feature(enable = "avx2")]
+pub unsafe fn fused_step_adamw_quant4(p: &mut FusedPart<'_>,
+                                      s: &StepScalars) {
+    // SAFETY: forwards to `fused_any4` under the same AVX2 contract.
+    unsafe {
+        fused_any4(p, s, FusedRule::AdamW, true)
+    }
+}
+
+/// # Safety
+/// Requires AVX2; see [`fused_any4`] — this entry only pins the
+/// layout flags.
+#[target_feature(enable = "avx2")]
+pub unsafe fn fused_step_sgdm_quant4(p: &mut FusedPart<'_>,
+                                     s: &StepScalars) {
+    // SAFETY: forwards to `fused_any4` under the same AVX2 contract.
+    unsafe {
+        fused_any4(p, s, FusedRule::Sgdm, true)
+    }
+}
+
+/// # Safety
+/// Requires AVX2; see [`fused_any4`] — this entry only pins the
+/// layout flags.
+#[target_feature(enable = "avx2")]
+pub unsafe fn fused_step_lion_quant4(p: &mut FusedPart<'_>,
+                                     s: &StepScalars) {
+    // SAFETY: forwards to `fused_any4` under the same AVX2 contract.
+    unsafe {
+        fused_any4(p, s, FusedRule::Lion, true)
+    }
+}
+
+/// # Safety
+/// Requires AVX2; see [`fused_any4`] — this entry only pins the
+/// layout flags.
+#[target_feature(enable = "avx2")]
+pub unsafe fn fused_step_adamw_mixed84(p: &mut FusedPart<'_>,
+                                       s: &StepScalars) {
+    // SAFETY: forwards to `fused_any4` under the same AVX2 contract.
+    unsafe {
+        fused_any4(p, s, FusedRule::AdamW, false)
+    }
+}
+
+/// # Safety
+/// Requires AVX2; see [`fused_any4`] — this entry only pins the
+/// layout flags.
+#[target_feature(enable = "avx2")]
+pub unsafe fn fused_step_sgdm_mixed84(p: &mut FusedPart<'_>,
+                                      s: &StepScalars) {
+    // SAFETY: forwards to `fused_any4` under the same AVX2 contract.
+    unsafe {
+        fused_any4(p, s, FusedRule::Sgdm, false)
+    }
+}
+
+/// # Safety
+/// Requires AVX2; see [`fused_any4`] — this entry only pins the
+/// layout flags.
+#[target_feature(enable = "avx2")]
+pub unsafe fn fused_step_lion_mixed84(p: &mut FusedPart<'_>,
+                                      s: &StepScalars) {
+    // SAFETY: forwards to `fused_any4` under the same AVX2 contract.
+    unsafe {
+        fused_any4(p, s, FusedRule::Lion, false)
+    }
+}
+
 /// Safe wrappers used as the `KernelSet` function-pointer table.
 ///
 /// Soundness: the AVX2 `KernelSet` is only handed out by
@@ -1682,5 +2143,21 @@ pub mod dispatch {
     wrap!(fused_step_sgdm_quant,
           (p: &mut FusedPart<'_>, s: &StepScalars));
     wrap!(fused_step_lion_quant,
+          (p: &mut FusedPart<'_>, s: &StepScalars));
+    wrap!(quant_momentum4, (m: &[f32], q: &mut [u8], s: &mut [u16]));
+    wrap!(dequant_momentum4, (q: &[u8], s: &[u16], out: &mut [f32]));
+    wrap!(quant_variance4, (v: &[f32], q: &mut [u8], s: &mut [u16]));
+    wrap!(dequant_variance4, (q: &[u8], s: &[u16], out: &mut [f32]));
+    wrap!(fused_step_adamw_quant4,
+          (p: &mut FusedPart<'_>, s: &StepScalars));
+    wrap!(fused_step_sgdm_quant4,
+          (p: &mut FusedPart<'_>, s: &StepScalars));
+    wrap!(fused_step_lion_quant4,
+          (p: &mut FusedPart<'_>, s: &StepScalars));
+    wrap!(fused_step_adamw_mixed84,
+          (p: &mut FusedPart<'_>, s: &StepScalars));
+    wrap!(fused_step_sgdm_mixed84,
+          (p: &mut FusedPart<'_>, s: &StepScalars));
+    wrap!(fused_step_lion_mixed84,
           (p: &mut FusedPart<'_>, s: &StepScalars));
 }

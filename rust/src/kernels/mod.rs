@@ -55,6 +55,10 @@ pub struct FusedPart<'a> {
     pub ms: Option<&'a mut [u16]>,
     pub vq: Option<&'a mut [u8]>,
     pub vs: Option<&'a mut [u16]>,
+    /// nibble-packed 4-bit momentum codes, two per byte (len/2 bytes)
+    pub mq4: Option<&'a mut [u8]>,
+    /// nibble-packed 4-bit variance codes, two per byte (len/2 bytes)
+    pub vq4: Option<&'a mut [u8]>,
     pub g: &'a [f32],
 }
 
@@ -111,7 +115,7 @@ pub type FusedStepFn = fn(&mut FusedPart<'_>, &StepScalars);
 /// length.  The `fused_step_*` entries are whole-partition single-pass
 /// step kernels; every (optimizer, variant) pair has one on every set
 /// — coverage is total by construction ([`KernelSet::fused_step`]
-/// matches all 15 pairs exhaustively with no fallback arm), so a
+/// matches all 21 pairs exhaustively with no fallback arm), so a
 /// missing kernel is a compile error, never a silent tiled fallback.
 /// The tiled three-pass path survives only as the `fused_step = false`
 /// debug/differential mirror (see `backend::fused`).
@@ -128,6 +132,12 @@ pub struct KernelSet {
     pub dequant_momentum_linear: fn(&[i8], &[u16], &mut [f32]),
     pub quant_variance_linear: fn(&[f32], &mut [u8], &mut [u16]),
     pub dequant_variance_linear: fn(&[u8], &[u16], &mut [f32]),
+    // companded 4-bit nibble-packed optimizer state (quant4/mixed84
+    // layouts; codes buffer holds two codes per byte, len/2 bytes)
+    pub quant_momentum4: fn(&[f32], &mut [u8], &mut [u16]),
+    pub dequant_momentum4: fn(&[u8], &[u16], &mut [f32]),
+    pub quant_variance4: fn(&[f32], &mut [u8], &mut [u16]),
+    pub dequant_variance4: fn(&[u8], &[u16], &mut [f32]),
     // ULP-normalized weight splitting (Algorithm 1, int8 + bf16)
     pub split_compress: fn(&[f32], &mut [u16], &mut [i8]),
     pub split_decompress: fn(&[u16], &[i8], &mut [f32]),
@@ -154,18 +164,24 @@ pub struct KernelSet {
     pub fused_step_adamw_quant: FusedStepFn,
     pub fused_step_sgdm_quant: FusedStepFn,
     pub fused_step_lion_quant: FusedStepFn,
+    pub fused_step_adamw_quant4: FusedStepFn,
+    pub fused_step_sgdm_quant4: FusedStepFn,
+    pub fused_step_lion_quant4: FusedStepFn,
+    pub fused_step_adamw_mixed84: FusedStepFn,
+    pub fused_step_sgdm_mixed84: FusedStepFn,
+    pub fused_step_lion_mixed84: FusedStepFn,
 }
 
 impl KernelSet {
     /// The fused single-pass kernel for an (optimizer, variant) pair.
     ///
-    /// Total over all 15 pairs: the fully compact layouts (`flash`,
-    /// `nocompand`) fuse all three codec streams; the fp32-resident
-    /// layouts (`reference`, `wsplit`, `quant`) fuse whatever streams
-    /// they codec and update their fp32 buffers in place within the
-    /// same single pass.  The match is exhaustive on purpose — adding
-    /// an optimizer or variant without a fused kernel fails to
-    /// compile instead of silently tiling.
+    /// Total over all 21 pairs: the fully compact layouts (`flash`,
+    /// `nocompand`, `quant4`, `mixed84`) fuse all three codec streams;
+    /// the fp32-resident layouts (`reference`, `wsplit`, `quant`) fuse
+    /// whatever streams they codec and update their fp32 buffers in
+    /// place within the same single pass.  The match is exhaustive on
+    /// purpose — adding an optimizer or variant without a fused kernel
+    /// fails to compile instead of silently tiling.
     pub fn fused_step(&self, opt: OptKind, variant: Variant)
                       -> FusedStepFn {
         match (opt, variant) {
@@ -208,6 +224,24 @@ impl KernelSet {
             (OptKind::Lion, Variant::OptQuant) => {
                 self.fused_step_lion_quant
             }
+            (OptKind::AdamW, Variant::Quant4) => {
+                self.fused_step_adamw_quant4
+            }
+            (OptKind::Sgd, Variant::Quant4) => {
+                self.fused_step_sgdm_quant4
+            }
+            (OptKind::Lion, Variant::Quant4) => {
+                self.fused_step_lion_quant4
+            }
+            (OptKind::AdamW, Variant::Mixed84) => {
+                self.fused_step_adamw_mixed84
+            }
+            (OptKind::Sgd, Variant::Mixed84) => {
+                self.fused_step_sgdm_mixed84
+            }
+            (OptKind::Lion, Variant::Mixed84) => {
+                self.fused_step_lion_mixed84
+            }
         }
     }
 }
@@ -223,6 +257,10 @@ pub static SCALAR: KernelSet = KernelSet {
     dequant_momentum_linear: portable::dequant_momentum_linear,
     quant_variance_linear: portable::quant_variance_linear,
     dequant_variance_linear: portable::dequant_variance_linear,
+    quant_momentum4: portable::quant_momentum4,
+    dequant_momentum4: portable::dequant_momentum4,
+    quant_variance4: portable::quant_variance4,
+    dequant_variance4: portable::dequant_variance4,
     split_compress: portable::split_compress,
     split_decompress: portable::split_decompress,
     f32_to_bf16: portable::f32_to_bf16,
@@ -244,6 +282,12 @@ pub static SCALAR: KernelSet = KernelSet {
     fused_step_adamw_quant: portable::fused_step_adamw_quant,
     fused_step_sgdm_quant: portable::fused_step_sgdm_quant,
     fused_step_lion_quant: portable::fused_step_lion_quant,
+    fused_step_adamw_quant4: portable::fused_step_adamw_quant4,
+    fused_step_sgdm_quant4: portable::fused_step_sgdm_quant4,
+    fused_step_lion_quant4: portable::fused_step_lion_quant4,
+    fused_step_adamw_mixed84: portable::fused_step_adamw_mixed84,
+    fused_step_sgdm_mixed84: portable::fused_step_sgdm_mixed84,
+    fused_step_lion_mixed84: portable::fused_step_lion_mixed84,
 };
 
 #[cfg(target_arch = "x86_64")]
@@ -257,6 +301,10 @@ static AVX2: KernelSet = KernelSet {
     dequant_momentum_linear: avx2::dispatch::dequant_momentum_linear,
     quant_variance_linear: avx2::dispatch::quant_variance_linear,
     dequant_variance_linear: avx2::dispatch::dequant_variance_linear,
+    quant_momentum4: avx2::dispatch::quant_momentum4,
+    dequant_momentum4: avx2::dispatch::dequant_momentum4,
+    quant_variance4: avx2::dispatch::quant_variance4,
+    dequant_variance4: avx2::dispatch::dequant_variance4,
     split_compress: avx2::dispatch::split_compress,
     split_decompress: avx2::dispatch::split_decompress,
     f32_to_bf16: avx2::dispatch::f32_to_bf16,
@@ -278,6 +326,12 @@ static AVX2: KernelSet = KernelSet {
     fused_step_adamw_quant: avx2::dispatch::fused_step_adamw_quant,
     fused_step_sgdm_quant: avx2::dispatch::fused_step_sgdm_quant,
     fused_step_lion_quant: avx2::dispatch::fused_step_lion_quant,
+    fused_step_adamw_quant4: avx2::dispatch::fused_step_adamw_quant4,
+    fused_step_sgdm_quant4: avx2::dispatch::fused_step_sgdm_quant4,
+    fused_step_lion_quant4: avx2::dispatch::fused_step_lion_quant4,
+    fused_step_adamw_mixed84: avx2::dispatch::fused_step_adamw_mixed84,
+    fused_step_sgdm_mixed84: avx2::dispatch::fused_step_sgdm_mixed84,
+    fused_step_lion_mixed84: avx2::dispatch::fused_step_lion_mixed84,
 };
 
 /// True when the AVX2 kernel set can run on this machine.
@@ -365,15 +419,16 @@ mod tests {
             for opt in [OptKind::Sgd, OptKind::AdamW, OptKind::Lion] {
                 for variant in [Variant::Reference, Variant::Flash,
                                 Variant::WeightSplit, Variant::OptQuant,
-                                Variant::NoCompand] {
+                                Variant::NoCompand, Variant::Quant4,
+                                Variant::Mixed84] {
                     let k = ks.fused_step(opt, variant);
                     seen.push(k as usize);
                 }
             }
-            assert_eq!(seen.len(), 15, "{}: 15-pair universe", ks.name);
+            assert_eq!(seen.len(), 21, "{}: 21-pair universe", ks.name);
             seen.sort_unstable();
             seen.dedup();
-            assert_eq!(seen.len(), 15,
+            assert_eq!(seen.len(), 21,
                        "{}: two (optimizer, variant) pairs share one \
                         fused kernel entry point",
                        ks.name);

@@ -8,7 +8,8 @@
 //! 16-bit float conversions get the batch entry points the fused tile
 //! path and the AVX2 differential tests need.
 
-use crate::formats::{bf16, companding, fp16, weight_split, GROUP};
+use crate::formats::{bf16, companding, fp16, quant4, weight_split,
+                     GROUP};
 use crate::kernels::{layout_mut, layout_ref, FusedPart, FusedRule};
 use crate::optim::hyper::StepScalars;
 use crate::optim::scalar_ref;
@@ -49,6 +50,24 @@ pub fn quant_variance_linear(v: &[f32], q: &mut [u8],
 pub fn dequant_variance_linear(q: &[u8], scales: &[u16],
                                out: &mut [f32]) {
     companding::dequant_variance_linear(q, scales, out);
+}
+
+// --- companded 4-bit nibble-packed state codecs (quant4/mixed84) --------
+
+pub fn quant_momentum4(m: &[f32], q: &mut [u8], scales: &mut [u16]) {
+    quant4::quant_momentum4(m, q, scales);
+}
+
+pub fn dequant_momentum4(q: &[u8], scales: &[u16], out: &mut [f32]) {
+    quant4::dequant_momentum4(q, scales, out);
+}
+
+pub fn quant_variance4(v: &[f32], q: &mut [u8], scales: &mut [u16]) {
+    quant4::quant_variance4(v, q, scales);
+}
+
+pub fn dequant_variance4(q: &[u8], scales: &[u16], out: &mut [f32]) {
+    quant4::dequant_variance4(q, scales, out);
 }
 
 // --- weight splitting (Algorithm 1) -------------------------------------
@@ -169,6 +188,109 @@ fn fused_flash(p: &mut FusedPart<'_>, s: &StepScalars, rule: FusedRule,
             } else {
                 companding::quant_variance(&v_w, &mut vq[lo..hi], vs1);
             }
+        }
+    }
+}
+
+/// Shared fused loop over the 4-bit state layouts (`quant4` when `m4`
+/// is true — both moments nibble-packed — and `mixed84` when false —
+/// 8-bit companded momentum, 4-bit variance).  Same shape as
+/// [`fused_flash`]: split weights plus companded states, one GROUP
+/// stack window per stream; the packed code slices index at half
+/// resolution (`lo/2..hi/2` — GROUP is even, so windows stay whole
+/// bytes and the nibble pairing is preserved).
+fn fused_flash4(p: &mut FusedPart<'_>, s: &StepScalars, rule: FusedRule,
+                m4: bool) {
+    let n = p.g.len();
+    assert_eq!(n % GROUP, 0, "fused kernels step whole groups");
+    let tp = layout_mut(p.theta_p.as_deref_mut(), "theta_p");
+    let rho = layout_mut(p.rho.as_deref_mut(), "rho");
+    let ms = layout_mut(p.ms.as_deref_mut(), "ms");
+    assert_eq!(tp.len(), n);
+    assert_eq!(rho.len(), n);
+    assert_eq!(ms.len(), n / GROUP);
+    let mut mq4 = if m4 {
+        let mq4 = layout_mut(p.mq4.as_deref_mut(), "mq4");
+        assert_eq!(mq4.len() * 2, n);
+        Some(mq4)
+    } else {
+        None
+    };
+    let mut mq = if m4 {
+        None
+    } else {
+        let mq = layout_mut(p.mq.as_deref_mut(), "mq");
+        assert_eq!(mq.len(), n);
+        Some(mq)
+    };
+    let var = matches!(rule, FusedRule::AdamW);
+    let (mut vq4, mut vs) = if var {
+        let vq4 = layout_mut(p.vq4.as_deref_mut(), "vq4");
+        let vs = layout_mut(p.vs.as_deref_mut(), "vs");
+        assert_eq!(vq4.len() * 2, n);
+        assert_eq!(vs.len(), n / GROUP);
+        (Some(vq4), Some(vs))
+    } else {
+        (None, None)
+    };
+
+    let mut th_w = [0f32; GROUP];
+    let mut m_w = [0f32; GROUP];
+    let mut v_w = [0f32; GROUP];
+    for gi in 0..n / GROUP {
+        let lo = gi * GROUP;
+        let hi = lo + GROUP;
+        let g = &p.g[lo..hi];
+
+        // dequant the group into the stack window
+        weight_split::decompress_slice(&tp[lo..hi], &rho[lo..hi],
+                                       &mut th_w);
+        let ms1 = &ms[gi..gi + 1];
+        if m4 {
+            let mq4 = layout_ref(mq4.as_deref(), "mq4");
+            quant4::dequant_momentum4(&mq4[lo / 2..hi / 2], ms1,
+                                      &mut m_w);
+        } else {
+            let mq = layout_ref(mq.as_deref(), "mq");
+            companding::dequant_momentum(&mq[lo..hi], ms1, &mut m_w);
+        }
+
+        // update: the shared scalar rules (single source of truth)
+        match rule {
+            FusedRule::AdamW => {
+                let vq4_s = layout_ref(vq4.as_deref(), "vq4");
+                let vs1 = &layout_ref(vs.as_deref(), "vs")[gi..gi + 1];
+                quant4::dequant_variance4(&vq4_s[lo / 2..hi / 2], vs1,
+                                          &mut v_w);
+                scalar_ref::adamw_f32(&mut th_w, &mut m_w, &mut v_w, g,
+                                      s);
+            }
+            FusedRule::Sgdm => {
+                scalar_ref::sgd_f32(&mut th_w, &mut m_w, g, s)
+            }
+            FusedRule::Lion => {
+                scalar_ref::lion_f32(&mut th_w, &mut m_w, g, s)
+            }
+        }
+
+        // requant the group
+        weight_split::compress_slice(&th_w, &mut tp[lo..hi],
+                                     &mut rho[lo..hi]);
+        let ms1 = &mut ms[gi..gi + 1];
+        if m4 {
+            let mq4 = layout_mut(mq4.as_deref_mut(), "mq4");
+            quant4::quant_momentum4(&m_w, &mut mq4[lo / 2..hi / 2],
+                                    ms1);
+        } else {
+            let mq = layout_mut(mq.as_deref_mut(), "mq");
+            companding::quant_momentum(&m_w, &mut mq[lo..hi], ms1);
+        }
+        if var {
+            let vq4_s = layout_mut(vq4.as_deref_mut(), "vq4");
+            let vs1 = &mut layout_mut(vs.as_deref_mut(),
+                                      "vs")[gi..gi + 1];
+            quant4::quant_variance4(&v_w, &mut vq4_s[lo / 2..hi / 2],
+                                    vs1);
         }
     }
 }
@@ -364,6 +486,33 @@ pub fn fused_step_sgdm_quant(p: &mut FusedPart<'_>, s: &StepScalars) {
 
 pub fn fused_step_lion_quant(p: &mut FusedPart<'_>, s: &StepScalars) {
     fused_quant(p, s, FusedRule::Lion);
+}
+
+pub fn fused_step_adamw_quant4(p: &mut FusedPart<'_>, s: &StepScalars) {
+    fused_flash4(p, s, FusedRule::AdamW, true);
+}
+
+pub fn fused_step_sgdm_quant4(p: &mut FusedPart<'_>, s: &StepScalars) {
+    fused_flash4(p, s, FusedRule::Sgdm, true);
+}
+
+pub fn fused_step_lion_quant4(p: &mut FusedPart<'_>, s: &StepScalars) {
+    fused_flash4(p, s, FusedRule::Lion, true);
+}
+
+pub fn fused_step_adamw_mixed84(p: &mut FusedPart<'_>,
+                                s: &StepScalars) {
+    fused_flash4(p, s, FusedRule::AdamW, false);
+}
+
+pub fn fused_step_sgdm_mixed84(p: &mut FusedPart<'_>,
+                               s: &StepScalars) {
+    fused_flash4(p, s, FusedRule::Sgdm, false);
+}
+
+pub fn fused_step_lion_mixed84(p: &mut FusedPart<'_>,
+                               s: &StepScalars) {
+    fused_flash4(p, s, FusedRule::Lion, false);
 }
 
 // --- 16-bit float conversions -------------------------------------------

@@ -60,9 +60,10 @@ pub fn per_param(opt: OptKind, variant: Variant,
         p.gradients = 0.0;
     }
 
-    // momentum
+    // momentum (4-bit layouts nibble-pack two codes per byte; the f16
+    // group-scale overhead is unchanged — still one scale per GROUP)
     if variant.quantizes_state() {
-        p.momentum = 1.0;
+        p.momentum = if variant.momentum_4bit() { 0.5 } else { 1.0 };
         p.scales += scale_per_buf;
     } else {
         p.momentum = 4.0;
@@ -71,7 +72,7 @@ pub fn per_param(opt: OptKind, variant: Variant,
     // variance (AdamW only)
     if opt.has_variance() {
         if variant.quantizes_state() {
-            p.variance = 1.0;
+            p.variance = if variant.variance_4bit() { 0.5 } else { 1.0 };
             p.scales += scale_per_buf;
         } else {
             p.variance = 4.0;
@@ -229,6 +230,49 @@ mod tests {
         assert!((f.total() - 6.0).abs() < 0.1);
         let fr = per_param(OptKind::Sgd, Variant::Flash, true);
         assert!((fr.total() - 4.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn quant4_and_mixed84_adamw() {
+        // the "beyond 7 bytes/param" frontier: 4-bit states take the
+        // persistent AdamW state to 4.125 B/param (quant4) and 4.625
+        // (mixed84); batch peak adds the 2 B bf16 gradient
+        let q4 = per_param(OptKind::AdamW, Variant::Quant4, false);
+        assert_eq!(q4.master_weights, 2.0);
+        assert_eq!(q4.weight_correction, 1.0);
+        assert_eq!(q4.momentum, 0.5);
+        assert_eq!(q4.variance, 0.5);
+        assert_eq!(q4.scales, 2.0 * 2.0 / GROUP as f64);
+        assert_eq!(q4.total(), 6.125); // 4.125 state + 2 grad
+        let q4r = per_param(OptKind::AdamW, Variant::Quant4, true);
+        assert_eq!(q4r.total(), 4.125); // the headline number
+
+        let m84 = per_param(OptKind::AdamW, Variant::Mixed84, false);
+        assert_eq!(m84.momentum, 1.0); // 8-bit: the sensitive moment
+        assert_eq!(m84.variance, 0.5);
+        let m84r = per_param(OptKind::AdamW, Variant::Mixed84, true);
+        assert_eq!(m84r.total(), 4.625);
+
+        // sgd/quant4: no variance buffer, one scale stream
+        let s4 = per_param(OptKind::Sgd, Variant::Quant4, true);
+        assert_eq!(s4.total(), 2.0 + 1.0 + 0.5 + 2.0 / GROUP as f64);
+    }
+
+    #[test]
+    fn quant4_checkpoints_beat_quant() {
+        // acceptance: quant4 checkpoints measurably smaller than quant
+        let q4 = checkpoint_bytes_per_param(OptKind::AdamW,
+                                            Variant::Quant4);
+        let q8 = checkpoint_bytes_per_param(OptKind::AdamW,
+                                            Variant::OptQuant);
+        let flash = checkpoint_bytes_per_param(OptKind::AdamW,
+                                               Variant::Flash);
+        assert!(q4 < flash && q4 < q8, "{q4} vs {flash}/{q8}");
+        assert_eq!(q4, 4.125);
+        let m84 = checkpoint_bytes_per_param(OptKind::AdamW,
+                                             Variant::Mixed84);
+        assert_eq!(m84, 4.625);
+        assert!(q4 < m84 && m84 < flash);
     }
 
     #[test]

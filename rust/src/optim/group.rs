@@ -556,7 +556,7 @@ impl FlashOptimizer {
     /// sequential backend the flag is kept but every path routes
     /// exactly as before (graceful fallback).  Bit-exactness is
     /// unaffected either way — pinned by
-    /// `rust/tests/backend_equivalence.rs` for all 15 pairs.
+    /// `rust/tests/backend_equivalence.rs` for all 21 pairs.
     ///
     /// [`ParallelBackend::step_parts_sharded`]:
     /// crate::backend::ParallelBackend::step_parts_sharded

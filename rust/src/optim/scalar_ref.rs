@@ -6,7 +6,7 @@
 //! capture in the Figure-4 NMSE bench.
 
 use crate::config::{OptKind, Variant};
-use crate::formats::{companding, weight_split};
+use crate::formats::{companding, quant4, weight_split};
 use crate::optim::hyper::{Hyper, StepScalars};
 use crate::optim::state::State;
 
@@ -94,20 +94,30 @@ pub fn step_state(state: &mut State, g: &[f32], opt: OptKind,
         state.theta = Some(theta);
     }
     if variant.quantizes_state() {
-        let (mq, ms) = (state.mq.as_mut().unwrap(),
-                        state.ms.as_mut().unwrap());
-        if nocompand {
-            companding::quant_momentum_linear(&m, mq, ms);
+        let ms = state.ms.as_mut().unwrap();
+        if variant.momentum_4bit() {
+            let mq4 = state.mq4.as_mut().unwrap();
+            quant4::quant_momentum4(&m, mq4, ms);
         } else {
-            companding::quant_momentum(&m, mq, ms);
+            let mq = state.mq.as_mut().unwrap();
+            if nocompand {
+                companding::quant_momentum_linear(&m, mq, ms);
+            } else {
+                companding::quant_momentum(&m, mq, ms);
+            }
         }
         if opt.has_variance() {
-            let (vq, vs) = (state.vq.as_mut().unwrap(),
-                            state.vs.as_mut().unwrap());
-            if nocompand {
-                companding::quant_variance_linear(&v, vq, vs);
+            let vs = state.vs.as_mut().unwrap();
+            if variant.variance_4bit() {
+                let vq4 = state.vq4.as_mut().unwrap();
+                quant4::quant_variance4(&v, vq4, vs);
             } else {
-                companding::quant_variance(&v, vq, vs);
+                let vq = state.vq.as_mut().unwrap();
+                if nocompand {
+                    companding::quant_variance_linear(&v, vq, vs);
+                } else {
+                    companding::quant_variance(&v, vq, vs);
+                }
             }
         }
     } else {
@@ -200,7 +210,8 @@ mod tests {
         for opt in [OptKind::Sgd, OptKind::AdamW, OptKind::Lion] {
             for variant in [Variant::Reference, Variant::Flash,
                             Variant::WeightSplit, Variant::OptQuant,
-                            Variant::NoCompand] {
+                            Variant::NoCompand, Variant::Quant4,
+                            Variant::Mixed84] {
                 let mut st = State::init(&theta0, n, opt, variant);
                 step_state(&mut st, &g, opt, variant, &hyp(1));
                 st.validate().unwrap();

@@ -6,7 +6,7 @@
 //! f16 bits for group scales, f32 only where the variant calls for it.
 
 use crate::config::{OptKind, Variant};
-use crate::formats::{companding, weight_split, GROUP};
+use crate::formats::{companding, quant4, weight_split, GROUP};
 use crate::memory::tracker::{Category, Tracker};
 
 /// All optional buffers; which are present depends on (opt, variant).
@@ -26,6 +26,12 @@ pub struct State {
     pub ms: Option<Vec<u16>>,
     pub vq: Option<Vec<u8>>,
     pub vs: Option<Vec<u16>>,
+    /// nibble-packed 4-bit momentum codes (two per byte, len n/2);
+    /// scales live in `ms` just like the 8-bit layout
+    pub mq4: Option<Vec<u8>>,
+    /// nibble-packed 4-bit variance codes (two per byte, len n/2);
+    /// scales live in `vs`
+    pub vq4: Option<Vec<u8>>,
 }
 
 impl State {
@@ -56,25 +62,39 @@ impl State {
         }
 
         if variant.quantizes_state() {
-            let mut mq = vec![0i8; n];
             let mut ms = vec![0u16; n / GROUP];
-            if variant == Variant::NoCompand {
-                companding::quant_momentum_linear(&zeros, &mut mq, &mut ms);
+            if variant.momentum_4bit() {
+                let mut mq4 = vec![0u8; n / 2];
+                quant4::quant_momentum4(&zeros, &mut mq4, &mut ms);
+                st.mq4 = Some(mq4);
             } else {
-                companding::quant_momentum(&zeros, &mut mq, &mut ms);
+                let mut mq = vec![0i8; n];
+                if variant == Variant::NoCompand {
+                    companding::quant_momentum_linear(&zeros, &mut mq,
+                                                      &mut ms);
+                } else {
+                    companding::quant_momentum(&zeros, &mut mq, &mut ms);
+                }
+                st.mq = Some(mq);
             }
-            st.mq = Some(mq);
             st.ms = Some(ms);
             if opt.has_variance() {
-                let mut vq = vec![0u8; n];
                 let mut vs = vec![0u16; n / GROUP];
-                if variant == Variant::NoCompand {
-                    companding::quant_variance_linear(&zeros, &mut vq,
-                                                      &mut vs);
+                if variant.variance_4bit() {
+                    let mut vq4 = vec![0u8; n / 2];
+                    quant4::quant_variance4(&zeros, &mut vq4, &mut vs);
+                    st.vq4 = Some(vq4);
                 } else {
-                    companding::quant_variance(&zeros, &mut vq, &mut vs);
+                    let mut vq = vec![0u8; n];
+                    if variant == Variant::NoCompand {
+                        companding::quant_variance_linear(&zeros, &mut vq,
+                                                          &mut vs);
+                    } else {
+                        companding::quant_variance(&zeros, &mut vq,
+                                                   &mut vs);
+                    }
+                    st.vq = Some(vq);
                 }
-                st.vq = Some(vq);
                 st.vs = Some(vs);
             }
         } else {
@@ -104,6 +124,12 @@ impl State {
         if let Some(m) = &self.m {
             return Some(m.clone());
         }
+        if let Some(mq4) = &self.mq4 {
+            let ms = self.ms.as_ref()?;
+            let mut out = vec![0f32; self.n];
+            quant4::dequant_momentum4(mq4, ms, &mut out);
+            return Some(out);
+        }
         let (mq, ms) = (self.mq.as_ref()?, self.ms.as_ref()?);
         let mut out = vec![0f32; self.n];
         if nocompand {
@@ -118,6 +144,12 @@ impl State {
     pub fn variance_f32(&self, nocompand: bool) -> Option<Vec<f32>> {
         if let Some(v) = &self.v {
             return Some(v.clone());
+        }
+        if let Some(vq4) = &self.vq4 {
+            let vs = self.vs.as_ref()?;
+            let mut out = vec![0f32; self.n];
+            quant4::dequant_variance4(vq4, vs, &mut out);
+            return Some(out);
         }
         let (vq, vs) = (self.vq.as_ref()?, self.vs.as_ref()?);
         let mut out = vec![0f32; self.n];
@@ -159,6 +191,12 @@ impl State {
         if let Some(v) = &self.vs {
             b += (v.len() * 2) as u64;
         }
+        if let Some(v) = &self.mq4 {
+            b += v.len() as u64;
+        }
+        if let Some(v) = &self.vq4 {
+            b += v.len() as u64;
+        }
         b
     }
 
@@ -195,11 +233,17 @@ impl State {
         if self.theta_p.is_some() != self.rho.is_some() {
             return Err("theta_p and rho must come together".into());
         }
-        if self.mq.is_some() != self.ms.is_some() {
-            return Err("mq and ms must come together".into());
+        if self.mq.is_some() && self.mq4.is_some() {
+            return Err("mq and mq4 are mutually exclusive".into());
         }
-        if self.vq.is_some() != self.vs.is_some() {
-            return Err("vq and vs must come together".into());
+        if self.vq.is_some() && self.vq4.is_some() {
+            return Err("vq and vq4 are mutually exclusive".into());
+        }
+        if (self.mq.is_some() || self.mq4.is_some()) != self.ms.is_some() {
+            return Err("momentum codes and ms must come together".into());
+        }
+        if (self.vq.is_some() || self.vq4.is_some()) != self.vs.is_some() {
+            return Err("variance codes and vs must come together".into());
         }
         let check = |len: usize, what: &str| -> Result<(), String> {
             if len != self.n {
@@ -231,6 +275,16 @@ impl State {
         if let Some(v) = &self.vs {
             if v.len() != self.n / GROUP {
                 return Err("vs length mismatch".into());
+            }
+        }
+        if let Some(v) = &self.mq4 {
+            if v.len() != self.n / 2 {
+                return Err("mq4 must be nibble-packed (n/2 bytes)".into());
+            }
+        }
+        if let Some(v) = &self.vq4 {
+            if v.len() != self.n / 2 {
+                return Err("vq4 must be nibble-packed (n/2 bytes)".into());
             }
         }
         Ok(())
@@ -268,6 +322,57 @@ mod tests {
         assert!(st.theta_p.is_none());
         let bpp = st.bytes() as f64 / 128.0;
         assert_eq!(bpp, 12.0); // 4 + 4 + 4 persistent
+    }
+
+    #[test]
+    fn init_quant4_adamw_buffers() {
+        let st = State::init(&theta(100, 1), 128, OptKind::AdamW,
+                             Variant::Quant4);
+        assert!(st.theta.is_none());
+        assert!(st.theta_p.is_some() && st.rho.is_some());
+        assert!(st.mq.is_none() && st.vq.is_none());
+        assert!(st.mq4.is_some() && st.vq4.is_some());
+        assert!(st.ms.is_some() && st.vs.is_some());
+        st.validate().unwrap();
+        // bytes/param = 2 + 1 + 0.5 + 0.5 + 2*(2/32) = 4.125
+        let bpp = st.bytes() as f64 / 128.0;
+        assert!((bpp - 4.125).abs() < 1e-9, "{bpp}");
+    }
+
+    #[test]
+    fn init_mixed84_adamw_buffers() {
+        let st = State::init(&theta(100, 1), 128, OptKind::AdamW,
+                             Variant::Mixed84);
+        assert!(st.mq.is_some() && st.mq4.is_none(), "momentum stays 8-bit");
+        assert!(st.vq.is_none() && st.vq4.is_some(), "variance is 4-bit");
+        st.validate().unwrap();
+        // bytes/param = 2 + 1 + 1 + 0.5 + 2*(2/32) = 4.625
+        let bpp = st.bytes() as f64 / 128.0;
+        assert!((bpp - 4.625).abs() < 1e-9, "{bpp}");
+    }
+
+    #[test]
+    fn quant4_initial_states_are_zero() {
+        for variant in [Variant::Quant4, Variant::Mixed84] {
+            let st = State::init(&theta(64, 6), 64, OptKind::AdamW,
+                                 variant);
+            assert!(st.momentum_f32(false).unwrap()
+                    .iter().all(|&x| x == 0.0));
+            assert!(st.variance_f32(false).unwrap()
+                    .iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn validate_rejects_mixed_code_widths() {
+        let mut st = State::init(&theta(64, 8), 64, OptKind::AdamW,
+                                 Variant::Quant4);
+        st.mq = Some(vec![0i8; 64]);
+        assert!(st.validate().is_err());
+        let mut st = State::init(&theta(64, 9), 64, OptKind::AdamW,
+                                 Variant::Quant4);
+        st.mq4 = Some(vec![0u8; 64]); // unpacked length
+        assert!(st.validate().is_err());
     }
 
     #[test]

@@ -29,34 +29,42 @@ use flashtrain::optim::{scalar_ref, BucketOptimizer, FlashOptimizer,
 
 const ALL_OPTS: [OptKind; 3] =
     [OptKind::Sgd, OptKind::AdamW, OptKind::Lion];
-const ALL_VARIANTS: [Variant; 5] = [
+const ALL_VARIANTS: [Variant; 7] = [
     Variant::Reference,
     Variant::Flash,
     Variant::WeightSplit,
     Variant::OptQuant,
     Variant::NoCompand,
+    Variant::Quant4,
+    Variant::Mixed84,
 ];
 
 /// The pair universe of the shard-owner differential axis
 /// (`sharded_mode_matches_batch_all_pairs` below) — `flashoptim-analyze`
 /// A3 pins this list against the kernel registry, so a pair dropped
 /// here cannot silently shrink sharded coverage.
-const SHARDED_PAIRS: [(OptKind, Variant); 15] = [
+const SHARDED_PAIRS: [(OptKind, Variant); 21] = [
     (OptKind::Sgd, Variant::Reference),
     (OptKind::Sgd, Variant::Flash),
     (OptKind::Sgd, Variant::WeightSplit),
     (OptKind::Sgd, Variant::OptQuant),
     (OptKind::Sgd, Variant::NoCompand),
+    (OptKind::Sgd, Variant::Quant4),
+    (OptKind::Sgd, Variant::Mixed84),
     (OptKind::AdamW, Variant::Reference),
     (OptKind::AdamW, Variant::Flash),
     (OptKind::AdamW, Variant::WeightSplit),
     (OptKind::AdamW, Variant::OptQuant),
     (OptKind::AdamW, Variant::NoCompand),
+    (OptKind::AdamW, Variant::Quant4),
+    (OptKind::AdamW, Variant::Mixed84),
     (OptKind::Lion, Variant::Reference),
     (OptKind::Lion, Variant::Flash),
     (OptKind::Lion, Variant::WeightSplit),
     (OptKind::Lion, Variant::OptQuant),
     (OptKind::Lion, Variant::NoCompand),
+    (OptKind::Lion, Variant::Quant4),
+    (OptKind::Lion, Variant::Mixed84),
 ];
 
 fn randn(rng: &mut flashtrain::util::rng::Rng, n: usize, s: f32)
@@ -89,6 +97,8 @@ fn assert_states_bit_equal(a: &State, b: &State, what: &str) {
     assert_eq!(a.ms, b.ms, "{what}: ms");
     assert_eq!(a.vq, b.vq, "{what}: vq");
     assert_eq!(a.vs, b.vs, "{what}: vs");
+    assert_eq!(a.mq4, b.mq4, "{what}: mq4");
+    assert_eq!(a.vq4, b.vq4, "{what}: vq4");
     for (name, x, y) in [("theta", &a.theta, &b.theta),
                          ("m", &a.m, &b.m), ("v", &a.v, &b.v)] {
         match (x, y) {
@@ -137,7 +147,7 @@ fn parallel_matches_scalar_all_pairs_and_seeds() {
 }
 
 /// The tiled kernel-layer backends == the legacy whole-buffer scalar
-/// mirror, for every kernel set, all 15 pairs, multiple seeds, on a
+/// mirror, for every kernel set, all 21 pairs, multiple seeds, on a
 /// state large enough to cross several TILE boundaries (incl. a
 /// partial trailing tile).
 #[test]
@@ -195,7 +205,7 @@ fn backends_match_legacy_scalar_ref_all_kernel_sets() {
 }
 
 /// The fused single-pass fast path (the default) == the tiled
-/// three-pass mirror, all 15 pairs, multi-step — every pair now
+/// three-pass mirror, all 21 pairs, multi-step — every pair now
 /// exercises a register-resident kernel on the fused side (coverage
 /// is total, fp32-resident layouts included).
 #[test]
@@ -577,7 +587,7 @@ fn sharded_specs(n: usize) -> Vec<GroupSpec> {
 }
 
 /// Shard-owner execution (`shard_state = true`) == the batched path,
-/// bit for bit: all 15 pairs, several thread counts, both kernel sets,
+/// bit for bit: all 21 pairs, several thread counts, both kernel sets,
 /// fused and forced-tiled.  Compares the full state dict and the
 /// assembled compute weights after a 4-step trajectory — the stable
 /// owner partition and the fused shard-local reduce must be invisible.

@@ -13,22 +13,28 @@ use flashtrain::formats::GROUP;
 use flashtrain::optim::{GroupState, State, StateDict};
 use flashtrain::util::rng::Rng;
 
-const ALL_PAIRS: [(OptKind, Variant); 15] = [
+const ALL_PAIRS: [(OptKind, Variant); 21] = [
     (OptKind::Sgd, Variant::Reference),
     (OptKind::Sgd, Variant::Flash),
     (OptKind::Sgd, Variant::WeightSplit),
     (OptKind::Sgd, Variant::OptQuant),
     (OptKind::Sgd, Variant::NoCompand),
+    (OptKind::Sgd, Variant::Quant4),
+    (OptKind::Sgd, Variant::Mixed84),
     (OptKind::AdamW, Variant::Reference),
     (OptKind::AdamW, Variant::Flash),
     (OptKind::AdamW, Variant::WeightSplit),
     (OptKind::AdamW, Variant::OptQuant),
     (OptKind::AdamW, Variant::NoCompand),
+    (OptKind::AdamW, Variant::Quant4),
+    (OptKind::AdamW, Variant::Mixed84),
     (OptKind::Lion, Variant::Reference),
     (OptKind::Lion, Variant::Flash),
     (OptKind::Lion, Variant::WeightSplit),
     (OptKind::Lion, Variant::OptQuant),
     (OptKind::Lion, Variant::NoCompand),
+    (OptKind::Lion, Variant::Quant4),
+    (OptKind::Lion, Variant::Mixed84),
 ];
 
 fn tmp(name: &str) -> PathBuf {
@@ -84,6 +90,8 @@ fn assert_states_bit_equal(x: &State, y: &State, what: &str) {
     assert_eq!(x.ms, y.ms, "{what} ms");
     assert_eq!(x.vq, y.vq, "{what} vq");
     assert_eq!(x.vs, y.vs, "{what} vs");
+    assert_eq!(x.mq4, y.mq4, "{what} mq4");
+    assert_eq!(x.vq4, y.vq4, "{what} vq4");
     let eq_f32 = |p: &Option<Vec<f32>>, q: &Option<Vec<f32>>| match (p, q) {
         (Some(p), Some(q)) => {
             p.iter().zip(q).all(|(s, t)| s.to_bits() == t.to_bits())
@@ -204,6 +212,77 @@ fn per_section_corruption_injection_detected() {
         );
     }
     // the pristine file still loads after all that
+    std::fs::write(&path, &clean).unwrap();
+    checkpoint::load_state_dict(&path).unwrap();
+    std::fs::remove_file(path).ok();
+}
+
+/// The nibble-packed 4-bit sections (tags 9/10) round-trip through
+/// v2 and are individually CRC-protected: a flipped bit in any
+/// mq4/vq4 payload is caught by both loaders, and the packed section
+/// is half the byte size of its 8-bit counterpart.
+#[test]
+fn nibble_packed_sections_roundtrip_and_detect_corruption() {
+    let sd = demo_dict(OptKind::AdamW, Variant::Quant4, 421);
+    let path = tmp("nibble");
+    checkpoint::save_state_dict(&path, &sd).unwrap();
+    let clean = std::fs::read(&path).unwrap();
+
+    // locate the 4-bit sections by tag (Mq4U8 = 9, Vq4U8 = 10): one of
+    // each per group, with exactly n/2 payload bytes
+    let regions = v2_regions(&clean);
+    let nibble: Vec<_> = regions
+        .iter()
+        .filter(|(label, _, _)| {
+            label.ends_with("tag9") || label.ends_with("tag10")
+        })
+        .collect();
+    assert_eq!(nibble.len(), 2 * sd.groups.len(),
+               "one mq4 and one vq4 section per group");
+    for (gs, pair) in sd.groups.iter().zip(nibble.chunks(2)) {
+        for (label, _, len) in pair {
+            assert_eq!(*len, gs.state.n / 2,
+                       "{label}: packed section must be n/2 bytes");
+        }
+    }
+
+    // clean round-trip, both loaders
+    let pool = WorkerPool::new(2).unwrap();
+    for sd2 in [checkpoint::load_state_dict(&path).unwrap(),
+                checkpoint::load_state_dict_sharded(&path, &pool)
+                    .unwrap()] {
+        assert_eq!(sd2.variant, Variant::Quant4);
+        for (a, b) in sd.groups.iter().zip(&sd2.groups) {
+            assert!(b.state.mq4.is_some() && b.state.vq4.is_some(),
+                    "{}: 4-bit buffers must survive the round trip",
+                    a.name);
+            assert_states_bit_equal(&a.state, &b.state,
+                                    &format!("quant4 rt {}", a.name));
+        }
+    }
+
+    // flip one bit in every nibble-packed payload: both loaders fail
+    for (label, off, len) in &nibble {
+        let mut bytes = clean.clone();
+        bytes[off + len / 2] ^= 0x04;
+        std::fs::write(&path, &bytes).unwrap();
+        for loader in ["serial", "sharded"] {
+            let res = if loader == "serial" {
+                checkpoint::load_state_dict(&path).map(|_| ())
+            } else {
+                checkpoint::load_state_dict_sharded(&path, &pool)
+                    .map(|_| ())
+            };
+            let err = match res {
+                Err(e) => format!("{e:#}"),
+                Ok(()) => panic!(
+                    "corruption in {label} undetected by the {loader} \
+                     loader"),
+            };
+            assert!(err.contains("crc") || err.contains("corrupt"),
+                    "{label}/{loader}: unexpected error {err}");
+        }
+    }
     std::fs::write(&path, &clean).unwrap();
     checkpoint::load_state_dict(&path).unwrap();
     std::fs::remove_file(path).ok();

@@ -1,7 +1,9 @@
-// A3 negative fixture: a fuzz universe that dropped Lion.  Scanned
-// as text under the synthetic path rust/tests/fused_fuzz.rs.
+// A3 negative fixture: a fuzz universe frozen at the pre-4-bit
+// 15-pair world (no Quant4 / Mixed84).  Scanned as text under the
+// synthetic path rust/tests/fused_fuzz.rs.
 
-const ALL_OPTS: [OptKind; 2] = [OptKind::Sgd, OptKind::AdamW];
+const ALL_OPTS: [OptKind; 3] =
+    [OptKind::Sgd, OptKind::AdamW, OptKind::Lion];
 const ALL_VARIANTS: [Variant; 5] = [
     Variant::Reference,
     Variant::Flash,

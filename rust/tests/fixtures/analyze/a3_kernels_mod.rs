@@ -1,6 +1,6 @@
 // A3 negative fixture: a KernelSet whose fused coverage dropped
-// (Lion, OptQuant) and grew an unmappable field, with a fused_step
-// match that also lost the (Lion, OptQuant) arm.  Scanned as text
+// (Lion, Quant4) and grew an unmappable field, with a fused_step
+// match that also lost the (Lion, Quant4) arm.  Scanned as text
 // under the synthetic path rust/src/kernels/mod.rs.
 
 pub struct KernelSet {
@@ -18,6 +18,12 @@ pub struct KernelSet {
     pub fused_step_lion_wsplit: FusedFn,
     pub fused_step_adamw_quant: FusedFn,
     pub fused_step_sgdm_quant: FusedFn,
+    pub fused_step_lion_quant: FusedFn,
+    pub fused_step_adamw_quant4: FusedFn,
+    pub fused_step_sgdm_quant4: FusedFn,
+    pub fused_step_adamw_mixed84: FusedFn,
+    pub fused_step_sgdm_mixed84: FusedFn,
+    pub fused_step_lion_mixed84: FusedFn,
     pub fused_step_rmsprop: FusedFn,
 }
 
@@ -38,6 +44,12 @@ impl KernelSet {
             (OptKind::Lion, Variant::WeightSplit) => todo(),
             (OptKind::AdamW, Variant::OptQuant) => todo(),
             (OptKind::Sgd, Variant::OptQuant) => todo(),
+            (OptKind::Lion, Variant::OptQuant) => todo(),
+            (OptKind::AdamW, Variant::Quant4) => todo(),
+            (OptKind::Sgd, Variant::Quant4) => todo(),
+            (OptKind::AdamW, Variant::Mixed84) => todo(),
+            (OptKind::Sgd, Variant::Mixed84) => todo(),
+            (OptKind::Lion, Variant::Mixed84) => todo(),
         }
     }
 }

@@ -1,19 +1,25 @@
-// A3 negative fixture: a sharded pair table that dropped two pairs.
-// Scanned as text under the synthetic path
+// A3 negative fixture: a sharded pair table that dropped two pairs —
+// one legacy, one 4-bit.  Scanned as text under the synthetic path
 // rust/tests/backend_equivalence.rs.
 
-const SHARDED_PAIRS: [(OptKind, Variant); 13] = [
+const SHARDED_PAIRS: [(OptKind, Variant); 19] = [
     (OptKind::Sgd, Variant::Flash),
     (OptKind::Sgd, Variant::WeightSplit),
     (OptKind::Sgd, Variant::OptQuant),
     (OptKind::Sgd, Variant::NoCompand),
+    (OptKind::Sgd, Variant::Quant4),
+    (OptKind::Sgd, Variant::Mixed84),
     (OptKind::AdamW, Variant::Reference),
     (OptKind::AdamW, Variant::Flash),
     (OptKind::AdamW, Variant::WeightSplit),
     (OptKind::AdamW, Variant::OptQuant),
     (OptKind::AdamW, Variant::NoCompand),
+    (OptKind::AdamW, Variant::Quant4),
+    (OptKind::AdamW, Variant::Mixed84),
     (OptKind::Lion, Variant::Reference),
     (OptKind::Lion, Variant::Flash),
     (OptKind::Lion, Variant::WeightSplit),
     (OptKind::Lion, Variant::OptQuant),
+    (OptKind::Lion, Variant::NoCompand),
+    (OptKind::Lion, Variant::Quant4),
 ];

@@ -2,8 +2,8 @@
 //! using the in-house `util::prop` harness.
 
 use flashtrain::formats::baselines::{roundtrip, Scheme};
-use flashtrain::formats::{bf16, companding, fp16, weight_split,
-                          Correction, Target, GROUP};
+use flashtrain::formats::{bf16, companding, fp16, quant4,
+                          weight_split, Correction, Target, GROUP};
 use flashtrain::util::prop::{forall, FloatVec};
 
 #[test]
@@ -268,6 +268,173 @@ fn prop_phi_roundtrip_monotone() {
         }
         Ok(())
     });
+}
+
+// --- 4-bit nibble-packed codecs (quant4 / mixed84) -----------------------
+
+/// 4-bit momentum round-trip error stays under the documented
+/// **0.15 × absmax** bound (z-grid step 1/7, |dφ_m⁻¹/dz| ≤ 2) on
+/// every non-degenerate group.
+#[test]
+fn prop_quant4_momentum_error_fraction_of_absmax() {
+    let gen = FloatVec { min_len: GROUP, max_len: GROUP * 16,
+                         lo_exp: -10.0, hi_exp: 4.0, multiple: GROUP };
+    forall(31, 200, &gen, |v| {
+        let n = v.len();
+        let mut q = vec![0u8; quant4::packed_len(n)];
+        let mut s = vec![0u16; n / GROUP];
+        quant4::quant_momentum4(v, &mut q, &mut s);
+        let mut out = vec![0f32; n];
+        quant4::dequant_momentum4(&q, &s, &mut out);
+        for (g, og) in v.chunks_exact(GROUP).zip(out.chunks_exact(GROUP)) {
+            let absmax = g.iter().fold(0f32, |a, &b| a.max(b.abs()));
+            if absmax == 0.0 || !absmax.is_finite()
+                || fp16::round_f32_to_f16(absmax) == 0.0
+                || fp16::round_f32_to_f16(absmax).is_infinite()
+            {
+                continue; // degenerate groups (f16 scale under/overflow)
+            }
+            for (a, b) in g.iter().zip(og) {
+                if (a - b).abs() / absmax > 0.15 {
+                    return Err(format!("err {} absmax {absmax}",
+                                       (a - b).abs()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// 4-bit variance round-trip: decoded values are nonnegative and
+/// within the documented **0.07 × absmax** bound (sqrt-domain grid
+/// step 1/15) on every non-degenerate group.
+#[test]
+fn prop_quant4_variance_nonneg_and_bounded() {
+    let gen = FloatVec { min_len: GROUP, max_len: GROUP * 8,
+                         lo_exp: -16.0, hi_exp: 2.0, multiple: GROUP };
+    forall(32, 200, &gen, |v| {
+        let sq: Vec<f32> = v.iter().map(|x| x * x).collect();
+        let n = sq.len();
+        let mut q = vec![0u8; quant4::packed_len(n)];
+        let mut s = vec![0u16; n / GROUP];
+        quant4::quant_variance4(&sq, &mut q, &mut s);
+        let mut out = vec![0f32; n];
+        quant4::dequant_variance4(&q, &s, &mut out);
+        for (g, og) in sq.chunks_exact(GROUP).zip(out.chunks_exact(GROUP)) {
+            let vmax = g.iter().fold(0f32, |a, &b| a.max(b));
+            if vmax == 0.0 || !vmax.is_finite()
+                || fp16::round_f32_to_f16(vmax.sqrt()) == 0.0
+                || fp16::round_f32_to_f16(vmax.sqrt()).is_infinite()
+            {
+                continue;
+            }
+            for (a, b) in g.iter().zip(og) {
+                if *b < 0.0 {
+                    return Err("negative variance".into());
+                }
+                if (a - b).abs() / vmax > 0.07 {
+                    return Err(format!("err {} vmax {vmax}",
+                                       (a - b).abs()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The 4-bit curve is monotone end to end: a sorted group quantizes
+/// to non-decreasing codes and dequantizes to non-decreasing values
+/// (the code table is strictly monotone, so ordering survives the
+/// round trip exactly — no slack needed).
+#[test]
+fn prop_quant4_roundtrip_monotone_within_group() {
+    let gen = FloatVec { min_len: GROUP, max_len: GROUP * 4,
+                         lo_exp: -12.0, hi_exp: 6.0, multiple: GROUP };
+    forall(33, 200, &gen, |v| {
+        let mut g: Vec<f32> = v[..GROUP]
+            .iter()
+            .map(|&x| if x.is_finite() { x } else { 0.0 })
+            .collect();
+        g.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut q = vec![0u8; GROUP / 2];
+        let mut s = vec![0u16; 1];
+        quant4::quant_momentum4(&g, &mut q, &mut s);
+        let mut out = vec![0f32; GROUP];
+        quant4::dequant_momentum4(&q, &s, &mut out);
+        for w in out.windows(2) {
+            if w[1] < w[0] {
+                return Err(format!(
+                    "momentum decode not monotone: {} < {}", w[1], w[0]));
+            }
+        }
+        // sqrt-domain path on the sorted squares (still sorted after
+        // mapping |x| -> x², so re-sort the absolute values first)
+        let mut sq: Vec<f32> = g.iter().map(|x| x * x).collect();
+        sq.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        quant4::quant_variance4(&sq, &mut q, &mut s);
+        quant4::dequant_variance4(&q, &s, &mut out);
+        for w in out.windows(2) {
+            if w[1] < w[0] {
+                return Err(format!(
+                    "variance decode not monotone: {} < {}", w[1], w[0]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Nibble pack/unpack round-trips at every length, odd tails
+/// included; the dangling high nibble of an odd tail is always zero.
+#[test]
+fn prop_quant4_pack_roundtrip_any_length() {
+    let gen = FloatVec { min_len: 1, max_len: 257, lo_exp: -20.0,
+                         hi_exp: 20.0, multiple: 1 };
+    forall(34, 300, &gen, |v| {
+        let nibbles: Vec<u8> =
+            v.iter().map(|x| (x.to_bits() & 0xF) as u8).collect();
+        let n = nibbles.len();
+        let mut packed = vec![0u8; quant4::packed_len(n)];
+        quant4::pack_nibbles(&nibbles, &mut packed);
+        if n % 2 == 1 && packed[n / 2] >> 4 != 0 {
+            return Err("odd-tail high nibble not zero".into());
+        }
+        let mut out = vec![0xFFu8; n];
+        quant4::unpack_nibbles(&packed, &mut out);
+        if out != nibbles {
+            return Err(format!("pack/unpack mismatch at n={n}"));
+        }
+        Ok(())
+    });
+}
+
+// slice-contract coverage: the quant4 entry points reject misshapen
+// buffers loudly (complementing the dequant-side checks in the unit
+// tests)
+
+#[test]
+#[should_panic(expected = "two 4-bit codes per byte")]
+fn quant_momentum4_rejects_unpacked_len() {
+    let m = vec![0f32; GROUP];
+    let mut q = vec![0u8; GROUP]; // full-byte buffer: twice too long
+    let mut s = vec![0u16; 1];
+    quant4::quant_momentum4(&m, &mut q, &mut s);
+}
+
+#[test]
+#[should_panic]
+fn quant_momentum4_rejects_unaligned_len() {
+    let m = vec![0f32; GROUP + 1];
+    let mut q = vec![0u8; quant4::packed_len(GROUP + 1)];
+    let mut s = vec![0u16; 1];
+    quant4::quant_momentum4(&m, &mut q, &mut s);
+}
+
+#[test]
+#[should_panic(expected = "ceil(n/2)")]
+fn unpack_nibbles_rejects_wrong_packed_len() {
+    let packed = vec![0u8; 2];
+    let mut out = vec![0u8; 5]; // needs 3 packed bytes
+    quant4::unpack_nibbles(&packed, &mut out);
 }
 
 #[test]

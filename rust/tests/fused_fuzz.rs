@@ -16,9 +16,10 @@
 //! after every step.  A quarter of the cases additionally run the
 //! fused path on the thread-parallel backend.
 //!
-//! Pair coverage is the **full 15-pair universe** (3 optimizers × 5
+//! Pair coverage is the **full 21-pair universe** (3 optimizers × 7
 //! variants — the fused kernels cover every pair since the
-//! fp32-resident layouts fused): the first 15 cases enumerate the
+//! fp32-resident layouts fused, the nibble-packed `quant4`/`mixed84`
+//! layouts included): the first 21 cases enumerate the
 //! pairs round-robin so every pair is *deterministically* exercised
 //! through fused, tiled, and scalar mirrors whenever the budget allows
 //! it, and the remaining budget draws pairs uniformly.  A distribution
@@ -32,7 +33,7 @@
 //! counts, multi-group splits and 1–4 steps under the same injection
 //! machinery, asserting a bit-exact final state — the paper's
 //! 5-bytes/param mode must never buy its memory back with drift.  Its
-//! deterministic prefix covers streaming on all 15 pairs.
+//! deterministic prefix covers streaming on all 21 pairs.
 //!
 //! A third leg (`sharded_vs_batch_differential_fuzz`) turns on
 //! shard-owner execution (`shard_state`) and drives it against the
@@ -41,7 +42,7 @@
 //! splits, unaligned counts/buckets, plus the sequential no-op
 //! fallback — the stable owner partition and the fused shard-local
 //! reduce must be invisible in the bits.  Its deterministic prefix
-//! covers sharding on all 15 pairs.
+//! covers sharding on all 21 pairs.
 //!
 //! Determinism: the case stream derives from one seed
 //! (`FUSED_FUZZ_SEED`, default `0xF5ED`), so a CI failure names a case
@@ -63,12 +64,14 @@ use flashtrain::util::rng::Rng;
 
 const ALL_OPTS: [OptKind; 3] =
     [OptKind::Sgd, OptKind::AdamW, OptKind::Lion];
-const ALL_VARIANTS: [Variant; 5] = [
+const ALL_VARIANTS: [Variant; 7] = [
     Variant::Reference,
     Variant::Flash,
     Variant::WeightSplit,
     Variant::OptQuant,
     Variant::NoCompand,
+    Variant::Quant4,
+    Variant::Mixed84,
 ];
 
 fn env_u64(name: &str, default: u64) -> u64 {
@@ -282,6 +285,8 @@ fn assert_states_bit_equal(a: &State, b: &State, what: &str) {
     assert_eq!(a.ms, b.ms, "{what}: ms");
     assert_eq!(a.vq, b.vq, "{what}: vq");
     assert_eq!(a.vs, b.vs, "{what}: vs");
+    assert_eq!(a.mq4, b.mq4, "{what}: mq4");
+    assert_eq!(a.vq4, b.vq4, "{what}: vq4");
     for (name, x, y) in [("theta", &a.theta, &b.theta),
                          ("m", &a.m, &b.m), ("v", &a.v, &b.v)] {
         match (x, y) {
@@ -315,7 +320,7 @@ fn fused_vs_tiled_vs_scalar_ref_differential_fuzz() {
         .iter()
         .flat_map(|&o| ALL_VARIANTS.iter().map(move |&v| (o, v)))
         .collect();
-    assert_eq!(universe.len(), 15);
+    assert_eq!(universe.len(), 21);
     // every pair resolves a fused kernel on every supported set: the
     // typed binding means a future regression of `fused_step` back to
     // an Option return (the silent-fallback shape) stops this test
@@ -330,14 +335,14 @@ fn fused_vs_tiled_vs_scalar_ref_differential_fuzz() {
     let mut pairs_seen = std::collections::BTreeSet::new();
 
     for case in 0..cases {
-        // first 15 cases: deterministic round-robin over the full
-        // 15-pair universe, so coverage never depends on the draw;
+        // first 21 cases: deterministic round-robin over the full
+        // 21-pair universe, so coverage never depends on the draw;
         // the rest of the budget samples uniformly
         let (opt, variant) = if case < universe.len() {
             universe[case]
         } else {
             (ALL_OPTS[rng.below(3) as usize],
-             ALL_VARIANTS[rng.below(5) as usize])
+             ALL_VARIANTS[rng.below(7) as usize])
         };
         pairs_seen.insert((opt.name(), variant.name()));
         let n = gen_len(&mut rng);
@@ -401,8 +406,8 @@ fn fused_vs_tiled_vs_scalar_ref_differential_fuzz() {
         }
     }
     // coverage guard over the *actual* case stream: the round-robin
-    // prefix makes full 15-pair coverage deterministic for any budget
-    // of at least 15 cases, so anything short of the complete universe
+    // prefix makes full 21-pair coverage deterministic for any budget
+    // of at least 21 cases, so anything short of the complete universe
     // is a loud failure, not a silently shrunk fuzz surface
     assert!(cases < universe.len()
                 || pairs_seen.len() == universe.len(),
@@ -412,7 +417,7 @@ fn fused_vs_tiled_vs_scalar_ref_differential_fuzz() {
             pairs_seen.len(), universe.len());
     println!(
         "fused_fuzz: {cases} cases OK (seed {seed}, {} kernel sets, \
-         {}/15 pairs, all fused-covered)",
+         {}/21 pairs, all fused-covered)",
         kinds.len(), pairs_seen.len());
 }
 
@@ -429,12 +434,12 @@ fn streaming_vs_batch_differential_fuzz() {
 
     for case in 0..cases {
         // same deterministic-prefix scheme as the fused leg: the first
-        // 15 cases cover streaming on every (optimizer, variant) pair
+        // 21 cases cover streaming on every (optimizer, variant) pair
         let (opt, variant) = if case < universe.len() {
             universe[case]
         } else {
             (ALL_OPTS[rng.below(3) as usize],
-             ALL_VARIANTS[rng.below(5) as usize])
+             ALL_VARIANTS[rng.below(7) as usize])
         };
         pairs_seen.insert((opt.name(), variant.name()));
         let steps = 1 + rng.below(4) as usize;
@@ -563,7 +568,7 @@ fn streaming_vs_batch_differential_fuzz() {
              prefix should have covered every pair",
             pairs_seen.len(), universe.len());
     println!(
-        "streaming_fuzz: {cases} cases OK (seed {seed}, {}/15 pairs)",
+        "streaming_fuzz: {cases} cases OK (seed {seed}, {}/21 pairs)",
         pairs_seen.len());
 }
 
@@ -580,12 +585,12 @@ fn sharded_vs_batch_differential_fuzz() {
 
     for case in 0..cases {
         // same deterministic-prefix scheme as the other legs: the
-        // first 15 cases cover sharding on every (optimizer, variant)
+        // first 21 cases cover sharding on every (optimizer, variant)
         let (opt, variant) = if case < universe.len() {
             universe[case]
         } else {
             (ALL_OPTS[rng.below(3) as usize],
-             ALL_VARIANTS[rng.below(5) as usize])
+             ALL_VARIANTS[rng.below(7) as usize])
         };
         pairs_seen.insert((opt.name(), variant.name()));
         let steps = 1 + rng.below(4) as usize;
@@ -719,6 +724,6 @@ fn sharded_vs_batch_differential_fuzz() {
              prefix should have covered every pair",
             pairs_seen.len(), universe.len());
     println!(
-        "sharded_fuzz: {cases} cases OK (seed {seed}, {}/15 pairs)",
+        "sharded_fuzz: {cases} cases OK (seed {seed}, {}/21 pairs)",
         pairs_seen.len());
 }

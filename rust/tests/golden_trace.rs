@@ -158,6 +158,10 @@ fn run_trace(opt: OptKind, variant: Variant, backend: BackendKind,
                    |x, o| o.push(*x));
         push_bytes(&mut bytes, 9, &st.vs,
                    |x, o| o.extend_from_slice(&x.to_le_bytes()));
+        push_bytes(&mut bytes, 10, &st.mq4,
+                   |x, o| o.push(*x));
+        push_bytes(&mut bytes, 11, &st.vq4,
+                   |x, o| o.push(*x));
     }
     for w in fo.compute_weights_bf16(PARAMS) {
         bytes.extend_from_slice(&w.to_le_bytes());
@@ -258,18 +262,21 @@ fn golden_trace_checksums() {
 /// gradient-release streaming step, and shard-owner execution
 /// (`shard_state`) all produce the same bits — for
 /// **every variant**, the fp32-resident layouts included now that the
-/// fused kernels cover all 15 (optimizer, variant) pairs.  Only the
+/// fused kernels cover all 21 (optimizer, variant) pairs.  Only the
 /// `flash` families are pinned in the golden file; the other variants
-/// are asserted engine-invariant in-process, which is the property the
-/// new coverage must uphold.
+/// (the nibble-packed `quant4`/`mixed84` included) are asserted
+/// engine-invariant in-process, which is the property the new
+/// coverage must uphold.
 #[test]
 fn golden_trace_is_engine_invariant() {
-    const ALL_VARIANTS: [Variant; 5] = [
+    const ALL_VARIANTS: [Variant; 7] = [
         Variant::Reference,
         Variant::Flash,
         Variant::WeightSplit,
         Variant::OptQuant,
         Variant::NoCompand,
+        Variant::Quant4,
+        Variant::Mixed84,
     ];
     for &(opt, name) in &FAMILIES {
         for variant in ALL_VARIANTS {

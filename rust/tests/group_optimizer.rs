@@ -21,22 +21,28 @@ use flashtrain::runtime::artifact::LayoutEntry;
 use flashtrain::runtime::{ModelInfo, ModelKind};
 use flashtrain::util::rng::Rng;
 
-const ALL_PAIRS: [(OptKind, Variant); 15] = [
+const ALL_PAIRS: [(OptKind, Variant); 21] = [
     (OptKind::Sgd, Variant::Reference),
     (OptKind::Sgd, Variant::Flash),
     (OptKind::Sgd, Variant::WeightSplit),
     (OptKind::Sgd, Variant::OptQuant),
     (OptKind::Sgd, Variant::NoCompand),
+    (OptKind::Sgd, Variant::Quant4),
+    (OptKind::Sgd, Variant::Mixed84),
     (OptKind::AdamW, Variant::Reference),
     (OptKind::AdamW, Variant::Flash),
     (OptKind::AdamW, Variant::WeightSplit),
     (OptKind::AdamW, Variant::OptQuant),
     (OptKind::AdamW, Variant::NoCompand),
+    (OptKind::AdamW, Variant::Quant4),
+    (OptKind::AdamW, Variant::Mixed84),
     (OptKind::Lion, Variant::Reference),
     (OptKind::Lion, Variant::Flash),
     (OptKind::Lion, Variant::WeightSplit),
     (OptKind::Lion, Variant::OptQuant),
     (OptKind::Lion, Variant::NoCompand),
+    (OptKind::Lion, Variant::Quant4),
+    (OptKind::Lion, Variant::Mixed84),
 ];
 
 fn randn(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
@@ -63,6 +69,8 @@ fn assert_states_bit_equal(a: &State, b: &State, what: &str) {
     assert_eq!(a.ms, b.ms, "{what} ms");
     assert_eq!(a.vq, b.vq, "{what} vq");
     assert_eq!(a.vs, b.vs, "{what} vs");
+    assert_eq!(a.mq4, b.mq4, "{what} mq4");
+    assert_eq!(a.vq4, b.vq4, "{what} vq4");
     let eq_f32 = |x: &Option<Vec<f32>>, y: &Option<Vec<f32>>| match (x, y) {
         (Some(x), Some(y)) => {
             x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())

@@ -13,12 +13,18 @@
 //!   floats across binades incl. NaN/inf/subnormals;
 //! * adversarial companding groups: all-zero, absmax-saturating
 //!   (f16-scale overflow), denormal-scale, and ±tie-rounding values;
+//! * exhaustive 2^8 packed nibble-pair byte sweep for the 4-bit
+//!   decoders (every (low, high) code combination, signed and
+//!   unsigned, under unit/max/subnormal/zero f16 scales), plus the
+//!   same adversarial companding groups through the `quant4` /
+//!   `mixed84` codecs;
 //! * weight-split compress/decompress over random + special values;
 //! * fused single-pass step kernels driven through the same
 //!   adversarial groups (plus ±inf / NaN weights, NaN/saturating
 //!   gradients, and NaN-producing hypers like negative beta2), over
-//!   the **full 15-pair (optimizer, variant) universe** — the
-//!   fp32-resident layouts `reference`/`wsplit`/`quant` included —
+//!   the **full 21-pair (optimizer, variant) universe** — the
+//!   fp32-resident layouts `reference`/`wsplit`/`quant` and the
+//!   nibble-packed `quant4`/`mixed84` layouts included —
 //!   pinned three ways against the tiled path and the legacy scalar
 //!   mirror on every kernel set.  (Multi-step NaN determinism for the
 //!   fp32-resident-moment layouts holds here because the same
@@ -30,7 +36,8 @@
 use flashtrain::backend::fused::step_part;
 use flashtrain::backend::Part;
 use flashtrain::config::{KernelKind, OptKind, TrainConfig, Variant};
-use flashtrain::formats::{companding, fp16, weight_split, GROUP};
+use flashtrain::formats::{companding, fp16, quant4, weight_split,
+                          GROUP};
 use flashtrain::kernels::{avx2_available, kernel_set, KernelSet};
 use flashtrain::optim::{scalar_ref, Hyper, State};
 use flashtrain::util::rng::Rng;
@@ -333,6 +340,108 @@ fn companding_kernels_random_sweep() {
     }
 }
 
+// --- 4-bit nibble-packed codecs (quant4 / mixed84) -----------------------
+
+/// Every possible packed nibble-pair byte — all 256 (low, high) code
+/// combinations — decoded under unit, large, small, subnormal, and
+/// zero f16 scales, signed (momentum) and unsigned (variance).
+#[test]
+fn quant4_dequant_all_256_packed_byte_patterns() {
+    let q: Vec<u8> = (0..=255u8).collect();
+    let n = q.len() * 2; // 512 codes = 16 GROUP-sized groups
+    assert_eq!(n % GROUP, 0);
+    let scale_bits = [
+        0x3C00u16, // 1.0
+        0x7BFF,    // f16 max
+        0x0400,    // smallest f16 normal
+        0x0001,    // smallest f16 subnormal
+        0x0000,    // zero scale
+        0x3800,    // 0.5
+        0x4400,    // 4.0
+        0x2E66,    // ~0.1
+    ];
+    let scales: Vec<u16> = (0..n / GROUP)
+        .map(|gi| scale_bits[gi % scale_bits.len()])
+        .collect();
+
+    let mut m_ref = vec![0f32; n];
+    quant4::dequant_momentum4(&q, &scales, &mut m_ref);
+    let mut v_ref = vec![0f32; n];
+    quant4::dequant_variance4(&q, &scales, &mut v_ref);
+
+    for ks in sets_under_test() {
+        let mut m = vec![0f32; n];
+        (ks.dequant_momentum4)(&q, &scales, &mut m);
+        assert_f32_bits_eq(&m_ref, &m,
+                           &format!("dequant_momentum4[{}]", ks.name));
+        let mut v = vec![0f32; n];
+        (ks.dequant_variance4)(&q, &scales, &mut v);
+        assert_f32_bits_eq(&v_ref, &v,
+                           &format!("dequant_variance4[{}]", ks.name));
+    }
+}
+
+/// The adversarial companding groups (all-zero, f16-scale saturation,
+/// denormal scale, ±tie values, cross-binade, heavy-tailed) through
+/// the 4-bit momentum codec: codes, scales, and the dequantized
+/// round-trip all bit-exact across kernel sets.
+#[test]
+fn quant4_momentum_codec_bit_exact_on_adversarial_groups() {
+    let m = adversarial_groups(true);
+    let n = m.len();
+    let (mut q_ref, mut s_ref) =
+        (vec![0u8; n / 2], vec![0u16; n / GROUP]);
+    quant4::quant_momentum4(&m, &mut q_ref, &mut s_ref);
+    let mut out_ref = vec![0f32; n];
+    quant4::dequant_momentum4(&q_ref, &s_ref, &mut out_ref);
+
+    for ks in sets_under_test() {
+        let (mut q, mut s) =
+            (vec![0u8; n / 2], vec![0u16; n / GROUP]);
+        (ks.quant_momentum4)(&m, &mut q, &mut s);
+        assert_eq!(q, q_ref, "quant_momentum4[{}] codes", ks.name);
+        assert_eq!(s, s_ref, "quant_momentum4[{}] scales", ks.name);
+        let mut out = vec![0f32; n];
+        (ks.dequant_momentum4)(&q, &s, &mut out);
+        assert_f32_bits_eq(
+            &out_ref, &out,
+            &format!("quant4 momentum roundtrip[{}]", ks.name));
+    }
+}
+
+/// Same for the sqrt-domain 4-bit variance codec, with an extra group
+/// of negative entries whose sqrt produces NaN lanes: the scalar
+/// absmax skips them and the scalar u8 cast sends them to code 0 —
+/// the SIMD path must emulate both exactly.
+#[test]
+fn quant4_variance_codec_bit_exact_on_adversarial_groups() {
+    let mut vv = adversarial_groups(false);
+    vv.extend((0..GROUP).map(|i| {
+        let x = (i as f32 + 1.0) * 0.01;
+        if i % 3 == 0 { -x } else { x }
+    }));
+    let vv = vv;
+    let n = vv.len();
+    let (mut q_ref, mut s_ref) =
+        (vec![0u8; n / 2], vec![0u16; n / GROUP]);
+    quant4::quant_variance4(&vv, &mut q_ref, &mut s_ref);
+    let mut out_ref = vec![0f32; n];
+    quant4::dequant_variance4(&q_ref, &s_ref, &mut out_ref);
+
+    for ks in sets_under_test() {
+        let (mut q, mut s) =
+            (vec![0u8; n / 2], vec![0u16; n / GROUP]);
+        (ks.quant_variance4)(&vv, &mut q, &mut s);
+        assert_eq!(q, q_ref, "quant_variance4[{}] codes", ks.name);
+        assert_eq!(s, s_ref, "quant_variance4[{}] scales", ks.name);
+        let mut out = vec![0f32; n];
+        (ks.dequant_variance4)(&q, &s, &mut out);
+        assert_f32_bits_eq(
+            &out_ref, &out,
+            &format!("quant4 variance roundtrip[{}]", ks.name));
+    }
+}
+
 // --- weight splitting ----------------------------------------------------
 
 fn split_inputs() -> Vec<f32> {
@@ -385,6 +494,8 @@ fn assert_states_eq(a: &State, b: &State, what: &str) {
     assert_eq!(a.ms, b.ms, "{what}: ms");
     assert_eq!(a.vq, b.vq, "{what}: vq");
     assert_eq!(a.vs, b.vs, "{what}: vs");
+    assert_eq!(a.mq4, b.mq4, "{what}: mq4");
+    assert_eq!(a.vq4, b.vq4, "{what}: vq4");
     // the fp32-resident buffers compare by raw bits (NaN payloads and
     // signed zeros included), not by float equality
     for (name, x, y) in [("theta", &a.theta, &b.theta),
@@ -464,7 +575,7 @@ fn fused_adversarial_grads(n: usize, variant: Variant,
 }
 
 /// Fused-kernel adversarial sweep, mirroring the per-codec groups
-/// above through the *whole* single-pass step: the full 15-pair
+/// above through the *whole* single-pass step: the full 21-pair
 /// (optimizer, variant) universe, every kernel set, against the tiled
 /// path and the legacy scalar mirror — including a negative-beta2
 /// hyper vector that drives the variance negative (sqrt -> NaN lanes
@@ -489,7 +600,8 @@ fn fused_step_kernels_bit_exact_on_adversarial_groups() {
     for opt in [OptKind::Sgd, OptKind::AdamW, OptKind::Lion] {
         for variant in [Variant::Reference, Variant::Flash,
                         Variant::WeightSplit, Variant::OptQuant,
-                        Variant::NoCompand] {
+                        Variant::NoCompand, Variant::Quant4,
+                        Variant::Mixed84] {
             for ks in sets_under_test() {
                 // total coverage: the typed binding fails to compile
                 // if `fused_step` ever regresses to an Option return
@@ -544,7 +656,9 @@ fn fused_step_kernels_bit_exact_with_zero_weight_decay() {
                            (OptKind::Lion, Variant::NoCompand),
                            (OptKind::AdamW, Variant::Reference),
                            (OptKind::Sgd, Variant::WeightSplit),
-                           (OptKind::Lion, Variant::OptQuant)] {
+                           (OptKind::Lion, Variant::OptQuant),
+                           (OptKind::AdamW, Variant::Quant4),
+                           (OptKind::Sgd, Variant::Mixed84)] {
         let g = fused_adversarial_grads(n, variant, false);
         for ks in sets_under_test() {
             let mut legacy = State::init(&theta0, n, opt, variant);

@@ -27,12 +27,14 @@ use flashtrain::util::rng::Rng;
 
 const ALL_OPTS: [OptKind; 3] =
     [OptKind::Sgd, OptKind::AdamW, OptKind::Lion];
-const ALL_VARIANTS: [Variant; 5] = [
+const ALL_VARIANTS: [Variant; 7] = [
     Variant::Reference,
     Variant::Flash,
     Variant::WeightSplit,
     Variant::OptQuant,
     Variant::NoCompand,
+    Variant::Quant4,
+    Variant::Mixed84,
 ];
 
 /// Aligned config: bucket divides n, n is a GROUP multiple, so the
@@ -160,6 +162,52 @@ fn adamw_flash_pins_the_paper_headline_numbers() {
             breakdown_msg(&ts, N));
     println!("adamw/flash: batch {batch:.4} B/param, streaming \
               {stream:.4} B/param (one-bucket eps {one_bucket:.4})");
+}
+
+/// The 4-bit layouts' headline rows, measured like the paper's: AdamW
+/// with both moments nibble-packed peaks at 6 B/param in batch mode
+/// (2 θ′ + 1 ρ + 0.5 m + 0.5 v + 2 grad) and 4 with gradient release
+/// — a full byte per moment under flash — with `mixed84` strictly
+/// between the two.
+#[test]
+fn adamw_quant4_pins_the_4bit_headline_numbers() {
+    let one_bucket = (BUCKET as u64 * grad_elem_bytes(Variant::Quant4))
+        as f64 / N as f64;
+
+    let (tb, batch) =
+        run_mode(OptKind::AdamW, Variant::Quant4, false, N, BUCKET);
+    assert!(batch <= 6.0 + SCALES_EPS + 1e-9,
+            "adamw/quant4 batch peak {batch:.4} B/param exceeds the \
+             6-byte row (+{SCALES_EPS} scales):{}",
+            breakdown_msg(&tb, N));
+    assert!(batch >= 6.0,
+            "adamw/quant4 batch peak {batch:.4} under-measures the \
+             6-byte row — tracker lost a category:{}",
+            breakdown_msg(&tb, N));
+
+    let (ts, stream) =
+        run_mode(OptKind::AdamW, Variant::Quant4, true, N, BUCKET);
+    assert!(stream <= 4.0 + SCALES_EPS + one_bucket + 1e-9,
+            "adamw/quant4 streaming peak {stream:.4} B/param exceeds \
+             the 4-byte row (+{SCALES_EPS} scales +{one_bucket:.4} \
+             one-bucket epsilon):{}",
+            breakdown_msg(&ts, N));
+    assert!(stream >= 4.0,
+            "adamw/quant4 streaming peak {stream:.4} under-measures \
+             the 4-byte row — tracker lost a category:{}",
+            breakdown_msg(&ts, N));
+
+    // ordering across the quantized family: quant4 < mixed84 < flash
+    let (_, mixed) =
+        run_mode(OptKind::AdamW, Variant::Mixed84, true, N, BUCKET);
+    let (_, flash) =
+        run_mode(OptKind::AdamW, Variant::Flash, true, N, BUCKET);
+    assert!(stream < mixed && mixed < flash,
+            "streaming peaks must order quant4 {stream:.4} < mixed84 \
+             {mixed:.4} < flash {flash:.4}");
+    println!("adamw/quant4: batch {batch:.4} B/param, streaming \
+              {stream:.4} B/param (mixed84 {mixed:.4}, flash \
+              {flash:.4})");
 }
 
 #[test]

@@ -113,23 +113,24 @@ fn a3_flags_dropped_pairs_everywhere() {
     let count = |needle: &str| {
         a3.iter().filter(|f| f.msg.contains(needle)).count()
     };
-    // fields: (Lion, OptQuant) dropped + one unmappable extra
+    // fields: (Lion, Quant4) dropped + one unmappable extra
     assert_eq!(count("KernelSet fused fields is missing"), 1, "{}",
                render(&a3));
     assert_eq!(count("does not map to a known"), 1, "{}", render(&a3));
     // match: the same dropped arm
     assert_eq!(count("fused_step match is missing"), 1, "{}",
                render(&a3));
-    // fuzz universe: Lion × all 5 variants
-    assert_eq!(count("ALL_OPTS × ALL_VARIANTS is missing"), 5, "{}",
+    // fuzz universe frozen at the 15-pair world: Quant4 and Mixed84
+    // missing across all 3 optimizers
+    assert_eq!(count("ALL_OPTS × ALL_VARIANTS is missing"), 6, "{}",
                render(&a3));
-    // bench: the 8 rows the 7-row table never had
-    assert_eq!(count("bench STEP_ROWS is missing"), 8, "{}",
+    // bench: the 14 rows the 7-row table never had
+    assert_eq!(count("bench STEP_ROWS is missing"), 14, "{}",
                render(&a3));
-    // sharded table: (Sgd, Reference) and (Lion, NoCompand) dropped
+    // sharded table: (Sgd, Reference) and (Lion, Mixed84) dropped
     assert_eq!(count("sharded SHARDED_PAIRS is missing"), 2, "{}",
                render(&a3));
-    assert_eq!(a3.len(), 18, "{}", render(&a3));
+    assert_eq!(a3.len(), 25, "{}", render(&a3));
 }
 
 #[test]
