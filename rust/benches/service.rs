@@ -1,0 +1,266 @@
+//! Bench: multi-tenant service throughput — N fine-tuning tenants on
+//! **one shared engine** (continuous cross-tenant batching, one pool
+//! dispatch per tick) vs the same N runs executed standalone, each
+//! constructing its own engine.  A third row adds DRR parking
+//! (`max_resident = N/2`) to price the checkpoint stream-in/out path.
+//! Writes `BENCH_service.json` (schema v1, see docs/PERF.md) next to
+//! the other bench artifacts.
+//!
+//!   cargo bench --bench service -- [--quick] [--check]
+//!       [--threads T] [--tenants N] [--params P] [--steps S]
+//!       [--out BENCH_service.json]
+//!
+//! `--check` is the CI smoke mode: tiny sizes, and the invariant the
+//! bench asserts in every mode before any timing — every tenant's
+//! shared-engine final state is byte-identical to its standalone
+//! twin's (the service_equivalence contract, re-checked here at bench
+//! scale).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use flashtrain::backend::StepBackend;
+use flashtrain::checkpoint::save_state_dict;
+use flashtrain::config::{BackendKind, Json, KernelKind, OptKind,
+                         ServiceConfig, TrainConfig, Variant};
+use flashtrain::coordinator::{make_engine, Schedule};
+use flashtrain::formats::GROUP;
+use flashtrain::optim::{FlashOptimizer, GroupSpec, HyperDefaults,
+                        StateDict};
+use flashtrain::service::{Service, TenantPhase, TenantSpec};
+use flashtrain::util::bench::{bench_for, fmt_time};
+use flashtrain::util::cli::Args;
+use flashtrain::util::rng::Rng;
+use flashtrain::util::table::Table;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect::<BTreeMap<String, Json>>())
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "flashtrain_bench_svc_{}_{name}", std::process::id()))
+}
+
+fn tcfg(steps: usize, lr: f64, threads: usize) -> TrainConfig {
+    TrainConfig {
+        optimizer: OptKind::AdamW,
+        variant: Variant::Quant4,
+        steps,
+        lr,
+        warmup: 2,
+        final_lr_frac: 0.1,
+        bucket: 16 * 1024,
+        backend: BackendKind::Parallel,
+        threads,
+        kernels: KernelKind::Auto,
+        fused_step: true,
+        ..TrainConfig::default()
+    }
+}
+
+fn theta0(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0x5eed_f1a5);
+    (0..n).map(|_| rng.normal() as f32 * 0.02).collect()
+}
+
+fn fill_grad(seed: u64, t: u64, buf: &mut [f32]) {
+    let mut rng =
+        Rng::new(seed ^ t.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    for x in buf.iter_mut() {
+        *x = rng.normal() as f32 * 0.1;
+    }
+}
+
+/// One full service run: admit `tenants` jobs, drive to completion.
+/// Returns the finished service so the verify pass can read tenant
+/// states and batching counters.
+fn run_service(engine: &Rc<dyn StepBackend>, tenants: usize, n: usize,
+               steps: usize, threads: usize, max_resident: usize)
+               -> Service {
+    let svc_cfg = ServiceConfig {
+        tenants,
+        quantum: 2,
+        max_resident,
+        spool: None,
+    };
+    let mut svc = Service::new(engine.clone(), &svc_cfg).unwrap();
+    for i in 0..tenants as u64 {
+        let cfg = tcfg(steps, 6e-4 + 1e-4 * i as f64, threads);
+        svc.admit(
+            TenantSpec {
+                name: format!("tenant{i}"),
+                cfg,
+                specs: GroupSpec::single(n),
+                theta0: theta0(n, i),
+            },
+            Box::new(move |t, buf| fill_grad(1000 + i, t, buf)))
+            .unwrap();
+    }
+    svc.run().unwrap();
+    svc
+}
+
+/// The same `tenants` runs standalone: each constructs its own engine
+/// (`native_with_opts`) and steps sequentially.
+fn run_standalone(tenants: usize, n: usize, steps: usize,
+                  threads: usize) -> Vec<StateDict> {
+    let mut out = Vec::new();
+    for i in 0..tenants as u64 {
+        let cfg = tcfg(steps, 6e-4 + 1e-4 * i as f64, threads);
+        let init = theta0(n, i);
+        let mut opt = FlashOptimizer::native_with_opts(
+            cfg.optimizer, cfg.variant, cfg.bucket, &init,
+            GroupSpec::single(n), HyperDefaults::of(&cfg), cfg.backend,
+            cfg.threads, cfg.kernels, cfg.fused_step)
+            .unwrap();
+        let sched = Schedule::warmup_cosine(
+            cfg.lr, cfg.lr * cfg.final_lr_frac, cfg.warmup, cfg.steps);
+        let mut g = vec![0.0f32; n];
+        for t in 1..=steps {
+            fill_grad(1000 + i, t as u64, &mut g);
+            opt.step(&g, sched.lr(t), t, |_, _| {}).unwrap();
+        }
+        out.push(opt.state_dict(steps as u64));
+    }
+    out
+}
+
+fn dict_bytes(sd: &StateDict, tag: &str) -> Vec<u8> {
+    let path = tmp(tag);
+    save_state_dict(&path, sd).unwrap();
+    let b = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    b
+}
+
+fn main() {
+    let args = Args::parse();
+    let check = args.flag("check");
+    let quick = args.flag("quick") || check;
+    let budget = if check {
+        0.02
+    } else if quick {
+        0.2
+    } else {
+        1.0
+    };
+    let tenants = args.get_usize("tenants", if check { 3 } else { 8 });
+    let n = args.get_usize(
+        "params", if check { 16 * GROUP } else { 1 << 16 });
+    let steps = args.get_usize("steps", if check { 2 } else { 4 });
+    let threads = args.get_usize("threads", 4);
+    let default_out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package dir has a parent")
+        .join("BENCH_service.json");
+    let out_path = args
+        .get("out")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| default_out.to_string_lossy().into_owned());
+
+    let engine: Rc<dyn StepBackend> =
+        make_engine(&tcfg(steps, 6e-4, threads)).unwrap();
+    let nthreads = engine
+        .as_parallel()
+        .map(|p| p.threads())
+        .unwrap_or(1);
+
+    // the invariant first, in every mode: shared == standalone,
+    // byte for byte, with and without parking
+    let alone = run_standalone(tenants, n, steps, threads);
+    for max_resident in [0usize, (tenants / 2).max(1)] {
+        let svc = run_service(&engine, tenants, n, steps, threads,
+                              max_resident);
+        for (i, sd) in alone.iter().enumerate() {
+            let t = svc.tenant(i);
+            assert_eq!(t.phase(), TenantPhase::Finished,
+                       "tenant{i}: {:?}", t.error());
+            let shared = t.latest_state().unwrap();
+            assert!(dict_bytes(&shared, "shared.flt")
+                        == dict_bytes(sd, "alone.flt"),
+                    "resident={max_resident}: tenant{i} shared-engine \
+                     state diverged from its standalone run");
+        }
+    }
+
+    let total_steps = (tenants * steps) as f64;
+    let mut t = Table::new(
+        &format!("multi-tenant service: {tenants} tenants × {steps} \
+                  steps, {n} params each (adamw/quant4, \
+                  parallel={nthreads} threads)"),
+        &["mode", "median", "steps/s"]);
+    let mut rows_json: Vec<Json> = Vec::new();
+    let parked = (tenants / 2).max(1);
+    for (mode, max_resident) in
+        [("standalone", usize::MAX), ("shared", 0),
+         ("shared+parking", parked)]
+    {
+        let r = bench_for(mode, budget, 3, || {
+            if max_resident == usize::MAX {
+                let states =
+                    run_standalone(tenants, n, steps, threads);
+                assert_eq!(states.len(), tenants);
+            } else {
+                let svc = run_service(&engine, tenants, n, steps,
+                                      threads, max_resident);
+                assert!(svc.all_done());
+            }
+        });
+        let med = r.median_s();
+        let sps = total_steps / med;
+        t.row(&[mode.into(), fmt_time(med), format!("{sps:.0}")]);
+        rows_json.push(obj(vec![
+            ("mode", Json::Str(mode.into())),
+            ("median_s", Json::Num(med)),
+            ("steps_per_s", Json::Num(sps)),
+        ]));
+    }
+    t.print();
+
+    // batching observability, from one instrumented run
+    let svc = run_service(&engine, tenants, n, steps, threads, 0);
+    let jobs_per_dispatch =
+        svc.batched_jobs() as f64 / svc.dispatches().max(1) as f64;
+    println!("batching: {} dispatches carried {} jobs \
+              ({jobs_per_dispatch:.1} jobs/dispatch)",
+             svc.dispatches(), svc.batched_jobs());
+    if check {
+        println!("service check OK: {tenants} tenants bit-exact to \
+                  standalone, with and without parking");
+    }
+
+    let doc = obj(vec![
+        ("bench", Json::Str("service".into())),
+        ("schema_version", Json::Num(1.0)),
+        ("quick", Json::Bool(quick)),
+        ("check", Json::Bool(check)),
+        ("tenants", Json::Num(tenants as f64)),
+        ("params", Json::Num(n as f64)),
+        ("steps", Json::Num(steps as f64)),
+        ("threads", Json::Num(nthreads as f64)),
+        ("jobs_per_dispatch", Json::Num(jobs_per_dispatch)),
+        ("rows", Json::Arr(rows_json)),
+    ]);
+    let text = doc.to_string_pretty();
+    let parsed = Json::parse(&text).expect("emitted JSON must parse");
+    let rows = parsed
+        .get("rows")
+        .and_then(Json::as_arr)
+        .expect("rows section present");
+    assert_eq!(rows.len(), 3, "one row per mode");
+    for e in rows {
+        assert!(e.get("mode").and_then(Json::as_str).is_some());
+        for key in ["median_s", "steps_per_s"] {
+            assert!(e.get(key).and_then(Json::as_f64).is_some(),
+                    "row missing number {key}");
+        }
+    }
+    std::fs::write(&out_path, text + "\n")
+        .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
+    println!("wrote {out_path}");
+}

@@ -115,7 +115,9 @@ pub fn run(corpus: &Corpus) -> Vec<Finding> {
 ///   - `rust/tests/*.rs` and `rust/benches/*.rs` (top level only:
 ///     `tests/fixtures/` holds planted violations and `tests/golden/`
 ///     data, neither is code under contract),
-///   - every `Cargo.toml` under `root` except inside `target/`.
+///   - every `Cargo.toml` under `root` except inside `target/`,
+///   - `docs/CONFIG.md` (rule A6 cross-checks its `## Keys` table
+///     against the `TrainConfig` struct).
 pub fn run_repo(root: &Path) -> std::io::Result<Vec<Finding>> {
     let mut files = Vec::new();
     let rust = root.join("rust");
@@ -123,6 +125,13 @@ pub fn run_repo(root: &Path) -> std::io::Result<Vec<Finding>> {
     collect_rs(&rust.join("tests"), root, false, &mut files)?;
     collect_rs(&rust.join("benches"), root, false, &mut files)?;
     collect_cargo_tomls(root, root, &mut files)?;
+    let config_md = root.join("docs").join("CONFIG.md");
+    if config_md.is_file() {
+        files.push(SourceFile {
+            path: rel(root, &config_md),
+            text: std::fs::read_to_string(&config_md)?,
+        });
+    }
     files.sort_by(|a, b| a.path.cmp(&b.path));
     Ok(run(&Corpus { files }))
 }

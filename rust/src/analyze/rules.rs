@@ -1,4 +1,4 @@
-//! The rule catalog (A1–A5).  Each rule is a pure function over the
+//! The rule catalog (A1–A6).  Each rule is a pure function over the
 //! [`Corpus`]; the registry in [`rules`] is the single source of
 //! truth mirrored by the table in `docs/ANALYSIS.md` (a self-test in
 //! `tests/static_analysis.rs` keeps the two in sync).
@@ -52,6 +52,14 @@ pub fn rules() -> &'static [Rule] {
             summary: "Cargo.toml dependency sections reference only \
                       the vendored anyhow and xla path shims",
             check: check_dependency_allowlist,
+        },
+        Rule {
+            id: "A6",
+            name: "config-docs-sync",
+            summary: "every TrainConfig field appears in the \
+                      docs/CONFIG.md Keys table and every documented \
+                      key is a TrainConfig field",
+            check: check_config_docs_sync,
         },
     ]
 }
@@ -792,6 +800,170 @@ fn check_dep_name(f: &SourceFile, line: usize, name: &str,
     }
 }
 
+// ---------------------------------------------------------------------------
+// A6: TrainConfig ↔ docs/CONFIG.md key sync
+
+/// The `TrainConfig` struct's field names with their lines, plus the
+/// line of the struct header itself.  Line-based: every field is a
+/// single `pub name: Type,` line (the struct holds no braced types),
+/// and the first bare `}` closes it.
+fn trainconfig_fields(f: &SourceFile)
+                      -> Option<(usize, Vec<(String, usize)>)> {
+    let mut fields = Vec::new();
+    let mut struct_line = None;
+    for (n, raw) in f.text.lines().enumerate() {
+        let line = raw.trim();
+        let lineno = n + 1;
+        match struct_line {
+            None => {
+                if line.starts_with("pub struct TrainConfig") {
+                    struct_line = Some(lineno);
+                }
+            }
+            Some(sl) => {
+                if line == "}" {
+                    return Some((sl, fields));
+                }
+                if let Some(rest) = line.strip_prefix("pub ") {
+                    if let Some((name, _)) = rest.split_once(':') {
+                        let name = name.trim();
+                        if ident_like(name) {
+                            fields.push((name.to_string(), lineno));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    None
+}
+
+fn ident_like(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Backticked ident-like snippets in a table cell — the `## Keys`
+/// table packs aliases into one row (`` `beta1` ``/`` `beta2` ``), so
+/// a cell can carry several keys; non-ident snippets (`--lr`) are the
+/// CLI-flag column leaking into a malformed row and are ignored.
+fn backticked_idents(cell: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = cell;
+    while let Some(start) = rest.find('`') {
+        let after = &rest[start + 1..];
+        let Some(end) = after.find('`') else { break };
+        let tok = &after[..end];
+        if ident_like(tok) {
+            out.push(tok.to_string());
+        }
+        rest = &after[end + 1..];
+    }
+    out
+}
+
+/// The documented JSON keys: every backticked ident in the *first*
+/// cell of each row between the `## Keys` heading and the next `## `
+/// heading.  The header and `---` separator rows carry no backticks
+/// and fall out naturally.
+fn config_md_keys(f: &SourceFile) -> Vec<(String, usize)> {
+    let mut keys = Vec::new();
+    let mut in_keys = false;
+    for (n, raw) in f.text.lines().enumerate() {
+        let line = raw.trim();
+        let lineno = n + 1;
+        if line.starts_with("## ") {
+            in_keys = line.starts_with("## Keys");
+            continue;
+        }
+        if !in_keys || !line.starts_with('|') {
+            continue;
+        }
+        if let Some(first_cell) = line.split('|').nth(1) {
+            for key in backticked_idents(first_cell) {
+                keys.push((key, lineno));
+            }
+        }
+    }
+    keys
+}
+
+fn check_config_docs_sync(c: &Corpus, out: &mut Vec<Finding>) {
+    // scope to corpora that carry the config source — fixture corpora
+    // for other rules stay silent
+    let Some(src) = c
+        .files
+        .iter()
+        .find(|f| f.path.ends_with("src/config/experiment.rs"))
+    else {
+        return;
+    };
+    let Some((struct_line, fields)) = trainconfig_fields(src) else {
+        out.push(Finding {
+            rule: "A6",
+            path: src.path.clone(),
+            line: 1,
+            msg: "could not locate `pub struct TrainConfig` to \
+                  cross-reference against docs/CONFIG.md"
+                .into(),
+        });
+        return;
+    };
+    let Some(doc) = c
+        .files
+        .iter()
+        .find(|f| f.path.ends_with("docs/CONFIG.md"))
+    else {
+        out.push(Finding {
+            rule: "A6",
+            path: src.path.clone(),
+            line: struct_line,
+            msg: "could not locate docs/CONFIG.md to cross-reference \
+                  the `TrainConfig` keys against"
+                .into(),
+        });
+        return;
+    };
+    let keys = config_md_keys(doc);
+    if keys.is_empty() {
+        out.push(Finding {
+            rule: "A6",
+            path: doc.path.clone(),
+            line: 1,
+            msg: "docs/CONFIG.md has no `## Keys` table rows to \
+                  cross-reference"
+                .into(),
+        });
+        return;
+    }
+    for (field, line) in &fields {
+        if !keys.iter().any(|(k, _)| k == field) {
+            out.push(Finding {
+                rule: "A6",
+                path: src.path.clone(),
+                line: *line,
+                msg: format!(
+                    "`TrainConfig` field `{field}` is not documented \
+                     in the docs/CONFIG.md `## Keys` table"
+                ),
+            });
+        }
+    }
+    for (key, line) in &keys {
+        if !fields.iter().any(|(name, _)| name == key) {
+            out.push(Finding {
+                rule: "A6",
+                path: doc.path.clone(),
+                line: *line,
+                msg: format!(
+                    "docs/CONFIG.md `## Keys` table documents \
+                     `{key}`, which is not a `TrainConfig` field"
+                ),
+            });
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -799,7 +971,37 @@ mod tests {
     #[test]
     fn registry_ids_are_unique_and_ordered() {
         let ids: Vec<&str> = rules().iter().map(|r| r.id).collect();
-        assert_eq!(ids, ["A1", "A2", "A3", "A4", "A5"]);
+        assert_eq!(ids, ["A1", "A2", "A3", "A4", "A5", "A6"]);
+    }
+
+    #[test]
+    fn backticked_idents_extract_multiple_keys() {
+        assert_eq!(backticked_idents(" `beta1`/`beta2` "),
+                   vec!["beta1".to_string(), "beta2".to_string()]);
+        assert_eq!(backticked_idents(" `lr` "), vec!["lr".to_string()]);
+        // CLI flags and prose are not keys
+        assert!(backticked_idents(" `--lr` or see below ").is_empty());
+        assert!(backticked_idents(" JSON key ").is_empty());
+    }
+
+    #[test]
+    fn trainconfig_field_scan_stops_at_struct_close() {
+        let f = SourceFile {
+            path: "rust/src/config/experiment.rs".into(),
+            text: "pub struct TrainConfig {\n\
+                       /// docs\n\
+                       pub lr: f64,\n\
+                       pub steps: usize,\n\
+                   }\n\
+                   impl TrainConfig {\n\
+                       pub fn not_a_field(&self) {}\n\
+                   }\n"
+                .into(),
+        };
+        let (line, fields) = trainconfig_fields(&f).unwrap();
+        assert_eq!(line, 1);
+        assert_eq!(fields, vec![("lr".to_string(), 3),
+                                ("steps".to_string(), 4)]);
     }
 
     #[test]

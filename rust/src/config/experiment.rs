@@ -317,6 +317,85 @@ impl GroupConfig {
     }
 }
 
+/// The `service` config block: knobs for the multi-tenant
+/// fine-tuning service (`crate::service`, `flashtrain serve`).  One
+/// shared step engine executes many per-tenant runs; these knobs
+/// shape how tenants are scheduled onto it (see docs/SERVICE.md).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServiceConfig {
+    /// tenant count the `serve` command spins up (`--tenants`)
+    pub tenants: usize,
+    /// deficit-round-robin credit, in optimizer steps, granted to
+    /// each scheduled tenant per scheduling quantum (`--quantum`)
+    pub quantum: u64,
+    /// max tenants with live state at once (`--resident`); the rest
+    /// are parked as v2 checkpoint stream-outs between quanta
+    /// (0 = unlimited, nobody is ever parked)
+    pub max_resident: usize,
+    /// directory for parked tenant checkpoints (`--spool`); unset
+    /// parks state dicts in host memory instead of on disk
+    pub spool: Option<String>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            tenants: 2,
+            quantum: 8,
+            max_resident: 0,
+            spool: None,
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn from_json(j: &Json) -> Result<ServiceConfig, String> {
+        let obj = j.as_obj().ok_or("service must be an object")?;
+        let mut s = ServiceConfig::default();
+        for (k, v) in obj {
+            match k.as_str() {
+                "tenants" => {
+                    s.tenants = v.as_usize().ok_or("tenants")?
+                }
+                "quantum" => {
+                    s.quantum = v.as_usize().ok_or("quantum")? as u64
+                }
+                "max_resident" => {
+                    s.max_resident =
+                        v.as_usize().ok_or("max_resident")?
+                }
+                "spool" => {
+                    s.spool = Some(
+                        v.as_str().ok_or("spool")?.to_string())
+                }
+                other => {
+                    return Err(format!("unknown service key {other:?}"))
+                }
+            }
+        }
+        if s.tenants == 0 {
+            return Err("service needs at least one tenant".into());
+        }
+        if s.quantum == 0 {
+            return Err("service quantum must be >= 1 step".into());
+        }
+        Ok(s)
+    }
+
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let mut m = BTreeMap::new();
+        m.insert("tenants".into(), Json::Num(self.tenants as f64));
+        m.insert("quantum".into(), Json::Num(self.quantum as f64));
+        m.insert("max_resident".into(),
+                 Json::Num(self.max_resident as f64));
+        if let Some(s) = &self.spool {
+            m.insert("spool".into(), Json::Str(s.clone()));
+        }
+        Json::Obj(m)
+    }
+}
+
 /// Full run configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -364,6 +443,9 @@ pub struct TrainConfig {
     pub eval_batches: usize,
     pub log_every: usize,
     pub init_scale: f64,
+    /// multi-tenant service block (`None` = plain single-run mode);
+    /// consumed by `crate::service` and the `serve` command
+    pub service: Option<ServiceConfig>,
 }
 
 impl Default for TrainConfig {
@@ -395,6 +477,7 @@ impl Default for TrainConfig {
             eval_batches: 8,
             log_every: 10,
             init_scale: 0.02,
+            service: None,
         }
     }
 }
@@ -465,6 +548,22 @@ impl TrainConfig {
         }
         if args.flag("shard-state") {
             self.shard_state = true;
+        }
+        // service knobs: any of them materializes the service block
+        if args.get("tenants").is_some()
+            || args.get("quantum").is_some()
+            || args.get("resident").is_some()
+            || args.get("spool").is_some()
+        {
+            let s = self.service.get_or_insert_with(
+                ServiceConfig::default);
+            s.tenants = args.get_usize("tenants", s.tenants);
+            s.quantum = args.get_u64("quantum", s.quantum);
+            s.max_resident =
+                args.get_usize("resident", s.max_resident);
+            if let Some(dir) = args.get("spool") {
+                s.spool = Some(dir.to_string());
+            }
         }
     }
 
@@ -567,6 +666,9 @@ impl TrainConfig {
                 "init_scale" => {
                     c.init_scale = v.as_f64().ok_or("init_scale")?
                 }
+                "service" => {
+                    c.service = Some(ServiceConfig::from_json(v)?)
+                }
                 other => return Err(format!("unknown config key {other:?}")),
             }
         }
@@ -605,6 +707,9 @@ impl TrainConfig {
         m.insert("eval_batches".into(), Json::Num(self.eval_batches as f64));
         m.insert("log_every".into(), Json::Num(self.log_every as f64));
         m.insert("init_scale".into(), Json::Num(self.init_scale));
+        if let Some(s) = &self.service {
+            m.insert("service".into(), s.to_json());
+        }
         Json::Obj(m)
     }
 }
@@ -696,6 +801,64 @@ mod tests {
 
         let j = Json::parse(r#"{"kernels": "sse9"}"#).unwrap();
         assert!(TrainConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn service_block_roundtrips() {
+        let mut c = TrainConfig::default();
+        assert!(c.service.is_none());
+        c.service = Some(ServiceConfig {
+            tenants: 4,
+            quantum: 2,
+            max_resident: 3,
+            spool: Some("/tmp/spool".into()),
+        });
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.service, c.service);
+
+        let j = Json::parse(
+            r#"{"service": {"tenants": 3, "quantum": 5}}"#).unwrap();
+        let c3 = TrainConfig::from_json(&j).unwrap();
+        let s = c3.service.unwrap();
+        assert_eq!(s.tenants, 3);
+        assert_eq!(s.quantum, 5);
+        assert_eq!(s.max_resident, 0);
+        assert_eq!(s.spool, None);
+    }
+
+    #[test]
+    fn service_block_rejects_bad_keys_and_values() {
+        let j = Json::parse(
+            r#"{"service": {"tenant_count": 3}}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"service": {"tenants": 0}}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"service": {"quantum": 0}}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"service": 7}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn service_cli_flags_materialize_the_block() {
+        let mut c = TrainConfig::default();
+        let args = Args::parse_from(
+            "--tenants 6 --quantum 3 --resident 2 --spool /tmp/s"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&args);
+        let s = c.service.expect("service block from CLI flags");
+        assert_eq!(s.tenants, 6);
+        assert_eq!(s.quantum, 3);
+        assert_eq!(s.max_resident, 2);
+        assert_eq!(s.spool.as_deref(), Some("/tmp/s"));
+
+        // no service flags → no block materialized
+        let mut c2 = TrainConfig::default();
+        c2.apply_args(&Args::parse_from(
+            "--steps 7".split_whitespace().map(String::from)));
+        assert!(c2.service.is_none());
     }
 
     #[test]

@@ -4,5 +4,5 @@ pub mod experiment;
 pub mod json;
 
 pub use experiment::{BackendKind, GroupConfig, KernelKind, OptKind,
-                     TrainConfig, Variant};
+                     ServiceConfig, TrainConfig, Variant};
 pub use json::Json;

@@ -31,6 +31,9 @@ pub struct Metrics {
     /// persistent optimizer+weight state bytes per param group
     /// (name, bytes), recorded once at trainer construction
     pub group_bytes: Vec<(String, u64)>,
+    /// persistent state bytes per service tenant (name, bytes) —
+    /// populated by the multi-tenant `serve` path only
+    pub tenant_bytes: Vec<(String, u64)>,
 }
 
 impl Metrics {
@@ -45,6 +48,11 @@ impl Metrics {
     /// Record the per-group state-byte accounting for reports/CSV.
     pub fn set_group_bytes(&mut self, v: Vec<(String, u64)>) {
         self.group_bytes = v;
+    }
+
+    /// Record the per-tenant state-byte accounting for reports/CSV.
+    pub fn set_tenant_bytes(&mut self, v: Vec<(String, u64)>) {
+        self.tenant_bytes = v;
     }
 
     pub fn loss_points(&self) -> Vec<(f64, f64)> {
@@ -114,6 +122,12 @@ impl Metrics {
                 writeln!(f, "# {name},{bytes}")?;
             }
         }
+        if !self.tenant_bytes.is_empty() {
+            writeln!(f, "# tenants: name,state_bytes")?;
+            for (name, bytes) in &self.tenant_bytes {
+                writeln!(f, "# {name},{bytes}")?;
+            }
+        }
         Ok(())
     }
 
@@ -164,6 +178,7 @@ mod tests {
         m.record_eval(EvalRecord { step: 1, loss: 2.4, accuracy: 0.5 });
         m.set_group_bytes(vec![("decay".into(), 1024),
                                ("no_decay".into(), 64)]);
+        m.set_tenant_bytes(vec![("tenant0".into(), 4096)]);
         let p = std::env::temp_dir().join(format!(
             "flashtrain_metrics_{}.csv", std::process::id()));
         m.write_csv(&p).unwrap();
@@ -172,6 +187,8 @@ mod tests {
         assert!(text.contains("# 1,2.4,0.5"));
         assert!(text.contains("# decay,1024"));
         assert!(text.contains("# no_decay,64"));
+        assert!(text.contains("# tenants: name,state_bytes"));
+        assert!(text.contains("# tenant0,4096"));
         std::fs::remove_file(p).ok();
     }
 

@@ -8,4 +8,4 @@ pub mod trainer;
 
 pub use metrics::{EvalRecord, Metrics, StepRecord};
 pub use schedule::Schedule;
-pub use trainer::{init_params, Trainer};
+pub use trainer::{init_params, make_engine, Trainer};

@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::backend::StepBackend;
+use crate::backend::{make_backend_opts, StepBackend};
 use crate::config::{BackendKind, TrainConfig, Variant};
 use crate::coordinator::data_parallel::{allreduce_mean,
                                         allreduce_mean_sharded};
@@ -46,9 +46,48 @@ pub struct Trainer {
     worker_grads: Vec<Vec<f32>>,
 }
 
+/// Build the native step engine a config describes — the
+/// backend/worker-pool half of the engine/run split.  Constructed
+/// *once*, the returned engine is then borrowed by any number of
+/// runs: every [`Trainer::with_engine`] call, every
+/// [`FlashOptimizer::native_on_backend`] run, and every tenant of the
+/// multi-tenant service ([`crate::service`]) can share it, so N
+/// concurrent fine-tunes cost one worker pool instead of N.
+pub fn make_engine(cfg: &TrainConfig) -> Result<Rc<dyn StepBackend>> {
+    if matches!(cfg.backend, BackendKind::Hlo) {
+        bail!("the HLO backend compiles one executable per bucket and \
+               is not a shareable step engine; use a native backend \
+               (scalar|parallel)");
+    }
+    Ok(Rc::from(make_backend_opts(cfg.backend, cfg.threads,
+                                  cfg.kernels, cfg.fused_step)?))
+}
+
 impl Trainer {
     pub fn new(cfg: TrainConfig, manifest: &Manifest, rt: &Runtime)
                -> Result<Trainer> {
+        Self::build_on(cfg, manifest, rt, None)
+    }
+
+    /// Like [`new`](Self::new), but stepping on an engine the caller
+    /// already owns (see [`make_engine`]) instead of constructing a
+    /// private one — several trainers then share one worker pool.
+    /// The config's `backend` must be native; its
+    /// `threads`/`kernels`/`fused_step` knobs are ignored in favor of
+    /// the engine's own construction-time options.
+    pub fn with_engine(cfg: TrainConfig, manifest: &Manifest,
+                       rt: &Runtime, engine: Rc<dyn StepBackend>)
+                       -> Result<Trainer> {
+        if matches!(cfg.backend, BackendKind::Hlo) {
+            bail!("with_engine needs a native backend config \
+                   (scalar|parallel), not hlo");
+        }
+        Self::build_on(cfg, manifest, rt, Some(engine))
+    }
+
+    fn build_on(cfg: TrainConfig, manifest: &Manifest, rt: &Runtime,
+                engine: Option<Rc<dyn StepBackend>>)
+                -> Result<Trainer> {
         let model = manifest.model(&cfg.preset)?.clone();
 
         // pick ref or flash lowering to match the compute-weight dtype
@@ -76,10 +115,19 @@ impl Trainer {
             BackendKind::Hlo => FlashOptimizer::hlo(
                 rt, manifest, cfg.optimizer, cfg.variant, cfg.bucket,
                 &theta0, specs, defaults)?,
-            kind => FlashOptimizer::native_with_opts(
-                cfg.optimizer, cfg.variant, cfg.bucket, &theta0, specs,
-                defaults, kind, cfg.threads, cfg.kernels,
-                cfg.fused_step)?,
+            _ => {
+                // the engine/run split: construct (or borrow) the
+                // step engine, then build the run on it — the same
+                // `native_on_backend` path the multi-tenant service
+                // uses for every tenant
+                let be = match engine {
+                    Some(be) => be,
+                    None => make_engine(&cfg)?,
+                };
+                FlashOptimizer::native_on_backend(
+                    cfg.optimizer, cfg.variant, cfg.bucket, &theta0,
+                    specs, defaults, be)?
+            }
         };
         // shard-owner execution (a graceful no-op off the parallel
         // backend): batch steps become reduce-scatter, streaming

@@ -45,4 +45,5 @@ pub mod kernels;
 pub mod memory;
 pub mod optim;
 pub mod runtime;
+pub mod service;
 pub mod util;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train          run a training job (model/optimizer/variant flags)
+//!   serve          multi-tenant fine-tuning: many runs, one engine
 //!   eval           evaluate a checkpoint
 //!   memory         print the Table-1 / Figure-1 memory model
 //!   inspect-ckpt   dump checkpoint metadata
@@ -41,6 +42,7 @@ fn main() {
 fn run(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "train" => cmd_train(args),
+        "serve" => cmd_serve(args),
         "memory" => cmd_memory(args),
         "inspect-ckpt" => cmd_inspect(args),
         "info" => cmd_info(args),
@@ -66,6 +68,10 @@ fn print_help() {
          --groups decay|none (full per-group specs via --config)\n                \
          [--no-grad-release] [--eval-every N] [--save ckpt.flt]\n                \
          [--csv out.csv] [--plot]\n  \
+         serve         [--config configs/service_two_tenants.json]\n                \
+         --tenants N --quantum Q --resident K [--spool DIR]\n                \
+         --params P (synthetic per-tenant size, default 65536)\n                \
+         shared-engine multi-tenant fine-tuning (docs/SERVICE.md)\n  \
          memory        [--model llama|gpt2|resnet] — Table 1 / Fig 1 model\n  \
          inspect-ckpt  <file>\n  \
          info          — manifest + runtime platform\n  \
@@ -165,6 +171,131 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     println!("compile time total: {:.1}s ({} executables)",
              rt.total_compile_seconds(), rt.cached_executables());
+    Ok(())
+}
+
+/// Multi-tenant fine-tuning on one shared step engine (docs/SERVICE.md).
+/// Tenants run synthetic workloads (deterministic per-tenant init and
+/// gradient streams) so the service loop — DRR scheduling, continuous
+/// batching, checkpoint stream-in/out — is exercised without HLO
+/// artifacts.  `--params` sets the per-tenant parameter count.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use flashtrain::config::BackendKind;
+    use flashtrain::coordinator::{make_engine, Metrics};
+    use flashtrain::optim::GroupSpec;
+    use flashtrain::service::{Service, TenantPhase, TenantSpec};
+    use flashtrain::util::rng::Rng;
+
+    // precedence: defaults < --config file < paper hypers < CLI flags
+    let mut cfg = TrainConfig::default();
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let json = flashtrain::config::Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        cfg = TrainConfig::from_json(&json)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    }
+    if let Some(opt) = args.get("optimizer").and_then(OptKind::parse) {
+        cfg = cfg.with_paper_hypers(opt);
+    }
+    cfg.apply_args(args);
+    if matches!(cfg.backend, BackendKind::Hlo) {
+        // the service needs a shareable native engine; the per-bucket
+        // HLO executables are not one (see coordinator::make_engine)
+        println!("serve: backend hlo is not shareable, using parallel");
+        cfg.backend = BackendKind::Parallel;
+    }
+    let svc_cfg = cfg.service.clone().unwrap_or_default();
+    let n = args.get_usize("params", 65536);
+
+    let engine = make_engine(&cfg)?;
+    let mut service = Service::new(engine, &svc_cfg)?;
+    println!(
+        "flashtrain serve: tenants={} quantum={} resident={} \
+         optimizer={} variant={} steps/tenant={} params/tenant={} \
+         backend={} kernels={} spool={}",
+        svc_cfg.tenants, svc_cfg.quantum, svc_cfg.max_resident,
+        cfg.optimizer, cfg.variant, cfg.steps, n, cfg.backend,
+        cfg.kernels,
+        svc_cfg.spool.as_deref().unwrap_or("(memory)")
+    );
+
+    for i in 0..svc_cfg.tenants {
+        let mut tcfg = cfg.clone();
+        tcfg.seed = cfg.seed + i as u64;
+        let mut init = Rng::new(tcfg.seed ^ 0x5eed_f1a5);
+        let theta0: Vec<f32> =
+            (0..n).map(|_| init.normal() as f32 * 0.02).collect();
+        let mut grads = Rng::new(tcfg.seed ^ 0x9e37_79b9);
+        let grad_fn = Box::new(move |_t: u64, out: &mut [f32]| {
+            for x in out.iter_mut() {
+                *x = grads.normal() as f32 * 0.1;
+            }
+        });
+        service.admit(
+            TenantSpec {
+                name: format!("tenant{i}"),
+                cfg: tcfg,
+                specs: GroupSpec::single(n),
+                theta0,
+            },
+            grad_fn,
+        )?;
+    }
+    service.run()?;
+
+    let mut t = Table::new(
+        "tenants",
+        &["tenant", "phase", "steps", "state bytes", "park trips"]);
+    for tj in service.tenants() {
+        t.row(&[
+            tj.name.clone(),
+            format!("{:?}", tj.phase()),
+            format!("{}/{}", tj.completed_steps(), tj.target_steps()),
+            fmt_bytes(tj.state_bytes() as f64),
+            tj.park_round_trips().to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "{} scheduling rounds, {} pool dispatches carrying {} fused jobs",
+        service.rounds(), service.dispatches(), service.batched_jobs()
+    );
+
+    use flashtrain::memory::tracker::Category;
+    let mut mt = Table::new("measured peak memory", &["category", "bytes"]);
+    for (cat, bytes) in service.tracker().summary() {
+        mt.row(&[cat.name().to_string(), fmt_bytes(bytes as f64)]);
+        if matches!(cat, Category::Params | Category::OptimState) {
+            for (name, b) in service.tracker().category_entries(cat) {
+                mt.row(&[format!("  {name}"), fmt_bytes(b as f64)]);
+            }
+        }
+    }
+    mt.row(&["total peak".into(),
+             fmt_bytes(service.tracker().peak_bytes() as f64)]);
+    mt.print();
+
+    if let Some(path) = args.get("csv") {
+        let mut m = Metrics::default();
+        m.set_tenant_bytes(service.tenant_bytes());
+        m.write_csv(Path::new(path))?;
+        println!("wrote {path}");
+    }
+
+    let failed: Vec<_> = service
+        .tenants()
+        .iter()
+        .filter(|t| t.phase() == TenantPhase::Failed)
+        .collect();
+    for f in &failed {
+        eprintln!("tenant {} failed: {}", f.name,
+                  f.error().unwrap_or("unknown error"));
+    }
+    if !failed.is_empty() {
+        bail!("{} tenant(s) failed", failed.len());
+    }
     Ok(())
 }
 

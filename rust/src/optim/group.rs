@@ -27,7 +27,7 @@ use crate::backend::{fill_shards, make_backend_opts, FusedJob,
 use crate::config::{BackendKind, GroupConfig, KernelKind, OptKind,
                     Variant};
 use crate::formats::bf16;
-use crate::memory::tracker::Tracker;
+use crate::memory::tracker::{Category, Tracker};
 use crate::optim::hyper::{GroupHyper, Hyper, HyperDefaults};
 use crate::optim::optimizer::BucketOptimizer;
 use crate::optim::state::State;
@@ -360,6 +360,12 @@ pub struct FlashOptimizer {
     /// streaming steps run under stable worker ownership
     /// ([`ShardMap`]) instead of per-step bin-packing
     shard_state: bool,
+    /// per-group padded gradient staging for a pending fused dispatch
+    /// (filled by [`stage_step`](Self::stage_step), consumed by
+    /// [`staged_jobs`](Self::staged_jobs))
+    staged: Vec<Vec<f32>>,
+    /// per-group resolved hypers paired with `staged`
+    staged_h: Vec<Hyper>,
 }
 
 impl FlashOptimizer {
@@ -418,6 +424,8 @@ impl FlashOptimizer {
             bucket,
             total: theta0.len(),
             shard_state: false,
+            staged: Vec::new(),
+            staged_h: Vec::new(),
         })
     }
 
@@ -462,6 +470,27 @@ impl FlashOptimizer {
         let be: Rc<dyn StepBackend> =
             Rc::from(make_backend_opts(backend, threads, kernels,
                                        fused)?);
+        Self::native_on_backend(kind, variant, bucket, theta0, specs,
+                                defaults, be)
+    }
+
+    /// Build on an *existing* step engine instead of constructing one:
+    /// the backend (and its worker pool) is borrowed, not owned, so
+    /// many optimizer runs — the multi-tenant service's tenants, or
+    /// several [`Trainer`](crate::coordinator::Trainer)s — share one
+    /// engine.  Every owning constructor
+    /// ([`native_with_opts`](Self::native_with_opts) and its
+    /// wrappers) routes through here with a freshly made backend, so
+    /// shared-engine execution is the same code path as standalone
+    /// execution — which is what makes the service's bit-exactness
+    /// guarantee (shared == standalone) structural rather than
+    /// empirical (`rust/tests/service_equivalence.rs` pins it anyway).
+    pub fn native_on_backend(kind: OptKind, variant: Variant,
+                             bucket: usize, theta0: &[f32],
+                             specs: Vec<GroupSpec>,
+                             defaults: HyperDefaults,
+                             be: Rc<dyn StepBackend>)
+                             -> Result<FlashOptimizer> {
         Self::build(kind, variant, bucket, theta0, specs, defaults,
                     |t0| BucketOptimizer::native_shared(
                         kind, variant, bucket, t0, be.clone()))
@@ -741,14 +770,41 @@ impl FlashOptimizer {
         if be.as_parallel().is_none() {
             return Ok(false);
         }
-        let (kind, variant) = (self.kind, self.variant);
-        // stage each group's padded gradient (rounded to bf16 for
-        // split variants, zero-padded to the group's state length)
-        let mut gbufs: Vec<Vec<f32>> =
-            Vec::with_capacity(self.groups.len());
-        for g in &self.groups {
+        self.stage_step(grads, lr, t)?;
+        let jobs = self.staged_jobs();
+        be.as_parallel()
+            .expect("checked above")
+            .step_parts(jobs);
+        Ok(true)
+    }
+
+    /// Stage one step's gradient and hypers *without dispatching*:
+    /// each group's gradient is gathered by ranges, rounded to bf16
+    /// for split variants, zero-padded to the group's state length,
+    /// and its hyper vector resolved at this run's own `(lr, t)`.
+    /// This is the exact staging pass of the in-run batched step
+    /// ([`step`](Self::step) routes through it), split out so the
+    /// multi-tenant service can combine the [`staged_jobs`]
+    /// (Self::staged_jobs) of *many* runs into one
+    /// [`ParallelBackend::step_parts`] pool dispatch — continuous
+    /// batching of optimizer steps across tenants, bit-exact to each
+    /// run stepping alone because the staged bytes are identical and
+    /// the fused math never crosses a partition boundary.
+    ///
+    /// [`ParallelBackend::step_parts`]:
+    /// crate::backend::ParallelBackend::step_parts
+    pub fn stage_step(&mut self, grads: &[f32], lr: f64, t: usize)
+                      -> Result<()> {
+        if grads.len() != self.total {
+            bail!("gradient length {} != parameter count {}",
+                  grads.len(), self.total);
+        }
+        let variant = self.variant;
+        self.staged.resize(self.groups.len(), Vec::new());
+        for (g, gb) in self.groups.iter().zip(self.staged.iter_mut()) {
             let n = g.opt.state.n;
-            let mut gb: Vec<f32> = Vec::with_capacity(n);
+            gb.clear();
+            gb.reserve(n);
             for &(lo, hi) in &g.ranges {
                 gb.extend_from_slice(&grads[lo..hi]);
             }
@@ -758,16 +814,31 @@ impl FlashOptimizer {
                 }
             }
             gb.resize(n, 0.0);
-            gbufs.push(gb);
         }
-        let hypers: Vec<Hyper> = self
+        self.staged_h = self
             .groups
             .iter()
             .map(|g| g.hyper.resolve(&self.defaults, lr, t))
             .collect();
+        Ok(())
+    }
+
+    /// The fused jobs for the step staged by
+    /// [`stage_step`](Self::stage_step): one full-partition job per
+    /// group, borrowing this run's state and staged gradients.  Jobs
+    /// from several runs (each staged at its own `(lr, t)`) can go to
+    /// the parallel backend as a single `step_parts` dispatch — their
+    /// states are disjoint, so one barrier steps them all.
+    pub fn staged_jobs(&mut self) -> Vec<FusedJob<'_>> {
+        debug_assert_eq!(self.staged.len(), self.groups.len(),
+                         "staged_jobs without a prior stage_step");
+        let (kind, variant) = (self.kind, self.variant);
         let mut jobs = Vec::with_capacity(self.groups.len());
-        for ((g, gb), h) in
-            self.groups.iter_mut().zip(&gbufs).zip(&hypers)
+        for ((g, gb), h) in self
+            .groups
+            .iter_mut()
+            .zip(self.staged.iter())
+            .zip(self.staged_h.iter())
         {
             let n = g.opt.state.n;
             jobs.push(FusedJob {
@@ -777,10 +848,7 @@ impl FlashOptimizer {
                 h: *h,
             });
         }
-        be.as_parallel()
-            .expect("checked above")
-            .step_parts(jobs);
-        Ok(true)
+        jobs
     }
 
     /// One optimizer step over the full flat gradient at scheduled LR
@@ -1249,6 +1317,33 @@ impl FlashOptimizer {
     pub fn track(&self, tracker: &mut Tracker) {
         for g in &self.groups {
             g.opt.state.track_as(tracker, &g.name);
+        }
+    }
+
+    /// Like [`track`](Self::track) with every entry name scoped under
+    /// `prefix/`, so one tracker accounts many runs side by side (the
+    /// multi-tenant service's per-tenant byte accounting).
+    /// [`untrack_prefixed`](Self::untrack_prefixed) frees the same
+    /// entries when the run's state leaves memory (tenant parked).
+    pub fn track_prefixed(&self, tracker: &mut Tracker, prefix: &str) {
+        for g in &self.groups {
+            g.opt
+                .state
+                .track_as(tracker, &format!("{prefix}/{}", g.name));
+        }
+    }
+
+    /// Free the tracker entries [`track_prefixed`]
+    /// (Self::track_prefixed) allocated under `prefix/`.
+    pub fn untrack_prefixed(&self, tracker: &mut Tracker,
+                            prefix: &str) {
+        for g in &self.groups {
+            tracker.free(Category::Params,
+                         &format!("master_weights/{prefix}/{}",
+                                  g.name));
+            tracker.free(Category::OptimState,
+                         &format!("optimizer_state/{prefix}/{}",
+                                  g.name));
         }
     }
 }

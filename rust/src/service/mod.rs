@@ -1,0 +1,308 @@
+//! Multi-tenant fine-tuning service: one engine, many runs.
+//!
+//! A single [`StepBackend`](crate::backend::StepBackend) — worker
+//! pool, kernel tables, dispatch machinery — is constructed once
+//! (`coordinator::make_engine`) and *borrowed* by every admitted
+//! tenant.  Each tenant is an independent fine-tuning run: its own
+//! [`TrainConfig`], param groups, LR schedule, optimizer/variant
+//! pair, and progress cursor.  The service multiplexes them with
+//! three mechanisms (see docs/SERVICE.md for the full design):
+//!
+//! 1. **DRR admission** ([`queue::DrrQueue`]) — each scheduling round
+//!    credits every selected tenant `quantum` optimizer steps; unused
+//!    credit carries over, so backlogged tenants' served-step counts
+//!    never diverge by more than one quantum.
+//! 2. **Continuous batching** — within a round, the next optimizer
+//!    step of every ready tenant is staged via
+//!    [`FlashOptimizer::stage_step`](crate::optim::FlashOptimizer::stage_step)
+//!    and the staged jobs of *all* of them are fused into one
+//!    [`step_parts`](crate::backend::ParallelBackend::step_parts)
+//!    pool dispatch: one barrier per tick regardless of tenant count.
+//!    Tenant states are disjoint buffers, so the batched dispatch is
+//!    bit-exact to stepping each tenant alone (the same partition
+//!    invariance the in-run batched path relies on).
+//! 3. **Checkpoint stream-in/out** — when `max_resident` caps live
+//!    tenants, residents that lose their slot are parked between
+//!    scheduling quanta as v2 checkpoints (spool dir or host memory)
+//!    and streamed back bit-exactly when rescheduled.
+//!
+//! Per-tenant bytes are accounted in the shared
+//! [`Tracker`](crate::memory::tracker::Tracker) under prefixed names
+//! (`master_weights/<tenant>/<group>`, …), so a resident tenant's
+//! footprint is auditable against `memory::per_param` exactly like a
+//! standalone run's.
+//!
+//! Bit-exactness contract (enforced by
+//! `rust/tests/service_equivalence.rs`): N tenants interleaved on one
+//! shared engine — including arbitrary park/unpark round trips —
+//! finish with byte-identical state to N standalone runs.
+
+pub mod queue;
+pub mod tenant;
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::backend::StepBackend;
+use crate::config::ServiceConfig;
+use crate::memory::tracker::Tracker;
+
+pub use queue::DrrQueue;
+pub use tenant::{GradFn, TenantJob, TenantPhase, TenantSpec};
+
+/// The scheduler: owns the tenant table, the DRR queue, the shared
+/// engine handle, and the byte tracker.
+pub struct Service {
+    engine: Rc<dyn StepBackend>,
+    quantum: u64,
+    max_resident: usize,
+    spool: Option<PathBuf>,
+    tenants: Vec<TenantJob>,
+    queue: DrrQueue,
+    tracker: Tracker,
+    rounds: u64,
+    dispatches: u64,
+    batched_jobs: u64,
+}
+
+impl Service {
+    /// Build a service around an already-constructed engine.  Creates
+    /// the spool directory if one is configured.
+    pub fn new(engine: Rc<dyn StepBackend>, cfg: &ServiceConfig)
+               -> Result<Service> {
+        let spool = match &cfg.spool {
+            Some(dir) => {
+                let p = PathBuf::from(dir);
+                std::fs::create_dir_all(&p).with_context(
+                    || format!("creating spool dir {}", p.display()))?;
+                Some(p)
+            }
+            None => None,
+        };
+        Ok(Service {
+            engine,
+            quantum: cfg.quantum,
+            max_resident: cfg.max_resident,
+            spool,
+            tenants: Vec::new(),
+            queue: DrrQueue::new(),
+            tracker: Tracker::new(),
+            rounds: 0,
+            dispatches: 0,
+            batched_jobs: 0,
+        })
+    }
+
+    /// Admit a tenant; returns its slot index.  Admission is cheap —
+    /// nothing is materialized until the tenant is first scheduled.
+    pub fn admit(&mut self, spec: TenantSpec, grad_fn: GradFn)
+                 -> Result<usize> {
+        let job = TenantJob::new(spec, grad_fn)?;
+        let id = self.tenants.len();
+        self.tenants.push(job);
+        self.queue.admit(id);
+        Ok(id)
+    }
+
+    pub fn tenants(&self) -> &[TenantJob] {
+        &self.tenants
+    }
+
+    pub fn tenant(&self, id: usize) -> &TenantJob {
+        &self.tenants[id]
+    }
+
+    pub fn tracker(&self) -> &Tracker {
+        &self.tracker
+    }
+
+    /// Scheduling rounds completed so far.
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// Batched pool dispatches issued (one per tick on a parallel
+    /// engine, covering every ready tenant).
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches
+    }
+
+    /// Fused jobs carried by those dispatches (≥ one per tenant
+    /// param group per step).
+    pub fn batched_jobs(&self) -> u64 {
+        self.batched_jobs
+    }
+
+    /// Per-tenant persistent state bytes (live size while resident,
+    /// last materialized size while parked).
+    pub fn tenant_bytes(&self) -> Vec<(String, u64)> {
+        self.tenants
+            .iter()
+            .map(|t| (t.name.clone(), t.state_bytes()))
+            .collect()
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Run one scheduling quantum; returns `false` once the queue is
+    /// drained (every tenant finished or failed).
+    ///
+    /// Round structure: select up to `max_resident` tenants (DRR) →
+    /// park residents that lost their slot → stream selected tenants
+    /// in → tick loop (stage every ready tenant, one `step_parts`
+    /// dispatch per tick) → settle budgets, parking finished tenants.
+    pub fn run_round(&mut self) -> Result<bool> {
+        if self.queue.is_empty() {
+            return Ok(false);
+        }
+        self.rounds += 1;
+        let tenants = &self.tenants;
+        let selected = self.queue.select(
+            self.max_resident, self.quantum,
+            |id| tenants[id].remaining_steps());
+
+        // park residents that lost their slot this round (stream-out
+        // between scheduling quanta)
+        let mut in_round = vec![false; self.tenants.len()];
+        for &(id, _) in &selected {
+            in_round[id] = true;
+        }
+        for id in 0..self.tenants.len() {
+            if !in_round[id]
+                && self.tenants[id].phase() == TenantPhase::Resident
+            {
+                if let Err(e) = self.tenants[id]
+                    .park(self.spool.as_deref(), &mut self.tracker)
+                {
+                    self.tenants[id]
+                        .mark_failed(&mut self.tracker, e.to_string());
+                    self.queue.remove(id);
+                }
+            }
+        }
+
+        // stream the selected tenants in; a failed materialization
+        // retires only that tenant
+        let mut budgets: Vec<(usize, u64, u64)> = Vec::new();
+        for (id, budget) in selected {
+            match self.tenants[id]
+                .materialize(&self.engine, &mut self.tracker)
+            {
+                Ok(()) => budgets.push((id, budget, 0)),
+                Err(e) => {
+                    self.tenants[id]
+                        .mark_failed(&mut self.tracker, e.to_string());
+                    self.queue.settle(id, 0, 0);
+                }
+            }
+        }
+
+        // tick loop: each tick advances every ready tenant by one
+        // step, all fused into a single pool dispatch
+        loop {
+            let ready: Vec<usize> = budgets
+                .iter()
+                .enumerate()
+                .filter(|(_, &(id, budget, consumed))| {
+                    consumed < budget
+                        && self.tenants[id].phase()
+                            == TenantPhase::Resident
+                        && self.tenants[id].remaining_steps() > 0
+                })
+                .map(|(bi, _)| bi)
+                .collect();
+            if ready.is_empty() {
+                break;
+            }
+            if self.engine.as_parallel().is_some() {
+                let mut staged = vec![false; self.tenants.len()];
+                for &bi in &ready {
+                    let id = budgets[bi].0;
+                    match self.tenants[id].stage_next() {
+                        Ok(()) => staged[id] = true,
+                        Err(e) => self.tenants[id]
+                            .mark_failed(&mut self.tracker,
+                                         e.to_string()),
+                    }
+                }
+                let n_jobs = {
+                    let Service { engine, tenants, .. } = &mut *self;
+                    let par = engine
+                        .as_parallel()
+                        .expect("checked above");
+                    let mut jobs = Vec::new();
+                    for (id, t) in tenants.iter_mut().enumerate() {
+                        if staged[id] {
+                            jobs.extend(t.staged_jobs());
+                        }
+                    }
+                    let n = jobs.len() as u64;
+                    if n > 0 {
+                        par.step_parts(jobs);
+                    }
+                    n
+                };
+                if n_jobs > 0 {
+                    self.dispatches += 1;
+                    self.batched_jobs += n_jobs;
+                }
+                for &bi in &ready {
+                    let (id, _, ref mut consumed) = budgets[bi];
+                    if staged[id] {
+                        self.tenants[id].advance_cursor();
+                        *consumed += 1;
+                    }
+                }
+            } else {
+                // sequential engine: no pool to batch into; step each
+                // ready tenant directly (bit-exact either way)
+                for &bi in &ready {
+                    let (id, _, ref mut consumed) = budgets[bi];
+                    match self.tenants[id].step_now() {
+                        Ok(()) => {
+                            self.tenants[id].advance_cursor();
+                            *consumed += 1;
+                        }
+                        Err(e) => self.tenants[id]
+                            .mark_failed(&mut self.tracker,
+                                         e.to_string()),
+                    }
+                }
+            }
+        }
+
+        // settle: rotate unfinished tenants to the tail, retire the
+        // rest; finished tenants take a final stream-out so their
+        // state stays retrievable after the run drops
+        for (id, _, consumed) in budgets {
+            if self.tenants[id].phase() == TenantPhase::Failed {
+                self.queue.settle(id, consumed, 0);
+                continue;
+            }
+            let rem = self.tenants[id].remaining_steps();
+            if rem == 0 {
+                self.tenants[id].mark_finished();
+                if let Err(e) = self.tenants[id]
+                    .park(self.spool.as_deref(), &mut self.tracker)
+                {
+                    self.tenants[id]
+                        .mark_failed(&mut self.tracker, e.to_string());
+                }
+                self.queue.settle(id, consumed, 0);
+            } else {
+                self.queue.settle(id, consumed, rem);
+            }
+        }
+        Ok(true)
+    }
+
+    /// Drive rounds until every tenant is finished or failed.
+    pub fn run(&mut self) -> Result<()> {
+        while self.run_round()? {}
+        Ok(())
+    }
+}

@@ -1,0 +1,159 @@
+//! Deficit-round-robin admission queue.
+//!
+//! Tenants are identified by their slot index in the service's tenant
+//! table.  Each scheduling round the queue pops up to `max_resident`
+//! tenants from the head, credits each one `quantum` step credits on
+//! top of any deficit carried from earlier rounds, and hands back a
+//! per-tenant step budget capped by the tenant's remaining demand.
+//! After the round, [`settle`](DrrQueue::settle) charges the steps
+//! actually taken against the deficit and either rotates the tenant
+//! to the tail (more work left) or retires it (done / failed).
+//!
+//! DRR's fairness guarantee carries over directly: over any window,
+//! two backlogged tenants' served-step counts differ by at most one
+//! quantum (the classic O(1) bound of Shreedhar & Varghese), which is
+//! exactly the invariant `rust/tests/service_equivalence.rs` asserts
+//! at every round boundary.
+
+use std::collections::{BTreeMap, VecDeque};
+
+/// FIFO of runnable tenant slots plus their carried step deficits.
+#[derive(Debug, Default)]
+pub struct DrrQueue {
+    order: VecDeque<usize>,
+    deficit: BTreeMap<usize, u64>,
+}
+
+impl DrrQueue {
+    pub fn new() -> DrrQueue {
+        DrrQueue::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Admit a tenant at the tail with zero carried deficit.
+    pub fn admit(&mut self, id: usize) {
+        debug_assert!(!self.order.contains(&id),
+                      "tenant slot {id} admitted twice");
+        self.order.push_back(id);
+        self.deficit.insert(id, 0);
+    }
+
+    /// Start a scheduling round: pop up to `k` tenants from the head
+    /// (`k == 0` means all queued), credit each `quantum`, and return
+    /// `(slot, budget)` pairs where `budget` is the credited deficit
+    /// capped by the tenant's remaining demand.  Selected tenants
+    /// leave the queue until [`settle`](Self::settle) re-files them.
+    pub fn select(&mut self, k: usize, quantum: u64,
+                  remaining: impl Fn(usize) -> u64)
+                  -> Vec<(usize, u64)> {
+        let k = if k == 0 { self.order.len() } else { k };
+        let mut picked = Vec::new();
+        for _ in 0..k {
+            let Some(id) = self.order.pop_front() else { break };
+            let d = self.deficit.entry(id).or_insert(0);
+            *d += quantum;
+            picked.push((id, (*d).min(remaining(id))));
+        }
+        picked
+    }
+
+    /// End-of-round bookkeeping for one selected tenant: charge the
+    /// steps it consumed, then rotate it to the tail if it still has
+    /// demand or retire it (finished or failed) otherwise.
+    pub fn settle(&mut self, id: usize, consumed: u64, remaining: u64) {
+        if remaining == 0 {
+            self.deficit.remove(&id);
+            return;
+        }
+        let d = self.deficit.entry(id).or_insert(0);
+        *d = d.saturating_sub(consumed);
+        self.order.push_back(id);
+    }
+
+    /// Drop a tenant that is still queued (not currently selected) —
+    /// e.g. one that failed while being parked between rounds.
+    pub fn remove(&mut self, id: usize) {
+        self.order.retain(|&x| x != id);
+        self.deficit.remove(&id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rotates_round_robin() {
+        let mut q = DrrQueue::new();
+        for id in 0..3 {
+            q.admit(id);
+        }
+        let r1 = q.select(2, 4, |_| 100);
+        assert_eq!(r1, vec![(0, 4), (1, 4)]);
+        q.settle(0, 4, 96);
+        q.settle(1, 4, 96);
+        // 2 was never selected, so it now heads the queue
+        let r2 = q.select(2, 4, |_| 100);
+        assert_eq!(r2, vec![(2, 4), (0, 4)]);
+    }
+
+    #[test]
+    fn budget_capped_by_remaining_demand() {
+        let mut q = DrrQueue::new();
+        q.admit(7);
+        let r = q.select(1, 8, |_| 3);
+        assert_eq!(r, vec![(7, 3)]);
+    }
+
+    #[test]
+    fn unspent_deficit_carries_over() {
+        let mut q = DrrQueue::new();
+        q.admit(0);
+        let r = q.select(1, 4, |_| 100);
+        assert_eq!(r, vec![(0, 4)]);
+        // only 1 of 4 budgeted steps ran this round
+        q.settle(0, 1, 99);
+        // next round's credit stacks on the 3 carried over
+        let r = q.select(1, 4, |_| 99);
+        assert_eq!(r, vec![(0, 7)]);
+    }
+
+    #[test]
+    fn zero_remaining_retires() {
+        let mut q = DrrQueue::new();
+        q.admit(0);
+        q.admit(1);
+        let _ = q.select(1, 4, |_| 4);
+        q.settle(0, 4, 0);
+        assert_eq!(q.len(), 1);
+        let r = q.select(2, 4, |_| 100);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].0, 1);
+    }
+
+    #[test]
+    fn remove_drops_a_queued_tenant() {
+        let mut q = DrrQueue::new();
+        q.admit(0);
+        q.admit(1);
+        q.remove(0);
+        assert_eq!(q.select(0, 4, |_| 10), vec![(1, 4)]);
+    }
+
+    #[test]
+    fn select_all_when_k_is_zero() {
+        let mut q = DrrQueue::new();
+        for id in 0..5 {
+            q.admit(id);
+        }
+        assert_eq!(q.select(0, 2, |_| 10).len(), 5);
+        assert!(q.is_empty());
+    }
+}

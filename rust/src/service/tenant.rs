@@ -1,0 +1,352 @@
+//! A tenant: one fine-tuning run multiplexed onto the shared engine.
+//!
+//! The engine/run split (`FlashOptimizer::native_on_backend`) is what
+//! makes a tenant cheap: its persistent footprint is only the compact
+//! per-param state (as little as 4.125 B/param for `adamw/quant4`) —
+//! the worker pool, kernel tables, and dispatch machinery all belong
+//! to the shared [`StepBackend`].  A tenant's life cycle:
+//!
+//! ```text
+//! Queued ──materialize──▶ Resident ──park──▶ Parked
+//!                            ▲                 │
+//!                            └──materialize────┘   (stream-in/out)
+//!                            │
+//!                            └──▶ Finished | Failed
+//! ```
+//!
+//! Parking streams the run's full [`StateDict`] out — to a v2
+//! checkpoint file under the service's spool directory, or to a host
+//! memory clone when no spool is configured — and drops the live
+//! optimizer.  Unparking rebuilds the optimizer on the shared engine
+//! and loads the dict back.  Both round trips are bit-exact: the v2
+//! format is CRC-checked and byte-stable, and `load_state_dict`
+//! clones buffers wholesale after validating the group geometry, so a
+//! tenant that commutes through the spool any number of times ends at
+//! exactly the bits of one that never left memory
+//! (`rust/tests/service_equivalence.rs`).
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::backend::StepBackend;
+use crate::checkpoint;
+use crate::config::TrainConfig;
+use crate::coordinator::Schedule;
+use crate::memory::tracker::{Category, Tracker};
+use crate::optim::{FlashOptimizer, GroupSpec, HyperDefaults,
+                   StateDict};
+
+/// Per-step gradient source: fills the tenant's flat gradient for
+/// 1-based optimizer step `t`.  In production this is the tenant's
+/// fwd/bwd pipe; tests and the `serve` command use deterministic
+/// synthetic streams, which is also what makes service-vs-standalone
+/// bit-exactness checkable.
+pub type GradFn = Box<dyn FnMut(u64, &mut [f32])>;
+
+/// Admission-time description of a tenant: its name, run config
+/// (optimizer, variant, bucket, LR schedule, step target), resolved
+/// param-group specs, and initial parameters.
+pub struct TenantSpec {
+    pub name: String,
+    pub cfg: TrainConfig,
+    /// resolved param groups tiling `[0, theta0.len())`; use
+    /// [`GroupSpec::single`] for the one-group case
+    pub specs: Vec<GroupSpec>,
+    pub theta0: Vec<f32>,
+}
+
+/// Where a tenant is in its life cycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TenantPhase {
+    /// admitted, never materialized
+    Queued,
+    /// live optimizer state on the shared engine
+    Resident,
+    /// state streamed out to the spool (or a memory clone)
+    Parked,
+    /// reached its step target; final state parked for retrieval
+    Finished,
+    /// a step or park/unpark error; state dropped, error recorded
+    Failed,
+}
+
+enum ParkedState {
+    Mem(StateDict),
+    Disk(PathBuf),
+}
+
+/// One fine-tuning run scheduled by the service.
+pub struct TenantJob {
+    pub name: String,
+    cfg: TrainConfig,
+    specs: Vec<GroupSpec>,
+    schedule: Schedule,
+    /// initial parameters; drained into the first materialization
+    theta0: Vec<f32>,
+    n: usize,
+    run: Option<FlashOptimizer>,
+    parked: Option<ParkedState>,
+    /// progress cursor: completed optimizer steps (the same counter
+    /// that rides in the checkpoint's `step` field)
+    completed: u64,
+    target: u64,
+    grad_fn: GradFn,
+    grad_buf: Vec<f32>,
+    phase: TenantPhase,
+    error: Option<String>,
+    /// park → unpark round trips survived (observability)
+    park_round_trips: u64,
+    last_state_bytes: u64,
+}
+
+impl TenantJob {
+    pub fn new(spec: TenantSpec, grad_fn: GradFn) -> Result<TenantJob> {
+        let TenantSpec { name, cfg, specs, theta0 } = spec;
+        if name.is_empty() {
+            bail!("tenant needs a non-empty name");
+        }
+        let span: usize =
+            specs.iter().map(GroupSpec::count).sum();
+        if span != theta0.len() {
+            bail!("tenant {name:?}: specs cover {span} of {} params",
+                  theta0.len());
+        }
+        let schedule = Schedule::warmup_cosine(
+            cfg.lr, cfg.lr * cfg.final_lr_frac, cfg.warmup, cfg.steps);
+        let n = theta0.len();
+        let target = cfg.steps as u64;
+        Ok(TenantJob {
+            name,
+            cfg,
+            specs,
+            schedule,
+            theta0,
+            n,
+            run: None,
+            parked: None,
+            completed: 0,
+            target,
+            grad_fn,
+            grad_buf: Vec::new(),
+            phase: TenantPhase::Queued,
+            error: None,
+            park_round_trips: 0,
+            last_state_bytes: 0,
+        })
+    }
+
+    pub fn phase(&self) -> TenantPhase {
+        self.phase
+    }
+
+    pub fn completed_steps(&self) -> u64 {
+        self.completed
+    }
+
+    pub fn target_steps(&self) -> u64 {
+        self.target
+    }
+
+    pub fn remaining_steps(&self) -> u64 {
+        self.target.saturating_sub(self.completed)
+    }
+
+    pub fn error(&self) -> Option<&str> {
+        self.error.as_deref()
+    }
+
+    pub fn park_round_trips(&self) -> u64 {
+        self.park_round_trips
+    }
+
+    /// Persistent optimizer+weight state bytes of this tenant (the
+    /// live run's, or the last materialized size while parked).
+    pub fn state_bytes(&self) -> u64 {
+        self.run
+            .as_ref()
+            .map(|r| r.state_bytes())
+            .unwrap_or(self.last_state_bytes)
+    }
+
+    /// Logical gradient bytes per element: the repo-wide accounting
+    /// convention (split variants carry bf16-rounded gradients).
+    fn grad_elem_bytes(&self) -> u64 {
+        if self.cfg.variant.splits_weights() { 2 } else { 4 }
+    }
+
+    pub(crate) fn mark_failed(&mut self, tracker: &mut Tracker,
+                              err: String) {
+        self.untrack(tracker);
+        self.run = None;
+        self.error = Some(err);
+        self.phase = TenantPhase::Failed;
+    }
+
+    fn track(&self, tracker: &mut Tracker) {
+        if let Some(run) = &self.run {
+            run.track_prefixed(tracker, &self.name);
+            tracker.alloc(Category::Gradients,
+                          &format!("grads/{}", self.name),
+                          self.n as u64 * self.grad_elem_bytes());
+        }
+    }
+
+    fn untrack(&self, tracker: &mut Tracker) {
+        if let Some(run) = &self.run {
+            run.untrack_prefixed(tracker, &self.name);
+            tracker.free(Category::Gradients,
+                         &format!("grads/{}", self.name));
+        }
+    }
+
+    /// Bring the tenant's state onto the shared engine: first
+    /// admission builds from `theta0`; later calls stream the parked
+    /// v2 checkpoint back in.  No-op when already resident.
+    pub(crate) fn materialize(&mut self, engine: &Rc<dyn StepBackend>,
+                              tracker: &mut Tracker) -> Result<()> {
+        if self.run.is_some() {
+            return Ok(());
+        }
+        let cfg = &self.cfg;
+        let defaults = HyperDefaults::of(cfg);
+        let mut run = match self.parked.take() {
+            None => {
+                let theta0 = std::mem::take(&mut self.theta0);
+                FlashOptimizer::native_on_backend(
+                    cfg.optimizer, cfg.variant, cfg.bucket, &theta0,
+                    self.specs.clone(), defaults, engine.clone())?
+            }
+            Some(parked) => {
+                // rebuild the run's geometry from zeros, then load
+                // the parked dict — load_state_dict validates the
+                // geometry and clones the buffers bit-exactly
+                let zeros = vec![0.0f32; self.n];
+                let mut run = FlashOptimizer::native_on_backend(
+                    cfg.optimizer, cfg.variant, cfg.bucket, &zeros,
+                    self.specs.clone(), defaults, engine.clone())?;
+                let sd = match &parked {
+                    ParkedState::Mem(sd) => sd.clone(),
+                    ParkedState::Disk(path) => {
+                        checkpoint::load_state_dict(path)
+                            .with_context(|| format!(
+                                "unparking tenant {:?}", self.name))?
+                    }
+                };
+                self.completed = run.load_state_dict(&sd)?;
+                self.park_round_trips += 1;
+                run
+            }
+        };
+        run.set_shard_state(cfg.shard_state);
+        self.run = Some(run);
+        self.phase = TenantPhase::Resident;
+        self.track(tracker);
+        self.last_state_bytes =
+            self.run.as_ref().map(|r| r.state_bytes()).unwrap_or(0);
+        Ok(())
+    }
+
+    /// Stream the tenant's state out and drop the live run: to
+    /// `spool/<name>.flt` as a v2 checkpoint when a spool directory
+    /// is configured, to a host-memory clone otherwise.
+    pub(crate) fn park(&mut self, spool: Option<&Path>,
+                       tracker: &mut Tracker) -> Result<()> {
+        let Some(run) = self.run.as_ref() else {
+            return Ok(());
+        };
+        let sd = run.state_dict(self.completed);
+        self.last_state_bytes = sd.bytes();
+        let parked = match spool {
+            Some(dir) => {
+                let path = dir.join(format!("{}.flt", self.name));
+                checkpoint::save_state_dict(&path, &sd)
+                    .with_context(|| format!(
+                        "parking tenant {:?}", self.name))?;
+                ParkedState::Disk(path)
+            }
+            None => ParkedState::Mem(sd),
+        };
+        self.untrack(tracker);
+        self.parked = Some(parked);
+        self.run = None;
+        if self.phase == TenantPhase::Resident {
+            self.phase = TenantPhase::Parked;
+        }
+        Ok(())
+    }
+
+    pub(crate) fn mark_finished(&mut self) {
+        self.phase = TenantPhase::Finished;
+    }
+
+    /// Stage this tenant's next optimizer step (gradient pull +
+    /// per-group staging at the tenant's own scheduled LR and step
+    /// counter) without dispatching it — the service batches the
+    /// staged jobs of all ready tenants into one pool dispatch.
+    pub(crate) fn stage_next(&mut self) -> Result<()> {
+        let t = self.completed + 1;
+        self.grad_buf.resize(self.n, 0.0);
+        (self.grad_fn)(t, &mut self.grad_buf);
+        let lr = self.schedule.lr(t as usize);
+        let run = self
+            .run
+            .as_mut()
+            .ok_or_else(|| anyhow!("tenant {:?} is not resident",
+                                   self.name))?;
+        run.stage_step(&self.grad_buf, lr, t as usize)
+    }
+
+    /// The fused jobs staged by [`stage_next`](Self::stage_next).
+    pub(crate) fn staged_jobs(
+        &mut self) -> Vec<crate::backend::FusedJob<'_>> {
+        self.run
+            .as_mut()
+            .map(|r| r.staged_jobs())
+            .unwrap_or_default()
+    }
+
+    /// Sequential-engine fallback: stage and step in one call on the
+    /// tenant's own run (bit-exact to the batched path — the fused
+    /// math never crosses a partition boundary).
+    pub(crate) fn step_now(&mut self) -> Result<()> {
+        let t = self.completed + 1;
+        self.grad_buf.resize(self.n, 0.0);
+        (self.grad_fn)(t, &mut self.grad_buf);
+        let lr = self.schedule.lr(t as usize);
+        let run = self
+            .run
+            .as_mut()
+            .ok_or_else(|| anyhow!("tenant {:?} is not resident",
+                                   self.name))?;
+        run.step(&self.grad_buf, lr, t as usize, |_, _| {})
+    }
+
+    pub(crate) fn advance_cursor(&mut self) {
+        self.completed += 1;
+    }
+
+    /// The tenant's final (or latest) state dict: read from the live
+    /// run, or streamed back in from wherever it is parked.
+    pub fn latest_state(&self) -> Result<StateDict> {
+        if let Some(run) = &self.run {
+            return Ok(run.state_dict(self.completed));
+        }
+        match &self.parked {
+            Some(ParkedState::Mem(sd)) => Ok(sd.clone()),
+            Some(ParkedState::Disk(path)) => {
+                checkpoint::load_state_dict(path)
+            }
+            None => bail!("tenant {:?} has no materialized state",
+                          self.name),
+        }
+    }
+
+    /// Borrow the live run (None while parked) — e.g. to read
+    /// compute weights after a service run with no `max_resident`
+    /// parking.
+    pub fn run(&self) -> Option<&FlashOptimizer> {
+        self.run.as_ref()
+    }
+}

@@ -1,0 +1,15 @@
+//! A6 fixture: a TrainConfig with a field (`undocumented_knob`)
+//! missing from the docs Keys table; the paired a6_config.md also
+//! documents a `ghost_key` that no longer exists here.
+
+pub struct TrainConfig {
+    pub lr: f64,
+    pub steps: usize,
+    pub undocumented_knob: bool,
+}
+
+impl TrainConfig {
+    pub fn not_a_field(&self) -> usize {
+        self.steps
+    }
+}

@@ -1,0 +1,517 @@
+//! The multi-tenant service's headline contract (docs/SERVICE.md): N
+//! tenants interleaved on ONE shared engine — cross-tenant batched
+//! dispatch, DRR scheduling, park/unpark round trips included — finish
+//! with byte-identical state to N standalone runs fed the same
+//! gradient streams.  Plus the service's operational properties:
+//! the DRR fairness bound, disk spooling, per-tenant byte accounting
+//! against `memory::per_param`, and failure isolation.
+//!
+//! Everything here is artifact-free: tenants run deterministic
+//! synthetic workloads (seeded init + gradient streams), so the
+//! comparisons need no HLO manifests or PJRT runtime.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use flashtrain::backend::StepBackend;
+use flashtrain::checkpoint;
+use flashtrain::config::{BackendKind, KernelKind, OptKind,
+                         ServiceConfig, TrainConfig, Variant};
+use flashtrain::coordinator::{make_engine, Schedule};
+use flashtrain::formats::GROUP;
+use flashtrain::memory::per_param;
+use flashtrain::memory::tracker::Category;
+use flashtrain::optim::{FlashOptimizer, GroupHyper, GroupSpec,
+                        HyperDefaults, StateDict};
+use flashtrain::service::{GradFn, Service, TenantPhase, TenantSpec};
+use flashtrain::util::rng::Rng;
+
+/// (optimizer, variant) pairs spanning the format families: plain
+/// f32, 4-bit, mixed 8/4, reference, and weight splitting.
+const PAIRS: [(OptKind, Variant); 5] = [
+    (OptKind::AdamW, Variant::Flash),
+    (OptKind::AdamW, Variant::Quant4),
+    (OptKind::Lion, Variant::Mixed84),
+    (OptKind::Sgd, Variant::Reference),
+    (OptKind::AdamW, Variant::WeightSplit),
+];
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("flashtrain_svc_{}_{name}",
+                                      std::process::id()))
+}
+
+fn theta0(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0x5eed_f1a5);
+    (0..n).map(|_| rng.normal() as f32 * 0.02).collect()
+}
+
+/// Deterministic in (seed, t): both the service tenant and its
+/// standalone twin regenerate the identical stream.
+fn fill_grad(seed: u64, t: u64, buf: &mut [f32]) {
+    let mut rng =
+        Rng::new(seed ^ t.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    for x in buf.iter_mut() {
+        *x = rng.normal() as f32 * 0.1;
+    }
+}
+
+fn grad_fn_for(seed: u64) -> GradFn {
+    Box::new(move |t, buf| fill_grad(seed, t, buf))
+}
+
+fn tcfg(opt: OptKind, variant: Variant, steps: usize, lr: f64,
+        warmup: usize, backend: BackendKind, threads: usize,
+        fused: bool) -> TrainConfig {
+    TrainConfig {
+        optimizer: opt,
+        variant,
+        steps,
+        lr,
+        warmup,
+        final_lr_frac: 0.1,
+        bucket: 2 * GROUP,
+        backend,
+        threads,
+        kernels: KernelKind::Auto,
+        fused_step: fused,
+        ..TrainConfig::default()
+    }
+}
+
+/// Two groups with different hyper overrides — per-tenant *and*
+/// per-group isolation ride through the same batched dispatches.
+fn two_groups(n: usize) -> Vec<GroupSpec> {
+    let half = n / 2;
+    vec![
+        GroupSpec {
+            name: "body".into(),
+            ranges: vec![(0, half)],
+            hyper: GroupHyper::default(),
+        },
+        GroupSpec {
+            name: "head".into(),
+            ranges: vec![(half, n)],
+            hyper: GroupHyper {
+                lr_scale: Some(0.5),
+                weight_decay: Some(0.0),
+                ..GroupHyper::default()
+            },
+        },
+    ]
+}
+
+/// The tenant's standalone twin: same config, same specs, same init,
+/// same gradient stream — on its own freshly constructed engine.
+fn standalone_final_state(cfg: &TrainConfig, specs: Vec<GroupSpec>,
+                          init: &[f32], seed: u64) -> StateDict {
+    let mut opt = FlashOptimizer::native_with_opts(
+        cfg.optimizer, cfg.variant, cfg.bucket, init, specs,
+        HyperDefaults::of(cfg), cfg.backend, cfg.threads, cfg.kernels,
+        cfg.fused_step)
+        .unwrap();
+    let sched = Schedule::warmup_cosine(
+        cfg.lr, cfg.lr * cfg.final_lr_frac, cfg.warmup, cfg.steps);
+    let mut g = vec![0.0f32; init.len()];
+    for t in 1..=cfg.steps {
+        fill_grad(seed, t as u64, &mut g);
+        opt.step(&g, sched.lr(t), t, |_, _| {}).unwrap();
+    }
+    opt.state_dict(cfg.steps as u64)
+}
+
+/// Byte-serialize a state dict through the v2 checkpoint writer (the
+/// format is byte-deterministic, so equality of these buffers is
+/// equality of every weight, moment, scale, and counter bit).
+fn dict_bytes(sd: &StateDict, tag: &str) -> Vec<u8> {
+    let path = tmp(&format!("{tag}.flt"));
+    checkpoint::save_state_dict(&path, sd).unwrap();
+    let b = std::fs::read(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    b
+}
+
+/// Build a service, admit 3 tenants with distinct configs/seeds on
+/// the given engine settings, run it to completion, and byte-compare
+/// every tenant's final state to its standalone twin.
+fn run_and_compare(backend: BackendKind, threads: usize, fused: bool,
+                   svc_cfg: &ServiceConfig, tag: &str) {
+    let sizes = [8 * GROUP, 12 * GROUP, 16 * GROUP];
+    let steps = [7usize, 12, 5];
+    for &(opt, variant) in &PAIRS {
+        let engine_cfg = tcfg(opt, variant, 1, 1e-3, 1, backend,
+                              threads, fused);
+        let engine: Rc<dyn StepBackend> =
+            make_engine(&engine_cfg).unwrap();
+        let mut svc = Service::new(engine, svc_cfg).unwrap();
+
+        let mut twins: Vec<(TrainConfig, Vec<GroupSpec>, Vec<f32>, u64)> =
+            Vec::new();
+        for i in 0..3u64 {
+            let cfg = tcfg(opt, variant, steps[i as usize],
+                           6e-4 * (i + 1) as f64, i as usize + 1,
+                           backend, threads, fused);
+            let n = sizes[i as usize];
+            let init = theta0(n, 100 + i);
+            let specs = two_groups(n);
+            svc.admit(
+                TenantSpec {
+                    name: format!("tenant{i}"),
+                    cfg: cfg.clone(),
+                    specs: specs.clone(),
+                    theta0: init.clone(),
+                },
+                grad_fn_for(200 + i))
+                .unwrap();
+            twins.push((cfg, specs, init, 200 + i));
+        }
+
+        svc.run().unwrap();
+        assert!(svc.all_done());
+
+        for (id, (cfg, specs, init, seed)) in
+            twins.into_iter().enumerate()
+        {
+            let t = svc.tenant(id);
+            assert_eq!(t.phase(), TenantPhase::Finished,
+                       "{tag} {opt:?}/{variant:?} tenant{id}: {:?}",
+                       t.error());
+            assert_eq!(t.completed_steps(), cfg.steps as u64);
+            let shared = t.latest_state().unwrap();
+            let alone = standalone_final_state(&cfg, specs, &init,
+                                               seed);
+            assert_eq!(
+                dict_bytes(&shared,
+                           &format!("{tag}_shared_{id}")),
+                dict_bytes(&alone, &format!("{tag}_alone_{id}")),
+                "{tag} {opt:?}/{variant:?} tenant{id}: shared-engine \
+                 state diverged from the standalone run"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the headline contract, across engine shapes
+
+#[test]
+fn shared_engine_matches_standalone_runs() {
+    // max_resident 2 of 3 forces park/unpark round trips mid-run;
+    // quantum 2 forces fine-grained interleaving
+    let svc_cfg = ServiceConfig {
+        tenants: 3,
+        quantum: 2,
+        max_resident: 2,
+        spool: None,
+    };
+    for threads in [1usize, 4] {
+        for fused in [true, false] {
+            run_and_compare(BackendKind::Parallel, threads, fused,
+                            &svc_cfg,
+                            &format!("par_t{threads}_f{fused}"));
+        }
+    }
+}
+
+#[test]
+fn scalar_engine_path_matches_standalone() {
+    // the sequential engine has no pool to batch into — the service
+    // takes the per-tenant step_now path, which must land on the
+    // identical bits
+    let svc_cfg = ServiceConfig {
+        tenants: 3,
+        quantum: 2,
+        max_resident: 2,
+        spool: None,
+    };
+    run_and_compare(BackendKind::Scalar, 0, true, &svc_cfg, "scalar");
+}
+
+#[test]
+fn batching_and_parking_actually_happen() {
+    // guard against the equivalence tests passing vacuously: the
+    // parallel run must batch multiple tenants' jobs per dispatch and
+    // rotate someone through a park/unpark round trip
+    let svc_cfg = ServiceConfig {
+        tenants: 3,
+        quantum: 2,
+        max_resident: 2,
+        spool: None,
+    };
+    let engine_cfg = tcfg(OptKind::AdamW, Variant::Flash, 1, 1e-3, 1,
+                          BackendKind::Parallel, 2, true);
+    let engine: Rc<dyn StepBackend> = make_engine(&engine_cfg).unwrap();
+    let mut svc = Service::new(engine, &svc_cfg).unwrap();
+    for i in 0..3u64 {
+        let n = 8 * GROUP;
+        let cfg = tcfg(OptKind::AdamW, Variant::Flash, 8, 6e-4, 2,
+                       BackendKind::Parallel, 2, true);
+        svc.admit(
+            TenantSpec {
+                name: format!("tenant{i}"),
+                cfg,
+                specs: two_groups(n),
+                theta0: theta0(n, i),
+            },
+            grad_fn_for(i))
+            .unwrap();
+    }
+    svc.run().unwrap();
+    assert!(svc.dispatches() > 0);
+    // 2 resident tenants × 2 groups = 4 jobs per full tick
+    assert!(svc.batched_jobs() > svc.dispatches(),
+            "dispatches {} carried only {} jobs — cross-tenant \
+             batching never happened",
+            svc.dispatches(), svc.batched_jobs());
+    assert!(
+        svc.tenants().iter().any(|t| t.park_round_trips() > 0),
+        "max_resident < tenants but nobody took a park round trip");
+}
+
+// ---------------------------------------------------------------------------
+// DRR fairness
+
+#[test]
+fn fairness_spread_bounded_by_quantum() {
+    let quantum = 4u64;
+    let svc_cfg = ServiceConfig {
+        tenants: 4,
+        quantum,
+        max_resident: 2,
+        spool: None,
+    };
+    let engine_cfg = tcfg(OptKind::AdamW, Variant::Flash, 1, 1e-3, 1,
+                          BackendKind::Parallel, 2, true);
+    let engine: Rc<dyn StepBackend> = make_engine(&engine_cfg).unwrap();
+    let mut svc = Service::new(engine, &svc_cfg).unwrap();
+    let n = 4 * GROUP;
+    for i in 0..4u64 {
+        let cfg = tcfg(OptKind::AdamW, Variant::Flash, 32, 6e-4, 4,
+                       BackendKind::Parallel, 2, true);
+        svc.admit(
+            TenantSpec {
+                name: format!("tenant{i}"),
+                cfg,
+                specs: GroupSpec::single(n),
+                theta0: theta0(n, i),
+            },
+            grad_fn_for(i))
+            .unwrap();
+    }
+    // equal demand → the DRR bound holds at every round boundary:
+    // served-step counts never diverge by more than one quantum
+    while svc.run_round().unwrap() {
+        let served: Vec<u64> = svc
+            .tenants()
+            .iter()
+            .map(|t| t.completed_steps())
+            .collect();
+        let hi = *served.iter().max().unwrap();
+        let lo = *served.iter().min().unwrap();
+        assert!(hi - lo <= quantum,
+                "unfair round {}: served {served:?}, spread {} > \
+                 quantum {quantum}",
+                svc.rounds(), hi - lo);
+    }
+    assert!(svc
+        .tenants()
+        .iter()
+        .all(|t| t.phase() == TenantPhase::Finished));
+}
+
+// ---------------------------------------------------------------------------
+// disk spool
+
+#[test]
+fn disk_spool_round_trips_are_bit_exact() {
+    let spool = tmp("spool_dir");
+    let _ = std::fs::remove_dir_all(&spool);
+    let svc_cfg = ServiceConfig {
+        tenants: 3,
+        quantum: 2,
+        max_resident: 1, // everyone commutes through the spool
+        spool: Some(spool.to_string_lossy().into_owned()),
+    };
+    let (opt, variant) = (OptKind::AdamW, Variant::Quant4);
+    let engine_cfg = tcfg(opt, variant, 1, 1e-3, 1,
+                          BackendKind::Parallel, 2, true);
+    let engine: Rc<dyn StepBackend> = make_engine(&engine_cfg).unwrap();
+    let mut svc = Service::new(engine, &svc_cfg).unwrap();
+    let mut twins = Vec::new();
+    for i in 0..3u64 {
+        let n = 8 * GROUP;
+        let cfg = tcfg(opt, variant, 6, 6e-4, 2,
+                       BackendKind::Parallel, 2, true);
+        let init = theta0(n, 300 + i);
+        svc.admit(
+            TenantSpec {
+                name: format!("tenant{i}"),
+                cfg: cfg.clone(),
+                specs: GroupSpec::single(n),
+                theta0: init.clone(),
+            },
+            grad_fn_for(400 + i))
+            .unwrap();
+        twins.push((cfg, init, 400 + i));
+    }
+    svc.run().unwrap();
+    for (id, (cfg, init, seed)) in twins.into_iter().enumerate() {
+        let t = svc.tenant(id);
+        assert_eq!(t.phase(), TenantPhase::Finished, "{:?}", t.error());
+        assert!(t.park_round_trips() > 0,
+                "tenant{id} never round-tripped the spool");
+        // the parked file is on disk and is the final state
+        assert!(spool.join(format!("tenant{id}.flt")).is_file());
+        let shared = t.latest_state().unwrap();
+        let alone = standalone_final_state(
+            &cfg, GroupSpec::single(init.len()), &init, seed);
+        assert_eq!(dict_bytes(&shared, &format!("spool_shared_{id}")),
+                   dict_bytes(&alone, &format!("spool_alone_{id}")),
+                   "tenant{id} diverged across spool round trips");
+    }
+    let _ = std::fs::remove_dir_all(&spool);
+}
+
+// ---------------------------------------------------------------------------
+// per-tenant byte accounting
+
+#[test]
+fn per_tenant_bytes_match_the_model() {
+    for &(opt, variant) in
+        &[(OptKind::AdamW, Variant::Flash),
+          (OptKind::AdamW, Variant::Quant4)]
+    {
+        let svc_cfg = ServiceConfig {
+            tenants: 2,
+            quantum: 4,
+            max_resident: 0, // everyone stays resident
+            spool: None,
+        };
+        let engine_cfg = tcfg(opt, variant, 1, 1e-3, 1,
+                              BackendKind::Parallel, 2, true);
+        let engine: Rc<dyn StepBackend> =
+            make_engine(&engine_cfg).unwrap();
+        let mut svc = Service::new(engine, &svc_cfg).unwrap();
+        let n = 64 * GROUP; // aligned: measured == analytic exactly
+        for i in 0..2u64 {
+            let cfg = tcfg(opt, variant, 8, 6e-4, 2,
+                           BackendKind::Parallel, 2, true);
+            svc.admit(
+                TenantSpec {
+                    name: format!("tenant{i}"),
+                    cfg,
+                    specs: GroupSpec::single(n),
+                    theta0: theta0(n, i),
+                },
+                grad_fn_for(i))
+                .unwrap();
+        }
+        // after one round (quantum < steps) both tenants are resident
+        // with live tracked state
+        assert!(svc.run_round().unwrap());
+        let geb: u64 = if variant.splits_weights() { 2 } else { 4 };
+        let model = per_param(opt, variant, false).total();
+        let mut tracked_total = 0u64;
+        for t in svc.tenants() {
+            assert_eq!(t.phase(), TenantPhase::Resident);
+            let bpp =
+                (t.state_bytes() + n as u64 * geb) as f64 / n as f64;
+            assert!((bpp - model).abs() < 0.01,
+                    "{opt:?}/{variant:?} {}: measured {bpp:.4} \
+                     B/param, model {model:.4}",
+                    t.name);
+            tracked_total += t.state_bytes() + n as u64 * geb;
+        }
+        // the shared tracker's live categories account exactly the
+        // residents' state + gradients
+        let tr = svc.tracker();
+        let live = tr.category_live(Category::Params)
+            + tr.category_live(Category::OptimState)
+            + tr.category_live(Category::Gradients);
+        assert_eq!(live, tracked_total);
+        // per-tenant rows surface under the tenant's name
+        let rows = svc.tenant_bytes();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|(name, bytes)| {
+            name.starts_with("tenant") && *bytes > 0
+        }));
+        // finish the run: parking releases every tracked byte
+        svc.run().unwrap();
+        let tr = svc.tracker();
+        assert_eq!(tr.current_bytes(), 0,
+                   "parked/finished tenants left live tracker bytes");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// failure isolation
+
+#[test]
+fn failed_tenant_does_not_poison_the_fleet() {
+    let svc_cfg = ServiceConfig {
+        tenants: 3,
+        quantum: 2,
+        max_resident: 2,
+        spool: None,
+    };
+    let engine_cfg = tcfg(OptKind::AdamW, Variant::Flash, 1, 1e-3, 1,
+                          BackendKind::Parallel, 2, true);
+    let engine: Rc<dyn StepBackend> = make_engine(&engine_cfg).unwrap();
+    let mut svc = Service::new(engine, &svc_cfg).unwrap();
+    let n = 8 * GROUP;
+    let mut twins = Vec::new();
+    for i in 0..3u64 {
+        let cfg = tcfg(OptKind::AdamW, Variant::Flash, 6, 6e-4, 2,
+                       BackendKind::Parallel, 2, true);
+        // tenant1's groups overlap: the span matches (so admission
+        // passes) but materialization must fail on the tiling check
+        let specs = if i == 1 {
+            let half = n / 2;
+            vec![
+                GroupSpec {
+                    name: "a".into(),
+                    ranges: vec![(0, half)],
+                    hyper: GroupHyper::default(),
+                },
+                GroupSpec {
+                    name: "b".into(),
+                    ranges: vec![(half / 2, half / 2 + half)],
+                    hyper: GroupHyper::default(),
+                },
+            ]
+        } else {
+            two_groups(n)
+        };
+        let init = theta0(n, 500 + i);
+        svc.admit(
+            TenantSpec {
+                name: format!("tenant{i}"),
+                cfg: cfg.clone(),
+                specs: specs.clone(),
+                theta0: init.clone(),
+            },
+            grad_fn_for(600 + i))
+            .unwrap();
+        twins.push((cfg, specs, init, 600 + i));
+    }
+    svc.run().unwrap();
+    assert!(svc.all_done());
+
+    let bad = svc.tenant(1);
+    assert_eq!(bad.phase(), TenantPhase::Failed);
+    assert!(bad.error().unwrap().contains("gap or overlap"),
+            "{:?}", bad.error());
+    assert_eq!(bad.completed_steps(), 0);
+
+    // the healthy tenants finish bit-exact to their standalone twins
+    for id in [0usize, 2] {
+        let (cfg, specs, init, seed) = twins[id].clone();
+        let t = svc.tenant(id);
+        assert_eq!(t.phase(), TenantPhase::Finished, "{:?}", t.error());
+        let shared = t.latest_state().unwrap();
+        let alone = standalone_final_state(&cfg, specs, &init, seed);
+        assert_eq!(dict_bytes(&shared, &format!("fail_shared_{id}")),
+                   dict_bytes(&alone, &format!("fail_alone_{id}")),
+                   "tenant{id} perturbed by tenant1's failure");
+    }
+}

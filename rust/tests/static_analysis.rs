@@ -188,6 +188,58 @@ fn a5_flags_registry_deps() {
     assert_eq!(a5.len(), 3, "{}", render(&a5));
 }
 
+#[test]
+fn a6_flags_undocumented_and_ghost_keys() {
+    let c = Corpus::from_sources(vec![
+        (
+            "rust/src/config/experiment.rs",
+            include_str!("fixtures/analyze/a6_experiment.rs").into(),
+        ),
+        (
+            "docs/CONFIG.md",
+            include_str!("fixtures/analyze/a6_config.md").into(),
+        ),
+    ]);
+    let a6 = findings_for("A6", &run(&c));
+    assert_eq!(a6.len(), 2, "{}", render(&a6));
+    // the struct field absent from the Keys table
+    assert_eq!(a6[0].path, "rust/src/config/experiment.rs");
+    assert_eq!(a6[0].line, 8, "{}", render(&a6));
+    assert!(a6[0].msg.contains("`undocumented_knob` is not documented"),
+            "{}", render(&a6));
+    // the documented key absent from the struct
+    assert_eq!(a6[1].path, "docs/CONFIG.md");
+    assert_eq!(a6[1].line, 9, "{}", render(&a6));
+    assert!(a6[1]
+                .msg
+                .contains("`ghost_key`, which is not a `TrainConfig` \
+                           field"),
+            "{}", render(&a6));
+}
+
+#[test]
+fn a6_reports_missing_config_md() {
+    let c = Corpus::from_sources(vec![(
+        "rust/src/config/experiment.rs",
+        include_str!("fixtures/analyze/a6_experiment.rs").into(),
+    )]);
+    let a6 = findings_for("A6", &run(&c));
+    assert_eq!(a6.len(), 1, "{}", render(&a6));
+    assert!(a6[0].msg.contains("could not locate docs/CONFIG.md"),
+            "{}", render(&a6));
+}
+
+#[test]
+fn a6_is_silent_without_the_config_source() {
+    // the other rules' fixture corpora never carry experiment.rs —
+    // A6 must not demand docs from them
+    let c = Corpus::from_sources(vec![(
+        "rust/src/other.rs",
+        "pub struct NotConfig {}".into(),
+    )]);
+    assert!(findings_for("A6", &run(&c)).is_empty());
+}
+
 // ---------------------------------------------------------------------------
 // docs/ANALYSIS.md stays in sync with the registry
 
